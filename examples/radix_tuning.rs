@@ -1,0 +1,64 @@
+//! Radix-tuning walkthrough (§V-A): sweep TuNA's radix across message
+//! sizes to surface the paper's three performance trends, compare the
+//! measured ideal with the §V-A heuristic, and autotune the hierarchical
+//! variants.
+//!
+//!     cargo run --release --example radix_tuning
+
+use tuna::algos::{tuning, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::coordinator::{measure, RunConfig};
+use tuna::model::MachineProfile;
+use tuna::workload::{BlockSizes, Dist};
+
+fn main() -> tuna::Result<()> {
+    let p = 256;
+    let q = 8;
+    let profile = MachineProfile::polaris();
+
+    println!("TuNA radix sweep on {} (P={p}, Q={q})", profile.name);
+    println!(
+        "{:>8}  {:>7}  {:>12}  {:>9}",
+        "S (B)", "ideal r", "t(ideal)", "heuristic"
+    );
+    for s in [16u64, 256, 1024, 8192, 65536] {
+        let cfg = RunConfig {
+            p,
+            q,
+            profile: profile.clone(),
+            dist: Dist::Uniform { max: s },
+            iters: 3,
+            ..RunConfig::default()
+        };
+        let mut best = (0usize, f64::INFINITY);
+        for r in tuning::radix_candidates(p) {
+            let t = measure(&cfg, &AlgoKind::Tuna { radix: r })?.median();
+            if t < best.1 {
+                best = (r, t);
+            }
+        }
+        let heur = tuning::heuristic_radix(p, s as f64 / 2.0);
+        println!(
+            "{:>8}  {:>7}  {:>9.3} ms  {:>9}",
+            s,
+            best.0,
+            best.1 * 1e3,
+            heur
+        );
+    }
+
+    println!("\nautotuning the hierarchical variants at S=512:");
+    let engine = Engine::new(profile, Topology::new(p, q));
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, 1);
+    for coalesced in [true, false] {
+        let res = tuning::autotune_hier(&engine, &sizes, coalesced)?;
+        println!(
+            "  {}: best {} at {:.3} ms (swept {} configs)",
+            if coalesced { "coalesced" } else { "staggered" },
+            res.best.name(),
+            res.best_time * 1e3,
+            res.sweep.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one per static shape the Rust FFT app may request):
+  fft_stage1_{rows}x{n2}.hlo.txt   (A @ F_n2) ⊙ T
+  fft_stage2_{n1}x{cols}.hlo.txt   F_n1 @ A
+
+plus `manifest.tsv` (name \t path \t info) read by
+`rust/src/runtime/manifest.rs`. Python runs only here — never on the Rust
+request path.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shapes covering the examples and the quick/full harness runs:
+# (rows_per_rank, n2) for stage 1; (n1, cols_per_rank) for stage 2.
+STAGE1_SHAPES = [
+    (8, 64),   # N=64x64, P=8 (fft_e2e default)
+    (8, 60),   # N=64x60, P=8 (non-uniform column split)
+    (8, 32),   # N=32xX, P=4
+    (4, 16),   # N=16x16, P=4 (quickstart-scale)
+    (16, 16),
+]
+STAGE2_SHAPES = [
+    (64, 8),   # N=64x64, P=8
+    (64, 7),   # N=64x60, P=8 (60 = 4*8 + 4*7)
+    (32, 8),
+    (16, 4),
+    (16, 5),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side can `to_tuple()` uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage1(rows, n2):
+    spec_a = jax.ShapeDtypeStruct((rows, n2), jnp.float32)
+    spec_f = jax.ShapeDtypeStruct((n2, n2), jnp.float32)
+    lowered = jax.jit(model.fft_stage1).lower(
+        spec_a, spec_a, spec_f, spec_f, spec_a, spec_a
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_stage2(n1, cols):
+    spec_f = jax.ShapeDtypeStruct((n1, n1), jnp.float32)
+    spec_a = jax.ShapeDtypeStruct((n1, cols), jnp.float32)
+    lowered = jax.jit(model.fft_stage2).lower(spec_f, spec_f, spec_a, spec_a)
+    return to_hlo_text(lowered)
+
+
+def build_artifacts(out_dir, stage1_shapes=None, stage2_shapes=None, verbose=True):
+    """Lower all configured shapes into `out_dir`; returns manifest rows."""
+    stage1_shapes = STAGE1_SHAPES if stage1_shapes is None else stage1_shapes
+    stage2_shapes = STAGE2_SHAPES if stage2_shapes is None else stage2_shapes
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+
+    for m, n in stage1_shapes:
+        name = f"fft_stage1_{m}x{n}"
+        path = f"{name}.hlo.txt"
+        text = lower_stage1(m, n)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        info = f"(A[{m},{n}] @ F[{n},{n}]) * T[{m},{n}] f32 -> (re, im)"
+        rows.append((name, path, info))
+        if verbose:
+            print(f"  {name}: {len(text)} chars")
+
+    for n1, c in stage2_shapes:
+        name = f"fft_stage2_{n1}x{c}"
+        path = f"{name}.hlo.txt"
+        text = lower_stage2(n1, c)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        info = f"F[{n1},{n1}] @ A[{n1},{c}] f32 -> (re, im)"
+        rows.append((name, path, info))
+        if verbose:
+            print(f"  {name}: {len(text)} chars")
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tpath\tinfo — written by python/compile/aot.py\n")
+        for name, path, info in rows:
+            f.write(f"{name}\t{path}\t{info}\n")
+    if verbose:
+        print(f"wrote {len(rows)} artifacts + manifest to {out_dir}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernels: the local DFT stages of the 4-step FFT.
+
+Complex arithmetic in split re/im layout (four real matmuls per complex
+matmul) — the MXU-friendly formulation: each `jnp.dot` inside the kernel
+maps onto the systolic array, and the twiddle multiply is fused into the
+same kernel so the intermediate never round-trips through HBM.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): operand tiles are
+placed in VMEM by `pallas_call`'s BlockSpecs; at the shapes the FFT app
+uses (rows-per-rank x n2 <= 64x64 f32) the whole working set is ~200 KiB,
+far under the ~16 MiB VMEM budget, so a single-block grid is optimal —
+tiling would only add copy overhead. `interpret=True` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls; lowering through the
+interpreter produces plain HLO that both jaxlib and the Rust PJRT client
+execute identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stage1_kernel(a_re_ref, a_im_ref, f_re_ref, f_im_ref, t_re_ref, t_im_ref,
+                   o_re_ref, o_im_ref):
+    """o = (A @ F) ⊙ T, complex, fused."""
+    a_re = a_re_ref[...]
+    a_im = a_im_ref[...]
+    f_re = f_re_ref[...]
+    f_im = f_im_ref[...]
+    # Four real matmuls (MXU) for the complex product.
+    y_re = jnp.dot(a_re, f_re, preferred_element_type=jnp.float32) - jnp.dot(
+        a_im, f_im, preferred_element_type=jnp.float32)
+    y_im = jnp.dot(a_re, f_im, preferred_element_type=jnp.float32) + jnp.dot(
+        a_im, f_re, preferred_element_type=jnp.float32)
+    # Fused twiddle (VPU elementwise) — no HBM round-trip.
+    t_re = t_re_ref[...]
+    t_im = t_im_ref[...]
+    o_re_ref[...] = y_re * t_re - y_im * t_im
+    o_im_ref[...] = y_re * t_im + y_im * t_re
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fft_stage1(a_re, a_im, f_re, f_im, t_re, t_im):
+    """Pallas call: stage 1 of the 4-step FFT for one rank's row block.
+
+    a: (rows, n2) local rows; f: (n2, n2) DFT matrix; t: (rows, n2)
+    twiddles. Returns (rows, n2) split complex.
+    """
+    m, n = a_re.shape
+    out = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    return pl.pallas_call(
+        _stage1_kernel,
+        out_shape=(out, out),
+        interpret=True,
+    )(a_re, a_im, f_re, f_im, t_re, t_im)
+
+
+def _stage2_kernel(f_re_ref, f_im_ref, a_re_ref, a_im_ref, o_re_ref, o_im_ref):
+    """o = F @ A, complex."""
+    f_re = f_re_ref[...]
+    f_im = f_im_ref[...]
+    a_re = a_re_ref[...]
+    a_im = a_im_ref[...]
+    o_re_ref[...] = jnp.dot(f_re, a_re, preferred_element_type=jnp.float32) - jnp.dot(
+        f_im, a_im, preferred_element_type=jnp.float32)
+    o_im_ref[...] = jnp.dot(f_re, a_im, preferred_element_type=jnp.float32) + jnp.dot(
+        f_im, a_re, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fft_stage2(f_re, f_im, a_re, a_im):
+    """Pallas call: stage 2 — column DFT for one rank's column block.
+
+    f: (n1, n1) DFT matrix; a: (n1, cols). Returns (n1, cols).
+    """
+    n1, cols = a_re.shape
+    out = jax.ShapeDtypeStruct((n1, cols), jnp.float32)
+    return pl.pallas_call(
+        _stage2_kernel,
+        out_shape=(out, out),
+        interpret=True,
+    )(f_re, f_im, a_re, a_im)

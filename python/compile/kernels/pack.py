@@ -1,0 +1,32 @@
+"""Layer-1 Pallas kernel: segmented gather ("pack").
+
+The send-buffer assembly hot path of TuNA: every round packs the moving
+data blocks into a contiguous send buffer. On TPU this is a VMEM gather
+driven by a precomputed index vector (the offsets the metadata phase
+communicates); here it is expressed as a Pallas kernel and checked against
+the pure-jnp oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(data_ref, idx_ref, out_ref):
+    idx = idx_ref[...]
+    out_ref[...] = data_ref[idx]
+
+
+@jax.jit
+def pack(data, idx):
+    """out[i] = data[idx[i]] for int32 `idx`; shapes static. A zero-length
+    index (a round with nothing to pack) short-circuits — the Pallas
+    interpreter cannot grid over empty outputs."""
+    (m,) = idx.shape
+    if m == 0:
+        return jnp.zeros((0,), dtype=data.dtype)
+    return pl.pallas_call(
+        _pack_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), data.dtype),
+        interpret=True,
+    )(data, idx)

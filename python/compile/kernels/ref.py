@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes with hypothesis and asserts
+allclose between kernel and oracle. The oracles are also what the Rust
+side's naive DFT fallback mirrors.
+"""
+
+import jax.numpy as jnp
+
+
+def complex_matmul_ref(a_re, a_im, b_re, b_im):
+    """(A @ B) for complex matrices in split re/im layout."""
+    out_re = a_re @ b_re - a_im @ b_im
+    out_im = a_re @ b_im + a_im @ b_re
+    return out_re, out_im
+
+
+def fft_stage1_ref(a_re, a_im, f_re, f_im, t_re, t_im):
+    """Stage 1 of the 4-step FFT: (A @ F_n2) ⊙ T (complex Hadamard)."""
+    y_re, y_im = complex_matmul_ref(a_re, a_im, f_re, f_im)
+    out_re = y_re * t_re - y_im * t_im
+    out_im = y_re * t_im + y_im * t_re
+    return out_re, out_im
+
+
+def fft_stage2_ref(f_re, f_im, a_re, a_im):
+    """Stage 2 of the 4-step FFT: F_n1 @ A."""
+    return complex_matmul_ref(f_re, f_im, a_re, a_im)
+
+
+def pack_ref(data, idx):
+    """Segmented gather: out[i] = data[idx[i]] — the send-buffer packing
+    primitive (TuNA's per-round block assembly)."""
+    return data[idx]
+
+
+def dft_matrix(n, dtype=jnp.float32):
+    """F_n[j, k] = exp(-2πi·jk/n) in split layout."""
+    j = jnp.arange(n)[:, None].astype(jnp.float64)
+    k = jnp.arange(n)[None, :].astype(jnp.float64)
+    ang = -2.0 * jnp.pi * j * k / n
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def twiddles(row0, rows, n2, n_total, dtype=jnp.float32):
+    """T[j, k] = exp(-2πi·(row0+j)·k / n_total) in split layout."""
+    j = (row0 + jnp.arange(rows))[:, None].astype(jnp.float64)
+    k = jnp.arange(n2)[None, :].astype(jnp.float64)
+    ang = -2.0 * jnp.pi * j * k / n_total
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)

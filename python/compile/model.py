@@ -1,0 +1,51 @@
+"""Layer-2 JAX model: the FFT application's compute graph, built on the
+Layer-1 Pallas kernels.
+
+`fft_stage1` / `fft_stage2` are the per-rank functions `aot.py` lowers to
+HLO text (one artifact per static shape); `local_fft4` composes the whole
+4-step pipeline in one process — the model-level correctness check against
+`jnp.fft.fft`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dft, ref
+
+
+def fft_stage1(a_re, a_im, f_re, f_im, t_re, t_im):
+    """(A @ F_n2) ⊙ T — one rank's stage-1 compute (Pallas kernel)."""
+    return dft.fft_stage1(a_re, a_im, f_re, f_im, t_re, t_im)
+
+
+def fft_stage2(f_re, f_im, a_re, a_im):
+    """F_n1 @ A — one rank's stage-2 compute (Pallas kernel)."""
+    return dft.fft_stage2(f_re, f_im, a_re, a_im)
+
+
+def local_fft4(x_re, x_im, n1, n2):
+    """Full 4-step FFT of a length n1*n2 signal on one process.
+
+    Layout: M[j1, j2] = x[j1 + n1*j2]; result X[k2 + n2*k1] = out[k1, k2].
+    Used by tests to validate the stage composition against jnp.fft.fft.
+    """
+    n_total = n1 * n2
+    assert x_re.shape == (n_total,)
+    m_re = x_re.reshape(n2, n1).T  # M[j1, j2]
+    m_im = x_im.reshape(n2, n1).T
+
+    f2_re, f2_im = ref.dft_matrix(n2)
+    t_re, t_im = ref.twiddles(0, n1, n2, n_total)
+    z_re, z_im = fft_stage1(m_re, m_im, f2_re, f2_im, t_re, t_im)
+
+    f1_re, f1_im = ref.dft_matrix(n1)
+    o_re, o_im = fft_stage2(f1_re, f1_im, z_re, z_im)  # out[k1, k2]
+
+    # X[k2 + n2*k1] = out[k1, k2]
+    return o_re.reshape(-1), o_im.reshape(-1)
+
+
+def local_fft4_complex(x, n1, n2):
+    """Complex-dtype convenience wrapper around `local_fft4`."""
+    re, im = local_fft4(jnp.real(x).astype(jnp.float32),
+                        jnp.imag(x).astype(jnp.float32), n1, n2)
+    return re + 1j * im

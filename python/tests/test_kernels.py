@@ -1,0 +1,99 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every property asserts allclose between the
+interpret-mode Pallas kernel and `ref.py`. This is the core correctness
+signal for the compute layer (DESIGN.md §6 (5))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dft, pack, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=24)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.uniform(-1, 1, size=shape), dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, seed=seeds)
+def test_stage1_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a_re, a_im = rand(rng, m, n), rand(rng, m, n)
+    f_re, f_im = rand(rng, n, n), rand(rng, n, n)
+    t_re, t_im = rand(rng, m, n), rand(rng, m, n)
+    k_re, k_im = dft.fft_stage1(a_re, a_im, f_re, f_im, t_re, t_im)
+    r_re, r_im = ref.fft_stage1_ref(a_re, a_im, f_re, f_im, t_re, t_im)
+    np.testing.assert_allclose(k_re, r_re, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(k_im, r_im, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n1=dims, c=dims, seed=seeds)
+def test_stage2_matches_ref(n1, c, seed):
+    rng = np.random.default_rng(seed)
+    f_re, f_im = rand(rng, n1, n1), rand(rng, n1, n1)
+    a_re, a_im = rand(rng, n1, c), rand(rng, n1, c)
+    k_re, k_im = dft.fft_stage2(f_re, f_im, a_re, a_im)
+    r_re, r_im = ref.fft_stage2_ref(f_re, f_im, a_re, a_im)
+    np.testing.assert_allclose(k_re, r_re, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(k_im, r_im, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=128),
+       m=st.integers(min_value=1, max_value=64),
+       seed=seeds)
+def test_pack_matches_ref(n, m, seed):
+    rng = np.random.default_rng(seed)
+    data = rand(rng, n)
+    idx = jnp.asarray(rng.integers(0, n, size=m), dtype=jnp.int32)
+    np.testing.assert_array_equal(pack.pack(data, idx), ref.pack_ref(data, idx))
+
+
+def test_stage1_with_real_dft_inputs():
+    """Stage 1 with genuine F/T recovers per-row DFTs (impulse rows)."""
+    n2, rows, n_total = 8, 4, 32
+    a_re = jnp.zeros((rows, n2)).at[:, 0].set(1.0)  # impulse in each row
+    a_im = jnp.zeros((rows, n2))
+    f_re, f_im = ref.dft_matrix(n2)
+    t_re = jnp.ones((rows, n2))
+    t_im = jnp.zeros((rows, n2))
+    o_re, o_im = dft.fft_stage1(a_re, a_im, f_re, f_im, t_re, t_im)
+    # DFT of impulse = all ones.
+    np.testing.assert_allclose(o_re, jnp.ones((rows, n2)), atol=1e-5)
+    np.testing.assert_allclose(o_im, jnp.zeros((rows, n2)), atol=1e-5)
+    del n_total
+
+
+def test_kernels_handle_zero_imag():
+    rng = np.random.default_rng(0)
+    a_re = rand(rng, 3, 5)
+    z = jnp.zeros((3, 5))
+    f_re, f_im = ref.dft_matrix(5)
+    t_re, t_im = ref.twiddles(0, 3, 5, 15)
+    k = dft.fft_stage1(a_re, z, f_re, f_im, t_re, t_im)
+    r = ref.fft_stage1_ref(a_re, z, f_re, f_im, t_re, t_im)
+    np.testing.assert_allclose(k[0], r[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(k[1], r[1], rtol=1e-5, atol=1e-6)
+
+
+def test_pack_empty_index():
+    data = jnp.arange(4, dtype=jnp.float32)
+    idx = jnp.asarray([], dtype=jnp.int32)
+    assert pack.pack(data, idx).shape == (0,)
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 16])
+def test_dft_matrix_unitary_upto_scale(n):
+    f_re, f_im = ref.dft_matrix(n)
+    f = np.asarray(f_re) + 1j * np.asarray(f_im)
+    eye = f @ f.conj().T / n
+    np.testing.assert_allclose(eye, np.eye(n), atol=1e-4)

@@ -1,0 +1,63 @@
+"""Layer-2 correctness: the 4-step composition equals jnp.fft.fft."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("n1,n2", [(4, 4), (8, 4), (4, 8), (16, 16), (8, 6)])
+def test_local_fft4_matches_jnp_fft(n1, n2):
+    rng = np.random.default_rng(n1 * 100 + n2)
+    n = n1 * n2
+    x = rng.uniform(-1, 1, n) + 1j * rng.uniform(-1, 1, n)
+    got = model.local_fft4_complex(jnp.asarray(x, dtype=jnp.complex64), n1, n2)
+    want = np.fft.fft(x)
+    scale = np.abs(want).max()
+    np.testing.assert_allclose(
+        np.asarray(got), want, atol=2e-4 * max(scale, 1.0), rtol=0
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n1=st.integers(min_value=2, max_value=12),
+    n2=st.integers(min_value=2, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_local_fft4_property(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    n = n1 * n2
+    x = rng.uniform(-1, 1, n) + 1j * rng.uniform(-1, 1, n)
+    got = np.asarray(model.local_fft4_complex(jnp.asarray(x, dtype=jnp.complex64), n1, n2))
+    want = np.fft.fft(x)
+    scale = max(np.abs(want).max(), 1.0)
+    np.testing.assert_allclose(got, want, atol=3e-4 * scale, rtol=0)
+
+
+def test_fft_of_constant_signal():
+    # DFT of a constant is an impulse at k=0 of height N.
+    n1, n2 = 4, 6
+    n = n1 * n2
+    x = jnp.ones(n, dtype=jnp.complex64)
+    got = np.asarray(model.local_fft4_complex(x, n1, n2))
+    want = np.zeros(n, dtype=np.complex128)
+    want[0] = n
+    np.testing.assert_allclose(got, want, atol=1e-4 * n)
+
+
+def test_linearity():
+    n1, n2 = 4, 4
+    n = n1 * n2
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.uniform(-1, 1, n), dtype=jnp.complex64)
+    b = jnp.asarray(rng.uniform(-1, 1, n), dtype=jnp.complex64)
+    fa = np.asarray(model.local_fft4_complex(a, n1, n2))
+    fb = np.asarray(model.local_fft4_complex(b, n1, n2))
+    fab = np.asarray(model.local_fft4_complex(a + 2 * b, n1, n2))
+    np.testing.assert_allclose(fab, fa + 2 * fb, atol=1e-3)

@@ -1,0 +1,19 @@
+//! Bench harness for paper figure fig10 (quick grid; the full
+//! paper-scale run is `tuna figure fig10 --full`). Prints the table and
+//! the wallclock taken to regenerate it.
+
+use tuna::harness::{run_figure, FigOpts};
+
+fn main() {
+    let opts = FigOpts::bench();
+    let t0 = std::time::Instant::now();
+    let tables = run_figure("fig10", &opts).expect("figure generation failed");
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!(
+        "bench fig10_hier_params: regenerated in {:.2} s (artifacts in {:?})",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir
+    );
+}

@@ -1,0 +1,19 @@
+//! Bench harness for paper figure fig14 (quick grid; the full
+//! paper-scale run is `tuna figure fig14 --full`). Prints the table and
+//! the wallclock taken to regenerate it.
+
+use tuna::harness::{run_figure, FigOpts};
+
+fn main() {
+    let opts = FigOpts::bench();
+    let t0 = std::time::Instant::now();
+    let tables = run_figure("fig14", &opts).expect("figure generation failed");
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!(
+        "bench fig14_fft_app: regenerated in {:.2} s (artifacts in {:?})",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir
+    );
+}

@@ -1,0 +1,105 @@
+//! L3 performance bench (DESIGN.md §7): host-side throughput of the
+//! virtual-time engine — the hot path every figure and application run
+//! goes through. Reports:
+//!
+//! * message throughput of the mailbox/clock core (ping-rounds over a
+//!   rank pair and an 8-rank ring);
+//! * whole-algorithm wallclock for representative (algo, P) points, with
+//!   derived messages/second;
+//! * engine spawn overhead vs P.
+//!
+//! Used before/after every optimization in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use tuna::algos::{run_alltoallv, AlgoKind};
+use tuna::comm::{DataBuf, Engine, Payload, Topology};
+use tuna::model::MachineProfile;
+use tuna::workload::{BlockSizes, Dist};
+
+fn bench_ping(pairs: usize, rounds: usize) -> f64 {
+    let p = pairs * 2;
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::flat(p));
+    let t0 = Instant::now();
+    engine.run(|ctx| {
+        let me = ctx.rank();
+        let peer = me ^ 1;
+        for r in 0..rounds {
+            let _ = ctx.sendrecv(
+                peer,
+                (r % 1000) as u32,
+                Payload::Raw(DataBuf::Phantom(64)),
+                peer,
+                (r % 1000) as u32,
+            );
+        }
+    });
+    let msgs = (p * rounds) as f64;
+    msgs / t0.elapsed().as_secs_f64()
+}
+
+fn bench_algo(kind: AlgoKind, p: usize, q: usize, s: u64, iters: usize) -> (f64, f64) {
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 7);
+    // Warm-up.
+    let rep = run_alltoallv(&engine, &kind, &sizes, false).unwrap();
+    let msgs = rep.counters.total_msgs() as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = run_alltoallv(&engine, &kind, &sizes, false).unwrap();
+    }
+    let per_run = t0.elapsed().as_secs_f64() / iters as f64;
+    (per_run, msgs / per_run)
+}
+
+fn bench_spawn(p: usize) -> f64 {
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::flat(p));
+    let t0 = Instant::now();
+    engine.run(|_ctx| {});
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== perf_engine: L3 host-side throughput ==");
+
+    for (pairs, rounds) in [(1usize, 20_000usize), (4, 5_000)] {
+        let rate = bench_ping(pairs, rounds);
+        println!(
+            "mailbox ping  {:>2} pairs x {:>6} rounds: {:>10.0} msgs/s",
+            pairs, rounds, rate
+        );
+    }
+
+    println!(
+        "\n{:<28} {:>6} {:>12} {:>14}",
+        "algorithm", "P", "s/run", "sim-msgs/s"
+    );
+    for (kind, p, q, s, iters) in [
+        (AlgoKind::Tuna { radix: 2 }, 256usize, 8usize, 1024u64, 3usize),
+        (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, 3),
+        (AlgoKind::SpreadOut, 256, 8, 1024, 3),
+        (AlgoKind::Vendor, 256, 8, 1024, 3),
+        (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3),
+        (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1),
+    ] {
+        let (per_run, rate) = bench_algo(kind, p, q, s, iters);
+        println!(
+            "{:<28} {:>6} {:>10.3} s {:>14.0}",
+            kind.name(),
+            p,
+            per_run,
+            rate
+        );
+    }
+
+    println!();
+    for p in [64usize, 256, 1024, 4096] {
+        let t = bench_spawn(p);
+        println!(
+            "engine spawn+join P={:<5}: {:>8.1} ms ({:.1} us/rank)",
+            p,
+            t * 1e3,
+            t * 1e6 / p as f64
+        );
+    }
+}

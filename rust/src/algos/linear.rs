@@ -1,0 +1,286 @@
+//! Linear-time non-uniform all-to-all algorithms (§II(d)).
+//!
+//! These are the four standard implementations found in MPICH and OpenMPI
+//! which the paper benchmarks in Fig. 12 and builds on (the scattered
+//! algorithm is the inter-node component of TuNA_l^g):
+//!
+//! * **spread-out** (MPICH): post every isend/irecv in round-robin order
+//!   (`dst = me + i`, `src = me − i`) and wait once — each round targets a
+//!   unique destination, spreading load across endpoints.
+//! * **OpenMPI linear**: same non-blocking pattern but in *ascending
+//!   absolute rank order* — every rank hits rank 0 first, producing the
+//!   incast bursts that make it the worst performer at scale.
+//! * **pairwise** (OpenMPI): P−1 synchronized rounds of blocking
+//!   sendrecv; xor partners when P is a power of two, shifted ring
+//!   otherwise.
+//! * **scattered** (MPICH): spread-out in batches of `block_count`
+//!   requests with a waitall between batches — the tunable congestion
+//!   throttle.
+
+use crate::comm::engine::{RecvReq, SendReq};
+use crate::comm::{Block, Payload, Phase, RankCtx};
+
+/// Tag used by every linear algorithm (one message per (src,dst) pair;
+/// FIFO per channel keeps this unambiguous).
+const TAG: u32 = 1;
+
+fn take_self_block(ctx: &mut RankCtx, blocks: &mut Vec<Block>) -> Block {
+    let me = ctx.rank();
+    let b = blocks.swap_remove(
+        blocks
+            .iter()
+            .position(|b| b.dest as usize == me)
+            .expect("missing self block"),
+    );
+    // Local delivery is a plain memcpy.
+    ctx.copy(b.len());
+    b
+}
+
+/// MPICH spread-out: all requests posted round-robin, one waitall.
+pub fn spread_out(ctx: &mut RankCtx, mut blocks: Vec<Block>) -> Vec<Block> {
+    let p = ctx.size();
+    let me = ctx.rank();
+    ctx.phase_mark();
+    let self_block = take_self_block(ctx, &mut blocks);
+    blocks.sort_by_key(|b| (b.dest as usize + p - me) % p);
+
+    let mut sends: Vec<SendReq> = Vec::with_capacity(p - 1);
+    let mut recvs: Vec<RecvReq> = Vec::with_capacity(p - 1);
+    for (i, block) in blocks.into_iter().enumerate() {
+        debug_assert_eq!(block.dest as usize, (me + i + 1) % p);
+        let src = (me + p - i - 1) % p;
+        recvs.push(ctx.irecv(src, TAG));
+        sends.push(ctx.isend(block.dest as usize, TAG, Payload::Blocks(vec![block])));
+    }
+    let mut out: Vec<Block> = ctx
+        .waitall(&sends, &recvs)
+        .into_iter()
+        .flat_map(|pl| pl.into_blocks())
+        .collect();
+    out.push(self_block);
+    ctx.phase_lap(Phase::Data);
+    out
+}
+
+/// OpenMPI basic linear: non-blocking, but in ascending rank order.
+pub fn ompi_linear(ctx: &mut RankCtx, mut blocks: Vec<Block>) -> Vec<Block> {
+    let p = ctx.size();
+    let me = ctx.rank();
+    ctx.phase_mark();
+    let self_block = take_self_block(ctx, &mut blocks);
+    blocks.sort_by_key(|b| b.dest);
+
+    let mut sends: Vec<SendReq> = Vec::with_capacity(p - 1);
+    let mut recvs: Vec<RecvReq> = Vec::with_capacity(p - 1);
+    for block in blocks {
+        let dst = block.dest as usize;
+        debug_assert_ne!(dst, me);
+        recvs.push(ctx.irecv(dst, TAG)); // symmetric: recv from the same peer
+        sends.push(ctx.isend(dst, TAG, Payload::Blocks(vec![block])));
+    }
+    let mut out: Vec<Block> = ctx
+        .waitall(&sends, &recvs)
+        .into_iter()
+        .flat_map(|pl| pl.into_blocks())
+        .collect();
+    out.push(self_block);
+    ctx.phase_lap(Phase::Data);
+    out
+}
+
+/// OpenMPI pairwise: P−1 rounds of blocking sendrecv. With P a power of
+/// two, partners are `me ^ i` (perfect matching per round); otherwise the
+/// shifted ring `send to me+i, recv from me−i`.
+pub fn pairwise(ctx: &mut RankCtx, mut blocks: Vec<Block>) -> Vec<Block> {
+    let p = ctx.size();
+    let me = ctx.rank();
+    ctx.phase_mark();
+    let self_block = take_self_block(ctx, &mut blocks);
+    let pow2 = p.is_power_of_two();
+
+    // Index blocks by destination for O(1) lookup per round.
+    let mut by_dest: Vec<Option<Block>> = (0..p).map(|_| None).collect();
+    for b in blocks {
+        let d = b.dest as usize;
+        by_dest[d] = Some(b);
+    }
+
+    let mut out = Vec::with_capacity(p);
+    for i in 1..p {
+        let (dst, src) = if pow2 {
+            (me ^ i, me ^ i)
+        } else {
+            ((me + i) % p, (me + p - i) % p)
+        };
+        let block = by_dest[dst].take().expect("pairwise visits each dest once");
+        let got = ctx.sendrecv(dst, TAG, Payload::Blocks(vec![block]), src, TAG);
+        out.extend(got.into_blocks());
+    }
+    out.push(self_block);
+    ctx.phase_lap(Phase::Data);
+    out
+}
+
+/// MPICH scattered: spread-out batched by `block_count` with a waitall
+/// between batches — the congestion throttle the paper tunes (and reuses
+/// for the inter-node phase of TuNA_l^g).
+pub fn scattered(ctx: &mut RankCtx, mut blocks: Vec<Block>, block_count: usize) -> Vec<Block> {
+    assert!(block_count >= 1, "block_count must be >= 1");
+    let p = ctx.size();
+    let me = ctx.rank();
+    ctx.phase_mark();
+    let self_block = take_self_block(ctx, &mut blocks);
+    blocks.sort_by_key(|b| (b.dest as usize + p - me) % p);
+
+    let mut out = Vec::with_capacity(p);
+    let mut iter = blocks.into_iter();
+    let mut i = 0usize;
+    while i < p - 1 {
+        let batch = block_count.min(p - 1 - i);
+        let mut sends: Vec<SendReq> = Vec::with_capacity(batch);
+        let mut recvs: Vec<RecvReq> = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let off = i + j + 1;
+            let src = (me + p - off) % p;
+            let block = iter.next().expect("block per offset");
+            debug_assert_eq!(block.dest as usize, (me + off) % p);
+            recvs.push(ctx.irecv(src, TAG));
+            sends.push(ctx.isend(block.dest as usize, TAG, Payload::Blocks(vec![block])));
+        }
+        out.extend(
+            ctx.waitall(&sends, &recvs)
+                .into_iter()
+                .flat_map(|pl| pl.into_blocks()),
+        );
+        i += batch;
+    }
+    out.push(self_block);
+    ctx.phase_lap(Phase::Data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    //! Algorithm-specific behaviors; full gold-correctness matrices live in
+    //! `tests/algos_correctness.rs`.
+    use super::*;
+    use crate::comm::{DataBuf, Engine, Topology};
+    use crate::model::MachineProfile;
+
+    fn pattern_blocks(ctx: &RankCtx) -> Vec<Block> {
+        let me = ctx.rank();
+        (0..ctx.size())
+            .map(|d| Block::new(me, d, DataBuf::pattern(me, d, (d as u64 + 1) * 16)))
+            .collect()
+    }
+
+    fn check_full(me: usize, p: usize, out: &[Block]) {
+        assert_eq!(out.len(), p);
+        let mut seen = vec![false; p];
+        for b in out {
+            assert_eq!(b.dest as usize, me);
+            assert!(!seen[b.origin as usize]);
+            seen[b.origin as usize] = true;
+            assert_eq!(b.len(), (me as u64 + 1) * 16);
+            b.data.check_pattern(b.origin as usize, me).unwrap();
+        }
+    }
+
+    fn run_algo(p: usize, q: usize, f: impl Fn(&mut RankCtx, Vec<Block>) -> Vec<Block> + Send + Sync) {
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let res = e.run(|ctx| {
+            let blocks = pattern_blocks(ctx);
+            let out = f(ctx, blocks);
+            check_full(ctx.rank(), ctx.size(), &out);
+            true
+        });
+        assert!(res.ranks.iter().all(|r| r.value));
+    }
+
+    #[test]
+    fn spread_out_correct() {
+        run_algo(8, 2, spread_out);
+        run_algo(5, 1, spread_out);
+    }
+
+    #[test]
+    fn ompi_linear_correct() {
+        run_algo(8, 4, ompi_linear);
+        run_algo(7, 1, ompi_linear);
+    }
+
+    #[test]
+    fn pairwise_correct_pow2_and_not() {
+        run_algo(8, 2, pairwise);
+        run_algo(6, 3, pairwise);
+        run_algo(9, 3, pairwise);
+    }
+
+    #[test]
+    fn scattered_correct_various_batches() {
+        for bc in [1usize, 2, 3, 7, 64] {
+            run_algo(8, 4, move |ctx, b| scattered(ctx, b, bc));
+        }
+    }
+
+    #[test]
+    fn scattered_batching_reduces_burst_under_congestion() {
+        // With congestion enabled and enough concurrent flows in the
+        // network (congestion scales with P), a full burst of P-1
+        // outstanding sends must cost more than a moderately batched
+        // scattered run — the block_count effect of §II(d) / Fig. 12.
+        let p = 512;
+        let mut prof = MachineProfile::fugaku();
+        prof.mem_bw = 1e12; // isolate communication costs
+        let e = Engine::new(prof, Topology::flat(p));
+        let mk = |ctx: &RankCtx| {
+            let me = ctx.rank();
+            (0..p)
+                .map(|d| Block::new(me, d, DataBuf::Phantom(16 * 1024)))
+                .collect::<Vec<_>>()
+        };
+        let burst = e.run(|ctx| {
+            let b = mk(ctx);
+            spread_out(ctx, b);
+        });
+        let throttled = e.run(|ctx| {
+            let b = mk(ctx);
+            scattered(ctx, b, 4);
+        });
+        assert!(
+            burst.makespan > throttled.makespan,
+            "burst {} should exceed throttled {} under congestion",
+            burst.makespan,
+            throttled.makespan
+        );
+    }
+
+    #[test]
+    fn ompi_linear_slower_than_spread_out_under_incast() {
+        // Ascending order concentrates early arrivals on low ranks; the
+        // incast penalty should make it no faster than spread-out.
+        let prof = MachineProfile::fugaku();
+        let e = Engine::new(prof, Topology::flat(32));
+        let mk = |ctx: &RankCtx| {
+            let me = ctx.rank();
+            (0..32)
+                .map(|d| Block::new(me, d, DataBuf::Phantom(8192)))
+                .collect::<Vec<_>>()
+        };
+        let asc = e.run(|ctx| {
+            let b = mk(ctx);
+            ompi_linear(ctx, b);
+        });
+        let rr = e.run(|ctx| {
+            let b = mk(ctx);
+            spread_out(ctx, b);
+        });
+        assert!(
+            asc.makespan >= rr.makespan * 0.95,
+            "ascending {} vs round-robin {}",
+            asc.makespan,
+            rr.makespan
+        );
+    }
+}

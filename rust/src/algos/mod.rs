@@ -1,0 +1,368 @@
+//! Non-uniform all-to-all algorithms.
+//!
+//! Everything the paper implements or compares against, behind one
+//! dispatch enum [`AlgoKind`]:
+//!
+//! | kind | paper §II/III/IV | complexity |
+//! |---|---|---|
+//! | `SpreadOut` | MPICH spread-out (round-robin linear) | P−1 rounds |
+//! | `OmpiLinear` | OpenMPI basic linear (ascending order) | P−1 rounds |
+//! | `Pairwise` | OpenMPI pairwise (xor / shift partners) | P−1 sync rounds |
+//! | `Scattered` | MPICH scattered (batched, tunable `block_count`) | P−1, batched |
+//! | `Vendor` | vendor MPI_Alltoallv proxy (scattered @ default throttle) | — |
+//! | `Bruck2` | two-phase non-uniform Bruck [10] (radix fixed at 2) | log₂P rounds |
+//! | `Tuna` | **TuNA** (Alg. 1): tunable radix, two-phase, tight T | ≤ w(r−1) rounds |
+//! | `TunaHierCoalesced` | **coalesced TuNA_l^g** (Alg. 3) | intra + N−1 |
+//! | `TunaHierStaggered` | **staggered TuNA_l^g** (Alg. 2) | intra + Q(N−1) |
+//!
+//! All algorithms move [`Block`]s (origin, dest, payload) and must deliver
+//! exactly one block per source to every destination; `run_alltoallv`
+//! validates that against workload fingerprints (and byte patterns when
+//! payloads are real).
+
+pub mod linear;
+pub mod radix;
+pub mod tuna;
+pub mod tuna_hier;
+pub mod tuning;
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::comm::{Block, Counters, DataBuf, Engine, PhaseBreakdown, RankCtx};
+use crate::error::{Result, TunaError};
+use crate::workload::{fingerprint_one, BlockSizes};
+
+/// MPICH's default throttle for its scattered alltoallv (`MPIR_CVAR_ALLTOALLV
+/// _THROTTLE`-style); our vendor proxy uses the same value.
+pub const VENDOR_BLOCK_COUNT: usize = 32;
+
+/// Algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    SpreadOut,
+    OmpiLinear,
+    Pairwise,
+    Scattered { block_count: usize },
+    Vendor,
+    /// Two-phase non-uniform Bruck of [10]: TuNA's ancestor, radix 2.
+    Bruck2,
+    Tuna { radix: usize },
+    TunaHierCoalesced { radix: usize, block_count: usize },
+    TunaHierStaggered { radix: usize, block_count: usize },
+}
+
+impl AlgoKind {
+    pub fn name(&self) -> String {
+        match self {
+            AlgoKind::SpreadOut => "spread-out".into(),
+            AlgoKind::OmpiLinear => "ompi-linear".into(),
+            AlgoKind::Pairwise => "pairwise".into(),
+            AlgoKind::Scattered { block_count } => format!("scattered(b={block_count})"),
+            AlgoKind::Vendor => "vendor-alltoallv".into(),
+            AlgoKind::Bruck2 => "bruck2-nonuniform".into(),
+            AlgoKind::Tuna { radix } => format!("tuna(r={radix})"),
+            AlgoKind::TunaHierCoalesced { radix, block_count } => {
+                format!("tuna-hier-coalesced(r={radix},b={block_count})")
+            }
+            AlgoKind::TunaHierStaggered { radix, block_count } => {
+                format!("tuna-hier-staggered(r={radix},b={block_count})")
+            }
+        }
+    }
+
+    /// Short family name without parameters (for table columns).
+    pub fn family(&self) -> &'static str {
+        match self {
+            AlgoKind::SpreadOut => "spread-out",
+            AlgoKind::OmpiLinear => "ompi-linear",
+            AlgoKind::Pairwise => "pairwise",
+            AlgoKind::Scattered { .. } => "scattered",
+            AlgoKind::Vendor => "vendor",
+            AlgoKind::Bruck2 => "bruck2",
+            AlgoKind::Tuna { .. } => "tuna",
+            AlgoKind::TunaHierCoalesced { .. } => "tuna-hier-coalesced",
+            AlgoKind::TunaHierStaggered { .. } => "tuna-hier-staggered",
+        }
+    }
+
+    /// Parse `"tuna:r=4"`, `"scattered:b=16"`,
+    /// `"tuna-hier-coalesced:r=4,b=8"`, `"spread-out"`, ...
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, a),
+            None => (s, ""),
+        };
+        let get = |key: &str| -> Option<usize> {
+            args.split(',')
+                .find_map(|kv| kv.strip_prefix(key)?.strip_prefix('=')?.parse().ok())
+        };
+        match head {
+            "spread-out" => Some(AlgoKind::SpreadOut),
+            "ompi-linear" => Some(AlgoKind::OmpiLinear),
+            "pairwise" => Some(AlgoKind::Pairwise),
+            "scattered" => Some(AlgoKind::Scattered {
+                block_count: get("b")?,
+            }),
+            "vendor" => Some(AlgoKind::Vendor),
+            "bruck2" => Some(AlgoKind::Bruck2),
+            "tuna" => Some(AlgoKind::Tuna { radix: get("r")? }),
+            "tuna-hier-coalesced" => Some(AlgoKind::TunaHierCoalesced {
+                radix: get("r")?,
+                block_count: get("b")?,
+            }),
+            "tuna-hier-staggered" => Some(AlgoKind::TunaHierStaggered {
+                radix: get("r")?,
+                block_count: get("b")?,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Validate parameters against a topology before running.
+    pub fn check(&self, p: usize, q: usize) -> Result<()> {
+        let bad = |m: String| Err(TunaError::Config(m));
+        match *self {
+            AlgoKind::Scattered { block_count } if block_count == 0 => {
+                bad("scattered: block_count must be >= 1".into())
+            }
+            AlgoKind::Tuna { radix } if radix < 2 => {
+                bad(format!("tuna: radix {radix} < 2"))
+            }
+            AlgoKind::Tuna { radix } if radix > p.max(2) => {
+                bad(format!("tuna: radix {radix} > P={p}"))
+            }
+            AlgoKind::TunaHierCoalesced { radix, block_count }
+            | AlgoKind::TunaHierStaggered { radix, block_count } => {
+                if q < 2 {
+                    bad(format!("hierarchical TuNA needs Q >= 2 ranks per node, got {q}"))
+                } else if radix < 2 || radix > q {
+                    bad(format!("hierarchical TuNA: radix {radix} outside [2, Q={q}]"))
+                } else if block_count == 0 {
+                    bad("hierarchical TuNA: block_count must be >= 1".into())
+                } else {
+                    Ok(())
+                }
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Run this algorithm on one rank. `blocks[d]` must be the block this
+    /// rank sends to destination `d`. Returns delivered blocks + stats.
+    pub fn dispatch(&self, ctx: &mut RankCtx, blocks: Vec<Block>) -> (Vec<Block>, AlgoStats) {
+        match *self {
+            AlgoKind::SpreadOut => (linear::spread_out(ctx, blocks), AlgoStats::default()),
+            AlgoKind::OmpiLinear => (linear::ompi_linear(ctx, blocks), AlgoStats::default()),
+            AlgoKind::Pairwise => (linear::pairwise(ctx, blocks), AlgoStats::default()),
+            AlgoKind::Scattered { block_count } => {
+                (linear::scattered(ctx, blocks, block_count), AlgoStats::default())
+            }
+            AlgoKind::Vendor => (
+                linear::scattered(ctx, blocks, VENDOR_BLOCK_COUNT),
+                AlgoStats::default(),
+            ),
+            AlgoKind::Bruck2 => tuna::run(ctx, blocks, 2),
+            AlgoKind::Tuna { radix } => tuna::run(ctx, blocks, radix),
+            AlgoKind::TunaHierCoalesced { radix, block_count } => {
+                tuna_hier::run(ctx, blocks, radix, block_count, true)
+            }
+            AlgoKind::TunaHierStaggered { radix, block_count } => {
+                tuna_hier::run(ctx, blocks, radix, block_count, false)
+            }
+        }
+    }
+}
+
+/// Per-rank statistics an algorithm reports beyond timing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlgoStats {
+    /// Peak number of occupied temporary-buffer slots (TuNA's T).
+    pub t_peak: usize,
+    /// Communication rounds executed.
+    pub rounds: usize,
+}
+
+/// Result of a full all-to-allv run on the engine.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub algo: String,
+    /// Simulated completion time (max over rank clocks).
+    pub makespan: f64,
+    /// Per-phase critical path (element-wise max over ranks).
+    pub phases: PhaseBreakdown,
+    /// Aggregate message/byte counters.
+    pub counters: Counters,
+    /// Max observed T occupancy over all ranks.
+    pub t_peak: usize,
+    /// Max rounds executed by any rank.
+    pub rounds: usize,
+    /// All ranks received a complete, correct block set.
+    pub validated: bool,
+}
+
+/// Run `kind` over the whole engine on workload `sizes`.
+///
+/// With `real_payloads` every block carries a deterministic byte pattern
+/// that is verified at the destination; without, phantom buffers carry
+/// only sizes (for large-P simulations) and validation covers block
+/// identity and sizes via workload fingerprints.
+pub fn run_alltoallv(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    real_payloads: bool,
+) -> Result<RunReport> {
+    let p = engine.topo.p();
+    if sizes.p() != p {
+        return Err(TunaError::config(format!(
+            "workload is for P={} but engine has P={p}",
+            sizes.p()
+        )));
+    }
+    kind.check(p, engine.topo.q())?;
+
+    let fingerprints = Arc::new(sizes.recv_fingerprints());
+    let kind_c = *kind;
+    let sizes_c = sizes.clone();
+    let fp = fingerprints.clone();
+
+    let res = engine.run(move |ctx| {
+        let me = ctx.rank();
+        let row = sizes_c.row(me);
+        let blocks: Vec<Block> = row
+            .iter()
+            .enumerate()
+            .map(|(d, &len)| {
+                let data = if real_payloads {
+                    DataBuf::pattern(me, d, len)
+                } else {
+                    DataBuf::Phantom(len)
+                };
+                Block::new(me, d, data)
+            })
+            .collect();
+        let (recv, stats) = kind_c.dispatch(ctx, blocks);
+        let ok = validate_received(me, p, &recv, fp[me], real_payloads);
+        (ok, stats)
+    });
+
+    let validated = res.ranks.iter().all(|r| r.value.0);
+    let t_peak = res.ranks.iter().map(|r| r.value.1.t_peak).max().unwrap_or(0);
+    let rounds = res.ranks.iter().map(|r| r.value.1.rounds).max().unwrap_or(0);
+    let report = RunReport {
+        algo: kind.name(),
+        makespan: res.makespan,
+        phases: res.phase_critical_path(),
+        counters: res.total_counters(),
+        t_peak,
+        rounds,
+        validated,
+    };
+    if !validated {
+        return Err(TunaError::validation(format!(
+            "{} delivered an incorrect block set",
+            report.algo
+        )));
+    }
+    Ok(report)
+}
+
+/// Check a received block set: complete origin coverage, correct
+/// destination, fingerprint-validated sizes, and (in real mode) intact
+/// byte patterns.
+fn validate_received(me: usize, p: usize, recv: &[Block], expect_fp: u64, real: bool) -> bool {
+    if recv.len() != p {
+        return false;
+    }
+    let mut origins = HashSet::with_capacity(p);
+    let mut fp = 0u64;
+    for b in recv {
+        if b.dest as usize != me {
+            return false;
+        }
+        if !origins.insert(b.origin) {
+            return false;
+        }
+        fp = fp.wrapping_add(fingerprint_one(b.origin as usize, b.len()));
+        if real && b.data.check_pattern(b.origin as usize, me).is_err() {
+            return false;
+        }
+    }
+    fp == expect_fp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds() {
+        assert_eq!(AlgoKind::parse("spread-out"), Some(AlgoKind::SpreadOut));
+        assert_eq!(AlgoKind::parse("ompi-linear"), Some(AlgoKind::OmpiLinear));
+        assert_eq!(AlgoKind::parse("pairwise"), Some(AlgoKind::Pairwise));
+        assert_eq!(
+            AlgoKind::parse("scattered:b=16"),
+            Some(AlgoKind::Scattered { block_count: 16 })
+        );
+        assert_eq!(AlgoKind::parse("vendor"), Some(AlgoKind::Vendor));
+        assert_eq!(AlgoKind::parse("bruck2"), Some(AlgoKind::Bruck2));
+        assert_eq!(AlgoKind::parse("tuna:r=8"), Some(AlgoKind::Tuna { radix: 8 }));
+        assert_eq!(
+            AlgoKind::parse("tuna-hier-coalesced:r=4,b=2"),
+            Some(AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 })
+        );
+        assert_eq!(
+            AlgoKind::parse("tuna-hier-staggered:b=2,r=4"),
+            Some(AlgoKind::TunaHierStaggered { radix: 4, block_count: 2 })
+        );
+        assert_eq!(AlgoKind::parse("tuna"), None);
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn names_include_params() {
+        assert_eq!(AlgoKind::Tuna { radix: 4 }.name(), "tuna(r=4)");
+        assert!(AlgoKind::TunaHierCoalesced { radix: 2, block_count: 8 }
+            .name()
+            .contains("r=2,b=8"));
+    }
+
+    #[test]
+    fn check_rejects_bad_params() {
+        assert!(AlgoKind::Tuna { radix: 1 }.check(8, 2).is_err());
+        assert!(AlgoKind::Tuna { radix: 9 }.check(8, 2).is_err());
+        assert!(AlgoKind::Tuna { radix: 8 }.check(8, 2).is_ok());
+        assert!(AlgoKind::Scattered { block_count: 0 }.check(8, 2).is_err());
+        assert!(AlgoKind::TunaHierCoalesced { radix: 4, block_count: 1 }
+            .check(8, 2)
+            .is_err()); // radix > Q
+        assert!(AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 }
+            .check(8, 1)
+            .is_err()); // Q < 2
+        assert!(AlgoKind::TunaHierStaggered { radix: 2, block_count: 1 }
+            .check(8, 4)
+            .is_ok());
+    }
+
+    #[test]
+    fn validate_received_catches_problems() {
+        let mk = |origin: usize, dest: usize, len: u64| Block::new(origin, dest, DataBuf::Phantom(len));
+        let p = 3;
+        let sizes = [5u64, 7, 9];
+        let fp: u64 = (0..3).map(|s| fingerprint_one(s, sizes[s])).fold(0, u64::wrapping_add);
+        let good: Vec<Block> = (0..3).map(|s| mk(s, 1, sizes[s])).collect();
+        assert!(validate_received(1, p, &good, fp, false));
+        // Missing a block.
+        assert!(!validate_received(1, p, &good[..2], fp, false));
+        // Duplicate origin.
+        let dup = vec![mk(0, 1, 5), mk(0, 1, 7), mk(2, 1, 9)];
+        assert!(!validate_received(1, p, &dup, fp, false));
+        // Wrong destination.
+        let wrong = vec![mk(0, 2, 5), mk(1, 1, 7), mk(2, 1, 9)];
+        assert!(!validate_received(1, p, &wrong, fp, false));
+        // Wrong size breaks fingerprint.
+        let bad = vec![mk(0, 1, 6), mk(1, 1, 7), mk(2, 1, 9)];
+        assert!(!validate_received(1, p, &bad, fp, false));
+    }
+}

@@ -1,0 +1,309 @@
+//! Radix-r encoding math underpinning TuNA (§III-A, §III-C).
+//!
+//! Block *offsets* `o = (dest − rank) mod P` are encoded in base `r` with
+//! `w = ⌈log_r P⌉` digits. Communication round `(x, z)` (digit position
+//! `x`, digit value `z`) moves every held block whose `x`-th digit equals
+//! `z` forward by `z·r^x` ranks, clearing that digit. Offsets with exactly
+//! one non-zero digit are *direct*: delivered in a single send, never
+//! stored in the temporary buffer `T` — which is what yields the tight
+//! bound `B = P − (K + 1)` and the slot map `t = o − 1 − dx·(r−1) − dz`.
+
+/// `⌈log_r(p)⌉`: number of base-`r` digits needed for offsets `0..p`.
+pub fn ceil_log(r: usize, p: usize) -> usize {
+    assert!(r >= 2, "radix must be >= 2");
+    assert!(p >= 1);
+    if p == 1 {
+        return 1;
+    }
+    let mut w = 0usize;
+    let mut pow = 1u128;
+    while pow < p as u128 {
+        pow *= r as u128;
+        w += 1;
+    }
+    w
+}
+
+/// Digit `x` of `o` in base `r`.
+#[inline]
+pub fn digit(o: usize, x: usize, r: usize) -> usize {
+    (o / r.pow(x as u32)) % r
+}
+
+/// One communication round of the parameterized algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Round {
+    /// Digit position, `0 <= x < w`.
+    pub x: usize,
+    /// Digit value, `1 <= z < r`.
+    pub z: usize,
+    /// Rank distance moved: `z * r^x`.
+    pub step: usize,
+}
+
+/// The round schedule for radix `r` over `p` ranks: all `(x, z)` with
+/// `z·r^x < p` in ascending `(x, z)` order. Its length is the paper's `K`,
+/// bounded by `w·(r−1)`.
+pub fn rounds(r: usize, p: usize) -> Vec<Round> {
+    assert!(r >= 2);
+    assert!(p >= 1);
+    let w = ceil_log(r, p);
+    let mut out = Vec::new();
+    for x in 0..w {
+        let pow = r.checked_pow(x as u32).expect("radix overflow");
+        for z in 1..r {
+            let step = z.checked_mul(pow).expect("radix overflow");
+            if step >= p {
+                break;
+            }
+            out.push(Round { x, z, step });
+        }
+    }
+    out
+}
+
+/// The paper's `K`: number of communication rounds.
+pub fn k_rounds(r: usize, p: usize) -> usize {
+    rounds(r, p).len()
+}
+
+/// Tight temporary-buffer bound `B = P − (K + 1)` (§III-C): `K` direct
+/// offsets plus the self block never occupy `T`.
+pub fn temp_bound(r: usize, p: usize) -> usize {
+    p - (k_rounds(r, p) + 1)
+}
+
+/// Is offset `o` *direct* (exactly one non-zero base-`r` digit)? Direct
+/// blocks go straight to their destination and skip `T`. `o = 0` is the
+/// self block (also never in `T`, counted separately).
+pub fn is_direct(o: usize, r: usize) -> bool {
+    if o == 0 {
+        return false;
+    }
+    let mut v = o;
+    let mut nonzero = 0;
+    while v > 0 {
+        if v % r != 0 {
+            nonzero += 1;
+            if nonzero > 1 {
+                return false;
+            }
+        }
+        v /= r;
+    }
+    nonzero == 1
+}
+
+/// Highest non-zero digit position of `o >= 1` in base `r` (the paper's
+/// `dx`), and its value (`dz`).
+pub fn top_digit(o: usize, r: usize) -> (usize, usize) {
+    assert!(o >= 1);
+    let mut dx = 0;
+    let mut v = o;
+    while v >= r {
+        v /= r;
+        dx += 1;
+    }
+    (dx, v)
+}
+
+/// The paper's T-slot index map (§III-C): `t = o − 1 − dx·(r−1) − dz`,
+/// defined for non-direct, non-zero offsets. Subtracts from `o` the number
+/// of direct offsets (and the self offset) smaller than `o`.
+pub fn temp_slot(o: usize, r: usize) -> usize {
+    debug_assert!(o >= 1 && !is_direct(o, r), "temp_slot only for T-resident offsets");
+    let (dx, dz) = top_digit(o, r);
+    o - 1 - dx * (r - 1) - dz
+}
+
+/// Exact number of offsets in `[0, p)` whose `x`-th base-`r` digit equals
+/// `z` — the per-round send-block (slot) count, and the building block of
+/// the analytic model's `D`.
+pub fn offsets_with_digit(x: usize, z: usize, r: usize, p: usize) -> usize {
+    let m = r.pow(x as u32);
+    let period = m * r;
+    let full = p / period;
+    let rem = p % period;
+    full * m + rem.saturating_sub(z * m).min(m)
+}
+
+/// Total data-block (slot) transmissions across all rounds — the paper's
+/// `D`, bounded by `w·(r−1)·r^{w−1}`.
+pub fn d_total(r: usize, p: usize) -> usize {
+    rounds(r, p)
+        .iter()
+        .map(|rd| offsets_with_digit(rd.x, rd.z, r, p))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen_proc_count};
+
+    #[test]
+    fn ceil_log_basics() {
+        assert_eq!(ceil_log(2, 1), 1);
+        assert_eq!(ceil_log(2, 2), 1);
+        assert_eq!(ceil_log(2, 4), 2);
+        assert_eq!(ceil_log(2, 5), 3);
+        assert_eq!(ceil_log(3, 9), 2);
+        assert_eq!(ceil_log(3, 10), 3);
+        assert_eq!(ceil_log(16, 256), 2);
+        assert_eq!(ceil_log(256, 256), 1);
+    }
+
+    #[test]
+    fn classic_bruck_round_count() {
+        // r = 2, P = 2^m: K = log2 P, steps are powers of two.
+        let rs = rounds(2, 16);
+        assert_eq!(rs.len(), 4);
+        assert_eq!(
+            rs.iter().map(|r| r.step).collect::<Vec<_>>(),
+            vec![1, 2, 4, 8]
+        );
+    }
+
+    #[test]
+    fn spread_out_limit() {
+        // r >= P: one digit, K = P − 1, no temporary buffer.
+        let p = 12;
+        assert_eq!(k_rounds(p, p), p - 1);
+        assert_eq!(temp_bound(p, p), 0);
+    }
+
+    #[test]
+    fn k_bounded_by_w_r_minus_1() {
+        forall("K <= w(r-1)", 200, |rng| {
+            let p = gen_proc_count(rng, 600);
+            let r = 2 + rng.next_below(p as u64) as usize;
+            let w = ceil_log(r, p);
+            let k = k_rounds(r, p);
+            if k <= w * (r - 1) {
+                Ok(())
+            } else {
+                Err(format!("P={p} r={r}: K={k} > w(r-1)={}", w * (r - 1)))
+            }
+        });
+    }
+
+    #[test]
+    fn every_offset_clears_via_round_schedule() {
+        // Simulating the digit-clearing: every offset must reach zero by
+        // applying the schedule's steps whenever the digit matches.
+        forall("offsets clear", 120, |rng| {
+            let p = gen_proc_count(rng, 400);
+            let r = 2 + rng.next_below(p as u64) as usize;
+            let schedule = rounds(r, p);
+            for o0 in 0..p {
+                let mut o = o0;
+                for rd in &schedule {
+                    if digit(o, rd.x, r) == rd.z {
+                        o -= rd.step;
+                    }
+                }
+                if o != 0 {
+                    return Err(format!("P={p} r={r}: offset {o0} left at {o}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn direct_offsets_are_exactly_the_round_steps() {
+        forall("direct==steps", 120, |rng| {
+            let p = gen_proc_count(rng, 400);
+            let r = 2 + rng.next_below(p as u64) as usize;
+            let steps: std::collections::HashSet<usize> =
+                rounds(r, p).iter().map(|rd| rd.step).collect();
+            for o in 1..p {
+                if is_direct(o, r) != steps.contains(&o) {
+                    return Err(format!("P={p} r={r} o={o}: direct mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn temp_slot_is_bijection_onto_temp_bound() {
+        // §III-C's claim: the map t(o) sends the non-direct offsets
+        // bijectively onto [0, B).
+        forall("t-map bijection", 150, |rng| {
+            let p = gen_proc_count(rng, 500);
+            let r = 2 + rng.next_below(p as u64) as usize;
+            let b = temp_bound(r, p);
+            let mut seen = vec![false; b];
+            for o in 1..p {
+                if is_direct(o, r) {
+                    continue;
+                }
+                let t = temp_slot(o, r);
+                if t >= b {
+                    return Err(format!("P={p} r={r} o={o}: t={t} >= B={b}"));
+                }
+                if seen[t] {
+                    return Err(format!("P={p} r={r} o={o}: slot {t} reused"));
+                }
+                seen[t] = true;
+            }
+            if seen.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err(format!("P={p} r={r}: map not onto, B={b}"))
+            }
+        });
+    }
+
+    #[test]
+    fn offsets_with_digit_matches_bruteforce() {
+        forall("digit count", 150, |rng| {
+            let p = gen_proc_count(rng, 500);
+            let r = 2 + rng.next_below(16.min(p as u64)) as usize;
+            let w = ceil_log(r, p);
+            for x in 0..w {
+                for z in 1..r {
+                    let brute = (0..p).filter(|&o| digit(o, x, r) == z).count();
+                    let fast = offsets_with_digit(x, z, r, p);
+                    if brute != fast {
+                        return Err(format!("P={p} r={r} x={x} z={z}: {fast} != {brute}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn d_total_bounded_and_monotone_tradeoff() {
+        // §III-A: K and D are inversely correlated in r — raising the
+        // radix adds rounds (K grows: latency cost) but removes duplicate
+        // forwarding (D shrinks: bandwidth saving). r = 2 minimizes K;
+        // r = P minimizes D.
+        let p = 256;
+        let mut last_k = 0usize;
+        let mut last_d = usize::MAX;
+        for r in [2usize, 4, 16, 64, 256] {
+            let w = ceil_log(r, p);
+            let k = k_rounds(r, p);
+            let d = d_total(r, p);
+            assert!(d <= w * (r - 1) * r.pow(w as u32 - 1), "D bound violated r={r}");
+            assert!(k >= last_k, "K must not shrink as r grows (r={r})");
+            assert!(d <= last_d, "D must not grow as r grows (r={r})");
+            last_k = k;
+            last_d = d;
+        }
+        // Extremes: r=2 sends the most duplicate data; r=P sends exactly
+        // the P-1 non-self blocks.
+        assert_eq!(d_total(p, p), p - 1);
+        assert!(d_total(2, p) > d_total(p, p));
+    }
+
+    #[test]
+    fn top_digit_examples() {
+        assert_eq!(top_digit(5, 2), (2, 1)); // 101b
+        assert_eq!(top_digit(7, 3), (1, 2)); // 21 base 3
+        assert_eq!(top_digit(1, 7), (0, 1));
+    }
+}

@@ -1,0 +1,358 @@
+//! **TuNA** — tunable-radix non-uniform all-to-all (Algorithm 1).
+//!
+//! Slot-indexed store-and-forward, generalizing Bruck to radix `r`:
+//! rank `p`'s slot `j` initially holds the block destined to `(p + j) mod
+//! P`. In round `(x, z)` every slot whose offset's `x`-th base-`r` digit
+//! equals `z` is sent to rank `p + z·r^x` — a two-phase exchange (sizes
+//! first, then payloads) so non-uniform blocks can be received — and the
+//! incoming slot replaces the outgoing one. The invariant (provable by
+//! induction over digits, see `radix::tests::every_offset_clears_via_round
+//! _schedule`): after digit `x` is processed, slot `j` at rank `p` holds
+//! content destined to `p + clear_digits_le_x(j)`; after the last round,
+//! every slot holds a final block and `R[j]` is the block from rank
+//! `(p − j) mod P` — in ascending order, no inverse rotation (§III-B).
+//!
+//! Slots with a single non-zero digit (*direct*) receive content exactly
+//! once — already final — so only the `B = P − (K+1)` non-direct slots
+//! ever store intermediate data: the paper's tight temporary-buffer bound
+//! (§III-C), asserted at runtime here and property-tested in `radix`.
+
+use super::radix::{self, Round};
+use super::AlgoStats;
+use crate::comm::{Block, Payload, Phase, RankCtx};
+
+/// A slot's content: one or more blocks that travel as a unit. Flat TuNA
+/// has one block per slot; hierarchical intra-node TuNA aggregates the N
+/// per-node sub-blocks of a group offset into one slot.
+pub type SlotContent = Vec<Block>;
+
+/// Outcome of the slot engine: final slot contents plus stats.
+pub(crate) struct CoreOutcome {
+    pub slots: Vec<SlotContent>,
+    pub stats: AlgoStats,
+}
+
+/// Run the TuNA slot engine over the contiguous rank group
+/// `[base, base+q)`. `slots[j]` is this rank's initial content for group
+/// offset `j` (`slots[0]` is the self slot and never moves); every slot
+/// must hold exactly `arity` sub-blocks (1 for flat TuNA, N for the
+/// intra-node phase of TuNA_l^g). `tag_base` reserves `2 * K` tags. Phase
+/// time is attributed to Metadata / Data / Replace; the caller owns
+/// Prepare.
+pub(crate) fn tuna_core(
+    ctx: &mut RankCtx,
+    base: usize,
+    q: usize,
+    radix_r: usize,
+    arity: usize,
+    mut slots: Vec<SlotContent>,
+    tag_base: u32,
+) -> CoreOutcome {
+    assert_eq!(slots.len(), q, "need one slot per group offset");
+    assert!(radix_r >= 2);
+    let me = ctx.rank();
+    debug_assert!(me >= base && me < base + q, "rank outside group");
+    let my_g = me - base;
+
+    let schedule: Vec<Round> = radix::rounds(radix_r, q);
+    let k = schedule.len();
+    let b_bound = radix::temp_bound(radix_r, q);
+
+    // Temporary-buffer occupancy tracking: a slot is "in T" while it holds
+    // foreign, non-final content.
+    let mut in_t = vec![false; q];
+    let mut t_now = 0usize;
+    let mut t_peak = 0usize;
+
+    for (round_idx, rd) in schedule.iter().enumerate() {
+        let dst = base + (my_g + rd.step) % q;
+        let src = base + (my_g + q - rd.step) % q;
+        let meta_tag = tag_base + 2 * round_idx as u32;
+        let data_tag = meta_tag + 1;
+
+        // Slot offsets moving this round, ascending (same set on all ranks).
+        let moving: Vec<usize> = (1..q)
+            .filter(|&j| radix::digit(j, rd.x, radix_r) == rd.z)
+            .collect();
+        debug_assert!(!moving.is_empty());
+        debug_assert!(moving.len() <= radix::offsets_with_digit(rd.x, rd.z, radix_r, q));
+
+        // ---- phase 1: metadata (per-sub-block sizes) --------------------
+        ctx.phase_mark();
+        let out_meta: Vec<u64> = moving
+            .iter()
+            .flat_map(|&j| slots[j].iter().map(|b| b.len()))
+            .collect();
+        let ms = ctx.isend(dst, meta_tag, Payload::Meta(out_meta));
+        let mr = ctx.irecv(src, meta_tag);
+        let in_meta = ctx.waitall(&[ms], &[mr]).pop().unwrap().into_meta();
+        ctx.phase_lap(Phase::Metadata);
+
+        // ---- phase 2: data ----------------------------------------------
+        // Pack moving slots into the send buffer (charged as Replace, the
+        // paper's inter-buffer copying cost), then exchange.
+        let mut out_blocks: Vec<Block> = Vec::new();
+        let mut sent_foreign_bytes = 0u64;
+        for &j in &moving {
+            if in_t[j] {
+                in_t[j] = false;
+                t_now -= 1;
+            }
+            let content = std::mem::take(&mut slots[j]);
+            sent_foreign_bytes += content.iter().map(|b| b.len()).sum::<u64>();
+            out_blocks.extend(content);
+        }
+        ctx.copy(sent_foreign_bytes); // pack into send buffer
+        ctx.phase_lap(Phase::Replace);
+
+        let ds = ctx.isend(dst, data_tag, Payload::Blocks(out_blocks));
+        let dr = ctx.irecv(src, data_tag);
+        let in_blocks = ctx.waitall(&[ds], &[dr]).pop().unwrap().into_blocks();
+        debug_assert_eq!(in_blocks.len(), in_meta.len());
+        debug_assert!(in_blocks
+            .iter()
+            .zip(in_meta.iter())
+            .all(|(b, &m)| b.len() == m));
+        ctx.phase_lap(Phase::Data);
+
+        // Unpack: contents land in the same slot indices they left at the
+        // sender. A slot is final once its top digit's round has passed.
+        let mut recv_bytes = 0u64;
+        let mut iter = in_blocks.into_iter();
+        for &j in &moving {
+            // Sub-block count per slot (`arity`) is conserved along the
+            // whole path (contents are replaced wholesale), so the
+            // receiver splits the incoming batch positionally.
+            let _ = j;
+            let mut content: SlotContent = Vec::with_capacity(arity);
+            for _ in 0..arity {
+                content.push(iter.next().expect("metadata/data mismatch"));
+            }
+            recv_bytes += content.iter().map(|b| b.len()).sum::<u64>();
+            let (top_x, top_z) = radix::top_digit(j, radix_r);
+            let is_final = top_x == rd.x && top_z == rd.z;
+            if !is_final {
+                debug_assert!(
+                    !radix::is_direct(j, radix_r),
+                    "direct slot {j} received intermediate content"
+                );
+                in_t[j] = true;
+                t_now += 1;
+                t_peak = t_peak.max(t_now);
+                assert!(
+                    t_now <= b_bound,
+                    "T occupancy {t_now} exceeded bound B={b_bound} (q={q}, r={radix_r})"
+                );
+            }
+            slots[j] = content;
+        }
+        debug_assert!(iter.next().is_none());
+        ctx.copy(recv_bytes); // store into T / R
+        ctx.phase_lap(Phase::Replace);
+    }
+    debug_assert_eq!(t_now, 0, "T must drain by the last round");
+
+    CoreOutcome {
+        slots,
+        stats: AlgoStats {
+            t_peak,
+            rounds: k,
+        },
+    }
+}
+
+/// Flat TuNA over the whole communicator (Algorithm 1).
+pub fn run(ctx: &mut RankCtx, blocks: Vec<Block>, radix_r: usize) -> (Vec<Block>, AlgoStats) {
+    let p = ctx.size();
+    let me = ctx.rank();
+    assert_eq!(blocks.len(), p);
+    let radix_r = radix_r.min(p).max(2);
+
+    // ---- prepare: allreduce for M, index array setup (Alg. 1 lines 1-5).
+    ctx.phase_mark();
+    let local_max = blocks.iter().map(|b| b.len()).max().unwrap_or(0);
+    let _m = ctx.allreduce_max(local_max);
+    ctx.copy(4 * p as u64); // rotation/index array write
+    ctx.phase_lap(Phase::Prepare);
+
+    // slots[j] = my block destined (me + j) mod P.
+    let mut by_dest: Vec<Option<Block>> = (0..p).map(|_| None).collect();
+    for b in blocks {
+        let d = b.dest as usize;
+        by_dest[d] = Some(b);
+    }
+    let slots: Vec<SlotContent> = (0..p)
+        .map(|j| {
+            let d = (me + j) % p;
+            vec![by_dest[d].take().expect("one block per destination")]
+        })
+        .collect();
+
+    let out = tuna_core(ctx, 0, p, radix_r, 1, slots, 0);
+
+    // Self block delivery is a local copy.
+    ctx.phase_mark();
+    ctx.copy(out.slots[0].iter().map(|b| b.len()).sum());
+    ctx.phase_lap(Phase::Replace);
+
+    let mut recv: Vec<Block> = Vec::with_capacity(p);
+    for (j, content) in out.slots.into_iter().enumerate() {
+        for b in content {
+            debug_assert_eq!(
+                b.origin as usize,
+                (me + p - j) % p,
+                "slot {j} final origin mismatch"
+            );
+            recv.push(b);
+        }
+    }
+    (recv, out.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::comm::{Engine, Topology};
+    use crate::model::MachineProfile;
+    use crate::util::prop::forall;
+    use crate::workload::{BlockSizes, Dist};
+
+    fn run_case(p: usize, q: usize, r: usize, dist: Dist, seed: u64) -> crate::algos::RunReport {
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, dist, seed);
+        crate::algos::run_alltoallv(&e, &crate::algos::AlgoKind::Tuna { radix: r }, &sizes, true)
+            .expect("tuna run must validate")
+    }
+
+    #[test]
+    fn tuna_correct_radix2_pow2() {
+        let rep = run_case(8, 2, 2, Dist::Uniform { max: 256 }, 1);
+        assert_eq!(rep.rounds, 3);
+        assert!(rep.t_peak <= 8 - 3 - 1);
+    }
+
+    #[test]
+    fn tuna_correct_non_pow2() {
+        for (p, r) in [(6, 2), (7, 3), (12, 5), (9, 3), (10, 10)] {
+            let rep = run_case(p, 1, r, Dist::Uniform { max: 128 }, p as u64);
+            assert!(rep.validated, "P={p} r={r}");
+        }
+    }
+
+    #[test]
+    fn tuna_radix_p_equals_linear_rounds() {
+        // r >= P degenerates to spread-out: P-1 rounds, no T usage.
+        let rep = run_case(8, 2, 8, Dist::Uniform { max: 256 }, 3);
+        assert_eq!(rep.rounds, 7);
+        assert_eq!(rep.t_peak, 0);
+    }
+
+    #[test]
+    fn tuna_handles_zero_size_blocks() {
+        let rep = run_case(8, 2, 2, Dist::PowerLaw { max: 64, skew: 6.0 }, 5);
+        assert!(rep.validated);
+        let rep = run_case(8, 2, 4, Dist::FftN1, 5);
+        assert!(rep.validated);
+    }
+
+    #[test]
+    fn t_peak_within_bound_many_configs() {
+        forall("t_peak <= B", 25, |rng| {
+            let p = 2 + rng.next_below(30) as usize;
+            let r = (2 + rng.next_below(p as u64) as usize).min(p);
+            let rep = run_case(p, 1, r, Dist::Uniform { max: 64 }, rng.next_u64());
+            let b = crate::algos::radix::temp_bound(r, p);
+            if rep.t_peak <= b {
+                Ok(())
+            } else {
+                Err(format!("P={p} r={r}: t_peak {} > B {b}", rep.t_peak))
+            }
+        });
+    }
+
+    #[test]
+    fn round_count_matches_k() {
+        for (p, r) in [(16usize, 2usize), (16, 4), (27, 3), (20, 4)] {
+            let rep = run_case(p, 1, r, Dist::Const { size: 64 }, 0);
+            assert_eq!(rep.rounds, crate::algos::radix::k_rounds(r, p), "P={p} r={r}");
+        }
+    }
+
+    #[test]
+    fn radix_tradeoff_rounds_vs_bytes() {
+        // §III-A trade-off: radix 2 minimizes rounds (K = log2 P) at the
+        // cost of maximal duplicate forwarding; radix P executes P-1
+        // rounds but ships every block exactly once.
+        let p = 64;
+        let e = Engine::new(MachineProfile::test_flat(), Topology::flat(p));
+        let sizes = BlockSizes::generate(p, Dist::Const { size: 1024 }, 0);
+        let lo = crate::algos::run_alltoallv(&e, &crate::algos::AlgoKind::Tuna { radix: 2 }, &sizes, false).unwrap();
+        let hi = crate::algos::run_alltoallv(&e, &crate::algos::AlgoKind::Tuna { radix: 64 }, &sizes, false).unwrap();
+        assert!(lo.rounds < hi.rounds, "{} vs {}", lo.rounds, hi.rounds);
+        assert!(
+            lo.counters.total_bytes() > hi.counters.total_bytes(),
+            "radix 2 must move more total bytes ({} vs {})",
+            lo.counters.total_bytes(),
+            hi.counters.total_bytes()
+        );
+    }
+
+    #[test]
+    fn phantom_and_real_agree_on_schedule() {
+        // Same workload, phantom vs real payloads: identical virtual time
+        // and identical byte counters (DESIGN.md validation #3).
+        let p = 12;
+        let e = Engine::new(MachineProfile::polaris(), Topology::new(p, 4));
+        let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, 9);
+        let kind = crate::algos::AlgoKind::Tuna { radix: 3 };
+        let real = crate::algos::run_alltoallv(&e, &kind, &sizes, true).unwrap();
+        let phantom = crate::algos::run_alltoallv(&e, &kind, &sizes, false).unwrap();
+        assert_eq!(real.makespan, phantom.makespan);
+        assert_eq!(real.counters, phantom.counters);
+    }
+
+    #[test]
+    fn direct_slots_never_store_intermediates() {
+        // Exercised by the debug_assert in tuna_core across a sweep.
+        forall("direct never in T", 15, |rng| {
+            let p = 3 + rng.next_below(20) as usize;
+            let r = 2 + rng.next_below(6) as usize;
+            let rep = run_case(p, 1, r, Dist::Uniform { max: 96 }, rng.next_u64());
+            if rep.validated {
+                Ok(())
+            } else {
+                Err(format!("P={p} r={r} failed"))
+            }
+        });
+    }
+
+    #[test]
+    fn d_total_matches_observed_slot_sends() {
+        // Counter cross-check: with Const sizes, global data bytes =
+        // D(r,P) * size (each slot transmission carries exactly one block
+        // of `size` bytes in flat TuNA).
+        let p = 16;
+        let size = 128u64;
+        for r in [2usize, 4, 16] {
+            let e = Engine::new(MachineProfile::test_flat(), Topology::flat(p));
+            let sizes = BlockSizes::generate(p, Dist::Const { size }, 0);
+            let rep = crate::algos::run_alltoallv(&e, &crate::algos::AlgoKind::Tuna { radix: r }, &sizes, false).unwrap();
+            let d = crate::algos::radix::d_total(r, p) as u64;
+            // Every rank sends the same slot schedule, so aggregate data
+            // bytes = P * D * size, metadata = P * 8 * D; the only other
+            // traffic is the prepare-phase allreduce (8 B scalars).
+            let measured = rep.counters.total_bytes();
+            let expect_data: u64 = p as u64 * d * size;
+            let expect_meta: u64 = p as u64 * 8 * d;
+            assert!(
+                measured >= expect_data + expect_meta,
+                "r={r}: measured {measured} < data+meta {}",
+                expect_data + expect_meta
+            );
+            let slack = measured - expect_data - expect_meta;
+            assert!(
+                slack <= 64 * p as u64 * (p as f64).log2().ceil() as u64,
+                "r={r}: unexpected extra traffic {slack}"
+            );
+        }
+    }
+}

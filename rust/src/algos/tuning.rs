@@ -1,0 +1,195 @@
+//! Parameter selection: the paper's radix heuristic (§V-A) and a
+//! measurement-driven autotuner (what Fig. 9's "ideal r" annotations come
+//! from).
+//!
+//! Observed trends (§V-A, Fig. 7):
+//! * small S (latency-bound) → small radix (few rounds ⇒ r≈2 minimizes
+//!   per-round latency only when rounds dominate — empirically the ideal
+//!   *rises* as S shrinks only on the far-small end; the paper reports
+//!   ideal r ≈ 2 for S ≤ 512 B);
+//! * medium S → r ≈ √P balances rounds against duplicate data;
+//! * large S (bandwidth-bound) → r ≈ P minimizes total transmitted bytes.
+
+use super::AlgoKind;
+use crate::comm::Engine;
+use crate::workload::BlockSizes;
+
+/// The §V-A rule of thumb: pick a radix from the average block size.
+/// Thresholds follow the paper's Polaris observations (small: ≤512 B,
+/// medium: ≤8 KiB, large: above).
+pub fn heuristic_radix(p: usize, mean_block_size: f64) -> usize {
+    let r = if mean_block_size <= 256.0 {
+        // S/2 <= 256 <=> S <= 512: latency-dominated.
+        2
+    } else if mean_block_size <= 4096.0 {
+        // Medium: sqrt(P) balances K against D.
+        (p as f64).sqrt().round() as usize
+    } else {
+        // Bandwidth-dominated: minimize duplicate transfers.
+        p
+    };
+    r.clamp(2, p.max(2))
+}
+
+/// Candidate radices for sweeps: powers of two, √P, and P itself —
+/// the grid used for the box plots (Fig. 8) and heatmaps (Fig. 9).
+pub fn radix_candidates(p: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut r = 2usize;
+    while r < p {
+        out.push(r);
+        r *= 2;
+    }
+    let sqrt = (p as f64).sqrt().round() as usize;
+    if sqrt >= 2 {
+        out.push(sqrt);
+    }
+    out.push(p.max(2));
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Candidate block_counts: powers of two up to `max`, plus `max`.
+pub fn block_count_candidates(max: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut b = 1usize;
+    while b < max {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max.max(1));
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Result of an autotuning sweep.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: AlgoKind,
+    pub best_time: f64,
+    /// Every candidate with its simulated time.
+    pub sweep: Vec<(AlgoKind, f64)>,
+}
+
+/// Pick the best TuNA radix for a workload by simulated measurement.
+pub fn autotune_tuna(engine: &Engine, sizes: &BlockSizes) -> crate::Result<TuneResult> {
+    let candidates: Vec<AlgoKind> = radix_candidates(engine.topo.p())
+        .into_iter()
+        .map(|radix| AlgoKind::Tuna { radix })
+        .collect();
+    sweep(engine, sizes, &candidates)
+}
+
+/// Pick the best (radix, block_count) for hierarchical TuNA.
+pub fn autotune_hier(
+    engine: &Engine,
+    sizes: &BlockSizes,
+    coalesced: bool,
+) -> crate::Result<TuneResult> {
+    let q = engine.topo.q();
+    let n = engine.topo.nodes();
+    let bc_max = if coalesced { (n - 1).max(1) } else { ((n - 1) * q).max(1) };
+    let mut candidates = Vec::new();
+    for radix in radix_candidates(q).into_iter().filter(|&r| r <= q) {
+        for bc in block_count_candidates(bc_max) {
+            candidates.push(if coalesced {
+                AlgoKind::TunaHierCoalesced { radix, block_count: bc }
+            } else {
+                AlgoKind::TunaHierStaggered { radix, block_count: bc }
+            });
+        }
+    }
+    sweep(engine, sizes, &candidates)
+}
+
+/// Evaluate a candidate list and return the argmin by simulated makespan.
+pub fn sweep(
+    engine: &Engine,
+    sizes: &BlockSizes,
+    candidates: &[AlgoKind],
+) -> crate::Result<TuneResult> {
+    assert!(!candidates.is_empty());
+    let mut sweep = Vec::with_capacity(candidates.len());
+    for kind in candidates {
+        let rep = super::run_alltoallv(engine, kind, sizes, false)?;
+        sweep.push((*kind, rep.makespan));
+    }
+    let (best, best_time) = sweep
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .copied()
+        .unwrap();
+    Ok(TuneResult {
+        best,
+        best_time,
+        sweep,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Topology;
+    use crate::model::MachineProfile;
+    use crate::workload::Dist;
+
+    #[test]
+    fn heuristic_follows_paper_trends() {
+        // Small messages -> r = 2; medium -> sqrt(P); large -> P.
+        assert_eq!(heuristic_radix(1024, 8.0), 2);
+        assert_eq!(heuristic_radix(1024, 1024.0), 32);
+        assert_eq!(heuristic_radix(1024, 16384.0), 1024);
+        // Monotone non-decreasing in S.
+        let mut last = 0;
+        for s in [8.0, 64.0, 512.0, 2048.0, 8192.0, 65536.0] {
+            let r = heuristic_radix(256, s);
+            assert!(r >= last, "ideal radix must grow with S");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn candidates_cover_extremes() {
+        let c = radix_candidates(64);
+        assert!(c.contains(&2));
+        assert!(c.contains(&8)); // sqrt(64)
+        assert!(c.contains(&64));
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(radix_candidates(2), vec![2]);
+    }
+
+    #[test]
+    fn block_count_candidates_bounded() {
+        let c = block_count_candidates(12);
+        assert_eq!(c, vec![1, 2, 4, 8, 12]);
+        assert_eq!(block_count_candidates(1), vec![1]);
+    }
+
+    #[test]
+    fn autotune_picks_argmin() {
+        let e = Engine::new(MachineProfile::fugaku(), Topology::new(16, 4));
+        let sizes = BlockSizes::generate(16, Dist::Uniform { max: 256 }, 1);
+        let res = autotune_tuna(&e, &sizes).unwrap();
+        // Best time must be the minimum of the sweep.
+        let min = res.sweep.iter().map(|s| s.1).fold(f64::INFINITY, f64::min);
+        assert_eq!(res.best_time, min);
+        assert!(res.sweep.len() >= 3);
+    }
+
+    #[test]
+    fn autotune_hier_respects_q_bound() {
+        let e = Engine::new(MachineProfile::fugaku(), Topology::new(16, 4));
+        let sizes = BlockSizes::generate(16, Dist::Uniform { max: 256 }, 1);
+        let res = autotune_hier(&e, &sizes, true).unwrap();
+        for (kind, _) in &res.sweep {
+            if let AlgoKind::TunaHierCoalesced { radix, block_count } = kind {
+                assert!(*radix <= 4);
+                assert!(*block_count <= 3); // N-1 = 3
+            } else {
+                panic!("unexpected kind in hier sweep");
+            }
+        }
+    }
+}

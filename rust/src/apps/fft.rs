@@ -1,0 +1,582 @@
+//! Distributed 4-step FFT (§VI-A) — the end-to-end driver that composes
+//! all three layers:
+//!
+//! * **L1/L2**: the local DFT stages are Pallas kernels inside a JAX
+//!   graph, AOT-lowered to HLO text by `python/compile/aot.py`;
+//! * **runtime**: Rust loads and executes them via PJRT
+//!   ([`crate::runtime::PjrtRuntime`]) — Python is never on this path;
+//! * **L3**: the matrix transpose between the stages is a non-uniform
+//!   all-to-allv through any [`AlgoKind`] (non-uniform whenever P does
+//!   not divide n1/n2 — exactly FFTW's situation the paper describes).
+//!
+//! Math (decimation in time, N = n1·n2, `x[j1 + n1·j2]`):
+//!   `X[k2 + n2·k1] = Σ_{j1} W_{n1}^{j1·k1} [ W_N^{j1·k2} ·
+//!                    Σ_{j2} x[j1 + n1·j2] W_{n2}^{j2·k2} ]`
+//! Stage 1 (row-partitioned): per-row DFT_{n2} + twiddle W_N^{j1·k2}.
+//! Transpose: rows → columns (the all-to-allv).
+//! Stage 2 (column-partitioned): per-column DFT_{n1}.
+//!
+//! The result is validated against a sequential f64 DFT oracle.
+
+use std::f64::consts::PI;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::algos::AlgoKind;
+use crate::comm::{Block, DataBuf, Engine, Phase, Topology};
+use crate::error::{Result, TunaError};
+use crate::model::MachineProfile;
+use crate::runtime::PjrtRuntime;
+use crate::util::prng::Pcg64;
+
+/// Which engine computes the local DFT stages.
+pub enum FftBackend {
+    /// Pure-Rust naive DFT (always available; also the per-shape fallback
+    /// when an artifact is missing from the manifest).
+    Naive,
+    /// PJRT executing the AOT-lowered Pallas/JAX artifacts from `dir`.
+    Pjrt { dir: PathBuf },
+}
+
+impl FftBackend {
+    /// Use PJRT when `artifacts/manifest.tsv` exists, else naive.
+    pub fn auto() -> FftBackend {
+        let dir = PathBuf::from("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            FftBackend::Pjrt { dir }
+        } else {
+            FftBackend::Naive
+        }
+    }
+}
+
+/// Result of a distributed FFT run.
+#[derive(Clone, Debug)]
+pub struct FftReport {
+    /// max |X - X_ref| / max |X_ref| against the f64 oracle.
+    pub max_err: f64,
+    /// Simulated total (compute charged to rank clocks + transpose).
+    pub makespan: f64,
+    /// Simulated transpose (communication) time.
+    pub comm_time: f64,
+    /// Host wallclock spent in local DFT stages (max over ranks, both
+    /// stages) — what is charged to the virtual clocks.
+    pub compute_time: f64,
+    /// Host wallclock for the whole run.
+    pub wall: f64,
+    /// Human-readable backend description.
+    pub backend: String,
+}
+
+/// Contiguous partition of `n` items over `p` ranks: first `n % p` ranks
+/// get one extra — non-uniform whenever `p` does not divide `n`.
+pub fn partition(n: usize, p: usize) -> Vec<(usize, usize)> {
+    let base = n / p;
+    let extra = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Complex matrix in split re/im layout, row-major `rows x cols`.
+#[derive(Clone, Debug, Default)]
+pub struct CMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> CMat {
+        CMat {
+            rows,
+            cols,
+            re: vec![0.0; rows * cols],
+            im: vec![0.0; rows * cols],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.cols + c
+    }
+}
+
+/// DFT matrix F_n[j][k] = W_n^{jk}, W_n = exp(-2πi/n), as split f32.
+pub fn dft_matrix(n: usize) -> CMat {
+    let mut m = CMat::zeros(n, n);
+    for j in 0..n {
+        for k in 0..n {
+            let ang = -2.0 * PI * (j as f64) * (k as f64) / n as f64;
+            let i = j * n + k;
+            m.re[i] = ang.cos() as f32;
+            m.im[i] = ang.sin() as f32;
+        }
+    }
+    m
+}
+
+/// Twiddle block T[j1][k2] = W_N^{(row0+j1)·k2} for local rows.
+pub fn twiddles(row0: usize, rows: usize, n2: usize, n_total: usize) -> CMat {
+    let mut t = CMat::zeros(rows, n2);
+    for j in 0..rows {
+        for k in 0..n2 {
+            let ang = -2.0 * PI * ((row0 + j) as f64) * (k as f64) / n_total as f64;
+            let i = j * n2 + k;
+            t.re[i] = ang.cos() as f32;
+            t.im[i] = ang.sin() as f32;
+        }
+    }
+    t
+}
+
+/// Naive complex matmul `A (r x k) @ B (k x c)`, optionally Hadamard-
+/// multiplied by twiddles `T (r x c)`.
+fn cmatmul(a: &CMat, b: &CMat, t: Option<&CMat>) -> CMat {
+    assert_eq!(a.cols, b.rows);
+    let mut out = CMat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for kk in 0..a.cols {
+            let ar = a.re[i * a.cols + kk] as f64;
+            let ai = a.im[i * a.cols + kk] as f64;
+            for j in 0..b.cols {
+                let br = b.re[kk * b.cols + j] as f64;
+                let bi = b.im[kk * b.cols + j] as f64;
+                out.re[i * out.cols + j] += (ar * br - ai * bi) as f32;
+                out.im[i * out.cols + j] += (ar * bi + ai * br) as f32;
+            }
+        }
+    }
+    if let Some(t) = t {
+        assert_eq!((t.rows, t.cols), (out.rows, out.cols));
+        for i in 0..out.re.len() {
+            let (r, im) = (out.re[i] as f64, out.im[i] as f64);
+            let (tr, ti) = (t.re[i] as f64, t.im[i] as f64);
+            out.re[i] = (r * tr - im * ti) as f32;
+            out.im[i] = (r * ti + im * tr) as f32;
+        }
+    }
+    out
+}
+
+/// Local-stage compute dispatcher: PJRT artifact when available, naive
+/// fallback otherwise.
+struct StageCompute {
+    runtime: Option<PjrtRuntime>,
+    /// Shapes that fell back to naive (artifact missing).
+    fallbacks: Vec<String>,
+}
+
+impl StageCompute {
+    fn new(backend: &FftBackend) -> Result<StageCompute> {
+        let runtime = match backend {
+            FftBackend::Naive => None,
+            FftBackend::Pjrt { dir } => Some(PjrtRuntime::open(dir)?),
+        };
+        Ok(StageCompute {
+            runtime,
+            fallbacks: Vec::new(),
+        })
+    }
+
+    fn describe(&self) -> String {
+        match &self.runtime {
+            None => "naive rust DFT".to_string(),
+            Some(rt) => {
+                if self.fallbacks.is_empty() {
+                    format!("PJRT ({}) via AOT Pallas/JAX artifacts", rt.platform())
+                } else {
+                    format!(
+                        "PJRT ({}) with naive fallback for shapes {:?}",
+                        rt.platform(),
+                        self.fallbacks
+                    )
+                }
+            }
+        }
+    }
+
+    /// Stage 1: (A @ F_{n2}) ⊙ T for local rows.
+    fn stage1(&mut self, a: &CMat, f: &CMat, t: &CMat) -> Result<CMat> {
+        let name = format!("fft_stage1_{}x{}", a.rows, a.cols);
+        if a.rows > 0 {
+            if let Some(rt) = &mut self.runtime {
+                if rt.has(&name) {
+                    let dims_a = [a.rows as i64, a.cols as i64];
+                    let dims_f = [f.rows as i64, f.cols as i64];
+                    let out = rt.execute_f32(
+                        &name,
+                        &[
+                            (&a.re, &dims_a),
+                            (&a.im, &dims_a),
+                            (&f.re, &dims_f),
+                            (&f.im, &dims_f),
+                            (&t.re, &dims_a),
+                            (&t.im, &dims_a),
+                        ],
+                    )?;
+                    return Ok(CMat {
+                        rows: a.rows,
+                        cols: a.cols,
+                        re: out[0].clone(),
+                        im: out[1].clone(),
+                    });
+                }
+                if !self.fallbacks.contains(&name) {
+                    self.fallbacks.push(name);
+                }
+            }
+        }
+        Ok(cmatmul(a, f, Some(t)))
+    }
+
+    /// Stage 2: F_{n1} @ A for local columns.
+    fn stage2(&mut self, f: &CMat, a: &CMat) -> Result<CMat> {
+        let name = format!("fft_stage2_{}x{}", f.rows, a.cols);
+        if a.cols > 0 {
+            if let Some(rt) = &mut self.runtime {
+                if rt.has(&name) {
+                    let dims_a = [a.rows as i64, a.cols as i64];
+                    let dims_f = [f.rows as i64, f.cols as i64];
+                    let out = rt.execute_f32(
+                        &name,
+                        &[
+                            (&f.re, &dims_f),
+                            (&f.im, &dims_f),
+                            (&a.re, &dims_a),
+                            (&a.im, &dims_a),
+                        ],
+                    )?;
+                    return Ok(CMat {
+                        rows: f.rows,
+                        cols: a.cols,
+                        re: out[0].clone(),
+                        im: out[1].clone(),
+                    });
+                }
+                if !self.fallbacks.contains(&name) {
+                    self.fallbacks.push(name);
+                }
+            }
+        }
+        Ok(cmatmul(f, a, None))
+    }
+}
+
+fn encode_cblock(z: &CMat, r0: usize, rows: usize, c0: usize, cols: usize) -> DataBuf {
+    let mut bytes = Vec::with_capacity(rows * cols * 8);
+    for r in r0..r0 + rows {
+        for c in c0..c0 + cols {
+            let i = z.idx(r, c);
+            bytes.extend_from_slice(&z.re[i].to_le_bytes());
+            bytes.extend_from_slice(&z.im[i].to_le_bytes());
+        }
+    }
+    DataBuf::Real(bytes)
+}
+
+fn f32_at(bytes: &[u8], i: usize) -> f32 {
+    f32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]])
+}
+
+/// Sequential f64 DFT oracle.
+pub fn naive_dft(x_re: &[f64], x_im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = x_re.len();
+    let mut out_re = vec![0.0; n];
+    let mut out_im = vec![0.0; n];
+    for k in 0..n {
+        let mut sr = 0.0;
+        let mut si = 0.0;
+        for j in 0..n {
+            let ang = -2.0 * PI * (j as f64) * (k as f64) / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            sr += x_re[j] * c - x_im[j] * s;
+            si += x_re[j] * s + x_im[j] * c;
+        }
+        out_re[k] = sr;
+        out_im[k] = si;
+    }
+    (out_re, out_im)
+}
+
+/// Run the distributed FFT of a deterministic pseudo-random signal of
+/// length `n1 * n2` over `p` ranks (`q` per node) using `kind` for the
+/// transpose. Returns the validated report.
+pub fn run_distributed_fft(
+    profile: &MachineProfile,
+    p: usize,
+    q: usize,
+    n1: usize,
+    n2: usize,
+    kind: &AlgoKind,
+    backend: FftBackend,
+) -> Result<FftReport> {
+    let wall0 = std::time::Instant::now();
+    let n_total = n1 * n2;
+    kind.check(p, q)?;
+    if p > n1.max(2) || p > n2.max(2) {
+        return Err(TunaError::config(format!(
+            "P={p} too large for N={n1}x{n2} decomposition"
+        )));
+    }
+
+    // Input signal x, complex f32 in [-1, 1].
+    let mut rng = Pcg64::new(0xFF7 ^ n_total as u64, 0);
+    let x_re: Vec<f32> = (0..n_total)
+        .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+        .collect();
+    let x_im: Vec<f32> = (0..n_total)
+        .map(|_| (rng.next_f64() * 2.0 - 1.0) as f32)
+        .collect();
+
+    let rows_part = partition(n1, p);
+    let cols_part = partition(n2, p);
+    let f_n2 = dft_matrix(n2);
+    let f_n1 = dft_matrix(n1);
+
+    // ---- stage 1 on the host, per rank (PJRT or naive), timed.
+    let mut compute = StageCompute::new(&backend)?;
+
+    // Warm-up: compile every distinct executable shape once so per-rank
+    // timings measure execution, not PJRT compilation (which would
+    // otherwise be charged to whichever rank runs a shape first and show
+    // up as artificial compute skew in the virtual clocks).
+    {
+        let mut seen_rows: Vec<usize> = Vec::new();
+        for &(r0, rows) in &rows_part {
+            if rows > 0 && !seen_rows.contains(&rows) {
+                seen_rows.push(rows);
+                let a = CMat::zeros(rows, n2);
+                let t = twiddles(r0, rows, n2, n_total);
+                let _ = compute.stage1(&a, &f_n2, &t)?;
+            }
+        }
+        let mut seen_cols: Vec<usize> = Vec::new();
+        for &(_, cols) in &cols_part {
+            if cols > 0 && !seen_cols.contains(&cols) {
+                seen_cols.push(cols);
+                let a = CMat::zeros(n1, cols);
+                let _ = compute.stage2(&f_n1, &a)?;
+            }
+        }
+    }
+
+    let mut z_locals: Vec<CMat> = Vec::with_capacity(p);
+    let mut t1 = vec![0.0f64; p];
+    for (rank, &(r0, rows)) in rows_part.iter().enumerate() {
+        let t = std::time::Instant::now();
+        // M_local[j][c] = x[(r0+j) + n1*c].
+        let mut m = CMat::zeros(rows, n2);
+        for j in 0..rows {
+            for c in 0..n2 {
+                let i = (r0 + j) + n1 * c;
+                m.re[j * n2 + c] = x_re[i];
+                m.im[j * n2 + c] = x_im[i];
+            }
+        }
+        let tw = twiddles(r0, rows, n2, n_total);
+        z_locals.push(compute.stage1(&m, &f_n2, &tw)?);
+        t1[rank] = t.elapsed().as_secs_f64();
+    }
+    let z_locals = Arc::new(z_locals);
+    let t1 = Arc::new(t1);
+
+    // ---- transpose on the engine: row partition -> column partition.
+    let engine = Engine::new(profile.clone(), Topology::new(p, q));
+    let kind_c = *kind;
+    let rows_part_c = rows_part.clone();
+    let cols_part_c = cols_part.clone();
+    let zs = z_locals.clone();
+    let t1c = t1.clone();
+    let res = engine.run(move |ctx| {
+        let me = ctx.rank();
+        ctx.phase_mark();
+        ctx.compute(t1c[me]);
+        ctx.phase_lap(Phase::Compute);
+        let z = &zs[me];
+        let blocks: Vec<Block> = cols_part_c
+            .iter()
+            .enumerate()
+            .map(|(d, &(c0, cols))| Block::new(me, d, encode_cblock(z, 0, z.rows, c0, cols)))
+            .collect();
+        let comm0 = ctx.now();
+        let (recv, _) = kind_c.dispatch(ctx, blocks);
+        let comm = ctx.now() - comm0;
+
+        // Assemble Z_cols: n1 x my_cols from origin row ranges.
+        let (_c0, my_cols) = cols_part_c[me];
+        let mut zc = CMat::zeros(n1, my_cols);
+        for b in &recv {
+            let (r0, rows) = rows_part_c[b.origin as usize];
+            let bytes = b.data.bytes();
+            assert_eq!(bytes.len(), rows * my_cols * 8, "transpose block size");
+            let mut off = 0;
+            for r in 0..rows {
+                for c in 0..my_cols {
+                    let i = zc.idx(r0 + r, c);
+                    zc.re[i] = f32_at(bytes, off);
+                    zc.im[i] = f32_at(bytes, off + 4);
+                    off += 8;
+                }
+            }
+        }
+        (zc, comm)
+    });
+
+    let comm_time = res.ranks.iter().map(|r| r.value.1).fold(0.0f64, f64::max);
+    let engine_makespan = res.makespan;
+
+    // ---- stage 2 on the host, per rank, timed.
+    let mut t2_max = 0.0f64;
+    let mut x_out_re = vec![0.0f32; n_total];
+    let mut x_out_im = vec![0.0f32; n_total];
+    for (rank, r) in res.ranks.into_iter().enumerate() {
+        let (zc, _) = r.value;
+        let t = std::time::Instant::now();
+        let out = compute.stage2(&f_n1, &zc)?;
+        t2_max = t2_max.max(t.elapsed().as_secs_f64());
+        let (c0, cols) = cols_part[rank];
+        // out[k1][c] = X[(c0+c) + n2*k1]
+        for k1 in 0..n1 {
+            for c in 0..cols {
+                let k = (c0 + c) + n2 * k1;
+                x_out_re[k] = out.re[k1 * cols + c];
+                x_out_im[k] = out.im[k1 * cols + c];
+            }
+        }
+    }
+
+    // ---- validate against the f64 oracle.
+    let xr64: Vec<f64> = x_re.iter().map(|&v| v as f64).collect();
+    let xi64: Vec<f64> = x_im.iter().map(|&v| v as f64).collect();
+    let (ref_re, ref_im) = naive_dft(&xr64, &xi64);
+    let scale = ref_re
+        .iter()
+        .zip(&ref_im)
+        .map(|(r, i)| (r * r + i * i).sqrt())
+        .fold(0.0f64, f64::max);
+    let mut max_err = 0.0f64;
+    for k in 0..n_total {
+        let dr = x_out_re[k] as f64 - ref_re[k];
+        let di = x_out_im[k] as f64 - ref_im[k];
+        max_err = max_err.max((dr * dr + di * di).sqrt());
+    }
+    let rel_err = max_err / (scale + 1e-30);
+    if rel_err > 5e-3 {
+        return Err(TunaError::validation(format!(
+            "FFT mismatch: relative error {rel_err:.3e} (N={n1}x{n2}, P={p})"
+        )));
+    }
+
+    let t1_max = t1.iter().fold(0.0f64, |a, &b| a.max(b));
+    Ok(FftReport {
+        max_err: rel_err,
+        makespan: engine_makespan + t2_max,
+        comm_time,
+        compute_time: t1_max + t2_max,
+        wall: wall0.elapsed().as_secs_f64(),
+        backend: compute.describe(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything() {
+        for (n, p) in [(64, 8), (60, 8), (7, 3), (8, 8)] {
+            let parts = partition(n, p);
+            assert_eq!(parts.len(), p);
+            let total: usize = parts.iter().map(|p| p.1).sum();
+            assert_eq!(total, n);
+            let mut pos = 0;
+            for &(start, len) in &parts {
+                assert_eq!(start, pos);
+                pos += len;
+            }
+        }
+    }
+
+    #[test]
+    fn dft_matrix_first_row_is_ones() {
+        let f = dft_matrix(8);
+        for k in 0..8 {
+            assert!((f.re[k] - 1.0).abs() < 1e-6);
+            assert!(f.im[k].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn naive_dft_of_impulse_is_flat() {
+        let mut re = vec![0.0; 16];
+        re[0] = 1.0;
+        let im = vec![0.0; 16];
+        let (or, oi) = naive_dft(&re, &im);
+        for k in 0..16 {
+            assert!((or[k] - 1.0).abs() < 1e-12);
+            assert!(oi[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn distributed_fft_matches_oracle_uniform() {
+        let rep = run_distributed_fft(
+            &MachineProfile::test_flat(),
+            4,
+            2,
+            16,
+            16,
+            &AlgoKind::Tuna { radix: 2 },
+            FftBackend::Naive,
+        )
+        .unwrap();
+        assert!(rep.max_err < 1e-4, "err {}", rep.max_err);
+        assert!(rep.comm_time > 0.0);
+    }
+
+    #[test]
+    fn distributed_fft_nonuniform_split() {
+        // 4 ranks over n2=15 columns: 4,4,4,3 — genuinely non-uniform
+        // blocks, the paper's FFTW scenario.
+        let rep = run_distributed_fft(
+            &MachineProfile::test_flat(),
+            4,
+            2,
+            16,
+            15,
+            &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+            FftBackend::Naive,
+        )
+        .unwrap();
+        assert!(rep.max_err < 1e-4, "err {}", rep.max_err);
+    }
+
+    #[test]
+    fn works_across_algorithms() {
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 2 },
+            AlgoKind::Tuna { radix: 4 },
+        ] {
+            let rep = run_distributed_fft(
+                &MachineProfile::test_flat(),
+                4,
+                2,
+                8,
+                8,
+                &kind,
+                FftBackend::Naive,
+            )
+            .unwrap();
+            assert!(rep.max_err < 1e-4, "{kind:?}: err {}", rep.max_err);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! The paper's applications (§VI), each using the all-to-all algorithms
+//! through the same block interface MPI_Alltoallv would provide:
+//!
+//! * [`fft`] — distributed 4-step FFT whose transpose is an all-to-allv
+//!   and whose local stages execute AOT-compiled Pallas kernels via PJRT;
+//! * [`tc`] — semi-naive transitive closure (path finding) with
+//!   hash-partitioned relations shuffled every fixed-point iteration.
+
+pub mod fft;
+pub mod tc;

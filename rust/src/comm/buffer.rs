@@ -1,0 +1,225 @@
+//! Data buffers and routed blocks.
+//!
+//! One implementation of every algorithm serves both correctness testing
+//! and large-scale simulation: payloads are [`DataBuf`]s that either carry
+//! real bytes (`Real`, validated against the gold all-to-all result) or
+//! just a length (`Phantom`, so a P = 16,384 simulation fits in memory).
+//! A run must be homogeneous — mixing modes in one message is a bug.
+
+/// A payload: real bytes or a phantom (size-only) stand-in.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DataBuf {
+    Real(Vec<u8>),
+    Phantom(u64),
+}
+
+impl DataBuf {
+    #[inline]
+    pub fn len(&self) -> u64 {
+        match self {
+            DataBuf::Real(v) => v.len() as u64,
+            DataBuf::Phantom(n) => *n,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn is_real(&self) -> bool {
+        matches!(self, DataBuf::Real(_))
+    }
+
+    /// Borrow the real bytes; panics on a phantom buffer (callers that need
+    /// bytes are correctness paths which always run in real mode).
+    pub fn bytes(&self) -> &[u8] {
+        match self {
+            DataBuf::Real(v) => v,
+            DataBuf::Phantom(_) => panic!("bytes() on a phantom DataBuf"),
+        }
+    }
+
+    /// An empty buffer in the given mode.
+    pub fn empty(real: bool) -> DataBuf {
+        if real {
+            DataBuf::Real(Vec::new())
+        } else {
+            DataBuf::Phantom(0)
+        }
+    }
+
+    /// Deterministic pattern payload for (origin, dest): byte `i` is a hash
+    /// of `(origin, dest, i)`, so any misrouting or mis-slicing in an
+    /// algorithm corrupts the pattern and is caught by [`DataBuf::check_pattern`].
+    pub fn pattern(origin: usize, dest: usize, len: u64) -> DataBuf {
+        let mut v = Vec::with_capacity(len as usize);
+        for i in 0..len {
+            v.push(pattern_byte(origin, dest, i));
+        }
+        DataBuf::Real(v)
+    }
+
+    /// Verify a pattern payload; returns the first mismatching index.
+    pub fn check_pattern(&self, origin: usize, dest: usize) -> Result<(), u64> {
+        let bytes = self.bytes();
+        for (i, b) in bytes.iter().enumerate() {
+            if *b != pattern_byte(origin, dest, i as u64) {
+                return Err(i as u64);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[inline]
+fn pattern_byte(origin: usize, dest: usize, i: u64) -> u8 {
+    let mut h = (origin as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((dest as u64).wrapping_mul(0xff51_afd7_ed55_8ccd))
+        .wrapping_add(i.wrapping_mul(0xc4ce_b9fe_1a85_ec53));
+    h ^= h >> 33;
+    (h & 0xff) as u8
+}
+
+/// A routed data block: payload from `origin`, ultimately destined to
+/// `dest`. Store-and-forward algorithms move blocks through intermediate
+/// ranks; linear algorithms ship them directly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    pub origin: u32,
+    pub dest: u32,
+    pub data: DataBuf,
+}
+
+impl Block {
+    pub fn new(origin: usize, dest: usize, data: DataBuf) -> Block {
+        Block {
+            origin: origin as u32,
+            dest: dest as u32,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// What actually travels in a message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Payload {
+    /// Metadata phase of the two-phase scheme: block sizes (8 B each on
+    /// the wire, like the `MPI_LONG` arrays the paper exchanges).
+    Meta(Vec<u64>),
+    /// The data phase: a batch of routed blocks. Wire size is the payload
+    /// bytes only — block headers were already conveyed by the metadata.
+    Blocks(Vec<Block>),
+    /// An unstructured buffer (linear algorithms ship one block per
+    /// message and need no routing header).
+    Raw(DataBuf),
+    /// A single value (allreduce / barrier internals).
+    Scalar(u64),
+}
+
+impl Payload {
+    /// Wire size in bytes under the cost model.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Meta(v) => 8 * v.len() as u64,
+            Payload::Blocks(bs) => bs.iter().map(|b| b.len()).sum(),
+            Payload::Raw(d) => d.len(),
+            Payload::Scalar(_) => 8,
+        }
+    }
+
+    pub fn into_meta(self) -> Vec<u64> {
+        match self {
+            Payload::Meta(v) => v,
+            other => panic!("expected Meta payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_blocks(self) -> Vec<Block> {
+        match self {
+            Payload::Blocks(v) => v,
+            other => panic!("expected Blocks payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_raw(self) -> DataBuf {
+        match self {
+            Payload::Raw(d) => d,
+            other => panic!("expected Raw payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_scalar(self) -> u64 {
+        match self {
+            Payload::Scalar(v) => v,
+            other => panic!("expected Scalar payload, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths() {
+        assert_eq!(DataBuf::Real(vec![1, 2, 3]).len(), 3);
+        assert_eq!(DataBuf::Phantom(77).len(), 77);
+        assert!(DataBuf::empty(true).is_empty());
+        assert!(DataBuf::empty(false).is_empty());
+    }
+
+    #[test]
+    fn pattern_roundtrip() {
+        let d = DataBuf::pattern(3, 9, 256);
+        assert_eq!(d.len(), 256);
+        assert!(d.check_pattern(3, 9).is_ok());
+        // Wrong origin/dest must be detected quickly.
+        assert!(d.check_pattern(9, 3).is_err());
+    }
+
+    #[test]
+    fn pattern_detects_corruption() {
+        let mut d = DataBuf::pattern(1, 2, 64);
+        if let DataBuf::Real(v) = &mut d {
+            v[10] ^= 0xff;
+        }
+        assert_eq!(d.check_pattern(1, 2), Err(10));
+    }
+
+    #[test]
+    #[should_panic(expected = "phantom")]
+    fn phantom_has_no_bytes() {
+        DataBuf::Phantom(4).bytes();
+    }
+
+    #[test]
+    fn wire_bytes_per_payload_kind() {
+        assert_eq!(Payload::Meta(vec![1, 2, 3]).wire_bytes(), 24);
+        let blocks = vec![
+            Block::new(0, 1, DataBuf::Phantom(10)),
+            Block::new(0, 2, DataBuf::Phantom(5)),
+        ];
+        assert_eq!(Payload::Blocks(blocks).wire_bytes(), 15);
+        assert_eq!(Payload::Raw(DataBuf::Phantom(9)).wire_bytes(), 9);
+        assert_eq!(Payload::Scalar(1).wire_bytes(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Blocks")]
+    fn payload_downcast_checked() {
+        Payload::Scalar(3).into_blocks();
+    }
+}

@@ -1,0 +1,262 @@
+//! Per-rank virtual clock.
+//!
+//! Every rank thread owns one `Clock`. All costs are charged in *virtual*
+//! seconds from the [`MachineProfile`]; wallclock never enters the model,
+//! so results are independent of host scheduling and fully deterministic
+//! (receive processing is ordered by virtual arrival time, not OS arrival
+//! order — see `Engine::waitall`).
+
+use crate::model::{Link, MachineProfile};
+
+/// Communication counters, kept per rank and merged by the harness.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Counters {
+    pub msgs_local: u64,
+    pub msgs_global: u64,
+    pub bytes_local: u64,
+    pub bytes_global: u64,
+    /// Bytes moved by local copies (packing / rearrangement).
+    pub bytes_copied: u64,
+}
+
+impl Counters {
+    pub fn merge(&mut self, other: &Counters) {
+        self.msgs_local += other.msgs_local;
+        self.msgs_global += other.msgs_global;
+        self.bytes_local += other.bytes_local;
+        self.bytes_global += other.bytes_global;
+        self.bytes_copied += other.bytes_copied;
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs_local + self.msgs_global
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_local + self.bytes_global
+    }
+}
+
+/// The clock itself. `now` only moves forward.
+#[derive(Clone, Debug)]
+pub struct Clock {
+    /// Current virtual time of the rank's program order.
+    pub now: f64,
+    /// Time at which the tx port becomes free.
+    tx_free: f64,
+    /// Time at which the rx port becomes free.
+    rx_free: f64,
+    /// Sends posted since the last wait — the burst size the congestion
+    /// model keys on.
+    outstanding_tx: u32,
+    pub counters: Counters,
+}
+
+/// Outcome of posting a send.
+#[derive(Clone, Copy, Debug)]
+pub struct SendTiming {
+    /// When the send is locally complete (buffer reusable / waitable).
+    pub complete: f64,
+    /// When the message arrives at the receiver's rx port.
+    pub arrive: f64,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock {
+            now: 0.0,
+            tx_free: 0.0,
+            rx_free: 0.0,
+            outstanding_tx: 0,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Post a send of `bytes` over `link` in a job of `p` ranks.
+    ///
+    /// Charges the per-message software overhead to program order, then
+    /// serializes the payload on the tx port with the burst congestion
+    /// factor applied.
+    pub fn post_send(&mut self, prof: &MachineProfile, link: Link, bytes: u64, p: usize) -> SendTiming {
+        self.now += prof.o_send(link);
+        let factor = match link {
+            Link::Local => 1.0,
+            Link::Global => prof.congestion.tx_factor(self.outstanding_tx, p as u32),
+        };
+        self.outstanding_tx += 1;
+        let start = self.now.max(self.tx_free);
+        self.tx_free = start + bytes as f64 * prof.beta(link) * factor;
+        match link {
+            Link::Local => {
+                self.counters.msgs_local += 1;
+                self.counters.bytes_local += bytes;
+            }
+            Link::Global => {
+                self.counters.msgs_global += 1;
+                self.counters.bytes_global += bytes;
+            }
+        }
+        SendTiming {
+            complete: self.tx_free,
+            arrive: self.tx_free + prof.alpha(link),
+        }
+    }
+
+    /// Charge the posting overhead of a receive request (cheap, but real).
+    pub fn post_recv(&mut self, prof: &MachineProfile, link: Link) {
+        // Posting an irecv costs a fraction of a full receive overhead.
+        self.now += 0.25 * prof.o_recv(link);
+    }
+
+    /// Drain a batch of matched receives through the rx port.
+    ///
+    /// `msgs` is `(arrive_time, bytes, link)` and MUST be sorted by
+    /// `(arrive_time, tiebreak)` by the caller — the deterministic order.
+    /// Returns per-message completion times. Applies the incast factor
+    /// based on instantaneous queue depth.
+    pub fn drain_receives(
+        &mut self,
+        prof: &MachineProfile,
+        msgs: &[(f64, u64, Link)],
+    ) -> Vec<f64> {
+        let mut completions = Vec::with_capacity(msgs.len());
+        for (i, &(arrive, bytes, link)) in msgs.iter().enumerate() {
+            let start = arrive.max(self.rx_free);
+            // Queue depth: messages already arrived but not yet drained.
+            let mut depth = 1u32;
+            for &(a2, _, _) in msgs[i + 1..].iter() {
+                if a2 <= start {
+                    depth += 1;
+                } else {
+                    break;
+                }
+            }
+            let factor = match link {
+                Link::Local => 1.0,
+                Link::Global => prof.congestion.rx_factor(depth),
+            };
+            self.rx_free = start + bytes as f64 * prof.beta(link) * factor;
+            completions.push(self.rx_free + prof.o_recv(link));
+        }
+        completions
+    }
+
+    /// A wait completed at `t`: advance program order and close the burst.
+    pub fn finish_wait(&mut self, t: f64) {
+        self.now = self.now.max(t);
+        self.outstanding_tx = 0;
+    }
+
+    /// Charge a local memory copy.
+    pub fn charge_copy(&mut self, prof: &MachineProfile, bytes: u64) {
+        self.now += prof.copy_cost(bytes);
+        self.counters.bytes_copied += bytes;
+    }
+
+    /// Charge arbitrary local compute time.
+    pub fn charge_compute(&mut self, seconds: f64) {
+        debug_assert!(seconds >= 0.0);
+        self.now += seconds;
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof() -> MachineProfile {
+        MachineProfile::test_flat()
+    }
+
+    #[test]
+    fn send_charges_overhead_and_serializes() {
+        let p = prof();
+        let mut c = Clock::new();
+        let t1 = c.post_send(&p, Link::Global, 1000, 64);
+        // o_send = 1e-7; 1000 B * 1e-9 = 1e-6 serialization; alpha = 1e-6.
+        assert!((c.now - 1e-7).abs() < 1e-15);
+        assert!((t1.complete - (1e-7 + 1e-6)).abs() < 1e-15);
+        assert!((t1.arrive - (1e-7 + 1e-6 + 1e-6)).abs() < 1e-15);
+        // Second send serializes behind the first on the tx port.
+        let t2 = c.post_send(&p, Link::Global, 1000, 64);
+        assert!(t2.complete > t1.complete);
+        assert!((t2.complete - (t1.complete + 1e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_split_by_link() {
+        let p = prof();
+        let mut c = Clock::new();
+        c.post_send(&p, Link::Local, 10, 8);
+        c.post_send(&p, Link::Global, 20, 8);
+        c.post_send(&p, Link::Global, 30, 8);
+        assert_eq!(c.counters.msgs_local, 1);
+        assert_eq!(c.counters.msgs_global, 2);
+        assert_eq!(c.counters.bytes_local, 10);
+        assert_eq!(c.counters.bytes_global, 50);
+    }
+
+    #[test]
+    fn drain_orders_and_serializes() {
+        let p = prof();
+        let mut c = Clock::new();
+        let msgs = vec![
+            (1e-3, 1000u64, Link::Global),
+            (1e-3, 1000u64, Link::Global),
+        ];
+        let done = c.drain_receives(&p, &msgs);
+        // Second message waits for the first to drain (1 us each).
+        assert!(done[1] > done[0]);
+        assert!((done[1] - done[0] - 1e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_advances_now_monotonically() {
+        let mut c = Clock::new();
+        c.finish_wait(5.0);
+        assert_eq!(c.now, 5.0);
+        c.finish_wait(1.0); // must not go backwards
+        assert_eq!(c.now, 5.0);
+    }
+
+    #[test]
+    fn copy_and_compute_charge_program_order() {
+        let p = prof();
+        let mut c = Clock::new();
+        c.charge_copy(&p, 1_000_000); // 1 MB at 1 GB/s = 1 ms
+        assert!((c.now - 1e-3).abs() < 1e-12);
+        c.charge_compute(2e-3);
+        assert!((c.now - 3e-3).abs() < 1e-12);
+        assert_eq!(c.counters.bytes_copied, 1_000_000);
+    }
+
+    #[test]
+    fn burst_resets_after_wait() {
+        // With congestion ON, a long burst must cost more than separated
+        // sends; waiting resets the outstanding counter.
+        let mut p = prof();
+        p.congestion = crate::model::congestion::CongestionParams::fugaku();
+        let mut burst = Clock::new();
+        for _ in 0..64 {
+            burst.post_send(&p, Link::Global, 4096, 4096);
+        }
+        let burst_total = burst.tx_free;
+
+        let mut paced = Clock::new();
+        for _ in 0..64 {
+            let t = paced.post_send(&p, Link::Global, 4096, 4096);
+            paced.finish_wait(t.complete);
+        }
+        let paced_total = paced.tx_free;
+        assert!(
+            burst_total > paced_total,
+            "burst {burst_total} should exceed paced {paced_total} under congestion"
+        );
+    }
+}

@@ -1,0 +1,725 @@
+//! Threaded rank engine with virtual time.
+//!
+//! `Engine::run(p, f)` spawns one OS thread per rank, each owning a
+//! [`RankCtx`] that exposes MPI-like operations. Message *matching* uses
+//! OS-level mailboxes (mutex + condvar, FIFO per `(src, tag)` channel, like
+//! MPI's non-overtaking rule); message *timing* is purely virtual, so the
+//! simulated makespan is independent of host scheduling.
+//!
+//! Tags below [`RESERVED_TAG_BASE`] are free for algorithms; the engine's
+//! built-in collectives use the reserved space.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::{Condvar, Mutex};
+
+use super::buffer::Payload;
+use super::clock::{Clock, Counters};
+use super::topology::Topology;
+use super::{Phase, PhaseBreakdown};
+use crate::model::{Link, MachineProfile};
+
+/// Tags at or above this value are reserved for engine collectives.
+pub const RESERVED_TAG_BASE: u32 = 0x8000_0000;
+const TAG_AR_FOLD: u32 = RESERVED_TAG_BASE;
+const TAG_AR_UNFOLD: u32 = RESERVED_TAG_BASE + 1;
+const TAG_AR_ROUND: u32 = RESERVED_TAG_BASE + 2; // + k per butterfly round
+
+/// A message in flight: payload plus its virtual arrival time at the
+/// receiver's rx port.
+struct Msg {
+    payload: Payload,
+    arrive: f64,
+    link: Link,
+}
+
+/// Fast hasher for `(src, tag)` channel keys — the mailbox map is on the
+/// per-message hot path and SipHash costs show up at P = 16k ranks.
+#[derive(Default)]
+struct ChanHasher(u64);
+
+impl Hasher for ChanHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.0 = (self.0 ^ v as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        self.0 ^= self.0 >> 29;
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+type ChanMap = HashMap<(u32, u32), VecDeque<Msg>, BuildHasherDefault<ChanHasher>>;
+
+/// One mailbox per destination rank; channels keyed by `(src, tag)`.
+struct Mailbox {
+    inner: Mutex<ChanMap>,
+    cv: Condvar,
+    /// True while the owner rank is blocked in `pop_many` — lets senders
+    /// skip the notify syscall in the common already-delivered case.
+    waiting: std::sync::atomic::AtomicBool,
+}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox {
+            inner: Mutex::new(ChanMap::default()),
+            cv: Condvar::new(),
+            waiting: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    fn push(&self, src: u32, tag: u32, msg: Msg) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry((src, tag)).or_default().push_back(msg);
+        // `waiting` is only mutated under this same mutex, so Relaxed is
+        // sufficient — the lock provides the ordering.
+        if self.waiting.load(std::sync::atomic::Ordering::Relaxed) {
+            // Only the mailbox owner ever waits on this condvar.
+            self.cv.notify_one();
+        }
+    }
+
+    /// Blocking pop of one message per request, in request order, under a
+    /// single lock session — one lock/unlock per *wait*, not per message.
+    /// Duplicate `(src, tag)` requests drain their channel FIFO in request
+    /// order.
+    fn pop_many(&self, reqs: &[(u32, u32)]) -> Vec<Msg> {
+        use std::sync::atomic::Ordering;
+        let mut out: Vec<Option<Msg>> = reqs.iter().map(|_| None).collect();
+        let mut missing = reqs.len();
+        let mut map = self.inner.lock().unwrap();
+        loop {
+            for (i, key) in reqs.iter().enumerate() {
+                if out[i].is_none() {
+                    if let Some(q) = map.get_mut(key) {
+                        if let Some(m) = q.pop_front() {
+                            if q.is_empty() {
+                                map.remove(key);
+                            }
+                            out[i] = Some(m);
+                            missing -= 1;
+                        }
+                    }
+                }
+            }
+            if missing == 0 {
+                break;
+            }
+            self.waiting.store(true, Ordering::Relaxed);
+            map = self.cv.wait(map).unwrap();
+            self.waiting.store(false, Ordering::Relaxed);
+        }
+        drop(map);
+        out.into_iter().map(|m| m.unwrap()).collect()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+}
+
+/// Handle for a posted non-blocking send.
+#[derive(Clone, Copy, Debug)]
+pub struct SendReq {
+    /// Virtual time at which the send is locally complete.
+    pub complete: f64,
+}
+
+/// Handle for a posted non-blocking receive.
+#[derive(Clone, Copy, Debug)]
+pub struct RecvReq {
+    src: u32,
+    tag: u32,
+}
+
+/// Per-rank execution context handed to algorithm code.
+pub struct RankCtx<'e> {
+    rank: usize,
+    topo: Topology,
+    profile: &'e MachineProfile,
+    mailboxes: &'e [Mailbox],
+    clock: Clock,
+    phases: PhaseBreakdown,
+    mark: f64,
+}
+
+impl<'e> RankCtx<'e> {
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.topo.p()
+    }
+
+    #[inline]
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    #[inline]
+    pub fn profile(&self) -> &MachineProfile {
+        self.profile
+    }
+
+    /// Current virtual time.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.clock.now
+    }
+
+    #[inline]
+    pub fn counters(&self) -> &Counters {
+        &self.clock.counters
+    }
+
+    /// Post a non-blocking send. The message is delivered to the target
+    /// mailbox immediately at the OS level; its virtual arrival time is
+    /// computed here from the sender's clock and the link cost model.
+    pub fn isend(&mut self, dst: usize, tag: u32, payload: Payload) -> SendReq {
+        debug_assert!(dst < self.size(), "isend to rank {dst} of {}", self.size());
+        debug_assert!(tag < RESERVED_TAG_BASE, "tag {tag:#x} is reserved");
+        self.isend_impl(dst, tag, payload)
+    }
+
+    fn isend_impl(&mut self, dst: usize, tag: u32, payload: Payload) -> SendReq {
+        let link = self.topo.link(self.rank, dst);
+        let bytes = payload.wire_bytes();
+        let timing = self.clock.post_send(self.profile, link, bytes, self.size());
+        self.mailboxes[dst].push(
+            self.rank as u32,
+            tag,
+            Msg {
+                payload,
+                arrive: timing.arrive,
+                link,
+            },
+        );
+        SendReq {
+            complete: timing.complete,
+        }
+    }
+
+    /// Post a non-blocking receive for `(src, tag)`.
+    pub fn irecv(&mut self, src: usize, tag: u32) -> RecvReq {
+        debug_assert!(src < self.size());
+        let link = self.topo.link(self.rank, src);
+        self.clock.post_recv(self.profile, link);
+        RecvReq {
+            src: src as u32,
+            tag,
+        }
+    }
+
+    /// Wait for all given sends and receives. Returns the received
+    /// payloads in *request order*. Receive drain order (and thus timing)
+    /// is deterministic: sorted by virtual arrival, tie-broken by source.
+    pub fn waitall(&mut self, sends: &[SendReq], recvs: &[RecvReq]) -> Vec<Payload> {
+        // Block (OS level) for every message to materialize — one lock
+        // session for the whole batch.
+        let keys: Vec<(u32, u32)> = recvs.iter().map(|r| (r.src, r.tag)).collect();
+        let mut msgs: Vec<(usize, Msg)> = self.mailboxes[self.rank]
+            .pop_many(&keys)
+            .into_iter()
+            .enumerate()
+            .collect();
+
+        // Deterministic drain order: by (arrive, src, tag).
+        let mut order: Vec<usize> = (0..msgs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ia, ma) = (&msgs[a].0, &msgs[a].1);
+            let (ib, mb) = (&msgs[b].0, &msgs[b].1);
+            ma.arrive
+                .partial_cmp(&mb.arrive)
+                .unwrap()
+                .then(recvs[*ia].src.cmp(&recvs[*ib].src))
+                .then(recvs[*ia].tag.cmp(&recvs[*ib].tag))
+        });
+        let sorted: Vec<(f64, u64, Link)> = order
+            .iter()
+            .map(|&i| (msgs[i].1.arrive, msgs[i].1.payload.wire_bytes(), msgs[i].1.link))
+            .collect();
+        let completions = self.clock.drain_receives(self.profile, &sorted);
+
+        let mut t = 0.0f64;
+        for s in sends {
+            t = t.max(s.complete);
+        }
+        for c in &completions {
+            t = t.max(*c);
+        }
+        self.clock.finish_wait(t);
+
+        // Return payloads in request order.
+        let mut out: Vec<Option<Payload>> = (0..msgs.len()).map(|_| None).collect();
+        for (slot, &i) in order.iter().enumerate() {
+            let _ = slot;
+            let (req_idx, _) = msgs[i];
+            let payload = std::mem::replace(&mut msgs[i].1.payload, Payload::Scalar(0));
+            out[req_idx] = Some(payload);
+        }
+        out.into_iter().map(|p| p.unwrap()).collect()
+    }
+
+    /// Blocking send.
+    pub fn send(&mut self, dst: usize, tag: u32, payload: Payload) {
+        let req = self.isend(dst, tag, payload);
+        self.clock.finish_wait(req.complete);
+    }
+
+    /// Blocking receive.
+    pub fn recv(&mut self, src: usize, tag: u32) -> Payload {
+        let r = self.irecv(src, tag);
+        let mut p = self.waitall(&[], &[r]);
+        p.pop().unwrap()
+    }
+
+    /// Combined send + receive (MPI_Sendrecv).
+    pub fn sendrecv(
+        &mut self,
+        dst: usize,
+        stag: u32,
+        payload: Payload,
+        src: usize,
+        rtag: u32,
+    ) -> Payload {
+        let s = self.isend(dst, stag, payload);
+        let r = self.irecv(src, rtag);
+        let mut p = self.waitall(&[s], &[r]);
+        p.pop().unwrap()
+    }
+
+    /// Charge a local memory copy of `bytes`.
+    pub fn copy(&mut self, bytes: u64) {
+        self.clock.charge_copy(self.profile, bytes);
+    }
+
+    /// Charge local compute time.
+    pub fn compute(&mut self, seconds: f64) {
+        self.clock.charge_compute(seconds);
+    }
+
+    // ---- phase accounting ------------------------------------------------
+
+    /// Start (or restart) the phase stopwatch.
+    pub fn phase_mark(&mut self) {
+        self.mark = self.clock.now;
+    }
+
+    /// Attribute virtual time since the last mark to `phase` and re-mark.
+    pub fn phase_lap(&mut self, phase: Phase) {
+        let now = self.clock.now;
+        self.phases.add(phase, now - self.mark);
+        self.mark = now;
+    }
+
+    pub fn phases(&self) -> &PhaseBreakdown {
+        &self.phases
+    }
+
+    // ---- built-in collectives ---------------------------------------------
+
+    /// Max-allreduce of a u64 via recursive doubling (with pre/post folding
+    /// for non-power-of-two P), timed like any other traffic.
+    pub fn allreduce_max(&mut self, v: u64) -> u64 {
+        self.allreduce(v, |a, b| a.max(b))
+    }
+
+    /// Sum-allreduce of a u64.
+    pub fn allreduce_sum(&mut self, v: u64) -> u64 {
+        self.allreduce(v, |a, b| a.wrapping_add(b))
+    }
+
+    fn allreduce(&mut self, mut v: u64, op: fn(u64, u64) -> u64) -> u64 {
+        let p = self.size();
+        if p == 1 {
+            return v;
+        }
+        let p2 = prev_pow2(p);
+        let extra = p - p2;
+        let rank = self.rank;
+
+        if rank >= p2 {
+            // Fold into the power-of-two core, then wait for the result.
+            let peer = rank - p2;
+            let s = self.isend_impl(peer, TAG_AR_FOLD, Payload::Scalar(v));
+            self.clock.finish_wait(s.complete);
+            return self
+                .recv_reserved(peer, TAG_AR_UNFOLD)
+                .into_scalar();
+        }
+        if rank < extra {
+            let theirs = self.recv_reserved(rank + p2, TAG_AR_FOLD).into_scalar();
+            v = op(v, theirs);
+        }
+        let rounds = p2.trailing_zeros();
+        for k in 0..rounds {
+            let partner = rank ^ (1usize << k);
+            let s = self.isend_impl(partner, TAG_AR_ROUND + k, Payload::Scalar(v));
+            let r = RecvReq {
+                src: partner as u32,
+                tag: TAG_AR_ROUND + k,
+            };
+            let link = self.topo.link(self.rank, partner);
+            self.clock.post_recv(self.profile, link);
+            let mut got = self.waitall(&[s], &[r]);
+            v = op(v, got.pop().unwrap().into_scalar());
+        }
+        if rank < extra {
+            let s = self.isend_impl(rank + p2, TAG_AR_UNFOLD, Payload::Scalar(v));
+            self.clock.finish_wait(s.complete);
+        }
+        v
+    }
+
+    fn recv_reserved(&mut self, src: usize, tag: u32) -> Payload {
+        let link = self.topo.link(self.rank, src);
+        self.clock.post_recv(self.profile, link);
+        let r = RecvReq {
+            src: src as u32,
+            tag,
+        };
+        let mut p = self.waitall(&[], &[r]);
+        p.pop().unwrap()
+    }
+
+    /// Barrier = zero-valued max-allreduce.
+    pub fn barrier(&mut self) {
+        self.allreduce_max(0);
+    }
+}
+
+fn prev_pow2(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    1usize << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// Result of one rank's execution.
+#[derive(Clone, Debug)]
+pub struct RankResult<R> {
+    pub rank: usize,
+    pub value: R,
+    /// The rank's final virtual time.
+    pub finish: f64,
+    pub phases: PhaseBreakdown,
+    pub counters: Counters,
+}
+
+/// Result of a whole engine run.
+#[derive(Clone, Debug)]
+pub struct EngineResult<R> {
+    pub ranks: Vec<RankResult<R>>,
+    /// Simulated completion time: max over ranks' final clocks.
+    pub makespan: f64,
+}
+
+impl<R> EngineResult<R> {
+    /// Per-phase critical path (element-wise max over ranks) — what the
+    /// paper's breakdown bars show.
+    pub fn phase_critical_path(&self) -> PhaseBreakdown {
+        let mut agg = PhaseBreakdown::default();
+        for r in &self.ranks {
+            agg.max_with(&r.phases);
+        }
+        agg
+    }
+
+    /// Aggregate communication counters over all ranks.
+    pub fn total_counters(&self) -> Counters {
+        let mut c = Counters::default();
+        for r in &self.ranks {
+            c.merge(&r.counters);
+        }
+        c
+    }
+
+    pub fn values(self) -> Vec<R> {
+        self.ranks.into_iter().map(|r| r.value).collect()
+    }
+}
+
+/// The engine: a machine profile plus a topology.
+pub struct Engine {
+    pub profile: MachineProfile,
+    pub topo: Topology,
+    /// Stack size per rank thread (algorithms are iterative; small stacks
+    /// let large-P simulations fit comfortably).
+    pub stack_size: usize,
+}
+
+impl Engine {
+    pub fn new(profile: MachineProfile, topo: Topology) -> Engine {
+        Engine {
+            profile,
+            topo,
+            stack_size: 1 << 20,
+        }
+    }
+
+    /// Run `f` on every rank concurrently; returns per-rank results sorted
+    /// by rank plus the simulated makespan. Panics in rank code propagate.
+    pub fn run<R, F>(&self, f: F) -> EngineResult<R>
+    where
+        R: Send,
+        F: Fn(&mut RankCtx) -> R + Send + Sync,
+    {
+        let p = self.topo.p();
+        let mailboxes: Vec<Mailbox> = (0..p).map(|_| Mailbox::new()).collect();
+        let mut results: Vec<Option<RankResult<R>>> = (0..p).map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(p);
+            for rank in 0..p {
+                let f = &f;
+                let mailboxes = &mailboxes;
+                let profile = &self.profile;
+                let topo = self.topo;
+                let h = std::thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .stack_size(self.stack_size)
+                    .spawn_scoped(scope, move || {
+                        let mut ctx = RankCtx {
+                            rank,
+                            topo,
+                            profile,
+                            mailboxes,
+                            clock: Clock::new(),
+                            phases: PhaseBreakdown::default(),
+                            mark: 0.0,
+                        };
+                        let value = f(&mut ctx);
+                        RankResult {
+                            rank,
+                            value,
+                            finish: ctx.clock.now,
+                            phases: ctx.phases,
+                            counters: ctx.clock.counters,
+                        }
+                    })
+                    .expect("failed to spawn rank thread");
+                handles.push(h);
+            }
+            for (rank, h) in handles.into_iter().enumerate() {
+                results[rank] = Some(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+            }
+        });
+
+        for (rank, mb) in mailboxes.iter().enumerate() {
+            assert!(
+                mb.is_empty(),
+                "rank {rank} mailbox not drained — algorithm left unreceived messages"
+            );
+        }
+
+        let ranks: Vec<RankResult<R>> = results.into_iter().map(|r| r.unwrap()).collect();
+        let makespan = ranks.iter().fold(0.0f64, |m, r| m.max(r.finish));
+        EngineResult { ranks, makespan }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::buffer::DataBuf;
+
+    fn engine(p: usize, q: usize) -> Engine {
+        Engine::new(MachineProfile::test_flat(), Topology::new(p, q))
+    }
+
+    #[test]
+    fn ring_exchange_delivers_payloads() {
+        let e = engine(4, 2);
+        let res = e.run(|ctx| {
+            let p = ctx.size();
+            let me = ctx.rank();
+            let dst = (me + 1) % p;
+            let src = (me + p - 1) % p;
+            let payload = Payload::Raw(DataBuf::pattern(me, dst, 64));
+            let got = ctx.sendrecv(dst, 7, payload, src, 7).into_raw();
+            got.check_pattern(src, me).is_ok()
+        });
+        assert!(res.ranks.iter().all(|r| r.value));
+        assert!(res.makespan > 0.0);
+    }
+
+    #[test]
+    fn virtual_time_deterministic_across_runs() {
+        // Same program, two runs: identical virtual makespans and per-rank
+        // finish times even though OS scheduling differs.
+        let run = || {
+            let e = engine(8, 4);
+            let res = e.run(|ctx| {
+                let p = ctx.size();
+                let me = ctx.rank();
+                for i in 1..p {
+                    let dst = (me + i) % p;
+                    let src = (me + p - i) % p;
+                    let _ = ctx.sendrecv(
+                        dst,
+                        i as u32,
+                        Payload::Raw(DataBuf::Phantom(1024)),
+                        src,
+                        i as u32,
+                    );
+                }
+                ctx.now()
+            });
+            (res.makespan, res.ranks.iter().map(|r| r.finish).collect::<Vec<_>>())
+        };
+        let (m1, f1) = run();
+        let (m2, f2) = run();
+        assert_eq!(m1, m2);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn waitall_returns_request_order() {
+        let e = engine(3, 1);
+        let res = e.run(|ctx| {
+            let me = ctx.rank();
+            if me == 0 {
+                // Receive from 2 then 1 in request order regardless of
+                // which message arrives first.
+                let r2 = ctx.irecv(2, 5);
+                let r1 = ctx.irecv(1, 5);
+                let got = ctx.waitall(&[], &[r2, r1]);
+                let a = got[0].clone().into_scalar();
+                let b = got[1].clone().into_scalar();
+                (a, b)
+            } else {
+                ctx.send(0, 5, Payload::Scalar(me as u64 * 100));
+                (0, 0)
+            }
+        });
+        assert_eq!(res.ranks[0].value, (200, 100));
+    }
+
+    #[test]
+    fn fifo_per_channel_preserved() {
+        let e = engine(2, 1);
+        let res = e.run(|ctx| {
+            if ctx.rank() == 0 {
+                for i in 0..10u64 {
+                    ctx.send(1, 3, Payload::Scalar(i));
+                }
+                Vec::new()
+            } else {
+                (0..10)
+                    .map(|_| ctx.recv(0, 3).into_scalar())
+                    .collect::<Vec<u64>>()
+            }
+        });
+        assert_eq!(res.ranks[1].value, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn allreduce_max_and_sum_all_sizes() {
+        for p in [1usize, 2, 3, 4, 5, 7, 8, 12, 16] {
+            let e = engine(p, 1);
+            let res = e.run(|ctx| {
+                let v = (ctx.rank() as u64) * 10 + 1;
+                (ctx.allreduce_max(v), ctx.allreduce_sum(ctx.rank() as u64))
+            });
+            let expect_max = (p as u64 - 1) * 10 + 1;
+            let expect_sum: u64 = (0..p as u64).sum();
+            for r in &res.ranks {
+                assert_eq!(r.value.0, expect_max, "max at P={p}");
+                assert_eq!(r.value.1, expect_sum, "sum at P={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let e = engine(6, 3);
+        let res = e.run(|ctx| {
+            ctx.barrier();
+            true
+        });
+        assert!(res.ranks.iter().all(|r| r.value));
+    }
+
+    #[test]
+    fn phase_accounting_tracks_time() {
+        let e = engine(2, 1);
+        let res = e.run(|ctx| {
+            ctx.phase_mark();
+            ctx.compute(1e-3);
+            ctx.phase_lap(Phase::Compute);
+            ctx.compute(2e-3);
+            ctx.phase_lap(Phase::Other);
+            (ctx.phases().get(Phase::Compute), ctx.phases().get(Phase::Other))
+        });
+        for r in &res.ranks {
+            assert!((r.value.0 - 1e-3).abs() < 1e-12);
+            assert!((r.value.1 - 2e-3).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn counters_track_links() {
+        let e = engine(4, 2); // nodes {0,1}, {2,3}
+        let res = e.run(|ctx| {
+            let me = ctx.rank();
+            // Everyone sends 100 B to the next rank; 0->1 and 2->3 are
+            // local, 1->2 and 3->0 are global.
+            let dst = (me + 1) % 4;
+            let src = (me + 3) % 4;
+            let _ = ctx.sendrecv(dst, 1, Payload::Raw(DataBuf::Phantom(100)), src, 1);
+        });
+        let c = res.total_counters();
+        assert_eq!(c.msgs_local, 2);
+        assert_eq!(c.msgs_global, 2);
+        assert_eq!(c.bytes_local, 200);
+        assert_eq!(c.bytes_global, 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "not drained")]
+    fn undrained_mailbox_detected() {
+        let e = engine(2, 1);
+        e.run(|ctx| {
+            if ctx.rank() == 0 {
+                ctx.send(1, 9, Payload::Scalar(1));
+            }
+            // rank 1 never receives.
+        });
+    }
+
+    #[test]
+    fn self_send_works() {
+        let e = engine(2, 1);
+        let res = e.run(|ctx| {
+            let me = ctx.rank();
+            let s = ctx.isend(me, 4, Payload::Scalar(me as u64 + 7));
+            let r = ctx.irecv(me, 4);
+            let got = ctx.waitall(&[s], &[r]);
+            got[0].clone().into_scalar()
+        });
+        assert_eq!(res.ranks[0].value, 7);
+        assert_eq!(res.ranks[1].value, 8);
+    }
+
+    #[test]
+    fn prev_pow2_values() {
+        assert_eq!(prev_pow2(1), 1);
+        assert_eq!(prev_pow2(2), 2);
+        assert_eq!(prev_pow2(3), 2);
+        assert_eq!(prev_pow2(8), 8);
+        assert_eq!(prev_pow2(9), 8);
+        assert_eq!(prev_pow2(1023), 512);
+    }
+}

@@ -1,0 +1,141 @@
+//! MPI-like message-passing substrate with virtual time.
+//!
+//! Algorithms are written once against [`engine::RankCtx`] (non-blocking
+//! `isend`/`irecv` + `waitall`, blocking conveniences, `allreduce`,
+//! `barrier`) and run unchanged in two modes:
+//!
+//! * **real payloads** — bytes actually move between rank threads and are
+//!   validated against the gold all-to-all result (correctness);
+//! * **phantom payloads** — only sizes move, so paper-scale process counts
+//!   fit in memory (simulation).
+//!
+//! Timing comes from per-rank virtual clocks ([`clock::Clock`]); the
+//! engine's simulated makespan is the max clock over ranks at exit.
+
+pub mod buffer;
+pub mod clock;
+pub mod engine;
+pub mod topology;
+
+pub use buffer::{Block, DataBuf, Payload};
+pub use clock::{Clock, Counters};
+pub use engine::{Engine, EngineResult, RankCtx, RankResult};
+pub use topology::Topology;
+
+/// Cost-breakdown phases, matching the six components of the paper's
+/// Fig. 11 plus compute/other for the applications.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Preparatory steps: allreduce for M, rotation/index setup (Alg. 3
+    /// lines 1-5, 9-13).
+    Prepare,
+    /// Metadata exchanges of the two-phase scheme.
+    Metadata,
+    /// Actual data exchanges of the intra-node / single-level algorithm.
+    Data,
+    /// Inter-buffer copying each round (T and R management).
+    Replace,
+    /// Local rearrangement before coalesced inter-node exchange.
+    Rearrange,
+    /// Inter-node communication of TuNA_l^g.
+    InterNode,
+    /// Application compute (FFT stages, joins).
+    Compute,
+    /// Anything else.
+    Other,
+}
+
+pub const PHASES: [Phase; 8] = [
+    Phase::Prepare,
+    Phase::Metadata,
+    Phase::Data,
+    Phase::Replace,
+    Phase::Rearrange,
+    Phase::InterNode,
+    Phase::Compute,
+    Phase::Other,
+];
+
+impl Phase {
+    pub fn index(self) -> usize {
+        PHASES.iter().position(|p| *p == self).unwrap()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prepare => "prepare",
+            Phase::Metadata => "metadata",
+            Phase::Data => "data",
+            Phase::Replace => "replace",
+            Phase::Rearrange => "rearrange",
+            Phase::InterNode => "inter-node",
+            Phase::Compute => "compute",
+            Phase::Other => "other",
+        }
+    }
+}
+
+/// Per-rank virtual seconds attributed to each phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub secs: [f64; PHASES.len()],
+}
+
+impl PhaseBreakdown {
+    pub fn add(&mut self, phase: Phase, dt: f64) {
+        debug_assert!(dt >= -1e-12, "negative phase time {dt}");
+        self.secs[phase.index()] += dt.max(0.0);
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.secs[phase.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Element-wise max — used to aggregate the per-rank breakdowns into
+    /// the per-phase critical path the paper plots.
+    pub fn max_with(&mut self, other: &PhaseBreakdown) {
+        for i in 0..self.secs.len() {
+            self.secs[i] = self.secs[i].max(other.secs[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_indices_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for p in PHASES {
+            assert!(seen.insert(p.index()));
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::Metadata, 1.0);
+        b.add(Phase::Metadata, 0.5);
+        b.add(Phase::Data, 2.0);
+        assert_eq!(b.get(Phase::Metadata), 1.5);
+        assert_eq!(b.total(), 3.5);
+    }
+
+    #[test]
+    fn breakdown_max_elementwise() {
+        let mut a = PhaseBreakdown::default();
+        a.add(Phase::Data, 1.0);
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::Data, 0.5);
+        b.add(Phase::Metadata, 2.0);
+        a.max_with(&b);
+        assert_eq!(a.get(Phase::Data), 1.0);
+        assert_eq!(a.get(Phase::Metadata), 2.0);
+    }
+}

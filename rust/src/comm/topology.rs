@@ -1,0 +1,129 @@
+//! Process-to-node layout.
+//!
+//! The paper runs `P = Q * N` ranks: `Q` ranks per node, `N` nodes, with
+//! rank `p` living on node `p / Q` and having in-node (group) rank
+//! `g = p % Q` — the same block mapping MPI launchers use by default and
+//! the one Algorithms 2/3 assume.
+
+use crate::model::Link;
+
+/// Rank layout: `p` total ranks, `q` per node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    p: usize,
+    q: usize,
+}
+
+impl Topology {
+    /// Create a layout. `q` must divide `p` (the paper always runs full
+    /// nodes; partial nodes would change the Q-port math of TuNA_l^g).
+    pub fn new(p: usize, q: usize) -> Topology {
+        assert!(p >= 1, "need at least one rank");
+        assert!(q >= 1, "need at least one rank per node");
+        assert!(
+            p % q == 0,
+            "ranks per node ({q}) must divide total ranks ({p})"
+        );
+        Topology { p, q }
+    }
+
+    /// Every rank on its own node (all communication inter-node).
+    pub fn flat(p: usize) -> Topology {
+        Topology::new(p, 1)
+    }
+
+    /// All ranks on one node (all communication intra-node).
+    pub fn single_node(p: usize) -> Topology {
+        Topology::new(p, p)
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Ranks per node (the paper's Q).
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Number of nodes (the paper's N).
+    #[inline]
+    pub fn nodes(&self) -> usize {
+        self.p / self.q
+    }
+
+    /// Node hosting `rank`.
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.p);
+        rank / self.q
+    }
+
+    /// In-node (group) rank, the paper's `g = p % Q`.
+    #[inline]
+    pub fn group_rank(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.p);
+        rank % self.q
+    }
+
+    /// Global rank of group-rank `g` on node `n`.
+    #[inline]
+    pub fn rank_of(&self, node: usize, g: usize) -> usize {
+        debug_assert!(node < self.nodes() && g < self.q);
+        node * self.q + g
+    }
+
+    /// Link class between two ranks.
+    #[inline]
+    pub fn link(&self, a: usize, b: usize) -> Link {
+        if self.node_of(a) == self.node_of(b) {
+            Link::Local
+        } else {
+            Link::Global
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_math() {
+        let t = Topology::new(12, 4);
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 1);
+        assert_eq!(t.group_rank(7), 3);
+        assert_eq!(t.rank_of(1, 3), 7);
+        for r in 0..12 {
+            assert_eq!(t.rank_of(t.node_of(r), t.group_rank(r)), r);
+        }
+    }
+
+    #[test]
+    fn link_classes() {
+        let t = Topology::new(8, 4);
+        assert_eq!(t.link(0, 3), Link::Local);
+        assert_eq!(t.link(0, 4), Link::Global);
+        assert_eq!(t.link(5, 6), Link::Local);
+    }
+
+    #[test]
+    fn flat_and_single_node() {
+        let f = Topology::flat(6);
+        assert_eq!(f.nodes(), 6);
+        assert_eq!(f.link(1, 2), Link::Global);
+        let s = Topology::single_node(6);
+        assert_eq!(s.nodes(), 1);
+        assert_eq!(s.link(1, 2), Link::Local);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_partial_nodes() {
+        Topology::new(10, 4);
+    }
+}

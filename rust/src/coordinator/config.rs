@@ -1,0 +1,158 @@
+//! Run configuration and `key=value` parsing for the CLI.
+
+use crate::error::{Result, TunaError};
+use crate::model::MachineProfile;
+use crate::workload::Dist;
+
+/// Configuration of a single experiment point.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Total ranks.
+    pub p: usize,
+    /// Ranks per node (the paper's Q; both machines use 32).
+    pub q: usize,
+    pub profile: MachineProfile,
+    pub dist: Dist,
+    pub seed: u64,
+    /// Repetitions (paper: >= 20); seeds vary per iteration.
+    pub iters: usize,
+    /// Move and validate real payload bytes (engine only).
+    pub real_payloads: bool,
+    /// Engine rank budget for linear (O(P²)-message) algorithms.
+    pub engine_limit_linear: usize,
+    /// Engine rank budget for logarithmic algorithms.
+    pub engine_limit_log: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            p: 64,
+            q: 8,
+            profile: MachineProfile::fugaku(),
+            dist: Dist::Uniform { max: 1024 },
+            seed: 0xC0FFEE,
+            iters: 5,
+            real_payloads: false,
+            engine_limit_linear: 512,
+            engine_limit_log: 2048,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key=value` arguments: `p=128 q=16 profile=polaris
+    /// dist=uniform:1024 seed=7 iters=20 real=true limit-linear=256
+    /// limit-log=1024`. Unknown keys are errors (typos should not pass
+    /// silently).
+    pub fn parse_args(args: &[String]) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        for arg in args {
+            let (k, v) = arg
+                .split_once('=')
+                .ok_or_else(|| TunaError::config(format!("expected key=value, got `{arg}`")))?;
+            match k {
+                "p" => cfg.p = parse_num(k, v)?,
+                "q" => cfg.q = parse_num(k, v)?,
+                "seed" => cfg.seed = parse_num(k, v)? as u64,
+                "iters" => cfg.iters = parse_num(k, v)?,
+                "real" => {
+                    cfg.real_payloads = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad bool for {k}: `{v}`")))?
+                }
+                "limit-linear" => cfg.engine_limit_linear = parse_num(k, v)?,
+                "limit-log" => cfg.engine_limit_log = parse_num(k, v)?,
+                "profile" => {
+                    cfg.profile = MachineProfile::by_name(v).ok_or_else(|| {
+                        TunaError::config(format!(
+                            "unknown profile `{v}` (try polaris, fugaku, test-flat)"
+                        ))
+                    })?
+                }
+                "dist" => {
+                    cfg.dist = Dist::parse(v).ok_or_else(|| {
+                        TunaError::config(format!(
+                            "unknown dist `{v}` (try uniform:1024, normal, powerlaw, const:64, fft-n1, fft-n2)"
+                        ))
+                    })?
+                }
+                _ => {
+                    return Err(TunaError::config(format!("unknown config key `{k}`")));
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.p < 2 {
+            return Err(TunaError::config("need at least 2 ranks"));
+        }
+        if self.q == 0 || self.p % self.q != 0 {
+            return Err(TunaError::config(format!(
+                "q={} must divide p={}",
+                self.q, self.p
+            )));
+        }
+        if self.iters == 0 {
+            return Err(TunaError::config("iters must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+fn parse_num(key: &str, v: &str) -> Result<usize> {
+    v.parse()
+        .map_err(|_| TunaError::config(format!("bad number for {key}: `{v}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = RunConfig::parse_args(&args(
+            "p=128 q=16 profile=polaris dist=uniform:2048 seed=7 iters=20 real=true",
+        ))
+        .unwrap();
+        assert_eq!(cfg.p, 128);
+        assert_eq!(cfg.q, 16);
+        assert_eq!(cfg.profile.name, "polaris");
+        assert_eq!(cfg.dist, Dist::Uniform { max: 2048 });
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.iters, 20);
+        assert!(cfg.real_payloads);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(RunConfig::parse_args(&args("px=128")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::parse_args(&args("p=abc")).is_err());
+        assert!(RunConfig::parse_args(&args("profile=summit")).is_err());
+        assert!(RunConfig::parse_args(&args("dist=zipf")).is_err());
+        assert!(RunConfig::parse_args(&args("p")).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_topology() {
+        assert!(RunConfig::parse_args(&args("p=10 q=4")).is_err());
+        assert!(RunConfig::parse_args(&args("p=1 q=1")).is_err());
+        assert!(RunConfig::parse_args(&args("iters=0")).is_err());
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+}

@@ -1,0 +1,96 @@
+//! Wallclock metrics for the host-side harness (distinct from the
+//! *virtual* time the engine simulates): used by the perf benches and the
+//! end-to-end application drivers.
+
+use std::time::Instant;
+
+/// A simple named stopwatch accumulator.
+#[derive(Debug, Default)]
+pub struct WallMetrics {
+    entries: Vec<(String, f64)>,
+}
+
+impl WallMetrics {
+    pub fn new() -> WallMetrics {
+        WallMetrics::default()
+    }
+
+    /// Time a closure and record it under `name` (accumulating across
+    /// calls with the same name).
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|e| e.0 == name)
+            .map(|e| e.1)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, secs) in &self.entries {
+            out.push_str(&format!(
+                "  {name:<24} {}\n",
+                crate::util::stats::fmt_time(*secs)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_name() {
+        let mut m = WallMetrics::new();
+        m.add("comm", 1.0);
+        m.add("comm", 0.5);
+        m.add("compute", 2.0);
+        assert_eq!(m.get("comm"), 1.5);
+        assert_eq!(m.get("compute"), 2.0);
+        assert_eq!(m.get("missing"), 0.0);
+        assert_eq!(m.total(), 3.5);
+    }
+
+    #[test]
+    fn time_records_elapsed() {
+        let mut m = WallMetrics::new();
+        let v = m.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.get("work") >= 0.004);
+    }
+
+    #[test]
+    fn render_contains_names() {
+        let mut m = WallMetrics::new();
+        m.add("alpha", 0.001);
+        assert!(m.render().contains("alpha"));
+    }
+}

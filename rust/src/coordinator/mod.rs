@@ -1,0 +1,175 @@
+//! Experiment coordination: configuration, fidelity selection (exact
+//! engine vs analytic replay), repetition, and measurement aggregation.
+//!
+//! The paper reports medians and deviations over >= 20 iterations; we do
+//! the same, varying the workload seed per iteration. Fidelity is chosen
+//! per point: the threaded engine (exact, real message matching) up to a
+//! configurable rank budget, the single-rank analytic replay beyond it —
+//! each table/CSV row records which one produced it.
+
+pub mod config;
+pub mod metrics;
+
+pub use config::RunConfig;
+
+use crate::algos::{run_alltoallv, AlgoKind};
+use crate::comm::{Engine, PhaseBreakdown, Topology};
+use crate::model::analytic::Estimator;
+use crate::util::stats::Summary;
+use crate::workload::BlockSizes;
+
+/// How a measurement was produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Threaded engine, every rank simulated with real message matching.
+    Engine,
+    /// Single-rank analytic replay (for paper-scale P).
+    Analytic,
+}
+
+impl Fidelity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fidelity::Engine => "engine",
+            Fidelity::Analytic => "model",
+        }
+    }
+}
+
+/// An aggregated measurement of one (algorithm, workload, machine) point.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub algo: AlgoKind,
+    pub summary: Summary,
+    pub phases: PhaseBreakdown,
+    pub fidelity: Fidelity,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        self.summary.median
+    }
+}
+
+/// Decide fidelity for an algorithm at scale `p`: linear algorithms post
+/// O(P²) messages so their engine budget is tighter than the logarithmic
+/// family's.
+pub fn choose_fidelity(kind: &AlgoKind, p: usize, cfg: &RunConfig) -> Fidelity {
+    let limit = match kind {
+        AlgoKind::SpreadOut
+        | AlgoKind::OmpiLinear
+        | AlgoKind::Pairwise
+        | AlgoKind::Scattered { .. }
+        | AlgoKind::Vendor => cfg.engine_limit_linear,
+        _ => cfg.engine_limit_log,
+    };
+    if p <= limit {
+        Fidelity::Engine
+    } else {
+        Fidelity::Analytic
+    }
+}
+
+/// Measure one algorithm under a config: `iters` runs with per-iteration
+/// seeds on the engine, or one analytic replay (deterministic) beyond the
+/// engine budget.
+pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
+    kind.check(cfg.p, cfg.q)?;
+    let topo = Topology::new(cfg.p, cfg.q);
+    match choose_fidelity(kind, cfg.p, cfg) {
+        Fidelity::Engine => {
+            let engine = Engine::new(cfg.profile.clone(), topo);
+            let mut times = Vec::with_capacity(cfg.iters);
+            let mut phases = PhaseBreakdown::default();
+            for it in 0..cfg.iters.max(1) {
+                let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed.wrapping_add(it as u64));
+                let rep = run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?;
+                times.push(rep.makespan);
+                phases.max_with(&rep.phases);
+            }
+            Ok(Measurement {
+                algo: *kind,
+                summary: Summary::of(&times),
+                phases,
+                fidelity: Fidelity::Engine,
+            })
+        }
+        Fidelity::Analytic => {
+            let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
+            let mean = sizes.mean_size();
+            let est = Estimator::new(&cfg.profile, topo).estimate(kind, mean);
+            Ok(Measurement {
+                algo: *kind,
+                summary: Summary::of(&[est.makespan]),
+                phases: est.phases,
+                fidelity: Fidelity::Analytic,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Dist;
+
+    fn cfg(p: usize, q: usize) -> RunConfig {
+        RunConfig {
+            p,
+            q,
+            dist: Dist::Uniform { max: 256 },
+            iters: 3,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn engine_fidelity_below_limit() {
+        let c = cfg(16, 4);
+        let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(m.fidelity, Fidelity::Engine);
+        assert_eq!(m.summary.n, 3);
+        assert!(m.median() > 0.0);
+        assert!(m.phases.total() > 0.0);
+    }
+
+    #[test]
+    fn analytic_fidelity_above_limit() {
+        let mut c = cfg(16, 4);
+        c.engine_limit_log = 8;
+        let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(m.fidelity, Fidelity::Analytic);
+    }
+
+    #[test]
+    fn linear_gets_tighter_budget() {
+        let c = RunConfig {
+            engine_limit_linear: 64,
+            engine_limit_log: 1024,
+            ..RunConfig::default()
+        };
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, 128, &c),
+            Fidelity::Analytic
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 128, &c),
+            Fidelity::Engine
+        );
+    }
+
+    #[test]
+    fn measure_rejects_invalid_params() {
+        let c = cfg(16, 4);
+        assert!(measure(&c, &AlgoKind::Tuna { radix: 99 }).is_err());
+    }
+
+    #[test]
+    fn iterations_produce_spread() {
+        let c = cfg(16, 4);
+        let m = measure(&c, &AlgoKind::Tuna { radix: 2 }).unwrap();
+        // Different seeds -> different workloads -> nonzero spread.
+        assert!(m.summary.max >= m.summary.min);
+        assert!(m.summary.stddev >= 0.0);
+    }
+}

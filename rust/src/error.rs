@@ -1,0 +1,55 @@
+//! Error taxonomy for the public API.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum TunaError {
+    /// Invalid configuration (bad radix, block_count, topology, ...).
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    /// An algorithm produced an invalid result (failed validation).
+    #[error("validation error: {0}")]
+    Validation(String),
+
+    /// PJRT / artifact runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, TunaError>;
+
+impl TunaError {
+    pub fn config(msg: impl Into<String>) -> TunaError {
+        TunaError::Config(msg.into())
+    }
+
+    pub fn validation(msg: impl Into<String>) -> TunaError {
+        TunaError::Validation(msg.into())
+    }
+
+    pub fn runtime(msg: impl Into<String>) -> TunaError {
+        TunaError::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category() {
+        assert!(TunaError::config("bad radix").to_string().contains("configuration"));
+        assert!(TunaError::validation("x").to_string().contains("validation"));
+        assert!(TunaError::runtime("x").to_string().contains("runtime"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let e: TunaError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

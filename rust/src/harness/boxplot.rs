@@ -1,0 +1,87 @@
+//! Parameter-sweep box plots: the paper presents tunable algorithms as a
+//! box over the parameter range with the ideal value annotated beneath
+//! (Figs. 8, 10, 12).
+
+use crate::algos::AlgoKind;
+use crate::coordinator::{measure, Fidelity, Measurement, RunConfig};
+use crate::util::stats::Summary;
+
+/// Result of sweeping one tunable algorithm over its parameter range.
+#[derive(Clone, Debug)]
+pub struct SweepBox {
+    /// Distribution of median times across the parameter range.
+    pub box_stats: Summary,
+    /// Best candidate and its median time.
+    pub best: AlgoKind,
+    pub best_time: f64,
+    pub best_measure: Measurement,
+    pub fidelity: Fidelity,
+}
+
+/// Measure every candidate, box the medians, find the ideal.
+pub fn sweep_box(cfg: &RunConfig, candidates: &[AlgoKind]) -> crate::Result<SweepBox> {
+    assert!(!candidates.is_empty());
+    let mut medians = Vec::with_capacity(candidates.len());
+    let mut best: Option<(AlgoKind, f64, Measurement)> = None;
+    let mut fidelity = Fidelity::Engine;
+    for kind in candidates {
+        let m = measure(cfg, kind)?;
+        fidelity = m.fidelity;
+        let t = m.median();
+        medians.push(t);
+        if best.as_ref().map(|b| t < b.1).unwrap_or(true) {
+            best = Some((*kind, t, m));
+        }
+    }
+    let (best, best_time, best_measure) = best.unwrap();
+    Ok(SweepBox {
+        box_stats: Summary::of(&medians),
+        best,
+        best_time,
+        best_measure,
+        fidelity,
+    })
+}
+
+/// Render a box as the compact `min/q1/med/q3/max` cell set.
+pub fn box_cells(s: &Summary) -> Vec<String> {
+    [s.min, s.q1, s.median, s.q3, s.max]
+        .iter()
+        .map(|v| format!("{:.4}", v * 1e3))
+        .collect()
+}
+
+pub const BOX_HEADER: [&str; 5] = ["min(ms)", "q1(ms)", "med(ms)", "q3(ms)", "max(ms)"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Dist;
+
+    #[test]
+    fn sweep_finds_minimum() {
+        let cfg = RunConfig {
+            p: 16,
+            q: 4,
+            dist: Dist::Uniform { max: 128 },
+            iters: 2,
+            ..RunConfig::default()
+        };
+        let candidates: Vec<AlgoKind> = [2usize, 4, 16]
+            .iter()
+            .map(|&radix| AlgoKind::Tuna { radix })
+            .collect();
+        let sb = sweep_box(&cfg, &candidates).unwrap();
+        assert_eq!(sb.box_stats.n, 3);
+        assert_eq!(sb.best_time, sb.box_stats.min);
+        assert!(candidates.contains(&sb.best));
+    }
+
+    #[test]
+    fn box_cells_are_ms() {
+        let s = Summary::of(&[0.001, 0.002, 0.003]);
+        let cells = box_cells(&s);
+        assert_eq!(cells.len(), 5);
+        assert_eq!(cells[2], "2.0000");
+    }
+}

@@ -1,0 +1,64 @@
+//! Fig. 7 — the three radix trends of TuNA.
+//!
+//! For a fixed P, sweeping the radix at different max block sizes S shows:
+//! increasing performance with r for small S would be *wrong* — the paper
+//! observes (1) small S: best near r=2 (latency regime), (2) medium S:
+//! U-shape with the minimum near √P, (3) large S: decreasing time as r
+//! grows (bandwidth regime, r≈P ideal). The table reports the time per
+//! radix and classifies the observed trend per (machine, S).
+
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::{cell_f, Table};
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let p = if opts.full { 2048 } else { 256 };
+    let mut table = Table::new(
+        format!("Fig. 7 — TuNA radix trends (P={p})"),
+        &["machine", "S(B)", "radix", "time(ms)", "fidelity"],
+    );
+    let mut summary = Table::new(
+        "Fig. 7 summary — ideal radix per regime",
+        &["machine", "S(B)", "ideal r", "sqrt(P)", "regime"],
+    );
+
+    for profile in &opts.profiles {
+        for &s in &opts.ss() {
+            let cfg = opts.cfg(profile, p, s);
+            let radices = tuning::radix_candidates(p);
+            let mut best = (0usize, f64::INFINITY);
+            for &r in &radices {
+                let m = measure(&cfg, &AlgoKind::Tuna { radix: r })?;
+                let t = m.median();
+                if t < best.1 {
+                    best = (r, t);
+                }
+                table.row(vec![
+                    profile.name.into(),
+                    s.to_string(),
+                    r.to_string(),
+                    cell_f(t * 1e3),
+                    m.fidelity.name().into(),
+                ]);
+            }
+            let sqrt_p = (p as f64).sqrt().round() as usize;
+            let regime = if best.0 <= 4 {
+                "latency (small r)"
+            } else if best.0 <= 4 * sqrt_p {
+                "balanced (U-shape, r~sqrt(P))"
+            } else {
+                "bandwidth (large r)"
+            };
+            summary.row(vec![
+                profile.name.into(),
+                s.to_string(),
+                best.0.to_string(),
+                sqrt_p.to_string(),
+                regime.into(),
+            ]);
+        }
+    }
+    table.note("paper: ideal r grows with S — 2 for small S, ~sqrt(P) mid, ~P large");
+    opts.finish("fig07_trends", vec![table, summary])
+}

@@ -1,0 +1,44 @@
+//! Fig. 8 — TuNA (box over radices) vs vendor MPI_Alltoallv across P and
+//! S on both machines. The paper's headline single-level result: TuNA
+//! wins decisively for S ≤ 2 KiB (Polaris) / 16 KiB (Fugaku), e.g. 29x /
+//! 70x at P=8192, S=16.
+
+use super::boxplot::{box_cells, sweep_box, BOX_HEADER};
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::{cell_f, Table};
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut header = vec!["machine", "P", "S(B)"];
+    header.extend_from_slice(&BOX_HEADER);
+    header.extend_from_slice(&["ideal r", "vendor(ms)", "speedup", "fidelity"]);
+    let mut table = Table::new("Fig. 8 — TuNA vs MPI_Alltoallv", &header);
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            for &s in &opts.ss() {
+                let cfg = opts.cfg(profile, p, s);
+                let candidates: Vec<AlgoKind> = tuning::radix_candidates(p)
+                    .into_iter()
+                    .map(|radix| AlgoKind::Tuna { radix })
+                    .collect();
+                let sb = sweep_box(&cfg, &candidates)?;
+                let vendor = measure(&cfg, &AlgoKind::Vendor)?;
+                let ideal_r = match sb.best {
+                    AlgoKind::Tuna { radix } => radix,
+                    _ => unreachable!(),
+                };
+                let mut row = vec![profile.name.to_string(), p.to_string(), s.to_string()];
+                row.extend(box_cells(&sb.box_stats));
+                row.push(ideal_r.to_string());
+                row.push(cell_f(vendor.median() * 1e3));
+                row.push(format!("{:.2}x", vendor.median() / sb.best_time));
+                row.push(sb.fidelity.name().into());
+                table.row(row);
+            }
+        }
+    }
+    table.note("speedup = vendor / TuNA-with-ideal-radix; paper reports up to 70x (Fugaku, small S)");
+    opts.finish("fig08_tuna_vs_vendor", vec![table])
+}

@@ -1,0 +1,55 @@
+//! Fig. 9 — ranges of radix where TuNA outperforms MPI_Alltoallv, per
+//! (P, S), rendered as a textual heatmap: the winning sub-range of
+//! [2, P], and the gain at the ideal radix (the paper's red intensity).
+
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::Table;
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut table = Table::new(
+        "Fig. 9 — winning radix ranges (TuNA < vendor)",
+        &[
+            "machine", "P", "S(B)", "win range", "of range", "win frac", "ideal r", "gain",
+        ],
+    );
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            for &s in &opts.ss() {
+                let cfg = opts.cfg(profile, p, s);
+                let vendor = measure(&cfg, &AlgoKind::Vendor)?.median();
+                let radices = tuning::radix_candidates(p);
+                let mut wins: Vec<usize> = Vec::new();
+                let mut best = (0usize, f64::INFINITY);
+                for &r in &radices {
+                    let t = measure(&cfg, &AlgoKind::Tuna { radix: r })?.median();
+                    if t < vendor {
+                        wins.push(r);
+                    }
+                    if t < best.1 {
+                        best = (r, t);
+                    }
+                }
+                let win_range = if wins.is_empty() {
+                    "none".to_string()
+                } else {
+                    format!("[{}..{}]", wins.iter().min().unwrap(), wins.iter().max().unwrap())
+                };
+                table.row(vec![
+                    profile.name.into(),
+                    p.to_string(),
+                    s.to_string(),
+                    win_range,
+                    format!("[2..{p}]"),
+                    format!("{:.0}%", 100.0 * wins.len() as f64 / radices.len() as f64),
+                    best.0.to_string(),
+                    format!("{:.2}x", vendor / best.1),
+                ]);
+            }
+        }
+    }
+    table.note("gain = vendor / best TuNA; 'win frac' = fraction of sampled radices beating vendor");
+    opts.finish("fig09_radix_heatmap", vec![table])
+}

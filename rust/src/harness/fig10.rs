@@ -1,0 +1,86 @@
+//! Fig. 10 — coalesced vs staggered TuNA_l^g parameter study (Fugaku in
+//! the paper): intra-node radix and inter-node block_count sweeps, with
+//! ideal parameters annotated. Intra/inter components are reported
+//! separately from the phase breakdown, matching the paper's paired box
+//! plots.
+
+use super::boxplot::{box_cells, sweep_box, BOX_HEADER};
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::comm::Phase;
+use crate::util::table::{cell_f, Table};
+
+/// Candidate (radix, block_count) grid for one hier variant.
+pub fn hier_candidates(q: usize, n: usize, coalesced: bool) -> Vec<AlgoKind> {
+    let bc_max = if coalesced {
+        (n - 1).max(1)
+    } else {
+        ((n - 1) * q).max(1)
+    };
+    let mut out = Vec::new();
+    for radix in tuning::radix_candidates(q).into_iter().filter(|&r| r <= q) {
+        for bc in tuning::block_count_candidates(bc_max) {
+            out.push(if coalesced {
+                AlgoKind::TunaHierCoalesced { radix, block_count: bc }
+            } else {
+                AlgoKind::TunaHierStaggered { radix, block_count: bc }
+            });
+        }
+    }
+    out
+}
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut header = vec!["machine", "P", "S(B)", "variant"];
+    header.extend_from_slice(&BOX_HEADER);
+    header.extend_from_slice(&["ideal r", "ideal bc", "intra(ms)", "inter(ms)", "fidelity"]);
+    let mut table = Table::new(
+        "Fig. 10 — coalesced vs staggered TuNA_l^g parameter study",
+        &header,
+    );
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            let q = opts.q().min(p);
+            let n = p / q;
+            if n < 2 {
+                continue;
+            }
+            for &s in &opts.ss() {
+                let cfg = opts.cfg(profile, p, s);
+                for coalesced in [true, false] {
+                    let candidates = hier_candidates(q, n, coalesced);
+                    let sb = sweep_box(&cfg, &candidates)?;
+                    let (ideal_r, ideal_bc) = match sb.best {
+                        AlgoKind::TunaHierCoalesced { radix, block_count }
+                        | AlgoKind::TunaHierStaggered { radix, block_count } => {
+                            (radix, block_count)
+                        }
+                        _ => unreachable!(),
+                    };
+                    let ph = &sb.best_measure.phases;
+                    let intra = ph.get(Phase::Prepare)
+                        + ph.get(Phase::Metadata)
+                        + ph.get(Phase::Data)
+                        + ph.get(Phase::Replace);
+                    let inter = ph.get(Phase::Rearrange) + ph.get(Phase::InterNode);
+                    let mut row = vec![
+                        profile.name.to_string(),
+                        p.to_string(),
+                        s.to_string(),
+                        if coalesced { "coalesced" } else { "staggered" }.to_string(),
+                    ];
+                    row.extend(box_cells(&sb.box_stats));
+                    row.push(ideal_r.to_string());
+                    row.push(ideal_bc.to_string());
+                    row.push(cell_f(intra * 1e3));
+                    row.push(cell_f(inter * 1e3));
+                    row.push(sb.fidelity.name().into());
+                    table.row(row);
+                }
+            }
+        }
+    }
+    table.note("paper trends: larger S favors smaller block_count; ideal bc shrinks as P grows");
+    opts.finish("fig10_hier_params", vec![table])
+}

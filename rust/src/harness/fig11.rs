@@ -1,0 +1,63 @@
+//! Fig. 11 — six-component cost breakdown of coalesced (left bar) vs
+//! staggered (right bar) TuNA_l^g at their ideal parameters: prepare,
+//! metadata, data, replace (inter-buffer copying), rearrange (coalesced
+//! only), inter-node communication.
+
+use super::fig10::hier_candidates;
+use super::boxplot::sweep_box;
+use super::FigOpts;
+use crate::comm::{Phase, PHASES};
+use crate::util::table::{cell_f, Table};
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let phases: Vec<Phase> = PHASES
+        .iter()
+        .copied()
+        .filter(|p| {
+            matches!(
+                p,
+                Phase::Prepare
+                    | Phase::Metadata
+                    | Phase::Data
+                    | Phase::Replace
+                    | Phase::Rearrange
+                    | Phase::InterNode
+            )
+        })
+        .collect();
+    let mut header: Vec<&str> = vec!["machine", "P", "S(B)", "variant", "params"];
+    let phase_names: Vec<String> = phases.iter().map(|p| format!("{}(ms)", p.name())).collect();
+    header.extend(phase_names.iter().map(|s| s.as_str()));
+    header.push("total(ms)");
+    let mut table = Table::new("Fig. 11 — TuNA_l^g cost breakdown", &header);
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            let q = opts.q().min(p);
+            let n = p / q;
+            if n < 2 {
+                continue;
+            }
+            for &s in &opts.ss() {
+                let cfg = opts.cfg(profile, p, s);
+                for coalesced in [true, false] {
+                    let sb = sweep_box(&cfg, &hier_candidates(q, n, coalesced))?;
+                    let mut row = vec![
+                        profile.name.to_string(),
+                        p.to_string(),
+                        s.to_string(),
+                        if coalesced { "coalesced" } else { "staggered" }.to_string(),
+                        sb.best.name(),
+                    ];
+                    for ph in &phases {
+                        row.push(cell_f(sb.best_measure.phases.get(*ph) * 1e3));
+                    }
+                    row.push(cell_f(sb.best_measure.phases.total() * 1e3));
+                    table.row(row);
+                }
+            }
+        }
+    }
+    table.note("paper: staggered's inter-node cost dominates; rearrange applies to coalesced only");
+    opts.finish("fig11_breakdown", vec![table])
+}

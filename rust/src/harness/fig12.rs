@@ -1,0 +1,70 @@
+//! Fig. 12 — benchmarking the standard non-uniform all-to-all
+//! implementations from OpenMPI and MPICH: ascending linear, pairwise,
+//! spread-out, the vendor default, and the scattered algorithm as a box
+//! over its tunable block_count. The paper finds OpenMPI's blocking
+//! linear worst at scale and ideally-tuned scattered best.
+
+use super::boxplot::{box_cells, sweep_box, BOX_HEADER};
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::{cell_f, Table};
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut table = Table::new(
+        "Fig. 12 — MPI baseline algorithms",
+        &[
+            "machine",
+            "P",
+            "S(B)",
+            "ompi-linear(ms)",
+            "pairwise(ms)",
+            "spread-out(ms)",
+            "vendor(ms)",
+            "scattered ideal b",
+            "scattered best(ms)",
+            "fidelity",
+        ],
+    );
+    let mut scat_header = vec!["machine", "P", "S(B)"];
+    scat_header.extend_from_slice(&BOX_HEADER);
+    let mut scattered_box = Table::new("Fig. 12 — scattered block_count box", &scat_header);
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            for &s in &opts.ss() {
+                let cfg = opts.cfg(profile, p, s);
+                let ompi = measure(&cfg, &AlgoKind::OmpiLinear)?;
+                let pair = measure(&cfg, &AlgoKind::Pairwise)?;
+                let spread = measure(&cfg, &AlgoKind::SpreadOut)?;
+                let vendor = measure(&cfg, &AlgoKind::Vendor)?;
+                let candidates: Vec<AlgoKind> = tuning::block_count_candidates(p - 1)
+                    .into_iter()
+                    .map(|b| AlgoKind::Scattered { block_count: b })
+                    .collect();
+                let sb = sweep_box(&cfg, &candidates)?;
+                let ideal_b = match sb.best {
+                    AlgoKind::Scattered { block_count } => block_count,
+                    _ => unreachable!(),
+                };
+                table.row(vec![
+                    profile.name.into(),
+                    p.to_string(),
+                    s.to_string(),
+                    cell_f(ompi.median() * 1e3),
+                    cell_f(pair.median() * 1e3),
+                    cell_f(spread.median() * 1e3),
+                    cell_f(vendor.median() * 1e3),
+                    ideal_b.to_string(),
+                    cell_f(sb.best_time * 1e3),
+                    sb.fidelity.name().into(),
+                ]);
+                let mut row = vec![profile.name.to_string(), p.to_string(), s.to_string()];
+                row.extend(box_cells(&sb.box_stats));
+                scattered_box.row(row);
+            }
+        }
+    }
+    table.note("paper: ompi-linear worst at scale; ideally-tuned scattered best among baselines");
+    opts.finish("fig12_mpi_baselines", vec![table, scattered_box])
+}

@@ -1,0 +1,81 @@
+//! Fig. 13 — the headline comparison: TuNA, coalesced and staggered
+//! TuNA_l^g (each ideally configured) against the best-tuned scattered
+//! baseline and the vendor MPI_Alltoallv. Paper: up to 60.6x (TuNA) and
+//! 138.6x (coalesced) over the vendor on Fugaku at small S; coalesced
+//! wins everywhere.
+
+use super::fig10::hier_candidates;
+use super::boxplot::sweep_box;
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::{cell_f, Table};
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut table = Table::new(
+        "Fig. 13 — proposed algorithms vs top baselines (ideal params)",
+        &[
+            "machine",
+            "P",
+            "S(B)",
+            "vendor(ms)",
+            "scattered*(ms)",
+            "tuna*(ms)",
+            "coalesced*(ms)",
+            "staggered*(ms)",
+            "tuna speedup",
+            "coalesced speedup",
+            "staggered speedup",
+            "fidelity",
+        ],
+    );
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            let q = opts.q().min(p);
+            let n = p / q;
+            for &s in &opts.ss() {
+                let cfg = opts.cfg(profile, p, s);
+                let vendor = measure(&cfg, &AlgoKind::Vendor)?;
+
+                let scat: Vec<AlgoKind> = tuning::block_count_candidates(p - 1)
+                    .into_iter()
+                    .map(|b| AlgoKind::Scattered { block_count: b })
+                    .collect();
+                let scattered = sweep_box(&cfg, &scat)?;
+
+                let tuna_c: Vec<AlgoKind> = tuning::radix_candidates(p)
+                    .into_iter()
+                    .map(|radix| AlgoKind::Tuna { radix })
+                    .collect();
+                let tuna = sweep_box(&cfg, &tuna_c)?;
+
+                let (coal_t, stag_t) = if n >= 2 {
+                    let coal = sweep_box(&cfg, &hier_candidates(q, n, true))?;
+                    let stag = sweep_box(&cfg, &hier_candidates(q, n, false))?;
+                    (coal.best_time, stag.best_time)
+                } else {
+                    (tuna.best_time, tuna.best_time)
+                };
+
+                let v = vendor.median();
+                table.row(vec![
+                    profile.name.into(),
+                    p.to_string(),
+                    s.to_string(),
+                    cell_f(v * 1e3),
+                    cell_f(scattered.best_time * 1e3),
+                    cell_f(tuna.best_time * 1e3),
+                    cell_f(coal_t * 1e3),
+                    cell_f(stag_t * 1e3),
+                    format!("{:.2}x", v / tuna.best_time),
+                    format!("{:.2}x", v / coal_t),
+                    format!("{:.2}x", v / stag_t),
+                    tuna.fidelity.name().into(),
+                ]);
+            }
+        }
+    }
+    table.note("* = ideally tuned; paper headline: 60.6x (TuNA) / 138.6x (coalesced) on Fugaku small S");
+    opts.finish("fig13_headline", vec![table])
+}

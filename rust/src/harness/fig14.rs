@@ -1,0 +1,71 @@
+//! Fig. 14 — FFT transpose workloads 𝒩₁ and 𝒩₂ (§VI-A): the all-to-allv
+//! at the heart of FFTW's distributed transpose, with the paper's two
+//! non-uniform decompositions. The full application (local Pallas/PJRT
+//! FFT stages + transpose) runs in `examples/fft_e2e.rs`; this figure
+//! isolates the communication component the paper's runtime is dominated
+//! by.
+
+use super::fig10::hier_candidates;
+use super::boxplot::sweep_box;
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::{cell_f, Table};
+use crate::workload::Dist;
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut table = Table::new(
+        "Fig. 14 — FFT workloads N1/N2",
+        &[
+            "machine",
+            "P",
+            "workload",
+            "vendor(ms)",
+            "tuna*(ms)",
+            "coalesced*(ms)",
+            "staggered*(ms)",
+            "best speedup",
+            "fidelity",
+        ],
+    );
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            let q = opts.q().min(p);
+            let n = p / q;
+            for dist in [Dist::FftN1, Dist::FftN2] {
+                let mut cfg = opts.cfg(profile, p, 0);
+                cfg.dist = dist;
+                let vendor = measure(&cfg, &AlgoKind::Vendor)?;
+                let tuna_c: Vec<AlgoKind> = tuning::radix_candidates(p)
+                    .into_iter()
+                    .map(|radix| AlgoKind::Tuna { radix })
+                    .collect();
+                let tuna = sweep_box(&cfg, &tuna_c)?;
+                let (coal_t, stag_t) = if n >= 2 {
+                    (
+                        sweep_box(&cfg, &hier_candidates(q, n, true))?.best_time,
+                        sweep_box(&cfg, &hier_candidates(q, n, false))?.best_time,
+                    )
+                } else {
+                    (tuna.best_time, tuna.best_time)
+                };
+                let v = vendor.median();
+                let best = tuna.best_time.min(coal_t).min(stag_t);
+                table.row(vec![
+                    profile.name.into(),
+                    p.to_string(),
+                    dist.name().into(),
+                    cell_f(v * 1e3),
+                    cell_f(tuna.best_time * 1e3),
+                    cell_f(coal_t * 1e3),
+                    cell_f(stag_t * 1e3),
+                    format!("{:.2}x", v / best),
+                    tuna.fidelity.name().into(),
+                ]);
+            }
+        }
+    }
+    table.note("paper: coalesced TuNA_l^g 9.42x (N1) / 4.01x (N2) over vendor at P=8192");
+    opts.finish("fig14_fft_app", vec![table])
+}

@@ -1,0 +1,70 @@
+//! Fig. 15 — graph mining: transitive closure (path finding) strong
+//! scaling (§VI-B). The fixed-point loop calls all-to-allv thousands of
+//! times with small, skewed payloads; our algorithms drop in behind the
+//! same interface. Bars = communication overhead, line = total execution
+//! (here: columns).
+
+use super::FigOpts;
+use crate::algos::AlgoKind;
+use crate::apps::tc::{run_tc, sequential_tc};
+use crate::comm::{Engine, Topology};
+use crate::util::table::{cell_f, Table};
+use crate::workload::graph::Graph;
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    // Engine-only figure (the app moves real tuples); scaled-down graph.
+    let (n_vertices, m_per_v) = if opts.full { (1200, 3) } else { (220, 3) };
+    let ps: Vec<usize> = if opts.full {
+        vec![8, 16, 32, 64]
+    } else {
+        vec![4, 8, 16]
+    };
+    let graph = Graph::scale_free(n_vertices, m_per_v, opts.seed);
+    let expect = sequential_tc(&graph);
+
+    let mut table = Table::new(
+        format!(
+            "Fig. 15 — transitive closure strong scaling ({} vertices, {} edges, |TC|={})",
+            graph.n,
+            graph.edges.len(),
+            expect
+        ),
+        &[
+            "machine", "P", "algo", "iters", "comm(ms)", "total(ms)", "speedup vs vendor",
+        ],
+    );
+
+    for profile in &opts.profiles {
+        for &p in &ps {
+            let q = if p >= 8 { 4 } else { 2 };
+            let engine = Engine::new(profile.clone(), Topology::new(p, q));
+            let algos = [
+                AlgoKind::Vendor,
+                AlgoKind::Tuna { radix: 4.min(p) },
+                AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+            ];
+            let mut vendor_comm = None;
+            for kind in algos {
+                let rep = run_tc(&engine, &kind, &graph, true)?;
+                assert_eq!(rep.paths, expect, "TC validation");
+                let speedup = vendor_comm
+                    .map(|v: f64| format!("{:.2}x", v / rep.comm_time))
+                    .unwrap_or_else(|| "1.00x".into());
+                if matches!(kind, AlgoKind::Vendor) {
+                    vendor_comm = Some(rep.comm_time);
+                }
+                table.row(vec![
+                    profile.name.into(),
+                    p.to_string(),
+                    kind.name(),
+                    rep.iterations.to_string(),
+                    cell_f(rep.comm_time * 1e3),
+                    cell_f(rep.makespan * 1e3),
+                    speedup,
+                ]);
+            }
+        }
+    }
+    table.note("paper: TuNA 5.98x / TuNA_l^g 7.96x over vendor at P=8192 on Polaris");
+    opts.finish("fig15_pathfinding", vec![table])
+}

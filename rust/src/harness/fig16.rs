@@ -1,0 +1,69 @@
+//! Fig. 16 — standard distributions (§VI-C): normal (mean 1000, stddev
+//! 240) and power-law block sizes, weak-scaling comparison of the
+//! proposed algorithms against the vendor MPI_Alltoallv.
+
+use super::fig10::hier_candidates;
+use super::boxplot::sweep_box;
+use super::FigOpts;
+use crate::algos::{tuning, AlgoKind};
+use crate::coordinator::measure;
+use crate::util::table::{cell_f, Table};
+use crate::workload::Dist;
+
+pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    let mut table = Table::new(
+        "Fig. 16 — normal and power-law distributions",
+        &[
+            "machine",
+            "P",
+            "dist",
+            "vendor(ms)",
+            "tuna*(ms)",
+            "coalesced*(ms)",
+            "staggered*(ms)",
+            "tuna speedup",
+            "coalesced speedup",
+            "fidelity",
+        ],
+    );
+
+    for profile in &opts.profiles {
+        for &p in &opts.ps() {
+            let q = opts.q().min(p);
+            let n = p / q;
+            for dist in [Dist::normal_default(), Dist::powerlaw_default()] {
+                let mut cfg = opts.cfg(profile, p, 0);
+                cfg.dist = dist;
+                let vendor = measure(&cfg, &AlgoKind::Vendor)?;
+                let tuna_c: Vec<AlgoKind> = tuning::radix_candidates(p)
+                    .into_iter()
+                    .map(|radix| AlgoKind::Tuna { radix })
+                    .collect();
+                let tuna = sweep_box(&cfg, &tuna_c)?;
+                let (coal_t, stag_t) = if n >= 2 {
+                    (
+                        sweep_box(&cfg, &hier_candidates(q, n, true))?.best_time,
+                        sweep_box(&cfg, &hier_candidates(q, n, false))?.best_time,
+                    )
+                } else {
+                    (tuna.best_time, tuna.best_time)
+                };
+                let v = vendor.median();
+                table.row(vec![
+                    profile.name.into(),
+                    p.to_string(),
+                    dist.name().into(),
+                    cell_f(v * 1e3),
+                    cell_f(tuna.best_time * 1e3),
+                    cell_f(coal_t * 1e3),
+                    cell_f(stag_t * 1e3),
+                    format!("{:.2}x", v / tuna.best_time),
+                    format!("{:.2}x", v / coal_t),
+                    tuna.fidelity.name().into(),
+                ]);
+            }
+        }
+    }
+    table.note("paper (P=4096, Fugaku): tuna 3.21x, coalesced 3.63x, staggered 1.57x over vendor");
+    opts.finish("fig16_distributions", vec![table])
+}

@@ -1,0 +1,171 @@
+//! Figure/table regeneration harness.
+//!
+//! One module per evaluation figure (Fig. 7 — Fig. 16); each produces
+//! [`Table`]s, printed by the CLI and written as `.txt` + `.csv` under
+//! `results/`. Two grids exist per figure: the *quick* grid (default; engine
+//! fidelity, minutes on a laptop-class host — used by `cargo bench`) and
+//! the *full* paper-scale grid (`--full`; large P points use the analytic
+//! replay, recorded in the `fidelity` column).
+
+pub mod boxplot;
+pub mod fig07;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+
+use std::path::PathBuf;
+
+use crate::coordinator::RunConfig;
+use crate::model::MachineProfile;
+use crate::util::table::Table;
+use crate::workload::Dist;
+
+/// Options shared by all figure generators.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    /// Paper-scale grids (up to P = 16,384) instead of the quick grids.
+    pub full: bool,
+    /// Machine profiles to evaluate (paper: Polaris and Fugaku).
+    pub profiles: Vec<MachineProfile>,
+    /// Output directory for `.txt`/`.csv` artifacts.
+    pub out_dir: PathBuf,
+    /// Iterations per measured point.
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            full: false,
+            profiles: vec![MachineProfile::polaris(), MachineProfile::fugaku()],
+            out_dir: PathBuf::from("results"),
+            iters: 3,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl FigOpts {
+    /// Quick single-profile options for `cargo bench`.
+    pub fn bench() -> FigOpts {
+        FigOpts {
+            profiles: vec![MachineProfile::fugaku()],
+            iters: 2,
+            ..FigOpts::default()
+        }
+    }
+
+    /// Process counts for scaling sweeps.
+    pub fn ps(&self) -> Vec<usize> {
+        if self.full {
+            vec![512, 2048, 8192, 16384]
+        } else {
+            vec![64, 128, 256]
+        }
+    }
+
+    /// Ranks per node (paper: 32 on both machines).
+    pub fn q(&self) -> usize {
+        if self.full {
+            32
+        } else {
+            8
+        }
+    }
+
+    /// Max block sizes S (bytes).
+    pub fn ss(&self) -> Vec<u64> {
+        if self.full {
+            vec![16, 512, 2048, 16384]
+        } else {
+            vec![16, 512, 2048, 16384]
+        }
+    }
+
+    /// Base run config for a (profile, P, S) point. Full (paper-scale)
+    /// mode runs entirely on the validated analytic replay (recorded per
+    /// row in the `fidelity` column) so the P <= 16,384 grids finish in
+    /// minutes on one core; the quick grids (and the dedicated
+    /// `analytic_vs_engine` test suite) provide the exact-engine
+    /// cross-checks.
+    pub fn cfg(&self, profile: &MachineProfile, p: usize, s: u64) -> RunConfig {
+        let (lim_linear, lim_log) = if self.full { (0, 0) } else { (512, 2048) };
+        RunConfig {
+            p,
+            q: self.q().min(p),
+            profile: profile.clone(),
+            dist: Dist::Uniform { max: s },
+            seed: self.seed,
+            iters: self.iters,
+            engine_limit_linear: lim_linear,
+            engine_limit_log: lim_log,
+            ..RunConfig::default()
+        }
+    }
+
+    /// Write and return tables.
+    pub fn finish(&self, stem: &str, tables: Vec<Table>) -> crate::Result<Vec<Table>> {
+        for (i, t) in tables.iter().enumerate() {
+            let name = if tables.len() == 1 {
+                stem.to_string()
+            } else {
+                format!("{stem}_{i}")
+            };
+            t.write_files(&self.out_dir, &name)?;
+        }
+        Ok(tables)
+    }
+}
+
+/// Run a figure by name ("fig7" .. "fig16").
+pub fn run_figure(name: &str, opts: &FigOpts) -> crate::Result<Vec<Table>> {
+    match name {
+        "fig7" => fig07::run(opts),
+        "fig8" => fig08::run(opts),
+        "fig9" => fig09::run(opts),
+        "fig10" => fig10::run(opts),
+        "fig11" => fig11::run(opts),
+        "fig12" => fig12::run(opts),
+        "fig13" => fig13::run(opts),
+        "fig14" => fig14::run(opts),
+        "fig15" => fig15::run(opts),
+        "fig16" => fig16::run(opts),
+        _ => Err(crate::TunaError::config(format!(
+            "unknown figure `{name}` (fig7..fig16)"
+        ))),
+    }
+}
+
+pub const ALL_FIGURES: [&str; 10] = [
+    "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_differ_between_quick_and_full() {
+        let quick = FigOpts::default();
+        let full = FigOpts {
+            full: true,
+            ..FigOpts::default()
+        };
+        assert!(quick.ps().iter().max() < full.ps().iter().max());
+        assert_eq!(full.q(), 32);
+        assert!(quick.ps().iter().all(|p| p % quick.q() == 0));
+        assert!(full.ps().iter().all(|p| p % full.q() == 0));
+    }
+
+    #[test]
+    fn unknown_figure_rejected() {
+        assert!(run_figure("fig99", &FigOpts::default()).is_err());
+    }
+}

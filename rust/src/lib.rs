@@ -1,0 +1,48 @@
+//! # tuna-alltoall
+//!
+//! A full reproduction of **"Configurable Non-uniform All-to-all
+//! Algorithms"** (Fan, Domke, Ba, Kumar, 2024): the tunable-radix
+//! non-uniform all-to-all algorithm **TuNA**, its hierarchical variants
+//! **TuNA_l^g** (staggered and coalesced), the linear baselines the paper
+//! compares against (spread-out, OpenMPI linear, pairwise, scattered), a
+//! hierarchical virtual-time network engine to run them on, the paper's
+//! applications (distributed FFT via PJRT-executed Pallas kernels, graph
+//! transitive closure), and a harness regenerating every evaluation
+//! figure (Fig. 7 - Fig. 16).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use tuna::comm::{Engine, Topology};
+//! use tuna::model::MachineProfile;
+//! use tuna::algos::{self, AlgoKind};
+//! use tuna::workload::{BlockSizes, Dist};
+//!
+//! // 16 ranks, 4 per node, Fugaku-like cost model.
+//! let engine = Engine::new(MachineProfile::fugaku(), Topology::new(16, 4));
+//! let sizes = BlockSizes::generate(16, Dist::Uniform { max: 1024 }, 42);
+//! let report = algos::run_alltoallv(
+//!     &engine,
+//!     &AlgoKind::Tuna { radix: 4 },
+//!     &sizes,
+//!     /*real_payloads=*/ true,
+//! ).unwrap();
+//! assert!(report.validated);
+//! println!("simulated time: {:.3} ms", report.makespan * 1e3);
+//! ```
+
+pub mod algos;
+pub mod apps;
+pub mod comm;
+pub mod coordinator;
+pub mod error;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use error::{Result, TunaError};

@@ -1,0 +1,301 @@
+//! `tuna` — CLI for the TuNA / TuNA_l^g reproduction.
+//!
+//! Subcommands:
+//!   run      one all-to-allv measurement (algo=... plus key=value config)
+//!   figure   regenerate a paper figure (fig7..fig16 | all) [--full]
+//!   tune     autotune TuNA radix / TuNA_l^g params for a workload
+//!   tc       distributed transitive closure on a synthetic graph
+//!   fft      distributed 4-step FFT through the PJRT runtime
+//!   list     list algorithms, profiles and distributions
+//!
+//! Examples:
+//!   tuna run algo=tuna:r=8 p=128 q=16 profile=fugaku dist=uniform:1024
+//!   tuna figure fig8 --full
+//!   tuna tune p=256 q=32 dist=uniform:512
+//!   tuna tc p=8 q=4 algo=tuna-hier-coalesced:r=2,b=1
+//!   tuna fft n1=64 n2=64 p=8 algo=tuna:r=4
+
+use tuna::algos::{self, AlgoKind};
+use tuna::apps;
+use tuna::coordinator::{measure, RunConfig};
+use tuna::harness::{self, FigOpts};
+use tuna::util::stats::fmt_time;
+use tuna::workload::graph::Graph;
+use tuna::{Result, TunaError};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    match cmd {
+        "run" => cmd_run(rest),
+        "figure" => cmd_figure(rest),
+        "tune" => cmd_tune(rest),
+        "tc" => cmd_tc(rest),
+        "fft" => cmd_fft(rest),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(TunaError::config(format!(
+            "unknown command `{other}` (see `tuna help`)"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+tuna — Configurable Non-uniform All-to-all Algorithms (TuNA / TuNA_l^g)
+
+USAGE:
+  tuna run algo=<spec> [key=value ...]     measure one algorithm
+  tuna figure <fig7..fig16|all> [--full]   regenerate paper figures
+  tuna tune [key=value ...]                autotune radix / block_count
+  tuna tc [n=220] [algo=<spec>] [key=value ...]
+  tuna fft [n1=64] [n2=64] [algo=<spec>] [key=value ...]
+  tuna list                                list algorithms / profiles / dists
+
+CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
+  (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2), seed, iters,
+  real (true|false), limit-linear, limit-log
+ALGO SPECS: spread-out | ompi-linear | pairwise | scattered:b=N | vendor |
+  bruck2 | tuna:r=N | tuna-hier-coalesced:r=N,b=M | tuna-hier-staggered:r=N,b=M
+";
+
+/// Split `algo=` / figure-local keys from RunConfig keys.
+fn split_args(args: &[String], keys: &[&str]) -> (Vec<(String, String)>, Vec<String>) {
+    let mut special = Vec::new();
+    let mut cfg = Vec::new();
+    for a in args {
+        match a.split_once('=') {
+            Some((k, v)) if keys.contains(&k) => special.push((k.to_string(), v.to_string())),
+            _ => cfg.push(a.clone()),
+        }
+    }
+    (special, cfg)
+}
+
+fn get<'a>(special: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    special.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn parse_algo(spec: Option<&str>, default: AlgoKind) -> Result<AlgoKind> {
+    match spec {
+        None => Ok(default),
+        Some(s) => {
+            AlgoKind::parse(s).ok_or_else(|| TunaError::config(format!("bad algo spec `{s}`")))
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let (special, cfg_args) = split_args(args, &["algo"]);
+    let kind = parse_algo(get(&special, "algo"), AlgoKind::Tuna { radix: 2 })?;
+    let cfg = RunConfig::parse_args(&cfg_args)?;
+    let m = measure(&cfg, &kind)?;
+    println!(
+        "{} on {} P={} Q={} dist={:?}",
+        kind.name(),
+        cfg.profile.name,
+        cfg.p,
+        cfg.q,
+        cfg.dist
+    );
+    println!(
+        "  median {}   (min {}, max {}, stddev {}, n={}, fidelity={})",
+        fmt_time(m.summary.median),
+        fmt_time(m.summary.min),
+        fmt_time(m.summary.max),
+        fmt_time(m.summary.stddev),
+        m.summary.n,
+        m.fidelity.name()
+    );
+    for ph in tuna::comm::PHASES {
+        let t = m.phases.get(ph);
+        if t > 0.0 {
+            println!("  {:<12} {}", ph.name(), fmt_time(t));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    let name = args
+        .first()
+        .ok_or_else(|| TunaError::config("usage: tuna figure <fig7..fig16|all> [--full]"))?;
+    let full = args.iter().any(|a| a == "--full");
+    let opts = FigOpts {
+        full,
+        iters: if full { 5 } else { 3 },
+        ..FigOpts::default()
+    };
+    let names: Vec<&str> = if name == "all" {
+        harness::ALL_FIGURES.to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        eprintln!("[tuna] generating {n} (full={full}) ...");
+        let t0 = std::time::Instant::now();
+        for table in harness::run_figure(n, &opts)? {
+            println!("{}", table.render());
+        }
+        eprintln!(
+            "[tuna] {n} done in {:?}; artifacts in {:?}",
+            t0.elapsed(),
+            opts.out_dir
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let cfg = RunConfig::parse_args(args)?;
+    let engine = tuna::comm::Engine::new(
+        cfg.profile.clone(),
+        tuna::comm::Topology::new(cfg.p, cfg.q),
+    );
+    let sizes = tuna::workload::BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
+    println!(
+        "autotuning on {} P={} Q={} dist={:?}",
+        cfg.profile.name, cfg.p, cfg.q, cfg.dist
+    );
+
+    let tuna_res = algos::tuning::autotune_tuna(&engine, &sizes)?;
+    println!(
+        "  TuNA: best {} at {}",
+        tuna_res.best.name(),
+        fmt_time(tuna_res.best_time)
+    );
+    let heur = algos::tuning::heuristic_radix(cfg.p, sizes.mean_size());
+    println!(
+        "  heuristic suggests r={heur} (mean block {:.0} B)",
+        sizes.mean_size()
+    );
+
+    if cfg.q >= 2 && cfg.p / cfg.q >= 2 {
+        for coalesced in [true, false] {
+            let res = algos::tuning::autotune_hier(&engine, &sizes, coalesced)?;
+            println!(
+                "  TuNA_l^g {}: best {} at {}",
+                if coalesced { "coalesced" } else { "staggered" },
+                res.best.name(),
+                fmt_time(res.best_time)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_tc(args: &[String]) -> Result<()> {
+    let (special, cfg_args) = split_args(args, &["algo", "n", "m"]);
+    let kind = parse_algo(get(&special, "algo"), AlgoKind::Tuna { radix: 2 })?;
+    let n: usize = get(&special, "n")
+        .unwrap_or("220")
+        .parse()
+        .map_err(|_| TunaError::config("bad n"))?;
+    let m: usize = get(&special, "m")
+        .unwrap_or("3")
+        .parse()
+        .map_err(|_| TunaError::config("bad m"))?;
+    let mut cfg = RunConfig::parse_args(&cfg_args)?;
+    if !cfg_args.iter().any(|a| a.starts_with("p=")) {
+        cfg.p = 8;
+        cfg.q = 4;
+    }
+    let graph = Graph::scale_free(n, m, cfg.seed);
+    let engine = tuna::comm::Engine::new(
+        cfg.profile.clone(),
+        tuna::comm::Topology::new(cfg.p, cfg.q),
+    );
+    println!(
+        "transitive closure: {} vertices, {} edges, P={} Q={} algo={}",
+        graph.n,
+        graph.edges.len(),
+        cfg.p,
+        cfg.q,
+        kind.name()
+    );
+    let rep = apps::tc::run_tc(&engine, &kind, &graph, true)?;
+    println!(
+        "  |TC| = {} in {} iterations (validated against sequential oracle)",
+        rep.paths, rep.iterations
+    );
+    println!(
+        "  simulated: total {}  comm {}  | host wallclock {}",
+        fmt_time(rep.makespan),
+        fmt_time(rep.comm_time),
+        fmt_time(rep.wall)
+    );
+    Ok(())
+}
+
+fn cmd_fft(args: &[String]) -> Result<()> {
+    let (special, cfg_args) = split_args(args, &["algo", "n1", "n2"]);
+    let kind = parse_algo(get(&special, "algo"), AlgoKind::Tuna { radix: 2 })?;
+    let n1: usize = get(&special, "n1")
+        .unwrap_or("64")
+        .parse()
+        .map_err(|_| TunaError::config("bad n1"))?;
+    let n2: usize = get(&special, "n2")
+        .unwrap_or("64")
+        .parse()
+        .map_err(|_| TunaError::config("bad n2"))?;
+    let mut cfg = RunConfig::parse_args(&cfg_args)?;
+    if !cfg_args.iter().any(|a| a.starts_with("p=")) {
+        cfg.p = 8;
+        cfg.q = 4;
+    }
+    let rep = apps::fft::run_distributed_fft(
+        &cfg.profile,
+        cfg.p,
+        cfg.q,
+        n1,
+        n2,
+        &kind,
+        apps::fft::FftBackend::auto(),
+    )?;
+    println!(
+        "distributed FFT N={n1}x{n2} P={} algo={}: max err {:.3e} (validated)",
+        cfg.p,
+        kind.name(),
+        rep.max_err
+    );
+    println!(
+        "  simulated total {}  comm {}  compute {}  | host wallclock {}",
+        fmt_time(rep.makespan),
+        fmt_time(rep.comm_time),
+        fmt_time(rep.compute_time),
+        fmt_time(rep.wall)
+    );
+    println!("  backend: {}", rep.backend);
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("algorithms:");
+    for a in [
+        "spread-out",
+        "ompi-linear",
+        "pairwise",
+        "scattered:b=N",
+        "vendor",
+        "bruck2",
+        "tuna:r=N",
+        "tuna-hier-coalesced:r=N,b=M",
+        "tuna-hier-staggered:r=N,b=M",
+    ] {
+        println!("  {a}");
+    }
+    println!("profiles: polaris, fugaku, test-flat");
+    println!("distributions: uniform:S, normal, powerlaw, const:S, fft-n1, fft-n2");
+    println!("figures: {}", harness::ALL_FIGURES.join(", "));
+    Ok(())
+}

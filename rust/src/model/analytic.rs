@@ -1,0 +1,358 @@
+//! Closed-form (single-rank replay) cost estimates.
+//!
+//! The threaded engine is exact but runs one OS thread per rank — fine up
+//! to a few thousand ranks on this host, not for the paper's P = 16,384
+//! sweeps (and linear algorithms are O(P²) messages). The estimator
+//! replays *one representative rank* (rank 0) against the same
+//! [`Clock`]/[`MachineProfile`] cost primitives the engine uses, mirroring
+//! inbound traffic from the rank's own outbound schedule (valid for the
+//! statistically symmetric workloads of the evaluation; skewed
+//! distributions are run on the engine instead). Validated against the
+//! engine in `tests/analytic_vs_engine.rs` — see DESIGN.md §6 (4).
+
+use crate::algos::{radix, AlgoKind, VENDOR_BLOCK_COUNT};
+use crate::comm::clock::Clock;
+use crate::comm::{Phase, PhaseBreakdown, Topology};
+use crate::model::{Link, MachineProfile};
+
+/// Analytic estimate: simulated seconds plus a phase breakdown.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    pub makespan: f64,
+    pub phases: PhaseBreakdown,
+}
+
+/// Single-rank replay estimator.
+pub struct Estimator<'a> {
+    pub profile: &'a MachineProfile,
+    pub topo: Topology,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(profile: &'a MachineProfile, topo: Topology) -> Self {
+        Estimator { profile, topo }
+    }
+
+    /// Estimate the makespan of `kind` on a workload with mean block size
+    /// `mean_block` bytes (per source-destination pair).
+    pub fn estimate(&self, kind: &AlgoKind, mean_block: f64) -> Estimate {
+        match *kind {
+            AlgoKind::SpreadOut => self.linear(mean_block, usize::MAX, false),
+            AlgoKind::OmpiLinear => self.linear(mean_block, usize::MAX, true),
+            AlgoKind::Scattered { block_count } => self.linear(mean_block, block_count, false),
+            AlgoKind::Vendor => self.linear(mean_block, VENDOR_BLOCK_COUNT, false),
+            AlgoKind::Pairwise => self.pairwise(mean_block),
+            AlgoKind::Bruck2 => self.tuna(mean_block, 2),
+            AlgoKind::Tuna { radix } => self.tuna(mean_block, radix),
+            AlgoKind::TunaHierCoalesced { radix, block_count } => {
+                self.hier(mean_block, radix, block_count, true)
+            }
+            AlgoKind::TunaHierStaggered { radix, block_count } => {
+                self.hier(mean_block, radix, block_count, false)
+            }
+        }
+    }
+
+    fn link_to(&self, dst: usize) -> Link {
+        self.topo.link(0, dst % self.topo.p())
+    }
+
+    /// Cost of the recursive-doubling allreduce in the prepare phase.
+    fn allreduce_cost(&self, clock: &mut Clock) {
+        let p = self.topo.p();
+        if p == 1 {
+            return;
+        }
+        let rounds = (p as f64).log2().ceil() as usize;
+        for k in 0..rounds {
+            let partner = 1usize << k;
+            let link = self.link_to(partner % p);
+            let t = clock.post_send(self.profile, link, 8, p);
+            let done = clock.drain_receives(self.profile, &[(t.arrive, 8, link)]);
+            clock.finish_wait(done[0].max(t.complete));
+        }
+    }
+
+    /// Linear family: P−1 destinations in round-robin order, batched by
+    /// `block_count` (usize::MAX = single burst). `incast` mirrors the
+    /// OpenMPI ascending-order pathology: all inbound messages of a batch
+    /// arrive together at the earliest arrival instead of staggered.
+    fn linear(&self, s: f64, block_count: usize, incast: bool) -> Estimate {
+        let p = self.topo.p();
+        let bytes = s.round() as u64;
+        let mut clock = Clock::new();
+        let mut phases = PhaseBreakdown::default();
+        let mut sent = 0usize;
+        while sent < p - 1 {
+            let batch = block_count.min(p - 1 - sent);
+            let mut mirror: Vec<(f64, u64, Link)> = Vec::with_capacity(batch);
+            let mut send_done = 0.0f64;
+            for i in 0..batch {
+                let dst = 1 + sent + i; // offsets 1..P-1 round-robin
+                let link = self.link_to(dst);
+                let t = clock.post_send(self.profile, link, bytes, p);
+                send_done = send_done.max(t.complete);
+                mirror.push((t.arrive, bytes, link));
+            }
+            if incast {
+                let first = mirror.iter().map(|m| m.0).fold(f64::INFINITY, f64::min);
+                for m in mirror.iter_mut() {
+                    m.0 = first;
+                }
+            }
+            let completions = clock.drain_receives(self.profile, &mirror);
+            let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+            clock.finish_wait(last);
+            sent += batch;
+        }
+        phases.add(Phase::Data, clock.now);
+        Estimate {
+            makespan: clock.now,
+            phases,
+        }
+    }
+
+    /// Pairwise: P−1 synchronized sendrecv rounds.
+    fn pairwise(&self, s: f64) -> Estimate {
+        let p = self.topo.p();
+        let bytes = s.round() as u64;
+        let mut clock = Clock::new();
+        let mut phases = PhaseBreakdown::default();
+        for i in 1..p {
+            let link = self.link_to(i);
+            let t = clock.post_send(self.profile, link, bytes, p);
+            let done = clock.drain_receives(self.profile, &[(t.arrive, bytes, link)]);
+            clock.finish_wait(done[0].max(t.complete));
+        }
+        phases.add(Phase::Data, clock.now);
+        Estimate {
+            makespan: clock.now,
+            phases,
+        }
+    }
+
+    /// TuNA replay over a contiguous group of `q` ranks with `arity`
+    /// sub-blocks of `s` bytes per slot.
+    fn tuna_core_replay(
+        &self,
+        clock: &mut Clock,
+        phases: &mut PhaseBreakdown,
+        q: usize,
+        r: usize,
+        arity: usize,
+        s: f64,
+        local_only: bool,
+    ) {
+        let p = self.topo.p();
+        for rd in radix::rounds(r, q) {
+            let slots = radix::offsets_with_digit(rd.x, rd.z, r, q);
+            let link = if local_only {
+                Link::Local
+            } else {
+                self.link_to(rd.step)
+            };
+            let meta_bytes = 8 * (slots * arity) as u64;
+            let data_bytes = ((slots * arity) as f64 * s).round() as u64;
+
+            // Metadata exchange.
+            let t0 = clock.now;
+            let tm = clock.post_send(self.profile, link, meta_bytes, p);
+            let dm = clock.drain_receives(self.profile, &[(tm.arrive, meta_bytes, link)]);
+            clock.finish_wait(dm[0].max(tm.complete));
+            phases.add(Phase::Metadata, clock.now - t0);
+
+            // Pack, data exchange, unpack.
+            let t1 = clock.now;
+            clock.charge_copy(self.profile, data_bytes);
+            phases.add(Phase::Replace, clock.now - t1);
+            let t2 = clock.now;
+            let td = clock.post_send(self.profile, link, data_bytes, p);
+            let dd = clock.drain_receives(self.profile, &[(td.arrive, data_bytes, link)]);
+            clock.finish_wait(dd[0].max(td.complete));
+            phases.add(Phase::Data, clock.now - t2);
+            let t3 = clock.now;
+            clock.charge_copy(self.profile, data_bytes);
+            phases.add(Phase::Replace, clock.now - t3);
+        }
+    }
+
+    /// Flat TuNA (Algorithm 1).
+    fn tuna(&self, s: f64, r: usize) -> Estimate {
+        let p = self.topo.p();
+        let r = r.clamp(2, p.max(2));
+        let mut clock = Clock::new();
+        let mut phases = PhaseBreakdown::default();
+
+        let t0 = clock.now;
+        self.allreduce_cost(&mut clock);
+        clock.charge_copy(self.profile, 4 * p as u64);
+        phases.add(Phase::Prepare, clock.now - t0);
+
+        self.tuna_core_replay(&mut clock, &mut phases, p, r, 1, s, false);
+
+        let t1 = clock.now;
+        clock.charge_copy(self.profile, s.round() as u64); // self block
+        phases.add(Phase::Replace, clock.now - t1);
+        Estimate {
+            makespan: clock.now,
+            phases,
+        }
+    }
+
+    /// Hierarchical TuNA_l^g (Algorithms 2 and 3).
+    fn hier(&self, s: f64, r: usize, block_count: usize, coalesced: bool) -> Estimate {
+        let p = self.topo.p();
+        let q = self.topo.q();
+        let n = self.topo.nodes();
+        let mut clock = Clock::new();
+        let mut phases = PhaseBreakdown::default();
+
+        let t0 = clock.now;
+        self.allreduce_cost(&mut clock);
+        clock.charge_copy(self.profile, 4 * p as u64);
+        phases.add(Phase::Prepare, clock.now - t0);
+
+        // Intra-node: TuNA over Q ranks, slots carry N sub-blocks.
+        self.tuna_core_replay(&mut clock, &mut phases, q, r.clamp(2, q.max(2)), n, s, true);
+
+        // Own-node bucket delivery.
+        let t1 = clock.now;
+        clock.charge_copy(self.profile, (q as f64 * s).round() as u64);
+        phases.add(Phase::Replace, clock.now - t1);
+
+        if n == 1 {
+            return Estimate {
+                makespan: clock.now,
+                phases,
+            };
+        }
+
+        if coalesced {
+            let t2 = clock.now;
+            clock.charge_copy(self.profile, ((n - 1) as f64 * q as f64 * s).round() as u64);
+            phases.add(Phase::Rearrange, clock.now - t2);
+        }
+
+        let t3 = clock.now;
+        let msg_bytes = if coalesced {
+            (q as f64 * s).round() as u64
+        } else {
+            s.round() as u64
+        };
+        let total_msgs = if coalesced { n - 1 } else { (n - 1) * q };
+        let mut sent = 0usize;
+        while sent < total_msgs {
+            let batch = block_count.min(total_msgs - sent);
+            let mut mirror = Vec::with_capacity(batch);
+            let mut send_done = 0.0f64;
+            for _ in 0..batch {
+                let t = clock.post_send(self.profile, Link::Global, msg_bytes, p);
+                send_done = send_done.max(t.complete);
+                mirror.push((t.arrive, msg_bytes, Link::Global));
+            }
+            let completions = clock.drain_receives(self.profile, &mirror);
+            let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+            clock.finish_wait(last);
+            sent += batch;
+        }
+        phases.add(Phase::InterNode, clock.now - t3);
+
+        Estimate {
+            makespan: clock.now,
+            phases,
+        }
+    }
+}
+
+/// Convenience wrapper.
+pub fn estimate(
+    profile: &MachineProfile,
+    topo: Topology,
+    kind: &AlgoKind,
+    mean_block: f64,
+) -> Estimate {
+    Estimator::new(profile, topo).estimate(kind, mean_block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(kind: AlgoKind, p: usize, q: usize, s: f64) -> f64 {
+        estimate(&MachineProfile::fugaku(), Topology::new(p, q), &kind, s).makespan
+    }
+
+    #[test]
+    fn estimates_positive_and_finite() {
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::OmpiLinear,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 8 },
+            AlgoKind::Vendor,
+            AlgoKind::Bruck2,
+            AlgoKind::Tuna { radix: 4 },
+            AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 },
+            AlgoKind::TunaHierStaggered { radix: 4, block_count: 8 },
+        ] {
+            let t = est(kind, 64, 8, 512.0);
+            assert!(t.is_finite() && t > 0.0, "{kind:?}: {t}");
+        }
+    }
+
+    #[test]
+    fn tuna_small_messages_beat_linear() {
+        // Latency regime: log rounds must beat P-1 messages.
+        let t_tuna = est(AlgoKind::Tuna { radix: 2 }, 4096, 32, 8.0);
+        let t_lin = est(AlgoKind::SpreadOut, 4096, 32, 8.0);
+        assert!(
+            t_tuna < t_lin / 5.0,
+            "tuna {t_tuna} should be well under spread-out {t_lin} at S=16"
+        );
+    }
+
+    #[test]
+    fn large_messages_favor_high_radix() {
+        // Bandwidth regime: duplicate forwarding hurts radix 2.
+        let lo = est(AlgoKind::Tuna { radix: 2 }, 1024, 32, 16384.0);
+        let hi = est(AlgoKind::Tuna { radix: 1024 }, 1024, 32, 16384.0);
+        assert!(hi < lo, "radix P ({hi}) must beat radix 2 ({lo}) at 16 KiB");
+    }
+
+    #[test]
+    fn estimator_is_fast_at_paper_scale() {
+        // The whole point: a 16,384-rank estimate in well under a second.
+        let t0 = std::time::Instant::now();
+        let v = est(AlgoKind::Tuna { radix: 128 }, 16384, 32, 512.0);
+        assert!(v > 0.0);
+        assert!(
+            t0.elapsed().as_millis() < 500,
+            "estimate took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn incast_penalizes_ompi_linear() {
+        let asc = est(AlgoKind::OmpiLinear, 2048, 32, 4096.0);
+        let rr = est(AlgoKind::SpreadOut, 2048, 32, 4096.0);
+        assert!(asc >= rr, "ascending {asc} must not beat round-robin {rr}");
+    }
+
+    #[test]
+    fn hier_intra_cheaper_than_flat_at_small_s() {
+        // Hierarchical decoupling pays off when most traffic can stay
+        // on-node and inter-node messages coalesce.
+        let flat = est(AlgoKind::Tuna { radix: 2 }, 2048, 32, 64.0);
+        let hier = est(
+            AlgoKind::TunaHierCoalesced { radix: 2, block_count: 8 },
+            2048,
+            32,
+            64.0,
+        );
+        assert!(
+            hier < flat,
+            "hier coalesced {hier} should beat flat tuna {flat} at small S"
+        );
+    }
+}

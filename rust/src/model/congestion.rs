@@ -1,0 +1,161 @@
+//! Congestion terms of the cost model.
+//!
+//! Pure endpoint LogGP cannot explain two effects the paper's evaluation
+//! hinges on:
+//!
+//! 1. **Burst congestion** (`block_count` in the scattered algorithm and in
+//!    the inter-node phase of TuNA_l^g): posting a large batch of
+//!    simultaneous inter-node messages degrades effective bandwidth because
+//!    the flows contend inside the network. We model the tx-side effective
+//!    per-byte cost as
+//!    `beta * f_tx(m) = beta * (1 + gamma_tx * max(0, m - knee) * scale(P))`
+//!    where `m` is the number of sends outstanding since the last wait and
+//!    `scale(P) = P / p_ref` captures that contention worsens with the
+//!    total number of concurrent flows in the network. Together with the
+//!    per-batch latency term this yields the U-shaped block_count curves of
+//!    Fig. 10/12 and the "ideal block_count shrinks with S and P" trend.
+//!
+//! 2. **Incast** (OpenMPI's ascending linear algorithm): when many senders
+//!    target one receiver simultaneously the rx queue builds up and drain
+//!    bandwidth degrades: `beta * f_rx(q) = beta * (1 + gamma_rx * max(0,
+//!    q - rx_knee))` with `q` the instantaneous queue depth at the rx port.
+//!
+//! Both factors apply to inter-node links only; intra-node transfers go
+//! through shared memory where the fabric contention mechanism does not
+//! exist (NUMA contention is folded into `beta_l`).
+
+/// Tunable congestion parameters; see module docs for semantics.
+#[derive(Clone, Debug)]
+pub struct CongestionParams {
+    /// Bandwidth-degradation slope per outstanding send beyond the knee.
+    pub gamma_tx: f64,
+    /// Outstanding-send count below which no tx congestion occurs.
+    pub tx_knee: u32,
+    /// Reference process count for the network-load scale factor.
+    pub p_ref: u32,
+    /// Cap on the tx factor (fabrics do not degrade unboundedly).
+    pub tx_cap: f64,
+    /// Incast degradation slope per queued message beyond the knee.
+    pub gamma_rx: f64,
+    /// Queue depth below which the rx port drains at full speed.
+    pub rx_knee: u32,
+    /// Cap on the rx factor.
+    pub rx_cap: f64,
+}
+
+impl CongestionParams {
+    /// No congestion at all — for hand-computable unit tests.
+    pub fn off() -> CongestionParams {
+        CongestionParams {
+            gamma_tx: 0.0,
+            tx_knee: u32::MAX,
+            p_ref: 1024,
+            tx_cap: 1.0,
+            gamma_rx: 0.0,
+            rx_knee: u32::MAX,
+            rx_cap: 1.0,
+        }
+    }
+
+    /// Dragonfly (Polaris): adaptive routing absorbs moderate bursts; the
+    /// knee is relatively high and slopes gentle.
+    pub fn polaris() -> CongestionParams {
+        CongestionParams {
+            gamma_tx: 0.0025,
+            tx_knee: 16,
+            p_ref: 1024,
+            tx_cap: 24.0,
+            gamma_rx: 0.06,
+            rx_knee: 8,
+            rx_cap: 12.0,
+        }
+    }
+
+    /// 6D-torus Tofu-D (Fugaku): static routing, lower path diversity —
+    /// bursts hurt earlier and harder.
+    pub fn fugaku() -> CongestionParams {
+        CongestionParams {
+            gamma_tx: 0.006,
+            tx_knee: 8,
+            p_ref: 1024,
+            tx_cap: 48.0,
+            gamma_rx: 0.10,
+            rx_knee: 6,
+            rx_cap: 16.0,
+        }
+    }
+
+    /// Effective tx bandwidth-degradation factor for a message posted while
+    /// `outstanding` sends are already in flight from this rank, in a job
+    /// of `p` total ranks.
+    #[inline]
+    pub fn tx_factor(&self, outstanding: u32, p: u32) -> f64 {
+        let excess = outstanding.saturating_sub(self.tx_knee) as f64;
+        if excess == 0.0 || self.gamma_tx == 0.0 {
+            return 1.0;
+        }
+        let scale = (p as f64 / self.p_ref as f64).max(0.125);
+        (1.0 + self.gamma_tx * excess * scale).min(self.tx_cap)
+    }
+
+    /// Effective rx drain-degradation factor at queue depth `depth`.
+    #[inline]
+    pub fn rx_factor(&self, depth: u32) -> f64 {
+        let excess = depth.saturating_sub(self.rx_knee) as f64;
+        if excess == 0.0 || self.gamma_rx == 0.0 {
+            return 1.0;
+        }
+        (1.0 + self.gamma_rx * excess).min(self.rx_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_is_identity() {
+        let c = CongestionParams::off();
+        assert_eq!(c.tx_factor(10_000, 16384), 1.0);
+        assert_eq!(c.rx_factor(10_000), 1.0);
+    }
+
+    #[test]
+    fn tx_factor_monotone_in_outstanding() {
+        let c = CongestionParams::fugaku();
+        let mut last = 0.0;
+        for m in [0u32, 8, 16, 64, 256, 1024] {
+            let f = c.tx_factor(m, 4096);
+            assert!(f >= last, "tx_factor must be monotone");
+            last = f;
+        }
+        assert!(c.tx_factor(0, 4096) == 1.0);
+    }
+
+    #[test]
+    fn tx_factor_scales_with_p() {
+        let c = CongestionParams::fugaku();
+        assert!(c.tx_factor(64, 16384) > c.tx_factor(64, 1024));
+    }
+
+    #[test]
+    fn tx_factor_capped() {
+        let c = CongestionParams::fugaku();
+        assert!(c.tx_factor(u32::MAX, u32::MAX) <= c.tx_cap);
+    }
+
+    #[test]
+    fn rx_factor_knee_and_cap() {
+        let c = CongestionParams::polaris();
+        assert_eq!(c.rx_factor(c.rx_knee), 1.0);
+        assert!(c.rx_factor(c.rx_knee + 10) > 1.0);
+        assert!(c.rx_factor(100_000) <= c.rx_cap);
+    }
+
+    #[test]
+    fn fugaku_congests_earlier_than_polaris() {
+        let f = CongestionParams::fugaku();
+        let p = CongestionParams::polaris();
+        assert!(f.tx_factor(64, 4096) > p.tx_factor(64, 4096));
+    }
+}

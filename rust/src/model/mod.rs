@@ -1,0 +1,206 @@
+//! Machine performance model.
+//!
+//! The paper evaluates on Polaris (Slingshot Dragonfly, Cray MPICH) and
+//! Fugaku (Tofu-D, Fujitsu OpenMPI). We have neither, so the engine runs
+//! every rank with a *virtual clock* driven by a hierarchical LogGP-style
+//! cost model with an explicit congestion term (see DESIGN.md §2). The same
+//! parameters feed the closed-form estimator in [`analytic`].
+//!
+//! Model per message of `b` bytes on link class L ∈ {local, global}:
+//!
+//! * sender: `o_send(L)` software overhead, then the tx port serializes the
+//!   payload at `b * beta(L) * f_tx(m)` where `m` is the number of sends
+//!   outstanding since the last wait (the *burst size* that `block_count`
+//!   tunes) and `f_tx` is the congestion factor from [`congestion`];
+//! * wire: `alpha(L)` latency;
+//! * receiver: the rx port drains matched messages in virtual-arrival order
+//!   at `b * beta(L) * f_rx(q)` where `q` is the instantaneous rx queue
+//!   depth (incast penalty), plus `o_recv(L)` per message.
+//!
+//! Local memory movement (packing, buffer rearrangement) costs
+//! `bytes / mem_bw` on the rank's own clock.
+
+pub mod analytic;
+pub mod congestion;
+
+/// Link class: intra-node shared memory vs inter-node network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Link {
+    Local,
+    Global,
+}
+
+/// Parameters of the hierarchical LogGP + congestion model. Times in
+/// seconds, bandwidths in bytes/second.
+#[derive(Clone, Debug)]
+pub struct MachineProfile {
+    pub name: &'static str,
+    /// Wire latency, intra-node (shared-memory hop).
+    pub alpha_l: f64,
+    /// Wire latency, inter-node.
+    pub alpha_g: f64,
+    /// Per-byte time intra-node (1 / shared-memory bandwidth per rank).
+    pub beta_l: f64,
+    /// Per-byte time inter-node (1 / NIC bandwidth share per rank).
+    pub beta_g: f64,
+    /// Per-message software overhead on the send side.
+    pub o_send_l: f64,
+    pub o_send_g: f64,
+    /// Per-message software overhead on the receive side.
+    pub o_recv_l: f64,
+    pub o_recv_g: f64,
+    /// Plain memcpy bandwidth for local packing / rearrangement.
+    pub mem_bw: f64,
+    /// Congestion parameters (see [`congestion`]).
+    pub congestion: congestion::CongestionParams,
+}
+
+impl MachineProfile {
+    #[inline]
+    pub fn alpha(&self, link: Link) -> f64 {
+        match link {
+            Link::Local => self.alpha_l,
+            Link::Global => self.alpha_g,
+        }
+    }
+
+    #[inline]
+    pub fn beta(&self, link: Link) -> f64 {
+        match link {
+            Link::Local => self.beta_l,
+            Link::Global => self.beta_g,
+        }
+    }
+
+    #[inline]
+    pub fn o_send(&self, link: Link) -> f64 {
+        match link {
+            Link::Local => self.o_send_l,
+            Link::Global => self.o_send_g,
+        }
+    }
+
+    #[inline]
+    pub fn o_recv(&self, link: Link) -> f64 {
+        match link {
+            Link::Local => self.o_recv_l,
+            Link::Global => self.o_recv_g,
+        }
+    }
+
+    /// Cost of a local memory copy of `bytes`.
+    #[inline]
+    pub fn copy_cost(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.mem_bw
+    }
+
+    /// Polaris-like profile: Slingshot network — low latency, high
+    /// bandwidth, moderate per-message MPI overhead; fast on-node xeon-class
+    /// shared memory.
+    pub fn polaris() -> MachineProfile {
+        MachineProfile {
+            name: "polaris",
+            alpha_l: 4.0e-7,
+            alpha_g: 2.2e-6,
+            beta_l: 1.0 / 10.0e9,
+            beta_g: 1.0 / 1.5e9,
+            o_send_l: 2.5e-7,
+            o_send_g: 1.1e-6,
+            o_recv_l: 2.5e-7,
+            o_recv_g: 1.1e-6,
+            mem_bw: 8.0e9,
+            congestion: congestion::CongestionParams::polaris(),
+        }
+    }
+
+    /// Fugaku-like profile: Tofu-D — comparable wire latency but markedly
+    /// higher per-message software overhead (the paper's MPI_Alltoallv
+    /// baseline is ~8x slower on Fugaku than Polaris at the same P, S), and
+    /// lower per-rank injection bandwidth (A64FX, 32 ranks sharing TNIs).
+    pub fn fugaku() -> MachineProfile {
+        MachineProfile {
+            name: "fugaku",
+            alpha_l: 6.0e-7,
+            alpha_g: 3.0e-6,
+            beta_l: 1.0 / 6.0e9,
+            beta_g: 1.0 / 0.8e9,
+            o_send_l: 4.0e-7,
+            o_send_g: 4.5e-6,
+            o_recv_l: 4.0e-7,
+            o_recv_g: 4.5e-6,
+            mem_bw: 5.0e9,
+            congestion: congestion::CongestionParams::fugaku(),
+        }
+    }
+
+    /// A deliberately simple profile for unit tests: alpha/beta/overheads
+    /// are round numbers and congestion is off, so expected virtual times
+    /// can be computed by hand.
+    pub fn test_flat() -> MachineProfile {
+        MachineProfile {
+            name: "test-flat",
+            alpha_l: 1e-6,
+            alpha_g: 1e-6,
+            beta_l: 1e-9,
+            beta_g: 1e-9,
+            o_send_l: 1e-7,
+            o_send_g: 1e-7,
+            o_recv_l: 1e-7,
+            o_recv_g: 1e-7,
+            mem_bw: 1e9,
+            congestion: congestion::CongestionParams::off(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<MachineProfile> {
+        match name {
+            "polaris" => Some(Self::polaris()),
+            "fugaku" => Some(Self::fugaku()),
+            "test-flat" => Some(Self::test_flat()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_gap_present() {
+        for p in [MachineProfile::polaris(), MachineProfile::fugaku()] {
+            assert!(p.alpha_g > p.alpha_l, "{}: inter latency must exceed intra", p.name);
+            assert!(p.beta_g > p.beta_l, "{}: inter byte-cost must exceed intra", p.name);
+            assert!(p.o_send_g > p.o_send_l);
+        }
+    }
+
+    #[test]
+    fn fugaku_has_higher_message_overhead_than_polaris() {
+        // This asymmetry drives the paper's larger speedups on Fugaku.
+        assert!(MachineProfile::fugaku().o_send_g > MachineProfile::polaris().o_send_g);
+    }
+
+    #[test]
+    fn accessors_match_fields() {
+        let p = MachineProfile::test_flat();
+        assert_eq!(p.alpha(Link::Local), p.alpha_l);
+        assert_eq!(p.alpha(Link::Global), p.alpha_g);
+        assert_eq!(p.beta(Link::Local), p.beta_l);
+        assert_eq!(p.o_send(Link::Global), p.o_send_g);
+        assert_eq!(p.o_recv(Link::Local), p.o_recv_l);
+    }
+
+    #[test]
+    fn copy_cost_linear() {
+        let p = MachineProfile::test_flat();
+        assert!((p.copy_cost(1_000_000) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(MachineProfile::by_name("polaris").unwrap().name, "polaris");
+        assert_eq!(MachineProfile::by_name("fugaku").unwrap().name, "fugaku");
+        assert!(MachineProfile::by_name("summit").is_none());
+    }
+}

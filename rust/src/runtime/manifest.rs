@@ -1,0 +1,84 @@
+//! Artifact manifest: a deliberately trivial TSV (`name\tpath\tinfo`)
+//! written by `python/compile/aot.py`, so the Rust side needs no JSON
+//! dependency offline.
+
+use std::path::Path;
+
+use crate::error::{Result, TunaError};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Path relative to the artifacts directory.
+    pub path: String,
+    /// Free-form description (shapes, dtypes).
+    pub info: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            TunaError::runtime(format!(
+                "manifest {path:?}: {e} (run `make artifacts` first)"
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, '\t');
+            let name = parts.next().unwrap_or("").to_string();
+            let path = parts.next().unwrap_or("").to_string();
+            let info = parts.next().unwrap_or("").to_string();
+            if name.is_empty() || path.is_empty() {
+                return Err(TunaError::runtime(format!(
+                    "manifest line {}: expected name\\tpath[\\tinfo]",
+                    lineno + 1
+                )));
+            }
+            entries.push(ManifestEntry { name, path, info });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tsv_with_comments() {
+        let m = Manifest::parse(
+            "# artifacts\nstage1_8x64\tstage1_8x64.hlo.txt\tf32[8,64] x6 -> (re, im)\n\nstage2_64x8\tstage2_64x8.hlo.txt\t\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries().len(), 2);
+        assert_eq!(m.get("stage1_8x64").unwrap().path, "stage1_8x64.hlo.txt");
+        assert!(m.get("stage1_8x64").unwrap().info.contains("f32"));
+        assert!(m.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(Manifest::parse("just-a-name\n").is_err());
+    }
+}

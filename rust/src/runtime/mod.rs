@@ -1,0 +1,138 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (emitted by
+//! `python/compile/aot.py`) and execute them from Rust on the request
+//! path. Python never runs at execution time — the interchange format is
+//! HLO *text* (the bundled xla_extension 0.5.1 rejects jax >= 0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, TunaError};
+
+pub use manifest::{Manifest, ManifestEntry};
+
+/// A compiled-executable cache over a PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Open the runtime against an artifacts directory containing
+    /// `manifest.tsv` plus `*.hlo.txt` files.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.tsv"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| TunaError::runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(PjrtRuntime {
+            client,
+            executables: HashMap::new(),
+            artifacts_dir,
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// True if the manifest advertises `name`.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| TunaError::runtime(format!("artifact `{name}` not in manifest")))?;
+        let path = self.artifacts_dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| TunaError::runtime("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| TunaError::runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| TunaError::runtime(format!("compile `{name}`: {e}")))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 tensors `(data, dims)`; returns the
+    /// flattened f32 contents of each tuple element (artifacts are lowered
+    /// with `return_tuple=True`).
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let n: i64 = dims.iter().product();
+            if n as usize != data.len() {
+                return Err(TunaError::runtime(format!(
+                    "artifact `{name}`: input has {} elements but dims {:?}",
+                    data.len(),
+                    dims
+                )));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| TunaError::runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| TunaError::runtime(format!("execute `{name}`: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| TunaError::runtime(format!("fetch result: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| TunaError::runtime(format!("untuple: {e}")))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| TunaError::runtime(format!("to_vec: {e}")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_fails_without_manifest() {
+        match PjrtRuntime::open("/nonexistent-dir") {
+            Ok(_) => panic!("open must fail without a manifest"),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("manifest") || msg.contains("I/O"), "{msg}");
+            }
+        }
+    }
+
+    // Execution against real artifacts is covered by
+    // `tests/runtime_pjrt.rs` (skips gracefully when `make artifacts` has
+    // not run) and the fft_e2e example.
+}

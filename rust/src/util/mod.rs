@@ -1,0 +1,13 @@
+//! Small self-contained utilities: seeded PRNG, statistics, a property-test
+//! harness, and plain-text table rendering.
+//!
+//! The build environment is offline, so we carry our own implementations of
+//! what `rand`, `proptest` and `prettytable` would normally provide.
+
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+
+pub use prng::Pcg64;
+pub use stats::Summary;

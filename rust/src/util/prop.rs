@@ -1,0 +1,93 @@
+//! A tiny property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` runs a predicate over many seeded random cases and reports the
+//! first failing seed so failures are reproducible; `Shrink`-style
+//! minimization is intentionally out of scope — cases are parameterized by
+//! small generated values, so failures are already small.
+
+use super::prng::Pcg64;
+
+/// Run `cases` random trials of `body`. `body` gets a fresh deterministic
+/// RNG per case; a panic or an `Err(msg)` fails the property with the case
+/// index and seed embedded in the panic message.
+pub fn forall<F>(name: &str, cases: usize, mut body: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x9e37_79b9_7f4a_7c15u64 ^ (case as u64).wrapping_mul(0xff51_afd7_ed55_8ccd);
+        let mut rng = Pcg64::new(seed, case as u64);
+        if let Err(msg) = body(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two f64s are close in absolute + relative terms.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let tol = abs + rel * a.abs().max(b.abs());
+    if diff <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} vs {b}: |diff| {diff} > tol {tol}"))
+    }
+}
+
+/// Generate a "interesting" process count: mixes powers of two, primes and
+/// composites, since the algorithms special-case none of them.
+pub fn gen_proc_count(rng: &mut Pcg64, max: usize) -> usize {
+    const INTERESTING: [usize; 12] = [2, 3, 4, 5, 7, 8, 9, 12, 16, 17, 24, 32];
+    let pick = rng.next_below(INTERESTING.len() as u64 + 2) as usize;
+    let p = if pick < INTERESTING.len() {
+        INTERESTING[pick]
+    } else {
+        2 + rng.next_below(max as u64 - 1) as usize
+    };
+    p.min(max).max(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |rng| {
+            let v = rng.next_below(100);
+            if v < 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn forall_reports_failures() {
+        forall("failing", 10, |rng| {
+            if rng.next_below(2) < 2 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0).is_ok());
+        assert!(close(1.0, 1.1, 1e-3, 0.0).is_err());
+        assert!(close(0.0, 1e-12, 0.0, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn proc_counts_in_range() {
+        let mut rng = Pcg64::new(0, 0);
+        for _ in 0..1000 {
+            let p = gen_proc_count(&mut rng, 64);
+            assert!((2..=64).contains(&p));
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Descriptive statistics for experiment reporting: median, quantiles,
+//! standard deviation — the paper reports medians with error bars and
+//! box plots over parameter sweeps.
+
+/// Five-number-ish summary of a sample (plus mean/stddev), used for the
+/// box-plot style figures (Fig. 8, 10, 12).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Panics on an empty sample (an experiment with no
+    /// measurements is a harness bug, not a runtime condition).
+    pub fn of(sample: &[f64]) -> Summary {
+        assert!(!sample.is_empty(), "Summary::of on empty sample");
+        let mut xs: Vec<f64> = sample.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            min: xs[0],
+            q1: quantile_sorted(&xs, 0.25),
+            median: quantile_sorted(&xs, 0.5),
+            q3: quantile_sorted(&xs, 0.75),
+            max: xs[n - 1],
+            mean,
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolation quantile of an already-sorted slice, `q` in [0, 1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Median convenience for unsorted data.
+pub fn median(sample: &[f64]) -> f64 {
+    let mut xs = sample.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    quantile_sorted(&xs, 0.5)
+}
+
+/// Geometric mean — used when aggregating speedups across scenarios.
+pub fn geomean(sample: &[f64]) -> f64 {
+    assert!(!sample.is_empty());
+    let log_sum: f64 = sample
+        .iter()
+        .map(|x| {
+            assert!(*x > 0.0, "geomean requires positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / sample.len() as f64).exp()
+}
+
+/// Format seconds in a human-friendly unit (the tables mix ns..s scales).
+pub fn fmt_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.q3, 4.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_element() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.q1, 7.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(quantile_sorted(&xs, 0.5), 5.0);
+        assert_eq!(quantile_sorted(&xs, 0.25), 2.5);
+    }
+
+    #[test]
+    fn median_unsorted() {
+        assert_eq!(median(&[9.0, 1.0, 5.0]), 5.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn time_formatting_units() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.002), "2.000 ms");
+        assert_eq!(fmt_time(3e-6), "3.000 us");
+        assert_eq!(fmt_time(5e-9), "5.0 ns");
+    }
+
+    #[test]
+    fn byte_formatting_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

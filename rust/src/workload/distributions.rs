@@ -1,0 +1,165 @@
+//! Block-size distributions from the paper's evaluation.
+//!
+//! * `Uniform` — §V-A: sizes uniformly sampled in [0, S] as FP64 vectors
+//!   (multiples of 8 bytes), average S/2.
+//! * `Normal` — §VI-C Fig. 16(a): Gaussian (paper: mean 1000, stddev 240),
+//!   clamped to [0, max].
+//! * `PowerLaw` — §VI-C Fig. 16(b): heavy skew, "rarity of large-sized
+//!   data blocks and sparsity" — most blocks tiny, few large. The paper's
+//!   generator (exponent 0.95) is not specified precisely; we use the
+//!   inverse-transform `size = max * u^skew` which reproduces the plotted
+//!   histogram shape (documented substitution, DESIGN.md §2).
+//! * `Const` — uniform all-to-all (for the Bruck lineage tests).
+//! * `FftN1` / `FftN2` — §VI-A FFT decompositions (see [`super::fft`]).
+
+use crate::util::prng::Pcg64;
+
+/// A block-size distribution. `sample` must be deterministic in
+/// `(rng-state, src, dst, p)` — rows are regenerated on demand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    /// Uniform in [0, max], rounded down to a multiple of 8 (FP64 vectors).
+    Uniform { max: u64 },
+    /// Gaussian clamped to [0, max].
+    Normal { mean: f64, stddev: f64, max: u64 },
+    /// `max * u^skew` — heavy-tailed toward small blocks for skew > 1.
+    PowerLaw { max: u64, skew: f64 },
+    /// Every block the same size (uniform all-to-all).
+    Const { size: u64 },
+    /// FFT worker distribution 𝒩₁ (§VI-A).
+    FftN1,
+    /// FFT near-uniform distribution 𝒩₂ (§VI-A).
+    FftN2,
+}
+
+impl Dist {
+    /// Paper defaults for the normal distribution (Fig. 16a).
+    pub fn normal_default() -> Dist {
+        Dist::Normal {
+            mean: 1000.0,
+            stddev: 240.0,
+            max: 1024,
+        }
+    }
+
+    /// Paper defaults for the power-law distribution (Fig. 16b).
+    pub fn powerlaw_default() -> Dist {
+        Dist::PowerLaw { max: 1024, skew: 4.0 }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64, src: usize, dst: usize, p: usize) -> u64 {
+        match *self {
+            Dist::Uniform { max } => {
+                let units = max / 8;
+                8 * rng.range_inclusive(0, units)
+            }
+            Dist::Normal { mean, stddev, max } => {
+                let v = mean + stddev * rng.next_gaussian();
+                (v.max(0.0) as u64).min(max)
+            }
+            Dist::PowerLaw { max, skew } => {
+                let u = rng.next_f64();
+                (max as f64 * u.powf(skew)) as u64
+            }
+            Dist::Const { size } => {
+                // Burn one sample to keep streams aligned across dists.
+                let _ = rng.next_u64();
+                size
+            }
+            Dist::FftN1 => super::fft::n1_size(src, dst, p, rng),
+            Dist::FftN2 => super::fft::n2_size(src, dst, p, rng),
+        }
+    }
+
+    /// Short name for tables and CSVs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dist::Uniform { .. } => "uniform",
+            Dist::Normal { .. } => "normal",
+            Dist::PowerLaw { .. } => "powerlaw",
+            Dist::Const { .. } => "const",
+            Dist::FftN1 => "fft-n1",
+            Dist::FftN2 => "fft-n2",
+        }
+    }
+
+    /// Parse `"uniform:1024"`, `"normal"`, `"powerlaw"`, `"const:64"`,
+    /// `"fft-n1"`, `"fft-n2"`.
+    pub fn parse(s: &str) -> Option<Dist> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "uniform" => Some(Dist::Uniform {
+                max: arg?.parse().ok()?,
+            }),
+            "normal" => Some(Dist::normal_default()),
+            "powerlaw" => Some(Dist::powerlaw_default()),
+            "const" => Some(Dist::Const {
+                size: arg?.parse().ok()?,
+            }),
+            "fft-n1" => Some(Dist::FftN1),
+            "fft-n2" => Some(Dist::FftN2),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_many(d: Dist, n: usize) -> Vec<u64> {
+        let mut rng = Pcg64::new(1, 1);
+        (0..n).map(|i| d.sample(&mut rng, 0, i % 16, 16)).collect()
+    }
+
+    #[test]
+    fn uniform_bounds_and_alignment() {
+        let xs = sample_many(Dist::Uniform { max: 1024 }, 5000);
+        assert!(xs.iter().all(|&x| x <= 1024 && x % 8 == 0));
+        let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        assert!((mean - 512.0).abs() < 30.0, "mean {mean} should be ~S/2");
+        assert!(xs.iter().any(|&x| x == 0) || xs.iter().any(|&x| x < 64));
+    }
+
+    #[test]
+    fn normal_clamped() {
+        let xs = sample_many(Dist::normal_default(), 5000);
+        assert!(xs.iter().all(|&x| x <= 1024));
+        let mean = xs.iter().sum::<u64>() as f64 / xs.len() as f64;
+        // Mean 1000 clamped at 1024 pulls the observed mean below 1000.
+        assert!(mean > 850.0 && mean < 1010.0, "mean {mean}");
+    }
+
+    #[test]
+    fn powerlaw_skews_small() {
+        let xs = sample_many(Dist::powerlaw_default(), 5000);
+        assert!(xs.iter().all(|&x| x <= 1024));
+        let small = xs.iter().filter(|&&x| x < 128).count();
+        let large = xs.iter().filter(|&&x| x > 512).count();
+        assert!(
+            small > 3 * large,
+            "power law should skew small: {small} small vs {large} large"
+        );
+        assert!(large > 0, "large blocks must still occur");
+    }
+
+    #[test]
+    fn const_is_const() {
+        let xs = sample_many(Dist::Const { size: 96 }, 100);
+        assert!(xs.iter().all(|&x| x == 96));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Dist::parse("uniform:2048"), Some(Dist::Uniform { max: 2048 }));
+        assert_eq!(Dist::parse("normal"), Some(Dist::normal_default()));
+        assert_eq!(Dist::parse("powerlaw"), Some(Dist::powerlaw_default()));
+        assert_eq!(Dist::parse("const:8"), Some(Dist::Const { size: 8 }));
+        assert_eq!(Dist::parse("fft-n1"), Some(Dist::FftN1));
+        assert_eq!(Dist::parse("bogus"), None);
+        assert_eq!(Dist::parse("uniform"), None);
+    }
+}

@@ -1,0 +1,98 @@
+//! FFT transpose workloads (§VI-A).
+//!
+//! FFTW-style slab decomposition produces a non-uniform all-to-all when
+//! the problem size 𝒩 is not a multiple of P². The paper constructs two
+//! instances:
+//!
+//! * 𝒩₁ = ⌈0.78125·P⌉ · ⌈0.625·P⌉ · 8 — only ranks below ⌈0.625·P⌉
+//!   ("workers") hold data; each worker fills its first ⌈0.78125·P⌉
+//!   blocks with 8 FP64 values (64 B) and sends nothing elsewhere.
+//! * 𝒩₂ = ((P−1)·32 + 8) · P — near-uniform: every rank sends 64 FP64
+//!   values (512 B) per block, except the last rank which sends 16 FP64
+//!   (128 B) per block.
+
+use crate::util::prng::Pcg64;
+
+/// Number of worker ranks for 𝒩₁.
+pub fn n1_workers(p: usize) -> usize {
+    ((0.625 * p as f64).ceil() as usize).min(p)
+}
+
+/// Number of filled destination blocks per worker for 𝒩₁.
+pub fn n1_filled_blocks(p: usize) -> usize {
+    ((0.78125 * p as f64).ceil() as usize).min(p)
+}
+
+/// Block size for the 𝒩₁ decomposition.
+pub fn n1_size(src: usize, dst: usize, p: usize, rng: &mut Pcg64) -> u64 {
+    let _ = rng.next_u64(); // keep streams aligned across distributions
+    if src < n1_workers(p) && dst < n1_filled_blocks(p) {
+        8 * 8 // 8 FP64 values
+    } else {
+        0
+    }
+}
+
+/// Block size for the 𝒩₂ decomposition.
+pub fn n2_size(src: usize, _dst: usize, p: usize, rng: &mut Pcg64) -> u64 {
+    let _ = rng.next_u64();
+    if src + 1 == p {
+        16 * 8 // 16 FP64 values
+    } else {
+        64 * 8 // 64 FP64 values
+    }
+}
+
+/// Total problem size (complex FP64 pairs count as 2 values) implied by
+/// the 𝒩₁ workload — used to cross-check against the paper's formula.
+pub fn n1_total_bytes(p: usize) -> u64 {
+    (n1_workers(p) as u64) * (n1_filled_blocks(p) as u64) * 64
+}
+
+pub fn n2_total_bytes(p: usize) -> u64 {
+    ((p as u64 - 1) * 512 + 128) * p as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{BlockSizes, Dist};
+
+    #[test]
+    fn n1_structure() {
+        let p = 16;
+        let w = BlockSizes::generate(p, Dist::FftN1, 0);
+        let workers = n1_workers(p);
+        let filled = n1_filled_blocks(p);
+        assert_eq!(workers, 10);
+        assert_eq!(filled, 13);
+        for src in 0..p {
+            let row = w.row(src);
+            for dst in 0..p {
+                let expect = if src < workers && dst < filled { 64 } else { 0 };
+                assert_eq!(row[dst], expect, "src={src} dst={dst}");
+            }
+        }
+        assert_eq!(w.total_bytes(), n1_total_bytes(p));
+    }
+
+    #[test]
+    fn n2_structure() {
+        let p = 8;
+        let w = BlockSizes::generate(p, Dist::FftN2, 0);
+        for src in 0..p {
+            let expect = if src == p - 1 { 128 } else { 512 };
+            assert!(w.row(src).iter().all(|&s| s == expect));
+        }
+        assert_eq!(w.total_bytes(), n2_total_bytes(p));
+    }
+
+    #[test]
+    fn n1_is_genuinely_nonuniform() {
+        let p = 32;
+        let w = BlockSizes::generate(p, Dist::FftN1, 0);
+        let sums: Vec<u64> = (0..p).map(|s| w.row(s).iter().sum()).collect();
+        assert!(sums.iter().any(|&s| s == 0), "some ranks send nothing");
+        assert!(sums.iter().any(|&s| s > 0), "workers send data");
+    }
+}

@@ -1,0 +1,113 @@
+//! Synthetic directed graphs for the transitive-closure application
+//! (§VI-B). The paper uses a 1,014,951-edge SuiteSparse graph; offline we
+//! generate scale-free digraphs with the same qualitative properties
+//! (power-law out-degree, one giant component, long path chains).
+
+use crate::util::prng::Pcg64;
+
+/// An edge list over vertices `0..n`.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    /// Preferential-attachment style digraph: `n` vertices, ~`m_per_v`
+    /// out-edges per vertex with power-law target popularity, plus a
+    /// backbone path so the transitive closure has depth.
+    pub fn scale_free(n: usize, m_per_v: usize, seed: u64) -> Graph {
+        assert!(n >= 2);
+        let mut rng = Pcg64::new(seed, 0xface);
+        let mut edges = Vec::with_capacity(n * m_per_v + n);
+        // Backbone: a path 0 -> 1 -> ... so closure depth ~ n.
+        for v in 0..n - 1 {
+            edges.push((v as u32, v as u32 + 1));
+        }
+        // Power-law extra edges: target ~ n * u^3 biases toward low ids
+        // (the "celebrities"), source uniform.
+        for _ in 0..n * m_per_v {
+            let src = rng.next_below(n as u64) as u32;
+            let u = rng.next_f64();
+            let dst = ((n as f64) * u * u * u) as u32;
+            let dst = dst.min(n as u32 - 1);
+            if src != dst {
+                edges.push((src, dst));
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        Graph { n, edges }
+    }
+
+    /// A simple chain (for exact-answer tests: TC of a chain of n vertices
+    /// has n*(n-1)/2 pairs).
+    pub fn chain(n: usize) -> Graph {
+        Graph {
+            n,
+            edges: (0..n as u32 - 1).map(|v| (v, v + 1)).collect(),
+        }
+    }
+
+    /// A binary tree rooted at 0 (TC size computable in closed form).
+    pub fn binary_tree(depth: u32) -> Graph {
+        let n = (1usize << (depth + 1)) - 1;
+        let mut edges = Vec::new();
+        for v in 0..n {
+            for c in [2 * v + 1, 2 * v + 2] {
+                if c < n {
+                    edges.push((v as u32, c as u32));
+                }
+            }
+        }
+        Graph { n, edges }
+    }
+
+    pub fn out_degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.n];
+        for &(s, _) in &self.edges {
+            d[s as usize] += 1;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_free_shape() {
+        let g = Graph::scale_free(500, 4, 11);
+        assert!(g.edges.len() >= 500 - 1);
+        let degs = g.out_degrees();
+        let max_deg = *degs.iter().max().unwrap();
+        let mean_deg = degs.iter().sum::<usize>() as f64 / degs.len() as f64;
+        assert!(
+            max_deg as f64 > 2.0 * mean_deg,
+            "degree distribution should be skewed (max {max_deg}, mean {mean_deg})"
+        );
+        // Deterministic.
+        let g2 = Graph::scale_free(500, 4, 11);
+        assert_eq!(g.edges, g2.edges);
+    }
+
+    #[test]
+    fn chain_and_tree() {
+        let c = Graph::chain(5);
+        assert_eq!(c.edges.len(), 4);
+        let t = Graph::binary_tree(3);
+        assert_eq!(t.n, 15);
+        assert_eq!(t.edges.len(), 14);
+    }
+
+    #[test]
+    fn no_self_loops_or_dups() {
+        let g = Graph::scale_free(200, 3, 5);
+        let mut seen = std::collections::HashSet::new();
+        for &(s, d) in &g.edges {
+            assert_ne!(s, d);
+            assert!(seen.insert((s, d)));
+        }
+    }
+}

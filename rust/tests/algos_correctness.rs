@@ -1,0 +1,196 @@
+//! Gold correctness matrix: every algorithm, across process counts,
+//! topologies, distributions and parameter settings, must deliver the
+//! exact all-to-allv result — validated with real byte patterns
+//! (DESIGN.md §6 (1)).
+
+use tuna::algos::{run_alltoallv, tuning, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::model::MachineProfile;
+use tuna::util::prng::Pcg64;
+use tuna::util::prop::forall;
+use tuna::workload::{BlockSizes, Dist};
+
+fn check(kind: AlgoKind, p: usize, q: usize, dist: Dist, seed: u64) {
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+    let sizes = BlockSizes::generate(p, dist, seed);
+    let rep = run_alltoallv(&engine, &kind, &sizes, true)
+        .unwrap_or_else(|e| panic!("{} P={p} Q={q} {dist:?}: {e}", kind.name()));
+    assert!(rep.validated);
+}
+
+fn linear_kinds(p: usize) -> Vec<AlgoKind> {
+    vec![
+        AlgoKind::SpreadOut,
+        AlgoKind::OmpiLinear,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 1 },
+        AlgoKind::Scattered { block_count: 3 },
+        AlgoKind::Scattered { block_count: p },
+        AlgoKind::Vendor,
+    ]
+}
+
+#[test]
+fn linear_algorithms_all_topologies() {
+    for (p, q) in [(8, 1), (8, 2), (8, 8), (12, 4), (7, 7), (9, 3), (16, 4)] {
+        for kind in linear_kinds(p) {
+            check(kind, p, q, Dist::Uniform { max: 256 }, 42);
+        }
+    }
+}
+
+#[test]
+fn tuna_all_radices_small_p() {
+    // Exhaustive radix sweep at small P — every radix from 2 to P.
+    for p in [4usize, 6, 8, 9, 12] {
+        for r in 2..=p {
+            check(AlgoKind::Tuna { radix: r }, p, 1, Dist::Uniform { max: 128 }, p as u64);
+        }
+    }
+}
+
+#[test]
+fn bruck2_matches_tuna_radix2_traffic() {
+    // The two-phase non-uniform Bruck baseline is TuNA at radix 2:
+    // identical round structure and traffic.
+    let p = 16;
+    let e = Engine::new(MachineProfile::test_flat(), Topology::flat(p));
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, 3);
+    let a = run_alltoallv(&e, &AlgoKind::Bruck2, &sizes, false).unwrap();
+    let b = run_alltoallv(&e, &AlgoKind::Tuna { radix: 2 }, &sizes, false).unwrap();
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.rounds, b.rounds);
+}
+
+#[test]
+fn hier_variants_parameter_grid() {
+    for (p, q) in [(8, 2), (8, 4), (16, 4), (12, 3), (18, 6)] {
+        let n = p / q;
+        for radix in tuning::radix_candidates(q).into_iter().filter(|&r| r <= q) {
+            for coalesced in [true, false] {
+                let bc_max = if coalesced { (n - 1).max(1) } else { ((n - 1) * q).max(1) };
+                for bc in [1, bc_max] {
+                    let kind = if coalesced {
+                        AlgoKind::TunaHierCoalesced { radix, block_count: bc }
+                    } else {
+                        AlgoKind::TunaHierStaggered { radix, block_count: bc }
+                    };
+                    check(kind, p, q, Dist::Uniform { max: 192 }, 7);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_algorithms_all_distributions() {
+    let dists = [
+        Dist::Uniform { max: 1024 },
+        Dist::normal_default(),
+        Dist::powerlaw_default(),
+        Dist::Const { size: 64 },
+        Dist::FftN1,
+        Dist::FftN2,
+    ];
+    let p = 16;
+    let q = 4;
+    let mut kinds = linear_kinds(p);
+    kinds.extend([
+        AlgoKind::Bruck2,
+        AlgoKind::Tuna { radix: 4 },
+        AlgoKind::Tuna { radix: 16 },
+        AlgoKind::TunaHierCoalesced { radix: 2, block_count: 2 },
+        AlgoKind::TunaHierStaggered { radix: 4, block_count: 5 },
+    ]);
+    for dist in dists {
+        for kind in &kinds {
+            check(*kind, p, q, dist, 99);
+        }
+    }
+}
+
+#[test]
+fn property_random_configs_all_families() {
+    forall("random algo/config correctness", 40, |rng| {
+        let q_choices = [1usize, 2, 4];
+        let q = q_choices[rng.next_below(3) as usize];
+        let nodes = 1 + rng.next_below(4) as usize;
+        let p = (q * nodes).max(2);
+        let q = if p % q == 0 { q } else { 1 };
+        let kind = random_kind(rng, p, q);
+        let seed = rng.next_u64();
+        let dist = Dist::Uniform {
+            max: 8 * (1 + rng.next_below(64)),
+        };
+        let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, dist, seed);
+        match run_alltoallv(&engine, &kind, &sizes, true) {
+            Ok(rep) if rep.validated => Ok(()),
+            Ok(_) => Err(format!("{} invalid result", kind.name())),
+            Err(e) => Err(format!("{} P={p} Q={q}: {e}", kind.name())),
+        }
+    });
+}
+
+fn random_kind(rng: &mut Pcg64, p: usize, q: usize) -> AlgoKind {
+    loop {
+        match rng.next_below(7) {
+            0 => return AlgoKind::SpreadOut,
+            1 => return AlgoKind::Pairwise,
+            2 => {
+                return AlgoKind::Scattered {
+                    block_count: 1 + rng.next_below(p as u64) as usize,
+                }
+            }
+            3 => {
+                return AlgoKind::Tuna {
+                    radix: (2 + rng.next_below(p as u64) as usize).min(p),
+                }
+            }
+            4 => return AlgoKind::OmpiLinear,
+            5 | 6 if q >= 2 && p / q >= 2 => {
+                let radix = (2 + rng.next_below(q as u64) as usize).min(q);
+                let n = p / q;
+                let coalesced = rng.next_below(2) == 0;
+                let bc_max = if coalesced { n - 1 } else { (n - 1) * q };
+                let block_count = 1 + rng.next_below(bc_max.max(1) as u64) as usize;
+                return if coalesced {
+                    AlgoKind::TunaHierCoalesced { radix, block_count }
+                } else {
+                    AlgoKind::TunaHierStaggered { radix, block_count }
+                };
+            }
+            _ => continue,
+        }
+    }
+}
+
+#[test]
+fn conservation_total_bytes_delivered() {
+    // The sum of delivered payload bytes equals the workload total for
+    // every algorithm (no data lost or duplicated) — checked indirectly
+    // by fingerprints, directly here via a Const workload's counters.
+    let p = 12;
+    let size = 100u64;
+    let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
+    let sizes = BlockSizes::generate(p, Dist::Const { size }, 0);
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::Tuna { radix: 3 },
+        AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+    ] {
+        let rep = run_alltoallv(&e, &kind, &sizes, true).unwrap();
+        // Every rank must receive P blocks of `size` bytes; validation
+        // inside run_alltoallv already asserts identity, so just confirm
+        // the run moved at least the workload's bytes (log algorithms
+        // move more via store-and-forward).
+        let min_bytes = sizes.total_bytes() - (p as u64 * size); // minus self blocks
+        assert!(
+            rep.counters.total_bytes() >= min_bytes,
+            "{}: moved {} < workload {}",
+            kind.name(),
+            rep.counters.total_bytes(),
+            min_bytes
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Analytic-model validation (DESIGN.md §6 (4)): the single-rank replay
+//! estimator must track the exact threaded engine on statistically
+//! symmetric workloads. These bounds are what justify using the model
+//! for the paper-scale (P >= 8192) figure points.
+
+use tuna::algos::{run_alltoallv, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::model::analytic::Estimator;
+use tuna::model::MachineProfile;
+use tuna::workload::{BlockSizes, Dist};
+
+/// Relative error |model - engine| / engine.
+fn rel_err(kind: AlgoKind, p: usize, q: usize, s: u64, profile: MachineProfile) -> f64 {
+    let topo = Topology::new(p, q);
+    let engine = Engine::new(profile.clone(), topo);
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 11);
+    let measured = run_alltoallv(&engine, &kind, &sizes, false)
+        .unwrap()
+        .makespan;
+    let est = Estimator::new(&profile, topo)
+        .estimate(&kind, sizes.mean_size())
+        .makespan;
+    (est - measured).abs() / measured
+}
+
+#[test]
+fn tuna_model_tracks_engine() {
+    for (p, q, s) in [(64, 8, 512), (128, 8, 64), (128, 8, 4096), (256, 8, 1024)] {
+        for r in [2usize, 8, 16] {
+            let e = rel_err(AlgoKind::Tuna { radix: r }, p, q, s, MachineProfile::fugaku());
+            assert!(
+                e < 0.35,
+                "tuna r={r} P={p} S={s}: model off by {:.0}%",
+                e * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn linear_model_tracks_engine() {
+    for (p, q, s) in [(64, 8, 512), (128, 8, 2048)] {
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Vendor,
+            AlgoKind::Scattered { block_count: 8 },
+            AlgoKind::Pairwise,
+        ] {
+            let e = rel_err(kind, p, q, s, MachineProfile::fugaku());
+            assert!(
+                e < 0.4,
+                "{} P={p} S={s}: model off by {:.0}%",
+                kind.name(),
+                e * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn hier_model_tracks_engine() {
+    for (p, q, s) in [(64, 8, 512), (128, 8, 2048)] {
+        for kind in [
+            AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 },
+            AlgoKind::TunaHierStaggered { radix: 4, block_count: 8 },
+        ] {
+            let e = rel_err(kind, p, q, s, MachineProfile::fugaku());
+            assert!(
+                e < 0.45,
+                "{} P={p} S={s}: model off by {:.0}%",
+                kind.name(),
+                e * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn model_preserves_algorithm_ordering() {
+    // What matters for the figures is ordering: at small S the model must
+    // rank tuna < scattered < naive burst linear, matching the engine.
+    let p = 128;
+    let q = 8;
+    let profile = MachineProfile::fugaku();
+    let topo = Topology::new(p, q);
+    let engine = Engine::new(profile.clone(), topo);
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 64 }, 5);
+    let est = Estimator::new(&profile, topo);
+    let kinds = [
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::Vendor,
+        AlgoKind::OmpiLinear,
+    ];
+    let measured: Vec<f64> = kinds
+        .iter()
+        .map(|k| run_alltoallv(&engine, k, &sizes, false).unwrap().makespan)
+        .collect();
+    let modeled: Vec<f64> = kinds
+        .iter()
+        .map(|k| est.estimate(k, sizes.mean_size()).makespan)
+        .collect();
+    let order = |v: &[f64]| {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        idx
+    };
+    assert_eq!(
+        order(&measured),
+        order(&modeled),
+        "model must preserve algorithm ordering: engine {measured:?} vs model {modeled:?}"
+    );
+}

@@ -1,0 +1,187 @@
+//! Shape-level reproduction checks: the qualitative findings of the
+//! paper's evaluation must hold on the simulated machines (who wins, in
+//! which regime, and what the tunables do) — DESIGN.md §5's "headline
+//! claims to reproduce in shape".
+
+use tuna::algos::{run_alltoallv, tuning, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::model::MachineProfile;
+use tuna::workload::{BlockSizes, Dist};
+
+fn median_time(engine: &Engine, kind: &AlgoKind, dist: Dist, iters: usize) -> f64 {
+    let mut times: Vec<f64> = (0..iters)
+        .map(|i| {
+            let sizes = BlockSizes::generate(engine.topo.p(), dist, 1000 + i as u64);
+            run_alltoallv(engine, kind, &sizes, false).unwrap().makespan
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// §V-A / Fig. 8: TuNA with a good radix decisively beats the vendor
+/// linear implementation for small messages at scale.
+#[test]
+fn tuna_beats_vendor_small_messages() {
+    for profile in [MachineProfile::polaris(), MachineProfile::fugaku()] {
+        let engine = Engine::new(profile.clone(), Topology::new(256, 8));
+        let dist = Dist::Uniform { max: 16 };
+        let tuna = median_time(&engine, &AlgoKind::Tuna { radix: 2 }, dist, 3);
+        let vendor = median_time(&engine, &AlgoKind::Vendor, dist, 3);
+        assert!(
+            vendor / tuna > 3.0,
+            "{}: expected >3x at S=16, got {:.2}x",
+            profile.name,
+            vendor / tuna
+        );
+    }
+}
+
+/// §V-A: at large S the advantage shrinks or inverts (bandwidth regime)
+/// — the vendor/scattered linear path moves each byte once while radix-2
+/// TuNA forwards bytes log P times.
+#[test]
+fn tuna_radix2_loses_large_messages() {
+    let engine = Engine::new(MachineProfile::polaris(), Topology::new(128, 8));
+    let dist = Dist::Uniform { max: 64 * 1024 };
+    let tuna2 = median_time(&engine, &AlgoKind::Tuna { radix: 2 }, dist, 3);
+    let vendor = median_time(&engine, &AlgoKind::Vendor, dist, 3);
+    assert!(
+        tuna2 > vendor,
+        "radix-2 TuNA ({tuna2}) should lose to vendor ({vendor}) at 64 KiB"
+    );
+}
+
+/// Fig. 7: the ideal radix is non-decreasing in S (latency regime ->
+/// balanced -> bandwidth regime).
+#[test]
+fn ideal_radix_grows_with_message_size() {
+    let p = 256;
+    let engine = Engine::new(MachineProfile::polaris(), Topology::new(p, 8));
+    let mut last_best = 0usize;
+    for s in [16u64, 1024, 65536] {
+        let dist = Dist::Uniform { max: s };
+        let best = tuning::radix_candidates(p)
+            .into_iter()
+            .min_by(|&a, &b| {
+                let ta = median_time(&engine, &AlgoKind::Tuna { radix: a }, dist, 1);
+                let tb = median_time(&engine, &AlgoKind::Tuna { radix: b }, dist, 1);
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap();
+        assert!(
+            best >= last_best,
+            "ideal radix must not shrink as S grows (S={s}: {best} < {last_best})"
+        );
+        last_best = best;
+    }
+    assert!(last_best >= 16, "large S should favor a large radix");
+}
+
+/// §V-B / Fig. 10: coalesced TuNA_l^g beats staggered at small S (fewer
+/// inter-node messages), and the gap closes at large S.
+#[test]
+fn coalesced_beats_staggered_small_s() {
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(128, 8));
+    let small = Dist::Uniform { max: 16 };
+    let co = median_time(
+        &engine,
+        &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 },
+        small,
+        3,
+    );
+    let st = median_time(
+        &engine,
+        &AlgoKind::TunaHierStaggered { radix: 2, block_count: 32 },
+        small,
+        3,
+    );
+    assert!(
+        st / co > 2.0,
+        "coalesced should win clearly at S=16: staggered {st} vs coalesced {co}"
+    );
+
+    let large = Dist::Uniform { max: 16 * 1024 };
+    let co_l = median_time(
+        &engine,
+        &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 },
+        large,
+        3,
+    );
+    let st_l = median_time(
+        &engine,
+        &AlgoKind::TunaHierStaggered { radix: 2, block_count: 32 },
+        large,
+        3,
+    );
+    assert!(
+        st_l / co_l < st / co,
+        "the staggered/coalesced gap must shrink at large S ({:.2} vs {:.2})",
+        st_l / co_l,
+        st / co
+    );
+}
+
+/// Fig. 13 shape: the hierarchical coalesced variant is the overall
+/// winner at small S, beating flat TuNA too.
+#[test]
+fn coalesced_hier_is_overall_winner_small_s() {
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(256, 32));
+    let dist = Dist::Uniform { max: 64 };
+    let sizes = BlockSizes::generate(256, dist, 3);
+    let tuna = tuning::autotune_tuna(&engine, &sizes).unwrap().best_time;
+    let coal = tuning::autotune_hier(&engine, &sizes, true).unwrap().best_time;
+    let vendor = run_alltoallv(&engine, &AlgoKind::Vendor, &sizes, false)
+        .unwrap()
+        .makespan;
+    assert!(coal < tuna, "coalesced ({coal}) should beat flat tuna ({tuna})");
+    assert!(
+        vendor / coal > 5.0,
+        "coalesced should be >5x over vendor at small S ({:.1}x)",
+        vendor / coal
+    );
+}
+
+/// Fig. 12: OpenMPI's ascending linear is the worst baseline at scale.
+#[test]
+fn ompi_linear_is_worst_baseline() {
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(256, 8));
+    let dist = Dist::Uniform { max: 2048 };
+    let ompi = median_time(&engine, &AlgoKind::OmpiLinear, dist, 3);
+    for other in [AlgoKind::SpreadOut, AlgoKind::Pairwise, AlgoKind::Vendor] {
+        let t = median_time(&engine, &other, dist, 3);
+        assert!(
+            ompi >= t * 0.98,
+            "{} ({t}) should not be slower than ompi-linear ({ompi})",
+            other.name()
+        );
+    }
+}
+
+/// §V-B: the ideal block_count for the inter-node phase decreases as S
+/// grows (congestion outweighs latency hiding for big messages).
+#[test]
+fn ideal_block_count_shrinks_with_s() {
+    let p = 256;
+    let q = 8;
+    let n = p / q;
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let best_bc = |s: u64| -> usize {
+        tuning::block_count_candidates((n - 1) * q)
+            .into_iter()
+            .min_by(|&a, &b| {
+                let ka = AlgoKind::TunaHierStaggered { radix: 2, block_count: a };
+                let kb = AlgoKind::TunaHierStaggered { radix: 2, block_count: b };
+                let ta = median_time(&engine, &ka, Dist::Uniform { max: s }, 1);
+                let tb = median_time(&engine, &kb, Dist::Uniform { max: s }, 1);
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap()
+    };
+    let bc_small = best_bc(16);
+    let bc_large = best_bc(32 * 1024);
+    assert!(
+        bc_large <= bc_small,
+        "ideal block_count must not grow with S: S=16 -> {bc_small}, S=32K -> {bc_large}"
+    );
+}

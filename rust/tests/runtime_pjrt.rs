@@ -1,0 +1,149 @@
+//! PJRT runtime integration: execute the AOT-lowered Pallas/JAX
+//! artifacts from Rust and validate numerics against the naive oracle.
+//! Skips (with a notice) when `make artifacts` has not been run — CI
+//! without jax can still run the rest of the suite.
+
+use tuna::apps::fft::{dft_matrix, twiddles, CMat};
+use tuna::runtime::PjrtRuntime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+fn cmatmul_ref(a: &CMat, b: &CMat) -> CMat {
+    let mut out = CMat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            for j in 0..b.cols {
+                let (ar, ai) = (a.re[i * a.cols + k], a.im[i * a.cols + k]);
+                let (br, bi) = (b.re[k * b.cols + j], b.im[k * b.cols + j]);
+                out.re[i * out.cols + j] += ar * br - ai * bi;
+                out.im[i * out.cols + j] += ar * bi + ai * br;
+            }
+        }
+    }
+    out
+}
+
+fn randomish(rows: usize, cols: usize, seed: u64) -> CMat {
+    let mut rng = tuna::util::prng::Pcg64::new(seed, 0);
+    let mut m = CMat::zeros(rows, cols);
+    for i in 0..rows * cols {
+        m.re[i] = (rng.next_f64() * 2.0 - 1.0) as f32;
+        m.im[i] = (rng.next_f64() * 2.0 - 1.0) as f32;
+    }
+    m
+}
+
+#[test]
+fn stage2_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).unwrap();
+    assert!(rt.has("fft_stage2_16x4"), "manifest should list fft_stage2_16x4");
+
+    let f = dft_matrix(16);
+    let a = randomish(16, 4, 42);
+    let dims_f = [16i64, 16];
+    let dims_a = [16i64, 4];
+    let out = rt
+        .execute_f32(
+            "fft_stage2_16x4",
+            &[(&f.re, &dims_f), (&f.im, &dims_f), (&a.re, &dims_a), (&a.im, &dims_a)],
+        )
+        .unwrap();
+    let want = cmatmul_ref(&f, &a);
+    assert_eq!(out[0].len(), 64);
+    for i in 0..64 {
+        assert!((out[0][i] - want.re[i]).abs() < 1e-3, "re[{i}]");
+        assert!((out[1][i] - want.im[i]).abs() < 1e-3, "im[{i}]");
+    }
+}
+
+#[test]
+fn stage1_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).unwrap();
+    let name = "fft_stage1_4x16";
+    assert!(rt.has(name), "manifest should list {name}");
+
+    let a = randomish(4, 16, 7);
+    let f = dft_matrix(16);
+    let t = twiddles(0, 4, 16, 64);
+    let dims_a = [4i64, 16];
+    let dims_f = [16i64, 16];
+    let out = rt
+        .execute_f32(
+            name,
+            &[
+                (&a.re, &dims_a),
+                (&a.im, &dims_a),
+                (&f.re, &dims_f),
+                (&f.im, &dims_f),
+                (&t.re, &dims_a),
+                (&t.im, &dims_a),
+            ],
+        )
+        .unwrap();
+    // Oracle: (A @ F) ⊙ T.
+    let y = cmatmul_ref(&a, &f);
+    for i in 0..4 * 16 {
+        let wr = y.re[i] * t.re[i] - y.im[i] * t.im[i];
+        let wi = y.re[i] * t.im[i] + y.im[i] * t.re[i];
+        assert!((out[0][i] - wr).abs() < 1e-3, "re[{i}]: {} vs {wr}", out[0][i]);
+        assert!((out[1][i] - wi).abs() < 1e-3, "im[{i}]");
+    }
+}
+
+#[test]
+fn executables_are_cached_and_reusable() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).unwrap();
+    let f = dft_matrix(16);
+    let a = randomish(16, 4, 1);
+    let dims_f = [16i64, 16];
+    let dims_a = [16i64, 4];
+    let inputs: &[(&[f32], &[i64])] = &[
+        (&f.re, &dims_f),
+        (&f.im, &dims_f),
+        (&a.re, &dims_a),
+        (&a.im, &dims_a),
+    ];
+    let first = rt.execute_f32("fft_stage2_16x4", inputs).unwrap();
+    // Second call hits the executable cache; results identical.
+    let second = rt.execute_f32("fft_stage2_16x4", inputs).unwrap();
+    assert_eq!(first, second);
+}
+
+#[test]
+fn wrong_input_shape_is_an_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).unwrap();
+    let bad = vec![0f32; 7];
+    let dims = [16i64, 16];
+    assert!(rt.execute_f32("fft_stage2_16x4", &[(&bad, &dims)]).is_err());
+}
+
+#[test]
+fn fft_e2e_pjrt_backend_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rep = tuna::apps::fft::run_distributed_fft(
+        &tuna::model::MachineProfile::fugaku(),
+        4,
+        2,
+        16,
+        16,
+        &tuna::algos::AlgoKind::Tuna { radix: 2 },
+        tuna::apps::fft::FftBackend::Pjrt { dir },
+    )
+    .unwrap();
+    assert!(rep.max_err < 1e-4, "err {}", rep.max_err);
+    assert!(rep.backend.contains("PJRT"));
+    // All shapes present in the manifest: no naive fallback.
+    assert!(!rep.backend.contains("fallback"), "{}", rep.backend);
+}
