@@ -22,6 +22,7 @@
 
 pub mod linear;
 pub mod radix;
+pub mod select;
 pub mod tuna;
 pub mod tuna_hier;
 pub mod tuning;
@@ -48,6 +49,9 @@ pub enum AlgoKind {
     /// Two-phase non-uniform Bruck of [10]: TuNA's ancestor, radix 2.
     Bruck2,
     Tuna { radix: usize },
+    /// TuNA with the §V-A heuristic radix, agreed across ranks at run
+    /// time from the global mean block size (one extra allreduce).
+    TunaAuto,
     TunaHierCoalesced { radix: usize, block_count: usize },
     TunaHierStaggered { radix: usize, block_count: usize },
 }
@@ -62,6 +66,7 @@ impl AlgoKind {
             AlgoKind::Vendor => "vendor-alltoallv".into(),
             AlgoKind::Bruck2 => "bruck2-nonuniform".into(),
             AlgoKind::Tuna { radix } => format!("tuna(r={radix})"),
+            AlgoKind::TunaAuto => "tuna(r=auto)".into(),
             AlgoKind::TunaHierCoalesced { radix, block_count } => {
                 format!("tuna-hier-coalesced(r={radix},b={block_count})")
             }
@@ -80,42 +85,80 @@ impl AlgoKind {
             AlgoKind::Scattered { .. } => "scattered",
             AlgoKind::Vendor => "vendor",
             AlgoKind::Bruck2 => "bruck2",
-            AlgoKind::Tuna { .. } => "tuna",
+            AlgoKind::Tuna { .. } | AlgoKind::TunaAuto => "tuna",
             AlgoKind::TunaHierCoalesced { .. } => "tuna-hier-coalesced",
             AlgoKind::TunaHierStaggered { .. } => "tuna-hier-staggered",
         }
     }
 
-    /// Parse `"tuna:r=4"`, `"scattered:b=16"`,
-    /// `"tuna-hier-coalesced:r=4,b=8"`, `"spread-out"`, ...
-    pub fn parse(s: &str) -> Option<AlgoKind> {
+    /// Parse `"tuna:r=4"`, `"tuna:auto"`, `"scattered:b=16"`,
+    /// `"tuna-hier-coalesced:r=4,b=8"`, `"spread-out"`, ... Errors name
+    /// the missing or invalid parameter instead of failing silently.
+    pub fn parse(s: &str) -> Result<AlgoKind> {
         let (head, args) = match s.split_once(':') {
             Some((h, a)) => (h, a),
             None => (s, ""),
         };
-        let get = |key: &str| -> Option<usize> {
-            args.split(',')
-                .find_map(|kv| kv.strip_prefix(key)?.strip_prefix('=')?.parse().ok())
+        let get = |key: &str| -> Result<usize> {
+            let raw = args
+                .split(',')
+                .find_map(|kv| kv.strip_prefix(key).and_then(|r| r.strip_prefix('=')));
+            match raw {
+                None => Err(TunaError::config(format!(
+                    "{head}: missing parameter `{key}` (expected `{head}:{key}=N`)"
+                ))),
+                Some(v) => v.parse().map_err(|_| {
+                    TunaError::config(format!(
+                        "{head}: invalid value `{v}` for parameter `{key}`"
+                    ))
+                }),
+            }
         };
         match head {
-            "spread-out" => Some(AlgoKind::SpreadOut),
-            "ompi-linear" => Some(AlgoKind::OmpiLinear),
-            "pairwise" => Some(AlgoKind::Pairwise),
-            "scattered" => Some(AlgoKind::Scattered {
+            "spread-out" => Ok(AlgoKind::SpreadOut),
+            "ompi-linear" => Ok(AlgoKind::OmpiLinear),
+            "pairwise" => Ok(AlgoKind::Pairwise),
+            "scattered" => Ok(AlgoKind::Scattered {
                 block_count: get("b")?,
             }),
-            "vendor" => Some(AlgoKind::Vendor),
-            "bruck2" => Some(AlgoKind::Bruck2),
-            "tuna" => Some(AlgoKind::Tuna { radix: get("r")? }),
-            "tuna-hier-coalesced" => Some(AlgoKind::TunaHierCoalesced {
+            "vendor" => Ok(AlgoKind::Vendor),
+            "bruck2" => Ok(AlgoKind::Bruck2),
+            "tuna" => match args {
+                "auto" | "r=auto" => Ok(AlgoKind::TunaAuto),
+                _ => Ok(AlgoKind::Tuna { radix: get("r")? }),
+            },
+            "tuna-hier-coalesced" => Ok(AlgoKind::TunaHierCoalesced {
                 radix: get("r")?,
                 block_count: get("b")?,
             }),
-            "tuna-hier-staggered" => Some(AlgoKind::TunaHierStaggered {
+            "tuna-hier-staggered" => Ok(AlgoKind::TunaHierStaggered {
                 radix: get("r")?,
                 block_count: get("b")?,
             }),
-            _ => None,
+            other => Err(TunaError::config(format!(
+                "unknown algorithm `{other}` (see `tuna list`)"
+            ))),
+        }
+    }
+
+    /// Parseable spec string — the inverse of [`AlgoKind::parse`]
+    /// (`parse(&k.spec()) == Ok(k)`), used by the tuning tables.
+    pub fn spec(&self) -> String {
+        match self {
+            AlgoKind::SpreadOut => "spread-out".into(),
+            AlgoKind::OmpiLinear => "ompi-linear".into(),
+            AlgoKind::Pairwise => "pairwise".into(),
+            AlgoKind::Scattered { block_count } => format!("scattered:b={block_count}"),
+            AlgoKind::Vendor => "vendor".into(),
+            AlgoKind::Bruck2 => "bruck2".into(),
+            AlgoKind::Tuna { radix } => format!("tuna:r={radix}"),
+            AlgoKind::TunaAuto => "tuna:auto".into(),
+            AlgoKind::TunaHierCoalesced { radix, block_count } => {
+                format!("tuna-hier-coalesced:r={radix},b={block_count}")
+            }
+            AlgoKind::TunaHierStaggered { radix, block_count } => {
+                format!("tuna-hier-staggered:r={radix},b={block_count}")
+            }
         }
     }
 
@@ -164,6 +207,16 @@ impl AlgoKind {
             ),
             AlgoKind::Bruck2 => tuna::run(ctx, blocks, 2),
             AlgoKind::Tuna { radix } => tuna::run(ctx, blocks, radix),
+            AlgoKind::TunaAuto => {
+                // All ranks must run the same radix: agree on the global
+                // mean block size first (timed like any other traffic).
+                let mine: u64 = blocks.iter().map(|b| b.len()).sum();
+                let total = ctx.allreduce_sum(mine);
+                let p = ctx.size();
+                let mean = total as f64 / (p as f64 * p as f64);
+                let radix = tuning::heuristic_radix(p, mean);
+                tuna::run(ctx, blocks, radix)
+            }
             AlgoKind::TunaHierCoalesced { radix, block_count } => {
                 tuna_hier::run(ctx, blocks, radix, block_count, true)
             }
@@ -298,26 +351,59 @@ mod tests {
 
     #[test]
     fn parse_all_kinds() {
-        assert_eq!(AlgoKind::parse("spread-out"), Some(AlgoKind::SpreadOut));
-        assert_eq!(AlgoKind::parse("ompi-linear"), Some(AlgoKind::OmpiLinear));
-        assert_eq!(AlgoKind::parse("pairwise"), Some(AlgoKind::Pairwise));
+        assert_eq!(AlgoKind::parse("spread-out").unwrap(), AlgoKind::SpreadOut);
+        assert_eq!(AlgoKind::parse("ompi-linear").unwrap(), AlgoKind::OmpiLinear);
+        assert_eq!(AlgoKind::parse("pairwise").unwrap(), AlgoKind::Pairwise);
         assert_eq!(
-            AlgoKind::parse("scattered:b=16"),
-            Some(AlgoKind::Scattered { block_count: 16 })
+            AlgoKind::parse("scattered:b=16").unwrap(),
+            AlgoKind::Scattered { block_count: 16 }
         );
-        assert_eq!(AlgoKind::parse("vendor"), Some(AlgoKind::Vendor));
-        assert_eq!(AlgoKind::parse("bruck2"), Some(AlgoKind::Bruck2));
-        assert_eq!(AlgoKind::parse("tuna:r=8"), Some(AlgoKind::Tuna { radix: 8 }));
+        assert_eq!(AlgoKind::parse("vendor").unwrap(), AlgoKind::Vendor);
+        assert_eq!(AlgoKind::parse("bruck2").unwrap(), AlgoKind::Bruck2);
+        assert_eq!(AlgoKind::parse("tuna:r=8").unwrap(), AlgoKind::Tuna { radix: 8 });
+        assert_eq!(AlgoKind::parse("tuna:auto").unwrap(), AlgoKind::TunaAuto);
+        assert_eq!(AlgoKind::parse("tuna:r=auto").unwrap(), AlgoKind::TunaAuto);
         assert_eq!(
-            AlgoKind::parse("tuna-hier-coalesced:r=4,b=2"),
-            Some(AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 })
+            AlgoKind::parse("tuna-hier-coalesced:r=4,b=2").unwrap(),
+            AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 }
         );
         assert_eq!(
-            AlgoKind::parse("tuna-hier-staggered:b=2,r=4"),
-            Some(AlgoKind::TunaHierStaggered { radix: 4, block_count: 2 })
+            AlgoKind::parse("tuna-hier-staggered:b=2,r=4").unwrap(),
+            AlgoKind::TunaHierStaggered { radix: 4, block_count: 2 }
         );
-        assert_eq!(AlgoKind::parse("tuna"), None);
-        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_errors_name_the_problem() {
+        // A bare `tuna` no longer fails silently: the error names `r`.
+        let e = AlgoKind::parse("tuna").unwrap_err().to_string();
+        assert!(e.contains("missing parameter `r`"), "{e}");
+        let e = AlgoKind::parse("scattered").unwrap_err().to_string();
+        assert!(e.contains("missing parameter `b`"), "{e}");
+        let e = AlgoKind::parse("tuna-hier-coalesced:r=4").unwrap_err().to_string();
+        assert!(e.contains("missing parameter `b`"), "{e}");
+        let e = AlgoKind::parse("tuna:r=zero").unwrap_err().to_string();
+        assert!(e.contains("invalid value `zero`"), "{e}");
+        let e = AlgoKind::parse("nope").unwrap_err().to_string();
+        assert!(e.contains("unknown algorithm `nope`"), "{e}");
+    }
+
+    #[test]
+    fn spec_roundtrips_through_parse() {
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::OmpiLinear,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 7 },
+            AlgoKind::Vendor,
+            AlgoKind::Bruck2,
+            AlgoKind::Tuna { radix: 5 },
+            AlgoKind::TunaAuto,
+            AlgoKind::TunaHierCoalesced { radix: 3, block_count: 2 },
+            AlgoKind::TunaHierStaggered { radix: 4, block_count: 9 },
+        ] {
+            assert_eq!(AlgoKind::parse(&kind.spec()).unwrap(), kind, "{}", kind.spec());
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Parameter selection: the paper's radix heuristic (§V-A) and a
+//! Parameter selection: the paper's radix heuristic (§V-A), a
 //! measurement-driven autotuner (what Fig. 9's "ideal r" annotations come
-//! from).
+//! from), and persisted, versioned *tuning tables* so repeat runs (and
+//! the figure harnesses) can look an answer up instead of re-sweeping.
 //!
 //! Observed trends (§V-A, Fig. 7):
 //! * small S (latency-bound) → small radix (few rounds ⇒ r≈2 minimizes
@@ -10,8 +11,11 @@
 //! * medium S → r ≈ √P balances rounds against duplicate data;
 //! * large S (bandwidth-bound) → r ≈ P minimizes total transmitted bytes.
 
+use std::path::{Path, PathBuf};
+
 use super::AlgoKind;
 use crate::comm::Engine;
+use crate::error::TunaError;
 use crate::workload::BlockSizes;
 
 /// The §V-A rule of thumb: pick a radix from the average block size.
@@ -128,6 +132,194 @@ pub fn sweep(
     })
 }
 
+// ---- persisted tuning tables ---------------------------------------------
+
+/// Default on-disk location for tuning tables, relative to the working
+/// directory (next to the PJRT artifacts, which share their lifecycle).
+pub const DEFAULT_TABLE_DIR: &str = "artifacts/tuning";
+
+/// Path of `machine`'s table inside a tuning-table directory.
+pub fn table_path(dir: &Path, machine: &str) -> PathBuf {
+    dir.join(format!("{machine}.tsv"))
+}
+
+/// One row of a persisted tuning table: a candidate's position in the
+/// selector's ranking for one (machine, P, Q, workload) scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningEntry {
+    pub machine: String,
+    pub p: usize,
+    pub q: usize,
+    /// Distribution short name (`Dist::name`).
+    pub dist: String,
+    /// Mean block size of the scenario's workload, bytes.
+    pub mean_block: f64,
+    /// 1-based rank; 1 is the selected algorithm.
+    pub rank: usize,
+    pub algo: AlgoKind,
+    /// Analytic-model makespan estimate, seconds.
+    pub model_time: f64,
+    /// Engine-measured median, seconds, when the selector refined this
+    /// candidate.
+    pub measured_time: Option<f64>,
+}
+
+/// A versioned, mergeable TSV tuning table (`artifacts/tuning/*.tsv`).
+/// The format is line-oriented so tables diff cleanly in review:
+///
+/// ```text
+/// # tuna-tuning-table v1
+/// # machine  p  q  dist  mean_block  rank  algo  model_time  measured_time
+/// fugaku  256  32  uniform  2.56e2  1  tuna-hier-coalesced:r=2,b=1  1.1e-4  1.2e-4
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct TuningTable {
+    pub entries: Vec<TuningEntry>,
+}
+
+fn scenario_key(e: &TuningEntry) -> (String, usize, usize, String, String) {
+    // The mean is keyed via a fixed text rendering so float noise cannot
+    // split one scenario into two.
+    (
+        e.machine.clone(),
+        e.p,
+        e.q,
+        e.dist.clone(),
+        format!("{:.6e}", e.mean_block),
+    )
+}
+
+impl TuningTable {
+    pub const VERSION_HEADER: &'static str = "# tuna-tuning-table v1";
+    const COLUMNS: &'static str =
+        "# machine\tp\tq\tdist\tmean_block\trank\talgo\tmodel_time\tmeasured_time";
+
+    pub fn to_tsv(&self) -> String {
+        let mut out = format!("{}\n{}\n", Self::VERSION_HEADER, Self::COLUMNS);
+        for e in &self.entries {
+            let measured = match e.measured_time {
+                Some(t) => format!("{t:.9e}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{:.6e}\t{}\t{}\t{:.9e}\t{}\n",
+                e.machine,
+                e.p,
+                e.q,
+                e.dist,
+                e.mean_block,
+                e.rank,
+                e.algo.spec(),
+                e.model_time,
+                measured,
+            ));
+        }
+        out
+    }
+
+    /// Parse a table, rejecting unknown versions (the format is the
+    /// contract between tuning runs and later lookups).
+    pub fn parse(text: &str) -> crate::Result<TuningTable> {
+        let mut lines = text.lines();
+        match lines.next().map(str::trim) {
+            Some(first) if first == Self::VERSION_HEADER => {}
+            other => {
+                return Err(TunaError::config(format!(
+                    "tuning table: expected `{}`, found {:?}",
+                    Self::VERSION_HEADER,
+                    other
+                )))
+            }
+        }
+        let mut entries = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let bad = |what: &str| {
+                TunaError::config(format!("tuning table line {}: {what}", lineno + 2))
+            };
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 9 {
+                return Err(bad(&format!("expected 9 columns, got {}", cols.len())));
+            }
+            entries.push(TuningEntry {
+                machine: cols[0].to_string(),
+                p: cols[1].parse().map_err(|_| bad("bad p"))?,
+                q: cols[2].parse().map_err(|_| bad("bad q"))?,
+                dist: cols[3].to_string(),
+                mean_block: cols[4].parse().map_err(|_| bad("bad mean_block"))?,
+                rank: cols[5].parse().map_err(|_| bad("bad rank"))?,
+                algo: AlgoKind::parse(cols[6])?,
+                model_time: cols[7].parse().map_err(|_| bad("bad model_time"))?,
+                measured_time: match cols[8] {
+                    "-" => None,
+                    v => Some(v.parse().map_err(|_| bad("bad measured_time"))?),
+                },
+            });
+        }
+        Ok(TuningTable { entries })
+    }
+
+    pub fn load(path: &Path) -> crate::Result<TuningTable> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Merge `incoming`: every scenario it covers replaces the stored
+    /// rows for that scenario wholesale (rankings are atomic).
+    pub fn merge_from(&mut self, incoming: TuningTable) {
+        let keys: std::collections::HashSet<_> =
+            incoming.entries.iter().map(scenario_key).collect();
+        self.entries.retain(|e| !keys.contains(&scenario_key(e)));
+        self.entries.extend(incoming.entries);
+    }
+
+    /// Write this table to `path`, merging into whatever is already
+    /// stored there (so one file accumulates many scenarios). Tables are
+    /// regenerable caches, not sources of truth: an existing file that
+    /// fails to parse (corrupt, or a future version) is replaced rather
+    /// than propagating an error.
+    pub fn save_merged(&self, path: &Path) -> crate::Result<()> {
+        let mut on_disk = if path.exists() {
+            Self::load(path).unwrap_or_default()
+        } else {
+            TuningTable::default()
+        };
+        on_disk.merge_from(self.clone());
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, on_disk.to_tsv())?;
+        Ok(())
+    }
+
+    /// The selected (rank-1) algorithm for a machine/topology, matched on
+    /// the nearest stored mean block size. Returns `None` unless a
+    /// snapshot within 2x of `mean_block` exists — extrapolating further
+    /// is worse than falling back to the heuristic or re-selecting.
+    pub fn lookup(
+        &self,
+        machine: &str,
+        p: usize,
+        q: usize,
+        mean_block: f64,
+    ) -> Option<&TuningEntry> {
+        let mut best: Option<(&TuningEntry, f64)> = None;
+        for e in &self.entries {
+            if e.rank != 1 || e.machine != machine || e.p != p || e.q != q {
+                continue;
+            }
+            let d = (e.mean_block.max(1.0) / mean_block.max(1.0)).ln().abs();
+            if best.as_ref().map(|b| d < b.1).unwrap_or(true) {
+                best = Some((e, d));
+            }
+        }
+        best.and_then(|(e, d)| (d <= std::f64::consts::LN_2 + 1e-12).then_some(e))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +383,105 @@ mod tests {
                 panic!("unexpected kind in hier sweep");
             }
         }
+    }
+
+    fn entry(machine: &str, p: usize, mean: f64, rank: usize, algo: AlgoKind) -> TuningEntry {
+        TuningEntry {
+            machine: machine.to_string(),
+            p,
+            q: 8,
+            dist: "uniform".to_string(),
+            mean_block: mean,
+            rank,
+            algo,
+            model_time: 1e-3 * rank as f64,
+            measured_time: if rank == 1 { Some(1.1e-3) } else { None },
+        }
+    }
+
+    #[test]
+    fn table_roundtrips_through_tsv() {
+        let hier = AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 };
+        let t = TuningTable {
+            entries: vec![
+                entry("fugaku", 256, 256.0, 1, hier),
+                entry("fugaku", 256, 256.0, 2, AlgoKind::Tuna { radix: 2 }),
+                entry("polaris", 64, 8192.0, 1, AlgoKind::Vendor),
+            ],
+        };
+        let text = t.to_tsv();
+        assert!(text.starts_with(TuningTable::VERSION_HEADER));
+        let back = TuningTable::parse(&text).unwrap();
+        assert_eq!(back.entries, t.entries);
+    }
+
+    #[test]
+    fn table_rejects_wrong_version() {
+        assert!(TuningTable::parse("# tuna-tuning-table v99\n").is_err());
+        assert!(TuningTable::parse("").is_err());
+    }
+
+    #[test]
+    fn table_lookup_matches_nearest_mean_within_2x() {
+        let t = TuningTable {
+            entries: vec![
+                entry("fugaku", 256, 128.0, 1, AlgoKind::Tuna { radix: 2 }),
+                entry("fugaku", 256, 8192.0, 1, AlgoKind::Tuna { radix: 256 }),
+                entry("fugaku", 256, 8192.0, 2, AlgoKind::Vendor),
+            ],
+        };
+        // Nearest snapshot within 2x wins; rank-2 rows never surface.
+        assert_eq!(
+            t.lookup("fugaku", 256, 8, 200.0).unwrap().algo,
+            AlgoKind::Tuna { radix: 2 }
+        );
+        assert_eq!(
+            t.lookup("fugaku", 256, 8, 10000.0).unwrap().algo,
+            AlgoKind::Tuna { radix: 256 }
+        );
+        // Too far from any snapshot (128 * 2 < 1000 < 8192 / 2): no hit.
+        assert!(t.lookup("fugaku", 256, 8, 1000.0).is_none());
+        // Other keys must match exactly.
+        assert!(t.lookup("polaris", 256, 8, 200.0).is_none());
+        assert!(t.lookup("fugaku", 128, 8, 200.0).is_none());
+    }
+
+    #[test]
+    fn table_merge_replaces_scenarios_wholesale() {
+        let mut base = TuningTable {
+            entries: vec![
+                entry("fugaku", 256, 256.0, 1, AlgoKind::Tuna { radix: 2 }),
+                entry("fugaku", 256, 256.0, 2, AlgoKind::Vendor),
+                entry("fugaku", 64, 256.0, 1, AlgoKind::Tuna { radix: 8 }),
+            ],
+        };
+        base.merge_from(TuningTable {
+            entries: vec![entry("fugaku", 256, 256.0, 1, AlgoKind::TunaAuto)],
+        });
+        // The P=256 scenario is replaced (both rows gone), P=64 survives.
+        assert_eq!(base.entries.len(), 2);
+        assert!(base
+            .entries
+            .iter()
+            .any(|e| e.p == 256 && e.algo == AlgoKind::TunaAuto));
+        assert!(base.entries.iter().any(|e| e.p == 64));
+    }
+
+    #[test]
+    fn table_save_merged_accumulates_on_disk() {
+        let dir = std::env::temp_dir().join("tuna_tuning_table_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = table_path(&dir, "fugaku");
+        let a = TuningTable {
+            entries: vec![entry("fugaku", 64, 256.0, 1, AlgoKind::Tuna { radix: 8 })],
+        };
+        a.save_merged(&path).unwrap();
+        let b = TuningTable {
+            entries: vec![entry("fugaku", 256, 256.0, 1, AlgoKind::TunaAuto)],
+        };
+        b.save_merged(&path).unwrap();
+        let merged = TuningTable::load(&path).unwrap();
+        assert_eq!(merged.entries.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -39,10 +39,11 @@ pub enum FftBackend {
 }
 
 impl FftBackend {
-    /// Use PJRT when `artifacts/manifest.tsv` exists, else naive.
+    /// Use PJRT when this build carries the `pjrt` feature and
+    /// `artifacts/manifest.tsv` exists, else naive.
     pub fn auto() -> FftBackend {
         let dir = PathBuf::from("artifacts");
-        if dir.join("manifest.tsv").exists() {
+        if crate::runtime::pjrt_available() && crate::runtime::artifacts_present(&dir) {
             FftBackend::Pjrt { dir }
         } else {
             FftBackend::Naive

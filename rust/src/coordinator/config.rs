@@ -103,6 +103,51 @@ impl RunConfig {
     }
 }
 
+/// Configuration of a selector run (`tuna select`): the experiment point
+/// plus selection-specific knobs.
+#[derive(Clone, Debug)]
+pub struct SelectConfig {
+    pub run: RunConfig,
+    /// How many model-ranked candidates to refine with engine
+    /// measurements.
+    pub shortlist: usize,
+    /// Whether to refine at all (pure model ranking when false).
+    pub refine: bool,
+}
+
+impl Default for SelectConfig {
+    fn default() -> Self {
+        SelectConfig {
+            run: RunConfig::default(),
+            shortlist: 6,
+            refine: true,
+        }
+    }
+}
+
+impl SelectConfig {
+    /// Parse `key=value` arguments: selector keys (`shortlist=N`,
+    /// `refine=true|false`) are consumed here, everything else is
+    /// delegated to [`RunConfig::parse_args`].
+    pub fn parse_args(args: &[String]) -> Result<SelectConfig> {
+        let mut cfg = SelectConfig::default();
+        let mut rest: Vec<String> = Vec::new();
+        for arg in args {
+            match arg.split_once('=') {
+                Some(("shortlist", v)) => cfg.shortlist = parse_num("shortlist", v)?,
+                Some(("refine", v)) => {
+                    cfg.refine = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad bool for refine: `{v}`")))?
+                }
+                _ => rest.push(arg.clone()),
+            }
+        }
+        cfg.run = RunConfig::parse_args(&rest)?;
+        Ok(cfg)
+    }
+}
+
 fn parse_num(key: &str, v: &str) -> Result<usize> {
     v.parse()
         .map_err(|_| TunaError::config(format!("bad number for {key}: `{v}`")))
@@ -154,5 +199,18 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn select_config_splits_its_keys() {
+        let cfg = SelectConfig::parse_args(&args("p=64 q=8 shortlist=3 refine=false seed=9"))
+            .unwrap();
+        assert_eq!(cfg.shortlist, 3);
+        assert!(!cfg.refine);
+        assert_eq!(cfg.run.p, 64);
+        assert_eq!(cfg.run.seed, 9);
+        // Run-config typos still fail loudly through the delegation.
+        assert!(SelectConfig::parse_args(&args("shortlist=3 px=1")).is_err());
+        assert!(SelectConfig::parse_args(&args("refine=maybe")).is_err());
     }
 }

@@ -10,7 +10,7 @@
 pub mod config;
 pub mod metrics;
 
-pub use config::RunConfig;
+pub use config::{RunConfig, SelectConfig};
 
 use crate::algos::{run_alltoallv, AlgoKind};
 use crate::comm::{Engine, PhaseBreakdown, Topology};

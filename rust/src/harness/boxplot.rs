@@ -1,9 +1,10 @@
 //! Parameter-sweep box plots: the paper presents tunable algorithms as a
 //! box over the parameter range with the ideal value annotated beneath
-//! (Figs. 8, 10, 12).
+//! (Figs. 8, 10, 12). The ideal comes from the selector's measured
+//! ranking ([`select::rank_measured`]) rather than a local argmin.
 
-use crate::algos::AlgoKind;
-use crate::coordinator::{measure, Fidelity, Measurement, RunConfig};
+use crate::algos::{select, AlgoKind};
+use crate::coordinator::{Fidelity, Measurement, RunConfig};
 use crate::util::stats::Summary;
 
 /// Result of sweeping one tunable algorithm over its parameter range.
@@ -18,26 +19,18 @@ pub struct SweepBox {
     pub fidelity: Fidelity,
 }
 
-/// Measure every candidate, box the medians, find the ideal.
+/// Measure every candidate through the selector, box the medians, and
+/// take the ideal from its ranking.
 pub fn sweep_box(cfg: &RunConfig, candidates: &[AlgoKind]) -> crate::Result<SweepBox> {
     assert!(!candidates.is_empty());
-    let mut medians = Vec::with_capacity(candidates.len());
-    let mut best: Option<(AlgoKind, f64, Measurement)> = None;
-    let mut fidelity = Fidelity::Engine;
-    for kind in candidates {
-        let m = measure(cfg, kind)?;
-        fidelity = m.fidelity;
-        let t = m.median();
-        medians.push(t);
-        if best.as_ref().map(|b| t < b.1).unwrap_or(true) {
-            best = Some((*kind, t, m));
-        }
-    }
-    let (best, best_time, best_measure) = best.unwrap();
+    let mut ranked = select::rank_measured_detailed(cfg, candidates)?;
+    let medians: Vec<f64> = ranked.iter().map(|(sc, _)| sc.time()).collect();
+    let (best, best_measure) = ranked.swap_remove(0);
+    let fidelity = best_measure.fidelity;
     Ok(SweepBox {
         box_stats: Summary::of(&medians),
-        best,
-        best_time,
+        best: best.kind,
+        best_time: best.time(),
         best_measure,
         fidelity,
     })

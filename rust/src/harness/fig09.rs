@@ -1,17 +1,27 @@
 //! Fig. 9 — ranges of radix where TuNA outperforms MPI_Alltoallv, per
 //! (P, S), rendered as a textual heatmap: the winning sub-range of
 //! [2, P], and the gain at the ideal radix (the paper's red intensity).
+//! The "ideal r" cell comes from the selector's measured ranking and is
+//! cross-checked against its analytic pick ("model r").
 
 use super::FigOpts;
-use crate::algos::{tuning, AlgoKind};
+use crate::algos::{select, tuning, AlgoKind};
 use crate::coordinator::measure;
 use crate::util::table::Table;
+
+fn radix_of(kind: &AlgoKind) -> usize {
+    match kind {
+        AlgoKind::Tuna { radix } => *radix,
+        _ => unreachable!("fig9 ranks only tuna candidates"),
+    }
+}
 
 pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
     let mut table = Table::new(
         "Fig. 9 — winning radix ranges (TuNA < vendor)",
         &[
-            "machine", "P", "S(B)", "win range", "of range", "win frac", "ideal r", "gain",
+            "machine", "P", "S(B)", "win range", "of range", "win frac", "ideal r", "model r",
+            "gain",
         ],
     );
 
@@ -20,22 +30,29 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
             for &s in &opts.ss() {
                 let cfg = opts.cfg(profile, p, s);
                 let vendor = measure(&cfg, &AlgoKind::Vendor)?.median();
-                let radices = tuning::radix_candidates(p);
-                let mut wins: Vec<usize> = Vec::new();
-                let mut best = (0usize, f64::INFINITY);
-                for &r in &radices {
-                    let t = measure(&cfg, &AlgoKind::Tuna { radix: r })?.median();
-                    if t < vendor {
-                        wins.push(r);
-                    }
-                    if t < best.1 {
-                        best = (r, t);
-                    }
-                }
+                let candidates: Vec<AlgoKind> = tuning::radix_candidates(p)
+                    .into_iter()
+                    .map(|radix| AlgoKind::Tuna { radix })
+                    .collect();
+                let ranked = select::rank_measured(&cfg, &candidates)?;
+                let best = ranked[0];
+                let model_pick = ranked
+                    .iter()
+                    .min_by(|a, b| a.model_time.partial_cmp(&b.model_time).unwrap())
+                    .unwrap();
+                let wins: Vec<usize> = ranked
+                    .iter()
+                    .filter(|sc| sc.time() < vendor)
+                    .map(|sc| radix_of(&sc.kind))
+                    .collect();
                 let win_range = if wins.is_empty() {
                     "none".to_string()
                 } else {
-                    format!("[{}..{}]", wins.iter().min().unwrap(), wins.iter().max().unwrap())
+                    format!(
+                        "[{}..{}]",
+                        wins.iter().min().unwrap(),
+                        wins.iter().max().unwrap()
+                    )
                 };
                 table.row(vec![
                     profile.name.into(),
@@ -43,13 +60,16 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
                     s.to_string(),
                     win_range,
                     format!("[2..{p}]"),
-                    format!("{:.0}%", 100.0 * wins.len() as f64 / radices.len() as f64),
-                    best.0.to_string(),
-                    format!("{:.2}x", vendor / best.1),
+                    format!("{:.0}%", 100.0 * wins.len() as f64 / ranked.len() as f64),
+                    radix_of(&best.kind).to_string(),
+                    radix_of(&model_pick.kind).to_string(),
+                    format!("{:.2}x", vendor / best.time()),
                 ]);
             }
         }
     }
-    table.note("gain = vendor / best TuNA; 'win frac' = fraction of sampled radices beating vendor");
+    table.note(
+        "gain = vendor / best TuNA; ideal r = selector's measured pick, model r = its analytic pick",
+    );
     opts.finish("fig09_radix_heatmap", vec![table])
 }

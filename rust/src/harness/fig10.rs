@@ -6,9 +6,10 @@
 
 use super::boxplot::{box_cells, sweep_box, BOX_HEADER};
 use super::FigOpts;
-use crate::algos::{tuning, AlgoKind};
-use crate::comm::Phase;
+use crate::algos::{select, tuning, AlgoKind};
+use crate::comm::{Phase, Topology};
 use crate::util::table::{cell_f, Table};
+use crate::workload::BlockSizes;
 
 /// Candidate (radix, block_count) grid for one hier variant.
 pub fn hier_candidates(q: usize, n: usize, coalesced: bool) -> Vec<AlgoKind> {
@@ -33,7 +34,9 @@ pub fn hier_candidates(q: usize, n: usize, coalesced: bool) -> Vec<AlgoKind> {
 pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
     let mut header = vec!["machine", "P", "S(B)", "variant"];
     header.extend_from_slice(&BOX_HEADER);
-    header.extend_from_slice(&["ideal r", "ideal bc", "intra(ms)", "inter(ms)", "fidelity"]);
+    header.extend_from_slice(&[
+        "ideal r", "ideal bc", "model r", "model bc", "intra(ms)", "inter(ms)", "fidelity",
+    ]);
     let mut table = Table::new(
         "Fig. 10 — coalesced vs staggered TuNA_l^g parameter study",
         &header,
@@ -48,16 +51,27 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
             }
             for &s in &opts.ss() {
                 let cfg = opts.cfg(profile, p, s);
+                let mean = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed).mean_size();
                 for coalesced in [true, false] {
                     let candidates = hier_candidates(q, n, coalesced);
                     let sb = sweep_box(&cfg, &candidates)?;
-                    let (ideal_r, ideal_bc) = match sb.best {
+                    let params = |kind: &AlgoKind| match *kind {
                         AlgoKind::TunaHierCoalesced { radix, block_count }
                         | AlgoKind::TunaHierStaggered { radix, block_count } => {
                             (radix, block_count)
                         }
                         _ => unreachable!(),
                     };
+                    let (ideal_r, ideal_bc) = params(&sb.best);
+                    // The selector's analytic pick, as a cross-check on
+                    // the measured ideal.
+                    let model_ranked = select::model_rank(
+                        &cfg.profile,
+                        Topology::new(cfg.p, cfg.q),
+                        mean,
+                        &candidates,
+                    );
+                    let (model_r, model_bc) = params(&model_ranked[0].kind);
                     let ph = &sb.best_measure.phases;
                     let intra = ph.get(Phase::Prepare)
                         + ph.get(Phase::Metadata)
@@ -73,6 +87,8 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
                     row.extend(box_cells(&sb.box_stats));
                     row.push(ideal_r.to_string());
                     row.push(ideal_bc.to_string());
+                    row.push(model_r.to_string());
+                    row.push(model_bc.to_string());
                     row.push(cell_f(intra * 1e3));
                     row.push(cell_f(inter * 1e3));
                     row.push(sb.fidelity.name().into());

@@ -7,8 +7,10 @@
 //! compares against (spread-out, OpenMPI linear, pairwise, scattered), a
 //! hierarchical virtual-time network engine to run them on, the paper's
 //! applications (distributed FFT via PJRT-executed Pallas kernels, graph
-//! transitive closure), and a harness regenerating every evaluation
-//! figure (Fig. 7 - Fig. 16).
+//! transitive closure), a harness regenerating every evaluation
+//! figure (Fig. 7 - Fig. 16), and **TunaSelect**
+//! ([`algos::select`]): cost-model-driven auto-selection across every
+//! algorithm family, persisted as versioned tuning tables.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.

@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   run      one all-to-allv measurement (algo=... plus key=value config)
 //!   figure   regenerate a paper figure (fig7..fig16 | all) [--full]
-//!   tune     autotune TuNA radix / TuNA_l^g params for a workload
+//!   select   rank every algorithm family with the cost model, refine on
+//!            the engine, persist a tuning table (TunaSelect)
+//!   tune     table-backed autotune: answer from artifacts/tuning/ when a
+//!            snapshot exists, full selection otherwise
 //!   tc       distributed transitive closure on a synthetic graph
 //!   fft      distributed 4-step FFT through the PJRT runtime
 //!   list     list algorithms, profiles and distributions
@@ -11,15 +14,20 @@
 //! Examples:
 //!   tuna run algo=tuna:r=8 p=128 q=16 profile=fugaku dist=uniform:1024
 //!   tuna figure fig8 --full
+//!   tuna select p=256 q=32 dist=uniform:512 shortlist=8
+//!   tuna select --write-golden
 //!   tuna tune p=256 q=32 dist=uniform:512
 //!   tuna tc p=8 q=4 algo=tuna-hier-coalesced:r=2,b=1
 //!   tuna fft n1=64 n2=64 p=8 algo=tuna:r=4
 
-use tuna::algos::{self, AlgoKind};
+use std::path::Path;
+
+use tuna::algos::{self, select, tuning, AlgoKind};
 use tuna::apps;
-use tuna::coordinator::{measure, RunConfig};
+use tuna::coordinator::{measure, RunConfig, SelectConfig};
 use tuna::harness::{self, FigOpts};
 use tuna::util::stats::fmt_time;
+use tuna::util::table::Table;
 use tuna::workload::graph::Graph;
 use tuna::{Result, TunaError};
 
@@ -37,6 +45,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd {
         "run" => cmd_run(rest),
         "figure" => cmd_figure(rest),
+        "select" => cmd_select(rest),
         "tune" => cmd_tune(rest),
         "tc" => cmd_tc(rest),
         "fft" => cmd_fft(rest),
@@ -57,7 +66,12 @@ tuna — Configurable Non-uniform All-to-all Algorithms (TuNA / TuNA_l^g)
 USAGE:
   tuna run algo=<spec> [key=value ...]     measure one algorithm
   tuna figure <fig7..fig16|all> [--full]   regenerate paper figures
-  tuna tune [key=value ...]                autotune radix / block_count
+  tuna select [key=value ...]              rank all families (cost model +
+                                           engine refinement), persist a
+                                           tuning table under artifacts/tuning/
+  tuna select --write-golden               regenerate tests/golden snapshots
+  tuna tune [key=value ...]                table-backed autotune (force=true
+                                           to ignore stored tables)
   tuna tc [n=220] [algo=<spec>] [key=value ...]
   tuna fft [n1=64] [n2=64] [algo=<spec>] [key=value ...]
   tuna list                                list algorithms / profiles / dists
@@ -65,8 +79,11 @@ USAGE:
 CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2), seed, iters,
   real (true|false), limit-linear, limit-log
+SELECT KEYS: shortlist (engine-refined candidates, default 6),
+  refine (true|false), top (rows printed), table-dir, golden-dir
 ALGO SPECS: spread-out | ompi-linear | pairwise | scattered:b=N | vendor |
-  bruck2 | tuna:r=N | tuna-hier-coalesced:r=N,b=M | tuna-hier-staggered:r=N,b=M
+  bruck2 | tuna:r=N | tuna:auto | tuna-hier-coalesced:r=N,b=M |
+  tuna-hier-staggered:r=N,b=M
 ";
 
 /// Split `algo=` / figure-local keys from RunConfig keys.
@@ -89,9 +106,7 @@ fn get<'a>(special: &'a [(String, String)], key: &str) -> Option<&'a str> {
 fn parse_algo(spec: Option<&str>, default: AlgoKind) -> Result<AlgoKind> {
     match spec {
         None => Ok(default),
-        Some(s) => {
-            AlgoKind::parse(s).ok_or_else(|| TunaError::config(format!("bad algo spec `{s}`")))
-        }
+        Some(s) => AlgoKind::parse(s),
     }
 }
 
@@ -156,41 +171,152 @@ fn cmd_figure(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_tune(args: &[String]) -> Result<()> {
-    let cfg = RunConfig::parse_args(args)?;
-    let engine = tuna::comm::Engine::new(
-        cfg.profile.clone(),
-        tuna::comm::Topology::new(cfg.p, cfg.q),
+fn cmd_select(args: &[String]) -> Result<()> {
+    let mut write_golden = false;
+    for a in args {
+        match a.as_str() {
+            "--write-golden" => write_golden = true,
+            f if f.starts_with("--") => {
+                return Err(TunaError::config(format!(
+                    "unknown flag `{f}` (did you mean --write-golden?)"
+                )));
+            }
+            _ => {}
+        }
+    }
+    let kv: Vec<String> = args.iter().filter(|a| !a.starts_with("--")).cloned().collect();
+    let (special, cfg_args) = split_args(&kv, &["table-dir", "top", "golden-dir"]);
+    if write_golden {
+        // Prefer the build-time source path when it still exists on this
+        // host (the developer workflow); fall back to a cwd-relative
+        // path for relocated binaries.
+        let dir = match get(&special, "golden-dir") {
+            Some(d) => std::path::PathBuf::from(d),
+            None => {
+                let built = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+                if built.exists() {
+                    built
+                } else {
+                    std::path::PathBuf::from("tests/golden")
+                }
+            }
+        };
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("estimator.tsv"), select::golden_estimator_tsv())?;
+        std::fs::write(dir.join("selector.tsv"), select::golden_selector_tsv())?;
+        println!("golden snapshots regenerated under {}", dir.display());
+        return Ok(());
+    }
+    let table_dir = get(&special, "table-dir")
+        .unwrap_or(tuning::DEFAULT_TABLE_DIR)
+        .to_string();
+    let top: usize = get(&special, "top")
+        .unwrap_or("10")
+        .parse()
+        .map_err(|_| TunaError::config("bad top"))?;
+    let cfg = SelectConfig::parse_args(&cfg_args)?;
+
+    let sel = select::select(&cfg)?;
+    println!(
+        "TunaSelect on {} P={} Q={} dist={:?} (mean block {:.0} B): {} candidates, {} engine-refined",
+        sel.machine,
+        sel.p,
+        sel.q,
+        cfg.run.dist,
+        sel.mean_block,
+        sel.ranked.len(),
+        sel.refined
     );
-    let sizes = tuna::workload::BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
+    let mut t = Table::new(
+        format!("TunaSelect ranking (top {top})"),
+        &["rank", "algo", "model", "measured"],
+    );
+    for (i, sc) in sel.ranked.iter().take(top).enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            sc.kind.name(),
+            fmt_time(sc.model_time),
+            sc.measured.map(fmt_time).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let path = tuning::table_path(Path::new(&table_dir), &sel.machine);
+    sel.to_table().save_merged(&path)?;
+    println!("tuning table updated: {}", path.display());
+    Ok(())
+}
+
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let (special, cfg_args) = split_args(args, &["table-dir", "force"]);
+    let table_dir = get(&special, "table-dir")
+        .unwrap_or(tuning::DEFAULT_TABLE_DIR)
+        .to_string();
+    let force = match get(&special, "force") {
+        None => false,
+        Some(v) => v
+            .parse()
+            .map_err(|_| TunaError::config(format!("bad bool for force: `{v}`")))?,
+    };
+    let cfg = RunConfig::parse_args(&cfg_args)?;
+    let mean = tuna::workload::BlockSizes::generate(cfg.p, cfg.dist, cfg.seed).mean_size();
+
+    // Table-backed fast path: answer from a persisted ranking when one
+    // covers this scenario.
+    let path = tuning::table_path(Path::new(&table_dir), cfg.profile.name);
+    if !force {
+        match tuning::TuningTable::load(&path) {
+            Ok(table) => {
+                if let Some(hit) = table.lookup(cfg.profile.name, cfg.p, cfg.q, mean) {
+                    println!(
+                        "tuning table hit ({}): best {} (model {}, measured {})",
+                        path.display(),
+                        hit.algo.name(),
+                        fmt_time(hit.model_time),
+                        hit.measured_time.map(fmt_time).unwrap_or_else(|| "-".into())
+                    );
+                    println!(
+                        "  snapshot taken at mean block {:.0} B; pass force=true to re-sweep",
+                        hit.mean_block
+                    );
+                    return Ok(());
+                }
+            }
+            // A present-but-unreadable table is worth a warning (it will
+            // be replaced on save); a missing one is the normal cold
+            // path.
+            Err(e) if path.exists() => {
+                eprintln!(
+                    "warning: ignoring unreadable tuning table {}: {e}",
+                    path.display()
+                );
+            }
+            Err(_) => {}
+        }
+    }
+
+    // No snapshot: run the full selector, report per-family bests, and
+    // persist the ranking for next time.
     println!(
         "autotuning on {} P={} Q={} dist={:?}",
         cfg.profile.name, cfg.p, cfg.q, cfg.dist
     );
-
-    let tuna_res = algos::tuning::autotune_tuna(&engine, &sizes)?;
-    println!(
-        "  TuNA: best {} at {}",
-        tuna_res.best.name(),
-        fmt_time(tuna_res.best_time)
-    );
-    let heur = algos::tuning::heuristic_radix(cfg.p, sizes.mean_size());
-    println!(
-        "  heuristic suggests r={heur} (mean block {:.0} B)",
-        sizes.mean_size()
-    );
-
-    if cfg.q >= 2 && cfg.p / cfg.q >= 2 {
-        for coalesced in [true, false] {
-            let res = algos::tuning::autotune_hier(&engine, &sizes, coalesced)?;
-            println!(
-                "  TuNA_l^g {}: best {} at {}",
-                if coalesced { "coalesced" } else { "staggered" },
-                res.best.name(),
-                fmt_time(res.best_time)
-            );
+    let sel = select::select(&SelectConfig {
+        run: cfg.clone(),
+        ..SelectConfig::default()
+    })?;
+    let mut seen: Vec<&str> = Vec::new();
+    for sc in &sel.ranked {
+        let family = sc.kind.family();
+        if !seen.contains(&family) {
+            seen.push(family);
+            println!("  best {:<20} {} at {}", family, sc.kind.name(), fmt_time(sc.time()));
         }
     }
+    let heur = algos::tuning::heuristic_radix(cfg.p, mean);
+    println!("  heuristic suggests r={heur} (mean block {mean:.0} B)");
+    sel.to_table().save_merged(&path)?;
+    println!("  ranking saved to {}", path.display());
     Ok(())
 }
 
@@ -289,6 +415,7 @@ fn cmd_list() -> Result<()> {
         "vendor",
         "bruck2",
         "tuna:r=N",
+        "tuna:auto",
         "tuna-hier-coalesced:r=N,b=M",
         "tuna-hier-staggered:r=N,b=M",
     ] {

@@ -10,7 +10,7 @@
 //! distributions are run on the engine instead). Validated against the
 //! engine in `tests/analytic_vs_engine.rs` — see DESIGN.md §6 (4).
 
-use crate::algos::{radix, AlgoKind, VENDOR_BLOCK_COUNT};
+use crate::algos::{radix, tuning, AlgoKind, VENDOR_BLOCK_COUNT};
 use crate::comm::clock::Clock;
 use crate::comm::{Phase, PhaseBreakdown, Topology};
 use crate::model::{Link, MachineProfile};
@@ -44,6 +44,9 @@ impl<'a> Estimator<'a> {
             AlgoKind::Pairwise => self.pairwise(mean_block),
             AlgoKind::Bruck2 => self.tuna(mean_block, 2),
             AlgoKind::Tuna { radix } => self.tuna(mean_block, radix),
+            AlgoKind::TunaAuto => {
+                self.tuna(mean_block, tuning::heuristic_radix(self.topo.p(), mean_block))
+            }
             AlgoKind::TunaHierCoalesced { radix, block_count } => {
                 self.hier(mean_block, radix, block_count, true)
             }

@@ -3,118 +3,190 @@
 //! path. Python never runs at execution time — the interchange format is
 //! HLO *text* (the bundled xla_extension 0.5.1 rejects jax >= 0.5's
 //! 64-bit-id serialized protos; the text parser reassigns ids).
+//!
+//! The PJRT client itself comes from the `xla` crate, which is not
+//! vendored in the offline build environment; it is gated behind the
+//! non-default `pjrt` cargo feature (see `Cargo.toml`). Without the
+//! feature, [`PjrtRuntime`] keeps the same API but `open` fails with a
+//! clear error and the FFT app stays on its naive Rust backend.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use crate::error::{Result, TunaError};
+use std::path::Path;
 
 pub use manifest::{Manifest, ManifestEntry};
 
-/// A compiled-executable cache over a PJRT CPU client.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    artifacts_dir: PathBuf,
-    manifest: Manifest,
+#[cfg(feature = "pjrt")]
+mod client {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use super::Manifest;
+    use crate::error::{Result, TunaError};
+
+    /// A compiled-executable cache over a PJRT CPU client.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        artifacts_dir: PathBuf,
+        manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        /// Open the runtime against an artifacts directory containing
+        /// `manifest.tsv` plus `*.hlo.txt` files.
+        pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+            let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(&artifacts_dir.join("manifest.tsv"))?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| TunaError::runtime(format!("PJRT CPU client: {e}")))?;
+            Ok(PjrtRuntime {
+                client,
+                executables: HashMap::new(),
+                artifacts_dir,
+                manifest,
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// True if the manifest advertises `name`.
+        pub fn has(&self, name: &str) -> bool {
+            self.manifest.get(name).is_some()
+        }
+
+        fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+            if self.executables.contains_key(name) {
+                return Ok(());
+            }
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| TunaError::runtime(format!("artifact `{name}` not in manifest")))?;
+            let path = self.artifacts_dir.join(&entry.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| TunaError::runtime("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| TunaError::runtime(format!("parse {path:?}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| TunaError::runtime(format!("compile `{name}`: {e}")))?;
+            self.executables.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute artifact `name` on f32 tensors `(data, dims)`; returns the
+        /// flattened f32 contents of each tuple element (artifacts are lowered
+        /// with `return_tuple=True`).
+        pub fn execute_f32(
+            &mut self,
+            name: &str,
+            inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.ensure_compiled(name)?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    return Err(TunaError::runtime(format!(
+                        "artifact `{name}`: input has {} elements but dims {:?}",
+                        data.len(),
+                        dims
+                    )));
+                }
+                let lit = xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| TunaError::runtime(format!("reshape: {e}")))?;
+                literals.push(lit);
+            }
+            let exe = self.executables.get(name).expect("just compiled");
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| TunaError::runtime(format!("execute `{name}`: {e}")))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| TunaError::runtime(format!("fetch result: {e}")))?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| TunaError::runtime(format!("untuple: {e}")))?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    lit.to_vec::<f32>()
+                        .map_err(|e| TunaError::runtime(format!("to_vec: {e}")))
+                })
+                .collect()
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// Open the runtime against an artifacts directory containing
-    /// `manifest.tsv` plus `*.hlo.txt` files.
-    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
-        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&artifacts_dir.join("manifest.tsv"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| TunaError::runtime(format!("PJRT CPU client: {e}")))?;
-        Ok(PjrtRuntime {
-            client,
-            executables: HashMap::new(),
-            artifacts_dir,
-            manifest,
-        })
+#[cfg(not(feature = "pjrt"))]
+mod client {
+    use std::path::Path;
+
+    use super::Manifest;
+    use crate::error::{Result, TunaError};
+
+    /// API-compatible stub used without the `pjrt` feature. The manifest
+    /// is still checked first so a missing `make artifacts` run produces
+    /// the same actionable error as the real client.
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// True if the manifest advertises `name`.
-    pub fn has(&self, name: &str) -> bool {
-        self.manifest.get(name).is_some()
-    }
-
-    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
+    impl PjrtRuntime {
+        pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+            let dir = artifacts_dir.as_ref();
+            let _ = Manifest::load(&dir.join("manifest.tsv"))?;
+            Err(TunaError::runtime(
+                "PJRT runtime unavailable: tuna was built without the `pjrt` \
+                 cargo feature (see rust/Cargo.toml)",
+            ))
         }
-        let entry = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| TunaError::runtime(format!("artifact `{name}` not in manifest")))?;
-        let path = self.artifacts_dir.join(&entry.path);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| TunaError::runtime("non-utf8 artifact path"))?,
-        )
-        .map_err(|e| TunaError::runtime(format!("parse {path:?}: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| TunaError::runtime(format!("compile `{name}`: {e}")))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    /// Execute artifact `name` on f32 tensors `(data, dims)`; returns the
-    /// flattened f32 contents of each tuple element (artifacts are lowered
-    /// with `return_tuple=True`).
-    pub fn execute_f32(
-        &mut self,
-        name: &str,
-        inputs: &[(&[f32], &[i64])],
-    ) -> Result<Vec<Vec<f32>>> {
-        self.ensure_compiled(name)?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let n: i64 = dims.iter().product();
-            if n as usize != data.len() {
-                return Err(TunaError::runtime(format!(
-                    "artifact `{name}`: input has {} elements but dims {:?}",
-                    data.len(),
-                    dims
-                )));
-            }
-            let lit = xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| TunaError::runtime(format!("reshape: {e}")))?;
-            literals.push(lit);
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let exe = self.executables.get(name).expect("just compiled");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| TunaError::runtime(format!("execute `{name}`: {e}")))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| TunaError::runtime(format!("fetch result: {e}")))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| TunaError::runtime(format!("untuple: {e}")))?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                lit.to_vec::<f32>()
-                    .map_err(|e| TunaError::runtime(format!("to_vec: {e}")))
-            })
-            .collect()
+
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt feature disabled)".to_string()
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.manifest.get(name).is_some()
+        }
+
+        pub fn execute_f32(
+            &mut self,
+            name: &str,
+            _inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            Err(TunaError::runtime(format!(
+                "cannot execute artifact `{name}`: built without the `pjrt` feature"
+            )))
+        }
     }
+}
+
+pub use client::PjrtRuntime;
+
+/// True when this build can actually execute PJRT artifacts.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// True when `dir` looks like an artifacts directory (has a manifest).
+pub fn artifacts_present(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.tsv").exists()
 }
 
 #[cfg(test)]
@@ -132,7 +204,14 @@ mod tests {
         }
     }
 
+    #[test]
+    fn availability_matches_feature() {
+        assert_eq!(pjrt_available(), cfg!(feature = "pjrt"));
+        assert!(!artifacts_present("/nonexistent-dir"));
+    }
+
     // Execution against real artifacts is covered by
-    // `tests/runtime_pjrt.rs` (skips gracefully when `make artifacts` has
-    // not run) and the fft_e2e example.
+    // `tests/runtime_pjrt.rs` (requires the `pjrt` feature and skips
+    // gracefully when `make artifacts` has not run) and the fft_e2e
+    // example.
 }

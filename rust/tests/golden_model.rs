@@ -1,0 +1,111 @@
+//! Golden regression tests for the analytic model and the selector's
+//! rankings. TSV snapshots live under `tests/golden/`; any drift in the
+//! cost model or ranking logic fails here with a pointer to the
+//! intentional-regeneration path.
+//!
+//! Bootstrap: on a fresh clone (no snapshot files) the current output is
+//! written and the test passes with a notice; every later run compares.
+//! Regenerate intentionally with `cargo run -- select --write-golden`
+//! from `rust/` (or delete the files and re-run the tests).
+
+use std::fs;
+use std::path::PathBuf;
+
+use tuna::algos::select;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare two snapshot TSVs: identical structure and non-numeric cells,
+/// numeric cells equal within `rel` (absorbs libm differences between
+/// hosts without letting real model changes through).
+fn compare(golden: &str, current: &str, rel: f64) -> Result<(), String> {
+    let g: Vec<&str> = golden.lines().collect();
+    let c: Vec<&str> = current.lines().collect();
+    if g.len() != c.len() {
+        return Err(format!("line count changed: {} -> {}", g.len(), c.len()));
+    }
+    for (i, (gl, cl)) in g.iter().zip(&c).enumerate() {
+        if gl == cl {
+            continue;
+        }
+        let gcols: Vec<&str> = gl.split('\t').collect();
+        let ccols: Vec<&str> = cl.split('\t').collect();
+        if gcols.len() != ccols.len() {
+            return Err(format!("line {}: column count changed", i + 1));
+        }
+        for (a, b) in gcols.iter().zip(&ccols) {
+            if a == b {
+                continue;
+            }
+            match (a.parse::<f64>(), b.parse::<f64>()) {
+                (Ok(x), Ok(y)) => {
+                    let tol = rel * x.abs().max(y.abs());
+                    if (x - y).abs() > tol {
+                        return Err(format!(
+                            "line {}: {x} vs {y} differ beyond rel tol {rel}",
+                            i + 1
+                        ));
+                    }
+                }
+                _ => return Err(format!("line {}: `{a}` vs `{b}`", i + 1)),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_or_bootstrap(name: &str, current: &str) {
+    let dir = golden_dir();
+    let path = dir.join(name);
+    if path.exists() {
+        let golden = fs::read_to_string(&path).unwrap();
+        if let Err(e) = compare(&golden, current, 1e-6) {
+            panic!(
+                "golden snapshot {name} drifted: {e}\n\
+                 if the model change is intentional, regenerate with \
+                 `cargo run -- select --write-golden` and commit the diff"
+            );
+        }
+    } else {
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(&path, current).unwrap();
+        eprintln!("bootstrapped golden snapshot {name}; later runs compare against it");
+    }
+}
+
+#[test]
+fn estimator_snapshot_is_stable() {
+    let current = select::golden_estimator_tsv();
+    // Determinism within one process: two generations must be identical.
+    assert_eq!(
+        current,
+        select::golden_estimator_tsv(),
+        "estimator snapshot must be deterministic"
+    );
+    assert!(current.starts_with("# tuna-golden estimator v1"));
+    check_or_bootstrap("estimator.tsv", &current);
+}
+
+#[test]
+fn selector_ranking_snapshot_is_stable() {
+    let current = select::golden_selector_tsv();
+    assert_eq!(
+        current,
+        select::golden_selector_tsv(),
+        "selector snapshot must be deterministic"
+    );
+    assert!(current.starts_with("# tuna-golden selector v1"));
+    check_or_bootstrap("selector.tsv", &current);
+}
+
+#[test]
+fn snapshot_comparer_catches_real_drift() {
+    // The tolerance must absorb float noise but catch model changes.
+    let base = "# h\na\t1.000000000000e-3\n";
+    assert!(compare(base, "# h\na\t1.000000000001e-3\n", 1e-6).is_ok());
+    assert!(compare(base, "# h\na\t1.100000000000e-3\n", 1e-6).is_err());
+    assert!(compare(base, "# h\nb\t1.000000000000e-3\n", 1e-6).is_err());
+    assert!(compare(base, "# h\n", 1e-6).is_err());
+}

@@ -1,0 +1,174 @@
+//! Property-based correctness suite: randomized (P, Q, dist, AlgoKind)
+//! cases with real byte-pattern payloads, plus the selector/heuristic
+//! contract that no emitted configuration is ever rejected by
+//! [`AlgoKind::check`]. Failures report the case index and seed so they
+//! reproduce exactly (`util::prop::forall`).
+
+use tuna::algos::{run_alltoallv, select, tuning, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::model::MachineProfile;
+use tuna::util::prng::Pcg64;
+use tuna::util::prop::forall;
+use tuna::workload::{BlockSizes, Dist};
+
+/// Random topology: Q in {1, 2, 3, 4}, 1..=5 nodes, P = Q·N >= 2.
+fn gen_topology(rng: &mut Pcg64) -> (usize, usize) {
+    let q = [1usize, 2, 3, 4][rng.next_below(4) as usize];
+    let nodes = 1 + rng.next_below(5) as usize;
+    let p = (q * nodes).max(2);
+    let q = if p % q == 0 { q } else { 1 };
+    (p, q)
+}
+
+fn gen_dist(rng: &mut Pcg64) -> Dist {
+    match rng.next_below(6) {
+        0 => Dist::Uniform {
+            max: 8 * (1 + rng.next_below(128)),
+        },
+        1 => Dist::normal_default(),
+        2 => Dist::powerlaw_default(),
+        3 => Dist::Const {
+            size: 1 + rng.next_below(512),
+        },
+        4 => Dist::FftN1,
+        _ => Dist::FftN2,
+    }
+}
+
+/// Random algorithm over every family, parameters drawn inside the
+/// ranges `AlgoKind::check` admits for (p, q).
+fn gen_kind(rng: &mut Pcg64, p: usize, q: usize) -> AlgoKind {
+    loop {
+        match rng.next_below(10) {
+            0 => return AlgoKind::SpreadOut,
+            1 => return AlgoKind::OmpiLinear,
+            2 => return AlgoKind::Pairwise,
+            3 => {
+                return AlgoKind::Scattered {
+                    block_count: 1 + rng.next_below(p as u64) as usize,
+                }
+            }
+            4 => return AlgoKind::Vendor,
+            5 => return AlgoKind::Bruck2,
+            6 => {
+                return AlgoKind::Tuna {
+                    radix: (2 + rng.next_below(p as u64) as usize).min(p.max(2)),
+                }
+            }
+            7 => return AlgoKind::TunaAuto,
+            8 | 9 if q >= 2 && p / q >= 2 => {
+                let radix = (2 + rng.next_below(q as u64) as usize).min(q);
+                let n = p / q;
+                let coalesced = rng.next_below(2) == 0;
+                let bc_max = if coalesced { n - 1 } else { (n - 1) * q };
+                let block_count = 1 + rng.next_below(bc_max.max(1) as u64) as usize;
+                return if coalesced {
+                    AlgoKind::TunaHierCoalesced { radix, block_count }
+                } else {
+                    AlgoKind::TunaHierStaggered { radix, block_count }
+                };
+            }
+            _ => continue,
+        }
+    }
+}
+
+#[test]
+fn alltoallv_randomized_real_payloads() {
+    forall("alltoallv randomized (P, Q, dist, kind)", 220, |rng| {
+        let (p, q) = gen_topology(rng);
+        let dist = gen_dist(rng);
+        let kind = gen_kind(rng, p, q);
+        let seed = rng.next_u64();
+        let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, dist, seed);
+        match run_alltoallv(&engine, &kind, &sizes, true) {
+            Ok(rep) if rep.validated && rep.makespan > 0.0 => Ok(()),
+            Ok(rep) => Err(format!(
+                "{} P={p} Q={q} {dist:?}: invalid result (makespan {})",
+                kind.name(),
+                rep.makespan
+            )),
+            Err(e) => Err(format!("{} P={p} Q={q} {dist:?}: {e}", kind.name())),
+        }
+    });
+}
+
+#[test]
+fn selector_and_heuristic_never_emit_invalid_params() {
+    forall("selector/heuristic params pass AlgoKind::check", 220, |rng| {
+        // Paper-scale topologies too: validity must not depend on the
+        // engine's comfort zone.
+        let q = [1usize, 2, 4, 8, 16, 32][rng.next_below(6) as usize];
+        let nodes = 1 + rng.next_below(64) as usize;
+        let p = (q * nodes).max(2);
+        let q = if p % q == 0 { q } else { 1 };
+        // Log-uniform mean block size in [1 B, 1 MiB].
+        let mean = (2f64).powf(rng.next_f64() * 20.0);
+
+        let heur = AlgoKind::Tuna {
+            radix: tuning::heuristic_radix(p, mean),
+        };
+        heur.check(p, q)
+            .map_err(|e| format!("heuristic P={p} Q={q} mean={mean:.1}: {e}"))?;
+
+        let pool = select::candidate_pool(p, q);
+        if pool.is_empty() {
+            return Err(format!("empty candidate pool for P={p} Q={q}"));
+        }
+        for kind in &pool {
+            kind.check(p, q)
+                .map_err(|e| format!("pool P={p} Q={q} {}: {e}", kind.name()))?;
+        }
+
+        // The ranking preserves the pool, so its top pick is valid too
+        // (bounded to modest P to keep the estimator loop cheap here).
+        if p <= 256 {
+            let ranked = select::model_rank(
+                &MachineProfile::fugaku(),
+                Topology::new(p, q),
+                mean,
+                &pool,
+            );
+            ranked[0]
+                .kind
+                .check(p, q)
+                .map_err(|e| format!("top-1 P={p} Q={q}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tuna_auto_matches_explicit_heuristic_radix() {
+    // `tuna:auto` must execute exactly TuNA at the heuristic radix for
+    // the global mean block size: same round count, and identical
+    // traffic plus the one mean-agreement allreduce.
+    let (p, q) = (16usize, 4usize);
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+    for (dist, seed) in [
+        (Dist::Uniform { max: 64 }, 7u64),
+        (Dist::Uniform { max: 4096 }, 8),
+        (Dist::powerlaw_default(), 9),
+    ] {
+        let sizes = BlockSizes::generate(p, dist, seed);
+        let total: u64 = (0..p).map(|s| sizes.row(s).iter().sum::<u64>()).sum();
+        let mean = total as f64 / (p * p) as f64;
+        let radix = tuning::heuristic_radix(p, mean);
+
+        let auto = run_alltoallv(&engine, &AlgoKind::TunaAuto, &sizes, true).unwrap();
+        let fixed = run_alltoallv(&engine, &AlgoKind::Tuna { radix }, &sizes, true).unwrap();
+        assert_eq!(auto.rounds, fixed.rounds, "dist {dist:?}");
+        assert!(
+            auto.counters.total_msgs() >= fixed.counters.total_msgs(),
+            "auto must pay for its agreement allreduce ({} < {})",
+            auto.counters.total_msgs(),
+            fixed.counters.total_msgs()
+        );
+        assert_eq!(
+            auto.counters.total_bytes() - fixed.counters.total_bytes(),
+            8 * (auto.counters.total_msgs() - fixed.counters.total_msgs()),
+            "extra traffic must be exactly the 8 B/msg allreduce scalars"
+        );
+    }
+}

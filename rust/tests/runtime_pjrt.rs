@@ -1,7 +1,10 @@
 //! PJRT runtime integration: execute the AOT-lowered Pallas/JAX
 //! artifacts from Rust and validate numerics against the naive oracle.
 //! Skips (with a notice) when `make artifacts` has not been run — CI
-//! without jax can still run the rest of the suite.
+//! without jax can still run the rest of the suite. The whole file is
+//! gated on the `pjrt` feature because the default offline build has no
+//! `xla` crate to execute artifacts with.
+#![cfg(feature = "pjrt")]
 
 use tuna::apps::fft::{dft_matrix, twiddles, CMat};
 use tuna::runtime::PjrtRuntime;

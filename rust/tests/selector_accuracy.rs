@@ -1,0 +1,54 @@
+//! Selector accuracy against exhaustive measurement (the PR's acceptance
+//! bar): on the Fig. 9 grid — P = 256, S from 16 B to 64 KiB — the
+//! model-ranked top-1 TuNA candidate must land within 15% of the
+//! exhaustive engine-sweep best. This is what justifies replacing
+//! argmin sweeps with the cost model at paper scale.
+
+use tuna::algos::{run_alltoallv, select, tuning, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::model::MachineProfile;
+use tuna::workload::{BlockSizes, Dist};
+
+#[test]
+fn model_top1_within_15pct_of_engine_best_on_fig9_grid() {
+    let p = 256;
+    let q = 8; // the quick-grid Fig. 9 topology
+    let profile = MachineProfile::fugaku();
+    let engine = Engine::new(profile.clone(), Topology::new(p, q));
+    let candidates: Vec<AlgoKind> = tuning::radix_candidates(p)
+        .into_iter()
+        .map(|radix| AlgoKind::Tuna { radix })
+        .collect();
+
+    for s in [16u64, 512, 2048, 16384, 65536] {
+        let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 0xF19);
+        let mean = sizes.mean_size();
+
+        // The selector's analytic pick.
+        let ranked = select::model_rank(&profile, engine.topo, mean, &candidates);
+        let top1 = ranked[0].kind;
+
+        // Exhaustive engine sweep over the same radix grid + workload.
+        let mut best = f64::INFINITY;
+        let mut t_top1 = f64::NAN;
+        for kind in &candidates {
+            let t = run_alltoallv(&engine, kind, &sizes, false).unwrap().makespan;
+            if *kind == top1 {
+                t_top1 = t;
+            }
+            best = best.min(t);
+        }
+        assert!(
+            t_top1.is_finite(),
+            "S={s}: model pick {} not in the sweep grid",
+            top1.name()
+        );
+        assert!(
+            t_top1 <= best * 1.15,
+            "S={s}: selector picked {} at {t_top1:.6e}s, engine best is {best:.6e}s \
+             ({:.1}% over the 15% budget)",
+            top1.name(),
+            100.0 * (t_top1 / best - 1.0)
+        );
+    }
+}
