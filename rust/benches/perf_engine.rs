@@ -4,11 +4,19 @@
 //!
 //! * message throughput of the mailbox/clock core (ping-rounds over a
 //!   rank pair and an 8-rank ring);
-//! * whole-algorithm wallclock for representative (algo, P) points, with
-//!   derived messages/second;
+//! * whole-algorithm wallclock for representative (algo, P, mode)
+//!   points — phantom *and* real payloads — with derived messages/second
+//!   and the host copied-bytes counter (the zero-copy rope accounting,
+//!   see `comm::buffer`);
 //! * engine spawn overhead vs P.
 //!
-//! Used before/after every optimization in EXPERIMENTS.md §Perf.
+//! Besides the human-readable table, every run writes a machine-readable
+//! perf trajectory to `BENCH_engine.json` (override with `--out <path>`)
+//! so CI can archive per-commit numbers. `--quick` shrinks the grid to a
+//! smoke-test size for CI.
+//!
+//! Used before/after every optimization in EXPERIMENTS.md §Perf; the
+//! PR 2 acceptance point is `tuna(r=2)` at P = 512 in real mode.
 
 use std::time::Instant;
 
@@ -38,18 +46,41 @@ fn bench_ping(pairs: usize, rounds: usize) -> f64 {
     msgs / t0.elapsed().as_secs_f64()
 }
 
-fn bench_algo(kind: AlgoKind, p: usize, q: usize, s: u64, iters: usize) -> (f64, f64) {
+struct AlgoRow {
+    algo: String,
+    p: usize,
+    q: usize,
+    s: u64,
+    real: bool,
+    s_per_run: f64,
+    sim_msgs_per_sec: f64,
+    copied_bytes: u64,
+    payload_bytes: u64,
+}
+
+fn bench_algo(kind: AlgoKind, p: usize, q: usize, s: u64, iters: usize, real: bool) -> AlgoRow {
     let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
     let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 7);
-    // Warm-up.
-    let rep = run_alltoallv(&engine, &kind, &sizes, false).unwrap();
+    // Warm-up (also the counter source: virtual counters are identical
+    // across runs, and copied_bytes only depends on the mode).
+    let rep = run_alltoallv(&engine, &kind, &sizes, real).unwrap();
     let msgs = rep.counters.total_msgs() as f64;
     let t0 = Instant::now();
     for _ in 0..iters {
-        let _ = run_alltoallv(&engine, &kind, &sizes, false).unwrap();
+        let _ = run_alltoallv(&engine, &kind, &sizes, real).unwrap();
     }
     let per_run = t0.elapsed().as_secs_f64() / iters as f64;
-    (per_run, msgs / per_run)
+    AlgoRow {
+        algo: kind.name(),
+        p,
+        q,
+        s,
+        real,
+        s_per_run: per_run,
+        sim_msgs_per_sec: msgs / per_run,
+        copied_bytes: rep.counters.copied_bytes,
+        payload_bytes: sizes.total_bytes(),
+    }
 }
 
 fn bench_spawn(p: usize) -> f64 {
@@ -59,41 +90,95 @@ fn bench_spawn(p: usize) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
-fn main() {
-    println!("== perf_engine: L3 host-side throughput ==");
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
 
-    for (pairs, rounds) in [(1usize, 20_000usize), (4, 5_000)] {
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_engine.json".to_string());
+
+    println!(
+        "== perf_engine: L3 host-side throughput ({}) ==",
+        if quick { "quick" } else { "full" }
+    );
+
+    let ping_grid: &[(usize, usize)] = if quick {
+        &[(1, 2_000), (4, 500)]
+    } else {
+        &[(1, 20_000), (4, 5_000)]
+    };
+    let mut ping_rows: Vec<(usize, usize, f64)> = Vec::new();
+    for &(pairs, rounds) in ping_grid {
         let rate = bench_ping(pairs, rounds);
         println!(
             "mailbox ping  {:>2} pairs x {:>6} rounds: {:>10.0} msgs/s",
             pairs, rounds, rate
         );
+        ping_rows.push((pairs, rounds, rate));
     }
 
+    // (kind, p, q, s, iters, real). The real-mode tuna(r=2)@512 row is
+    // the PR 2 acceptance point: payload ropes made whole-run wallclock
+    // dominated by the one source write + one sink verify per block.
+    let algo_grid: Vec<(AlgoKind, usize, usize, u64, usize, bool)> = if quick {
+        vec![
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, true),
+            (AlgoKind::SpreadOut, 64, 8, 1024, 3, true),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 64, 8, 1024, 3, true),
+        ]
+    } else {
+        vec![
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, false),
+            (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, 3, false),
+            (AlgoKind::SpreadOut, 256, 8, 1024, 3, false),
+            (AlgoKind::Vendor, 256, 8, 1024, 3, false),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, false),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, true),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, true),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, true),
+            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1, false),
+        ]
+    };
+
     println!(
-        "\n{:<28} {:>6} {:>12} {:>14}",
-        "algorithm", "P", "s/run", "sim-msgs/s"
+        "\n{:<28} {:>6} {:>5} {:>12} {:>14} {:>14}",
+        "algorithm", "P", "mode", "s/run", "sim-msgs/s", "copied-B"
     );
-    for (kind, p, q, s, iters) in [
-        (AlgoKind::Tuna { radix: 2 }, 256usize, 8usize, 1024u64, 3usize),
-        (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, 3),
-        (AlgoKind::SpreadOut, 256, 8, 1024, 3),
-        (AlgoKind::Vendor, 256, 8, 1024, 3),
-        (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3),
-        (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1),
-    ] {
-        let (per_run, rate) = bench_algo(kind, p, q, s, iters);
+    let mut algo_rows: Vec<AlgoRow> = Vec::new();
+    for (kind, p, q, s, iters, real) in algo_grid {
+        let row = bench_algo(kind, p, q, s, iters, real);
         println!(
-            "{:<28} {:>6} {:>10.3} s {:>14.0}",
-            kind.name(),
-            p,
-            per_run,
-            rate
+            "{:<28} {:>6} {:>5} {:>10.3} s {:>14.0} {:>14}",
+            row.algo,
+            row.p,
+            if row.real { "real" } else { "phtm" },
+            row.s_per_run,
+            row.sim_msgs_per_sec,
+            row.copied_bytes
         );
+        if row.real {
+            assert_eq!(
+                row.copied_bytes,
+                2 * row.payload_bytes,
+                "zero-copy invariant violated for {}",
+                row.algo
+            );
+        }
+        algo_rows.push(row);
     }
 
     println!();
-    for p in [64usize, 256, 1024, 4096] {
+    let spawn_grid: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024, 4096] };
+    let mut spawn_rows: Vec<(usize, f64)> = Vec::new();
+    for &p in spawn_grid {
         let t = bench_spawn(p);
         println!(
             "engine spawn+join P={:<5}: {:>8.1} ms ({:.1} us/rank)",
@@ -101,5 +186,51 @@ fn main() {
             t * 1e3,
             t * 1e6 / p as f64
         );
+        spawn_rows.push((p, t));
+    }
+
+    // ---- machine-readable trajectory -----------------------------------
+    let mut j = String::from("{\n  \"bench\": \"perf_engine\",\n");
+    j.push_str(&format!(
+        "  \"mode\": \"{}\",\n",
+        if quick { "quick" } else { "full" }
+    ));
+    j.push_str("  \"mailbox\": [\n");
+    for (i, (pairs, rounds, rate)) in ping_rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"pairs\": {pairs}, \"rounds\": {rounds}, \"msgs_per_sec\": {rate:.1}}}{}\n",
+            if i + 1 < ping_rows.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n  \"algos\": [\n");
+    for (i, r) in algo_rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"algo\": \"{}\", \"p\": {}, \"q\": {}, \"s\": {}, \"real\": {}, \
+             \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \"copied_bytes\": {}, \
+             \"payload_bytes\": {}}}{}\n",
+            json_escape(&r.algo),
+            r.p,
+            r.q,
+            r.s,
+            r.real,
+            r.s_per_run,
+            r.sim_msgs_per_sec,
+            r.copied_bytes,
+            r.payload_bytes,
+            if i + 1 < algo_rows.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n  \"spawn\": [\n");
+    for (i, (p, t)) in spawn_rows.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"p\": {p}, \"seconds\": {t:.6}}}{}\n",
+            if i + 1 < spawn_rows.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+
+    match std::fs::write(&out_path, &j) {
+        Ok(()) => println!("\nperf trajectory written to {out_path}"),
+        Err(e) => eprintln!("\nwarning: could not write {out_path}: {e}"),
     }
 }

@@ -16,6 +16,10 @@
 //! * **scattered** (MPICH): spread-out in batches of `block_count`
 //!   requests with a waitall between batches — the tunable congestion
 //!   throttle.
+//!
+//! All four ship each block directly: payloads enter the engine as rope
+//! views and reach the destination without any host-side byte movement
+//! (the only modeled copy is the self-block delivery memcpy).
 
 use crate::comm::engine::{RecvReq, SendReq};
 use crate::comm::{Block, Payload, Phase, RankCtx};

@@ -49,8 +49,10 @@ pub enum AlgoKind {
     /// Two-phase non-uniform Bruck of [10]: TuNA's ancestor, radix 2.
     Bruck2,
     Tuna { radix: usize },
-    /// TuNA with the §V-A heuristic radix, agreed across ranks at run
-    /// time from the global mean block size (one extra allreduce).
+    /// TuNA with an automatically chosen radix, agreed across ranks at
+    /// run time from the global mean block size (one extra allreduce).
+    /// A tuning table attached to the engine ([`Engine::with_tuning`]) is
+    /// consulted first; the §V-A heuristic is the fallback.
     TunaAuto,
     TunaHierCoalesced { radix: usize, block_count: usize },
     TunaHierStaggered { radix: usize, block_count: usize },
@@ -214,7 +216,16 @@ impl AlgoKind {
                 let total = ctx.allreduce_sum(mine);
                 let p = ctx.size();
                 let mean = total as f64 / (p as f64 * p as f64);
-                let radix = tuning::heuristic_radix(p, mean);
+                // A persisted tuning table attached to the engine wins
+                // over the §V-A heuristic. The allreduced mean is
+                // bit-identical on every rank, so every rank resolves the
+                // same table entry — no extra agreement round needed.
+                let radix = ctx
+                    .tuning_table()
+                    .and_then(|t| {
+                        t.lookup_radix(ctx.profile().name, p, ctx.topo().q(), mean)
+                    })
+                    .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
                 tuna::run(ctx, blocks, radix)
             }
             AlgoKind::TunaHierCoalesced { radix, block_count } => {
@@ -283,18 +294,21 @@ pub fn run_alltoallv(
     let res = engine.run(move |ctx| {
         let me = ctx.rank();
         let row = sizes_c.row(me);
-        let blocks: Vec<Block> = row
-            .iter()
-            .enumerate()
-            .map(|(d, &len)| {
-                let data = if real_payloads {
-                    DataBuf::pattern(me, d, len)
-                } else {
-                    DataBuf::Phantom(len)
-                };
-                Block::new(me, d, data)
-            })
-            .collect();
+        // Real payloads are written once into a per-rank arena and handed
+        // to the algorithm as zero-copy views; every hop from here to the
+        // destination moves views, not bytes (see comm::buffer).
+        let blocks: Vec<Block> = if real_payloads {
+            DataBuf::pattern_row(me, &row)
+                .into_iter()
+                .enumerate()
+                .map(|(d, data)| Block::new(me, d, data))
+                .collect()
+        } else {
+            row.iter()
+                .enumerate()
+                .map(|(d, &len)| Block::new(me, d, DataBuf::Phantom(len)))
+                .collect()
+        };
         let (recv, stats) = kind_c.dispatch(ctx, blocks);
         let ok = validate_received(me, p, &recv, fp[me], real_payloads);
         (ok, stats)
@@ -429,6 +443,52 @@ mod tests {
         assert!(AlgoKind::TunaHierStaggered { radix: 2, block_count: 1 }
             .check(8, 4)
             .is_ok());
+    }
+
+    #[test]
+    fn tuna_auto_prefers_attached_tuning_table() {
+        use crate::comm::{Engine, Topology};
+        use crate::model::MachineProfile;
+        use crate::workload::{BlockSizes, Dist};
+
+        let (p, q) = (12usize, 4usize);
+        let profile = MachineProfile::test_flat();
+        let sizes = BlockSizes::generate(p, Dist::Uniform { max: 64 }, 3);
+        let total: u64 = (0..p).map(|s| sizes.row(s).iter().sum::<u64>()).sum();
+        let mean = total as f64 / (p * p) as f64;
+        let heur = tuning::heuristic_radix(p, mean);
+        let table_radix = 5usize;
+        assert_ne!(heur, table_radix, "pick a table radix the heuristic never yields");
+
+        let table = tuning::TuningTable {
+            entries: vec![tuning::TuningEntry {
+                machine: profile.name.to_string(),
+                p,
+                q,
+                dist: "uniform".into(),
+                mean_block: mean,
+                rank: 1,
+                algo: AlgoKind::Tuna { radix: table_radix },
+                model_time: 1e-3,
+                measured_time: None,
+            }],
+        };
+
+        let plain = Engine::new(profile.clone(), Topology::new(p, q));
+        let tuned = Engine::new(profile, Topology::new(p, q))
+            .with_tuning(Some(Arc::new(table)));
+
+        let auto_plain = run_alltoallv(&plain, &AlgoKind::TunaAuto, &sizes, true).unwrap();
+        let auto_tuned = run_alltoallv(&tuned, &AlgoKind::TunaAuto, &sizes, true).unwrap();
+        let fixed_heur =
+            run_alltoallv(&plain, &AlgoKind::Tuna { radix: heur }, &sizes, true).unwrap();
+        let fixed_table =
+            run_alltoallv(&plain, &AlgoKind::Tuna { radix: table_radix }, &sizes, true).unwrap();
+
+        // Without a table: heuristic schedule; with: the stored radix.
+        assert_eq!(auto_plain.rounds, fixed_heur.rounds);
+        assert_eq!(auto_tuned.rounds, fixed_table.rounds);
+        assert_ne!(auto_tuned.rounds, auto_plain.rounds);
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!    * **coalesced** (Alg. 3): one message of Q blocks per target node —
 //!      N−1 rounds — after a local rearrangement pass that compacts T;
 //!    * **staggered** (Alg. 2): one block per message — Q·(N−1) rounds.
+//!
+//! The intra-node slot that aggregates N sub-blocks, the bucketing by
+//! destination node, and both inter-node exchanges move payload *views*
+//! only (`comm::buffer` ropes): blocks stay whole and are batched by
+//! value, so aggregation never touches payload bytes on the host. The
+//! `ctx.copy` charges keep modeling the rearrangement cost on the
+//! simulated machine's clock.
 
 use super::tuna::{tuna_core, SlotContent};
 use super::AlgoStats;
@@ -156,6 +163,8 @@ pub fn run(
                 let nsrc = (my_node + off) % n_nodes;
                 let tag = INTER_TAG + idx as u32;
                 recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                // The tombstone left behind is never sent or validated;
+                // the real block moves out as a view, bytes untouched.
                 let block = std::mem::replace(
                     &mut buckets[ndst][j],
                     Block::new(0, 0, crate::comm::DataBuf::Phantom(0)),

@@ -318,6 +318,26 @@ impl TuningTable {
         }
         best.and_then(|(e, d)| (d <= std::f64::consts::LN_2 + 1e-12).then_some(e))
     }
+
+    /// The stored best as a flat-TuNA radix for `tuna:auto` dispatch:
+    /// `Some(r)` when this scenario's rank-1 entry is a TuNA configuration
+    /// runnable at P (Bruck2 counts as radix 2), `None` otherwise — a
+    /// table whose winner is a different family cannot override the
+    /// caller's choice to run TuNA, so dispatch falls back to the §V-A
+    /// heuristic.
+    pub fn lookup_radix(
+        &self,
+        machine: &str,
+        p: usize,
+        q: usize,
+        mean_block: f64,
+    ) -> Option<usize> {
+        match self.lookup(machine, p, q, mean_block)?.algo {
+            AlgoKind::Tuna { radix } if (2..=p.max(2)).contains(&radix) => Some(radix),
+            AlgoKind::Bruck2 => Some(2),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -444,6 +464,27 @@ mod tests {
         // Other keys must match exactly.
         assert!(t.lookup("polaris", 256, 8, 200.0).is_none());
         assert!(t.lookup("fugaku", 128, 8, 200.0).is_none());
+    }
+
+    #[test]
+    fn lookup_radix_only_surfaces_runnable_tuna_bests() {
+        let t = TuningTable {
+            entries: vec![
+                entry("fugaku", 64, 128.0, 1, AlgoKind::Tuna { radix: 8 }),
+                entry("fugaku", 64, 8192.0, 1, AlgoKind::Vendor),
+                entry("fugaku", 32, 128.0, 1, AlgoKind::Bruck2),
+                entry("fugaku", 16, 128.0, 1, AlgoKind::Tuna { radix: 999 }),
+            ],
+        };
+        assert_eq!(t.lookup_radix("fugaku", 64, 8, 150.0), Some(8));
+        // Non-TuNA winner: no override.
+        assert_eq!(t.lookup_radix("fugaku", 64, 8, 8192.0), None);
+        // Bruck2 is TuNA at radix 2.
+        assert_eq!(t.lookup_radix("fugaku", 32, 8, 128.0), Some(2));
+        // A stored radix that exceeds P must not surface.
+        assert_eq!(t.lookup_radix("fugaku", 16, 8, 128.0), None);
+        // No scenario match at all.
+        assert_eq!(t.lookup_radix("polaris", 64, 8, 150.0), None);
     }
 
     #[test]

@@ -270,16 +270,30 @@ impl StageCompute {
     }
 }
 
-fn encode_cblock(z: &CMat, r0: usize, rows: usize, c0: usize, cols: usize) -> DataBuf {
-    let mut bytes = Vec::with_capacity(rows * cols * 8);
-    for r in r0..r0 + rows {
-        for c in c0..c0 + cols {
-            let i = z.idx(r, c);
-            bytes.extend_from_slice(&z.re[i].to_le_bytes());
-            bytes.extend_from_slice(&z.im[i].to_le_bytes());
+/// Encode every destination's column block of `z` (complex f32 pairs,
+/// row-major within the block) into one shared arena, handing back
+/// zero-copy per-destination views: one allocation and one host-copy
+/// charge per rank per transpose instead of one per destination.
+fn encode_col_blocks(z: &CMat, cols_part: &[(usize, usize)]) -> Vec<DataBuf> {
+    let total: usize = cols_part.iter().map(|&(_, cols)| z.rows * cols * 8).sum();
+    let mut arena = Vec::with_capacity(total);
+    let mut bounds = Vec::with_capacity(cols_part.len());
+    for &(c0, cols) in cols_part {
+        let start = arena.len() as u64;
+        for r in 0..z.rows {
+            for c in c0..c0 + cols {
+                let i = z.idx(r, c);
+                arena.extend_from_slice(&z.re[i].to_le_bytes());
+                arena.extend_from_slice(&z.im[i].to_le_bytes());
+            }
         }
+        bounds.push((start, arena.len() as u64 - start));
     }
-    DataBuf::Real(bytes)
+    let master = DataBuf::from_vec(arena);
+    bounds
+        .into_iter()
+        .map(|(off, len)| master.slice(off, len))
+        .collect()
 }
 
 fn f32_at(bytes: &[u8], i: usize) -> f32 {
@@ -401,10 +415,10 @@ pub fn run_distributed_fft(
         ctx.compute(t1c[me]);
         ctx.phase_lap(Phase::Compute);
         let z = &zs[me];
-        let blocks: Vec<Block> = cols_part_c
-            .iter()
+        let blocks: Vec<Block> = encode_col_blocks(z, &cols_part_c)
+            .into_iter()
             .enumerate()
-            .map(|(d, &(c0, cols))| Block::new(me, d, encode_cblock(z, 0, z.rows, c0, cols)))
+            .map(|(d, data)| Block::new(me, d, data))
             .collect();
         let comm0 = ctx.now();
         let (recv, _) = kind_c.dispatch(ctx, blocks);
@@ -415,7 +429,10 @@ pub fn run_distributed_fft(
         let mut zc = CMat::zeros(n1, my_cols);
         for b in &recv {
             let (r0, rows) = rows_part_c[b.origin as usize];
-            let bytes = b.data.bytes();
+            // Read in place at the sink; copies only if some algorithm
+            // fragmented the rope (none of ours do).
+            let buf = b.data.to_contiguous();
+            let bytes: &[u8] = buf.as_ref();
             assert_eq!(bytes.len(), rows * my_cols * 8, "transpose block size");
             let mut off = 0;
             for r in 0..rows {

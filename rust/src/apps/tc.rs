@@ -61,11 +61,15 @@ fn encode(tuples: &[(u32, u32)]) -> DataBuf {
         bytes.extend_from_slice(&a.to_le_bytes());
         bytes.extend_from_slice(&b.to_le_bytes());
     }
-    DataBuf::Real(bytes)
+    // Written once here; every hop to the owner rank moves views.
+    DataBuf::from_vec(bytes)
 }
 
 fn decode(buf: &DataBuf) -> Vec<(u32, u32)> {
-    let bytes = buf.bytes();
+    // Borrowed in place for the (usual) contiguous rope; materialized
+    // only if an algorithm handed us a fragmented aggregate.
+    let bytes = buf.to_contiguous();
+    let bytes: &[u8] = bytes.as_ref();
     assert!(bytes.len() % 8 == 0, "tuple payload misaligned");
     bytes
         .chunks_exact(8)

@@ -1,23 +1,291 @@
-//! Data buffers and routed blocks.
+//! Data buffers, payload ropes and routed blocks.
 //!
 //! One implementation of every algorithm serves both correctness testing
 //! and large-scale simulation: payloads are [`DataBuf`]s that either carry
 //! real bytes (`Real`, validated against the gold all-to-all result) or
 //! just a length (`Phantom`, so a P = 16,384 simulation fits in memory).
 //! A run must be homogeneous — mixing modes in one message is a bug.
+//!
+//! # Payload ownership: ropes of shared views (PR 2)
+//!
+//! Real payloads are **ropes**: a [`Rope`] is an ordered list of
+//! [`ByteView`] segments, each an `(Arc<buffer>, offset, len)` window into
+//! immutable shared storage. The contract every layer relies on:
+//!
+//! * **Write once.** Bytes are materialized exactly once, at the source —
+//!   [`Rope::from_vec`] adopts a freshly written buffer without copying it
+//!   (the `Arc` wraps the `Vec` itself). A whole send row is typically one
+//!   arena adopted once and handed out as per-destination views
+//!   ([`DataBuf::pattern_row`]).
+//! * **Move by view.** Slicing ([`Rope::slice`]) and store-and-forward
+//!   hops (engine enqueue/dequeue, TuNA slot replacement, hierarchical
+//!   slot batches) are O(segments) metadata operations that bump `Arc`
+//!   refcounts — never payload memcpys. The shipped algorithms keep
+//!   blocks whole and move them by value; payload-level merging
+//!   ([`Rope::append`], [`DataBuf::concat`]) follows the same
+//!   no-byte-movement rule for consumers that need it and is covered by
+//!   this module's tests.
+//! * **Read once.** Bytes leave rope storage at the sink: pattern
+//!   verification ([`DataBuf::check_pattern`]) reads them in place;
+//!   [`DataBuf::to_contiguous`] borrows single-segment ropes and copies
+//!   only when a rope is genuinely fragmented.
+//!
+//! Three operations — and only those three — are charged to a
+//! thread-local host-copy counter that the engine harvests into
+//! [`Counters::copied_bytes`](super::clock::Counters) per rank: arena
+//! writes ([`Rope::from_vec`]), pattern-verification reads
+//! ([`DataBuf::check_pattern`]), and forced compaction
+//! ([`Rope::to_contiguous`] on a fragmented rope). In-place borrows
+//! (`bytes()`, the contiguous `to_contiguous` path) move nothing and
+//! charge nothing. For a real-mode all-to-allv, whose sinks verify every
+//! block, that yields the end-to-end invariant `copied_bytes == bytes
+//! written at sources + bytes read at sinks`, with no per-round
+//! amplification (`tests/zero_copy.rs`).
+//!
+//! Note this is *host* accounting, distinct from the virtual-time copy
+//! charges (`RankCtx::copy` → `Counters::bytes_copied`) that model what a
+//! real MPI implementation's packing would cost on the simulated machine.
 
-/// A payload: real bytes or a phantom (size-only) stand-in.
-#[derive(Clone, Debug, PartialEq, Eq)]
+use std::borrow::Cow;
+use std::cell::Cell;
+use std::sync::Arc;
+
+thread_local! {
+    /// Host-side payload bytes physically moved on this thread (each rank
+    /// of the engine runs on its own OS thread, so this is per-rank).
+    static HOST_COPIED: Cell<u64> = Cell::new(0);
+}
+
+#[inline]
+fn note_host_copy(bytes: u64) {
+    HOST_COPIED.with(|c| c.set(c.get() + bytes));
+}
+
+/// Reset this thread's host-copy counter (engine calls this when a rank
+/// thread starts).
+pub(crate) fn reset_host_copied() {
+    HOST_COPIED.with(|c| c.set(0));
+}
+
+/// Read this thread's host-copy counter (engine harvests it into the
+/// rank's `Counters` when the rank finishes).
+pub(crate) fn host_copied() -> u64 {
+    HOST_COPIED.with(|c| c.get())
+}
+
+/// An immutable window into shared byte storage: `(Arc<buffer>, offset,
+/// len)`. Cloning bumps a refcount; the underlying bytes are never moved.
+///
+/// The buffer is an `Arc<Vec<u8>>` rather than an `Arc<[u8]>` on purpose:
+/// `Arc<[u8]>::from(Vec<u8>)` must reallocate and memcpy the bytes into
+/// the Arc's own allocation, which would silently reintroduce the copy
+/// this type exists to eliminate.
+#[derive(Clone, Debug)]
+pub struct ByteView {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl ByteView {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Borrow the viewed bytes in place.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+}
+
+/// A payload rope: ordered [`ByteView`] segments. Zero-length segments
+/// are never stored, so segment iteration yields non-empty slices.
+#[derive(Clone, Debug, Default)]
+pub struct Rope {
+    segs: Vec<ByteView>,
+    len: u64,
+}
+
+impl Rope {
+    pub fn new() -> Rope {
+        Rope::default()
+    }
+
+    /// Adopt freshly written bytes as a single-segment rope without
+    /// copying them. This is the one place payload bytes enter rope
+    /// storage, so the write is charged to the host-copy counter here.
+    pub fn from_vec(v: Vec<u8>) -> Rope {
+        let len = v.len() as u64;
+        note_host_copy(len);
+        if len == 0 {
+            return Rope::default();
+        }
+        Rope {
+            segs: vec![ByteView {
+                buf: Arc::new(v),
+                off: 0,
+                len: len as usize,
+            }],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn segment_count(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Iterate the rope's segments as byte slices (all non-empty).
+    pub fn segments(&self) -> impl Iterator<Item = &[u8]> + '_ {
+        self.segs.iter().map(ByteView::as_slice)
+    }
+
+    /// O(segments) zero-copy subrange view `[start, start + len)`.
+    pub fn slice(&self, start: u64, len: u64) -> Rope {
+        assert!(
+            start.checked_add(len).is_some() && start + len <= self.len,
+            "slice [{start}, {start}+{len}) out of rope of len {}",
+            self.len
+        );
+        let mut out = Rope::default();
+        if len == 0 {
+            return out;
+        }
+        let mut skip = start;
+        let mut remaining = len;
+        for seg in &self.segs {
+            let sl = seg.len as u64;
+            if skip >= sl {
+                skip -= sl;
+                continue;
+            }
+            let take = (sl - skip).min(remaining);
+            out.segs.push(ByteView {
+                buf: seg.buf.clone(),
+                off: seg.off + skip as usize,
+                len: take as usize,
+            });
+            out.len += take;
+            remaining -= take;
+            skip = 0;
+            if remaining == 0 {
+                break;
+            }
+        }
+        debug_assert_eq!(out.len, len);
+        out
+    }
+
+    /// Append `other`'s segments — O(1) per segment, no byte movement.
+    pub fn append(&mut self, other: &Rope) {
+        self.segs.extend(other.segs.iter().cloned());
+        self.len += other.len;
+    }
+
+    /// The rope's bytes as one slice, when it is already contiguous
+    /// (zero or one segments). `None` for fragmented ropes.
+    pub fn as_contiguous(&self) -> Option<&[u8]> {
+        match self.segs.len() {
+            0 => Some(&[]),
+            1 => Some(self.segs[0].as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Materialize the rope's bytes: borrows in place when contiguous,
+    /// copies (charged as a host copy) only when fragmented.
+    pub fn to_contiguous(&self) -> Cow<'_, [u8]> {
+        if let Some(s) = self.as_contiguous() {
+            return Cow::Borrowed(s);
+        }
+        note_host_copy(self.len);
+        let mut v = Vec::with_capacity(self.len as usize);
+        for seg in &self.segs {
+            v.extend_from_slice(seg.as_slice());
+        }
+        Cow::Owned(v)
+    }
+}
+
+/// Logical byte equality, independent of segmentation.
+impl PartialEq for Rope {
+    fn eq(&self, other: &Rope) -> bool {
+        if self.len != other.len {
+            return false;
+        }
+        let mut a = self.segs.iter().map(ByteView::as_slice);
+        let mut b = other.segs.iter().map(ByteView::as_slice);
+        let mut ca: &[u8] = &[];
+        let mut cb: &[u8] = &[];
+        loop {
+            if ca.is_empty() {
+                match a.next() {
+                    Some(s) => ca = s,
+                    // Equal totals + lockstep consumption: b is spent too.
+                    None => return true,
+                }
+            }
+            if cb.is_empty() {
+                match b.next() {
+                    Some(s) => cb = s,
+                    None => return true,
+                }
+            }
+            let n = ca.len().min(cb.len());
+            if ca[..n] != cb[..n] {
+                return false;
+            }
+            ca = &ca[n..];
+            cb = &cb[n..];
+        }
+    }
+}
+
+impl Eq for Rope {}
+
+/// A payload: a real byte rope or a phantom (size-only) stand-in.
+#[derive(Clone, Debug)]
 pub enum DataBuf {
-    Real(Vec<u8>),
+    Real(Rope),
     Phantom(u64),
 }
+
+/// Logical equality: ropes compare by content, never by segmentation;
+/// real and phantom payloads are never equal (mode is part of identity).
+impl PartialEq for DataBuf {
+    fn eq(&self, other: &DataBuf) -> bool {
+        match (self, other) {
+            (DataBuf::Real(a), DataBuf::Real(b)) => a == b,
+            (DataBuf::Phantom(a), DataBuf::Phantom(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Eq for DataBuf {}
 
 impl DataBuf {
     #[inline]
     pub fn len(&self) -> u64 {
         match self {
-            DataBuf::Real(v) => v.len() as u64,
+            DataBuf::Real(r) => r.len(),
             DataBuf::Phantom(n) => *n,
         }
     }
@@ -32,60 +300,196 @@ impl DataBuf {
         matches!(self, DataBuf::Real(_))
     }
 
+    /// Adopt freshly written bytes as a real payload (no copy).
+    pub fn from_vec(v: Vec<u8>) -> DataBuf {
+        DataBuf::Real(Rope::from_vec(v))
+    }
+
     /// Borrow the real bytes; panics on a phantom buffer (callers that need
-    /// bytes are correctness paths which always run in real mode).
+    /// bytes are correctness paths which always run in real mode) and on a
+    /// fragmented rope (use [`DataBuf::to_contiguous`] when aggregation may
+    /// have occurred).
     pub fn bytes(&self) -> &[u8] {
         match self {
-            DataBuf::Real(v) => v,
+            DataBuf::Real(r) => r
+                .as_contiguous()
+                .expect("bytes() on a fragmented rope — use to_contiguous()"),
             DataBuf::Phantom(_) => panic!("bytes() on a phantom DataBuf"),
+        }
+    }
+
+    /// Materialize the payload bytes: borrowed in place for contiguous
+    /// ropes, copied only when fragmented. Panics on phantom buffers.
+    pub fn to_contiguous(&self) -> Cow<'_, [u8]> {
+        match self {
+            DataBuf::Real(r) => r.to_contiguous(),
+            DataBuf::Phantom(_) => panic!("to_contiguous() on a phantom DataBuf"),
+        }
+    }
+
+    /// The underlying rope of a real payload.
+    pub fn rope(&self) -> &Rope {
+        match self {
+            DataBuf::Real(r) => r,
+            DataBuf::Phantom(_) => panic!("rope() on a phantom DataBuf"),
         }
     }
 
     /// An empty buffer in the given mode.
     pub fn empty(real: bool) -> DataBuf {
         if real {
-            DataBuf::Real(Vec::new())
+            DataBuf::Real(Rope::new())
         } else {
             DataBuf::Phantom(0)
         }
     }
 
-    /// Deterministic pattern payload for (origin, dest): byte `i` is a hash
-    /// of `(origin, dest, i)`, so any misrouting or mis-slicing in an
-    /// algorithm corrupts the pattern and is caught by [`DataBuf::check_pattern`].
-    pub fn pattern(origin: usize, dest: usize, len: u64) -> DataBuf {
-        let mut v = Vec::with_capacity(len as usize);
-        for i in 0..len {
-            v.push(pattern_byte(origin, dest, i));
+    /// O(segments) zero-copy subrange `[start, start + len)`; phantom
+    /// buffers slice to phantoms.
+    pub fn slice(&self, start: u64, len: u64) -> DataBuf {
+        match self {
+            DataBuf::Real(r) => DataBuf::Real(r.slice(start, len)),
+            DataBuf::Phantom(n) => {
+                assert!(
+                    start.checked_add(len).map(|end| end <= *n).unwrap_or(false),
+                    "slice [{start}, {start}+{len}) out of phantom of len {n}"
+                );
+                DataBuf::Phantom(len)
+            }
         }
-        DataBuf::Real(v)
     }
 
-    /// Verify a pattern payload; returns the first mismatching index.
+    /// Concatenate payloads as a segment concat — no byte movement in
+    /// real mode, a length sum in phantom mode. `real` fixes the mode of
+    /// the (possibly empty) result; a part of the other mode is a bug per
+    /// the module contract.
+    pub fn concat<I: IntoIterator<Item = DataBuf>>(real: bool, parts: I) -> DataBuf {
+        if real {
+            let mut rope = Rope::new();
+            for p in parts {
+                match p {
+                    DataBuf::Real(r) => rope.append(&r),
+                    DataBuf::Phantom(_) => panic!("concat: phantom part in a real concat"),
+                }
+            }
+            DataBuf::Real(rope)
+        } else {
+            let mut n = 0u64;
+            for p in parts {
+                match p {
+                    DataBuf::Phantom(m) => n += m,
+                    DataBuf::Real(_) => panic!("concat: real part in a phantom concat"),
+                }
+            }
+            DataBuf::Phantom(n)
+        }
+    }
+
+    /// Deterministic pattern payload for (origin, dest): byte `i` is drawn
+    /// from a hash of `(origin, dest, i / 8)` — generated a word at a time
+    /// — so any misrouting or mis-slicing in an algorithm corrupts the
+    /// pattern and is caught by [`DataBuf::check_pattern`].
+    pub fn pattern(origin: usize, dest: usize, len: u64) -> DataBuf {
+        let mut v = Vec::with_capacity(len as usize);
+        append_pattern(&mut v, origin, dest, len);
+        DataBuf::from_vec(v)
+    }
+
+    /// Pattern payloads for a whole send row, written once into a shared
+    /// arena and handed out as zero-copy per-destination views — one
+    /// allocation and one host-copy charge per rank instead of one per
+    /// destination.
+    pub fn pattern_row(origin: usize, sizes: &[u64]) -> Vec<DataBuf> {
+        let total: u64 = sizes.iter().sum();
+        let mut arena = Vec::with_capacity(total as usize);
+        let mut bounds = Vec::with_capacity(sizes.len());
+        for (dest, &len) in sizes.iter().enumerate() {
+            let start = arena.len() as u64;
+            append_pattern(&mut arena, origin, dest, len);
+            bounds.push((start, len));
+        }
+        let master = DataBuf::from_vec(arena);
+        bounds
+            .into_iter()
+            .map(|(off, len)| master.slice(off, len))
+            .collect()
+    }
+
+    /// Verify a pattern payload in place (a sink read, charged to the
+    /// host-copy counter); returns the first mismatching index. Compares
+    /// a word at a time on aligned stretches.
     pub fn check_pattern(&self, origin: usize, dest: usize) -> Result<(), u64> {
-        let bytes = self.bytes();
-        for (i, b) in bytes.iter().enumerate() {
-            if *b != pattern_byte(origin, dest, i as u64) {
-                return Err(i as u64);
+        let rope = match self {
+            DataBuf::Real(r) => r,
+            DataBuf::Phantom(_) => panic!("check_pattern() on a phantom DataBuf"),
+        };
+        note_host_copy(rope.len());
+        let mut i = 0u64; // logical byte index within the payload
+        for seg in rope.segments() {
+            let mut k = 0usize;
+            while k < seg.len() {
+                if i % 8 == 0 && seg.len() - k >= 8 {
+                    let expect = pattern_word(origin, dest, i / 8).to_le_bytes();
+                    let got = &seg[k..k + 8];
+                    if got != &expect[..] {
+                        for (j, (&g, &e)) in got.iter().zip(expect.iter()).enumerate() {
+                            if g != e {
+                                return Err(i + j as u64);
+                            }
+                        }
+                    }
+                    i += 8;
+                    k += 8;
+                } else {
+                    if seg[k] != pattern_byte(origin, dest, i) {
+                        return Err(i);
+                    }
+                    i += 1;
+                    k += 1;
+                }
             }
         }
         Ok(())
     }
 }
 
+/// One 64-bit word of the (origin, dest) pattern stream.
 #[inline]
-fn pattern_byte(origin: usize, dest: usize, i: u64) -> u8 {
+fn pattern_word(origin: usize, dest: usize, w: u64) -> u64 {
     let mut h = (origin as u64)
         .wrapping_mul(0x9e37_79b9_7f4a_7c15)
         .wrapping_add((dest as u64).wrapping_mul(0xff51_afd7_ed55_8ccd))
-        .wrapping_add(i.wrapping_mul(0xc4ce_b9fe_1a85_ec53));
+        .wrapping_add(w.wrapping_mul(0xc4ce_b9fe_1a85_ec53));
     h ^= h >> 33;
-    (h & 0xff) as u8
+    h = h.wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
+    h ^= h >> 29;
+    h
+}
+
+/// Byte `i` of the pattern stream — byte `i % 8` (little-endian) of word
+/// `i / 8`, so byte- and word-wise generation agree.
+#[inline]
+fn pattern_byte(origin: usize, dest: usize, i: u64) -> u8 {
+    (pattern_word(origin, dest, i / 8) >> ((i % 8) * 8)) as u8
+}
+
+/// Append `len` pattern bytes for (origin, dest), a word at a time.
+fn append_pattern(v: &mut Vec<u8>, origin: usize, dest: usize, len: u64) {
+    let words = len / 8;
+    for w in 0..words {
+        v.extend_from_slice(&pattern_word(origin, dest, w).to_le_bytes());
+    }
+    let rem = (len % 8) as usize;
+    if rem > 0 {
+        let tail = pattern_word(origin, dest, words).to_le_bytes();
+        v.extend_from_slice(&tail[..rem]);
+    }
 }
 
 /// A routed data block: payload from `origin`, ultimately destined to
 /// `dest`. Store-and-forward algorithms move blocks through intermediate
-/// ranks; linear algorithms ship them directly.
+/// ranks; linear algorithms ship them directly. Cloning a block clones
+/// payload *views*, never payload bytes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Block {
     pub origin: u32,
@@ -113,7 +517,8 @@ impl Block {
     }
 }
 
-/// What actually travels in a message.
+/// What actually travels in a message. Payloads are moved (views and
+/// counts), never deep-copied, on enqueue and dequeue.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Payload {
     /// Metadata phase of the two-phase scheme: block sizes (8 B each on
@@ -175,7 +580,7 @@ mod tests {
 
     #[test]
     fn lengths() {
-        assert_eq!(DataBuf::Real(vec![1, 2, 3]).len(), 3);
+        assert_eq!(DataBuf::from_vec(vec![1, 2, 3]).len(), 3);
         assert_eq!(DataBuf::Phantom(77).len(), 77);
         assert!(DataBuf::empty(true).is_empty());
         assert!(DataBuf::empty(false).is_empty());
@@ -188,14 +593,27 @@ mod tests {
         assert!(d.check_pattern(3, 9).is_ok());
         // Wrong origin/dest must be detected quickly.
         assert!(d.check_pattern(9, 3).is_err());
+        // Non-multiple-of-8 lengths exercise the word/byte tail path.
+        for len in [0u64, 1, 7, 8, 9, 63, 65] {
+            let d = DataBuf::pattern(1, 2, len);
+            assert_eq!(d.len(), len);
+            assert!(d.check_pattern(1, 2).is_ok(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn word_and_byte_pattern_agree() {
+        for i in 0..64u64 {
+            let w = pattern_word(4, 5, i / 8).to_le_bytes()[(i % 8) as usize];
+            assert_eq!(w, pattern_byte(4, 5, i), "byte {i}");
+        }
     }
 
     #[test]
     fn pattern_detects_corruption() {
-        let mut d = DataBuf::pattern(1, 2, 64);
-        if let DataBuf::Real(v) = &mut d {
-            v[10] ^= 0xff;
-        }
+        let mut v = DataBuf::pattern(1, 2, 64).to_contiguous().into_owned();
+        v[10] ^= 0xff;
+        let d = DataBuf::from_vec(v);
         assert_eq!(d.check_pattern(1, 2), Err(10));
     }
 
@@ -203,6 +621,73 @@ mod tests {
     #[should_panic(expected = "phantom")]
     fn phantom_has_no_bytes() {
         DataBuf::Phantom(4).bytes();
+    }
+
+    #[test]
+    fn slice_is_zero_copy_and_pattern_checked() {
+        reset_host_copied();
+        let row = DataBuf::pattern_row(2, &[16, 0, 40, 8]);
+        assert_eq!(host_copied(), 64, "one arena write for the whole row");
+        assert_eq!(row.len(), 4);
+        assert_eq!(row[0].len(), 16);
+        assert_eq!(row[1].len(), 0);
+        assert_eq!(row[2].len(), 40);
+        assert_eq!(row[3].len(), 8);
+        for (dest, d) in row.iter().enumerate() {
+            d.check_pattern(2, dest).unwrap();
+        }
+        // The four checks read 64 bytes total on top of the 64 written.
+        assert_eq!(host_copied(), 128);
+    }
+
+    #[test]
+    fn subslice_of_slice_shares_storage() {
+        let d = DataBuf::pattern(0, 1, 100);
+        let a = d.slice(8, 64);
+        let b = a.slice(8, 8);
+        // b is bytes [16, 24) of the original pattern.
+        assert_eq!(
+            b.to_contiguous().as_ref(),
+            &d.to_contiguous().as_ref()[16..24]
+        );
+        assert_eq!(b.rope().segment_count(), 1);
+    }
+
+    #[test]
+    fn concat_is_segment_concat_and_eq_ignores_segmentation() {
+        reset_host_copied();
+        let whole = DataBuf::pattern(3, 4, 48);
+        let written = host_copied();
+        let parts = DataBuf::concat(
+            true,
+            vec![whole.slice(0, 10), whole.slice(10, 30), whole.slice(40, 8)],
+        );
+        // Re-slicing + concat moved no bytes.
+        assert_eq!(host_copied(), written);
+        assert_eq!(parts.rope().segment_count(), 3);
+        assert_eq!(parts, whole, "equality is content, not segmentation");
+        parts.check_pattern(3, 4).unwrap();
+        // Fragmented materialization is the only copy.
+        let flat = parts.to_contiguous();
+        assert_eq!(flat.as_ref(), whole.bytes());
+        assert_eq!(host_copied(), written + 48 + 48); // 1 check + 1 flatten
+    }
+
+    #[test]
+    fn phantom_concat_and_slice_track_lengths() {
+        let c = DataBuf::concat(
+            false,
+            vec![DataBuf::Phantom(5), DataBuf::Phantom(0), DataBuf::Phantom(7)],
+        );
+        assert_eq!(c, DataBuf::Phantom(12));
+        assert_eq!(c.slice(3, 6), DataBuf::Phantom(6));
+    }
+
+    #[test]
+    fn real_never_equals_phantom() {
+        assert_ne!(DataBuf::from_vec(vec![0, 0]), DataBuf::Phantom(2));
+        assert_eq!(DataBuf::empty(true).len(), DataBuf::empty(false).len());
+        assert_ne!(DataBuf::empty(true), DataBuf::empty(false));
     }
 
     #[test]

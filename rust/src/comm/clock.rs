@@ -15,8 +15,18 @@ pub struct Counters {
     pub msgs_global: u64,
     pub bytes_local: u64,
     pub bytes_global: u64,
-    /// Bytes moved by local copies (packing / rearrangement).
+    /// Bytes moved by *modeled* local copies (packing / rearrangement):
+    /// the virtual-clock charge from `RankCtx::copy`, identical in real
+    /// and phantom mode.
     pub bytes_copied: u64,
+    /// Payload bytes *physically* moved by the host: rope materialization
+    /// at sources, pattern-verification reads at sinks, and forced
+    /// compaction of fragmented ropes (see `comm::buffer`). Zero in
+    /// phantom mode. Store-and-forward hops move Arc views, so for a
+    /// real-mode all-to-allv this equals bytes written at sources plus
+    /// bytes read at sinks exactly — the zero-copy invariant asserted by
+    /// `tests/zero_copy.rs`.
+    pub copied_bytes: u64,
 }
 
 impl Counters {
@@ -26,6 +36,7 @@ impl Counters {
         self.bytes_local += other.bytes_local;
         self.bytes_global += other.bytes_global;
         self.bytes_copied += other.bytes_copied;
+        self.copied_bytes += other.copied_bytes;
     }
 
     pub fn total_msgs(&self) -> u64 {
@@ -200,6 +211,26 @@ mod tests {
         assert_eq!(c.counters.msgs_global, 2);
         assert_eq!(c.counters.bytes_local, 10);
         assert_eq!(c.counters.bytes_global, 50);
+    }
+
+    #[test]
+    fn merge_sums_every_field() {
+        let mut a = Counters {
+            msgs_local: 1,
+            msgs_global: 2,
+            bytes_local: 3,
+            bytes_global: 4,
+            bytes_copied: 5,
+            copied_bytes: 6,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.msgs_local, 2);
+        assert_eq!(a.msgs_global, 4);
+        assert_eq!(a.bytes_local, 6);
+        assert_eq!(a.bytes_global, 8);
+        assert_eq!(a.bytes_copied, 10);
+        assert_eq!(a.copied_bytes, 12);
     }
 
     #[test]

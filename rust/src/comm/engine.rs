@@ -12,12 +12,13 @@
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::hash::{BuildHasherDefault, Hasher};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::buffer::Payload;
 use super::clock::{Clock, Counters};
 use super::topology::Topology;
 use super::{Phase, PhaseBreakdown};
+use crate::algos::tuning::TuningTable;
 use crate::model::{Link, MachineProfile};
 
 /// Tags at or above this value are reserved for engine collectives.
@@ -149,6 +150,7 @@ pub struct RankCtx<'e> {
     topo: Topology,
     profile: &'e MachineProfile,
     mailboxes: &'e [Mailbox],
+    tuning: Option<&'e TuningTable>,
     clock: Clock,
     phases: PhaseBreakdown,
     mark: f64,
@@ -186,9 +188,18 @@ impl<'e> RankCtx<'e> {
         &self.clock.counters
     }
 
-    /// Post a non-blocking send. The message is delivered to the target
-    /// mailbox immediately at the OS level; its virtual arrival time is
-    /// computed here from the sender's clock and the link cost model.
+    /// The persisted tuning table attached to the engine, if any —
+    /// consulted by `tuna:auto` dispatch before falling back to the §V-A
+    /// heuristic.
+    #[inline]
+    pub fn tuning_table(&self) -> Option<&TuningTable> {
+        self.tuning
+    }
+
+    /// Post a non-blocking send. The payload travels by value — ropes
+    /// move their segment views, never payload bytes — so enqueueing
+    /// never clones block data. Its virtual arrival time is computed here
+    /// from the sender's clock and the link cost model.
     pub fn isend(&mut self, dst: usize, tag: u32, payload: Payload) -> SendReq {
         debug_assert!(dst < self.size(), "isend to rank {dst} of {}", self.size());
         debug_assert!(tag < RESERVED_TAG_BASE, "tag {tag:#x} is reserved");
@@ -458,6 +469,9 @@ pub struct Engine {
     /// Stack size per rank thread (algorithms are iterative; small stacks
     /// let large-P simulations fit comfortably).
     pub stack_size: usize,
+    /// Optional persisted tuning table, exposed to rank code through
+    /// [`RankCtx::tuning_table`] (used by `tuna:auto` dispatch).
+    pub tuning: Option<Arc<TuningTable>>,
 }
 
 impl Engine {
@@ -466,7 +480,14 @@ impl Engine {
             profile,
             topo,
             stack_size: 1 << 20,
+            tuning: None,
         }
+    }
+
+    /// Attach (or detach) a persisted tuning table for `tuna:auto`.
+    pub fn with_tuning(mut self, table: Option<Arc<TuningTable>>) -> Engine {
+        self.tuning = table;
+        self
     }
 
     /// Run `f` on every rank concurrently; returns per-rank results sorted
@@ -480,6 +501,7 @@ impl Engine {
         let mailboxes: Vec<Mailbox> = (0..p).map(|_| Mailbox::new()).collect();
         let mut results: Vec<Option<RankResult<R>>> = (0..p).map(|_| None).collect();
 
+        let tuning = self.tuning.as_deref();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(p);
             for rank in 0..p {
@@ -491,22 +513,29 @@ impl Engine {
                     .name(format!("rank-{rank}"))
                     .stack_size(self.stack_size)
                     .spawn_scoped(scope, move || {
+                        // Each rank owns an OS thread, so the host-copy
+                        // counter (rope materialization / sink reads) is
+                        // tracked thread-locally and harvested below.
+                        super::buffer::reset_host_copied();
                         let mut ctx = RankCtx {
                             rank,
                             topo,
                             profile,
                             mailboxes,
+                            tuning,
                             clock: Clock::new(),
                             phases: PhaseBreakdown::default(),
                             mark: 0.0,
                         };
                         let value = f(&mut ctx);
+                        let mut counters = ctx.clock.counters;
+                        counters.copied_bytes = super::buffer::host_copied();
                         RankResult {
                             rank,
                             value,
                             finish: ctx.clock.now,
                             phases: ctx.phases,
-                            counters: ctx.clock.counters,
+                            counters,
                         }
                     })
                     .expect("failed to spawn rank thread");
@@ -685,6 +714,27 @@ mod tests {
         assert_eq!(c.msgs_global, 2);
         assert_eq!(c.bytes_local, 200);
         assert_eq!(c.bytes_global, 200);
+    }
+
+    #[test]
+    fn host_copied_bytes_harvested_per_rank() {
+        // Each rank writes a 64 B pattern once (source) and verifies the
+        // received pattern once (sink): forwarding in between moves views
+        // only, so the harvested copied_bytes is exactly 128 per rank.
+        let e = engine(4, 2);
+        let res = e.run(|ctx| {
+            let p = ctx.size();
+            let me = ctx.rank();
+            let dst = (me + 1) % p;
+            let src = (me + p - 1) % p;
+            let payload = Payload::Raw(DataBuf::pattern(me, dst, 64));
+            let got = ctx.sendrecv(dst, 7, payload, src, 7).into_raw();
+            got.check_pattern(src, me).unwrap();
+        });
+        for r in &res.ranks {
+            assert_eq!(r.counters.copied_bytes, 128, "rank {}", r.rank);
+        }
+        assert_eq!(res.total_counters().copied_bytes, 4 * 128);
     }
 
     #[test]

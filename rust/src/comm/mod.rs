@@ -17,7 +17,7 @@ pub mod clock;
 pub mod engine;
 pub mod topology;
 
-pub use buffer::{Block, DataBuf, Payload};
+pub use buffer::{Block, ByteView, DataBuf, Payload, Rope};
 pub use clock::{Clock, Counters};
 pub use engine::{Engine, EngineResult, RankCtx, RankResult};
 pub use topology::Topology;

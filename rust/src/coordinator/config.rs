@@ -1,5 +1,8 @@
 //! Run configuration and `key=value` parsing for the CLI.
 
+use std::sync::Arc;
+
+use crate::algos::tuning::TuningTable;
 use crate::error::{Result, TunaError};
 use crate::model::MachineProfile;
 use crate::workload::Dist;
@@ -22,6 +25,10 @@ pub struct RunConfig {
     pub engine_limit_linear: usize,
     /// Engine rank budget for logarithmic algorithms.
     pub engine_limit_log: usize,
+    /// Persisted tuning table attached to every engine this config
+    /// creates, consulted by `tuna:auto` (loaded by the CLI from
+    /// `artifacts/tuning/`; not a `key=value` field).
+    pub tuning: Option<Arc<TuningTable>>,
 }
 
 impl Default for RunConfig {
@@ -36,6 +43,7 @@ impl Default for RunConfig {
             real_payloads: false,
             engine_limit_linear: 512,
             engine_limit_log: 2048,
+            tuning: None,
         }
     }
 }
@@ -113,6 +121,11 @@ pub struct SelectConfig {
     pub shortlist: usize,
     /// Whether to refine at all (pure model ranking when false).
     pub refine: bool,
+    /// Stress the refinement stage under skew: additionally measure each
+    /// shortlisted candidate on a heavy-tailed companion of the workload
+    /// ([`Dist::skewed_companion`]) and score it by the worse of the two,
+    /// so the selected algorithm is robust to skewed distributions.
+    pub skewed_refine: bool,
 }
 
 impl Default for SelectConfig {
@@ -121,14 +134,15 @@ impl Default for SelectConfig {
             run: RunConfig::default(),
             shortlist: 6,
             refine: true,
+            skewed_refine: false,
         }
     }
 }
 
 impl SelectConfig {
     /// Parse `key=value` arguments: selector keys (`shortlist=N`,
-    /// `refine=true|false`) are consumed here, everything else is
-    /// delegated to [`RunConfig::parse_args`].
+    /// `refine=true|false`, `skewed=true|false`) are consumed here,
+    /// everything else is delegated to [`RunConfig::parse_args`].
     pub fn parse_args(args: &[String]) -> Result<SelectConfig> {
         let mut cfg = SelectConfig::default();
         let mut rest: Vec<String> = Vec::new();
@@ -139,6 +153,11 @@ impl SelectConfig {
                     cfg.refine = v
                         .parse()
                         .map_err(|_| TunaError::config(format!("bad bool for refine: `{v}`")))?
+                }
+                Some(("skewed", v)) => {
+                    cfg.skewed_refine = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad bool for skewed: `{v}`")))?
                 }
                 _ => rest.push(arg.clone()),
             }
@@ -203,14 +222,19 @@ mod tests {
 
     #[test]
     fn select_config_splits_its_keys() {
-        let cfg = SelectConfig::parse_args(&args("p=64 q=8 shortlist=3 refine=false seed=9"))
-            .unwrap();
+        let cfg = SelectConfig::parse_args(&args(
+            "p=64 q=8 shortlist=3 refine=false skewed=true seed=9",
+        ))
+        .unwrap();
         assert_eq!(cfg.shortlist, 3);
         assert!(!cfg.refine);
+        assert!(cfg.skewed_refine);
         assert_eq!(cfg.run.p, 64);
         assert_eq!(cfg.run.seed, 9);
+        assert!(!SelectConfig::parse_args(&args("p=64 q=8")).unwrap().skewed_refine);
         // Run-config typos still fail loudly through the delegation.
         assert!(SelectConfig::parse_args(&args("shortlist=3 px=1")).is_err());
         assert!(SelectConfig::parse_args(&args("refine=maybe")).is_err());
+        assert!(SelectConfig::parse_args(&args("skewed=maybe")).is_err());
     }
 }

@@ -78,7 +78,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
     let topo = Topology::new(cfg.p, cfg.q);
     match choose_fidelity(kind, cfg.p, cfg) {
         Fidelity::Engine => {
-            let engine = Engine::new(cfg.profile.clone(), topo);
+            let engine = Engine::new(cfg.profile.clone(), topo).with_tuning(cfg.tuning.clone());
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
             for it in 0..cfg.iters.max(1) {

@@ -65,6 +65,9 @@ tuna — Configurable Non-uniform All-to-all Algorithms (TuNA / TuNA_l^g)
 
 USAGE:
   tuna run algo=<spec> [key=value ...]     measure one algorithm
+                                           (tuna:auto consults the tuning
+                                           table under table-dir, default
+                                           artifacts/tuning/)
   tuna figure <fig7..fig16|all> [--full]   regenerate paper figures
   tuna select [key=value ...]              rank all families (cost model +
                                            engine refinement), persist a
@@ -80,7 +83,9 @@ CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2), seed, iters,
   real (true|false), limit-linear, limit-log
 SELECT KEYS: shortlist (engine-refined candidates, default 6),
-  refine (true|false), top (rows printed), table-dir, golden-dir
+  refine (true|false), skewed (true|false: also stress the shortlist
+  under a heavy-tailed companion workload), top (rows printed),
+  table-dir, golden-dir
 ALGO SPECS: spread-out | ompi-linear | pairwise | scattered:b=N | vendor |
   bruck2 | tuna:r=N | tuna:auto | tuna-hier-coalesced:r=N,b=M |
   tuna-hier-staggered:r=N,b=M
@@ -111,9 +116,40 @@ fn parse_algo(spec: Option<&str>, default: AlgoKind) -> Result<AlgoKind> {
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
-    let (special, cfg_args) = split_args(args, &["algo"]);
+    let (special, cfg_args) = split_args(args, &["algo", "table-dir"]);
     let kind = parse_algo(get(&special, "algo"), AlgoKind::Tuna { radix: 2 })?;
-    let cfg = RunConfig::parse_args(&cfg_args)?;
+    let mut cfg = RunConfig::parse_args(&cfg_args)?;
+    // Only `tuna:auto` dispatch consults the persisted tuning table;
+    // attach it (when present) so the engine can see it. A missing table
+    // is the normal cold path; a present-but-unreadable one deserves a
+    // warning, not a silent fallback to the heuristic.
+    let table_dir_arg = get(&special, "table-dir");
+    if kind != AlgoKind::TunaAuto && table_dir_arg.is_some() {
+        return Err(TunaError::config(
+            "table-dir only applies to algo=tuna:auto (tables feed auto radix dispatch)",
+        ));
+    }
+    if kind == AlgoKind::TunaAuto {
+        let table_dir = table_dir_arg.unwrap_or(tuning::DEFAULT_TABLE_DIR);
+        let table_file = tuning::table_path(Path::new(table_dir), cfg.profile.name);
+        match tuning::TuningTable::load(&table_file) {
+            Ok(table) => {
+                println!(
+                    "using tuning table {} ({} entries)",
+                    table_file.display(),
+                    table.entries.len()
+                );
+                cfg.tuning = Some(std::sync::Arc::new(table));
+            }
+            Err(e) if table_file.exists() => {
+                eprintln!(
+                    "warning: ignoring unreadable tuning table {}: {e}",
+                    table_file.display()
+                );
+            }
+            Err(_) => {}
+        }
+    }
     let m = measure(&cfg, &kind)?;
     println!(
         "{} on {} P={} Q={} dist={:?}",

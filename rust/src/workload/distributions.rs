@@ -71,6 +71,27 @@ impl Dist {
         }
     }
 
+    /// A heavy-tailed companion with the same upper bound: what the
+    /// selector's refinement stage runs to stress shortlisted candidates
+    /// under skew (Fig. 16(b)-style workloads). Already-skewed
+    /// distributions are their own companion.
+    pub fn skewed_companion(&self) -> Dist {
+        match *self {
+            Dist::PowerLaw { .. } => *self,
+            Dist::Uniform { max } | Dist::Normal { max, .. } => Dist::PowerLaw {
+                max: max.max(8),
+                skew: 4.0,
+            },
+            Dist::Const { size } => Dist::PowerLaw {
+                max: size.max(8),
+                skew: 4.0,
+            },
+            // The FFT distributions are structural; stress them with the
+            // paper's default power law.
+            Dist::FftN1 | Dist::FftN2 => Dist::powerlaw_default(),
+        }
+    }
+
     /// Short name for tables and CSVs.
     pub fn name(&self) -> &'static str {
         match self {
@@ -150,6 +171,29 @@ mod tests {
     fn const_is_const() {
         let xs = sample_many(Dist::Const { size: 96 }, 100);
         assert!(xs.iter().all(|&x| x == 96));
+    }
+
+    #[test]
+    fn skewed_companion_is_heavy_tailed_and_bounded() {
+        for d in [
+            Dist::Uniform { max: 2048 },
+            Dist::normal_default(),
+            Dist::Const { size: 512 },
+            Dist::FftN1,
+            Dist::FftN2,
+            Dist::powerlaw_default(),
+        ] {
+            match d.skewed_companion() {
+                Dist::PowerLaw { max, skew } => {
+                    assert!(max >= 8, "{d:?}");
+                    assert!(skew > 1.0, "{d:?}: skew must favor small blocks");
+                }
+                other => panic!("{d:?}: companion {other:?} is not a power law"),
+            }
+        }
+        // Idempotent on already-skewed workloads.
+        let p = Dist::PowerLaw { max: 99, skew: 2.5 };
+        assert_eq!(p.skewed_companion(), p);
     }
 
     #[test]

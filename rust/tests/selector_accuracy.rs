@@ -1,8 +1,13 @@
-//! Selector accuracy against exhaustive measurement (the PR's acceptance
+//! Selector accuracy against exhaustive measurement (the PR 1 acceptance
 //! bar): on the Fig. 9 grid — P = 256, S from 16 B to 64 KiB — the
 //! model-ranked top-1 TuNA candidate must land within 15% of the
 //! exhaustive engine-sweep best. This is what justifies replacing
 //! argmin sweeps with the cost model at paper scale.
+//!
+//! PR 2 extends the grid with a skewed (power-law) workload: the model
+//! only sees the mean block size, so under heavy skew it gets a looser —
+//! but still bounded — accuracy budget, and the engine-refined selection
+//! path (`skewed=true`) exists precisely to close that gap.
 
 use tuna::algos::{run_alltoallv, select, tuning, AlgoKind};
 use tuna::comm::{Engine, Topology};
@@ -51,4 +56,46 @@ fn model_top1_within_15pct_of_engine_best_on_fig9_grid() {
             100.0 * (t_top1 / best - 1.0)
         );
     }
+}
+
+#[test]
+fn model_top1_bounded_on_skewed_grid_point() {
+    // One skewed cell of the grid: a Fig. 16(b)-style power law at
+    // P = 256. The mean-block-only model cannot see the tail, so the
+    // budget is 35% here (vs 15% for uniform) — tight enough to prove the
+    // ranking stays meaningful under skew, loose enough to acknowledge
+    // that exact skew robustness is the engine-refinement stage's job.
+    let p = 256;
+    let q = 8;
+    let profile = MachineProfile::fugaku();
+    let engine = Engine::new(profile.clone(), Topology::new(p, q));
+    let candidates: Vec<AlgoKind> = tuning::radix_candidates(p)
+        .into_iter()
+        .map(|radix| AlgoKind::Tuna { radix })
+        .collect();
+
+    let dist = Dist::PowerLaw { max: 2048, skew: 4.0 };
+    let sizes = BlockSizes::generate(p, dist, 0xF19);
+    let mean = sizes.mean_size();
+
+    let ranked = select::model_rank(&profile, engine.topo, mean, &candidates);
+    let top1 = ranked[0].kind;
+
+    let mut best = f64::INFINITY;
+    let mut t_top1 = f64::NAN;
+    for kind in &candidates {
+        let t = run_alltoallv(&engine, kind, &sizes, false).unwrap().makespan;
+        if *kind == top1 {
+            t_top1 = t;
+        }
+        best = best.min(t);
+    }
+    assert!(t_top1.is_finite(), "model pick {} not in the sweep grid", top1.name());
+    assert!(
+        t_top1 <= best * 1.35,
+        "skewed grid: selector picked {} at {t_top1:.6e}s, engine best is {best:.6e}s \
+         ({:.1}% over the 35% budget)",
+        top1.name(),
+        100.0 * (t_top1 / best - 1.0)
+    );
 }

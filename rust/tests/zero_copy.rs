@@ -1,0 +1,136 @@
+//! The zero-copy payload invariant (PR 2): real-mode payloads are rope
+//! views over Arc-shared storage, so across any store-and-forward
+//! schedule the host moves each payload byte exactly twice — written once
+//! at its source (the per-rank pattern arena) and read once at its sink
+//! (pattern verification). `Counters::copied_bytes` tracks those host
+//! moves; any intermediate hop that copied payload bytes would amplify it
+//! beyond `2 * total_payload_bytes` and fail these properties.
+//!
+//! This is the host-side complement of `Counters::bytes_copied`, the
+//! *modeled* pack/unpack charge on the virtual clock, which is intact and
+//! unchanged by the rope representation.
+
+use tuna::algos::{run_alltoallv, AlgoKind};
+use tuna::comm::{Engine, Topology};
+use tuna::model::MachineProfile;
+use tuna::util::prng::Pcg64;
+use tuna::util::prop::forall;
+use tuna::workload::{BlockSizes, Dist};
+
+/// Random topology: Q in {1, 2, 3, 4}, 1..=5 nodes, P = Q·N >= 2.
+fn gen_topology(rng: &mut Pcg64) -> (usize, usize) {
+    let q = [1usize, 2, 3, 4][rng.next_below(4) as usize];
+    let nodes = 1 + rng.next_below(5) as usize;
+    let p = (q * nodes).max(2);
+    let q = if p % q == 0 { q } else { 1 };
+    (p, q)
+}
+
+fn gen_dist(rng: &mut Pcg64) -> Dist {
+    match rng.next_below(5) {
+        0 => Dist::Uniform {
+            max: 8 * (1 + rng.next_below(128)),
+        },
+        1 => Dist::normal_default(),
+        2 => Dist::powerlaw_default(),
+        3 => Dist::Const {
+            size: 1 + rng.next_below(512),
+        },
+        _ => Dist::FftN1,
+    }
+}
+
+/// Store-and-forward kinds — the ones whose hops could plausibly copy.
+fn gen_forwarding_kind(rng: &mut Pcg64, p: usize, q: usize) -> AlgoKind {
+    loop {
+        match rng.next_below(4) {
+            0 => return AlgoKind::Bruck2,
+            1 => {
+                return AlgoKind::Tuna {
+                    radix: (2 + rng.next_below(p as u64) as usize).min(p.max(2)),
+                }
+            }
+            2 => return AlgoKind::TunaAuto,
+            3 if q >= 2 && p / q >= 2 => {
+                let radix = (2 + rng.next_below(q as u64) as usize).min(q);
+                let n = p / q;
+                let coalesced = rng.next_below(2) == 0;
+                let bc_max = if coalesced { n - 1 } else { (n - 1) * q };
+                let block_count = 1 + rng.next_below(bc_max.max(1) as u64) as usize;
+                return if coalesced {
+                    AlgoKind::TunaHierCoalesced { radix, block_count }
+                } else {
+                    AlgoKind::TunaHierStaggered { radix, block_count }
+                };
+            }
+            _ => continue,
+        }
+    }
+}
+
+#[test]
+fn tuna_and_hier_hops_copy_zero_payload_bytes() {
+    forall("zero-copy invariant (store-and-forward)", 60, |rng| {
+        let (p, q) = gen_topology(rng);
+        let dist = gen_dist(rng);
+        let kind = gen_forwarding_kind(rng, p, q);
+        let seed = rng.next_u64();
+        let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, dist, seed);
+        let rep = run_alltoallv(&engine, &kind, &sizes, true)
+            .map_err(|e| format!("{} P={p} Q={q} {dist:?}: {e}", kind.name()))?;
+        let expect = 2 * sizes.total_bytes();
+        if rep.counters.copied_bytes == expect {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} P={p} Q={q} {dist:?}: copied {} B != write-once+read-once {} B \
+                 ({} rounds amplified intermediate copies?)",
+                kind.name(),
+                rep.counters.copied_bytes,
+                expect,
+                rep.rounds
+            ))
+        }
+    });
+}
+
+#[test]
+fn linear_families_satisfy_the_same_bound() {
+    // Direct-shipping algorithms trivially must not copy either; pin it.
+    let p = 12;
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 777 }, 5);
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::OmpiLinear,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 3 },
+        AlgoKind::Vendor,
+    ] {
+        let rep = run_alltoallv(&engine, &kind, &sizes, true).unwrap();
+        assert_eq!(
+            rep.counters.copied_bytes,
+            2 * sizes.total_bytes(),
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn phantom_mode_moves_no_host_bytes() {
+    let p = 16;
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 4096 }, 9);
+    for kind in [
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::TunaHierStaggered { radix: 2, block_count: 3 },
+        AlgoKind::SpreadOut,
+    ] {
+        let rep = run_alltoallv(&engine, &kind, &sizes, false).unwrap();
+        assert_eq!(rep.counters.copied_bytes, 0, "{}", kind.name());
+        // The modeled pack/unpack charge is mode-independent and intact.
+        assert!(rep.counters.bytes_copied > 0, "{}", kind.name());
+    }
+}
