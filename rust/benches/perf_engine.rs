@@ -4,10 +4,13 @@
 //!
 //! * message throughput of the mailbox/clock core (ping-rounds over a
 //!   rank pair and an 8-rank ring);
-//! * whole-algorithm wallclock for representative (algo, P, mode)
-//!   points — phantom *and* real payloads — with derived messages/second
-//!   and the host copied-bytes counter (the zero-copy rope accounting,
-//!   see `comm::buffer`);
+//! * whole-algorithm wallclock for representative (algo, P, mode, exec)
+//!   points — phantom *and* real payloads, threaded *and* plan/replay —
+//!   with derived messages/second and the host copied-bytes counter (the
+//!   zero-copy rope accounting, see `comm::buffer`). Replay rows include
+//!   P >= 4096 points that thread-per-rank execution never attempted;
+//! * a threaded-vs-replay radix *sweep* at P = 512 phantom (the selector
+//!   refinement workload), recording the replay speedup per commit;
 //! * engine spawn overhead vs P.
 //!
 //! Besides the human-readable table, every run writes a machine-readable
@@ -16,11 +19,13 @@
 //! smoke-test size for CI.
 //!
 //! Used before/after every optimization in EXPERIMENTS.md §Perf; the
-//! PR 2 acceptance point is `tuna(r=2)` at P = 512 in real mode.
+//! PR 2 acceptance point is `tuna(r=2)` at P = 512 in real mode, the
+//! PR 3 acceptance points are the P = 512 sweep speedup (>= 10x
+//! expected) and the P = 4096 replay row.
 
 use std::time::Instant;
 
-use tuna::algos::{run_alltoallv, AlgoKind};
+use tuna::algos::{run_alltoallv_mode, AlgoKind, ExecMode};
 use tuna::comm::{DataBuf, Engine, Payload, Topology};
 use tuna::model::MachineProfile;
 use tuna::workload::{BlockSizes, Dist};
@@ -52,22 +57,33 @@ struct AlgoRow {
     q: usize,
     s: u64,
     real: bool,
+    exec: ExecMode,
     s_per_run: f64,
     sim_msgs_per_sec: f64,
     copied_bytes: u64,
     payload_bytes: u64,
 }
 
-fn bench_algo(kind: AlgoKind, p: usize, q: usize, s: u64, iters: usize, real: bool) -> AlgoRow {
+fn bench_algo(
+    kind: AlgoKind,
+    p: usize,
+    q: usize,
+    s: u64,
+    iters: usize,
+    real: bool,
+    exec: ExecMode,
+) -> AlgoRow {
     let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
     let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 7);
     // Warm-up (also the counter source: virtual counters are identical
-    // across runs, and copied_bytes only depends on the mode).
-    let rep = run_alltoallv(&engine, &kind, &sizes, real).unwrap();
+    // across runs, and copied_bytes only depends on the mode). For
+    // replay, the warm-up compiles and caches the plan, so the timed
+    // iterations measure cached replays — the FFT-style reuse pattern.
+    let rep = run_alltoallv_mode(&engine, &kind, &sizes, real, exec).unwrap();
     let msgs = rep.counters.total_msgs() as f64;
     let t0 = Instant::now();
     for _ in 0..iters {
-        let _ = run_alltoallv(&engine, &kind, &sizes, real).unwrap();
+        let _ = run_alltoallv_mode(&engine, &kind, &sizes, real, exec).unwrap();
     }
     let per_run = t0.elapsed().as_secs_f64() / iters as f64;
     AlgoRow {
@@ -76,10 +92,42 @@ fn bench_algo(kind: AlgoKind, p: usize, q: usize, s: u64, iters: usize, real: bo
         q,
         s,
         real,
+        exec,
         s_per_run: per_run,
         sim_msgs_per_sec: msgs / per_run,
         copied_bytes: rep.counters.copied_bytes,
         payload_bytes: sizes.total_bytes(),
+    }
+}
+
+struct SweepRow {
+    p: usize,
+    radices: Vec<usize>,
+    threaded_s: f64,
+    replay_s: f64,
+}
+
+/// The selector-refinement workload: a phantom radix sweep at one (P, Q,
+/// S) point, threaded vs replayed. This is the model-sweep speedup the
+/// plan/replay mode exists for.
+fn bench_sweep(p: usize, q: usize, s: u64, radices: Vec<usize>) -> SweepRow {
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 7);
+    let run_all = |exec: ExecMode| -> f64 {
+        let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+        let t0 = Instant::now();
+        for &r in &radices {
+            let kind = AlgoKind::Tuna { radix: r };
+            let _ = run_alltoallv_mode(&engine, &kind, &sizes, false, exec).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let threaded_s = run_all(ExecMode::Threaded);
+    let replay_s = run_all(ExecMode::Replay);
+    SweepRow {
+        p,
+        radices,
+        threaded_s,
+        replay_s,
     }
 }
 
@@ -124,42 +172,56 @@ fn main() {
         ping_rows.push((pairs, rounds, rate));
     }
 
-    // (kind, p, q, s, iters, real). The real-mode tuna(r=2)@512 row is
-    // the PR 2 acceptance point: payload ropes made whole-run wallclock
-    // dominated by the one source write + one sink verify per block.
-    let algo_grid: Vec<(AlgoKind, usize, usize, u64, usize, bool)> = if quick {
+    // (kind, p, q, s, iters, real, exec). The real-mode tuna(r=2)@512
+    // row is the PR 2 acceptance point (payload ropes); the
+    // threaded/replay pairs record the PR 3 executor speedup, and the
+    // replay-only tail rows are P counts thread-per-rank never ran.
+    let thr = ExecMode::Threaded;
+    let rpl = ExecMode::Replay;
+    let algo_grid: Vec<(AlgoKind, usize, usize, u64, usize, bool, ExecMode)> = if quick {
         vec![
-            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false),
-            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, true),
-            (AlgoKind::SpreadOut, 64, 8, 1024, 3, true),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 64, 8, 1024, 3, true),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, true, thr),
+            (AlgoKind::SpreadOut, 64, 8, 1024, 3, true, thr),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 64, 8, 1024, 3, true, thr),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, 1, false, rpl),
         ]
     } else {
         vec![
-            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, false),
-            (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, 3, false),
-            (AlgoKind::SpreadOut, 256, 8, 1024, 3, false),
-            (AlgoKind::Vendor, 256, 8, 1024, 3, false),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, false),
-            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, true),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, true),
-            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, true),
-            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1, false),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, 3, false, thr),
+            (AlgoKind::SpreadOut, 256, 8, 1024, 3, false, thr),
+            (AlgoKind::SpreadOut, 256, 8, 1024, 3, false, rpl),
+            (AlgoKind::Vendor, 256, 8, 1024, 3, false, thr),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, false, thr),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, true, thr),
+            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, true, thr),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, true, thr),
+            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 2, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, 2, false, rpl),
+            (AlgoKind::Tuna { radix: 4 }, 8192, 32, 64, 1, false, rpl),
         ]
     };
 
     println!(
-        "\n{:<28} {:>6} {:>5} {:>12} {:>14} {:>14}",
-        "algorithm", "P", "mode", "s/run", "sim-msgs/s", "copied-B"
+        "\n{:<28} {:>6} {:>5} {:>9} {:>12} {:>14} {:>14}",
+        "algorithm", "P", "mode", "exec", "s/run", "sim-msgs/s", "copied-B"
     );
     let mut algo_rows: Vec<AlgoRow> = Vec::new();
-    for (kind, p, q, s, iters, real) in algo_grid {
-        let row = bench_algo(kind, p, q, s, iters, real);
+    for (kind, p, q, s, iters, real, exec) in algo_grid {
+        let row = bench_algo(kind, p, q, s, iters, real, exec);
         println!(
-            "{:<28} {:>6} {:>5} {:>10.3} s {:>14.0} {:>14}",
+            "{:<28} {:>6} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14}",
             row.algo,
             row.p,
             if row.real { "real" } else { "phtm" },
+            row.exec.name(),
             row.s_per_run,
             row.sim_msgs_per_sec,
             row.copied_bytes
@@ -172,8 +234,32 @@ fn main() {
                 row.algo
             );
         }
+        if row.exec == ExecMode::Replay {
+            assert_eq!(
+                row.copied_bytes, 0,
+                "replay moved host payload bytes for {}",
+                row.algo
+            );
+        }
         algo_rows.push(row);
     }
+
+    // Threaded-vs-replay model sweep at P = 512 phantom (the PR 3
+    // acceptance point: >= 10x expected).
+    let sweep = if quick {
+        bench_sweep(512, 32, 1024, vec![2, 4, 16, 512])
+    } else {
+        bench_sweep(512, 32, 1024, vec![2, 4, 8, 16, 23, 32, 64, 128, 256, 512])
+    };
+    let speedup = sweep.threaded_s / sweep.replay_s.max(1e-12);
+    println!(
+        "\nmodel sweep P={} ({} radixes): threaded {:.3} s, replay {:.3} s — {:.1}x speedup",
+        sweep.p,
+        sweep.radices.len(),
+        sweep.threaded_s,
+        sweep.replay_s,
+        speedup
+    );
 
     println!();
     let spawn_grid: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024, 4096] };
@@ -206,13 +292,14 @@ fn main() {
     for (i, r) in algo_rows.iter().enumerate() {
         j.push_str(&format!(
             "    {{\"algo\": \"{}\", \"p\": {}, \"q\": {}, \"s\": {}, \"real\": {}, \
-             \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \"copied_bytes\": {}, \
-             \"payload_bytes\": {}}}{}\n",
+             \"exec\": \"{}\", \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \
+             \"copied_bytes\": {}, \"payload_bytes\": {}}}{}\n",
             json_escape(&r.algo),
             r.p,
             r.q,
             r.s,
             r.real,
+            r.exec.name(),
             r.s_per_run,
             r.sim_msgs_per_sec,
             r.copied_bytes,
@@ -220,7 +307,17 @@ fn main() {
             if i + 1 < algo_rows.len() { "," } else { "" }
         ));
     }
-    j.push_str("  ],\n  \"spawn\": [\n");
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"sweep\": {{\"p\": {}, \"radix_count\": {}, \"threaded_s\": {:.6}, \
+         \"replay_s\": {:.6}, \"replay_speedup\": {:.2}}},\n",
+        sweep.p,
+        sweep.radices.len(),
+        sweep.threaded_s,
+        sweep.replay_s,
+        speedup
+    ));
+    j.push_str("  \"spawn\": [\n");
     for (i, (p, t)) in spawn_rows.iter().enumerate() {
         j.push_str(&format!(
             "    {{\"p\": {p}, \"seconds\": {t:.6}}}{}\n",

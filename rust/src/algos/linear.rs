@@ -22,7 +22,8 @@
 //! (the only modeled copy is the self-block delivery memcpy).
 
 use crate::comm::engine::{RecvReq, SendReq};
-use crate::comm::{Block, Payload, Phase, RankCtx};
+use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx};
+use crate::workload::BlockSizes;
 
 /// Tag used by every linear algorithm (one message per (src,dst) pair;
 /// FIFO per channel keeps this unambiguous).
@@ -162,6 +163,93 @@ pub fn scattered(ctx: &mut RankCtx, mut blocks: Vec<Block>, block_count: usize) 
     out.push(self_block);
     ctx.phase_lap(Phase::Data);
     out
+}
+
+// ---- plan compilers -------------------------------------------------------
+//
+// Each mirrors its run function above op-for-op (same clock charges, same
+// send/recv posting order, same wait boundaries), reading block sizes from
+// the counts matrix instead of moving payloads — the plan-determinism
+// contract of `comm::plan`. Equivalence is asserted bitwise by
+// `tests/replay_equivalence.rs`.
+
+/// Compile [`spread_out`] for every rank.
+pub(crate) fn plan_spread_out(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    let p = sizes.p();
+    for (me, b) in builders.iter_mut().enumerate() {
+        let row = sizes.row(me);
+        b.mark();
+        b.copy(row[me]); // self-block delivery memcpy
+        for i in 0..p - 1 {
+            let dst = (me + i + 1) % p;
+            let src = (me + p - i - 1) % p;
+            b.recv(src, TAG);
+            b.send(dst, TAG, row[dst]);
+        }
+        b.wait();
+        b.lap(Phase::Data);
+    }
+}
+
+/// Compile [`ompi_linear`] for every rank.
+pub(crate) fn plan_ompi_linear(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    let p = sizes.p();
+    for (me, b) in builders.iter_mut().enumerate() {
+        let row = sizes.row(me);
+        b.mark();
+        b.copy(row[me]);
+        for dst in (0..p).filter(|&d| d != me) {
+            b.recv(dst, TAG);
+            b.send(dst, TAG, row[dst]);
+        }
+        b.wait();
+        b.lap(Phase::Data);
+    }
+}
+
+/// Compile [`pairwise`] for every rank.
+pub(crate) fn plan_pairwise(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    let p = sizes.p();
+    let pow2 = p.is_power_of_two();
+    for (me, b) in builders.iter_mut().enumerate() {
+        let row = sizes.row(me);
+        b.mark();
+        b.copy(row[me]);
+        for i in 1..p {
+            let (dst, src) = if pow2 {
+                (me ^ i, me ^ i)
+            } else {
+                ((me + i) % p, (me + p - i) % p)
+            };
+            b.sendrecv(dst, TAG, row[dst], src, TAG);
+        }
+        b.lap(Phase::Data);
+    }
+}
+
+/// Compile [`scattered`] for every rank.
+pub(crate) fn plan_scattered(builders: &mut [PlanBuilder], sizes: &BlockSizes, block_count: usize) {
+    assert!(block_count >= 1, "block_count must be >= 1");
+    let p = sizes.p();
+    for (me, b) in builders.iter_mut().enumerate() {
+        let row = sizes.row(me);
+        b.mark();
+        b.copy(row[me]);
+        let mut i = 0usize;
+        while i < p - 1 {
+            let batch = block_count.min(p - 1 - i);
+            for j in 0..batch {
+                let off = i + j + 1;
+                let src = (me + p - off) % p;
+                let dst = (me + off) % p;
+                b.recv(src, TAG);
+                b.send(dst, TAG, row[dst]);
+            }
+            b.wait();
+            i += batch;
+        }
+        b.lap(Phase::Data);
+    }
 }
 
 #[cfg(test)]

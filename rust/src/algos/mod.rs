@@ -30,7 +30,7 @@ pub mod tuning;
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use crate::comm::{Block, Counters, DataBuf, Engine, PhaseBreakdown, RankCtx};
+use crate::comm::{Block, CommPlan, Counters, DataBuf, Engine, PhaseBreakdown, PlanBuilder, RankCtx};
 use crate::error::{Result, TunaError};
 use crate::workload::{fingerprint_one, BlockSizes};
 
@@ -238,6 +238,58 @@ impl AlgoKind {
     }
 }
 
+/// How an all-to-allv executes on the engine.
+///
+/// * [`ExecMode::Threaded`] — one OS thread per rank, real message
+///   matching; the golden oracle and the only mode that moves/validates
+///   real payload bytes.
+/// * [`ExecMode::Replay`] — compile a [`CommPlan`] from the counts
+///   matrix (cached per engine) and advance it on the single-threaded
+///   discrete-event executor; phantom-only, bit-identical timing, and
+///   orders of magnitude cheaper at large P.
+/// * [`ExecMode::Auto`] — replay for phantom workloads, threaded for
+///   real ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    Auto,
+    Threaded,
+    Replay,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "auto" => Some(ExecMode::Auto),
+            "threaded" => Some(ExecMode::Threaded),
+            "replay" => Some(ExecMode::Replay),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Auto => "auto",
+            ExecMode::Threaded => "threaded",
+            ExecMode::Replay => "replay",
+        }
+    }
+
+    /// Concrete mode for a workload: `Auto` replays phantom payloads and
+    /// threads real ones.
+    pub fn resolve(self, real_payloads: bool) -> ExecMode {
+        match self {
+            ExecMode::Auto => {
+                if real_payloads {
+                    ExecMode::Threaded
+                } else {
+                    ExecMode::Replay
+                }
+            }
+            m => m,
+        }
+    }
+}
+
 /// Per-rank statistics an algorithm reports beyond timing.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AlgoStats {
@@ -333,6 +385,161 @@ pub fn run_alltoallv(
         )));
     }
     Ok(report)
+}
+
+/// Run `kind` in `mode` (resolved against `real_payloads`): the threaded
+/// oracle, or plan/replay for phantom workloads. `mode=replay` with real
+/// payloads is a contradiction — replay never materializes bytes — and
+/// fails loudly instead of silently dropping validation.
+pub fn run_alltoallv_mode(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    real_payloads: bool,
+    mode: ExecMode,
+) -> Result<RunReport> {
+    match mode.resolve(real_payloads) {
+        ExecMode::Replay => {
+            if real_payloads {
+                return Err(TunaError::config(
+                    "mode=replay is phantom-only (real payloads need the threaded oracle); \
+                     use real=false or mode=threaded",
+                ));
+            }
+            run_alltoallv_replay(engine, kind, sizes)
+        }
+        _ => run_alltoallv(engine, kind, sizes, real_payloads),
+    }
+}
+
+/// Replay `kind` over `sizes`: compile (or fetch the cached) plan, then
+/// advance it on the single-threaded discrete-event executor. The report
+/// is bit-identical to a threaded phantom run (`tests/replay_equivalence
+/// .rs`); `validated` reflects the compile-time schedule checks — byte
+/// validation requires real payloads and therefore the threaded oracle.
+pub fn run_alltoallv_replay(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+) -> Result<RunReport> {
+    let plan = plan_for(engine, kind, sizes)?;
+    let res = crate::comm::replay::execute(&engine.profile, engine.topo, &plan);
+    Ok(RunReport {
+        algo: kind.name(),
+        makespan: res.makespan,
+        phases: res.phase_critical_path(),
+        counters: res.total_counters(),
+        t_peak: plan.t_peak,
+        rounds: plan.rounds,
+        validated: true,
+    })
+}
+
+/// Fetch `kind`'s compiled plan for `sizes` from the engine's cache,
+/// compiling on a miss. The key is `(resolved algo spec, counts-matrix
+/// identity)`: the workload handle `(P, Q, dist, seed)` names the matrix
+/// exactly (rows are regenerated from it deterministically), so equal
+/// keys guarantee equal matrices.
+pub fn plan_for(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<Arc<CommPlan>> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    mix(sizes.p() as u64);
+    mix(engine.topo.q() as u64);
+    mix(sizes.seed());
+    for byte in format!("{:?}", sizes.dist()).bytes() {
+        mix(byte as u64);
+    }
+    // `tuna:auto` resolves its radix against the attached tuning table,
+    // so the table's identity is part of the plan's inputs (the Arc
+    // address is unique for the table's lifetime; `Engine::with_tuning`
+    // additionally resets the cache when swapping tables).
+    if let Some(table) = &engine.tuning {
+        mix(Arc::as_ptr(table) as u64);
+    }
+    let key = (kind.spec(), h);
+    engine
+        .plan_cache
+        .get_or_try_insert(key, || compile_plan(engine, kind, sizes))
+}
+
+/// Compile `kind`'s [`CommPlan`] from the counts matrix — without
+/// running anything. Per the plan-determinism contract (`comm::plan`),
+/// the result depends only on the matrix and on resolved parameters;
+/// `tuna:auto` resolves its radix here exactly as dispatch would (same
+/// allreduced mean, same tuning-table-then-heuristic policy) and emits
+/// the agreement allreduce the threaded run performs.
+pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<CommPlan> {
+    let topo = engine.topo;
+    let p = topo.p();
+    if sizes.p() != p {
+        return Err(TunaError::config(format!(
+            "workload is for P={} but engine has P={p}",
+            sizes.p()
+        )));
+    }
+    kind.check(p, topo.q())?;
+
+    let mut builders: Vec<PlanBuilder> = (0..p).map(|me| PlanBuilder::new(me, p)).collect();
+    let (t_peak, rounds) = match *kind {
+        AlgoKind::SpreadOut => {
+            linear::plan_spread_out(&mut builders, sizes);
+            (0, 0)
+        }
+        AlgoKind::OmpiLinear => {
+            linear::plan_ompi_linear(&mut builders, sizes);
+            (0, 0)
+        }
+        AlgoKind::Pairwise => {
+            linear::plan_pairwise(&mut builders, sizes);
+            (0, 0)
+        }
+        AlgoKind::Scattered { block_count } => {
+            linear::plan_scattered(&mut builders, sizes, block_count);
+            (0, 0)
+        }
+        AlgoKind::Vendor => {
+            linear::plan_scattered(&mut builders, sizes, VENDOR_BLOCK_COUNT);
+            (0, 0)
+        }
+        AlgoKind::Bruck2 => tuna::plan_into(&mut builders, sizes, 2),
+        AlgoKind::Tuna { radix } => tuna::plan_into(&mut builders, sizes, radix),
+        AlgoKind::TunaAuto => {
+            // Dispatch preamble: the radix-agreement allreduce, timed
+            // like any other traffic. The reduced value (total bytes) is
+            // exact u64 arithmetic, so the compile-time mean is
+            // bit-identical to every rank's allreduced mean.
+            for b in builders.iter_mut() {
+                b.allreduce();
+            }
+            let total = (0..p)
+                .map(|s| sizes.row(s).iter().sum::<u64>())
+                .fold(0u64, u64::wrapping_add);
+            let mean = total as f64 / (p as f64 * p as f64);
+            let radix = engine
+                .tuning
+                .as_deref()
+                .and_then(|t| t.lookup_radix(engine.profile.name, p, topo.q(), mean))
+                .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
+            tuna::plan_into(&mut builders, sizes, radix)
+        }
+        AlgoKind::TunaHierCoalesced { radix, block_count } => {
+            tuna_hier::plan_into(&mut builders, sizes, topo, radix, block_count, true)
+        }
+        AlgoKind::TunaHierStaggered { radix, block_count } => {
+            tuna_hier::plan_into(&mut builders, sizes, topo, radix, block_count, false)
+        }
+    };
+    Ok(CommPlan {
+        p,
+        q: topo.q(),
+        algo: kind.name(),
+        ranks: builders.into_iter().map(PlanBuilder::finish).collect(),
+        t_peak,
+        rounds,
+    })
 }
 
 /// Check a received block set: complete origin coverage, correct
@@ -489,6 +696,84 @@ mod tests {
         assert_eq!(auto_plain.rounds, fixed_heur.rounds);
         assert_eq!(auto_tuned.rounds, fixed_table.rounds);
         assert_ne!(auto_tuned.rounds, auto_plain.rounds);
+    }
+
+    #[test]
+    fn exec_mode_parses_and_resolves() {
+        assert_eq!(ExecMode::parse("auto"), Some(ExecMode::Auto));
+        assert_eq!(ExecMode::parse("threaded"), Some(ExecMode::Threaded));
+        assert_eq!(ExecMode::parse("replay"), Some(ExecMode::Replay));
+        assert_eq!(ExecMode::parse("nope"), None);
+        assert_eq!(ExecMode::Auto.resolve(true), ExecMode::Threaded);
+        assert_eq!(ExecMode::Auto.resolve(false), ExecMode::Replay);
+        assert_eq!(ExecMode::Replay.resolve(true), ExecMode::Replay);
+        assert_eq!(ExecMode::Threaded.resolve(false), ExecMode::Threaded);
+    }
+
+    #[test]
+    fn replay_mode_rejects_real_payloads() {
+        use crate::comm::{Engine, Topology};
+        use crate::model::MachineProfile;
+        use crate::workload::Dist;
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(8, 2));
+        let sizes = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 1);
+        let kind = AlgoKind::Tuna { radix: 2 };
+        let err = run_alltoallv_mode(&e, &kind, &sizes, true, ExecMode::Replay)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("phantom-only"), "{err}");
+        // Auto with real payloads falls back to the threaded oracle.
+        let rep = run_alltoallv_mode(&e, &kind, &sizes, true, ExecMode::Auto).unwrap();
+        assert!(rep.validated);
+    }
+
+    #[test]
+    fn plans_depend_only_on_the_counts_matrix() {
+        use crate::comm::{Engine, Topology};
+        use crate::model::MachineProfile;
+        use crate::workload::Dist;
+        // Same (P, dist, seed) twice, plus a payload-mode flip on the
+        // threaded side, never changes the compiled plan.
+        let e = Engine::new(MachineProfile::fugaku(), Topology::new(12, 4));
+        let sizes = BlockSizes::generate(12, Dist::PowerLaw { max: 256, skew: 3.0 }, 9);
+        let again = BlockSizes::generate(12, Dist::PowerLaw { max: 256, skew: 3.0 }, 9);
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Tuna { radix: 3 },
+            AlgoKind::TunaHierCoalesced { radix: 2, block_count: 2 },
+        ] {
+            let a = compile_plan(&e, &kind, &sizes).unwrap();
+            let b = compile_plan(&e, &kind, &again).unwrap();
+            assert_eq!(a, b, "{} plan not a pure function of the matrix", kind.name());
+            assert!(a.total_ops() > 0);
+        }
+        // A different seed gives a different matrix and (generically) a
+        // different plan.
+        let other = BlockSizes::generate(12, Dist::PowerLaw { max: 256, skew: 3.0 }, 10);
+        let a = compile_plan(&e, &AlgoKind::Tuna { radix: 3 }, &sizes).unwrap();
+        let c = compile_plan(&e, &AlgoKind::Tuna { radix: 3 }, &other).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn plan_for_caches_per_engine() {
+        use crate::comm::{Engine, Topology};
+        use crate::model::MachineProfile;
+        use crate::workload::Dist;
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(8, 2));
+        let sizes = BlockSizes::generate(8, Dist::Uniform { max: 128 }, 3);
+        let kind = AlgoKind::Tuna { radix: 2 };
+        let a = plan_for(&e, &kind, &sizes).unwrap();
+        let b = plan_for(&e, &kind, &sizes).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert_eq!(e.plan_cache.stats(), (1, 1));
+        // Different algo or workload compiles a fresh plan.
+        let c = plan_for(&e, &AlgoKind::Tuna { radix: 4 }, &sizes).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        let other = BlockSizes::generate(8, Dist::Uniform { max: 128 }, 4);
+        let d = plan_for(&e, &kind, &other).unwrap();
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(e.plan_cache.len(), 3);
     }
 
     #[test]

@@ -27,7 +27,8 @@
 
 use super::radix::{self, Round};
 use super::AlgoStats;
-use crate::comm::{Block, Payload, Phase, RankCtx};
+use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx};
+use crate::workload::BlockSizes;
 
 /// A slot's content: one or more blocks that travel as a unit. Flat TuNA
 /// has one block per slot; hierarchical intra-node TuNA aggregates the N
@@ -215,6 +216,138 @@ pub fn run(ctx: &mut RankCtx, blocks: Vec<Block>, radix_r: usize) -> (Vec<Block>
         }
     }
     (recv, out.stats)
+}
+
+// ---- plan compilers -------------------------------------------------------
+
+/// Stats of a compiled slot-engine schedule (identical on every rank of
+/// the group, so computed once).
+pub(crate) struct CorePlanStats {
+    pub t_peak: usize,
+    pub rounds: usize,
+}
+
+/// Compile [`tuna_core`] for every rank of the contiguous group
+/// `[base, base+q)` — a joint size-only simulation: `slots[g][j]` holds
+/// the *total* bytes of group-rank `g`'s slot `j` (its `arity` sub-blocks
+/// travel wholesale, so per-sub-block sizes are never needed here) and is
+/// rotated through the group exactly as the slot exchange moves contents.
+/// Ops are emitted per rank in the same order `tuna_core` charges them.
+pub(crate) fn plan_core(
+    builders: &mut [PlanBuilder],
+    base: usize,
+    q: usize,
+    radix_r: usize,
+    arity: usize,
+    slots: &mut [Vec<u64>],
+    tag_base: u32,
+) -> CorePlanStats {
+    assert_eq!(slots.len(), q, "need one slot row per group rank");
+    assert!(radix_r >= 2);
+    let schedule: Vec<Round> = radix::rounds(radix_r, q);
+
+    // T occupancy evolves identically on every rank of the group.
+    let mut in_t = vec![false; q];
+    let mut t_now = 0usize;
+    let mut t_peak = 0usize;
+
+    for (round_idx, rd) in schedule.iter().enumerate() {
+        let meta_tag = tag_base + 2 * round_idx as u32;
+        let data_tag = meta_tag + 1;
+        let moving: Vec<usize> = (1..q)
+            .filter(|&j| radix::digit(j, rd.x, radix_r) == rd.z)
+            .collect();
+        let meta_bytes = 8 * (moving.len() * arity) as u64;
+        // Outgoing payload bytes per group rank this round.
+        let out_bytes: Vec<u64> = (0..q)
+            .map(|g| moving.iter().map(|&j| slots[g][j]).sum())
+            .collect();
+
+        for g in 0..q {
+            let b = &mut builders[base + g];
+            let dst = base + (g + rd.step) % q;
+            let src_g = (g + q - rd.step) % q;
+            let src = base + src_g;
+            b.mark();
+            b.send(dst, meta_tag, meta_bytes);
+            b.recv(src, meta_tag);
+            b.wait();
+            b.lap(Phase::Metadata);
+            b.copy(out_bytes[g]); // pack into send buffer
+            b.lap(Phase::Replace);
+            b.send(dst, data_tag, out_bytes[g]);
+            b.recv(src, data_tag);
+            b.wait();
+            b.lap(Phase::Data);
+            b.copy(out_bytes[src_g]); // store incoming into T / R
+            b.lap(Phase::Replace);
+        }
+
+        // Rotate the moving slot contents one step through the group and
+        // track T exactly as the runtime does: packs release, then
+        // non-final arrivals occupy.
+        for &j in &moving {
+            let col: Vec<u64> = (0..q).map(|g| slots[(g + q - rd.step) % q][j]).collect();
+            for g in 0..q {
+                slots[g][j] = col[g];
+            }
+            if in_t[j] {
+                in_t[j] = false;
+                t_now -= 1;
+            }
+        }
+        for &j in &moving {
+            let (top_x, top_z) = radix::top_digit(j, radix_r);
+            let is_final = top_x == rd.x && top_z == rd.z;
+            if !is_final {
+                in_t[j] = true;
+                t_now += 1;
+                t_peak = t_peak.max(t_now);
+            }
+        }
+    }
+    debug_assert_eq!(t_now, 0, "T must drain by the last round");
+
+    CorePlanStats {
+        t_peak,
+        rounds: schedule.len(),
+    }
+}
+
+/// Compile flat TuNA ([`run`]) for every rank from the counts matrix.
+pub(crate) fn plan_into(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    radix_r: usize,
+) -> (usize, usize) {
+    let p = sizes.p();
+    let radix_r = radix_r.min(p).max(2);
+
+    // Prepare: allreduce for M + index array write, inside one phase lap.
+    for b in builders.iter_mut() {
+        b.mark();
+        b.allreduce();
+        b.copy(4 * p as u64);
+        b.lap(Phase::Prepare);
+    }
+
+    // slots[me][j] = bytes of my block destined (me + j) mod P.
+    let mut slots: Vec<Vec<u64>> = (0..p)
+        .map(|me| {
+            let row = sizes.row(me);
+            (0..p).map(|j| row[(me + j) % p]).collect()
+        })
+        .collect();
+
+    let stats = plan_core(builders, 0, p, radix_r, 1, &mut slots, 0);
+
+    // Self-block delivery is a local copy (slot 0 never moves).
+    for (me, b) in builders.iter_mut().enumerate() {
+        b.mark();
+        b.copy(slots[me][0]);
+        b.lap(Phase::Replace);
+    }
+    (stats.t_peak, stats.rounds)
 }
 
 #[cfg(test)]

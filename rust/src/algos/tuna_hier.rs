@@ -31,7 +31,8 @@
 use super::tuna::{tuna_core, SlotContent};
 use super::AlgoStats;
 use crate::comm::engine::{RecvReq, SendReq};
-use crate::comm::{Block, Payload, Phase, RankCtx};
+use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx, Topology};
+use crate::workload::BlockSizes;
 
 /// Tag space for the inter-node phase (the intra-node core uses tags from
 /// 0; K_intra <= Q so this is comfortably disjoint).
@@ -182,6 +183,131 @@ pub fn run(
 
     debug_assert_eq!(recv.len(), p);
     (recv, stats)
+}
+
+// ---- plan compiler --------------------------------------------------------
+
+/// Compile hierarchical TuNA ([`run`]) for every rank from the counts
+/// matrix. The intra-node phase is a per-node [`super::tuna::plan_core`]
+/// joint simulation with arity N; the inter-node phase's message and copy
+/// sizes come from the matrix in closed form — after the intra phase,
+/// rank `(n, g)`'s bucket for node `k` holds exactly the blocks
+/// `{(n, g') → (k, g)}` in ascending `g'` order.
+pub(crate) fn plan_into(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    topo: Topology,
+    radix: usize,
+    block_count: usize,
+    coalesced: bool,
+) -> (usize, usize) {
+    let p = topo.p();
+    let q = topo.q();
+    let n_nodes = topo.nodes();
+    assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
+    assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+    assert!(block_count >= 1);
+    let rows: Vec<Vec<u64>> = (0..p).map(|s| sizes.row(s)).collect();
+
+    // Prepare: global allreduce for M + index array write.
+    for b in builders.iter_mut() {
+        b.mark();
+        b.allreduce();
+        b.copy(4 * p as u64);
+        b.lap(Phase::Prepare);
+    }
+
+    // Intra-node phase, one joint core simulation per node: slot j of
+    // rank (node, g) aggregates the N sub-blocks destined (k, (g+j)%Q).
+    let mut t_peak = 0usize;
+    let mut rounds = 0usize;
+    for node in 0..n_nodes {
+        let base = node * q;
+        let mut slots: Vec<Vec<u64>> = (0..q)
+            .map(|g| {
+                let row = &rows[base + g];
+                (0..q)
+                    .map(|j| {
+                        let dest_g = (g + j) % q;
+                        (0..n_nodes).map(|k| row[topo.rank_of(k, dest_g)]).sum()
+                    })
+                    .collect()
+            })
+            .collect();
+        let stats = super::tuna::plan_core(builders, base, q, radix, n_nodes, &mut slots, 0);
+        t_peak = stats.t_peak;
+        rounds = stats.rounds;
+    }
+    if n_nodes > 1 {
+        rounds += if coalesced {
+            n_nodes - 1
+        } else {
+            let total_steps = (n_nodes - 1) * q;
+            (total_steps + block_count - 1) / block_count
+        };
+    }
+
+    // Inter-node phase per rank. `bucket_block(me, k, j)` is the size of
+    // the j-th (origin-sorted) block of `me`'s bucket for node `k`.
+    for me in 0..p {
+        let my_node = topo.node_of(me);
+        let g = topo.group_rank(me);
+        let bucket_block = |k: usize, j: usize| rows[topo.rank_of(my_node, j)][topo.rank_of(k, g)];
+        let bucket_sum = |k: usize| (0..q).map(|j| bucket_block(k, j)).sum::<u64>();
+        let b = &mut builders[me];
+
+        // Own node's bucket is final: a local copy.
+        b.mark();
+        b.copy(bucket_sum(my_node));
+        b.lap(Phase::Replace);
+        if n_nodes == 1 {
+            continue;
+        }
+
+        if coalesced {
+            b.mark();
+            let staged: u64 = (0..n_nodes).filter(|&k| k != my_node).map(|k| bucket_sum(k)).sum();
+            b.copy(staged);
+            b.lap(Phase::Rearrange);
+
+            let mut round = 0usize;
+            while round < n_nodes - 1 {
+                let batch = block_count.min(n_nodes - 1 - round);
+                for i in 0..batch {
+                    let off = round + i + 1;
+                    let ndst = (my_node + n_nodes - off) % n_nodes;
+                    let nsrc = (my_node + off) % n_nodes;
+                    let tag = INTER_TAG + off as u32;
+                    b.recv(topo.rank_of(nsrc, g), tag);
+                    b.send(topo.rank_of(ndst, g), tag, bucket_sum(ndst));
+                }
+                b.wait();
+                round += batch;
+            }
+            b.lap(Phase::InterNode);
+        } else {
+            b.mark();
+            let total_steps = (n_nodes - 1) * q;
+            let mut step = 0usize;
+            while step < total_steps {
+                let batch = block_count.min(total_steps - step);
+                for i in 0..batch {
+                    let idx = step + i;
+                    let off = idx / q + 1;
+                    let j = idx % q;
+                    let ndst = (my_node + n_nodes - off) % n_nodes;
+                    let nsrc = (my_node + off) % n_nodes;
+                    let tag = INTER_TAG + idx as u32;
+                    b.recv(topo.rank_of(nsrc, g), tag);
+                    b.send(topo.rank_of(ndst, g), tag, bucket_block(ndst, j));
+                }
+                b.wait();
+                step += batch;
+            }
+            b.lap(Phase::InterNode);
+        }
+    }
+    (t_peak, rounds)
 }
 
 #[cfg(test)]

@@ -152,6 +152,20 @@ impl Clock {
         completions
     }
 
+    /// Drain exactly one matched receive — `waitall`'s single-receive
+    /// fast path. The arithmetic is bit-identical to
+    /// [`Clock::drain_receives`] on a one-message batch (queue depth is
+    /// necessarily 1), without the completion vector.
+    pub fn drain_one(&mut self, prof: &MachineProfile, arrive: f64, bytes: u64, link: Link) -> f64 {
+        let start = arrive.max(self.rx_free);
+        let factor = match link {
+            Link::Local => 1.0,
+            Link::Global => prof.congestion.rx_factor(1),
+        };
+        self.rx_free = start + bytes as f64 * prof.beta(link) * factor;
+        self.rx_free + prof.o_recv(link)
+    }
+
     /// A wait completed at `t`: advance program order and close the burst.
     pub fn finish_wait(&mut self, t: f64) {
         self.now = self.now.max(t);

@@ -21,11 +21,13 @@ use super::{Phase, PhaseBreakdown};
 use crate::algos::tuning::TuningTable;
 use crate::model::{Link, MachineProfile};
 
-/// Tags at or above this value are reserved for engine collectives.
+/// Tags at or above this value are reserved for engine collectives. The
+/// allreduce tags are shared with the plan compiler (`super::plan`),
+/// which emits the identical butterfly schedule.
 pub const RESERVED_TAG_BASE: u32 = 0x8000_0000;
-const TAG_AR_FOLD: u32 = RESERVED_TAG_BASE;
-const TAG_AR_UNFOLD: u32 = RESERVED_TAG_BASE + 1;
-const TAG_AR_ROUND: u32 = RESERVED_TAG_BASE + 2; // + k per butterfly round
+pub(crate) const TAG_AR_FOLD: u32 = RESERVED_TAG_BASE;
+pub(crate) const TAG_AR_UNFOLD: u32 = RESERVED_TAG_BASE + 1;
+pub(crate) const TAG_AR_ROUND: u32 = RESERVED_TAG_BASE + 2; // + k per butterfly round
 
 /// A message in flight: payload plus its virtual arrival time at the
 /// receiver's rx port.
@@ -37,8 +39,9 @@ struct Msg {
 
 /// Fast hasher for `(src, tag)` channel keys — the mailbox map is on the
 /// per-message hot path and SipHash costs show up at P = 16k ranks.
+/// Shared with the replay executor's single-threaded mailboxes.
 #[derive(Default)]
-struct ChanHasher(u64);
+pub(crate) struct ChanHasher(u64);
 
 impl Hasher for ChanHasher {
     #[inline]
@@ -123,6 +126,28 @@ impl Mailbox {
         }
         drop(map);
         out.into_iter().map(|m| m.unwrap()).collect()
+    }
+
+    /// Blocking pop of exactly one message from one channel — the
+    /// `waitall` fast path for the single-receive case. Identical
+    /// matching semantics to [`Mailbox::pop_many`] with one request,
+    /// without the per-request bookkeeping vectors.
+    fn pop_one(&self, key: (u32, u32)) -> Msg {
+        use std::sync::atomic::Ordering;
+        let mut map = self.inner.lock().unwrap();
+        loop {
+            if let Some(q) = map.get_mut(&key) {
+                if let Some(m) = q.pop_front() {
+                    if q.is_empty() {
+                        map.remove(&key);
+                    }
+                    return m;
+                }
+            }
+            self.waiting.store(true, Ordering::Relaxed);
+            map = self.cv.wait(map).unwrap();
+            self.waiting.store(false, Ordering::Relaxed);
+        }
     }
 
     fn is_empty(&self) -> bool {
@@ -239,6 +264,26 @@ impl<'e> RankCtx<'e> {
     /// payloads in *request order*. Receive drain order (and thus timing)
     /// is deterministic: sorted by virtual arrival, tie-broken by source.
     pub fn waitall(&mut self, sends: &[SendReq], recvs: &[RecvReq]) -> Vec<Payload> {
+        let mut t = 0.0f64;
+        for s in sends {
+            t = t.max(s.complete);
+        }
+        if recvs.is_empty() {
+            self.clock.finish_wait(t);
+            return Vec::new();
+        }
+        // Fast path: a single receive (the common case for the
+        // sendrecv-heavy linear/pairwise algorithms) needs no arrival
+        // sort and none of the general path's per-call scratch vectors
+        // (request keys, popped-message, order and sorted-drain buffers).
+        if let [r] = recvs {
+            let msg = self.mailboxes[self.rank].pop_one((r.src, r.tag));
+            let bytes = msg.payload.wire_bytes();
+            let done = self.clock.drain_one(self.profile, msg.arrive, bytes, msg.link);
+            self.clock.finish_wait(t.max(done));
+            return vec![msg.payload];
+        }
+
         // Block (OS level) for every message to materialize — one lock
         // session for the whole batch.
         let keys: Vec<(u32, u32)> = recvs.iter().map(|r| (r.src, r.tag)).collect();
@@ -265,10 +310,6 @@ impl<'e> RankCtx<'e> {
             .collect();
         let completions = self.clock.drain_receives(self.profile, &sorted);
 
-        let mut t = 0.0f64;
-        for s in sends {
-            t = t.max(s.complete);
-        }
         for c in &completions {
             t = t.max(*c);
         }
@@ -413,7 +454,7 @@ impl<'e> RankCtx<'e> {
     }
 }
 
-fn prev_pow2(n: usize) -> usize {
+pub(crate) fn prev_pow2(n: usize) -> usize {
     debug_assert!(n >= 1);
     1usize << (usize::BITS - 1 - n.leading_zeros())
 }
@@ -472,6 +513,10 @@ pub struct Engine {
     /// Optional persisted tuning table, exposed to rank code through
     /// [`RankCtx::tuning_table`] (used by `tuna:auto` dispatch).
     pub tuning: Option<Arc<TuningTable>>,
+    /// Compiled-plan cache for the replay executor, keyed by
+    /// `(algo spec, counts-matrix identity)` — repeated collectives on
+    /// one engine replay without re-compiling (`algos::plan_for`).
+    pub plan_cache: super::plan::PlanCache,
 }
 
 impl Engine {
@@ -481,12 +526,17 @@ impl Engine {
             topo,
             stack_size: 1 << 20,
             tuning: None,
+            plan_cache: super::plan::PlanCache::default(),
         }
     }
 
-    /// Attach (or detach) a persisted tuning table for `tuna:auto`.
+    /// Attach (or detach) a persisted tuning table for `tuna:auto`. The
+    /// plan cache is reset: `tuna:auto` plans resolve their radix
+    /// against the attached table at compile time, so plans compiled
+    /// under the old table would silently replay a stale radix.
     pub fn with_tuning(mut self, table: Option<Arc<TuningTable>>) -> Engine {
         self.tuning = table;
+        self.plan_cache = super::plan::PlanCache::default();
         self
     }
 

@@ -11,15 +11,25 @@
 //!
 //! Timing comes from per-rank virtual clocks ([`clock::Clock`]); the
 //! engine's simulated makespan is the max clock over ranks at exit.
+//!
+//! Phantom collectives additionally run in a second execution mode:
+//! algorithms compile their schedule into a [`plan::CommPlan`] (pure
+//! data, derived from the counts matrix alone) which the single-threaded
+//! discrete-event executor in [`replay`] advances with bit-identical
+//! timing — no rank threads, so paper-scale P is cheap. The threaded
+//! engine stays the golden oracle for real payloads.
 
 pub mod buffer;
 pub mod clock;
 pub mod engine;
+pub mod plan;
+pub mod replay;
 pub mod topology;
 
 pub use buffer::{Block, ByteView, DataBuf, Payload, Rope};
 pub use clock::{Clock, Counters};
 pub use engine::{Engine, EngineResult, RankCtx, RankResult};
+pub use plan::{CommPlan, PlanBuilder, PlanCache, PlanOp, RankPlan};
 pub use topology::Topology;
 
 /// Cost-breakdown phases, matching the six components of the paper's

@@ -1,0 +1,423 @@
+//! Compiled communication plans: the schedule of an all-to-all collective
+//! as pure data, separated from its execution.
+//!
+//! A [`CommPlan`] holds, for every rank, the exact sequence of engine
+//! operations ([`PlanOp`]) the algorithm would issue against a
+//! [`RankCtx`](super::engine::RankCtx): sends/recvs as `(peer, tag,
+//! bytes)`, wait points, modeled copy/compute charges, and phase
+//! stopwatch marks. Each algorithm family compiles its plan from the
+//! counts matrix alone (see `algos::compile_plan`), and the single
+//! threaded replay executor ([`super::replay`]) then advances the
+//! per-rank [`Clock`](super::clock::Clock)s through the plan without
+//! spawning any rank threads — producing makespans, phase breakdowns and
+//! counters **bit-identical** to the threaded engine's phantom mode
+//! (`tests/replay_equivalence.rs`).
+//!
+//! # Plan-determinism contract
+//!
+//! A plan depends only on
+//!
+//! 1. the **counts matrix** (the P x P block-size matrix of the
+//!    workload), and
+//! 2. **resolved parameters**: P, Q, the algorithm spec, and — for
+//!    `tuna:auto` — the radix resolved at compile time from the attached
+//!    tuning table or the §V-A heuristic;
+//!
+//! and **never on payload bytes**. Compilation must not inspect, move or
+//! fabricate payload data: every algorithm's control flow (round
+//! schedules, moving-slot sets, metadata contents, batch boundaries) is a
+//! function of block *sizes* only. This is what makes a plan reusable —
+//! the same collective issued repeatedly (FFT transposes, selector
+//! refinement sweeps) replays a cached plan without re-compilation, keyed
+//! by `(algo spec, counts-matrix identity)` in a [`PlanCache`].
+//!
+//! The threaded engine remains the golden oracle: it is the only executor
+//! that moves and validates real payload bytes. Replay is the phantom
+//! (size-only) fast path for large-P model sweeps.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use super::engine::{prev_pow2, TAG_AR_FOLD, TAG_AR_ROUND, TAG_AR_UNFOLD};
+use super::Phase;
+
+/// One engine operation of a compiled plan. Mirrors the `RankCtx` calls an
+/// algorithm makes, in program order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlanOp {
+    /// Non-blocking send (`RankCtx::isend`): `bytes` on the wire to `dst`.
+    Send { dst: u32, tag: u32, bytes: u64 },
+    /// Non-blocking receive post (`RankCtx::irecv`).
+    Recv { src: u32, tag: u32 },
+    /// Wait for every send/recv posted since the previous `Wait`
+    /// (`RankCtx::waitall` over exactly that pending set).
+    Wait,
+    /// Modeled local copy charge (`RankCtx::copy`).
+    Copy { bytes: u64 },
+    /// Modeled local compute charge (`RankCtx::compute`).
+    Compute { secs: f64 },
+    /// Phase stopwatch restart (`RankCtx::phase_mark`).
+    Mark,
+    /// Attribute time since the last mark to `phase` and re-mark
+    /// (`RankCtx::phase_lap`).
+    Lap { phase: Phase },
+}
+
+/// One rank's compiled op sequence.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RankPlan {
+    pub ops: Vec<PlanOp>,
+}
+
+/// A compiled collective: per-rank op sequences plus the schedule stats
+/// the run report carries (identical on every rank for the shipped
+/// algorithms, so they are stored once).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommPlan {
+    /// Total ranks the plan was compiled for.
+    pub p: usize,
+    /// Ranks per node the plan was compiled for.
+    pub q: usize,
+    /// Human-readable algorithm name (`AlgoKind::name`).
+    pub algo: String,
+    /// `ranks[r]` is rank `r`'s op sequence.
+    pub ranks: Vec<RankPlan>,
+    /// Peak temporary-buffer occupancy of the compiled schedule.
+    pub t_peak: usize,
+    /// Communication rounds of the compiled schedule.
+    pub rounds: usize,
+}
+
+impl CommPlan {
+    /// Total op count across all ranks (plan size telemetry).
+    pub fn total_ops(&self) -> usize {
+        self.ranks.iter().map(|r| r.ops.len()).sum()
+    }
+}
+
+/// Per-rank plan emitter. Compilers drive one builder per rank with the
+/// same call sequence the algorithm would make against a `RankCtx`.
+#[derive(Debug)]
+pub struct PlanBuilder {
+    me: usize,
+    p: usize,
+    ops: Vec<PlanOp>,
+}
+
+impl PlanBuilder {
+    pub fn new(me: usize, p: usize) -> PlanBuilder {
+        PlanBuilder {
+            me,
+            p,
+            ops: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn send(&mut self, dst: usize, tag: u32, bytes: u64) {
+        debug_assert!(dst < self.p);
+        self.ops.push(PlanOp::Send {
+            dst: dst as u32,
+            tag,
+            bytes,
+        });
+    }
+
+    #[inline]
+    pub fn recv(&mut self, src: usize, tag: u32) {
+        debug_assert!(src < self.p);
+        self.ops.push(PlanOp::Recv {
+            src: src as u32,
+            tag,
+        });
+    }
+
+    #[inline]
+    pub fn wait(&mut self) {
+        self.ops.push(PlanOp::Wait);
+    }
+
+    #[inline]
+    pub fn copy(&mut self, bytes: u64) {
+        self.ops.push(PlanOp::Copy { bytes });
+    }
+
+    #[inline]
+    pub fn compute(&mut self, secs: f64) {
+        self.ops.push(PlanOp::Compute { secs });
+    }
+
+    #[inline]
+    pub fn mark(&mut self) {
+        self.ops.push(PlanOp::Mark);
+    }
+
+    #[inline]
+    pub fn lap(&mut self, phase: Phase) {
+        self.ops.push(PlanOp::Lap { phase });
+    }
+
+    /// `RankCtx::sendrecv`: send, then recv, then wait on both.
+    pub fn sendrecv(&mut self, dst: usize, stag: u32, bytes: u64, src: usize, rtag: u32) {
+        self.send(dst, stag, bytes);
+        self.recv(src, rtag);
+        self.wait();
+    }
+
+    /// Emit this rank's op sequence for one scalar allreduce (or barrier)
+    /// — the same recursive-doubling schedule with pre/post folding that
+    /// `RankCtx::allreduce` executes, 8 wire bytes per message. The
+    /// reduced *value* never affects the schedule, so the op kind is
+    /// irrelevant here; compilers that need the value (e.g. `tuna:auto`'s
+    /// mean) compute it directly from the counts matrix.
+    pub fn allreduce(&mut self) {
+        let p = self.p;
+        if p == 1 {
+            return;
+        }
+        let p2 = prev_pow2(p);
+        let extra = p - p2;
+        let me = self.me;
+        if me >= p2 {
+            // Fold into the power-of-two core, then wait for the result.
+            self.send(me - p2, TAG_AR_FOLD, 8);
+            self.wait();
+            self.recv(me - p2, TAG_AR_UNFOLD);
+            self.wait();
+            return;
+        }
+        if me < extra {
+            self.recv(me + p2, TAG_AR_FOLD);
+            self.wait();
+        }
+        for k in 0..p2.trailing_zeros() {
+            let partner = me ^ (1usize << k);
+            self.send(partner, TAG_AR_ROUND + k, 8);
+            self.recv(partner, TAG_AR_ROUND + k);
+            self.wait();
+        }
+        if me < extra {
+            self.send(me + p2, TAG_AR_UNFOLD, 8);
+            self.wait();
+        }
+    }
+
+    pub fn finish(self) -> RankPlan {
+        RankPlan { ops: self.ops }
+    }
+}
+
+/// Keyed cache of compiled plans: `(algo spec, counts-matrix identity)`
+/// → shared [`CommPlan`]. Attached to every [`Engine`](super::Engine), so
+/// repeated collectives (FFT-style apps, bench iterations, selector
+/// refinement) replay without re-compiling. Thread-safe: refinement
+/// measures candidates concurrently on one shared engine.
+///
+/// Capacity is bounded at [`PlanCache::MAX_PLANS`] entries with FIFO
+/// eviction: linear-family plans hold O(P²) ops, and sweeps that stream
+/// through many one-shot workloads (per-iteration seeds) would otherwise
+/// retain every plan they ever compiled.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    inner: Mutex<CacheInner>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<(String, u64), Arc<CommPlan>>,
+    /// Insertion order, for FIFO eviction at capacity.
+    order: VecDeque<(String, u64)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    /// Retained-plan bound. Large enough for the repeat patterns that
+    /// matter (one collective re-issued, a small radix sweep over one
+    /// workload); small enough that even worst-case linear plans stay in
+    /// the hundreds of MB.
+    pub const MAX_PLANS: usize = 8;
+
+    /// Look `key` up, compiling (outside the lock) and inserting on a
+    /// miss. Concurrent misses on the same key may both compile; the
+    /// first insert wins and the duplicate is dropped — plans are pure
+    /// data, so this is only wasted work, never an inconsistency.
+    pub fn get_or_try_insert<E>(
+        &self,
+        key: (String, u64),
+        build: impl FnOnce() -> Result<CommPlan, E>,
+    ) -> Result<Arc<CommPlan>, E> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(hit) = inner.map.get(&key).cloned() {
+                inner.hits += 1;
+                return Ok(hit);
+            }
+        }
+        let plan = Arc::new(build()?);
+        let mut inner = self.inner.lock().unwrap();
+        inner.misses += 1;
+        if let Some(existing) = inner.map.get(&key).cloned() {
+            return Ok(existing);
+        }
+        if inner.map.len() >= Self::MAX_PLANS {
+            if let Some(oldest) = inner.order.pop_front() {
+                inner.map.remove(&oldest);
+            }
+        }
+        inner.order.push_back(key.clone());
+        inner.map.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Cached plan count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sendrecv_emits_canonical_triple() {
+        let mut b = PlanBuilder::new(0, 4);
+        b.sendrecv(1, 7, 100, 3, 7);
+        let plan = b.finish();
+        assert_eq!(
+            plan.ops,
+            vec![
+                PlanOp::Send {
+                    dst: 1,
+                    tag: 7,
+                    bytes: 100
+                },
+                PlanOp::Recv { src: 3, tag: 7 },
+                PlanOp::Wait,
+            ]
+        );
+    }
+
+    #[test]
+    fn allreduce_shapes_by_rank_role() {
+        // P = 1: nothing.
+        let mut b = PlanBuilder::new(0, 1);
+        b.allreduce();
+        assert!(b.finish().ops.is_empty());
+
+        // P = 3 (p2 = 2, extra = 1): rank 2 folds into rank 0.
+        let ops_of = |me: usize| {
+            let mut b = PlanBuilder::new(me, 3);
+            b.allreduce();
+            b.finish().ops
+        };
+        let folder = ops_of(2);
+        assert_eq!(
+            folder[0],
+            PlanOp::Send {
+                dst: 0,
+                tag: TAG_AR_FOLD,
+                bytes: 8
+            }
+        );
+        assert_eq!(folder.iter().filter(|o| matches!(o, PlanOp::Wait)).count(), 2);
+        // Rank 0 absorbs the fold, runs 1 butterfly round, unfolds back.
+        let core = ops_of(0);
+        let sends = core
+            .iter()
+            .filter(|o| matches!(o, PlanOp::Send { .. }))
+            .count();
+        assert_eq!(sends, 2); // round + unfold
+        let recvs = core
+            .iter()
+            .filter(|o| matches!(o, PlanOp::Recv { .. }))
+            .count();
+        assert_eq!(recvs, 2); // fold + round
+        // Rank 1 runs only the butterfly round.
+        let plain = ops_of(1);
+        assert_eq!(plain.len(), 3); // send + recv + wait
+    }
+
+    #[test]
+    fn cache_hits_share_one_plan() {
+        let cache = PlanCache::default();
+        let key = ("tuna:r=2".to_string(), 42u64);
+        let build = || -> Result<CommPlan, ()> {
+            Ok(CommPlan {
+                p: 2,
+                q: 1,
+                algo: "tuna(r=2)".into(),
+                ranks: vec![RankPlan::default(), RankPlan::default()],
+                t_peak: 0,
+                rounds: 1,
+            })
+        };
+        let a = cache.get_or_try_insert(key.clone(), build).unwrap();
+        let b = cache.get_or_try_insert(key, build).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats(), (1, 1));
+        // A different key compiles fresh.
+        let c = cache
+            .get_or_try_insert(("tuna:r=2".to_string(), 43u64), build)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.stats(), (1, 2));
+    }
+
+    #[test]
+    fn cache_evicts_oldest_at_capacity() {
+        let cache = PlanCache::default();
+        let build = || -> Result<CommPlan, ()> {
+            Ok(CommPlan {
+                p: 1,
+                q: 1,
+                algo: "x".into(),
+                ranks: vec![RankPlan::default()],
+                t_peak: 0,
+                rounds: 0,
+            })
+        };
+        for i in 0..PlanCache::MAX_PLANS as u64 + 3 {
+            cache.get_or_try_insert(("a".to_string(), i), build).unwrap();
+        }
+        assert_eq!(cache.len(), PlanCache::MAX_PLANS);
+        // The first keys were evicted FIFO; the newest are retained.
+        let (hits_before, _) = cache.stats();
+        cache.get_or_try_insert(("a".to_string(), 0), build).unwrap();
+        let (hits_after_old, _) = cache.stats();
+        assert_eq!(hits_after_old, hits_before, "evicted key must recompile");
+        let newest = PlanCache::MAX_PLANS as u64 + 2;
+        cache.get_or_try_insert(("a".to_string(), newest), build).unwrap();
+        let (hits_after_new, _) = cache.stats();
+        assert_eq!(hits_after_new, hits_before + 1, "retained key must hit");
+    }
+
+    #[test]
+    fn total_ops_sums_ranks() {
+        let mut b0 = PlanBuilder::new(0, 2);
+        b0.copy(8);
+        let mut b1 = PlanBuilder::new(1, 2);
+        b1.sendrecv(0, 1, 8, 0, 1);
+        let plan = CommPlan {
+            p: 2,
+            q: 1,
+            algo: "x".into(),
+            ranks: vec![b0.finish(), b1.finish()],
+            t_peak: 0,
+            rounds: 0,
+        };
+        assert_eq!(plan.total_ops(), 4);
+    }
+}

@@ -1,0 +1,431 @@
+//! Single-threaded discrete-event replay of a [`CommPlan`].
+//!
+//! [`execute`] advances every rank's [`Clock`] through its compiled op
+//! sequence in dependency order: a rank runs until a `Wait` whose
+//! messages have not all been "sent" yet, then parks; the send that
+//! clears its last deficit re-queues it. No OS threads, no mutexes, no
+//! condvars — a P = 16,384 phantom simulation is ordinary single-core
+//! arithmetic instead of 16k spawned threads.
+//!
+//! **Bit-identity.** Every clock call made here replicates the threaded
+//! engine exactly: sends charge `Clock::post_send` in sender program
+//! order, receive posts charge `Clock::post_recv`, and each `Wait` drains
+//! its matched messages in the same deterministic order as
+//! `RankCtx::waitall` — stable-sorted by `(arrival, src, tag)` with FIFO
+//! matching per `(src, tag)` channel. Virtual time is a pure function of
+//! the per-rank op sequences, so makespans, phase breakdowns and counters
+//! are bit-identical to a threaded phantom run of the same algorithm
+//! (asserted with zero tolerance by `tests/replay_equivalence.rs`).
+//!
+//! The threaded engine stays the golden oracle for real payloads; replay
+//! never materializes payload bytes, so `Counters::copied_bytes` is zero,
+//! exactly as in threaded phantom mode.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::BuildHasherDefault;
+
+use super::clock::Clock;
+use super::engine::{ChanHasher, EngineResult, RankResult};
+use super::plan::{CommPlan, PlanOp};
+use super::topology::Topology;
+use super::PhaseBreakdown;
+use crate::model::{Link, MachineProfile};
+
+/// A message in flight: what the receiver's drain needs, nothing more.
+#[derive(Clone, Copy, Debug)]
+struct InMsg {
+    arrive: f64,
+    bytes: u64,
+    link: Link,
+}
+
+type ChanMap = HashMap<(u32, u32), VecDeque<InMsg>, BuildHasherDefault<ChanHasher>>;
+type MissingMap = HashMap<(u32, u32), usize, BuildHasherDefault<ChanHasher>>;
+
+/// One rank's execution state.
+struct ReplayRank {
+    /// Index of the next op to execute.
+    pc: usize,
+    clock: Clock,
+    phases: PhaseBreakdown,
+    mark: f64,
+    /// Completion times of sends posted since the last `Wait`.
+    pending_sends: Vec<f64>,
+    /// `(src, tag)` of receives posted since the last `Wait`, in request
+    /// order (the order `waitall` matches and returns them in).
+    pending_recvs: Vec<(u32, u32)>,
+    /// Parked at a `Wait` with messages still missing.
+    blocked: bool,
+    /// Outstanding per-channel message deficits while blocked.
+    missing: MissingMap,
+    missing_total: usize,
+    done: bool,
+}
+
+impl ReplayRank {
+    fn new() -> ReplayRank {
+        ReplayRank {
+            pc: 0,
+            clock: Clock::new(),
+            phases: PhaseBreakdown::default(),
+            mark: 0.0,
+            pending_sends: Vec::new(),
+            pending_recvs: Vec::new(),
+            blocked: false,
+            missing: MissingMap::default(),
+            missing_total: 0,
+            done: false,
+        }
+    }
+}
+
+/// Execute `plan` and return per-rank results plus the simulated makespan
+/// — the same shape [`Engine::run`](super::Engine::run) produces, so
+/// `phase_critical_path` / `total_counters` aggregation is shared.
+///
+/// Panics on a deadlocked plan (a `Wait` whose messages are never sent)
+/// and on undrained mailboxes (messages sent but never received) — both
+/// are compiler bugs, reported like the engine's undrained-mailbox check.
+pub fn execute(profile: &MachineProfile, topo: Topology, plan: &CommPlan) -> EngineResult<()> {
+    let p = topo.p();
+    assert_eq!(plan.p, p, "plan is for P={} but topology has P={p}", plan.p);
+    assert_eq!(
+        plan.q,
+        topo.q(),
+        "plan is for Q={} but topology has Q={}",
+        plan.q,
+        topo.q()
+    );
+
+    let mut mailboxes: Vec<ChanMap> = (0..p).map(|_| ChanMap::default()).collect();
+    let mut states: Vec<ReplayRank> = (0..p).map(|_| ReplayRank::new()).collect();
+    let mut ready: VecDeque<usize> = (0..p).collect();
+    let mut in_queue = vec![true; p];
+
+    while let Some(me) = ready.pop_front() {
+        in_queue[me] = false;
+        let ops = &plan.ranks[me].ops;
+        loop {
+            if states[me].pc == ops.len() {
+                states[me].done = true;
+                break;
+            }
+            match ops[states[me].pc] {
+                PlanOp::Send { dst, tag, bytes } => {
+                    let d = dst as usize;
+                    let link = topo.link(me, d);
+                    let st = &mut states[me];
+                    let timing = st.clock.post_send(profile, link, bytes, p);
+                    st.pending_sends.push(timing.complete);
+                    mailboxes[d].entry((me as u32, tag)).or_default().push_back(InMsg {
+                        arrive: timing.arrive,
+                        bytes,
+                        link,
+                    });
+                    // Wake the receiver if this send clears its last
+                    // deficit. (A self-send needs no wake: we are the
+                    // running rank.)
+                    if d != me && states[d].blocked {
+                        if let Some(n) = states[d].missing.get_mut(&(me as u32, tag)) {
+                            if *n > 0 {
+                                *n -= 1;
+                                states[d].missing_total -= 1;
+                                if states[d].missing_total == 0 {
+                                    states[d].blocked = false;
+                                    if !in_queue[d] {
+                                        in_queue[d] = true;
+                                        ready.push_back(d);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                PlanOp::Recv { src, tag } => {
+                    let link = topo.link(me, src as usize);
+                    let st = &mut states[me];
+                    st.clock.post_recv(profile, link);
+                    st.pending_recvs.push((src, tag));
+                }
+                PlanOp::Wait => {
+                    let (missing, missing_total) =
+                        channel_deficits(&states[me].pending_recvs, &mailboxes[me]);
+                    if missing_total > 0 {
+                        let st = &mut states[me];
+                        st.missing = missing;
+                        st.missing_total = missing_total;
+                        st.blocked = true;
+                        // pc stays on this Wait; resumed once the
+                        // deficits drain.
+                        break;
+                    }
+                    perform_wait(&mut states[me], &mut mailboxes[me], profile);
+                }
+                PlanOp::Copy { bytes } => {
+                    states[me].clock.charge_copy(profile, bytes);
+                }
+                PlanOp::Compute { secs } => {
+                    states[me].clock.charge_compute(secs);
+                }
+                PlanOp::Mark => {
+                    let st = &mut states[me];
+                    st.mark = st.clock.now;
+                }
+                PlanOp::Lap { phase } => {
+                    let st = &mut states[me];
+                    let now = st.clock.now;
+                    st.phases.add(phase, now - st.mark);
+                    st.mark = now;
+                }
+            }
+            states[me].pc += 1;
+        }
+    }
+
+    for (rank, st) in states.iter().enumerate() {
+        assert!(
+            st.done,
+            "replay deadlock: rank {rank} parked at op {}/{} of {} ({} messages missing)",
+            st.pc,
+            plan.ranks[rank].ops.len(),
+            plan.algo,
+            st.missing_total
+        );
+    }
+    for (rank, mb) in mailboxes.iter().enumerate() {
+        assert!(
+            mb.is_empty(),
+            "rank {rank} mailbox not drained — plan left unreceived messages"
+        );
+    }
+
+    let ranks: Vec<RankResult<()>> = states
+        .into_iter()
+        .enumerate()
+        .map(|(rank, st)| RankResult {
+            rank,
+            value: (),
+            finish: st.clock.now,
+            phases: st.phases,
+            counters: st.clock.counters,
+        })
+        .collect();
+    let makespan = ranks.iter().fold(0.0f64, |m, r| m.max(r.finish));
+    EngineResult { ranks, makespan }
+}
+
+/// Per-channel message deficits of a pending receive set against a
+/// mailbox: which `(src, tag)` channels still owe how many messages.
+fn channel_deficits(pending: &[(u32, u32)], mb: &ChanMap) -> (MissingMap, usize) {
+    let mut needed = MissingMap::default();
+    for &key in pending {
+        *needed.entry(key).or_insert(0) += 1;
+    }
+    let mut missing = MissingMap::default();
+    let mut total = 0usize;
+    for (key, need) in needed {
+        let avail = mb.get(&key).map_or(0, VecDeque::len);
+        if avail < need {
+            missing.insert(key, need - avail);
+            total += need - avail;
+        }
+    }
+    (missing, total)
+}
+
+/// Complete a `Wait` whose messages are all present — the mirror of
+/// `RankCtx::waitall`: FIFO-match per channel in request order, drain in
+/// deterministic `(arrival, src, tag)` order, then advance program order
+/// past sends and receive completions.
+fn perform_wait(st: &mut ReplayRank, mb: &mut ChanMap, profile: &MachineProfile) {
+    let n = st.pending_recvs.len();
+    let mut msgs: Vec<InMsg> = Vec::with_capacity(n);
+    for &key in &st.pending_recvs {
+        let q = mb.get_mut(&key).expect("readiness check guaranteed a message");
+        let m = q.pop_front().expect("readiness check guaranteed a message");
+        if q.is_empty() {
+            mb.remove(&key);
+        }
+        msgs.push(m);
+    }
+
+    // Deterministic drain order, identical to the engine: by (arrive,
+    // src, tag), stable in request order.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        msgs[a]
+            .arrive
+            .partial_cmp(&msgs[b].arrive)
+            .unwrap()
+            .then(st.pending_recvs[a].0.cmp(&st.pending_recvs[b].0))
+            .then(st.pending_recvs[a].1.cmp(&st.pending_recvs[b].1))
+    });
+    let sorted: Vec<(f64, u64, Link)> = order
+        .iter()
+        .map(|&i| (msgs[i].arrive, msgs[i].bytes, msgs[i].link))
+        .collect();
+    let completions = st.clock.drain_receives(profile, &sorted);
+
+    let mut t = 0.0f64;
+    for &s in &st.pending_sends {
+        t = t.max(s);
+    }
+    for &c in &completions {
+        t = t.max(c);
+    }
+    st.clock.finish_wait(t);
+    st.pending_sends.clear();
+    st.pending_recvs.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::buffer::DataBuf;
+    use crate::comm::plan::PlanBuilder;
+    use crate::comm::{Engine, Payload, Phase};
+
+    fn ring_plan(p: usize, bytes: u64) -> CommPlan {
+        let ranks = (0..p)
+            .map(|me| {
+                let mut b = PlanBuilder::new(me, p);
+                b.mark();
+                b.sendrecv((me + 1) % p, 7, bytes, (me + p - 1) % p, 7);
+                b.lap(Phase::Data);
+                b.finish()
+            })
+            .collect();
+        CommPlan {
+            p,
+            q: 2,
+            algo: "ring".into(),
+            ranks,
+            t_peak: 0,
+            rounds: 1,
+        }
+    }
+
+    #[test]
+    fn ring_replay_matches_threaded_engine_bitwise() {
+        let profile = MachineProfile::test_flat();
+        let topo = Topology::new(4, 2);
+        let plan = ring_plan(4, 1024);
+        let replayed = execute(&profile, topo, &plan);
+
+        let engine = Engine::new(profile, topo);
+        let threaded = engine.run(|ctx| {
+            let p = ctx.size();
+            let me = ctx.rank();
+            ctx.phase_mark();
+            let _ = ctx.sendrecv(
+                (me + 1) % p,
+                7,
+                Payload::Raw(DataBuf::Phantom(1024)),
+                (me + p - 1) % p,
+                7,
+            );
+            ctx.phase_lap(Phase::Data);
+        });
+
+        assert_eq!(replayed.makespan.to_bits(), threaded.makespan.to_bits());
+        for (a, b) in replayed.ranks.iter().zip(threaded.ranks.iter()) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "rank {}", a.rank);
+            assert_eq!(a.phases, b.phases, "rank {}", a.rank);
+            assert_eq!(a.counters, b.counters, "rank {}", a.rank);
+        }
+    }
+
+    #[test]
+    fn self_send_and_out_of_order_arrivals_resolve() {
+        // Rank 0 waits for rank 1's message and its own self-send in one
+        // wait; rank 1 depends on rank 0's reply afterwards.
+        let profile = MachineProfile::test_flat();
+        let topo = Topology::flat(2);
+        let mut b0 = PlanBuilder::new(0, 2);
+        b0.send(0, 3, 8);
+        b0.recv(0, 3);
+        b0.recv(1, 4);
+        b0.wait();
+        b0.send(1, 5, 16);
+        b0.wait();
+        let mut b1 = PlanBuilder::new(1, 2);
+        b1.send(0, 4, 8);
+        b1.wait();
+        b1.recv(0, 5);
+        b1.wait();
+        let plan = CommPlan {
+            p: 2,
+            q: 1,
+            algo: "x".into(),
+            ranks: vec![b0.finish(), b1.finish()],
+            t_peak: 0,
+            rounds: 0,
+        };
+        let res = execute(&profile, topo, &plan);
+        assert!(res.makespan > 0.0);
+        assert_eq!(res.ranks.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay deadlock")]
+    fn missing_sender_deadlocks_loudly() {
+        let mut b0 = PlanBuilder::new(0, 2);
+        b0.recv(1, 1);
+        b0.wait();
+        let b1 = PlanBuilder::new(1, 2);
+        let plan = CommPlan {
+            p: 2,
+            q: 1,
+            algo: "x".into(),
+            ranks: vec![b0.finish(), b1.finish()],
+            t_peak: 0,
+            rounds: 0,
+        };
+        execute(&MachineProfile::test_flat(), Topology::flat(2), &plan);
+    }
+
+    #[test]
+    #[should_panic(expected = "not drained")]
+    fn unreceived_message_detected() {
+        let mut b0 = PlanBuilder::new(0, 2);
+        b0.send(1, 9, 8);
+        b0.wait();
+        let b1 = PlanBuilder::new(1, 2);
+        let plan = CommPlan {
+            p: 2,
+            q: 1,
+            algo: "x".into(),
+            ranks: vec![b0.finish(), b1.finish()],
+            t_peak: 0,
+            rounds: 0,
+        };
+        execute(&MachineProfile::test_flat(), Topology::flat(2), &plan);
+    }
+
+    #[test]
+    fn fifo_per_channel_preserved_under_duplicate_requests() {
+        // Two messages on one (src, tag) channel received by duplicate
+        // requests in one wait — must match FIFO like the engine.
+        let profile = MachineProfile::test_flat();
+        let mut b0 = PlanBuilder::new(0, 2);
+        b0.recv(1, 3);
+        b0.recv(1, 3);
+        b0.wait();
+        let mut b1 = PlanBuilder::new(1, 2);
+        b1.send(0, 3, 64);
+        b1.send(0, 3, 128);
+        b1.wait();
+        let plan = CommPlan {
+            p: 2,
+            q: 1,
+            algo: "x".into(),
+            ranks: vec![b0.finish(), b1.finish()],
+            t_peak: 0,
+            rounds: 0,
+        };
+        let res = execute(&profile, Topology::flat(2), &plan);
+        // 64 + 128 wire bytes on the global link, both counted at rank 1.
+        assert_eq!(res.total_counters().bytes_global, 192);
+        assert_eq!(res.total_counters().msgs_global, 2);
+    }
+}

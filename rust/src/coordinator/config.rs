@@ -3,6 +3,7 @@
 use std::sync::Arc;
 
 use crate::algos::tuning::TuningTable;
+use crate::algos::ExecMode;
 use crate::error::{Result, TunaError};
 use crate::model::MachineProfile;
 use crate::workload::Dist;
@@ -25,6 +26,14 @@ pub struct RunConfig {
     pub engine_limit_linear: usize,
     /// Engine rank budget for logarithmic algorithms.
     pub engine_limit_log: usize,
+    /// Rank budget for plan/replay execution of logarithmic algorithms
+    /// (linear families are additionally capped — their plans hold O(P²)
+    /// ops). Compilation materializes the P x P counts matrix, so the
+    /// default keeps peak memory comfortably in the hundreds of MB.
+    pub engine_limit_replay: usize,
+    /// Execution mode for exact-fidelity points: threaded oracle,
+    /// plan/replay, or auto (replay phantom, thread real).
+    pub mode: ExecMode,
     /// Persisted tuning table attached to every engine this config
     /// creates, consulted by `tuna:auto` (loaded by the CLI from
     /// `artifacts/tuning/`; not a `key=value` field).
@@ -43,6 +52,8 @@ impl Default for RunConfig {
             real_payloads: false,
             engine_limit_linear: 512,
             engine_limit_log: 2048,
+            engine_limit_replay: 4096,
+            mode: ExecMode::Auto,
             tuning: None,
         }
     }
@@ -51,8 +62,8 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Parse `key=value` arguments: `p=128 q=16 profile=polaris
     /// dist=uniform:1024 seed=7 iters=20 real=true limit-linear=256
-    /// limit-log=1024`. Unknown keys are errors (typos should not pass
-    /// silently).
+    /// limit-log=1024 limit-replay=4096 mode=replay`. Unknown keys are
+    /// errors (typos should not pass silently).
     pub fn parse_args(args: &[String]) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         for arg in args {
@@ -71,6 +82,14 @@ impl RunConfig {
                 }
                 "limit-linear" => cfg.engine_limit_linear = parse_num(k, v)?,
                 "limit-log" => cfg.engine_limit_log = parse_num(k, v)?,
+                "limit-replay" => cfg.engine_limit_replay = parse_num(k, v)?,
+                "mode" => {
+                    cfg.mode = ExecMode::parse(v).ok_or_else(|| {
+                        TunaError::config(format!(
+                            "unknown mode `{v}` (try auto, threaded, replay)"
+                        ))
+                    })?
+                }
                 "profile" => {
                     cfg.profile = MachineProfile::by_name(v).ok_or_else(|| {
                         TunaError::config(format!(
@@ -106,6 +125,12 @@ impl RunConfig {
         }
         if self.iters == 0 {
             return Err(TunaError::config("iters must be >= 1"));
+        }
+        if self.mode == ExecMode::Replay && self.real_payloads {
+            return Err(TunaError::config(
+                "mode=replay is phantom-only (real payloads need the threaded oracle); \
+                 set real=false or mode=threaded",
+            ));
         }
         Ok(())
     }
@@ -198,6 +223,19 @@ mod tests {
     #[test]
     fn rejects_unknown_key() {
         assert!(RunConfig::parse_args(&args("px=128")).is_err());
+    }
+
+    #[test]
+    fn parse_mode_and_replay_limit() {
+        let cfg = RunConfig::parse_args(&args("p=64 q=8 mode=replay limit-replay=8192")).unwrap();
+        assert_eq!(cfg.mode, ExecMode::Replay);
+        assert_eq!(cfg.engine_limit_replay, 8192);
+        assert_eq!(RunConfig::default().mode, ExecMode::Auto);
+        assert!(RunConfig::parse_args(&args("mode=turbo")).is_err());
+        // Replay never materializes payload bytes: the combination with
+        // real payloads is a contradiction, not a silent downgrade.
+        assert!(RunConfig::parse_args(&args("mode=replay real=true")).is_err());
+        assert!(RunConfig::parse_args(&args("mode=auto real=true")).is_ok());
     }
 
     #[test]

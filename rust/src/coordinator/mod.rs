@@ -1,29 +1,39 @@
 //! Experiment coordination: configuration, fidelity selection (exact
-//! engine vs analytic replay), repetition, and measurement aggregation.
+//! engine vs analytic model), repetition, and measurement aggregation.
 //!
 //! The paper reports medians and deviations over >= 20 iterations; we do
 //! the same, varying the workload seed per iteration. Fidelity is chosen
-//! per point: the threaded engine (exact, real message matching) up to a
-//! configurable rank budget, the single-rank analytic replay beyond it —
-//! each table/CSV row records which one produced it.
+//! per point: exact simulation up to a configurable rank budget — the
+//! threaded engine for real payloads, the bit-identical plan/replay
+//! executor for phantom ones (see [`ExecMode`]) — and the closed-form
+//! analytic model beyond it. Each table/CSV row records which one
+//! produced it.
 
 pub mod config;
 pub mod metrics;
 
 pub use config::{RunConfig, SelectConfig};
 
-use crate::algos::{run_alltoallv, AlgoKind};
+use crate::algos::{run_alltoallv, run_alltoallv_replay, AlgoKind, ExecMode};
 use crate::comm::{Engine, PhaseBreakdown, Topology};
 use crate::model::analytic::Estimator;
 use crate::util::stats::Summary;
 use crate::workload::BlockSizes;
+
+/// Linear algorithms post O(P²) messages, so their compiled plans hold
+/// O(P²) ops — replaying them beyond this rank count costs more plan
+/// memory than the point is worth; the analytic model takes over.
+pub const REPLAY_LIMIT_LINEAR: usize = 1024;
 
 /// How a measurement was produced.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fidelity {
     /// Threaded engine, every rank simulated with real message matching.
     Engine,
-    /// Single-rank analytic replay (for paper-scale P).
+    /// Plan/replay executor: exact (bit-identical to the threaded
+    /// engine) but single-threaded and phantom-only.
+    Replay,
+    /// Closed-form analytic model (for beyond-budget P).
     Analytic,
 }
 
@@ -31,6 +41,7 @@ impl Fidelity {
     pub fn name(self) -> &'static str {
         match self {
             Fidelity::Engine => "engine",
+            Fidelity::Replay => "replay",
             Fidelity::Analytic => "model",
         }
     }
@@ -52,18 +63,38 @@ impl Measurement {
 }
 
 /// Decide fidelity for an algorithm at scale `p`: linear algorithms post
-/// O(P²) messages so their engine budget is tighter than the logarithmic
-/// family's.
+/// O(P²) messages so their budget is tighter than the logarithmic
+/// family's, and the plan/replay executor (no rank threads) affords a
+/// much larger exact budget than thread-per-rank execution.
 pub fn choose_fidelity(kind: &AlgoKind, p: usize, cfg: &RunConfig) -> Fidelity {
-    let limit = match kind {
+    let linear = matches!(
+        kind,
         AlgoKind::SpreadOut
-        | AlgoKind::OmpiLinear
-        | AlgoKind::Pairwise
-        | AlgoKind::Scattered { .. }
-        | AlgoKind::Vendor => cfg.engine_limit_linear,
-        _ => cfg.engine_limit_log,
+            | AlgoKind::OmpiLinear
+            | AlgoKind::Pairwise
+            | AlgoKind::Scattered { .. }
+            | AlgoKind::Vendor
+    );
+    let threaded_limit = if linear {
+        cfg.engine_limit_linear
+    } else {
+        cfg.engine_limit_log
     };
-    if p <= limit {
+    if cfg.mode.resolve(cfg.real_payloads) == ExecMode::Replay {
+        let replay_limit = if linear {
+            cfg.engine_limit_replay.min(REPLAY_LIMIT_LINEAR)
+        } else {
+            cfg.engine_limit_replay
+        };
+        if p <= replay_limit {
+            return Fidelity::Replay;
+        }
+        // Beyond the replay budget (O(P²)-op plans for linear families,
+        // O(P²) counts-matrix memory in general), fall through: the
+        // threaded oracle still applies its own budget, so replay never
+        // shrinks exact coverage — it only extends it.
+    }
+    if p <= threaded_limit {
         Fidelity::Engine
     } else {
         Fidelity::Analytic
@@ -71,19 +102,33 @@ pub fn choose_fidelity(kind: &AlgoKind, p: usize, cfg: &RunConfig) -> Fidelity {
 }
 
 /// Measure one algorithm under a config: `iters` runs with per-iteration
-/// seeds on the engine, or one analytic replay (deterministic) beyond the
-/// engine budget.
+/// seeds at exact fidelity (threaded engine or bit-identical plan
+/// replay, per [`choose_fidelity`]), or one analytic estimate
+/// (deterministic) beyond the exact budget.
 pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
     kind.check(cfg.p, cfg.q)?;
+    // Guard programmatically built configs too (parse_args validates the
+    // same contradiction): replay never materializes payload bytes, so
+    // combining it with real payloads must fail, not silently downgrade.
+    if cfg.mode == ExecMode::Replay && cfg.real_payloads {
+        return Err(crate::TunaError::config(
+            "mode=replay is phantom-only (real payloads need the threaded oracle); \
+             set real=false or mode=threaded",
+        ));
+    }
     let topo = Topology::new(cfg.p, cfg.q);
     match choose_fidelity(kind, cfg.p, cfg) {
-        Fidelity::Engine => {
+        fidelity @ (Fidelity::Engine | Fidelity::Replay) => {
             let engine = Engine::new(cfg.profile.clone(), topo).with_tuning(cfg.tuning.clone());
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
             for it in 0..cfg.iters.max(1) {
                 let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed.wrapping_add(it as u64));
-                let rep = run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?;
+                let rep = if fidelity == Fidelity::Replay {
+                    run_alltoallv_replay(&engine, kind, &sizes)?
+                } else {
+                    run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?
+                };
                 times.push(rep.makespan);
                 phases.max_with(&rep.phases);
             }
@@ -91,7 +136,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                 algo: *kind,
                 summary: Summary::of(&times),
                 phases,
-                fidelity: Fidelity::Engine,
+                fidelity,
             })
         }
         Fidelity::Analytic => {
@@ -124,28 +169,68 @@ mod tests {
     }
 
     #[test]
-    fn engine_fidelity_below_limit() {
+    fn replay_fidelity_for_phantom_auto_below_limit() {
+        // Auto mode + phantom workload: exact fidelity via plan replay.
         let c = cfg(16, 4);
         let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
-        assert_eq!(m.fidelity, Fidelity::Engine);
+        assert_eq!(m.fidelity, Fidelity::Replay);
         assert_eq!(m.summary.n, 3);
         assert!(m.median() > 0.0);
         assert!(m.phases.total() > 0.0);
     }
 
     #[test]
+    fn engine_fidelity_for_real_payloads_or_threaded_mode() {
+        let mut c = cfg(16, 4);
+        c.real_payloads = true;
+        let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(m.fidelity, Fidelity::Engine);
+        let mut c = cfg(16, 4);
+        c.mode = ExecMode::Threaded;
+        let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(m.fidelity, Fidelity::Engine);
+    }
+
+    #[test]
+    fn threaded_and_replay_measurements_are_bit_identical() {
+        let threaded = RunConfig {
+            mode: ExecMode::Threaded,
+            ..cfg(24, 4)
+        };
+        let replay = RunConfig {
+            mode: ExecMode::Replay,
+            ..cfg(24, 4)
+        };
+        for kind in [
+            AlgoKind::Tuna { radix: 3 },
+            AlgoKind::SpreadOut,
+            AlgoKind::TunaHierStaggered { radix: 2, block_count: 3 },
+        ] {
+            let a = measure(&threaded, &kind).unwrap();
+            let b = measure(&replay, &kind).unwrap();
+            assert_eq!(a.summary.median.to_bits(), b.summary.median.to_bits());
+            assert_eq!(a.summary.min.to_bits(), b.summary.min.to_bits());
+            assert_eq!(a.summary.max.to_bits(), b.summary.max.to_bits());
+            assert_eq!(a.phases, b.phases, "{}", kind.name());
+        }
+    }
+
+    #[test]
     fn analytic_fidelity_above_limit() {
         let mut c = cfg(16, 4);
         c.engine_limit_log = 8;
+        c.engine_limit_replay = 8;
         let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
         assert_eq!(m.fidelity, Fidelity::Analytic);
     }
 
     #[test]
     fn linear_gets_tighter_budget() {
+        // Threaded mode: the classic engine budgets.
         let c = RunConfig {
             engine_limit_linear: 64,
             engine_limit_log: 1024,
+            mode: ExecMode::Threaded,
             ..RunConfig::default()
         };
         assert_eq!(
@@ -156,6 +241,61 @@ mod tests {
             choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 128, &c),
             Fidelity::Engine
         );
+    }
+
+    #[test]
+    fn replay_budget_extends_exact_fidelity() {
+        // Phantom + auto: log-family points replay far past the thread
+        // budget; linear families are capped at REPLAY_LIMIT_LINEAR.
+        let c = RunConfig::default(); // limits 512 / 2048 / 4096, auto
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 4096, &c),
+            Fidelity::Replay
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 8192, &c),
+            Fidelity::Analytic
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, REPLAY_LIMIT_LINEAR, &c),
+            Fidelity::Replay
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, REPLAY_LIMIT_LINEAR + 1, &c),
+            Fidelity::Analytic
+        );
+        // An explicitly tightened replay budget hands points back to the
+        // threaded oracle (its own budget permitting), never the other
+        // way around: replay extends exact coverage, it cannot shrink it.
+        let tight = RunConfig {
+            engine_limit_replay: 8,
+            ..RunConfig::default()
+        };
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 16, &tight),
+            Fidelity::Engine
+        );
+        // Linear plans hold O(P²) ops: a huge threaded budget must not
+        // smuggle a beyond-cap P into the plan compiler.
+        let wide_linear = RunConfig {
+            engine_limit_linear: 8192,
+            ..RunConfig::default()
+        };
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, 8192, &wide_linear),
+            Fidelity::Engine
+        );
+    }
+
+    #[test]
+    fn measure_rejects_replay_with_real_payloads() {
+        let c = RunConfig {
+            mode: ExecMode::Replay,
+            real_payloads: true,
+            ..cfg(16, 4)
+        };
+        let err = measure(&c, &AlgoKind::Tuna { radix: 2 }).unwrap_err().to_string();
+        assert!(err.contains("phantom-only"), "{err}");
     }
 
     #[test]

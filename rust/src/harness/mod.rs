@@ -2,10 +2,12 @@
 //!
 //! One module per evaluation figure (Fig. 7 — Fig. 16); each produces
 //! [`Table`]s, printed by the CLI and written as `.txt` + `.csv` under
-//! `results/`. Two grids exist per figure: the *quick* grid (default; engine
-//! fidelity, minutes on a laptop-class host — used by `cargo bench`) and
-//! the *full* paper-scale grid (`--full`; large P points use the analytic
-//! replay, recorded in the `fidelity` column).
+//! `results/`. Two grids exist per figure: the *quick* grid (default;
+//! exact fidelity, minutes on a laptop-class host — used by `cargo
+//! bench`) and the *full* paper-scale grid (`--full`; points up to
+//! P = 4096 run exactly on the plan/replay executor, larger ones fall
+//! back to the analytic model — recorded per row in the `fidelity`
+//! column).
 
 pub mod boxplot;
 pub mod fig07;
@@ -62,10 +64,12 @@ impl FigOpts {
         }
     }
 
-    /// Process counts for scaling sweeps.
+    /// Process counts for scaling sweeps. The full grid's 512–4096
+    /// points run exactly on the plan/replay executor — P counts that
+    /// thread-per-rank simulation never attempted.
     pub fn ps(&self) -> Vec<usize> {
         if self.full {
-            vec![512, 2048, 8192, 16384]
+            vec![512, 2048, 4096, 8192, 16384]
         } else {
             vec![64, 128, 256]
         }
@@ -89,12 +93,15 @@ impl FigOpts {
         }
     }
 
-    /// Base run config for a (profile, P, S) point. Full (paper-scale)
-    /// mode runs entirely on the validated analytic replay (recorded per
-    /// row in the `fidelity` column) so the P <= 16,384 grids finish in
-    /// minutes on one core; the quick grids (and the dedicated
-    /// `analytic_vs_engine` test suite) provide the exact-engine
-    /// cross-checks.
+    /// Base run config for a (profile, P, S) point. Grids are phantom,
+    /// so exact points run on the bit-identical plan/replay executor
+    /// (no rank threads): the quick grids entirely, the full
+    /// (paper-scale) grids up to the default replay budget of P = 4096
+    /// for logarithmic families. Beyond that the analytic model takes
+    /// over (recorded per row in the `fidelity` column) so the
+    /// P <= 16,384 grids still finish in minutes on one core; the
+    /// dedicated `analytic_vs_engine` and `replay_equivalence` suites
+    /// provide the exactness cross-checks.
     pub fn cfg(&self, profile: &MachineProfile, p: usize, s: u64) -> RunConfig {
         let (lim_linear, lim_log) = if self.full { (0, 0) } else { (512, 2048) };
         RunConfig {
@@ -162,6 +169,11 @@ mod tests {
         assert_eq!(full.q(), 32);
         assert!(quick.ps().iter().all(|p| p % quick.q() == 0));
         assert!(full.ps().iter().all(|p| p % full.q() == 0));
+        // The full grid exercises the replay-budget boundary: at least
+        // one point at the default budget and one beyond it.
+        let default_replay = crate::coordinator::RunConfig::default().engine_limit_replay;
+        assert!(full.ps().contains(&default_replay));
+        assert!(full.ps().iter().any(|&p| p > default_replay));
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //! ([`algos::select`]): cost-model-driven auto-selection across every
 //! algorithm family, persisted as versioned tuning tables.
 //!
+//! Phantom (size-only) collectives additionally run in a **plan/replay**
+//! execution mode ([`comm::plan`] + [`comm::replay`], selected through
+//! [`algos::ExecMode`]): schedules compile from the counts matrix into
+//! cached [`comm::CommPlan`]s and replay on a single-threaded
+//! discrete-event executor with timing bit-identical to the threaded
+//! engine — the lever that makes P = 4096+ model sweeps cheap.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 //!

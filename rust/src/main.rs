@@ -81,7 +81,11 @@ USAGE:
 
 CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2), seed, iters,
-  real (true|false), limit-linear, limit-log
+  real (true|false), limit-linear, limit-log, limit-replay,
+  mode (auto|threaded|replay: auto replays phantom workloads on the
+  single-threaded plan executor — bit-identical to the threaded engine,
+  and the way to run P=4096+ points, e.g. `tuna run algo=tuna:r=2
+  p=4096 q=32 mode=replay`)
 SELECT KEYS: shortlist (engine-refined candidates, default 6),
   refine (true|false), skewed (true|false: also stress the shortlist
   under a heavy-tailed companion workload), top (rows printed),

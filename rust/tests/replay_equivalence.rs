@@ -1,0 +1,243 @@
+//! Replay equivalence: the plan/replay executor must be **bit-identical**
+//! to the threaded engine — zero tolerance — on makespans, per-phase
+//! breakdowns, aggregate counters and schedule stats, across every
+//! algorithm family, topology shape, distribution and machine profile
+//! (including congestion-enabled ones, which exercise the burst/incast
+//! factors).
+//!
+//! This is the contract that lets the coordinator, selector refinement
+//! and figure harnesses substitute replay for thread-per-rank execution
+//! on phantom workloads without changing a single recorded number.
+
+use std::sync::Arc;
+
+use tuna::algos::{run_alltoallv, run_alltoallv_replay, tuning, AlgoKind, ExecMode};
+use tuna::comm::{Engine, Topology};
+use tuna::coordinator::{measure, RunConfig};
+use tuna::model::MachineProfile;
+use tuna::util::prop::forall;
+use tuna::workload::{BlockSizes, Dist};
+
+fn assert_identical(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) {
+    let threaded = run_alltoallv(engine, kind, sizes, false).expect("threaded run");
+    let replayed = run_alltoallv_replay(engine, kind, sizes).expect("replay run");
+    let name = kind.name();
+    assert_eq!(
+        threaded.makespan.to_bits(),
+        replayed.makespan.to_bits(),
+        "{name}: makespan {} (threaded) vs {} (replay)",
+        threaded.makespan,
+        replayed.makespan
+    );
+    assert_eq!(threaded.phases, replayed.phases, "{name}: phase breakdown");
+    assert_eq!(threaded.counters, replayed.counters, "{name}: counters");
+    assert_eq!(threaded.t_peak, replayed.t_peak, "{name}: t_peak");
+    assert_eq!(threaded.rounds, replayed.rounds, "{name}: rounds");
+    assert_eq!(threaded.algo, replayed.algo);
+    assert!(replayed.validated);
+}
+
+fn engine(profile: MachineProfile, p: usize, q: usize) -> Engine {
+    Engine::new(profile, Topology::new(p, q))
+}
+
+#[test]
+fn every_family_bit_identical_on_fixed_grids() {
+    for profile in [
+        MachineProfile::test_flat(),
+        MachineProfile::fugaku(),
+        MachineProfile::polaris(),
+    ] {
+        for (p, q) in [(8usize, 2usize), (12, 4), (9, 3)] {
+            let e = engine(profile.clone(), p, q);
+            let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, p as u64);
+            let mut kinds = vec![
+                AlgoKind::SpreadOut,
+                AlgoKind::OmpiLinear,
+                AlgoKind::Pairwise,
+                AlgoKind::Scattered { block_count: 3 },
+                AlgoKind::Vendor,
+                AlgoKind::Bruck2,
+                AlgoKind::Tuna { radix: 2 },
+                AlgoKind::Tuna { radix: p },
+                AlgoKind::TunaAuto,
+            ];
+            if q >= 2 && p / q >= 2 {
+                kinds.push(AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 });
+                kinds.push(AlgoKind::TunaHierCoalesced { radix: q, block_count: 2 });
+                kinds.push(AlgoKind::TunaHierStaggered { radix: 2, block_count: 5 });
+            }
+            for kind in kinds {
+                assert_identical(&e, &kind, &sizes);
+            }
+        }
+    }
+}
+
+#[test]
+fn skewed_and_degenerate_distributions_bit_identical() {
+    // Zero-size blocks (power-law tails, FFT splits) and constant
+    // uniform sizes must not perturb the plan.
+    let e = engine(MachineProfile::fugaku(), 16, 4);
+    for dist in [
+        Dist::powerlaw_default(),
+        Dist::normal_default(),
+        Dist::FftN1,
+        Dist::FftN2,
+        Dist::Const { size: 64 },
+        Dist::PowerLaw { max: 64, skew: 6.0 },
+    ] {
+        let sizes = BlockSizes::generate(16, dist, 5);
+        for kind in [
+            AlgoKind::Tuna { radix: 4 },
+            AlgoKind::Pairwise,
+            AlgoKind::TunaHierStaggered { radix: 3, block_count: 2 },
+        ] {
+            assert_identical(&e, &kind, &sizes);
+        }
+    }
+}
+
+#[test]
+fn property_random_configs_all_families() {
+    forall("replay == threaded", 30, |rng| {
+        let q = 1 + rng.next_below(6) as usize; // 1..=6
+        let n = 1 + rng.next_below(5) as usize; // 1..=5 nodes
+        let p = (q * n).max(2);
+        let q = if p % q == 0 { q } else { 1 };
+        let profile = match rng.next_below(3) {
+            0 => MachineProfile::test_flat(),
+            1 => MachineProfile::fugaku(),
+            _ => MachineProfile::polaris(),
+        };
+        let e = engine(profile, p, q);
+        let dist = match rng.next_below(3) {
+            0 => Dist::Uniform { max: 256 },
+            1 => Dist::powerlaw_default(),
+            _ => Dist::Const { size: 96 },
+        };
+        let sizes = BlockSizes::generate(p, dist, rng.next_u64());
+        let kind = match rng.next_below(7) {
+            0 => AlgoKind::SpreadOut,
+            1 => AlgoKind::OmpiLinear,
+            2 => AlgoKind::Pairwise,
+            3 => AlgoKind::Scattered {
+                block_count: 1 + rng.next_below(8) as usize,
+            },
+            4 => AlgoKind::TunaAuto,
+            5 if q >= 2 && p / q >= 2 => AlgoKind::TunaHierCoalesced {
+                radix: 2 + rng.next_below(q as u64 - 1) as usize,
+                block_count: 1 + rng.next_below(4) as usize,
+            },
+            6 if q >= 2 && p / q >= 2 => AlgoKind::TunaHierStaggered {
+                radix: 2 + rng.next_below(q as u64 - 1) as usize,
+                block_count: 1 + rng.next_below(8) as usize,
+            },
+            _ => AlgoKind::Tuna {
+                radix: (2 + rng.next_below(p as u64) as usize).min(p),
+            },
+        };
+        let threaded = run_alltoallv(&e, &kind, &sizes, false).map_err(|e| e.to_string())?;
+        let replayed = run_alltoallv_replay(&e, &kind, &sizes).map_err(|e| e.to_string())?;
+        if threaded.makespan.to_bits() != replayed.makespan.to_bits() {
+            return Err(format!(
+                "{} P={p} Q={q}: makespan {} != {}",
+                kind.name(),
+                threaded.makespan,
+                replayed.makespan
+            ));
+        }
+        if threaded.phases != replayed.phases || threaded.counters != replayed.counters {
+            return Err(format!("{} P={p} Q={q}: phases/counters diverged", kind.name()));
+        }
+        if (threaded.t_peak, threaded.rounds) != (replayed.t_peak, replayed.rounds) {
+            return Err(format!("{} P={p} Q={q}: stats diverged", kind.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tuna_auto_with_tuning_table_resolves_identically() {
+    // A table-backed tuna:auto must compile the same radix the threaded
+    // dispatch agrees on — exercised by pointing the table at a radix
+    // the heuristic would never pick (mirrors the dispatch unit test).
+    let (p, q) = (12usize, 4usize);
+    let profile = MachineProfile::test_flat();
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 64 }, 3);
+    let total: u64 = (0..p).map(|s| sizes.row(s).iter().sum::<u64>()).sum();
+    let mean = total as f64 / (p * p) as f64;
+    let heur = tuning::heuristic_radix(p, mean);
+    let table_radix = 5usize;
+    assert_ne!(heur, table_radix);
+
+    let table = tuning::TuningTable {
+        entries: vec![tuning::TuningEntry {
+            machine: profile.name.to_string(),
+            p,
+            q,
+            dist: "uniform".into(),
+            mean_block: mean,
+            rank: 1,
+            algo: AlgoKind::Tuna { radix: table_radix },
+            model_time: 1e-3,
+            measured_time: None,
+        }],
+    };
+
+    let plain = engine(profile.clone(), p, q);
+    let tuned = Engine::new(profile, Topology::new(p, q)).with_tuning(Some(Arc::new(table)));
+    assert_identical(&plain, &AlgoKind::TunaAuto, &sizes);
+    assert_identical(&tuned, &AlgoKind::TunaAuto, &sizes);
+    // And the tuned replay really used the table radix.
+    let tuned_replay = run_alltoallv_replay(&tuned, &AlgoKind::TunaAuto, &sizes).unwrap();
+    let fixed_kind = AlgoKind::Tuna { radix: table_radix };
+    let fixed = run_alltoallv_replay(&plain, &fixed_kind, &sizes).unwrap();
+    assert_eq!(tuned_replay.rounds, fixed.rounds);
+    let plain_replay = run_alltoallv_replay(&plain, &AlgoKind::TunaAuto, &sizes).unwrap();
+    assert_ne!(tuned_replay.rounds, plain_replay.rounds);
+}
+
+#[test]
+fn cached_replays_are_stable() {
+    // Repeated replays of one collective hit the plan cache and keep
+    // producing the identical report.
+    let e = engine(MachineProfile::fugaku(), 32, 8);
+    let sizes = BlockSizes::generate(32, Dist::Uniform { max: 1024 }, 11);
+    let kind = AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 };
+    let first = run_alltoallv_replay(&e, &kind, &sizes).unwrap();
+    for _ in 0..3 {
+        let again = run_alltoallv_replay(&e, &kind, &sizes).unwrap();
+        assert_eq!(first.makespan.to_bits(), again.makespan.to_bits());
+        assert_eq!(first.counters, again.counters);
+    }
+    let (hits, misses) = e.plan_cache.stats();
+    assert_eq!((hits, misses), (3, 1));
+}
+
+#[test]
+fn measure_replay_extends_past_thread_budget() {
+    // A P above the threaded budgets but inside the replay budget runs
+    // at exact fidelity — the large-P point thread-per-rank never
+    // attempted at these budgets.
+    let cfg = RunConfig {
+        p: 256,
+        q: 32,
+        dist: Dist::Uniform { max: 128 },
+        iters: 2,
+        engine_limit_linear: 16,
+        engine_limit_log: 64,
+        engine_limit_replay: 512,
+        ..RunConfig::default()
+    };
+    let m = measure(&cfg, &AlgoKind::Tuna { radix: 4 }).unwrap();
+    assert_eq!(m.fidelity.name(), "replay");
+    assert!(m.median() > 0.0);
+    // Same point with replay disabled falls back to the model.
+    let threaded_only = RunConfig {
+        mode: ExecMode::Threaded,
+        ..cfg
+    };
+    let m2 = measure(&threaded_only, &AlgoKind::Tuna { radix: 4 }).unwrap();
+    assert_eq!(m2.fidelity.name(), "model");
+}
