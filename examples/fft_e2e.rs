@@ -25,7 +25,7 @@ fn main() -> tuna::Result<()> {
     let algos = [
         AlgoKind::Vendor,
         AlgoKind::Tuna { radix: 4 },
-        AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+        AlgoKind::hier_coalesced(2, 1),
     ];
 
     for (n1, n2) in [(64usize, 64usize), (64, 60)] {

@@ -27,8 +27,8 @@ fn main() -> tuna::Result<()> {
         AlgoKind::SpreadOut,
         AlgoKind::Tuna { radix: 2 },
         AlgoKind::Tuna { radix: 8 },
-        AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
-        AlgoKind::TunaHierStaggered { radix: 2, block_count: 4 },
+        AlgoKind::hier_coalesced(2, 1),
+        AlgoKind::hier_staggered(2, 4),
     ];
     let mut vendor_comm = None;
     println!(

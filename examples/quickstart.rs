@@ -38,15 +38,11 @@ fn main() -> tuna::Result<()> {
     println!("vendor alltoallv: {}", fmt_time(vendor.makespan));
     println!("speedup: {:.2}x", vendor.makespan / tuna.makespan);
 
-    // Hierarchical coalesced variant — the paper's overall winner.
-    let hier = run_alltoallv(
-        &engine,
-        &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 2 },
-        &sizes,
-        true,
-    )?;
+    // Hierarchical coalesced composition — the paper's overall winner
+    // (spec `hier:l=tuna:r=2,g=coalesced:b=2`).
+    let hier = run_alltoallv(&engine, &AlgoKind::hier_coalesced(2, 2), &sizes, true)?;
     println!(
-        "tuna-hier-coalesced(r=2,b=2): {}  ({:.2}x over vendor)",
+        "hier(l=tuna(r=2),g=coalesced(b=2)): {}  ({:.2}x over vendor)",
         fmt_time(hier.makespan),
         vendor.makespan / hier.makespan
     );

@@ -62,6 +62,12 @@ struct AlgoRow {
     sim_msgs_per_sec: f64,
     copied_bytes: u64,
     payload_bytes: u64,
+    /// Plan-cache hits/misses over the whole row (warm-up + timed
+    /// iterations) — replay rows compile once and hit `iters` times; a
+    /// miss count above 1 would mean the timed loop re-compiled and the
+    /// row stopped measuring cached replays.
+    plan_hits: u64,
+    plan_misses: u64,
 }
 
 fn bench_algo(
@@ -86,6 +92,7 @@ fn bench_algo(
         let _ = run_alltoallv_mode(&engine, &kind, &sizes, real, exec).unwrap();
     }
     let per_run = t0.elapsed().as_secs_f64() / iters as f64;
+    let (plan_hits, plan_misses) = engine.plan_cache.stats();
     AlgoRow {
         algo: kind.name(),
         p,
@@ -97,6 +104,8 @@ fn bench_algo(
         sim_msgs_per_sec: msgs / per_run,
         copied_bytes: rep.counters.copied_bytes,
         payload_bytes: sizes.total_bytes(),
+        plan_hits,
+        plan_misses,
     }
 }
 
@@ -184,7 +193,8 @@ fn main() {
             (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false, rpl),
             (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, true, thr),
             (AlgoKind::SpreadOut, 64, 8, 1024, 3, true, thr),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 64, 8, 1024, 3, true, thr),
+            (AlgoKind::hier_coalesced(2, 4), 64, 8, 1024, 3, true, thr),
+            (AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(), 64, 8, 1024, 3, false, rpl),
             (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, false, thr),
             (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, false, rpl),
             (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, 1, false, rpl),
@@ -197,10 +207,11 @@ fn main() {
             (AlgoKind::SpreadOut, 256, 8, 1024, 3, false, thr),
             (AlgoKind::SpreadOut, 256, 8, 1024, 3, false, rpl),
             (AlgoKind::Vendor, 256, 8, 1024, 3, false, thr),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, false, thr),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, false, rpl),
+            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, 3, false, thr),
+            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, 3, false, rpl),
+            (AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(), 256, 8, 1024, 3, false, rpl),
             (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, true, thr),
-            (AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 }, 256, 8, 1024, 3, true, thr),
+            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, 3, true, thr),
             (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, true, thr),
             (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1, false, thr),
             (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 2, false, rpl),
@@ -210,21 +221,23 @@ fn main() {
     };
 
     println!(
-        "\n{:<28} {:>6} {:>5} {:>9} {:>12} {:>14} {:>14}",
-        "algorithm", "P", "mode", "exec", "s/run", "sim-msgs/s", "copied-B"
+        "\n{:<28} {:>6} {:>5} {:>9} {:>12} {:>14} {:>14} {:>11}",
+        "algorithm", "P", "mode", "exec", "s/run", "sim-msgs/s", "copied-B", "plan-h/m"
     );
     let mut algo_rows: Vec<AlgoRow> = Vec::new();
     for (kind, p, q, s, iters, real, exec) in algo_grid {
         let row = bench_algo(kind, p, q, s, iters, real, exec);
         println!(
-            "{:<28} {:>6} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14}",
+            "{:<28} {:>6} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14} {:>7}/{}",
             row.algo,
             row.p,
             if row.real { "real" } else { "phtm" },
             row.exec.name(),
             row.s_per_run,
             row.sim_msgs_per_sec,
-            row.copied_bytes
+            row.copied_bytes,
+            row.plan_hits,
+            row.plan_misses
         );
         if row.real {
             assert_eq!(
@@ -238,6 +251,15 @@ fn main() {
             assert_eq!(
                 row.copied_bytes, 0,
                 "replay moved host payload bytes for {}",
+                row.algo
+            );
+            // One compile at warm-up, then every timed iteration replays
+            // the cached plan — the cache-effectiveness contract this
+            // bench exists to record.
+            assert_eq!(
+                (row.plan_hits, row.plan_misses),
+                (iters as u64, 1),
+                "plan cache ineffective for {}",
                 row.algo
             );
         }
@@ -293,7 +315,8 @@ fn main() {
         j.push_str(&format!(
             "    {{\"algo\": \"{}\", \"p\": {}, \"q\": {}, \"s\": {}, \"real\": {}, \
              \"exec\": \"{}\", \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \
-             \"copied_bytes\": {}, \"payload_bytes\": {}}}{}\n",
+             \"copied_bytes\": {}, \"payload_bytes\": {}, \
+             \"plan_hits\": {}, \"plan_misses\": {}}}{}\n",
             json_escape(&r.algo),
             r.p,
             r.q,
@@ -304,6 +327,8 @@ fn main() {
             r.sim_msgs_per_sec,
             r.copied_bytes,
             r.payload_bytes,
+            r.plan_hits,
+            r.plan_misses,
             if i + 1 < algo_rows.len() { "," } else { "" }
         ));
     }

@@ -1,0 +1,1051 @@
+//! **Composable TuNA_l^g** — the two-level hierarchy framework (§IV).
+//!
+//! The paper's title contribution is *configurability*: the intra-node
+//! (local, `l`) and inter-node (global, `g`) algorithms of the hierarchy
+//! are chosen independently. This module realizes that as a composition:
+//! any [`LocalAlgo`] pairs with any [`GlobalAlgo`] under
+//! `AlgoKind::Hier { local, global }` (spec `hier:l=<spec>,g=<spec>`);
+//! the paper's Algorithms 2 and 3 are the compositions
+//! `hier:l=tuna:r=R,g=staggered:b=B` and `hier:l=tuna:r=R,g=coalesced:b=B`
+//! (still parseable under their legacy `tuna-hier-*` names).
+//!
+//! # Composition contract (the phase boundary)
+//!
+//! Every composition runs the same three stages; what each level may
+//! assume about block layout at the boundary is fixed so the levels stay
+//! independently swappable:
+//!
+//! 1. **Slot layout (input to the local level).** The P blocks at rank
+//!    `(n, g)` are arranged into Q slots: slot `j` holds the N sub-blocks
+//!    destined to `(k, (g + j) mod Q)` for `k = 0..N` — the implicit
+//!    group view of §IV-A(a). Slot 0 (the self group offset) never moves.
+//! 2. **Local phase output.** Whatever schedule the local algorithm runs,
+//!    afterwards rank `(n, g)` must hold, for every node `k`, exactly the
+//!    Q blocks `{(n, g') → (k, g)}` — i.e. all of its node's traffic
+//!    whose destination *group rank* is `g`. Slot indices are free; only
+//!    the held block set is contracted. The framework then buckets these
+//!    by destination node (ascending origin within a bucket, so
+//!    per-block global schedules pair messages identically on both
+//!    sides), and delivers the own-node bucket locally.
+//! 3. **Global phase input.** The global algorithm receives N buckets of
+//!    exactly Q blocks each (bucket `k` = the blocks destined `(k, g)`),
+//!    exchanges only with ranks of the same group rank `g` (the Q-port
+//!    model), and must deliver every foreign bucket to its node. It may
+//!    move buckets wholesale (coalesced/linear/Bruck) or per block
+//!    (staggered); it must not assume anything about the local schedule
+//!    that produced them.
+//!
+//! # Shipped implementations
+//!
+//! * [`LocalAlgo::Tuna`] — the TuNA slot exchange over the node's Q ranks
+//!   (radix 2 = the Bruck-style log schedule; radix Q degenerates to a
+//!   direct exchange). The TuNA metadata phase doubles as the size
+//!   exchange the implicit strategy needs, at no extra cost.
+//! * [`LocalAlgo::Linear`] — spread-out-style direct slot delivery: each
+//!   slot goes straight to its final intra-node holder, Q−1 non-blocking
+//!   pairs and one waitall, no metadata rounds, no temporary buffer.
+//! * [`GlobalAlgo::Coalesced`] — Alg. 3: one message of Q blocks per
+//!   target node, batched by `block_count`, after a rearrangement pass
+//!   that compacts T (N−1 messages).
+//! * [`GlobalAlgo::Staggered`] — Alg. 2: one block per message, batched
+//!   by `block_count` (Q·(N−1) messages).
+//! * [`GlobalAlgo::Linear`] — spread-out over nodes: every coalesced
+//!   node message posted in one burst, single waitall, no rearrangement.
+//! * [`GlobalAlgo::Bruck`] — log-radix store-and-forward *across nodes*:
+//!   the same TuNA slot engine run over the stride-Q group
+//!   `{(k, g) : k = 0..N}` with node buckets as slots (arity Q), so
+//!   inter-node latency-bound workloads get a log₂N-style schedule.
+//!
+//! Every hop at both levels moves payload *views* only (`comm::buffer`
+//! ropes): blocks stay whole and are batched by value, so aggregation
+//! never touches payload bytes on the host. The `ctx.copy` charges keep
+//! modeling the rearrangement cost on the simulated machine's clock.
+
+use super::tuna::{plan_core, tuna_core, SlotContent};
+use super::{AlgoKind, AlgoStats};
+use crate::comm::engine::{RecvReq, SendReq};
+use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx, Topology};
+use crate::error::{Result, TunaError};
+use crate::util::prng::Pcg64;
+use crate::workload::BlockSizes;
+
+/// Tag space for the inter-node phase (the intra-node core uses tags from
+/// 0; K_intra <= 2Q so this is comfortably disjoint).
+const INTER_TAG: u32 = 1_000_000;
+
+/// Intra-node (local) level of the hierarchy: how the Q ranks of a node
+/// rearrange their slots so every rank ends up holding its group rank's
+/// share of the node's traffic (contract stage 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalAlgo {
+    /// TuNA slot exchange with tunable radix in `[2, Q]` (r = 2 is the
+    /// Bruck-style log schedule).
+    Tuna { radix: usize },
+    /// Direct spread-out slot delivery: Q−1 non-blocking pairs, one
+    /// waitall, no metadata rounds.
+    Linear,
+}
+
+impl LocalAlgo {
+    /// Parse a local-level spec: `tuna:r=N` or `linear`.
+    pub fn parse(s: &str) -> Result<LocalAlgo> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, a),
+            None => (s, ""),
+        };
+        match head {
+            "tuna" => Ok(LocalAlgo::Tuna {
+                radix: param(head, args, "r")?,
+            }),
+            "linear" => Ok(LocalAlgo::Linear),
+            other => Err(TunaError::config(format!(
+                "hier: unknown local algorithm `{other}` (try tuna:r=N or linear)"
+            ))),
+        }
+    }
+
+    /// Parseable spec, the inverse of [`LocalAlgo::parse`].
+    pub fn spec(&self) -> String {
+        match self {
+            LocalAlgo::Tuna { radix } => format!("tuna:r={radix}"),
+            LocalAlgo::Linear => "linear".into(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            LocalAlgo::Tuna { radix } => format!("tuna(r={radix})"),
+            LocalAlgo::Linear => "linear".into(),
+        }
+    }
+}
+
+/// Inter-node (global) level of the hierarchy: how the N buckets of Q
+/// blocks each reach their destination nodes over the Q-port groups
+/// (contract stage 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GlobalAlgo {
+    /// Alg. 3: one Q-block message per target node, batched by
+    /// `block_count`, after a T-compacting rearrangement pass.
+    Coalesced { block_count: usize },
+    /// Alg. 2: one block per message, batched by `block_count`.
+    Staggered { block_count: usize },
+    /// Spread-out over nodes: all N−1 coalesced messages in one burst.
+    Linear,
+    /// Log-radix TuNA slot exchange across nodes (radix in `[2, N]`).
+    Bruck { radix: usize },
+}
+
+impl GlobalAlgo {
+    /// Parse a global-level spec: `coalesced:b=N`, `staggered:b=N`,
+    /// `linear` or `bruck:r=N`.
+    pub fn parse(s: &str) -> Result<GlobalAlgo> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, a),
+            None => (s, ""),
+        };
+        match head {
+            "coalesced" => Ok(GlobalAlgo::Coalesced {
+                block_count: param(head, args, "b")?,
+            }),
+            "staggered" => Ok(GlobalAlgo::Staggered {
+                block_count: param(head, args, "b")?,
+            }),
+            "linear" => Ok(GlobalAlgo::Linear),
+            "bruck" => Ok(GlobalAlgo::Bruck {
+                radix: param(head, args, "r")?,
+            }),
+            other => Err(TunaError::config(format!(
+                "hier: unknown global algorithm `{other}` \
+                 (try coalesced:b=N, staggered:b=N, linear or bruck:r=N)"
+            ))),
+        }
+    }
+
+    /// Parseable spec, the inverse of [`GlobalAlgo::parse`].
+    pub fn spec(&self) -> String {
+        match self {
+            GlobalAlgo::Coalesced { block_count } => format!("coalesced:b={block_count}"),
+            GlobalAlgo::Staggered { block_count } => format!("staggered:b={block_count}"),
+            GlobalAlgo::Linear => "linear".into(),
+            GlobalAlgo::Bruck { radix } => format!("bruck:r={radix}"),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            GlobalAlgo::Coalesced { block_count } => format!("coalesced(b={block_count})"),
+            GlobalAlgo::Staggered { block_count } => format!("staggered(b={block_count})"),
+            GlobalAlgo::Linear => "linear".into(),
+            GlobalAlgo::Bruck { radix } => format!("bruck(r={radix})"),
+        }
+    }
+
+    /// Short family suffix for table columns (`hier-<this>`).
+    pub fn family(&self) -> &'static str {
+        match self {
+            GlobalAlgo::Coalesced { .. } => "hier-coalesced",
+            GlobalAlgo::Staggered { .. } => "hier-staggered",
+            GlobalAlgo::Linear => "hier-linear",
+            GlobalAlgo::Bruck { .. } => "hier-bruck",
+        }
+    }
+}
+
+/// `key=value` lookup inside a sub-spec's argument list, with errors that
+/// name the missing or invalid parameter (mirrors `AlgoKind::parse`).
+fn param(head: &str, args: &str, key: &str) -> Result<usize> {
+    let raw = args
+        .split(',')
+        .find_map(|kv| kv.strip_prefix(key).and_then(|r| r.strip_prefix('=')));
+    match raw {
+        None => Err(TunaError::config(format!(
+            "hier {head}: missing parameter `{key}` (expected `{head}:{key}=N`)"
+        ))),
+        Some(v) => v.parse().map_err(|_| {
+            TunaError::config(format!(
+                "hier {head}: invalid value `{v}` for parameter `{key}`"
+            ))
+        }),
+    }
+}
+
+/// Split the `hier:` argument list `l=<spec>,g=<spec>` into the two
+/// sub-specs. Sub-specs may themselves contain commas: a chunk that does
+/// not start a new `l=` / `g=` key is glued back onto the one in
+/// progress.
+pub(crate) fn split_spec(args: &str) -> Result<(String, String)> {
+    enum Cursor {
+        None,
+        Local,
+        Global,
+    }
+    let mut local: Option<String> = None;
+    let mut global: Option<String> = None;
+    let mut cursor = Cursor::None;
+    for chunk in args.split(',') {
+        if let Some(rest) = chunk.strip_prefix("l=") {
+            if local.is_some() {
+                return Err(TunaError::config(format!(
+                    "hier: duplicate local level `l=` in `{args}`"
+                )));
+            }
+            local = Some(rest.to_string());
+            cursor = Cursor::Local;
+        } else if let Some(rest) = chunk.strip_prefix("g=") {
+            if global.is_some() {
+                return Err(TunaError::config(format!(
+                    "hier: duplicate global level `g=` in `{args}`"
+                )));
+            }
+            global = Some(rest.to_string());
+            cursor = Cursor::Global;
+        } else {
+            let target = match cursor {
+                Cursor::Local => local.as_mut(),
+                Cursor::Global => global.as_mut(),
+                Cursor::None => None,
+            };
+            match target {
+                Some(spec) => {
+                    spec.push(',');
+                    spec.push_str(chunk);
+                }
+                None => {
+                    return Err(TunaError::config(format!(
+                        "hier: expected `l=<spec>,g=<spec>`, got `{args}`"
+                    )))
+                }
+            }
+        }
+    }
+    match (local, global) {
+        (Some(l), Some(g)) => Ok((l, g)),
+        (None, _) => Err(TunaError::config(
+            "hier: missing local level `l=<spec>` (expected `hier:l=<spec>,g=<spec>`)",
+        )),
+        (_, None) => Err(TunaError::config(
+            "hier: missing global level `g=<spec>` (expected `hier:l=<spec>,g=<spec>`)",
+        )),
+    }
+}
+
+/// Uniformly sample a runnable local×global composition for a topology
+/// with `q >= 2` ranks per node and `n >= 2` nodes. This is the one
+/// generator shared by the randomized property suites (correctness,
+/// zero-copy, replay equivalence, and this module's own), so every
+/// suite explores the same composition space with the same parameter
+/// ranges; every returned kind passes [`AlgoKind::check`] for
+/// `(q * n, q)`.
+pub fn random_composition(rng: &mut Pcg64, q: usize, n: usize) -> AlgoKind {
+    assert!(q >= 2 && n >= 2, "compositions need Q >= 2 and N >= 2");
+    let local = match rng.next_below(2) {
+        0 => LocalAlgo::Tuna {
+            radix: 2 + rng.next_below(q as u64 - 1) as usize, // 2..=Q
+        },
+        _ => LocalAlgo::Linear,
+    };
+    let global = match rng.next_below(4) {
+        0 => GlobalAlgo::Coalesced {
+            block_count: 1 + rng.next_below((n - 1) as u64) as usize, // 1..=N-1
+        },
+        1 => GlobalAlgo::Staggered {
+            block_count: 1 + rng.next_below(((n - 1) * q) as u64) as usize, // 1..=Q(N-1)
+        },
+        2 => GlobalAlgo::Linear,
+        _ => GlobalAlgo::Bruck {
+            radix: 2 + rng.next_below(n as u64 - 1) as usize, // 2..=N
+        },
+    };
+    AlgoKind::Hier { local, global }
+}
+
+/// Validate a composition against a topology (called by
+/// `AlgoKind::check`).
+pub fn check(local: &LocalAlgo, global: &GlobalAlgo, _p: usize, q: usize, n: usize) -> Result<()> {
+    let bad = |m: String| Err(TunaError::Config(m));
+    if q < 2 {
+        return bad(format!(
+            "hier: a hierarchical composition needs Q >= 2 ranks per node, got {q}"
+        ));
+    }
+    if let LocalAlgo::Tuna { radix } = *local {
+        if radix < 2 || radix > q {
+            return bad(format!("hier local tuna: radix {radix} outside [2, Q={q}]"));
+        }
+    }
+    match *global {
+        GlobalAlgo::Coalesced { block_count } | GlobalAlgo::Staggered { block_count }
+            if block_count == 0 =>
+        {
+            bad("hier global: block_count must be >= 1".into())
+        }
+        // The inter-node phase only runs at N >= 2 nodes; a single-node
+        // topology skips it, so any radix >= 2 is acceptable there.
+        GlobalAlgo::Bruck { radix } if radix < 2 || (n >= 2 && radix > n) => {
+            bad(format!("hier global bruck: radix {radix} outside [2, N={n}]"))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Run a hierarchical composition on one rank (see the module header for
+/// the three-stage contract).
+pub fn run(
+    ctx: &mut RankCtx,
+    blocks: Vec<Block>,
+    local: LocalAlgo,
+    global: GlobalAlgo,
+) -> (Vec<Block>, AlgoStats) {
+    let topo = *ctx.topo();
+    let p = topo.p();
+    let q = topo.q();
+    let n_nodes = topo.nodes();
+    let me = ctx.rank();
+    let my_node = topo.node_of(me);
+    let g = topo.group_rank(me);
+    assert_eq!(blocks.len(), p);
+    assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
+
+    // ---- prepare (Alg. 3 lines 1-5): global max block size M, index
+    // arrays.
+    ctx.phase_mark();
+    let local_max = blocks.iter().map(|b| b.len()).max().unwrap_or(0);
+    let _m = ctx.allreduce_max(local_max);
+    ctx.copy(4 * p as u64);
+    ctx.phase_lap(Phase::Prepare);
+
+    // ---- contract stage 1: the slot layout. Slot j aggregates the N
+    // sub-blocks destined to group-rank (g + j) % Q.
+    let mut by_dest: Vec<Option<Block>> = (0..p).map(|_| None).collect();
+    for b in blocks {
+        let d = b.dest as usize;
+        by_dest[d] = Some(b);
+    }
+    let slots: Vec<SlotContent> = (0..q)
+        .map(|j| {
+            let dest_g = (g + j) % q;
+            (0..n_nodes)
+                .map(|k| {
+                    by_dest[topo.rank_of(k, dest_g)]
+                        .take()
+                        .expect("one block per destination")
+                })
+                .collect()
+        })
+        .collect();
+
+    // ---- local phase.
+    let (slots, mut stats) = match local {
+        LocalAlgo::Tuna { radix } => {
+            assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+            let out = tuna_core(ctx, my_node * q, 1, q, radix, n_nodes, slots, 0, None);
+            (out.slots, out.stats)
+        }
+        LocalAlgo::Linear => run_local_linear(ctx, my_node * q, q, g, slots),
+    };
+
+    // ---- contract stage 2 → 3: bucket the now group-aligned blocks by
+    // destination node: bucket[k] = the Q blocks {(my_node, g') -> (k, g)}.
+    let mut buckets: Vec<Vec<Block>> = (0..n_nodes).map(|_| Vec::with_capacity(q)).collect();
+    for content in slots {
+        for b in content {
+            debug_assert_eq!(topo.group_rank(b.dest as usize), g, "local phase must align groups");
+            buckets[topo.node_of(b.dest as usize)].push(b);
+        }
+    }
+    // Deterministic order inside each bucket (by origin) so per-block
+    // global schedules pair messages identically on both sides.
+    for bucket in buckets.iter_mut() {
+        bucket.sort_by_key(|b| b.origin);
+    }
+
+    // Own node's bucket is final.
+    let mut recv: Vec<Block> = Vec::with_capacity(p);
+    ctx.phase_mark();
+    ctx.copy(buckets[my_node].iter().map(|b| b.len()).sum());
+    recv.extend(std::mem::take(&mut buckets[my_node]));
+    ctx.phase_lap(Phase::Replace);
+
+    if n_nodes == 1 {
+        return (recv, stats);
+    }
+
+    // ---- global phase.
+    match global {
+        GlobalAlgo::Coalesced { block_count } => {
+            assert!(block_count >= 1);
+            // Alg. 3 lines 19-30: rearrange T (compact empty segments),
+            // then batched node-level rounds of one Q-block message each.
+            ctx.phase_mark();
+            let staged_bytes: u64 = buckets.iter().flatten().map(|b| b.len()).sum();
+            ctx.copy(staged_bytes);
+            ctx.phase_lap(Phase::Rearrange);
+
+            let mut round = 0usize; // node offsets 1..N-1
+            while round < n_nodes - 1 {
+                let batch = block_count.min(n_nodes - 1 - round);
+                let mut sends: Vec<SendReq> = Vec::with_capacity(batch);
+                let mut recvs: Vec<RecvReq> = Vec::with_capacity(batch);
+                for i in 0..batch {
+                    let off = round + i + 1;
+                    let ndst = (my_node + n_nodes - off) % n_nodes;
+                    let nsrc = (my_node + off) % n_nodes;
+                    let tag = INTER_TAG + off as u32;
+                    recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                    let payload = Payload::Blocks(std::mem::take(&mut buckets[ndst]));
+                    sends.push(ctx.isend(topo.rank_of(ndst, g), tag, payload));
+                }
+                for pl in ctx.waitall(&sends, &recvs) {
+                    recv.extend(pl.into_blocks());
+                }
+                stats.rounds += batch;
+                round += batch;
+            }
+            ctx.phase_lap(Phase::InterNode);
+        }
+        GlobalAlgo::Staggered { block_count } => {
+            assert!(block_count >= 1);
+            // Alg. 2: one block per message, Q*(N-1) steps, batched.
+            ctx.phase_mark();
+            let total_steps = (n_nodes - 1) * q;
+            let mut step = 0usize;
+            while step < total_steps {
+                let batch = block_count.min(total_steps - step);
+                let mut sends: Vec<SendReq> = Vec::with_capacity(batch);
+                let mut recvs: Vec<RecvReq> = Vec::with_capacity(batch);
+                for i in 0..batch {
+                    let idx = step + i;
+                    let off = idx / q + 1; // node offset 1..N-1
+                    let j = idx % q; // which of the Q blocks
+                    let ndst = (my_node + n_nodes - off) % n_nodes;
+                    let nsrc = (my_node + off) % n_nodes;
+                    let tag = INTER_TAG + idx as u32;
+                    recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                    // The tombstone left behind is never sent or
+                    // validated; the real block moves out as a view.
+                    let block = std::mem::replace(
+                        &mut buckets[ndst][j],
+                        Block::new(0, 0, crate::comm::DataBuf::Phantom(0)),
+                    );
+                    let payload = Payload::Blocks(vec![block]);
+                    sends.push(ctx.isend(topo.rank_of(ndst, g), tag, payload));
+                }
+                for pl in ctx.waitall(&sends, &recvs) {
+                    recv.extend(pl.into_blocks());
+                }
+                stats.rounds += 1;
+                step += batch;
+            }
+            ctx.phase_lap(Phase::InterNode);
+        }
+        GlobalAlgo::Linear => {
+            // Spread-out over nodes: all N-1 coalesced messages in one
+            // burst, single waitall, no rearrangement pass.
+            ctx.phase_mark();
+            let mut sends: Vec<SendReq> = Vec::with_capacity(n_nodes - 1);
+            let mut recvs: Vec<RecvReq> = Vec::with_capacity(n_nodes - 1);
+            for off in 1..n_nodes {
+                let ndst = (my_node + n_nodes - off) % n_nodes;
+                let nsrc = (my_node + off) % n_nodes;
+                let tag = INTER_TAG + off as u32;
+                recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                let payload = Payload::Blocks(std::mem::take(&mut buckets[ndst]));
+                sends.push(ctx.isend(topo.rank_of(ndst, g), tag, payload));
+            }
+            for pl in ctx.waitall(&sends, &recvs) {
+                recv.extend(pl.into_blocks());
+            }
+            stats.rounds += 1;
+            ctx.phase_lap(Phase::InterNode);
+        }
+        GlobalAlgo::Bruck { radix } => {
+            // Node-level TuNA slot exchange over the stride-Q group
+            // {(k, g)}: slot j = the bucket for node (my_node + j) % N
+            // (arity Q). Slot 0 is the own-node bucket, already
+            // delivered above, and never moves.
+            let radix = radix.min(n_nodes).max(2);
+            let node_slots: Vec<SlotContent> = (0..n_nodes)
+                .map(|j| {
+                    if j == 0 {
+                        Vec::new()
+                    } else {
+                        std::mem::take(&mut buckets[(my_node + j) % n_nodes])
+                    }
+                })
+                .collect();
+            // Lap mapping: every round of the node-level exchange is
+            // inter-node time, so compositions stay comparable per
+            // phase with the coalesced/staggered/linear globals.
+            let out = tuna_core(
+                ctx,
+                g,
+                q,
+                n_nodes,
+                radix,
+                q,
+                node_slots,
+                INTER_TAG,
+                Some(Phase::InterNode),
+            );
+            for (j, content) in out.slots.into_iter().enumerate() {
+                if j > 0 {
+                    recv.extend(content);
+                }
+            }
+            stats.rounds += out.stats.rounds;
+            stats.t_peak = stats.t_peak.max(out.stats.t_peak);
+        }
+    }
+
+    debug_assert_eq!(recv.len(), p);
+    (recv, stats)
+}
+
+/// [`LocalAlgo::Linear`]: direct spread-out slot delivery within the
+/// node. Each slot already names its final intra-node holder — send it
+/// straight there, Q−1 non-blocking pairs, one waitall.
+fn run_local_linear(
+    ctx: &mut RankCtx,
+    base: usize,
+    q: usize,
+    g: usize,
+    mut slots: Vec<SlotContent>,
+) -> (Vec<SlotContent>, AlgoStats) {
+    ctx.phase_mark();
+    let mut sends: Vec<SendReq> = Vec::with_capacity(q - 1);
+    let mut recvs: Vec<RecvReq> = Vec::with_capacity(q - 1);
+    for j in 1..q {
+        let dst = base + (g + j) % q;
+        let src = base + (g + q - j) % q;
+        recvs.push(ctx.irecv(src, j as u32));
+        let payload = Payload::Blocks(std::mem::take(&mut slots[j]));
+        sends.push(ctx.isend(dst, j as u32, payload));
+    }
+    for (j, pl) in (1..q).zip(ctx.waitall(&sends, &recvs)) {
+        slots[j] = pl.into_blocks();
+    }
+    ctx.phase_lap(Phase::Data);
+    (slots, AlgoStats { t_peak: 0, rounds: 1 })
+}
+
+// ---- plan compiler --------------------------------------------------------
+
+/// Compile a hierarchical composition ([`run`]) for every rank from the
+/// counts matrix. The local phase is a per-node joint simulation; the
+/// global phase's message and copy sizes come from the matrix in closed
+/// form — after the local phase, rank `(n, g)`'s bucket for node `k`
+/// holds exactly the blocks `{(n, g') → (k, g)}` in ascending `g'`
+/// order.
+pub(crate) fn plan_into(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    topo: Topology,
+    local: LocalAlgo,
+    global: GlobalAlgo,
+) -> (usize, usize) {
+    let p = topo.p();
+    let q = topo.q();
+    let n_nodes = topo.nodes();
+    assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
+    let rows: Vec<Vec<u64>> = (0..p).map(|s| sizes.row(s)).collect();
+    // Bytes of rank (node, g)'s slot j after stage 1 of the contract.
+    let slot_bytes = |node: usize, g: usize, j: usize| -> u64 {
+        let row = &rows[topo.rank_of(node, g)];
+        let dest_g = (g + j) % q;
+        (0..n_nodes).map(|k| row[topo.rank_of(k, dest_g)]).sum()
+    };
+
+    // Prepare: global allreduce for M + index array write.
+    for b in builders.iter_mut() {
+        b.mark();
+        b.allreduce();
+        b.copy(4 * p as u64);
+        b.lap(Phase::Prepare);
+    }
+
+    // ---- local phase, one joint simulation per node.
+    let mut t_peak = 0usize;
+    let mut rounds = 0usize;
+    for node in 0..n_nodes {
+        let base = node * q;
+        match local {
+            LocalAlgo::Tuna { radix } => {
+                assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+                let mut slots: Vec<Vec<u64>> = (0..q)
+                    .map(|g| (0..q).map(|j| slot_bytes(node, g, j)).collect())
+                    .collect();
+                let stats = plan_core(builders, base, 1, q, radix, n_nodes, &mut slots, 0, None);
+                t_peak = stats.t_peak;
+                rounds = stats.rounds;
+            }
+            LocalAlgo::Linear => {
+                for g in 0..q {
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    for j in 1..q {
+                        let dst = base + (g + j) % q;
+                        let src = base + (g + q - j) % q;
+                        b.recv(src, j as u32);
+                        b.send(dst, j as u32, slot_bytes(node, g, j));
+                    }
+                    b.wait();
+                    b.lap(Phase::Data);
+                }
+                t_peak = 0;
+                rounds = 1;
+            }
+        }
+    }
+
+    // Own node's bucket is final: a local copy on every rank.
+    // `bucket_block(me, k, j)` is the size of the j-th (origin-sorted)
+    // block of `me`'s bucket for node `k`.
+    let bucket_block = |me: usize, k: usize, j: usize| {
+        rows[topo.rank_of(topo.node_of(me), j)][topo.rank_of(k, topo.group_rank(me))]
+    };
+    let bucket_sum = |me: usize, k: usize| (0..q).map(|j| bucket_block(me, k, j)).sum::<u64>();
+    for me in 0..p {
+        let b = &mut builders[me];
+        b.mark();
+        b.copy(bucket_sum(me, topo.node_of(me)));
+        b.lap(Phase::Replace);
+    }
+    if n_nodes == 1 {
+        return (t_peak, rounds);
+    }
+
+    // ---- global phase.
+    match global {
+        GlobalAlgo::Coalesced { block_count } => {
+            assert!(block_count >= 1);
+            rounds += n_nodes - 1;
+            for me in 0..p {
+                let my_node = topo.node_of(me);
+                let g = topo.group_rank(me);
+                let b = &mut builders[me];
+                b.mark();
+                let staged: u64 = (0..n_nodes)
+                    .filter(|&k| k != my_node)
+                    .map(|k| bucket_sum(me, k))
+                    .sum();
+                b.copy(staged);
+                b.lap(Phase::Rearrange);
+
+                let mut round = 0usize;
+                while round < n_nodes - 1 {
+                    let batch = block_count.min(n_nodes - 1 - round);
+                    for i in 0..batch {
+                        let off = round + i + 1;
+                        let ndst = (my_node + n_nodes - off) % n_nodes;
+                        let nsrc = (my_node + off) % n_nodes;
+                        let tag = INTER_TAG + off as u32;
+                        b.recv(topo.rank_of(nsrc, g), tag);
+                        b.send(topo.rank_of(ndst, g), tag, bucket_sum(me, ndst));
+                    }
+                    b.wait();
+                    round += batch;
+                }
+                b.lap(Phase::InterNode);
+            }
+        }
+        GlobalAlgo::Staggered { block_count } => {
+            assert!(block_count >= 1);
+            let total_steps = (n_nodes - 1) * q;
+            rounds += total_steps.div_ceil(block_count);
+            for me in 0..p {
+                let my_node = topo.node_of(me);
+                let g = topo.group_rank(me);
+                let b = &mut builders[me];
+                b.mark();
+                let mut step = 0usize;
+                while step < total_steps {
+                    let batch = block_count.min(total_steps - step);
+                    for i in 0..batch {
+                        let idx = step + i;
+                        let off = idx / q + 1;
+                        let j = idx % q;
+                        let ndst = (my_node + n_nodes - off) % n_nodes;
+                        let nsrc = (my_node + off) % n_nodes;
+                        let tag = INTER_TAG + idx as u32;
+                        b.recv(topo.rank_of(nsrc, g), tag);
+                        b.send(topo.rank_of(ndst, g), tag, bucket_block(me, ndst, j));
+                    }
+                    b.wait();
+                    step += batch;
+                }
+                b.lap(Phase::InterNode);
+            }
+        }
+        GlobalAlgo::Linear => {
+            rounds += 1;
+            for me in 0..p {
+                let my_node = topo.node_of(me);
+                let g = topo.group_rank(me);
+                let b = &mut builders[me];
+                b.mark();
+                for off in 1..n_nodes {
+                    let ndst = (my_node + n_nodes - off) % n_nodes;
+                    let nsrc = (my_node + off) % n_nodes;
+                    let tag = INTER_TAG + off as u32;
+                    b.recv(topo.rank_of(nsrc, g), tag);
+                    b.send(topo.rank_of(ndst, g), tag, bucket_sum(me, ndst));
+                }
+                b.wait();
+                b.lap(Phase::InterNode);
+            }
+        }
+        GlobalAlgo::Bruck { radix } => {
+            let radix = radix.min(n_nodes).max(2);
+            // One joint simulation per Q-port group {(k, g) : k}.
+            let mut stats = None;
+            for g in 0..q {
+                let mut node_slots: Vec<Vec<u64>> = (0..n_nodes)
+                    .map(|m| {
+                        (0..n_nodes)
+                            .map(|j| {
+                                if j == 0 {
+                                    0
+                                } else {
+                                    bucket_sum(topo.rank_of(m, g), (m + j) % n_nodes)
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                stats = Some(plan_core(
+                    builders,
+                    g,
+                    q,
+                    n_nodes,
+                    radix,
+                    q,
+                    &mut node_slots,
+                    INTER_TAG,
+                    Some(Phase::InterNode),
+                ));
+            }
+            let stats = stats.expect("Q >= 2 groups compiled");
+            rounds += stats.rounds;
+            t_peak = t_peak.max(stats.t_peak);
+        }
+    }
+    (t_peak, rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::AlgoKind;
+    use crate::comm::{Engine, Topology};
+    use crate::model::MachineProfile;
+    use crate::util::prop::forall;
+    use crate::workload::{BlockSizes, Dist};
+
+    fn run_kind(
+        p: usize,
+        q: usize,
+        kind: AlgoKind,
+        dist: Dist,
+        seed: u64,
+    ) -> crate::algos::RunReport {
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, dist, seed);
+        crate::algos::run_alltoallv(&e, &kind, &sizes, true).expect("hier run must validate")
+    }
+
+    fn run_case(
+        p: usize,
+        q: usize,
+        r: usize,
+        bc: usize,
+        coalesced: bool,
+        dist: Dist,
+        seed: u64,
+    ) -> crate::algos::RunReport {
+        let kind = if coalesced {
+            AlgoKind::hier_coalesced(r, bc)
+        } else {
+            AlgoKind::hier_staggered(r, bc)
+        };
+        run_kind(p, q, kind, dist, seed)
+    }
+
+    #[test]
+    fn coalesced_basic() {
+        run_case(8, 4, 2, 1, true, Dist::Uniform { max: 256 }, 1);
+        run_case(12, 4, 4, 2, true, Dist::Uniform { max: 256 }, 2);
+        run_case(16, 4, 2, 3, true, Dist::Uniform { max: 128 }, 3);
+    }
+
+    #[test]
+    fn staggered_basic() {
+        run_case(8, 4, 2, 1, false, Dist::Uniform { max: 256 }, 1);
+        run_case(12, 4, 3, 5, false, Dist::Uniform { max: 256 }, 2);
+        run_case(16, 4, 4, 64, false, Dist::Uniform { max: 128 }, 3);
+    }
+
+    #[test]
+    fn every_local_global_composition_validates() {
+        let (p, q) = (12usize, 4usize);
+        let n = p / q;
+        let locals = [
+            LocalAlgo::Tuna { radix: 2 },
+            LocalAlgo::Tuna { radix: 4 },
+            LocalAlgo::Linear,
+        ];
+        for local in locals {
+            for global in [
+                GlobalAlgo::Coalesced { block_count: 2 },
+                GlobalAlgo::Staggered { block_count: 3 },
+                GlobalAlgo::Linear,
+                GlobalAlgo::Bruck { radix: 2 },
+                GlobalAlgo::Bruck { radix: n },
+            ] {
+                let kind = AlgoKind::Hier { local, global };
+                let rep = run_kind(p, q, kind, Dist::Uniform { max: 128 }, 5);
+                assert!(rep.validated, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_degenerates_to_local_only() {
+        for local in [LocalAlgo::Tuna { radix: 2 }, LocalAlgo::Linear] {
+            let globals = [
+                GlobalAlgo::Coalesced { block_count: 1 },
+                GlobalAlgo::Bruck { radix: 2 },
+            ];
+            for global in globals {
+                let rep = run_kind(
+                    6,
+                    6,
+                    AlgoKind::Hier { local, global },
+                    Dist::Uniform { max: 64 },
+                    4,
+                );
+                assert!(rep.validated);
+            }
+        }
+    }
+
+    #[test]
+    fn two_ranks_per_node() {
+        run_case(8, 2, 2, 1, true, Dist::Uniform { max: 64 }, 5);
+        run_case(8, 2, 2, 2, false, Dist::Uniform { max: 64 }, 5);
+        run_kind(
+            8,
+            2,
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } },
+            Dist::Uniform { max: 64 },
+            5,
+        );
+    }
+
+    #[test]
+    fn nonuniform_distributions_validate() {
+        for dist in [
+            Dist::normal_default(),
+            Dist::powerlaw_default(),
+            Dist::FftN1,
+            Dist::FftN2,
+        ] {
+            run_case(16, 4, 3, 2, true, dist, 7);
+            run_case(16, 4, 3, 7, false, dist, 7);
+            run_kind(
+                16,
+                4,
+                AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } },
+                dist,
+                7,
+            );
+        }
+    }
+
+    #[test]
+    fn property_random_compositions_validate() {
+        forall("hier compositions validate", 24, |rng| {
+            let q = 2 + rng.next_below(5) as usize; // 2..=6
+            let n = 2 + rng.next_below(4) as usize; // 2..=5 nodes
+            let p = q * n;
+            let kind = random_composition(rng, q, n);
+            let rep = run_kind(p, q, kind, Dist::Uniform { max: 128 }, rng.next_u64());
+            if rep.validated {
+                Ok(())
+            } else {
+                Err(format!("P={p} Q={q} {}", kind.name()))
+            }
+        });
+    }
+
+    #[test]
+    fn coalesced_fewer_inter_messages_than_staggered() {
+        let p = 16;
+        let q = 4;
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, Dist::Const { size: 512 }, 0);
+        let co = crate::algos::run_alltoallv(&e, &AlgoKind::hier_coalesced(2, 1), &sizes, false)
+            .unwrap();
+        let st = crate::algos::run_alltoallv(&e, &AlgoKind::hier_staggered(2, 1), &sizes, false)
+            .unwrap();
+        // Staggered sends Q times as many inter-node data messages: the
+        // difference over coalesced is exactly P * (N-1) * (Q-1) extra
+        // (both also share the prepare-phase allreduce traffic).
+        let n_nodes = p / q;
+        let extra = (p * (n_nodes - 1) * (q - 1)) as u64;
+        assert_eq!(
+            st.counters.msgs_global - co.counters.msgs_global,
+            extra,
+            "staggered {} vs coalesced {} global msgs",
+            st.counters.msgs_global,
+            co.counters.msgs_global
+        );
+        // Both move the same payload bytes across nodes.
+        assert_eq!(st.counters.bytes_global, co.counters.bytes_global);
+    }
+
+    #[test]
+    fn bruck_global_trades_messages_for_forwarded_bytes() {
+        // Log-radix inter-node exchange: fewer node-level messages per
+        // rank than the N-1 of the linear/coalesced schedules, at the
+        // cost of forwarding bucket bytes through intermediate nodes.
+        let p = 32;
+        let q = 4; // N = 8 nodes
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, Dist::Const { size: 256 }, 0);
+        let lin = crate::algos::run_alltoallv(
+            &e,
+            &AlgoKind::Hier { local: LocalAlgo::Tuna { radix: 2 }, global: GlobalAlgo::Linear },
+            &sizes,
+            false,
+        )
+        .unwrap();
+        let brk = crate::algos::run_alltoallv(
+            &e,
+            &AlgoKind::Hier {
+                local: LocalAlgo::Tuna { radix: 2 },
+                global: GlobalAlgo::Bruck { radix: 2 },
+            },
+            &sizes,
+            false,
+        )
+        .unwrap();
+        // log2(8) = 3 rounds of (meta + data) vs 7 one-shot messages:
+        // fewer data messages, more forwarded bytes.
+        assert!(
+            brk.counters.msgs_global < lin.counters.msgs_global,
+            "bruck {} msgs vs linear {}",
+            brk.counters.msgs_global,
+            lin.counters.msgs_global
+        );
+        assert!(
+            brk.counters.bytes_global > lin.counters.bytes_global,
+            "bruck must forward more bytes ({} vs {})",
+            brk.counters.bytes_global,
+            lin.counters.bytes_global
+        );
+    }
+
+    #[test]
+    fn intra_traffic_stays_local() {
+        // All local-phase traffic must be intra-node: with N=2 nodes the
+        // only global messages are inter-node data + the prepare
+        // allreduce.
+        let p = 8;
+        let q = 4;
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, Dist::Const { size: 100 }, 0);
+        for local in [LocalAlgo::Tuna { radix: 2 }, LocalAlgo::Linear] {
+            let rep = crate::algos::run_alltoallv(
+                &e,
+                &AlgoKind::Hier { local, global: GlobalAlgo::Coalesced { block_count: 1 } },
+                &sizes,
+                false,
+            )
+            .unwrap();
+            // Inter-node payload: each rank sends (N-1)=1 message of Q
+            // blocks of 100 B = 400 B; total = 8 * 400 = 3200 data bytes.
+            // Allreduce adds a few 8 B scalars across nodes.
+            let data_global = 8 * 400;
+            assert!(rep.counters.bytes_global >= data_global);
+            assert!(
+                rep.counters.bytes_global <= data_global + 8 * 8 * 4,
+                "unexpected global traffic: {}",
+                rep.counters.bytes_global
+            );
+            assert!(rep.counters.bytes_local > 0);
+        }
+    }
+
+    #[test]
+    fn sub_spec_parsing_round_trips_and_errors() {
+        for local in [LocalAlgo::Tuna { radix: 7 }, LocalAlgo::Linear] {
+            assert_eq!(LocalAlgo::parse(&local.spec()).unwrap(), local);
+        }
+        for global in [
+            GlobalAlgo::Coalesced { block_count: 3 },
+            GlobalAlgo::Staggered { block_count: 9 },
+            GlobalAlgo::Linear,
+            GlobalAlgo::Bruck { radix: 4 },
+        ] {
+            assert_eq!(GlobalAlgo::parse(&global.spec()).unwrap(), global);
+        }
+        assert!(LocalAlgo::parse("tuna").unwrap_err().to_string().contains("`r`"));
+        assert!(GlobalAlgo::parse("coalesced").unwrap_err().to_string().contains("`b`"));
+        assert!(LocalAlgo::parse("nope").is_err());
+        assert!(GlobalAlgo::parse("nope").is_err());
+
+        let (l, g) = split_spec("l=tuna:r=4,g=coalesced:b=2").unwrap();
+        assert_eq!((l.as_str(), g.as_str()), ("tuna:r=4", "coalesced:b=2"));
+        let (l, g) = split_spec("g=linear,l=linear").unwrap();
+        assert_eq!((l.as_str(), g.as_str()), ("linear", "linear"));
+        assert!(split_spec("l=linear").is_err());
+        assert!(split_spec("g=linear").is_err());
+        assert!(split_spec("bogus").is_err());
+        // Duplicate levels are a loud error, never a silent overwrite.
+        let e = split_spec("l=tuna:r=8,l=linear,g=linear").unwrap_err().to_string();
+        assert!(e.contains("duplicate local"), "{e}");
+        let e = split_spec("l=linear,g=linear,g=bruck:r=2").unwrap_err().to_string();
+        assert!(e.contains("duplicate global"), "{e}");
+    }
+}

@@ -12,20 +12,27 @@
 //! | `Vendor` | vendor MPI_Alltoallv proxy (scattered @ default throttle) | — |
 //! | `Bruck2` | two-phase non-uniform Bruck [10] (radix fixed at 2) | log₂P rounds |
 //! | `Tuna` | **TuNA** (Alg. 1): tunable radix, two-phase, tight T | ≤ w(r−1) rounds |
-//! | `TunaHierCoalesced` | **coalesced TuNA_l^g** (Alg. 3) | intra + N−1 |
-//! | `TunaHierStaggered` | **staggered TuNA_l^g** (Alg. 2) | intra + Q(N−1) |
+//! | `Hier` | **composable TuNA_l^g** (§IV): any [`LocalAlgo`] × any [`GlobalAlgo`] | local + global |
+//!
+//! The paper's Algorithms 2 and 3 are the compositions
+//! `hier:l=tuna:r=R,g=staggered:b=B` and `hier:l=tuna:r=R,g=coalesced:b=B`
+//! (their legacy `tuna-hier-staggered:*` / `tuna-hier-coalesced:*` specs
+//! keep parsing as aliases); see [`hier`] for the composition contract
+//! and the full local/global implementation menu.
 //!
 //! All algorithms move [`Block`]s (origin, dest, payload) and must deliver
 //! exactly one block per source to every destination; `run_alltoallv`
 //! validates that against workload fingerprints (and byte patterns when
 //! payloads are real).
 
+pub mod hier;
 pub mod linear;
 pub mod radix;
 pub mod select;
 pub mod tuna;
-pub mod tuna_hier;
 pub mod tuning;
+
+pub use hier::{GlobalAlgo, LocalAlgo};
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -54,11 +61,31 @@ pub enum AlgoKind {
     /// A tuning table attached to the engine ([`Engine::with_tuning`]) is
     /// consulted first; the §V-A heuristic is the fallback.
     TunaAuto,
-    TunaHierCoalesced { radix: usize, block_count: usize },
-    TunaHierStaggered { radix: usize, block_count: usize },
+    /// Composable two-level hierarchy (TuNA_l^g, §IV): any intra-node
+    /// algorithm paired with any inter-node algorithm. See [`hier`] for
+    /// the composition contract and the implementation menu.
+    Hier { local: LocalAlgo, global: GlobalAlgo },
 }
 
 impl AlgoKind {
+    /// The paper's coalesced TuNA_l^g (Alg. 3) as a composition — the
+    /// legacy `tuna-hier-coalesced:r=R,b=B` pairing.
+    pub fn hier_coalesced(radix: usize, block_count: usize) -> AlgoKind {
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix },
+            global: GlobalAlgo::Coalesced { block_count },
+        }
+    }
+
+    /// The paper's staggered TuNA_l^g (Alg. 2) as a composition — the
+    /// legacy `tuna-hier-staggered:r=R,b=B` pairing.
+    pub fn hier_staggered(radix: usize, block_count: usize) -> AlgoKind {
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix },
+            global: GlobalAlgo::Staggered { block_count },
+        }
+    }
+
     pub fn name(&self) -> String {
         match self {
             AlgoKind::SpreadOut => "spread-out".into(),
@@ -69,11 +96,8 @@ impl AlgoKind {
             AlgoKind::Bruck2 => "bruck2-nonuniform".into(),
             AlgoKind::Tuna { radix } => format!("tuna(r={radix})"),
             AlgoKind::TunaAuto => "tuna(r=auto)".into(),
-            AlgoKind::TunaHierCoalesced { radix, block_count } => {
-                format!("tuna-hier-coalesced(r={radix},b={block_count})")
-            }
-            AlgoKind::TunaHierStaggered { radix, block_count } => {
-                format!("tuna-hier-staggered(r={radix},b={block_count})")
+            AlgoKind::Hier { local, global } => {
+                format!("hier(l={},g={})", local.name(), global.name())
             }
         }
     }
@@ -88,14 +112,16 @@ impl AlgoKind {
             AlgoKind::Vendor => "vendor",
             AlgoKind::Bruck2 => "bruck2",
             AlgoKind::Tuna { .. } | AlgoKind::TunaAuto => "tuna",
-            AlgoKind::TunaHierCoalesced { .. } => "tuna-hier-coalesced",
-            AlgoKind::TunaHierStaggered { .. } => "tuna-hier-staggered",
+            AlgoKind::Hier { global, .. } => global.family(),
         }
     }
 
     /// Parse `"tuna:r=4"`, `"tuna:auto"`, `"scattered:b=16"`,
-    /// `"tuna-hier-coalesced:r=4,b=8"`, `"spread-out"`, ... Errors name
-    /// the missing or invalid parameter instead of failing silently.
+    /// `"hier:l=tuna:r=4,g=coalesced:b=8"`, `"spread-out"`, ... The
+    /// legacy hierarchy specs (`"tuna-hier-coalesced:r=4,b=8"`,
+    /// `"tuna-hier-staggered:r=4,b=8"`) keep parsing as aliases for the
+    /// equivalent composition. Errors name the missing or invalid
+    /// parameter instead of failing silently.
     pub fn parse(s: &str) -> Result<AlgoKind> {
         let (head, args) = match s.split_once(':') {
             Some((h, a)) => (h, a),
@@ -129,14 +155,15 @@ impl AlgoKind {
                 "auto" | "r=auto" => Ok(AlgoKind::TunaAuto),
                 _ => Ok(AlgoKind::Tuna { radix: get("r")? }),
             },
-            "tuna-hier-coalesced" => Ok(AlgoKind::TunaHierCoalesced {
-                radix: get("r")?,
-                block_count: get("b")?,
-            }),
-            "tuna-hier-staggered" => Ok(AlgoKind::TunaHierStaggered {
-                radix: get("r")?,
-                block_count: get("b")?,
-            }),
+            "hier" => {
+                let (l, g) = hier::split_spec(args)?;
+                Ok(AlgoKind::Hier {
+                    local: LocalAlgo::parse(&l)?,
+                    global: GlobalAlgo::parse(&g)?,
+                })
+            }
+            "tuna-hier-coalesced" => Ok(AlgoKind::hier_coalesced(get("r")?, get("b")?)),
+            "tuna-hier-staggered" => Ok(AlgoKind::hier_staggered(get("r")?, get("b")?)),
             other => Err(TunaError::config(format!(
                 "unknown algorithm `{other}` (see `tuna list`)"
             ))),
@@ -155,11 +182,8 @@ impl AlgoKind {
             AlgoKind::Bruck2 => "bruck2".into(),
             AlgoKind::Tuna { radix } => format!("tuna:r={radix}"),
             AlgoKind::TunaAuto => "tuna:auto".into(),
-            AlgoKind::TunaHierCoalesced { radix, block_count } => {
-                format!("tuna-hier-coalesced:r={radix},b={block_count}")
-            }
-            AlgoKind::TunaHierStaggered { radix, block_count } => {
-                format!("tuna-hier-staggered:r={radix},b={block_count}")
+            AlgoKind::Hier { local, global } => {
+                format!("hier:l={},g={}", local.spec(), global.spec())
             }
         }
     }
@@ -177,17 +201,9 @@ impl AlgoKind {
             AlgoKind::Tuna { radix } if radix > p.max(2) => {
                 bad(format!("tuna: radix {radix} > P={p}"))
             }
-            AlgoKind::TunaHierCoalesced { radix, block_count }
-            | AlgoKind::TunaHierStaggered { radix, block_count } => {
-                if q < 2 {
-                    bad(format!("hierarchical TuNA needs Q >= 2 ranks per node, got {q}"))
-                } else if radix < 2 || radix > q {
-                    bad(format!("hierarchical TuNA: radix {radix} outside [2, Q={q}]"))
-                } else if block_count == 0 {
-                    bad("hierarchical TuNA: block_count must be >= 1".into())
-                } else {
-                    Ok(())
-                }
+            AlgoKind::Hier { ref local, ref global } => {
+                let n = if q >= 1 { p / q } else { 0 };
+                hier::check(local, global, p, q, n)
             }
             _ => Ok(()),
         }
@@ -228,12 +244,7 @@ impl AlgoKind {
                     .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
                 tuna::run(ctx, blocks, radix)
             }
-            AlgoKind::TunaHierCoalesced { radix, block_count } => {
-                tuna_hier::run(ctx, blocks, radix, block_count, true)
-            }
-            AlgoKind::TunaHierStaggered { radix, block_count } => {
-                tuna_hier::run(ctx, blocks, radix, block_count, false)
-            }
+            AlgoKind::Hier { local, global } => hier::run(ctx, blocks, local, global),
         }
     }
 }
@@ -525,11 +536,8 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
                 .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
             tuna::plan_into(&mut builders, sizes, radix)
         }
-        AlgoKind::TunaHierCoalesced { radix, block_count } => {
-            tuna_hier::plan_into(&mut builders, sizes, topo, radix, block_count, true)
-        }
-        AlgoKind::TunaHierStaggered { radix, block_count } => {
-            tuna_hier::plan_into(&mut builders, sizes, topo, radix, block_count, false)
+        AlgoKind::Hier { local, global } => {
+            hier::plan_into(&mut builders, sizes, topo, local, global)
         }
     };
     Ok(CommPlan {
@@ -585,13 +593,33 @@ mod tests {
         assert_eq!(AlgoKind::parse("tuna:auto").unwrap(), AlgoKind::TunaAuto);
         assert_eq!(AlgoKind::parse("tuna:r=auto").unwrap(), AlgoKind::TunaAuto);
         assert_eq!(
+            AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap(),
+            AlgoKind::hier_coalesced(4, 2)
+        );
+        assert_eq!(
+            AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(),
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } }
+        );
+        assert_eq!(
+            AlgoKind::parse("hier:g=linear,l=tuna:r=4").unwrap(),
+            AlgoKind::Hier { local: LocalAlgo::Tuna { radix: 4 }, global: GlobalAlgo::Linear }
+        );
+    }
+
+    #[test]
+    fn legacy_hier_specs_parse_as_composition_aliases() {
+        assert_eq!(
             AlgoKind::parse("tuna-hier-coalesced:r=4,b=2").unwrap(),
-            AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 }
+            AlgoKind::hier_coalesced(4, 2)
         );
         assert_eq!(
             AlgoKind::parse("tuna-hier-staggered:b=2,r=4").unwrap(),
-            AlgoKind::TunaHierStaggered { radix: 4, block_count: 2 }
+            AlgoKind::hier_staggered(4, 2)
         );
+        // The alias round-trips through the *new* canonical spec.
+        let k = AlgoKind::parse("tuna-hier-coalesced:r=4,b=2").unwrap();
+        assert_eq!(k.spec(), "hier:l=tuna:r=4,g=coalesced:b=2");
+        assert_eq!(AlgoKind::parse(&k.spec()).unwrap(), k);
     }
 
     #[test]
@@ -607,6 +635,15 @@ mod tests {
         assert!(e.contains("invalid value `zero`"), "{e}");
         let e = AlgoKind::parse("nope").unwrap_err().to_string();
         assert!(e.contains("unknown algorithm `nope`"), "{e}");
+        // Composition errors name the level and the parameter.
+        let e = AlgoKind::parse("hier:l=tuna:r=4").unwrap_err().to_string();
+        assert!(e.contains("missing global level"), "{e}");
+        let e = AlgoKind::parse("hier:g=linear").unwrap_err().to_string();
+        assert!(e.contains("missing local level"), "{e}");
+        let e = AlgoKind::parse("hier:l=tuna,g=linear").unwrap_err().to_string();
+        assert!(e.contains("missing parameter `r`"), "{e}");
+        let e = AlgoKind::parse("hier:l=linear,g=zig").unwrap_err().to_string();
+        assert!(e.contains("unknown global algorithm `zig`"), "{e}");
     }
 
     #[test]
@@ -620,8 +657,15 @@ mod tests {
             AlgoKind::Bruck2,
             AlgoKind::Tuna { radix: 5 },
             AlgoKind::TunaAuto,
-            AlgoKind::TunaHierCoalesced { radix: 3, block_count: 2 },
-            AlgoKind::TunaHierStaggered { radix: 4, block_count: 9 },
+            AlgoKind::hier_coalesced(3, 2),
+            AlgoKind::hier_staggered(4, 9),
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear },
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 3 } },
+            AlgoKind::Hier { local: LocalAlgo::Tuna { radix: 2 }, global: GlobalAlgo::Linear },
+            AlgoKind::Hier {
+                local: LocalAlgo::Tuna { radix: 6 },
+                global: GlobalAlgo::Bruck { radix: 4 },
+            },
         ] {
             assert_eq!(AlgoKind::parse(&kind.spec()).unwrap(), kind, "{}", kind.spec());
         }
@@ -630,9 +674,13 @@ mod tests {
     #[test]
     fn names_include_params() {
         assert_eq!(AlgoKind::Tuna { radix: 4 }.name(), "tuna(r=4)");
-        assert!(AlgoKind::TunaHierCoalesced { radix: 2, block_count: 8 }
-            .name()
-            .contains("r=2,b=8"));
+        let n = AlgoKind::hier_coalesced(2, 8).name();
+        assert!(n.contains("tuna(r=2)") && n.contains("coalesced(b=8)"), "{n}");
+        assert_eq!(
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } }
+                .name(),
+            "hier(l=linear,g=bruck(r=2))"
+        );
     }
 
     #[test]
@@ -641,15 +689,22 @@ mod tests {
         assert!(AlgoKind::Tuna { radix: 9 }.check(8, 2).is_err());
         assert!(AlgoKind::Tuna { radix: 8 }.check(8, 2).is_ok());
         assert!(AlgoKind::Scattered { block_count: 0 }.check(8, 2).is_err());
-        assert!(AlgoKind::TunaHierCoalesced { radix: 4, block_count: 1 }
-            .check(8, 2)
-            .is_err()); // radix > Q
-        assert!(AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 }
+        assert!(AlgoKind::hier_coalesced(4, 1).check(8, 2).is_err()); // radix > Q
+        assert!(AlgoKind::hier_coalesced(2, 1).check(8, 1).is_err()); // Q < 2
+        assert!(AlgoKind::hier_coalesced(2, 0).check(8, 2).is_err()); // bc = 0
+        assert!(AlgoKind::hier_staggered(2, 1).check(8, 4).is_ok());
+        // Compositions validate level by level.
+        let lin_bruck = |r: usize| AlgoKind::Hier {
+            local: LocalAlgo::Linear,
+            global: GlobalAlgo::Bruck { radix: r },
+        };
+        assert!(lin_bruck(2).check(8, 2).is_ok()); // N = 4
+        assert!(lin_bruck(4).check(8, 2).is_ok()); // radix = N
+        assert!(lin_bruck(5).check(8, 2).is_err()); // radix > N
+        assert!(lin_bruck(1).check(8, 2).is_err()); // radix < 2
+        assert!(AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear }
             .check(8, 1)
-            .is_err()); // Q < 2
-        assert!(AlgoKind::TunaHierStaggered { radix: 2, block_count: 1 }
-            .check(8, 4)
-            .is_ok());
+            .is_err()); // Q < 2 still rejected
     }
 
     #[test]
@@ -740,7 +795,11 @@ mod tests {
         for kind in [
             AlgoKind::SpreadOut,
             AlgoKind::Tuna { radix: 3 },
-            AlgoKind::TunaHierCoalesced { radix: 2, block_count: 2 },
+            AlgoKind::hier_coalesced(2, 2),
+            AlgoKind::Hier {
+                local: LocalAlgo::Linear,
+                global: GlobalAlgo::Bruck { radix: 2 },
+            },
         ] {
             let a = compile_plan(&e, &kind, &sizes).unwrap();
             let b = compile_plan(&e, &kind, &again).unwrap();

@@ -41,27 +41,41 @@ pub(crate) struct CoreOutcome {
     pub stats: AlgoStats,
 }
 
-/// Run the TuNA slot engine over the contiguous rank group
-/// `[base, base+q)`. `slots[j]` is this rank's initial content for group
-/// offset `j` (`slots[0]` is the self slot and never moves); every slot
-/// must hold exactly `arity` sub-blocks (1 for flat TuNA, N for the
-/// intra-node phase of TuNA_l^g). `tag_base` reserves `2 * K` tags. Phase
-/// time is attributed to Metadata / Data / Replace; the caller owns
-/// Prepare.
+/// Run the TuNA slot engine over the strided rank group
+/// `{base + i * stride : i in 0..q}`. `slots[j]` is this rank's initial
+/// content for group offset `j` (`slots[0]` is the self slot and never
+/// moves); every *moving* slot must hold exactly `arity` sub-blocks (1
+/// for flat TuNA, N for the intra-node phase of TuNA_l^g, Q for the
+/// inter-node Bruck phase, whose groups are the stride-Q "same group
+/// rank" port sets). `tag_base` reserves `2 * K` tags. Phase time is
+/// attributed to Metadata / Data / Replace, or — when `lap` is set —
+/// entirely to that one phase (the inter-node Bruck exchange charges
+/// [`Phase::InterNode`] so compositions stay comparable per phase); the
+/// caller owns Prepare.
 pub(crate) fn tuna_core(
     ctx: &mut RankCtx,
     base: usize,
+    stride: usize,
     q: usize,
     radix_r: usize,
     arity: usize,
     mut slots: Vec<SlotContent>,
     tag_base: u32,
+    lap: Option<Phase>,
 ) -> CoreOutcome {
     assert_eq!(slots.len(), q, "need one slot per group offset");
     assert!(radix_r >= 2);
+    assert!(stride >= 1);
+    let (ph_meta, ph_data, ph_replace) = match lap {
+        None => (Phase::Metadata, Phase::Data, Phase::Replace),
+        Some(ph) => (ph, ph, ph),
+    };
     let me = ctx.rank();
-    debug_assert!(me >= base && me < base + q, "rank outside group");
-    let my_g = me - base;
+    debug_assert!(
+        me >= base && (me - base) % stride == 0 && (me - base) / stride < q,
+        "rank outside group"
+    );
+    let my_g = (me - base) / stride;
 
     let schedule: Vec<Round> = radix::rounds(radix_r, q);
     let k = schedule.len();
@@ -74,8 +88,8 @@ pub(crate) fn tuna_core(
     let mut t_peak = 0usize;
 
     for (round_idx, rd) in schedule.iter().enumerate() {
-        let dst = base + (my_g + rd.step) % q;
-        let src = base + (my_g + q - rd.step) % q;
+        let dst = base + ((my_g + rd.step) % q) * stride;
+        let src = base + ((my_g + q - rd.step) % q) * stride;
         let meta_tag = tag_base + 2 * round_idx as u32;
         let data_tag = meta_tag + 1;
 
@@ -95,7 +109,7 @@ pub(crate) fn tuna_core(
         let ms = ctx.isend(dst, meta_tag, Payload::Meta(out_meta));
         let mr = ctx.irecv(src, meta_tag);
         let in_meta = ctx.waitall(&[ms], &[mr]).pop().unwrap().into_meta();
-        ctx.phase_lap(Phase::Metadata);
+        ctx.phase_lap(ph_meta);
 
         // ---- phase 2: data ----------------------------------------------
         // Pack moving slots into the send buffer (charged as Replace, the
@@ -112,7 +126,7 @@ pub(crate) fn tuna_core(
             out_blocks.extend(content);
         }
         ctx.copy(sent_foreign_bytes); // pack into send buffer
-        ctx.phase_lap(Phase::Replace);
+        ctx.phase_lap(ph_replace);
 
         let ds = ctx.isend(dst, data_tag, Payload::Blocks(out_blocks));
         let dr = ctx.irecv(src, data_tag);
@@ -122,7 +136,7 @@ pub(crate) fn tuna_core(
             .iter()
             .zip(in_meta.iter())
             .all(|(b, &m)| b.len() == m));
-        ctx.phase_lap(Phase::Data);
+        ctx.phase_lap(ph_data);
 
         // Unpack: contents land in the same slot indices they left at the
         // sender. A slot is final once its top digit's round has passed.
@@ -157,7 +171,7 @@ pub(crate) fn tuna_core(
         }
         debug_assert!(iter.next().is_none());
         ctx.copy(recv_bytes); // store into T / R
-        ctx.phase_lap(Phase::Replace);
+        ctx.phase_lap(ph_replace);
     }
     debug_assert_eq!(t_now, 0, "T must drain by the last round");
 
@@ -197,7 +211,7 @@ pub fn run(ctx: &mut RankCtx, blocks: Vec<Block>, radix_r: usize) -> (Vec<Block>
         })
         .collect();
 
-    let out = tuna_core(ctx, 0, p, radix_r, 1, slots, 0);
+    let out = tuna_core(ctx, 0, 1, p, radix_r, 1, slots, 0, None);
 
     // Self block delivery is a local copy.
     ctx.phase_mark();
@@ -227,23 +241,32 @@ pub(crate) struct CorePlanStats {
     pub rounds: usize,
 }
 
-/// Compile [`tuna_core`] for every rank of the contiguous group
-/// `[base, base+q)` — a joint size-only simulation: `slots[g][j]` holds
-/// the *total* bytes of group-rank `g`'s slot `j` (its `arity` sub-blocks
-/// travel wholesale, so per-sub-block sizes are never needed here) and is
-/// rotated through the group exactly as the slot exchange moves contents.
-/// Ops are emitted per rank in the same order `tuna_core` charges them.
+/// Compile [`tuna_core`] for every rank of the strided group
+/// `{base + i * stride : i in 0..q}` — a joint size-only simulation:
+/// `slots[g][j]` holds the *total* bytes of group-rank `g`'s slot `j`
+/// (its `arity` sub-blocks travel wholesale, so per-sub-block sizes are
+/// never needed here) and is rotated through the group exactly as the
+/// slot exchange moves contents. Ops are emitted per rank in the same
+/// order `tuna_core` charges them, including the same `lap` phase
+/// mapping.
 pub(crate) fn plan_core(
     builders: &mut [PlanBuilder],
     base: usize,
+    stride: usize,
     q: usize,
     radix_r: usize,
     arity: usize,
     slots: &mut [Vec<u64>],
     tag_base: u32,
+    lap: Option<Phase>,
 ) -> CorePlanStats {
     assert_eq!(slots.len(), q, "need one slot row per group rank");
     assert!(radix_r >= 2);
+    assert!(stride >= 1);
+    let (ph_meta, ph_data, ph_replace) = match lap {
+        None => (Phase::Metadata, Phase::Data, Phase::Replace),
+        Some(ph) => (ph, ph, ph),
+    };
     let schedule: Vec<Round> = radix::rounds(radix_r, q);
 
     // T occupancy evolves identically on every rank of the group.
@@ -264,23 +287,23 @@ pub(crate) fn plan_core(
             .collect();
 
         for g in 0..q {
-            let b = &mut builders[base + g];
-            let dst = base + (g + rd.step) % q;
+            let b = &mut builders[base + g * stride];
+            let dst = base + ((g + rd.step) % q) * stride;
             let src_g = (g + q - rd.step) % q;
-            let src = base + src_g;
+            let src = base + src_g * stride;
             b.mark();
             b.send(dst, meta_tag, meta_bytes);
             b.recv(src, meta_tag);
             b.wait();
-            b.lap(Phase::Metadata);
+            b.lap(ph_meta);
             b.copy(out_bytes[g]); // pack into send buffer
-            b.lap(Phase::Replace);
+            b.lap(ph_replace);
             b.send(dst, data_tag, out_bytes[g]);
             b.recv(src, data_tag);
             b.wait();
-            b.lap(Phase::Data);
+            b.lap(ph_data);
             b.copy(out_bytes[src_g]); // store incoming into T / R
-            b.lap(Phase::Replace);
+            b.lap(ph_replace);
         }
 
         // Rotate the moving slot contents one step through the group and
@@ -339,7 +362,7 @@ pub(crate) fn plan_into(
         })
         .collect();
 
-    let stats = plan_core(builders, 0, p, radix_r, 1, &mut slots, 0);
+    let stats = plan_core(builders, 0, 1, p, radix_r, 1, &mut slots, 0, None);
 
     // Self-block delivery is a local copy (slot 0 never moves).
     for (me, b) in builders.iter_mut().enumerate() {

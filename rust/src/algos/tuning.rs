@@ -86,7 +86,8 @@ pub fn autotune_tuna(engine: &Engine, sizes: &BlockSizes) -> crate::Result<TuneR
     sweep(engine, sizes, &candidates)
 }
 
-/// Pick the best (radix, block_count) for hierarchical TuNA.
+/// Pick the best (local radix, block_count) for the paper's TuNA-local
+/// hierarchy pairings (coalesced = Alg. 3, staggered = Alg. 2).
 pub fn autotune_hier(
     engine: &Engine,
     sizes: &BlockSizes,
@@ -99,9 +100,9 @@ pub fn autotune_hier(
     for radix in radix_candidates(q).into_iter().filter(|&r| r <= q) {
         for bc in block_count_candidates(bc_max) {
             candidates.push(if coalesced {
-                AlgoKind::TunaHierCoalesced { radix, block_count: bc }
+                AlgoKind::hier_coalesced(radix, bc)
             } else {
-                AlgoKind::TunaHierStaggered { radix, block_count: bc }
+                AlgoKind::hier_staggered(radix, bc)
             });
         }
     }
@@ -170,7 +171,7 @@ pub struct TuningEntry {
 /// ```text
 /// # tuna-tuning-table v1
 /// # machine  p  q  dist  mean_block  rank  algo  model_time  measured_time
-/// fugaku  256  32  uniform  2.56e2  1  tuna-hier-coalesced:r=2,b=1  1.1e-4  1.2e-4
+/// fugaku  256  32  uniform  2.56e2  1  hier:l=tuna:r=2,g=coalesced:b=1  1.1e-4  1.2e-4
 /// ```
 #[derive(Clone, Debug, Default)]
 pub struct TuningTable {
@@ -396,7 +397,11 @@ mod tests {
         let sizes = BlockSizes::generate(16, Dist::Uniform { max: 256 }, 1);
         let res = autotune_hier(&e, &sizes, true).unwrap();
         for (kind, _) in &res.sweep {
-            if let AlgoKind::TunaHierCoalesced { radix, block_count } = kind {
+            if let AlgoKind::Hier {
+                local: crate::algos::LocalAlgo::Tuna { radix },
+                global: crate::algos::GlobalAlgo::Coalesced { block_count },
+            } = kind
+            {
                 assert!(*radix <= 4);
                 assert!(*block_count <= 3); // N-1 = 3
             } else {
@@ -421,7 +426,7 @@ mod tests {
 
     #[test]
     fn table_roundtrips_through_tsv() {
-        let hier = AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 };
+        let hier = AlgoKind::hier_coalesced(2, 1);
         let t = TuningTable {
             entries: vec![
                 entry("fugaku", 256, 256.0, 1, hier),

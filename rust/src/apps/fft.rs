@@ -569,7 +569,7 @@ mod tests {
             2,
             16,
             15,
-            &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+            &AlgoKind::hier_coalesced(2, 1),
             FftBackend::Naive,
         )
         .unwrap();

@@ -258,7 +258,7 @@ mod tests {
         for kind in [
             AlgoKind::SpreadOut,
             AlgoKind::Tuna { radix: 4 },
-            AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+            AlgoKind::hier_coalesced(2, 1),
         ] {
             let rep = run_tc(&engine(8, 4), &kind, &g, true).unwrap();
             assert!(rep.paths > 0, "{kind:?}");

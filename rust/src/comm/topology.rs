@@ -5,6 +5,7 @@
 //! `g = p % Q` — the same block mapping MPI launchers use by default and
 //! the one Algorithms 2/3 assume.
 
+use crate::error::{Result, TunaError};
 use crate::model::Link;
 
 /// Rank layout: `p` total ranks, `q` per node.
@@ -15,16 +16,38 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Create a layout. `q` must divide `p` (the paper always runs full
-    /// nodes; partial nodes would change the Q-port math of TuNA_l^g).
+    /// Create a layout, surfacing invalid shapes (no ranks, `q = 0`,
+    /// `q ∤ p`) as typed configuration errors instead of panics — this is
+    /// what `RunConfig::validate` and the programmatic entry points call,
+    /// so a bad topology fails at config validation rather than killing
+    /// rank threads mid-run. `q` must divide `p` (the paper always runs
+    /// full nodes; partial nodes would change the Q-port math of
+    /// TuNA_l^g).
+    pub fn try_new(p: usize, q: usize) -> Result<Topology> {
+        if p < 1 {
+            return Err(TunaError::config("topology: need at least one rank"));
+        }
+        if q < 1 {
+            return Err(TunaError::config(
+                "topology: need at least one rank per node (q >= 1)",
+            ));
+        }
+        if p % q != 0 {
+            return Err(TunaError::config(format!(
+                "topology: ranks per node ({q}) must divide total ranks ({p})"
+            )));
+        }
+        Ok(Topology { p, q })
+    }
+
+    /// Infallible constructor for call sites whose shape is already
+    /// validated (tests, fixed grids). Panics with the
+    /// [`Topology::try_new`] error message on an invalid shape.
     pub fn new(p: usize, q: usize) -> Topology {
-        assert!(p >= 1, "need at least one rank");
-        assert!(q >= 1, "need at least one rank per node");
-        assert!(
-            p % q == 0,
-            "ranks per node ({q}) must divide total ranks ({p})"
-        );
-        Topology { p, q }
+        match Topology::try_new(p, q) {
+            Ok(t) => t,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Every rank on its own node (all communication inter-node).
@@ -125,5 +148,16 @@ mod tests {
     #[should_panic(expected = "must divide")]
     fn rejects_partial_nodes() {
         Topology::new(10, 4);
+    }
+
+    #[test]
+    fn try_new_surfaces_typed_config_errors() {
+        let e = Topology::try_new(10, 4).unwrap_err().to_string();
+        assert!(e.contains("configuration") && e.contains("must divide"), "{e}");
+        let e = Topology::try_new(8, 0).unwrap_err().to_string();
+        assert!(e.contains("rank per node"), "{e}");
+        let e = Topology::try_new(0, 1).unwrap_err().to_string();
+        assert!(e.contains("at least one rank"), "{e}");
+        assert_eq!(Topology::try_new(8, 4).unwrap(), Topology::new(8, 4));
     }
 }

@@ -117,12 +117,11 @@ impl RunConfig {
         if self.p < 2 {
             return Err(TunaError::config("need at least 2 ranks"));
         }
-        if self.q == 0 || self.p % self.q != 0 {
-            return Err(TunaError::config(format!(
-                "q={} must divide p={}",
-                self.q, self.p
-            )));
-        }
+        // Topology shape errors (q = 0, q ∤ p) surface here as typed
+        // config errors — the same check every engine construction path
+        // goes through (`Topology::try_new`), so they can never reach a
+        // rank-thread panic.
+        crate::comm::Topology::try_new(self.p, self.q)?;
         if self.iters == 0 {
             return Err(TunaError::config("iters must be >= 1"));
         }

@@ -116,7 +116,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
              set real=false or mode=threaded",
         ));
     }
-    let topo = Topology::new(cfg.p, cfg.q);
+    let topo = Topology::try_new(cfg.p, cfg.q)?;
     match choose_fidelity(kind, cfg.p, cfg) {
         fidelity @ (Fidelity::Engine | Fidelity::Replay) => {
             let engine = Engine::new(cfg.profile.clone(), topo).with_tuning(cfg.tuning.clone());
@@ -204,7 +204,7 @@ mod tests {
         for kind in [
             AlgoKind::Tuna { radix: 3 },
             AlgoKind::SpreadOut,
-            AlgoKind::TunaHierStaggered { radix: 2, block_count: 3 },
+            AlgoKind::hier_staggered(2, 3),
         ] {
             let a = measure(&threaded, &kind).unwrap();
             let b = measure(&replay, &kind).unwrap();
@@ -302,6 +302,17 @@ mod tests {
     fn measure_rejects_invalid_params() {
         let c = cfg(16, 4);
         assert!(measure(&c, &AlgoKind::Tuna { radix: 99 }).is_err());
+    }
+
+    #[test]
+    fn measure_surfaces_bad_topology_as_config_error() {
+        // q ∤ p and q = 0 must come back as typed config errors from the
+        // shared Topology::try_new check — never a rank-thread panic.
+        for (p, q) in [(10usize, 4usize), (8, 0)] {
+            let c = RunConfig { p, q, ..RunConfig::default() };
+            let err = measure(&c, &AlgoKind::SpreadOut).unwrap_err().to_string();
+            assert!(err.contains("configuration"), "P={p} Q={q}: {err}");
+        }
     }
 
     #[test]

@@ -6,12 +6,14 @@
 
 use super::boxplot::{box_cells, sweep_box, BOX_HEADER};
 use super::FigOpts;
-use crate::algos::{select, tuning, AlgoKind};
+use crate::algos::{select, tuning, AlgoKind, GlobalAlgo, LocalAlgo};
 use crate::comm::{Phase, Topology};
 use crate::util::table::{cell_f, Table};
 use crate::workload::BlockSizes;
 
-/// Candidate (radix, block_count) grid for one hier variant.
+/// Candidate (local radix, block_count) grid for one of the paper's two
+/// TuNA-local hierarchy pairings (coalesced = Alg. 3, staggered =
+/// Alg. 2).
 pub fn hier_candidates(q: usize, n: usize, coalesced: bool) -> Vec<AlgoKind> {
     let bc_max = if coalesced {
         (n - 1).max(1)
@@ -22,9 +24,9 @@ pub fn hier_candidates(q: usize, n: usize, coalesced: bool) -> Vec<AlgoKind> {
     for radix in tuning::radix_candidates(q).into_iter().filter(|&r| r <= q) {
         for bc in tuning::block_count_candidates(bc_max) {
             out.push(if coalesced {
-                AlgoKind::TunaHierCoalesced { radix, block_count: bc }
+                AlgoKind::hier_coalesced(radix, bc)
             } else {
-                AlgoKind::TunaHierStaggered { radix, block_count: bc }
+                AlgoKind::hier_staggered(radix, bc)
             });
         }
     }
@@ -56,10 +58,12 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
                     let candidates = hier_candidates(q, n, coalesced);
                     let sb = sweep_box(&cfg, &candidates)?;
                     let params = |kind: &AlgoKind| match *kind {
-                        AlgoKind::TunaHierCoalesced { radix, block_count }
-                        | AlgoKind::TunaHierStaggered { radix, block_count } => {
-                            (radix, block_count)
-                        }
+                        AlgoKind::Hier {
+                            local: LocalAlgo::Tuna { radix },
+                            global:
+                                GlobalAlgo::Coalesced { block_count }
+                                | GlobalAlgo::Staggered { block_count },
+                        } => (radix, block_count),
                         _ => unreachable!(),
                     };
                     let (ideal_r, ideal_bc) = params(&sb.best);

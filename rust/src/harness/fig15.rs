@@ -41,7 +41,7 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
             let algos = [
                 AlgoKind::Vendor,
                 AlgoKind::Tuna { radix: 4.min(p) },
-                AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+                AlgoKind::hier_coalesced(2, 1),
             ];
             let mut vendor_comm = None;
             for kind in algos {

@@ -17,8 +17,12 @@
 //!   tuna select p=256 q=32 dist=uniform:512 shortlist=8
 //!   tuna select --write-golden
 //!   tuna tune p=256 q=32 dist=uniform:512
-//!   tuna tc p=8 q=4 algo=tuna-hier-coalesced:r=2,b=1
+//!   tuna tc p=8 q=4 algo=hier:l=tuna:r=2,g=coalesced:b=1
 //!   tuna fft n1=64 n2=64 p=8 algo=tuna:r=4
+
+// Mirrors the lib's deliberate style allows (bin crates do not inherit
+// the library's inner attributes); CI enforces `clippy -- -D warnings`.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use std::path::Path;
 
@@ -91,8 +95,11 @@ SELECT KEYS: shortlist (engine-refined candidates, default 6),
   under a heavy-tailed companion workload), top (rows printed),
   table-dir, golden-dir
 ALGO SPECS: spread-out | ompi-linear | pairwise | scattered:b=N | vendor |
-  bruck2 | tuna:r=N | tuna:auto | tuna-hier-coalesced:r=N,b=M |
-  tuna-hier-staggered:r=N,b=M
+  bruck2 | tuna:r=N | tuna:auto | hier:l=<local>,g=<global>
+  hier locals:  tuna:r=N | linear
+  hier globals: coalesced:b=N | staggered:b=N | linear | bruck:r=N
+  (legacy aliases: tuna-hier-coalesced:r=N,b=M = hier:l=tuna:r=N,g=coalesced:b=M,
+   tuna-hier-staggered:r=N,b=M = hier:l=tuna:r=N,g=staggered:b=M)
 ";
 
 /// Split `algo=` / figure-local keys from RunConfig keys.
@@ -350,7 +357,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
         let family = sc.kind.family();
         if !seen.contains(&family) {
             seen.push(family);
-            println!("  best {:<20} {} at {}", family, sc.kind.name(), fmt_time(sc.time()));
+            println!("  best {family:<20} {} at {}", sc.kind.name(), fmt_time(sc.time()));
         }
     }
     let heur = algos::tuning::heuristic_radix(cfg.p, mean);
@@ -456,8 +463,9 @@ fn cmd_list() -> Result<()> {
         "bruck2",
         "tuna:r=N",
         "tuna:auto",
-        "tuna-hier-coalesced:r=N,b=M",
-        "tuna-hier-staggered:r=N,b=M",
+        "hier:l=<tuna:r=N|linear>,g=<coalesced:b=N|staggered:b=N|linear|bruck:r=N>",
+        "tuna-hier-coalesced:r=N,b=M (alias for hier:l=tuna:r=N,g=coalesced:b=M)",
+        "tuna-hier-staggered:r=N,b=M (alias for hier:l=tuna:r=N,g=staggered:b=M)",
     ] {
         println!("  {a}");
     }

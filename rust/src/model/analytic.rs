@@ -10,7 +10,7 @@
 //! distributions are run on the engine instead). Validated against the
 //! engine in `tests/analytic_vs_engine.rs` — see DESIGN.md §6 (4).
 
-use crate::algos::{radix, tuning, AlgoKind, VENDOR_BLOCK_COUNT};
+use crate::algos::{radix, tuning, AlgoKind, GlobalAlgo, LocalAlgo, VENDOR_BLOCK_COUNT};
 use crate::comm::clock::Clock;
 use crate::comm::{Phase, PhaseBreakdown, Topology};
 use crate::model::{Link, MachineProfile};
@@ -47,12 +47,7 @@ impl<'a> Estimator<'a> {
             AlgoKind::TunaAuto => {
                 self.tuna(mean_block, tuning::heuristic_radix(self.topo.p(), mean_block))
             }
-            AlgoKind::TunaHierCoalesced { radix, block_count } => {
-                self.hier(mean_block, radix, block_count, true)
-            }
-            AlgoKind::TunaHierStaggered { radix, block_count } => {
-                self.hier(mean_block, radix, block_count, false)
-            }
+            AlgoKind::Hier { local, global } => self.hier(mean_block, local, global),
         }
     }
 
@@ -134,8 +129,13 @@ impl<'a> Estimator<'a> {
         }
     }
 
-    /// TuNA replay over a contiguous group of `q` ranks with `arity`
-    /// sub-blocks of `s` bytes per slot.
+    /// TuNA replay over a group of `q` ranks with `arity` sub-blocks of
+    /// `s` bytes per slot. `fixed_link` pins the link class of every
+    /// round (intra-node groups are all-local, inter-node Q-port groups
+    /// all-global); `None` derives it from the round's rank distance (the
+    /// flat communicator). `lap` overrides the per-round phase
+    /// attribution exactly like the engine's slot core: the inter-node
+    /// Bruck exchange charges everything to [`Phase::InterNode`].
     fn tuna_core_replay(
         &self,
         clock: &mut Clock,
@@ -144,16 +144,17 @@ impl<'a> Estimator<'a> {
         r: usize,
         arity: usize,
         s: f64,
-        local_only: bool,
+        fixed_link: Option<Link>,
+        lap: Option<Phase>,
     ) {
         let p = self.topo.p();
+        let (ph_meta, ph_data, ph_replace) = match lap {
+            None => (Phase::Metadata, Phase::Data, Phase::Replace),
+            Some(ph) => (ph, ph, ph),
+        };
         for rd in radix::rounds(r, q) {
             let slots = radix::offsets_with_digit(rd.x, rd.z, r, q);
-            let link = if local_only {
-                Link::Local
-            } else {
-                self.link_to(rd.step)
-            };
+            let link = fixed_link.unwrap_or_else(|| self.link_to(rd.step));
             let meta_bytes = 8 * (slots * arity) as u64;
             let data_bytes = ((slots * arity) as f64 * s).round() as u64;
 
@@ -162,20 +163,20 @@ impl<'a> Estimator<'a> {
             let tm = clock.post_send(self.profile, link, meta_bytes, p);
             let dm = clock.drain_receives(self.profile, &[(tm.arrive, meta_bytes, link)]);
             clock.finish_wait(dm[0].max(tm.complete));
-            phases.add(Phase::Metadata, clock.now - t0);
+            phases.add(ph_meta, clock.now - t0);
 
             // Pack, data exchange, unpack.
             let t1 = clock.now;
             clock.charge_copy(self.profile, data_bytes);
-            phases.add(Phase::Replace, clock.now - t1);
+            phases.add(ph_replace, clock.now - t1);
             let t2 = clock.now;
             let td = clock.post_send(self.profile, link, data_bytes, p);
             let dd = clock.drain_receives(self.profile, &[(td.arrive, data_bytes, link)]);
             clock.finish_wait(dd[0].max(td.complete));
-            phases.add(Phase::Data, clock.now - t2);
+            phases.add(ph_data, clock.now - t2);
             let t3 = clock.now;
             clock.charge_copy(self.profile, data_bytes);
-            phases.add(Phase::Replace, clock.now - t3);
+            phases.add(ph_replace, clock.now - t3);
         }
     }
 
@@ -191,7 +192,7 @@ impl<'a> Estimator<'a> {
         clock.charge_copy(self.profile, 4 * p as u64);
         phases.add(Phase::Prepare, clock.now - t0);
 
-        self.tuna_core_replay(&mut clock, &mut phases, p, r, 1, s, false);
+        self.tuna_core_replay(&mut clock, &mut phases, p, r, 1, s, None, None);
 
         let t1 = clock.now;
         clock.charge_copy(self.profile, s.round() as u64); // self block
@@ -202,8 +203,10 @@ impl<'a> Estimator<'a> {
         }
     }
 
-    /// Hierarchical TuNA_l^g (Algorithms 2 and 3).
-    fn hier(&self, s: f64, r: usize, block_count: usize, coalesced: bool) -> Estimate {
+    /// Composable TuNA_l^g: local-phase cost + rearrangement cost +
+    /// global-phase cost, mirroring the engine's three-stage contract
+    /// (`algos::hier`).
+    fn hier(&self, s: f64, local: LocalAlgo, global: GlobalAlgo) -> Estimate {
         let p = self.topo.p();
         let q = self.topo.q();
         let n = self.topo.nodes();
@@ -215,8 +218,38 @@ impl<'a> Estimator<'a> {
         clock.charge_copy(self.profile, 4 * p as u64);
         phases.add(Phase::Prepare, clock.now - t0);
 
-        // Intra-node: TuNA over Q ranks, slots carry N sub-blocks.
-        self.tuna_core_replay(&mut clock, &mut phases, q, r.clamp(2, q.max(2)), n, s, true);
+        // Local phase over Q ranks; slots carry N sub-blocks of s bytes.
+        match local {
+            LocalAlgo::Tuna { radix } => {
+                self.tuna_core_replay(
+                    &mut clock,
+                    &mut phases,
+                    q,
+                    radix.clamp(2, q.max(2)),
+                    n,
+                    s,
+                    Some(Link::Local),
+                    None,
+                );
+            }
+            LocalAlgo::Linear => {
+                // Q-1 direct slot deliveries of N sub-blocks each, one
+                // burst, one waitall — no metadata rounds, no T.
+                let t1 = clock.now;
+                let bytes = (n as f64 * s).round() as u64;
+                let mut mirror = Vec::with_capacity(q - 1);
+                let mut send_done = 0.0f64;
+                for _ in 0..q.saturating_sub(1) {
+                    let t = clock.post_send(self.profile, Link::Local, bytes, p);
+                    send_done = send_done.max(t.complete);
+                    mirror.push((t.arrive, bytes, Link::Local));
+                }
+                let completions = clock.drain_receives(self.profile, &mirror);
+                let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+                clock.finish_wait(last);
+                phases.add(Phase::Data, clock.now - t1);
+            }
+        }
 
         // Own-node bucket delivery.
         let t1 = clock.now;
@@ -230,35 +263,57 @@ impl<'a> Estimator<'a> {
             };
         }
 
-        if coalesced {
-            let t2 = clock.now;
-            clock.charge_copy(self.profile, ((n - 1) as f64 * q as f64 * s).round() as u64);
-            phases.add(Phase::Rearrange, clock.now - t2);
-        }
-
-        let t3 = clock.now;
-        let msg_bytes = if coalesced {
-            (q as f64 * s).round() as u64
-        } else {
-            s.round() as u64
-        };
-        let total_msgs = if coalesced { n - 1 } else { (n - 1) * q };
-        let mut sent = 0usize;
-        while sent < total_msgs {
-            let batch = block_count.min(total_msgs - sent);
-            let mut mirror = Vec::with_capacity(batch);
-            let mut send_done = 0.0f64;
-            for _ in 0..batch {
-                let t = clock.post_send(self.profile, Link::Global, msg_bytes, p);
-                send_done = send_done.max(t.complete);
-                mirror.push((t.arrive, msg_bytes, Link::Global));
+        // Global phase: batched node-message bursts or a node-level
+        // log-radix slot exchange.
+        match global {
+            GlobalAlgo::Bruck { radix } => {
+                self.tuna_core_replay(
+                    &mut clock,
+                    &mut phases,
+                    n,
+                    radix.clamp(2, n.max(2)),
+                    q,
+                    s,
+                    Some(Link::Global),
+                    Some(Phase::InterNode),
+                );
             }
-            let completions = clock.drain_receives(self.profile, &mirror);
-            let last = completions.iter().fold(send_done, |a, &b| a.max(b));
-            clock.finish_wait(last);
-            sent += batch;
+            GlobalAlgo::Coalesced { .. } | GlobalAlgo::Staggered { .. } | GlobalAlgo::Linear => {
+                let (msg_bytes, total_msgs, block_count, rearrange) = match global {
+                    GlobalAlgo::Coalesced { block_count } => {
+                        ((q as f64 * s).round() as u64, n - 1, block_count, true)
+                    }
+                    GlobalAlgo::Staggered { block_count } => {
+                        (s.round() as u64, (n - 1) * q, block_count, false)
+                    }
+                    // Linear = one full burst of coalesced messages.
+                    _ => ((q as f64 * s).round() as u64, n - 1, n - 1, false),
+                };
+                if rearrange {
+                    let t2 = clock.now;
+                    let staged = ((n - 1) as f64 * q as f64 * s).round() as u64;
+                    clock.charge_copy(self.profile, staged);
+                    phases.add(Phase::Rearrange, clock.now - t2);
+                }
+                let t3 = clock.now;
+                let mut sent = 0usize;
+                while sent < total_msgs {
+                    let batch = block_count.min(total_msgs - sent);
+                    let mut mirror = Vec::with_capacity(batch);
+                    let mut send_done = 0.0f64;
+                    for _ in 0..batch {
+                        let t = clock.post_send(self.profile, Link::Global, msg_bytes, p);
+                        send_done = send_done.max(t.complete);
+                        mirror.push((t.arrive, msg_bytes, Link::Global));
+                    }
+                    let completions = clock.drain_receives(self.profile, &mirror);
+                    let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+                    clock.finish_wait(last);
+                    sent += batch;
+                }
+                phases.add(Phase::InterNode, clock.now - t3);
+            }
         }
-        phases.add(Phase::InterNode, clock.now - t3);
 
         Estimate {
             makespan: clock.now,
@@ -295,8 +350,16 @@ mod tests {
             AlgoKind::Vendor,
             AlgoKind::Bruck2,
             AlgoKind::Tuna { radix: 4 },
-            AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 },
-            AlgoKind::TunaHierStaggered { radix: 4, block_count: 8 },
+            AlgoKind::hier_coalesced(4, 2),
+            AlgoKind::hier_staggered(4, 8),
+            AlgoKind::Hier {
+                local: crate::algos::LocalAlgo::Linear,
+                global: crate::algos::GlobalAlgo::Linear,
+            },
+            AlgoKind::Hier {
+                local: crate::algos::LocalAlgo::Tuna { radix: 2 },
+                global: crate::algos::GlobalAlgo::Bruck { radix: 2 },
+            },
         ] {
             let t = est(kind, 64, 8, 512.0);
             assert!(t.is_finite() && t > 0.0, "{kind:?}: {t}");
@@ -347,12 +410,7 @@ mod tests {
         // Hierarchical decoupling pays off when most traffic can stay
         // on-node and inter-node messages coalesce.
         let flat = est(AlgoKind::Tuna { radix: 2 }, 2048, 32, 64.0);
-        let hier = est(
-            AlgoKind::TunaHierCoalesced { radix: 2, block_count: 8 },
-            2048,
-            32,
-            64.0,
-        );
+        let hier = est(AlgoKind::hier_coalesced(2, 8), 2048, 32, 64.0);
         assert!(
             hier < flat,
             "hier coalesced {hier} should beat flat tuna {flat} at small S"

@@ -3,7 +3,7 @@
 //! exact all-to-allv result — validated with real byte patterns
 //! (DESIGN.md §6 (1)).
 
-use tuna::algos::{run_alltoallv, tuning, AlgoKind};
+use tuna::algos::{hier, run_alltoallv, tuning, AlgoKind, GlobalAlgo, LocalAlgo};
 use tuna::comm::{Engine, Topology};
 use tuna::model::MachineProfile;
 use tuna::util::prng::Pcg64;
@@ -71,12 +71,34 @@ fn hier_variants_parameter_grid() {
                 let bc_max = if coalesced { (n - 1).max(1) } else { ((n - 1) * q).max(1) };
                 for bc in [1, bc_max] {
                     let kind = if coalesced {
-                        AlgoKind::TunaHierCoalesced { radix, block_count: bc }
+                        AlgoKind::hier_coalesced(radix, bc)
                     } else {
-                        AlgoKind::TunaHierStaggered { radix, block_count: bc }
+                        AlgoKind::hier_staggered(radix, bc)
                     };
                     check(kind, p, q, Dist::Uniform { max: 192 }, 7);
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_composition_grid() {
+    // The full local×global cross product at a couple of topology
+    // shapes: any local level must compose correctly with any global
+    // level.
+    for (p, q) in [(8usize, 2usize), (16, 4)] {
+        let n = p / q;
+        for local in [LocalAlgo::Tuna { radix: 2 }, LocalAlgo::Tuna { radix: q }, LocalAlgo::Linear]
+        {
+            for global in [
+                GlobalAlgo::Coalesced { block_count: 1 },
+                GlobalAlgo::Staggered { block_count: 2 },
+                GlobalAlgo::Linear,
+                GlobalAlgo::Bruck { radix: 2 },
+                GlobalAlgo::Bruck { radix: n },
+            ] {
+                check(AlgoKind::Hier { local, global }, p, q, Dist::Uniform { max: 160 }, 11);
             }
         }
     }
@@ -99,8 +121,10 @@ fn all_algorithms_all_distributions() {
         AlgoKind::Bruck2,
         AlgoKind::Tuna { radix: 4 },
         AlgoKind::Tuna { radix: 16 },
-        AlgoKind::TunaHierCoalesced { radix: 2, block_count: 2 },
-        AlgoKind::TunaHierStaggered { radix: 4, block_count: 5 },
+        AlgoKind::hier_coalesced(2, 2),
+        AlgoKind::hier_staggered(4, 5),
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } },
+        AlgoKind::Hier { local: LocalAlgo::Tuna { radix: 2 }, global: GlobalAlgo::Linear },
     ]);
     for dist in dists {
         for kind in &kinds {
@@ -149,16 +173,7 @@ fn random_kind(rng: &mut Pcg64, p: usize, q: usize) -> AlgoKind {
             }
             4 => return AlgoKind::OmpiLinear,
             5 | 6 if q >= 2 && p / q >= 2 => {
-                let radix = (2 + rng.next_below(q as u64) as usize).min(q);
-                let n = p / q;
-                let coalesced = rng.next_below(2) == 0;
-                let bc_max = if coalesced { n - 1 } else { (n - 1) * q };
-                let block_count = 1 + rng.next_below(bc_max.max(1) as u64) as usize;
-                return if coalesced {
-                    AlgoKind::TunaHierCoalesced { radix, block_count }
-                } else {
-                    AlgoKind::TunaHierStaggered { radix, block_count }
-                };
+                return hier::random_composition(rng, q, p / q)
             }
             _ => continue,
         }
@@ -177,7 +192,8 @@ fn conservation_total_bytes_delivered() {
     for kind in [
         AlgoKind::SpreadOut,
         AlgoKind::Tuna { radix: 3 },
-        AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 },
+        AlgoKind::hier_coalesced(2, 1),
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } },
     ] {
         let rep = run_alltoallv(&e, &kind, &sizes, true).unwrap();
         // Every rank must receive P blocks of `size` bytes; validation

@@ -3,7 +3,7 @@
 //! symmetric workloads. These bounds are what justify using the model
 //! for the paper-scale (P >= 8192) figure points.
 
-use tuna::algos::{run_alltoallv, AlgoKind};
+use tuna::algos::{run_alltoallv, AlgoKind, GlobalAlgo, LocalAlgo};
 use tuna::comm::{Engine, Topology};
 use tuna::model::analytic::Estimator;
 use tuna::model::MachineProfile;
@@ -61,8 +61,17 @@ fn linear_model_tracks_engine() {
 fn hier_model_tracks_engine() {
     for (p, q, s) in [(64, 8, 512), (128, 8, 2048)] {
         for kind in [
-            AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 },
-            AlgoKind::TunaHierStaggered { radix: 4, block_count: 8 },
+            AlgoKind::hier_coalesced(4, 2),
+            AlgoKind::hier_staggered(4, 8),
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear },
+            AlgoKind::Hier {
+                local: LocalAlgo::Tuna { radix: 4 },
+                global: GlobalAlgo::Bruck { radix: 2 },
+            },
+            AlgoKind::Hier {
+                local: LocalAlgo::Linear,
+                global: GlobalAlgo::Bruck { radix: 4 },
+            },
         ] {
             let e = rel_err(kind, p, q, s, MachineProfile::fugaku());
             assert!(

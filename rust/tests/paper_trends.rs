@@ -86,13 +86,13 @@ fn coalesced_beats_staggered_small_s() {
     let small = Dist::Uniform { max: 16 };
     let co = median_time(
         &engine,
-        &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 },
+        &AlgoKind::hier_coalesced(2, 4),
         small,
         3,
     );
     let st = median_time(
         &engine,
-        &AlgoKind::TunaHierStaggered { radix: 2, block_count: 32 },
+        &AlgoKind::hier_staggered(2, 32),
         small,
         3,
     );
@@ -104,13 +104,13 @@ fn coalesced_beats_staggered_small_s() {
     let large = Dist::Uniform { max: 16 * 1024 };
     let co_l = median_time(
         &engine,
-        &AlgoKind::TunaHierCoalesced { radix: 2, block_count: 4 },
+        &AlgoKind::hier_coalesced(2, 4),
         large,
         3,
     );
     let st_l = median_time(
         &engine,
-        &AlgoKind::TunaHierStaggered { radix: 2, block_count: 32 },
+        &AlgoKind::hier_staggered(2, 32),
         large,
         3,
     );
@@ -170,8 +170,8 @@ fn ideal_block_count_shrinks_with_s() {
         tuning::block_count_candidates((n - 1) * q)
             .into_iter()
             .min_by(|&a, &b| {
-                let ka = AlgoKind::TunaHierStaggered { radix: 2, block_count: a };
-                let kb = AlgoKind::TunaHierStaggered { radix: 2, block_count: b };
+                let ka = AlgoKind::hier_staggered(2, a);
+                let kb = AlgoKind::hier_staggered(2, b);
                 let ta = median_time(&engine, &ka, Dist::Uniform { max: s }, 1);
                 let tb = median_time(&engine, &kb, Dist::Uniform { max: s }, 1);
                 ta.partial_cmp(&tb).unwrap()

@@ -4,7 +4,7 @@
 //! [`AlgoKind::check`]. Failures report the case index and seed so they
 //! reproduce exactly (`util::prop::forall`).
 
-use tuna::algos::{run_alltoallv, select, tuning, AlgoKind};
+use tuna::algos::{hier, run_alltoallv, select, tuning, AlgoKind, GlobalAlgo, LocalAlgo};
 use tuna::comm::{Engine, Topology};
 use tuna::model::MachineProfile;
 use tuna::util::prng::Pcg64;
@@ -57,20 +57,79 @@ fn gen_kind(rng: &mut Pcg64, p: usize, q: usize) -> AlgoKind {
             }
             7 => return AlgoKind::TunaAuto,
             8 | 9 if q >= 2 && p / q >= 2 => {
-                let radix = (2 + rng.next_below(q as u64) as usize).min(q);
-                let n = p / q;
-                let coalesced = rng.next_below(2) == 0;
-                let bc_max = if coalesced { n - 1 } else { (n - 1) * q };
-                let block_count = 1 + rng.next_below(bc_max.max(1) as u64) as usize;
-                return if coalesced {
-                    AlgoKind::TunaHierCoalesced { radix, block_count }
-                } else {
-                    AlgoKind::TunaHierStaggered { radix, block_count }
-                };
+                return hier::random_composition(rng, q, p / q)
             }
             _ => continue,
         }
     }
+}
+
+/// Random [`AlgoKind`] over *every* variant with arbitrary (not
+/// necessarily runnable) parameters — parse/spec round-tripping must not
+/// depend on topology validity.
+fn gen_any_kind(rng: &mut Pcg64) -> AlgoKind {
+    let num = |rng: &mut Pcg64| 1 + rng.next_below(9999) as usize;
+    match rng.next_below(9) {
+        0 => AlgoKind::SpreadOut,
+        1 => AlgoKind::OmpiLinear,
+        2 => AlgoKind::Pairwise,
+        3 => AlgoKind::Scattered { block_count: num(rng) },
+        4 => AlgoKind::Vendor,
+        5 => AlgoKind::Bruck2,
+        6 => AlgoKind::Tuna { radix: num(rng) },
+        7 => AlgoKind::TunaAuto,
+        _ => {
+            let local = match rng.next_below(2) {
+                0 => LocalAlgo::Tuna { radix: num(rng) },
+                _ => LocalAlgo::Linear,
+            };
+            let global = match rng.next_below(4) {
+                0 => GlobalAlgo::Coalesced { block_count: num(rng) },
+                1 => GlobalAlgo::Staggered { block_count: num(rng) },
+                2 => GlobalAlgo::Linear,
+                _ => GlobalAlgo::Bruck { radix: num(rng) },
+            };
+            AlgoKind::Hier { local, global }
+        }
+    }
+}
+
+#[test]
+fn spec_round_trip_is_exhaustive_over_variants() {
+    // parse(spec(k)) == k for every variant — including every
+    // local×global composition — with randomized parameters, and the
+    // legacy `tuna-hier-*` aliases keep resolving to the equivalent
+    // composition.
+    forall("AlgoKind spec round-trip", 300, |rng| {
+        let kind = gen_any_kind(rng);
+        let spec = kind.spec();
+        match AlgoKind::parse(&spec) {
+            Ok(back) if back == kind => {}
+            Ok(back) => return Err(format!("{spec}: parsed back as {}", back.spec())),
+            Err(e) => return Err(format!("{spec}: failed to re-parse: {e}")),
+        }
+        // The human-readable name stays distinct per parameterization
+        // (spot check: it embeds the same spec'd parameters).
+        if kind.name().is_empty() {
+            return Err(format!("{spec}: empty name"));
+        }
+        // Legacy aliases, driven by the same random parameters.
+        let (r, b) = (1 + rng.next_below(999) as usize, 1 + rng.next_below(999) as usize);
+        let co = AlgoKind::parse(&format!("tuna-hier-coalesced:r={r},b={b}"))
+            .map_err(|e| e.to_string())?;
+        if co != AlgoKind::hier_coalesced(r, b) {
+            return Err(format!("coalesced alias r={r} b={b} parsed as {}", co.spec()));
+        }
+        if AlgoKind::parse(&co.spec()).map_err(|e| e.to_string())? != co {
+            return Err(format!("coalesced alias does not round-trip: {}", co.spec()));
+        }
+        let st = AlgoKind::parse(&format!("tuna-hier-staggered:r={r},b={b}"))
+            .map_err(|e| e.to_string())?;
+        if st != AlgoKind::hier_staggered(r, b) {
+            return Err(format!("staggered alias r={r} b={b} parsed as {}", st.spec()));
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -11,7 +11,9 @@
 
 use std::sync::Arc;
 
-use tuna::algos::{run_alltoallv, run_alltoallv_replay, tuning, AlgoKind, ExecMode};
+use tuna::algos::{
+    hier, run_alltoallv, run_alltoallv_replay, tuning, AlgoKind, ExecMode, GlobalAlgo, LocalAlgo,
+};
 use tuna::comm::{Engine, Topology};
 use tuna::coordinator::{measure, RunConfig};
 use tuna::model::MachineProfile;
@@ -63,9 +65,17 @@ fn every_family_bit_identical_on_fixed_grids() {
                 AlgoKind::TunaAuto,
             ];
             if q >= 2 && p / q >= 2 {
-                kinds.push(AlgoKind::TunaHierCoalesced { radix: 2, block_count: 1 });
-                kinds.push(AlgoKind::TunaHierCoalesced { radix: q, block_count: 2 });
-                kinds.push(AlgoKind::TunaHierStaggered { radix: 2, block_count: 5 });
+                kinds.push(AlgoKind::hier_coalesced(2, 1));
+                kinds.push(AlgoKind::hier_coalesced(q, 2));
+                kinds.push(AlgoKind::hier_staggered(2, 5));
+                kinds.push(AlgoKind::Hier {
+                    local: LocalAlgo::Linear,
+                    global: GlobalAlgo::Linear,
+                });
+                kinds.push(AlgoKind::Hier {
+                    local: LocalAlgo::Tuna { radix: 2 },
+                    global: GlobalAlgo::Bruck { radix: 2 },
+                });
             }
             for kind in kinds {
                 assert_identical(&e, &kind, &sizes);
@@ -91,10 +101,43 @@ fn skewed_and_degenerate_distributions_bit_identical() {
         for kind in [
             AlgoKind::Tuna { radix: 4 },
             AlgoKind::Pairwise,
-            AlgoKind::TunaHierStaggered { radix: 3, block_count: 2 },
+            AlgoKind::hier_staggered(3, 2),
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 4 } },
         ] {
             assert_identical(&e, &kind, &sizes);
         }
+    }
+}
+
+#[test]
+fn local_global_compositions_bit_identical() {
+    // The composition grid: every shipped local level crossed with every
+    // shipped global level (including both legacy pairings via their
+    // aliases), each bit-identical between threaded and replay
+    // execution — the guarantee that lets the selector refine any
+    // composition on the replay executor.
+    let (p, q) = (12usize, 4usize);
+    let n = p / q;
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 384 }, 21);
+    let locals = [LocalAlgo::Tuna { radix: 2 }, LocalAlgo::Tuna { radix: q }, LocalAlgo::Linear];
+    let globals = [
+        GlobalAlgo::Coalesced { block_count: 2 },
+        GlobalAlgo::Staggered { block_count: 3 },
+        GlobalAlgo::Linear,
+        GlobalAlgo::Bruck { radix: 2 },
+        GlobalAlgo::Bruck { radix: n },
+    ];
+    let mut compositions = 0;
+    for local in locals {
+        for global in globals {
+            assert_identical(&e, &AlgoKind::Hier { local, global }, &sizes);
+            compositions += 1;
+        }
+    }
+    assert!(compositions >= 4, "grid must cover at least four compositions");
+    for legacy in ["tuna-hier-coalesced:r=2,b=2", "tuna-hier-staggered:r=3,b=4"] {
+        assert_identical(&e, &AlgoKind::parse(legacy).unwrap(), &sizes);
     }
 }
 
@@ -125,14 +168,7 @@ fn property_random_configs_all_families() {
                 block_count: 1 + rng.next_below(8) as usize,
             },
             4 => AlgoKind::TunaAuto,
-            5 if q >= 2 && p / q >= 2 => AlgoKind::TunaHierCoalesced {
-                radix: 2 + rng.next_below(q as u64 - 1) as usize,
-                block_count: 1 + rng.next_below(4) as usize,
-            },
-            6 if q >= 2 && p / q >= 2 => AlgoKind::TunaHierStaggered {
-                radix: 2 + rng.next_below(q as u64 - 1) as usize,
-                block_count: 1 + rng.next_below(8) as usize,
-            },
+            5 | 6 if q >= 2 && p / q >= 2 => hier::random_composition(rng, q, p / q),
             _ => AlgoKind::Tuna {
                 radix: (2 + rng.next_below(p as u64) as usize).min(p),
             },
@@ -204,7 +240,7 @@ fn cached_replays_are_stable() {
     // producing the identical report.
     let e = engine(MachineProfile::fugaku(), 32, 8);
     let sizes = BlockSizes::generate(32, Dist::Uniform { max: 1024 }, 11);
-    let kind = AlgoKind::TunaHierCoalesced { radix: 4, block_count: 2 };
+    let kind = AlgoKind::hier_coalesced(4, 2);
     let first = run_alltoallv_replay(&e, &kind, &sizes).unwrap();
     for _ in 0..3 {
         let again = run_alltoallv_replay(&e, &kind, &sizes).unwrap();

@@ -10,7 +10,7 @@
 //! *modeled* pack/unpack charge on the virtual clock, which is intact and
 //! unchanged by the rope representation.
 
-use tuna::algos::{run_alltoallv, AlgoKind};
+use tuna::algos::{hier, run_alltoallv, AlgoKind, GlobalAlgo, LocalAlgo};
 use tuna::comm::{Engine, Topology};
 use tuna::model::MachineProfile;
 use tuna::util::prng::Pcg64;
@@ -52,16 +52,7 @@ fn gen_forwarding_kind(rng: &mut Pcg64, p: usize, q: usize) -> AlgoKind {
             }
             2 => return AlgoKind::TunaAuto,
             3 if q >= 2 && p / q >= 2 => {
-                let radix = (2 + rng.next_below(q as u64) as usize).min(q);
-                let n = p / q;
-                let coalesced = rng.next_below(2) == 0;
-                let bc_max = if coalesced { n - 1 } else { (n - 1) * q };
-                let block_count = 1 + rng.next_below(bc_max.max(1) as u64) as usize;
-                return if coalesced {
-                    AlgoKind::TunaHierCoalesced { radix, block_count }
-                } else {
-                    AlgoKind::TunaHierStaggered { radix, block_count }
-                };
+                return hier::random_composition(rng, q, p / q)
             }
             _ => continue,
         }
@@ -119,13 +110,45 @@ fn linear_families_satisfy_the_same_bound() {
 }
 
 #[test]
+fn composition_grid_satisfies_the_write_once_read_once_bound() {
+    // The satellite grid: at least four distinct local×global
+    // compositions (including both legacy pairings), each moving every
+    // payload byte exactly twice on the host.
+    let (p, q) = (12usize, 4usize);
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 640 }, 17);
+    let grid = [
+        AlgoKind::hier_coalesced(2, 2), // legacy Alg. 3 pairing
+        AlgoKind::hier_staggered(3, 4), // legacy Alg. 2 pairing
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear },
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 3 } },
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix: 4 },
+            global: GlobalAlgo::Bruck { radix: 2 },
+        },
+        AlgoKind::Hier { local: LocalAlgo::Tuna { radix: 2 }, global: GlobalAlgo::Linear },
+    ];
+    assert!(grid.len() >= 4);
+    for kind in grid {
+        let rep = run_alltoallv(&engine, &kind, &sizes, true).unwrap();
+        assert_eq!(
+            rep.counters.copied_bytes,
+            2 * sizes.total_bytes(),
+            "{}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
 fn phantom_mode_moves_no_host_bytes() {
     let p = 16;
     let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
     let sizes = BlockSizes::generate(p, Dist::Uniform { max: 4096 }, 9);
     for kind in [
         AlgoKind::Tuna { radix: 2 },
-        AlgoKind::TunaHierStaggered { radix: 2, block_count: 3 },
+        AlgoKind::hier_staggered(2, 3),
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } },
         AlgoKind::SpreadOut,
     ] {
         let rep = run_alltoallv(&engine, &kind, &sizes, false).unwrap();
