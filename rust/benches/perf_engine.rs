@@ -4,11 +4,14 @@
 //!
 //! * message throughput of the mailbox/clock core (ping-rounds over a
 //!   rank pair and an 8-rank ring);
-//! * whole-algorithm wallclock for representative (algo, P, mode, exec)
-//!   points — phantom *and* real payloads, threaded *and* plan/replay —
-//!   with derived messages/second and the host copied-bytes counter (the
-//!   zero-copy rope accounting, see `comm::buffer`). Replay rows include
-//!   P >= 4096 points that thread-per-rank execution never attempted;
+//! * whole-algorithm wallclock for representative (algo, P, dist, mode,
+//!   exec) points — phantom *and* real payloads, threaded *and*
+//!   plan/replay — with derived messages/second, the host copied-bytes
+//!   counter (the zero-copy rope accounting, see `comm::buffer`), and on
+//!   replay rows the compiled plan telemetry (`plan_ops`, peak per-rank
+//!   plan bytes, workload `nnz_total`). Replay rows include P >= 4096
+//!   dense points and the sparse P = 32768 acceptance point, whose plan
+//!   op-count is asserted proportional to the nonzeros;
 //! * a threaded-vs-replay radix *sweep* at P = 512 phantom (the selector
 //!   refinement workload), recording the replay speedup per commit;
 //! * engine spawn overhead vs P.
@@ -22,6 +25,10 @@
 //! PR 2 acceptance point is `tuna(r=2)` at P = 512 in real mode, the
 //! PR 3 acceptance points are the P = 512 sweep speedup (>= 10x
 //! expected) and the P = 4096 replay row.
+
+// Bench entry points mirror the engine's MPI-like positional signatures
+// (the lib sets the same allow crate-wide).
+#![allow(clippy::too_many_arguments)]
 
 use std::time::Instant;
 
@@ -56,6 +63,7 @@ struct AlgoRow {
     p: usize,
     q: usize,
     s: u64,
+    dist: String,
     real: bool,
     exec: ExecMode,
     s_per_run: f64,
@@ -68,6 +76,13 @@ struct AlgoRow {
     /// row stopped measuring cached replays.
     plan_hits: u64,
     plan_misses: u64,
+    /// Replay rows: total compiled plan ops and the peak per-rank plan
+    /// footprint in bytes (the per-row memory envelope). 0 on threaded
+    /// rows, which compile nothing.
+    plan_ops: u64,
+    plan_row_bytes: u64,
+    /// Total structural nonzeros of the workload (P² for dense rows).
+    nnz_total: u64,
 }
 
 fn bench_algo(
@@ -75,12 +90,13 @@ fn bench_algo(
     p: usize,
     q: usize,
     s: u64,
+    dist: Dist,
     iters: usize,
     real: bool,
     exec: ExecMode,
 ) -> AlgoRow {
     let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
-    let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 7);
+    let sizes = BlockSizes::generate(p, dist, 7);
     // Warm-up (also the counter source: virtual counters are identical
     // across runs, and copied_bytes only depends on the mode). For
     // replay, the warm-up compiles and caches the plan, so the timed
@@ -93,11 +109,20 @@ fn bench_algo(
     }
     let per_run = t0.elapsed().as_secs_f64() / iters as f64;
     let (plan_hits, plan_misses) = engine.plan_cache.stats();
+    // Plan telemetry after the stats read, so the extra cache hit below
+    // does not perturb the hit/miss contract the rows assert.
+    let (plan_ops, plan_row_bytes) = if exec == ExecMode::Replay {
+        let plan = tuna::algos::plan_for(&engine, &kind, &sizes).unwrap();
+        (plan.total_ops() as u64, plan.peak_rank_bytes() as u64)
+    } else {
+        (0, 0)
+    };
     AlgoRow {
         algo: kind.name(),
         p,
         q,
         s,
+        dist: dist.name().to_string(),
         real,
         exec,
         s_per_run: per_run,
@@ -106,6 +131,9 @@ fn bench_algo(
         payload_bytes: sizes.total_bytes(),
         plan_hits,
         plan_misses,
+        plan_ops,
+        plan_row_bytes,
+        nnz_total: sizes.total_nnz(),
     }
 }
 
@@ -181,63 +209,96 @@ fn main() {
         ping_rows.push((pairs, rounds, rate));
     }
 
-    // (kind, p, q, s, iters, real, exec). The real-mode tuna(r=2)@512
-    // row is the PR 2 acceptance point (payload ropes); the
-    // threaded/replay pairs record the PR 3 executor speedup, and the
-    // replay-only tail rows are P counts thread-per-rank never ran.
+    // (kind, p, q, s, dist, iters, real, exec). The real-mode
+    // tuna(r=2)@512 row is the PR 2 acceptance point (payload ropes);
+    // the threaded/replay pairs record the PR 3 executor speedup, the
+    // replay-only tail rows are P counts thread-per-rank never ran, and
+    // the sparse P=32768 row is the PR 5 acceptance point (O(nnz)
+    // plans past the dense replay wall).
     let thr = ExecMode::Threaded;
     let rpl = ExecMode::Replay;
-    let algo_grid: Vec<(AlgoKind, usize, usize, u64, usize, bool, ExecMode)> = if quick {
+    let uni = Dist::Uniform { max: 1024 };
+    let uni256 = Dist::Uniform { max: 256 };
+    let sparse16 = Dist::Sparse { nnz: 16, max: 1024 };
+    type GridRow = (AlgoKind, usize, usize, u64, Dist, usize, bool, ExecMode);
+    let sparse_point = (
+        AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap(),
+        32768usize,
+        64usize,
+        1024u64,
+        sparse16,
+        1usize,
+        false,
+        rpl,
+    );
+    let algo_grid: Vec<GridRow> = if quick {
         vec![
-            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false, thr),
-            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, false, rpl),
-            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, 3, true, thr),
-            (AlgoKind::SpreadOut, 64, 8, 1024, 3, true, thr),
-            (AlgoKind::hier_coalesced(2, 4), 64, 8, 1024, 3, true, thr),
-            (AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(), 64, 8, 1024, 3, false, rpl),
-            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, false, thr),
-            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, false, rpl),
-            (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, 1, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, uni, 3, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, uni, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 64, 8, 1024, uni, 3, true, thr),
+            (AlgoKind::SpreadOut, 64, 8, 1024, uni, 3, true, thr),
+            (AlgoKind::hier_coalesced(2, 4), 64, 8, 1024, uni, 3, true, thr),
+            (AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(), 64, 8, 1024, uni, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, uni, 2, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, uni, 2, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, uni256, 1, false, rpl),
+            sparse_point,
         ]
     } else {
         vec![
-            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, false, thr),
-            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, false, rpl),
-            (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, 3, false, thr),
-            (AlgoKind::SpreadOut, 256, 8, 1024, 3, false, thr),
-            (AlgoKind::SpreadOut, 256, 8, 1024, 3, false, rpl),
-            (AlgoKind::Vendor, 256, 8, 1024, 3, false, thr),
-            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, 3, false, thr),
-            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, 3, false, rpl),
-            (AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(), 256, 8, 1024, 3, false, rpl),
-            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, 3, true, thr),
-            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, 3, true, thr),
-            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, 2, true, thr),
-            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 1, false, thr),
-            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, 2, false, rpl),
-            (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, 2, false, rpl),
-            (AlgoKind::Tuna { radix: 4 }, 8192, 32, 64, 1, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, uni, 3, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, uni, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 16 }, 256, 8, 1024, uni, 3, false, thr),
+            (AlgoKind::SpreadOut, 256, 8, 1024, uni, 3, false, thr),
+            (AlgoKind::SpreadOut, 256, 8, 1024, uni, 3, false, rpl),
+            (AlgoKind::Vendor, 256, 8, 1024, uni, 3, false, thr),
+            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, uni, 3, false, thr),
+            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, uni, 3, false, rpl),
+            (AlgoKind::parse("hier:l=linear,g=bruck:r=2").unwrap(), 256, 8, 1024, uni, 3, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 256, 8, 1024, uni, 3, true, thr),
+            (AlgoKind::hier_coalesced(2, 4), 256, 8, 1024, uni, 3, true, thr),
+            (AlgoKind::Tuna { radix: 2 }, 512, 32, 1024, uni, 2, true, thr),
+            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, uni256, 1, false, thr),
+            (AlgoKind::Tuna { radix: 2 }, 1024, 32, 256, uni256, 2, false, rpl),
+            (AlgoKind::Tuna { radix: 2 }, 4096, 32, 256, uni256, 2, false, rpl),
+            (AlgoKind::Tuna { radix: 4 }, 8192, 32, 64, Dist::Uniform { max: 64 }, 1, false, rpl),
+            (AlgoKind::SpreadOut, 8192, 64, 1024, sparse16, 1, false, rpl),
+            sparse_point,
+            (
+                AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap(),
+                32768,
+                64,
+                1024,
+                Dist::Sparse { nnz: 64, max: 1024 },
+                1,
+                false,
+                rpl,
+            ),
         ]
     };
 
     println!(
-        "\n{:<28} {:>6} {:>5} {:>9} {:>12} {:>14} {:>14} {:>11}",
-        "algorithm", "P", "mode", "exec", "s/run", "sim-msgs/s", "copied-B", "plan-h/m"
+        "\n{:<28} {:>6} {:>8} {:>5} {:>9} {:>12} {:>14} {:>14} {:>9} {:>12} {:>10}",
+        "algorithm", "P", "dist", "mode", "exec", "s/run", "sim-msgs/s", "copied-B",
+        "plan-h/m", "plan-ops", "row-bytes"
     );
     let mut algo_rows: Vec<AlgoRow> = Vec::new();
-    for (kind, p, q, s, iters, real, exec) in algo_grid {
-        let row = bench_algo(kind, p, q, s, iters, real, exec);
+    for (kind, p, q, s, dist, iters, real, exec) in algo_grid {
+        let row = bench_algo(kind, p, q, s, dist, iters, real, exec);
         println!(
-            "{:<28} {:>6} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14} {:>7}/{}",
+            "{:<28} {:>6} {:>8} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14} {:>5}/{} {:>12} {:>10}",
             row.algo,
             row.p,
+            row.dist,
             if row.real { "real" } else { "phtm" },
             row.exec.name(),
             row.s_per_run,
             row.sim_msgs_per_sec,
             row.copied_bytes,
             row.plan_hits,
-            row.plan_misses
+            row.plan_misses,
+            row.plan_ops,
+            row.plan_row_bytes
         );
         if row.real {
             assert_eq!(
@@ -262,6 +323,18 @@ fn main() {
                 "plan cache ineffective for {}",
                 row.algo
             );
+            assert!(row.plan_ops > 0, "replay row {} recorded no plan ops", row.algo);
+            if row.dist == "sparse" {
+                // The PR 5 acceptance shape: sparse plan op-count is
+                // proportional to the total nonzeros, not P².
+                assert!(
+                    row.plan_ops <= 64 * row.nnz_total,
+                    "{}: sparse plan {} ops exceeds 64 x nnz ({})",
+                    row.algo,
+                    row.plan_ops,
+                    row.nnz_total
+                );
+            }
         }
         algo_rows.push(row);
     }
@@ -313,14 +386,17 @@ fn main() {
     j.push_str("  ],\n  \"algos\": [\n");
     for (i, r) in algo_rows.iter().enumerate() {
         j.push_str(&format!(
-            "    {{\"algo\": \"{}\", \"p\": {}, \"q\": {}, \"s\": {}, \"real\": {}, \
+            "    {{\"algo\": \"{}\", \"p\": {}, \"q\": {}, \"s\": {}, \"dist\": \"{}\", \
+             \"real\": {}, \
              \"exec\": \"{}\", \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \
              \"copied_bytes\": {}, \"payload_bytes\": {}, \
-             \"plan_hits\": {}, \"plan_misses\": {}}}{}\n",
+             \"plan_hits\": {}, \"plan_misses\": {}, \
+             \"plan_ops\": {}, \"plan_row_bytes\": {}, \"nnz_total\": {}}}{}\n",
             json_escape(&r.algo),
             r.p,
             r.q,
             r.s,
+            json_escape(&r.dist),
             r.real,
             r.exec.name(),
             r.s_per_run,
@@ -329,6 +405,9 @@ fn main() {
             r.payload_bytes,
             r.plan_hits,
             r.plan_misses,
+            r.plan_ops,
+            r.plan_row_bytes,
+            r.nnz_total,
             if i + 1 < algo_rows.len() { "," } else { "" }
         ));
     }

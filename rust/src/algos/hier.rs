@@ -61,7 +61,7 @@
 //! never touches payload bytes on the host. The `ctx.copy` charges keep
 //! modeling the rearrangement cost on the simulated machine's clock.
 
-use super::tuna::{plan_core, tuna_core, SlotContent};
+use super::tuna::{plan_core, plan_core_sparse, tuna_core, tuna_core_sparse, SlotContent};
 use super::{AlgoKind, AlgoStats};
 use crate::comm::engine::{RecvReq, SendReq};
 use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx, Topology};
@@ -542,6 +542,376 @@ pub fn run(
     (recv, stats)
 }
 
+// ---- structural-sparse schedules ------------------------------------------
+//
+// On a sparse workload every level of the hierarchy exchanges only where
+// structural traffic exists. The predicates and event schedules below
+// are shared verbatim between the threaded runners and the plan
+// compilers — both sides answer "who sends what to whom" from the same
+// `Counts` queries, so the two execution modes cannot drift
+// (`tests/replay_equivalence.rs` pins them bit-identical).
+
+/// Does rank `src`'s stage-1 slot destined to group rank `dest_g` hold
+/// any structural block (i.e. does `src` send to *any* rank whose group
+/// rank is `dest_g`)?
+pub(crate) fn sparse_slot_nonempty(
+    sizes: &BlockSizes,
+    topo: &Topology,
+    src: usize,
+    dest_g: usize,
+) -> bool {
+    sizes
+        .row_view(src)
+        .entries()
+        .any(|(dst, _)| topo.group_rank(dst) == dest_g)
+}
+
+/// Foreign nodes that structurally send to `me` (sorted ascending).
+pub(crate) fn sparse_sender_nodes(
+    sizes: &BlockSizes,
+    topo: &Topology,
+    me: usize,
+) -> Vec<usize> {
+    let senders = sizes.senders();
+    let my_node = topo.node_of(me);
+    let mut nodes: Vec<usize> = Vec::new();
+    for &src in senders[me].iter() {
+        let k = topo.node_of(src as usize);
+        if k != my_node && nodes.last() != Some(&k) {
+            nodes.push(k);
+        }
+    }
+    nodes
+}
+
+/// Structural senders of `me` living on node `k` (sorted ascending) —
+/// exactly the origin order of node `k`'s bucket for `me`, which is what
+/// pairs the staggered global's per-block messages on both sides.
+pub(crate) fn sparse_senders_in_node(
+    sizes: &BlockSizes,
+    topo: &Topology,
+    me: usize,
+    k: usize,
+) -> Vec<u32> {
+    sizes.senders()[me]
+        .iter()
+        .copied()
+        .filter(|&s| topo.node_of(s as usize) == k)
+        .collect()
+}
+
+/// Ascending node-offset events of the sparse coalesced/linear global
+/// phase for one rank: at offset `off` the rank sends its bucket to node
+/// `(my_node − off)` when non-empty, and receives from node
+/// `(my_node + off)` when that node structurally sends to it. Offsets
+/// with neither are skipped entirely — no phantom node messages.
+pub(crate) fn sparse_node_events(
+    topo: &Topology,
+    me: usize,
+    send_nonempty: impl Fn(usize) -> bool,
+    recv_nodes: &[usize],
+) -> Vec<(usize, Option<usize>, Option<usize>)> {
+    let n = topo.nodes();
+    let my_node = topo.node_of(me);
+    let mut recv_set = vec![false; n];
+    for &k in recv_nodes {
+        recv_set[k] = true;
+    }
+    let mut out = Vec::new();
+    for off in 1..n {
+        let ndst = (my_node + n - off) % n;
+        let nsrc = (my_node + off) % n;
+        let s = if send_nonempty(ndst) { Some(ndst) } else { None };
+        let r = if recv_set[nsrc] { Some(nsrc) } else { None };
+        if s.is_some() || r.is_some() {
+            out.push((off, s, r));
+        }
+    }
+    out
+}
+
+/// One per-block step of the sparse staggered global phase, keyed by the
+/// dense schedule's step index `idx = (off−1)·Q + pos` (`pos` = position
+/// in the origin-sorted bucket), which is also its message tag offset.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct SparseStagEvent {
+    /// Send the `pos`-th block of my bucket for node `ndst`.
+    pub send: Option<(usize, usize)>, // (ndst, pos)
+    /// Receive the `pos`-th block node `nsrc` holds for me.
+    pub recv: Option<usize>, // nsrc
+}
+
+/// Merged, idx-ascending staggered events for one rank.
+/// `send_counts[k]` is the rank's bucket size for node `k`;
+/// `recv_counts[k]` how many blocks node `k` holds for this rank.
+pub(crate) fn sparse_stag_events(
+    topo: &Topology,
+    me: usize,
+    send_counts: &[usize],
+    recv_counts: &[usize],
+) -> Vec<(usize, SparseStagEvent)> {
+    let n = topo.nodes();
+    let q = topo.q();
+    let my_node = topo.node_of(me);
+    let mut map: std::collections::BTreeMap<usize, SparseStagEvent> =
+        std::collections::BTreeMap::new();
+    for off in 1..n {
+        let ndst = (my_node + n - off) % n;
+        let nsrc = (my_node + off) % n;
+        for pos in 0..send_counts[ndst] {
+            map.entry((off - 1) * q + pos).or_default().send = Some((ndst, pos));
+        }
+        for pos in 0..recv_counts[nsrc] {
+            map.entry((off - 1) * q + pos).or_default().recv = Some(nsrc);
+        }
+    }
+    map.into_iter().collect()
+}
+
+/// Run a hierarchical composition on a structurally sparse workload:
+/// the same three-stage contract as [`run`], with every level skipping
+/// absent traffic — sparse slot engine locally, non-empty node buckets
+/// only globally. `blocks` holds just the rank's structural blocks.
+pub fn run_sparse(
+    ctx: &mut RankCtx,
+    blocks: Vec<Block>,
+    local: LocalAlgo,
+    global: GlobalAlgo,
+    sizes: &BlockSizes,
+) -> (Vec<Block>, AlgoStats) {
+    let topo = *ctx.topo();
+    let p = topo.p();
+    let q = topo.q();
+    let n_nodes = topo.nodes();
+    let me = ctx.rank();
+    let my_node = topo.node_of(me);
+    let g = topo.group_rank(me);
+    assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
+
+    // ---- prepare: identical preamble to the dense path.
+    ctx.phase_mark();
+    let local_max = blocks.iter().map(|b| b.len()).max().unwrap_or(0);
+    let _m = ctx.allreduce_max(local_max);
+    ctx.copy(4 * p as u64);
+    ctx.phase_lap(Phase::Prepare);
+
+    // ---- contract stage 1: slot layout over the structural blocks only
+    // (ascending node within a slot, exactly like the dense layout).
+    let mut by_dest: Vec<Option<Block>> = (0..p).map(|_| None).collect();
+    for b in blocks {
+        by_dest[b.dest as usize] = Some(b);
+    }
+    let slots: Vec<SlotContent> = (0..q)
+        .map(|j| {
+            let dest_g = (g + j) % q;
+            (0..n_nodes)
+                .filter_map(|k| by_dest[topo.rank_of(k, dest_g)].take())
+                .collect()
+        })
+        .collect();
+
+    // ---- local phase.
+    let (slots, mut stats) = match local {
+        LocalAlgo::Tuna { radix } => {
+            assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+            let out = tuna_core_sparse(ctx, my_node * q, 1, q, radix, slots, 0, None);
+            (out.slots, out.stats)
+        }
+        LocalAlgo::Linear => run_local_linear_sparse(ctx, my_node * q, q, g, slots, sizes, &topo),
+    };
+
+    // ---- bucket by destination node, origin-sorted.
+    let mut buckets: Vec<Vec<Block>> = (0..n_nodes).map(|_| Vec::new()).collect();
+    for content in slots {
+        for b in content {
+            debug_assert_eq!(topo.group_rank(b.dest as usize), g, "local phase must align groups");
+            buckets[topo.node_of(b.dest as usize)].push(b);
+        }
+    }
+    for bucket in buckets.iter_mut() {
+        bucket.sort_by_key(|b| b.origin);
+    }
+
+    // Own node's bucket is final (0-byte copy when empty).
+    let mut recv: Vec<Block> = Vec::new();
+    ctx.phase_mark();
+    ctx.copy(buckets[my_node].iter().map(|b| b.len()).sum());
+    recv.extend(std::mem::take(&mut buckets[my_node]));
+    ctx.phase_lap(Phase::Replace);
+
+    if n_nodes == 1 {
+        return (recv, stats);
+    }
+
+    // ---- global phase, structural events only.
+    match global {
+        GlobalAlgo::Coalesced { block_count } => {
+            assert!(block_count >= 1);
+            ctx.phase_mark();
+            let staged: u64 = buckets.iter().flatten().map(|b| b.len()).sum();
+            ctx.copy(staged);
+            ctx.phase_lap(Phase::Rearrange);
+
+            let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
+            let events =
+                sparse_node_events(&topo, me, |k| !buckets[k].is_empty(), &recv_nodes);
+            let mut i = 0usize;
+            while i < events.len() {
+                let batch = block_count.min(events.len() - i);
+                let mut sends: Vec<SendReq> = Vec::with_capacity(batch);
+                let mut recvs: Vec<RecvReq> = Vec::with_capacity(batch);
+                for &(off, s, r) in &events[i..i + batch] {
+                    let tag = INTER_TAG + off as u32;
+                    if let Some(nsrc) = r {
+                        recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                    }
+                    if let Some(ndst) = s {
+                        let payload = Payload::Blocks(std::mem::take(&mut buckets[ndst]));
+                        sends.push(ctx.isend(topo.rank_of(ndst, g), tag, payload));
+                    }
+                }
+                for pl in ctx.waitall(&sends, &recvs) {
+                    recv.extend(pl.into_blocks());
+                }
+                stats.rounds += batch;
+                i += batch;
+            }
+            ctx.phase_lap(Phase::InterNode);
+        }
+        GlobalAlgo::Staggered { block_count } => {
+            assert!(block_count >= 1);
+            ctx.phase_mark();
+            let send_counts: Vec<usize> = buckets.iter().map(Vec::len).collect();
+            let recv_counts: Vec<usize> = (0..n_nodes)
+                .map(|k| {
+                    if k == my_node {
+                        0
+                    } else {
+                        sparse_senders_in_node(sizes, &topo, me, k).len()
+                    }
+                })
+                .collect();
+            let events = sparse_stag_events(&topo, me, &send_counts, &recv_counts);
+            let mut i = 0usize;
+            while i < events.len() {
+                let batch = block_count.min(events.len() - i);
+                let mut sends: Vec<SendReq> = Vec::with_capacity(batch);
+                let mut recvs: Vec<RecvReq> = Vec::with_capacity(batch);
+                for &(idx, ev) in &events[i..i + batch] {
+                    let tag = INTER_TAG + idx as u32;
+                    if let Some(nsrc) = ev.recv {
+                        recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                    }
+                    if let Some((ndst, pos)) = ev.send {
+                        // The tombstone left behind is never sent; blocks
+                        // leave the bucket in origin order.
+                        let block = std::mem::replace(
+                            &mut buckets[ndst][pos],
+                            Block::new(0, 0, crate::comm::DataBuf::Phantom(0)),
+                        );
+                        sends.push(ctx.isend(topo.rank_of(ndst, g), tag, Payload::Blocks(vec![block])));
+                    }
+                }
+                for pl in ctx.waitall(&sends, &recvs) {
+                    recv.extend(pl.into_blocks());
+                }
+                stats.rounds += 1;
+                i += batch;
+            }
+            ctx.phase_lap(Phase::InterNode);
+        }
+        GlobalAlgo::Linear => {
+            ctx.phase_mark();
+            let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
+            let events =
+                sparse_node_events(&topo, me, |k| !buckets[k].is_empty(), &recv_nodes);
+            let mut sends: Vec<SendReq> = Vec::with_capacity(events.len());
+            let mut recvs: Vec<RecvReq> = Vec::with_capacity(events.len());
+            for &(off, s, r) in &events {
+                let tag = INTER_TAG + off as u32;
+                if let Some(nsrc) = r {
+                    recvs.push(ctx.irecv(topo.rank_of(nsrc, g), tag));
+                }
+                if let Some(ndst) = s {
+                    let payload = Payload::Blocks(std::mem::take(&mut buckets[ndst]));
+                    sends.push(ctx.isend(topo.rank_of(ndst, g), tag, payload));
+                }
+            }
+            for pl in ctx.waitall(&sends, &recvs) {
+                recv.extend(pl.into_blocks());
+            }
+            stats.rounds += 1;
+            ctx.phase_lap(Phase::InterNode);
+        }
+        GlobalAlgo::Bruck { radix } => {
+            let radix = radix.min(n_nodes).max(2);
+            let node_slots: Vec<SlotContent> = (0..n_nodes)
+                .map(|j| {
+                    if j == 0 {
+                        Vec::new()
+                    } else {
+                        std::mem::take(&mut buckets[(my_node + j) % n_nodes])
+                    }
+                })
+                .collect();
+            let out = tuna_core_sparse(
+                ctx,
+                g,
+                q,
+                n_nodes,
+                radix,
+                node_slots,
+                INTER_TAG,
+                Some(Phase::InterNode),
+            );
+            for (j, content) in out.slots.into_iter().enumerate() {
+                if j > 0 {
+                    recv.extend(content);
+                }
+            }
+            stats.rounds += out.stats.rounds;
+            stats.t_peak = stats.t_peak.max(out.stats.t_peak);
+        }
+    }
+
+    (recv, stats)
+}
+
+/// [`LocalAlgo::Linear`] on a sparse workload: the dense direct
+/// delivery with empty slots skipped on both sides (the receive
+/// predicate is [`sparse_slot_nonempty`], shared with the compiler).
+fn run_local_linear_sparse(
+    ctx: &mut RankCtx,
+    base: usize,
+    q: usize,
+    g: usize,
+    mut slots: Vec<SlotContent>,
+    sizes: &BlockSizes,
+    topo: &Topology,
+) -> (Vec<SlotContent>, AlgoStats) {
+    ctx.phase_mark();
+    let mut sends: Vec<SendReq> = Vec::new();
+    let mut recvs: Vec<RecvReq> = Vec::new();
+    let mut recv_js: Vec<usize> = Vec::new();
+    for j in 1..q {
+        let dst = base + (g + j) % q;
+        let src = base + (g + q - j) % q;
+        if sparse_slot_nonempty(sizes, topo, src, g) {
+            recvs.push(ctx.irecv(src, j as u32));
+            recv_js.push(j);
+        }
+        if !slots[j].is_empty() {
+            let payload = Payload::Blocks(std::mem::take(&mut slots[j]));
+            sends.push(ctx.isend(dst, j as u32, payload));
+        }
+    }
+    for (j, pl) in recv_js.into_iter().zip(ctx.waitall(&sends, &recvs)) {
+        slots[j] = pl.into_blocks();
+    }
+    ctx.phase_lap(Phase::Data);
+    (slots, AlgoStats { t_peak: 0, rounds: 1 })
+}
+
 /// [`LocalAlgo::Linear`]: direct spread-out slot delivery within the
 /// node. Each slot already names its final intra-node holder — send it
 /// straight there, Q−1 non-blocking pairs, one waitall.
@@ -577,7 +947,29 @@ fn run_local_linear(
 /// form — after the local phase, rank `(n, g)`'s bucket for node `k`
 /// holds exactly the blocks `{(n, g') → (k, g)}` in ascending `g'`
 /// order.
+///
+/// Compilation **streams node by node**: only one node's Q rows are held
+/// at a time (each rank's op list is independent, so emission order
+/// across ranks is free), keeping working memory O(Q·P) dense / O(node
+/// nnz) sparse instead of the former P×P materialization. The one
+/// exception is a `bruck` global level, whose cross-node joint
+/// simulations need the full bucket-sum matrix — O(P·N) transient,
+/// accumulated during the same single pass.
 pub(crate) fn plan_into(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    topo: Topology,
+    local: LocalAlgo,
+    global: GlobalAlgo,
+) -> (usize, usize) {
+    if sizes.is_sparse() {
+        plan_into_sparse(builders, sizes, topo, local, global)
+    } else {
+        plan_into_dense(builders, sizes, topo, local, global)
+    }
+}
+
+fn plan_into_dense(
     builders: &mut [PlanBuilder],
     sizes: &BlockSizes,
     topo: Topology,
@@ -588,13 +980,6 @@ pub(crate) fn plan_into(
     let q = topo.q();
     let n_nodes = topo.nodes();
     assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
-    let rows: Vec<Vec<u64>> = (0..p).map(|s| sizes.row(s)).collect();
-    // Bytes of rank (node, g)'s slot j after stage 1 of the contract.
-    let slot_bytes = |node: usize, g: usize, j: usize| -> u64 {
-        let row = &rows[topo.rank_of(node, g)];
-        let dest_g = (g + j) % q;
-        (0..n_nodes).map(|k| row[topo.rank_of(k, dest_g)]).sum()
-    };
 
     // Prepare: global allreduce for M + index array write.
     for b in builders.iter_mut() {
@@ -604,16 +989,36 @@ pub(crate) fn plan_into(
         b.lap(Phase::Prepare);
     }
 
-    // ---- local phase, one joint simulation per node.
+    let is_bruck = matches!(global, GlobalAlgo::Bruck { .. });
+    // Full bucket-sum matrix — only the Bruck global's cross-node joint
+    // simulations need it (O(P·N) transient); every other global phase
+    // compiles from the per-node sums alone.
+    let mut bs_full: Vec<Vec<u64>> = if is_bruck && n_nodes > 1 {
+        vec![vec![0u64; n_nodes]; p]
+    } else {
+        Vec::new()
+    };
+
     let mut t_peak = 0usize;
     let mut rounds = 0usize;
+    let mut global_rounds = 0usize;
+
     for node in 0..n_nodes {
         let base = node * q;
+        // The only slice of the matrix held at a time: this node's rows.
+        let rows: Vec<Vec<u64>> = (0..q).map(|g| sizes.row(base + g)).collect();
+        // Bytes of rank (node, g)'s slot j after stage 1 of the contract.
+        let slot_bytes = |g: usize, j: usize| -> u64 {
+            let dest_g = (g + j) % q;
+            (0..n_nodes).map(|k| rows[g][topo.rank_of(k, dest_g)]).sum()
+        };
+
+        // ---- local phase, one joint simulation per node.
         match local {
             LocalAlgo::Tuna { radix } => {
                 assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
                 let mut slots: Vec<Vec<u64>> = (0..q)
-                    .map(|g| (0..q).map(|j| slot_bytes(node, g, j)).collect())
+                    .map(|g| (0..q).map(|j| slot_bytes(g, j)).collect())
                     .collect();
                 let stats = plan_core(builders, base, 1, q, radix, n_nodes, &mut slots, 0, None);
                 t_peak = stats.t_peak;
@@ -627,7 +1032,7 @@ pub(crate) fn plan_into(
                         let dst = base + (g + j) % q;
                         let src = base + (g + q - j) % q;
                         b.recv(src, j as u32);
-                        b.send(dst, j as u32, slot_bytes(node, g, j));
+                        b.send(dst, j as u32, slot_bytes(g, j));
                     }
                     b.wait();
                     b.lap(Phase::Data);
@@ -636,141 +1041,401 @@ pub(crate) fn plan_into(
                 rounds = 1;
             }
         }
-    }
 
-    // Own node's bucket is final: a local copy on every rank.
-    // `bucket_block(me, k, j)` is the size of the j-th (origin-sorted)
-    // block of `me`'s bucket for node `k`.
-    let bucket_block = |me: usize, k: usize, j: usize| {
-        rows[topo.rank_of(topo.node_of(me), j)][topo.rank_of(k, topo.group_rank(me))]
-    };
-    let bucket_sum = |me: usize, k: usize| (0..q).map(|j| bucket_block(me, k, j)).sum::<u64>();
-    for me in 0..p {
-        let b = &mut builders[me];
-        b.mark();
-        b.copy(bucket_sum(me, topo.node_of(me)));
-        b.lap(Phase::Replace);
+        // `bucket_block(g, k, j)` is the size of the j-th (origin-sorted)
+        // block of rank (node, g)'s bucket for node `k`.
+        let bucket_block = |g: usize, k: usize, j: usize| rows[j][topo.rank_of(k, g)];
+        let bucket_sum = |g: usize, k: usize| (0..q).map(|j| bucket_block(g, k, j)).sum::<u64>();
+
+        // Own node's bucket is final: a local copy on every rank.
+        for g in 0..q {
+            let b = &mut builders[base + g];
+            b.mark();
+            b.copy(bucket_sum(g, node));
+            b.lap(Phase::Replace);
+        }
+        if n_nodes == 1 {
+            continue;
+        }
+
+        // ---- global phase for this node's ranks.
+        match global {
+            GlobalAlgo::Coalesced { block_count } => {
+                assert!(block_count >= 1);
+                global_rounds = n_nodes - 1;
+                for g in 0..q {
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    let staged: u64 = (0..n_nodes)
+                        .filter(|&k| k != node)
+                        .map(|k| bucket_sum(g, k))
+                        .sum();
+                    b.copy(staged);
+                    b.lap(Phase::Rearrange);
+
+                    let mut round = 0usize;
+                    while round < n_nodes - 1 {
+                        let batch = block_count.min(n_nodes - 1 - round);
+                        for i in 0..batch {
+                            let off = round + i + 1;
+                            let ndst = (node + n_nodes - off) % n_nodes;
+                            let nsrc = (node + off) % n_nodes;
+                            let tag = INTER_TAG + off as u32;
+                            b.recv(topo.rank_of(nsrc, g), tag);
+                            b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
+                        }
+                        b.wait();
+                        round += batch;
+                    }
+                    b.lap(Phase::InterNode);
+                }
+            }
+            GlobalAlgo::Staggered { block_count } => {
+                assert!(block_count >= 1);
+                let total_steps = (n_nodes - 1) * q;
+                global_rounds = total_steps.div_ceil(block_count);
+                for g in 0..q {
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    let mut step = 0usize;
+                    while step < total_steps {
+                        let batch = block_count.min(total_steps - step);
+                        for i in 0..batch {
+                            let idx = step + i;
+                            let off = idx / q + 1;
+                            let j = idx % q;
+                            let ndst = (node + n_nodes - off) % n_nodes;
+                            let nsrc = (node + off) % n_nodes;
+                            let tag = INTER_TAG + idx as u32;
+                            b.recv(topo.rank_of(nsrc, g), tag);
+                            b.send(topo.rank_of(ndst, g), tag, bucket_block(g, ndst, j));
+                        }
+                        b.wait();
+                        step += batch;
+                    }
+                    b.lap(Phase::InterNode);
+                }
+            }
+            GlobalAlgo::Linear => {
+                global_rounds = 1;
+                for g in 0..q {
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    for off in 1..n_nodes {
+                        let ndst = (node + n_nodes - off) % n_nodes;
+                        let nsrc = (node + off) % n_nodes;
+                        let tag = INTER_TAG + off as u32;
+                        b.recv(topo.rank_of(nsrc, g), tag);
+                        b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
+                    }
+                    b.wait();
+                    b.lap(Phase::InterNode);
+                }
+            }
+            GlobalAlgo::Bruck { .. } => {
+                for g in 0..q {
+                    for k in 0..n_nodes {
+                        bs_full[base + g][k] = bucket_sum(g, k);
+                    }
+                }
+            }
+        }
     }
     if n_nodes == 1 {
         return (t_peak, rounds);
     }
 
-    // ---- global phase.
-    match global {
-        GlobalAlgo::Coalesced { block_count } => {
-            assert!(block_count >= 1);
-            rounds += n_nodes - 1;
-            for me in 0..p {
-                let my_node = topo.node_of(me);
-                let g = topo.group_rank(me);
-                let b = &mut builders[me];
-                b.mark();
-                let staged: u64 = (0..n_nodes)
-                    .filter(|&k| k != my_node)
-                    .map(|k| bucket_sum(me, k))
-                    .sum();
-                b.copy(staged);
-                b.lap(Phase::Rearrange);
+    if let GlobalAlgo::Bruck { radix } = global {
+        let radix = radix.min(n_nodes).max(2);
+        // One joint simulation per Q-port group {(k, g) : k}.
+        let mut stats = None;
+        for g in 0..q {
+            let mut node_slots: Vec<Vec<u64>> = (0..n_nodes)
+                .map(|m| {
+                    (0..n_nodes)
+                        .map(|j| {
+                            if j == 0 {
+                                0
+                            } else {
+                                bs_full[topo.rank_of(m, g)][(m + j) % n_nodes]
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            stats = Some(plan_core(
+                builders,
+                g,
+                q,
+                n_nodes,
+                radix,
+                q,
+                &mut node_slots,
+                INTER_TAG,
+                Some(Phase::InterNode),
+            ));
+        }
+        let stats = stats.expect("Q >= 2 groups compiled");
+        global_rounds = stats.rounds;
+        t_peak = t_peak.max(stats.t_peak);
+    }
+    (t_peak, rounds + global_rounds)
+}
 
-                let mut round = 0usize;
-                while round < n_nodes - 1 {
-                    let batch = block_count.min(n_nodes - 1 - round);
-                    for i in 0..batch {
-                        let off = round + i + 1;
-                        let ndst = (my_node + n_nodes - off) % n_nodes;
-                        let nsrc = (my_node + off) % n_nodes;
+/// Sparse compilation of [`run_sparse`]: the same per-node streaming
+/// shape, with every schedule derived from the structural entries only —
+/// op counts scale with the node's nonzeros, and the event/predicate
+/// helpers are the very functions the threaded runner calls.
+fn plan_into_sparse(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    topo: Topology,
+    local: LocalAlgo,
+    global: GlobalAlgo,
+) -> (usize, usize) {
+    let p = topo.p();
+    let q = topo.q();
+    let n_nodes = topo.nodes();
+    assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
+
+    for b in builders.iter_mut() {
+        b.mark();
+        b.allreduce();
+        b.copy(4 * p as u64);
+        b.lap(Phase::Prepare);
+    }
+
+    let is_bruck = matches!(global, GlobalAlgo::Bruck { .. });
+    let mut bs_full: Vec<Vec<(u64, u32)>> = if is_bruck && n_nodes > 1 {
+        vec![vec![(0u64, 0u32); n_nodes]; p]
+    } else {
+        Vec::new()
+    };
+
+    let mut t_peak = 0usize;
+    let mut local_rounds = 0usize;
+    let mut global_rounds = 0usize;
+
+    for node in 0..n_nodes {
+        let base = node * q;
+        // One pass over the node's structural entries builds the local
+        // slot matrix and the origin-ordered bucket size lists.
+        let mut slots: Vec<Vec<(u64, u32)>> = vec![vec![(0u64, 0u32); q]; q];
+        let mut bucket_entries: Vec<Vec<Vec<u64>>> = vec![vec![Vec::new(); n_nodes]; q];
+        for j in 0..q {
+            for (dst, val) in sizes.row_view(base + j).entries() {
+                let dest_g = topo.group_rank(dst);
+                let k = topo.node_of(dst);
+                let slot_j = (dest_g + q - j) % q;
+                slots[j][slot_j].0 += val;
+                slots[j][slot_j].1 += 1;
+                bucket_entries[dest_g][k].push(val);
+            }
+        }
+
+        // ---- local phase.
+        match local {
+            LocalAlgo::Tuna { radix } => {
+                assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+                let stats =
+                    plan_core_sparse(builders, base, 1, q, radix, &mut slots, 0, None);
+                t_peak = stats.t_peak;
+                local_rounds = stats.rounds;
+            }
+            LocalAlgo::Linear => {
+                for g in 0..q {
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    for j in 1..q {
+                        let dst = base + (g + j) % q;
+                        let src_g = (g + q - j) % q;
+                        if slots[src_g][j].1 > 0 {
+                            b.recv(base + src_g, j as u32);
+                        }
+                        if slots[g][j].1 > 0 {
+                            b.send(dst, j as u32, slots[g][j].0);
+                        }
+                    }
+                    b.wait();
+                    b.lap(Phase::Data);
+                }
+                t_peak = 0;
+                local_rounds = 1;
+            }
+        }
+
+        let bucket_sum =
+            |g: usize, k: usize| bucket_entries[g][k].iter().sum::<u64>();
+
+        // Own node's bucket is final.
+        for g in 0..q {
+            let b = &mut builders[base + g];
+            b.mark();
+            b.copy(bucket_sum(g, node));
+            b.lap(Phase::Replace);
+        }
+        if n_nodes == 1 {
+            continue;
+        }
+
+        // ---- global phase for this node's ranks, structural events only.
+        match global {
+            GlobalAlgo::Coalesced { block_count } => {
+                assert!(block_count >= 1);
+                for g in 0..q {
+                    let me = base + g;
+                    let b = &mut builders[me];
+                    b.mark();
+                    let staged: u64 = (0..n_nodes)
+                        .filter(|&k| k != node)
+                        .map(|k| bucket_sum(g, k))
+                        .sum();
+                    b.copy(staged);
+                    b.lap(Phase::Rearrange);
+
+                    let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
+                    let events = sparse_node_events(
+                        &topo,
+                        me,
+                        |k| !bucket_entries[g][k].is_empty(),
+                        &recv_nodes,
+                    );
+                    let mut i = 0usize;
+                    while i < events.len() {
+                        let batch = block_count.min(events.len() - i);
+                        for &(off, s, r) in &events[i..i + batch] {
+                            let tag = INTER_TAG + off as u32;
+                            if let Some(nsrc) = r {
+                                b.recv(topo.rank_of(nsrc, g), tag);
+                            }
+                            if let Some(ndst) = s {
+                                b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
+                            }
+                        }
+                        b.wait();
+                        i += batch;
+                    }
+                    b.lap(Phase::InterNode);
+                    global_rounds = global_rounds.max(events.len());
+                }
+            }
+            GlobalAlgo::Staggered { block_count } => {
+                assert!(block_count >= 1);
+                for g in 0..q {
+                    let me = base + g;
+                    let b = &mut builders[me];
+                    b.mark();
+                    let send_counts: Vec<usize> = (0..n_nodes)
+                        .map(|k| if k == node { 0 } else { bucket_entries[g][k].len() })
+                        .collect();
+                    let recv_counts: Vec<usize> = (0..n_nodes)
+                        .map(|k| {
+                            if k == node {
+                                0
+                            } else {
+                                sparse_senders_in_node(sizes, &topo, me, k).len()
+                            }
+                        })
+                        .collect();
+                    let events = sparse_stag_events(&topo, me, &send_counts, &recv_counts);
+                    let mut waits = 0usize;
+                    let mut i = 0usize;
+                    while i < events.len() {
+                        let batch = block_count.min(events.len() - i);
+                        for &(idx, ev) in &events[i..i + batch] {
+                            let tag = INTER_TAG + idx as u32;
+                            if let Some(nsrc) = ev.recv {
+                                b.recv(topo.rank_of(nsrc, g), tag);
+                            }
+                            if let Some((ndst, pos)) = ev.send {
+                                b.send(
+                                    topo.rank_of(ndst, g),
+                                    tag,
+                                    bucket_entries[g][ndst][pos],
+                                );
+                            }
+                        }
+                        b.wait();
+                        waits += 1;
+                        i += batch;
+                    }
+                    b.lap(Phase::InterNode);
+                    global_rounds = global_rounds.max(waits);
+                }
+            }
+            GlobalAlgo::Linear => {
+                global_rounds = global_rounds.max(1);
+                for g in 0..q {
+                    let me = base + g;
+                    let b = &mut builders[me];
+                    b.mark();
+                    let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
+                    let events = sparse_node_events(
+                        &topo,
+                        me,
+                        |k| !bucket_entries[g][k].is_empty(),
+                        &recv_nodes,
+                    );
+                    for &(off, s, r) in &events {
                         let tag = INTER_TAG + off as u32;
-                        b.recv(topo.rank_of(nsrc, g), tag);
-                        b.send(topo.rank_of(ndst, g), tag, bucket_sum(me, ndst));
+                        if let Some(nsrc) = r {
+                            b.recv(topo.rank_of(nsrc, g), tag);
+                        }
+                        if let Some(ndst) = s {
+                            b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
+                        }
                     }
                     b.wait();
-                    round += batch;
+                    b.lap(Phase::InterNode);
                 }
-                b.lap(Phase::InterNode);
             }
-        }
-        GlobalAlgo::Staggered { block_count } => {
-            assert!(block_count >= 1);
-            let total_steps = (n_nodes - 1) * q;
-            rounds += total_steps.div_ceil(block_count);
-            for me in 0..p {
-                let my_node = topo.node_of(me);
-                let g = topo.group_rank(me);
-                let b = &mut builders[me];
-                b.mark();
-                let mut step = 0usize;
-                while step < total_steps {
-                    let batch = block_count.min(total_steps - step);
-                    for i in 0..batch {
-                        let idx = step + i;
-                        let off = idx / q + 1;
-                        let j = idx % q;
-                        let ndst = (my_node + n_nodes - off) % n_nodes;
-                        let nsrc = (my_node + off) % n_nodes;
-                        let tag = INTER_TAG + idx as u32;
-                        b.recv(topo.rank_of(nsrc, g), tag);
-                        b.send(topo.rank_of(ndst, g), tag, bucket_block(me, ndst, j));
+            GlobalAlgo::Bruck { .. } => {
+                for g in 0..q {
+                    for k in 0..n_nodes {
+                        if k != node {
+                            bs_full[base + g][k] =
+                                (bucket_sum(g, k), bucket_entries[g][k].len() as u32);
+                        }
                     }
-                    b.wait();
-                    step += batch;
                 }
-                b.lap(Phase::InterNode);
             }
         }
-        GlobalAlgo::Linear => {
-            rounds += 1;
-            for me in 0..p {
-                let my_node = topo.node_of(me);
-                let g = topo.group_rank(me);
-                let b = &mut builders[me];
-                b.mark();
-                for off in 1..n_nodes {
-                    let ndst = (my_node + n_nodes - off) % n_nodes;
-                    let nsrc = (my_node + off) % n_nodes;
-                    let tag = INTER_TAG + off as u32;
-                    b.recv(topo.rank_of(nsrc, g), tag);
-                    b.send(topo.rank_of(ndst, g), tag, bucket_sum(me, ndst));
-                }
-                b.wait();
-                b.lap(Phase::InterNode);
-            }
-        }
-        GlobalAlgo::Bruck { radix } => {
-            let radix = radix.min(n_nodes).max(2);
-            // One joint simulation per Q-port group {(k, g) : k}.
-            let mut stats = None;
-            for g in 0..q {
-                let mut node_slots: Vec<Vec<u64>> = (0..n_nodes)
-                    .map(|m| {
-                        (0..n_nodes)
-                            .map(|j| {
-                                if j == 0 {
-                                    0
-                                } else {
-                                    bucket_sum(topo.rank_of(m, g), (m + j) % n_nodes)
-                                }
-                            })
-                            .collect()
-                    })
-                    .collect();
-                stats = Some(plan_core(
-                    builders,
-                    g,
-                    q,
-                    n_nodes,
-                    radix,
-                    q,
-                    &mut node_slots,
-                    INTER_TAG,
-                    Some(Phase::InterNode),
-                ));
-            }
-            let stats = stats.expect("Q >= 2 groups compiled");
-            rounds += stats.rounds;
+    }
+    if n_nodes == 1 {
+        return (t_peak, local_rounds);
+    }
+
+    if let GlobalAlgo::Bruck { radix } = global {
+        let radix = radix.min(n_nodes).max(2);
+        for g in 0..q {
+            let mut node_slots: Vec<Vec<(u64, u32)>> = (0..n_nodes)
+                .map(|m| {
+                    (0..n_nodes)
+                        .map(|j| {
+                            if j == 0 {
+                                (0, 0)
+                            } else {
+                                bs_full[topo.rank_of(m, g)][(m + j) % n_nodes]
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let stats = plan_core_sparse(
+                builders,
+                g,
+                q,
+                n_nodes,
+                radix,
+                &mut node_slots,
+                INTER_TAG,
+                Some(Phase::InterNode),
+            );
+            global_rounds = stats.rounds;
             t_peak = t_peak.max(stats.t_peak);
         }
     }
-    (t_peak, rounds)
+    (t_peak, local_rounds + global_rounds)
 }
 
 #[cfg(test)]

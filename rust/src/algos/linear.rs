@@ -165,6 +165,236 @@ pub fn scattered(ctx: &mut RankCtx, mut blocks: Vec<Block>, block_count: usize) 
     out
 }
 
+// ---- structural-sparse variants -------------------------------------------
+//
+// On a sparse workload a rank exchanges with its *structural* peers only:
+// sends follow its row's nonzeros, receives follow the workload
+// transpose (`Counts::senders`). Both the threaded runners below and the
+// sparse plan compilers derive their schedules from the single
+// [`sparse_linear_events`] function, so the two execution modes cannot
+// drift — `tests/replay_equivalence.rs` pins them bit-identical.
+
+/// One merged step of a sparse linear schedule: at most one send and one
+/// receive aimed at (possibly different) peers that share a step key.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct SparseLinearEvent {
+    /// `(dst, bytes)` of the block sent this step.
+    pub send: Option<(usize, u64)>,
+    /// Source of the block received this step.
+    pub recv: Option<usize>,
+}
+
+/// Step-key order of a sparse linear schedule — each mirrors its dense
+/// family's partner structure.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum SparseOrder {
+    /// Round-robin offsets: send to `me + i`, receive from `me − i`
+    /// share step `i` (spread-out / scattered).
+    RoundRobin,
+    /// Absolute peer rank (the OpenMPI-linear order).
+    Ascending,
+    /// Pairwise partners: xor partner `me ^ i` keys step `i` when P is a
+    /// power of two (send and receive face the same peer per step, like
+    /// the dense blocking sendrecv), shifted ring otherwise.
+    Pairwise,
+}
+
+/// The merged per-peer schedule of a sparse linear algorithm for rank
+/// `me`, steps ascending by key. Within a step the receive is posted
+/// before the send.
+pub(crate) fn sparse_linear_events(
+    sizes: &BlockSizes,
+    me: usize,
+    order: SparseOrder,
+) -> Vec<SparseLinearEvent> {
+    let p = sizes.p();
+    let pow2 = p.is_power_of_two();
+    let send_key = |dst: usize| match order {
+        SparseOrder::Ascending => dst,
+        SparseOrder::Pairwise if pow2 => me ^ dst,
+        _ => (dst + p - me) % p,
+    };
+    let recv_key = |src: usize| match order {
+        SparseOrder::Ascending => src,
+        SparseOrder::Pairwise if pow2 => me ^ src,
+        _ => (me + p - src) % p,
+    };
+    let mut map: std::collections::BTreeMap<usize, SparseLinearEvent> =
+        std::collections::BTreeMap::new();
+    for (dst, bytes) in sizes.row_view(me).entries() {
+        if dst == me {
+            continue;
+        }
+        map.entry(send_key(dst)).or_default().send = Some((dst, bytes));
+    }
+    for &src in sizes.senders()[me].iter() {
+        let src = src as usize;
+        if src == me {
+            continue;
+        }
+        map.entry(recv_key(src)).or_default().recv = Some(src);
+    }
+    map.into_values().collect()
+}
+
+/// How a sparse linear schedule groups its steps between waits.
+#[derive(Clone, Copy, Debug)]
+enum SparseBatching {
+    /// Every step posted, one wait (spread-out / OpenMPI linear).
+    SingleWait,
+    /// One wait per step (pairwise).
+    PerStep,
+    /// One wait per `block_count` steps (scattered / vendor).
+    Chunk(usize),
+}
+
+/// Shared sparse runner for all four linear families.
+fn run_linear_sparse(
+    ctx: &mut RankCtx,
+    blocks: Vec<Block>,
+    sizes: &BlockSizes,
+    order: SparseOrder,
+    batching: SparseBatching,
+) -> Vec<Block> {
+    let p = ctx.size();
+    let me = ctx.rank();
+    ctx.phase_mark();
+    let mut by_dest: Vec<Option<Block>> = (0..p).map(|_| None).collect();
+    for b in blocks {
+        by_dest[b.dest as usize] = Some(b);
+    }
+    let mut out: Vec<Block> = Vec::new();
+    // Local delivery of the self block (0-byte charge when absent) —
+    // mirrored unconditionally by the plan compiler.
+    let self_block = by_dest[me].take();
+    ctx.copy(self_block.as_ref().map(|b| b.len()).unwrap_or(0));
+    out.extend(self_block);
+
+    let events = sparse_linear_events(sizes, me, order);
+    let chunk = match batching {
+        SparseBatching::SingleWait => events.len().max(1),
+        SparseBatching::PerStep => 1,
+        SparseBatching::Chunk(bc) => bc.max(1),
+    };
+    let mut i = 0usize;
+    while i < events.len() {
+        let batch = chunk.min(events.len() - i);
+        let mut sends: Vec<SendReq> = Vec::with_capacity(batch);
+        let mut recvs: Vec<RecvReq> = Vec::with_capacity(batch);
+        for ev in &events[i..i + batch] {
+            if let Some(src) = ev.recv {
+                recvs.push(ctx.irecv(src, TAG));
+            }
+            if let Some((dst, _)) = ev.send {
+                let block = by_dest[dst].take().expect("structural send without block");
+                sends.push(ctx.isend(dst, TAG, Payload::Blocks(vec![block])));
+            }
+        }
+        out.extend(
+            ctx.waitall(&sends, &recvs)
+                .into_iter()
+                .flat_map(|pl| pl.into_blocks()),
+        );
+        i += batch;
+    }
+    if events.is_empty() {
+        // Keep the (no-op) wait boundary of the dense schedule shape.
+        ctx.waitall(&[], &[]);
+    }
+    ctx.phase_lap(Phase::Data);
+    out
+}
+
+/// Sparse spread-out: round-robin order over structural peers, one wait.
+pub fn spread_out_sparse(ctx: &mut RankCtx, blocks: Vec<Block>, sizes: &BlockSizes) -> Vec<Block> {
+    run_linear_sparse(ctx, blocks, sizes, SparseOrder::RoundRobin, SparseBatching::SingleWait)
+}
+
+/// Sparse OpenMPI linear: ascending peer order, one wait.
+pub fn ompi_linear_sparse(ctx: &mut RankCtx, blocks: Vec<Block>, sizes: &BlockSizes) -> Vec<Block> {
+    run_linear_sparse(ctx, blocks, sizes, SparseOrder::Ascending, SparseBatching::SingleWait)
+}
+
+/// Sparse pairwise: one synchronized step per structural peer offset.
+pub fn pairwise_sparse(ctx: &mut RankCtx, blocks: Vec<Block>, sizes: &BlockSizes) -> Vec<Block> {
+    run_linear_sparse(ctx, blocks, sizes, SparseOrder::Pairwise, SparseBatching::PerStep)
+}
+
+/// Sparse scattered: round-robin steps batched by `block_count`.
+pub fn scattered_sparse(
+    ctx: &mut RankCtx,
+    blocks: Vec<Block>,
+    sizes: &BlockSizes,
+    block_count: usize,
+) -> Vec<Block> {
+    assert!(block_count >= 1, "block_count must be >= 1");
+    run_linear_sparse(ctx, blocks, sizes, SparseOrder::RoundRobin, SparseBatching::Chunk(block_count))
+}
+
+/// Shared sparse plan compiler — emits exactly the ops
+/// [`run_linear_sparse`] charges, per rank, from the same event
+/// schedule. O(nnz) ops per rank instead of O(P).
+fn plan_linear_sparse(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    order: SparseOrder,
+    batching: SparseBatching,
+) {
+    for (me, b) in builders.iter_mut().enumerate() {
+        b.mark();
+        b.copy(sizes.row_view(me).get(me));
+        let events = sparse_linear_events(sizes, me, order);
+        let chunk = match batching {
+            SparseBatching::SingleWait => events.len().max(1),
+            SparseBatching::PerStep => 1,
+            SparseBatching::Chunk(bc) => bc.max(1),
+        };
+        let mut i = 0usize;
+        while i < events.len() {
+            let batch = chunk.min(events.len() - i);
+            for ev in &events[i..i + batch] {
+                if let Some(src) = ev.recv {
+                    b.recv(src, TAG);
+                }
+                if let Some((dst, bytes)) = ev.send {
+                    b.send(dst, TAG, bytes);
+                }
+            }
+            b.wait();
+            i += batch;
+        }
+        if events.is_empty() {
+            b.wait();
+        }
+        b.lap(Phase::Data);
+    }
+}
+
+/// Compile [`spread_out_sparse`] for every rank.
+pub(crate) fn plan_spread_out_sparse(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    plan_linear_sparse(builders, sizes, SparseOrder::RoundRobin, SparseBatching::SingleWait);
+}
+
+/// Compile [`ompi_linear_sparse`] for every rank.
+pub(crate) fn plan_ompi_linear_sparse(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    plan_linear_sparse(builders, sizes, SparseOrder::Ascending, SparseBatching::SingleWait);
+}
+
+/// Compile [`pairwise_sparse`] for every rank.
+pub(crate) fn plan_pairwise_sparse(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    plan_linear_sparse(builders, sizes, SparseOrder::Pairwise, SparseBatching::PerStep);
+}
+
+/// Compile [`scattered_sparse`] for every rank.
+pub(crate) fn plan_scattered_sparse(
+    builders: &mut [PlanBuilder],
+    sizes: &BlockSizes,
+    block_count: usize,
+) {
+    assert!(block_count >= 1, "block_count must be >= 1");
+    plan_linear_sparse(builders, sizes, SparseOrder::RoundRobin, SparseBatching::Chunk(block_count));
+}
+
 // ---- plan compilers -------------------------------------------------------
 //
 // Each mirrors its run function above op-for-op (same clock charges, same

@@ -209,6 +209,59 @@ impl AlgoKind {
         }
     }
 
+    /// Run this algorithm on one rank of a structurally sparse workload:
+    /// `blocks` holds only the rank's structural blocks, and every family
+    /// follows its sparse schedule (structural peers only — no phantom
+    /// sends). `sizes` supplies the receive-side structure (the workload
+    /// transpose); any rank can reproduce any row, so consulting it is
+    /// control-plane knowledge, not payload access.
+    pub fn dispatch_sparse(
+        &self,
+        ctx: &mut RankCtx,
+        blocks: Vec<Block>,
+        sizes: &BlockSizes,
+    ) -> (Vec<Block>, AlgoStats) {
+        match *self {
+            AlgoKind::SpreadOut => {
+                (linear::spread_out_sparse(ctx, blocks, sizes), AlgoStats::default())
+            }
+            AlgoKind::OmpiLinear => {
+                (linear::ompi_linear_sparse(ctx, blocks, sizes), AlgoStats::default())
+            }
+            AlgoKind::Pairwise => {
+                (linear::pairwise_sparse(ctx, blocks, sizes), AlgoStats::default())
+            }
+            AlgoKind::Scattered { block_count } => (
+                linear::scattered_sparse(ctx, blocks, sizes, block_count),
+                AlgoStats::default(),
+            ),
+            AlgoKind::Vendor => (
+                linear::scattered_sparse(ctx, blocks, sizes, VENDOR_BLOCK_COUNT),
+                AlgoStats::default(),
+            ),
+            AlgoKind::Bruck2 => tuna::run_sparse(ctx, blocks, 2),
+            AlgoKind::Tuna { radix } => tuna::run_sparse(ctx, blocks, radix),
+            AlgoKind::TunaAuto => {
+                // Same agreement preamble as the dense dispatch; the
+                // structural sum is what every rank contributes.
+                let mine: u64 = blocks.iter().map(|b| b.len()).sum();
+                let total = ctx.allreduce_sum(mine);
+                let p = ctx.size();
+                let mean = total as f64 / (p as f64 * p as f64);
+                let radix = ctx
+                    .tuning_table()
+                    .and_then(|t| {
+                        t.lookup_radix(ctx.profile().name, p, ctx.topo().q(), mean)
+                    })
+                    .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
+                tuna::run_sparse(ctx, blocks, radix)
+            }
+            AlgoKind::Hier { local, global } => {
+                hier::run_sparse(ctx, blocks, local, global, sizes)
+            }
+        }
+    }
+
     /// Run this algorithm on one rank. `blocks[d]` must be the block this
     /// rank sends to destination `d`. Returns delivered blocks + stats.
     pub fn dispatch(&self, ctx: &mut RankCtx, blocks: Vec<Block>) -> (Vec<Block>, AlgoStats) {
@@ -349,31 +402,58 @@ pub fn run_alltoallv(
     }
     kind.check(p, engine.topo.q())?;
 
+    let sparse = sizes.is_sparse();
+    // A rank expects exactly one block per structural sender (every rank
+    // for dense workloads). Build the transpose once, up front, so rank
+    // threads share it instead of racing to construct it.
+    let expect_counts: Arc<Vec<usize>> = if sparse {
+        Arc::new(sizes.senders().iter().map(Vec::len).collect())
+    } else {
+        Arc::new(vec![p; p])
+    };
     let fingerprints = Arc::new(sizes.recv_fingerprints());
     let kind_c = *kind;
     let sizes_c = sizes.clone();
     let fp = fingerprints.clone();
+    let expect = expect_counts.clone();
 
     let res = engine.run(move |ctx| {
         let me = ctx.rank();
-        let row = sizes_c.row(me);
         // Real payloads are written once into a per-rank arena and handed
         // to the algorithm as zero-copy views; every hop from here to the
         // destination moves views, not bytes (see comm::buffer).
-        let blocks: Vec<Block> = if real_payloads {
-            DataBuf::pattern_row(me, &row)
-                .into_iter()
-                .enumerate()
-                .map(|(d, data)| Block::new(me, d, data))
-                .collect()
+        let (recv, stats) = if sparse {
+            let entries: Vec<(usize, u64)> = sizes_c.row_view(me).entries().collect();
+            let blocks: Vec<Block> = if real_payloads {
+                DataBuf::pattern_row_entries(me, &entries)
+                    .into_iter()
+                    .zip(entries.iter())
+                    .map(|(data, &(d, _))| Block::new(me, d, data))
+                    .collect()
+            } else {
+                entries
+                    .iter()
+                    .map(|&(d, len)| Block::new(me, d, DataBuf::Phantom(len)))
+                    .collect()
+            };
+            kind_c.dispatch_sparse(ctx, blocks, &sizes_c)
         } else {
-            row.iter()
-                .enumerate()
-                .map(|(d, &len)| Block::new(me, d, DataBuf::Phantom(len)))
-                .collect()
+            let row = sizes_c.row(me);
+            let blocks: Vec<Block> = if real_payloads {
+                DataBuf::pattern_row(me, &row)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(d, data)| Block::new(me, d, data))
+                    .collect()
+            } else {
+                row.iter()
+                    .enumerate()
+                    .map(|(d, &len)| Block::new(me, d, DataBuf::Phantom(len)))
+                    .collect()
+            };
+            kind_c.dispatch(ctx, blocks)
         };
-        let (recv, stats) = kind_c.dispatch(ctx, blocks);
-        let ok = validate_received(me, p, &recv, fp[me], real_payloads);
+        let ok = validate_received(me, expect[me], &recv, fp[me], real_payloads);
         (ok, stats)
     });
 
@@ -448,21 +528,19 @@ pub fn run_alltoallv_replay(
 
 /// Fetch `kind`'s compiled plan for `sizes` from the engine's cache,
 /// compiling on a miss. The key is `(resolved algo spec, counts-matrix
-/// identity)`: the workload handle `(P, Q, dist, seed)` names the matrix
-/// exactly (rows are regenerated from it deterministically), so equal
-/// keys guarantee equal matrices.
+/// identity)`, with the matrix identity hashed incrementally through
+/// [`BlockSizes::identity_hash`] — generator-backed workloads hash their
+/// `(p, dist, seed)` descriptor (rows are a pure function of it, so two
+/// separately constructed handles with equal contents share one cache
+/// entry), materialized workloads hash their structural entries row by
+/// row, never via a dense materialization.
 pub fn plan_for(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<Arc<CommPlan>> {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h: u64 = sizes.identity_hash();
     let mut mix = |v: u64| {
         h ^= v;
         h = h.wrapping_mul(0x100_0000_01b3);
     };
-    mix(sizes.p() as u64);
     mix(engine.topo.q() as u64);
-    mix(sizes.seed());
-    for byte in format!("{:?}", sizes.dist()).bytes() {
-        mix(byte as u64);
-    }
     // `tuna:auto` resolves its radix against the attached tuning table,
     // so the table's identity is part of the plan's inputs (the Arc
     // address is unique for the table's lifetime; `Engine::with_tuning`
@@ -493,29 +571,54 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
     }
     kind.check(p, topo.q())?;
 
+    let sparse = sizes.is_sparse();
     let mut builders: Vec<PlanBuilder> = (0..p).map(|me| PlanBuilder::new(me, p)).collect();
     let (t_peak, rounds) = match *kind {
         AlgoKind::SpreadOut => {
-            linear::plan_spread_out(&mut builders, sizes);
+            if sparse {
+                linear::plan_spread_out_sparse(&mut builders, sizes);
+            } else {
+                linear::plan_spread_out(&mut builders, sizes);
+            }
             (0, 0)
         }
         AlgoKind::OmpiLinear => {
-            linear::plan_ompi_linear(&mut builders, sizes);
+            if sparse {
+                linear::plan_ompi_linear_sparse(&mut builders, sizes);
+            } else {
+                linear::plan_ompi_linear(&mut builders, sizes);
+            }
             (0, 0)
         }
         AlgoKind::Pairwise => {
-            linear::plan_pairwise(&mut builders, sizes);
+            if sparse {
+                linear::plan_pairwise_sparse(&mut builders, sizes);
+            } else {
+                linear::plan_pairwise(&mut builders, sizes);
+            }
             (0, 0)
         }
         AlgoKind::Scattered { block_count } => {
-            linear::plan_scattered(&mut builders, sizes, block_count);
+            if sparse {
+                linear::plan_scattered_sparse(&mut builders, sizes, block_count);
+            } else {
+                linear::plan_scattered(&mut builders, sizes, block_count);
+            }
             (0, 0)
         }
         AlgoKind::Vendor => {
-            linear::plan_scattered(&mut builders, sizes, VENDOR_BLOCK_COUNT);
+            if sparse {
+                linear::plan_scattered_sparse(&mut builders, sizes, VENDOR_BLOCK_COUNT);
+            } else {
+                linear::plan_scattered(&mut builders, sizes, VENDOR_BLOCK_COUNT);
+            }
             (0, 0)
         }
+        AlgoKind::Bruck2 if sparse => tuna::plan_into_sparse(&mut builders, sizes, 2),
         AlgoKind::Bruck2 => tuna::plan_into(&mut builders, sizes, 2),
+        AlgoKind::Tuna { radix } if sparse => {
+            tuna::plan_into_sparse(&mut builders, sizes, radix)
+        }
         AlgoKind::Tuna { radix } => tuna::plan_into(&mut builders, sizes, radix),
         AlgoKind::TunaAuto => {
             // Dispatch preamble: the radix-agreement allreduce, timed
@@ -526,7 +629,7 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
                 b.allreduce();
             }
             let total = (0..p)
-                .map(|s| sizes.row(s).iter().sum::<u64>())
+                .map(|s| sizes.row_view(s).total())
                 .fold(0u64, u64::wrapping_add);
             let mean = total as f64 / (p as f64 * p as f64);
             let radix = engine
@@ -534,7 +637,11 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
                 .as_deref()
                 .and_then(|t| t.lookup_radix(engine.profile.name, p, topo.q(), mean))
                 .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
-            tuna::plan_into(&mut builders, sizes, radix)
+            if sparse {
+                tuna::plan_into_sparse(&mut builders, sizes, radix)
+            } else {
+                tuna::plan_into(&mut builders, sizes, radix)
+            }
         }
         AlgoKind::Hier { local, global } => {
             hier::plan_into(&mut builders, sizes, topo, local, global)
@@ -550,14 +657,16 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
     })
 }
 
-/// Check a received block set: complete origin coverage, correct
-/// destination, fingerprint-validated sizes, and (in real mode) intact
-/// byte patterns.
-fn validate_received(me: usize, p: usize, recv: &[Block], expect_fp: u64, real: bool) -> bool {
-    if recv.len() != p {
+/// Check a received block set: complete origin coverage (`expect_n`
+/// structural senders — P for dense workloads), correct destination,
+/// fingerprint-validated sizes, and (in real mode) intact byte patterns.
+/// A phantom send for a structurally absent pair shows up as an excess
+/// block and fails the count check.
+fn validate_received(me: usize, expect_n: usize, recv: &[Block], expect_fp: u64, real: bool) -> bool {
+    if recv.len() != expect_n {
         return false;
     }
-    let mut origins = HashSet::with_capacity(p);
+    let mut origins = HashSet::with_capacity(expect_n);
     let mut fp = 0u64;
     for b in recv {
         if b.dest as usize != me {
@@ -833,6 +942,68 @@ mod tests {
         let d = plan_for(&e, &kind, &other).unwrap();
         assert!(!Arc::ptr_eq(&a, &d));
         assert_eq!(e.plan_cache.len(), 3);
+    }
+
+    #[test]
+    fn equal_content_workloads_share_one_cache_entry() {
+        use crate::comm::{Engine, Topology};
+        use crate::model::MachineProfile;
+        use crate::workload::Dist;
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(16, 4));
+        let kind = AlgoKind::Tuna { radix: 4 };
+        // Two *separately constructed* generator-backed workloads with
+        // equal contents (same descriptor) hit the same cache entry —
+        // the identity hash is content identity, not object identity.
+        let a = BlockSizes::generate(16, Dist::Sparse { nnz: 3, max: 128 }, 9);
+        let b = BlockSizes::generate(16, Dist::Sparse { nnz: 3, max: 128 }, 9);
+        let pa = plan_for(&e, &kind, &a).unwrap();
+        let pb = plan_for(&e, &kind, &b).unwrap();
+        assert!(Arc::ptr_eq(&pa, &pb), "equal generator descriptors must share a plan");
+        assert_eq!(e.plan_cache.stats(), (1, 1));
+        // Equal-content CSR workloads, built independently, share too —
+        // hashed incrementally through the row views, no dense
+        // materialization.
+        let rows = || {
+            vec![
+                vec![(1usize, 16u64), (3, 8)],
+                vec![],
+                vec![(0, 24)],
+                vec![(2, 8)],
+            ]
+        };
+        let c1 = BlockSizes::from_sparse_rows(4, rows());
+        let c2 = BlockSizes::from_sparse_rows(4, rows());
+        let e4 = Engine::new(MachineProfile::test_flat(), Topology::new(4, 2));
+        let pc1 = plan_for(&e4, &kind, &c1).unwrap();
+        let pc2 = plan_for(&e4, &kind, &c2).unwrap();
+        assert!(Arc::ptr_eq(&pc1, &pc2));
+        assert_eq!(e4.plan_cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn sparse_runs_validate_and_skip_absent_pairs() {
+        use crate::comm::{Engine, Topology};
+        use crate::model::MachineProfile;
+        use crate::workload::Dist;
+        let (p, q) = (16usize, 4usize);
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, Dist::Sparse { nnz: 4, max: 256 }, 11);
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Tuna { radix: 4 },
+            AlgoKind::TunaAuto,
+            AlgoKind::hier_coalesced(2, 1),
+        ] {
+            let rep = run_alltoallv(&e, &kind, &sizes, true).unwrap();
+            assert!(rep.validated, "{}", kind.name());
+        }
+        // The structural message budget: a sparse spread-out run sends
+        // exactly one message per off-diagonal structural entry.
+        let offdiag: u64 = (0..p)
+            .map(|s| sizes.row_view(s).entries().filter(|&(d, _)| d != s).count() as u64)
+            .sum();
+        let rep = run_alltoallv(&e, &AlgoKind::SpreadOut, &sizes, false).unwrap();
+        assert_eq!(rep.counters.total_msgs(), offdiag);
     }
 
     #[test]

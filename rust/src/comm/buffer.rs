@@ -395,15 +395,35 @@ impl DataBuf {
         DataBuf::from_vec(v)
     }
 
-    /// Pattern payloads for a whole send row, written once into a shared
-    /// arena and handed out as zero-copy per-destination views — one
-    /// allocation and one host-copy charge per rank instead of one per
-    /// destination.
+    /// Pattern payloads for a whole dense send row (index =
+    /// destination), written once into a shared arena and handed out as
+    /// zero-copy per-destination views — one allocation and one
+    /// host-copy charge per rank instead of one per destination.
     pub fn pattern_row(origin: usize, sizes: &[u64]) -> Vec<DataBuf> {
         let total: u64 = sizes.iter().sum();
+        DataBuf::pattern_views(origin, sizes.iter().copied().enumerate(), sizes.len(), total)
+    }
+
+    /// [`DataBuf::pattern_row`] over the *structural* `(dest, len)`
+    /// entries of a sparse send row: the arena holds only structural
+    /// bytes, absent destinations get no buffer and no rope segment, and
+    /// the returned views align with `entries` positionally.
+    pub fn pattern_row_entries(origin: usize, entries: &[(usize, u64)]) -> Vec<DataBuf> {
+        let total: u64 = entries.iter().map(|&(_, len)| len).sum();
+        DataBuf::pattern_views(origin, entries.iter().copied(), entries.len(), total)
+    }
+
+    /// Shared arena writer behind the two `pattern_row*` adapters —
+    /// streams the `(dest, len)` entries without materializing them.
+    fn pattern_views(
+        origin: usize,
+        entries: impl Iterator<Item = (usize, u64)>,
+        count: usize,
+        total: u64,
+    ) -> Vec<DataBuf> {
         let mut arena = Vec::with_capacity(total as usize);
-        let mut bounds = Vec::with_capacity(sizes.len());
-        for (dest, &len) in sizes.iter().enumerate() {
+        let mut bounds = Vec::with_capacity(count);
+        for (dest, len) in entries {
             let start = arena.len() as u64;
             append_pattern(&mut arena, origin, dest, len);
             bounds.push((start, len));
@@ -638,6 +658,23 @@ mod tests {
         }
         // The four checks read 64 bytes total on top of the 64 written.
         assert_eq!(host_copied(), 128);
+    }
+
+    #[test]
+    fn pattern_row_entries_skips_absent_destinations() {
+        reset_host_copied();
+        // Structural entries only: dests 1 and 5 of an 8-wide row.
+        let bufs = DataBuf::pattern_row_entries(3, &[(1, 24), (5, 40)]);
+        assert_eq!(host_copied(), 64, "one arena write, structural bytes only");
+        assert_eq!(bufs.len(), 2);
+        assert_eq!(bufs[0].len(), 24);
+        assert_eq!(bufs[1].len(), 40);
+        bufs[0].check_pattern(3, 1).unwrap();
+        bufs[1].check_pattern(3, 5).unwrap();
+        // A zero-size entry yields an empty buffer with no rope segment.
+        let z = DataBuf::pattern_row_entries(3, &[(2, 0)]);
+        assert_eq!(z[0].len(), 0);
+        assert_eq!(z[0].rope().segment_count(), 0);
     }
 
     #[test]

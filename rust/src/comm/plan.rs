@@ -93,6 +93,17 @@ impl CommPlan {
     pub fn total_ops(&self) -> usize {
         self.ranks.iter().map(|r| r.ops.len()).sum()
     }
+
+    /// Largest single-rank op list (plan size telemetry).
+    pub fn peak_rank_ops(&self) -> usize {
+        self.ranks.iter().map(|r| r.ops.len()).max().unwrap_or(0)
+    }
+
+    /// Peak per-rank plan memory in bytes — what `perf_engine` records
+    /// as the per-row plan envelope.
+    pub fn peak_rank_bytes(&self) -> usize {
+        self.peak_rank_ops() * std::mem::size_of::<PlanOp>()
+    }
 }
 
 /// Per-rank plan emitter. Compilers drive one builder per rank with the

@@ -27,10 +27,16 @@ pub struct RunConfig {
     /// Engine rank budget for logarithmic algorithms.
     pub engine_limit_log: usize,
     /// Rank budget for plan/replay execution of logarithmic algorithms
-    /// (linear families are additionally capped — their plans hold O(P²)
-    /// ops). Compilation materializes the P x P counts matrix, so the
-    /// default keeps peak memory comfortably in the hundreds of MB.
+    /// on *dense* workloads (linear families are additionally capped —
+    /// their dense plans hold O(P²) ops). Plan compilation streams row
+    /// views (O(P·K) working memory, never the P×P matrix), so the
+    /// default covers P = 8192 comfortably.
     pub engine_limit_replay: usize,
+    /// Rank budget for plan/replay execution of structurally *sparse*
+    /// workloads (`dist=sparse:nnz=K`), every family included: sparse
+    /// plans hold O(nnz) ops, so exact bit-identical replay extends to
+    /// P ≥ 32k.
+    pub engine_limit_replay_sparse: usize,
     /// Execution mode for exact-fidelity points: threaded oracle,
     /// plan/replay, or auto (replay phantom, thread real).
     pub mode: ExecMode,
@@ -52,7 +58,8 @@ impl Default for RunConfig {
             real_payloads: false,
             engine_limit_linear: 512,
             engine_limit_log: 2048,
-            engine_limit_replay: 4096,
+            engine_limit_replay: 8192,
+            engine_limit_replay_sparse: 32768,
             mode: ExecMode::Auto,
             tuning: None,
         }
@@ -62,8 +69,9 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Parse `key=value` arguments: `p=128 q=16 profile=polaris
     /// dist=uniform:1024 seed=7 iters=20 real=true limit-linear=256
-    /// limit-log=1024 limit-replay=4096 mode=replay`. Unknown keys are
-    /// errors (typos should not pass silently).
+    /// limit-log=1024 limit-replay=8192 limit-replay-sparse=32768
+    /// mode=replay`. Unknown keys are errors (typos should not pass
+    /// silently).
     pub fn parse_args(args: &[String]) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         for arg in args {
@@ -83,6 +91,7 @@ impl RunConfig {
                 "limit-linear" => cfg.engine_limit_linear = parse_num(k, v)?,
                 "limit-log" => cfg.engine_limit_log = parse_num(k, v)?,
                 "limit-replay" => cfg.engine_limit_replay = parse_num(k, v)?,
+                "limit-replay-sparse" => cfg.engine_limit_replay_sparse = parse_num(k, v)?,
                 "mode" => {
                     cfg.mode = ExecMode::parse(v).ok_or_else(|| {
                         TunaError::config(format!(
@@ -100,7 +109,7 @@ impl RunConfig {
                 "dist" => {
                     cfg.dist = Dist::parse(v).ok_or_else(|| {
                         TunaError::config(format!(
-                            "unknown dist `{v}` (try uniform:1024, normal, powerlaw, const:64, fft-n1, fft-n2)"
+                            "unknown dist `{v}` (try uniform:1024, normal, powerlaw, const:64, fft-n1, fft-n2, sparse:nnz=16)"
                         ))
                     })?
                 }
@@ -226,9 +235,17 @@ mod tests {
 
     #[test]
     fn parse_mode_and_replay_limit() {
-        let cfg = RunConfig::parse_args(&args("p=64 q=8 mode=replay limit-replay=8192")).unwrap();
+        let cfg = RunConfig::parse_args(&args(
+            "p=64 q=8 mode=replay limit-replay=16384 limit-replay-sparse=65536",
+        ))
+        .unwrap();
         assert_eq!(cfg.mode, ExecMode::Replay);
-        assert_eq!(cfg.engine_limit_replay, 8192);
+        assert_eq!(cfg.engine_limit_replay, 16384);
+        assert_eq!(cfg.engine_limit_replay_sparse, 65536);
+        // Mode-aware defaults: dense log plans stream (8192), sparse
+        // plans scale with nnz (32768).
+        assert_eq!(RunConfig::default().engine_limit_replay, 8192);
+        assert_eq!(RunConfig::default().engine_limit_replay_sparse, 32768);
         assert_eq!(RunConfig::default().mode, ExecMode::Auto);
         assert!(RunConfig::parse_args(&args("mode=turbo")).is_err());
         // Replay never materializes payload bytes: the combination with
@@ -255,6 +272,15 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_sparse_dist() {
+        let cfg = RunConfig::parse_args(&args("p=64 q=8 dist=sparse:nnz=16")).unwrap();
+        assert_eq!(cfg.dist, Dist::Sparse { nnz: 16, max: 1024 });
+        let cfg = RunConfig::parse_args(&args("p=64 q=8 dist=sparse:nnz=4,max=256")).unwrap();
+        assert_eq!(cfg.dist, Dist::Sparse { nnz: 4, max: 256 });
+        assert!(RunConfig::parse_args(&args("dist=sparse")).is_err());
     }
 
     #[test]

@@ -25,6 +25,12 @@ use crate::workload::BlockSizes;
 /// memory than the point is worth; the analytic model takes over.
 pub const REPLAY_LIMIT_LINEAR: usize = 1024;
 
+/// Per-row structural-nonzero bound under which the sparse replay budget
+/// (`limit-replay-sparse`) applies — the "nnz ≤ 64 per row" envelope the
+/// large-P acceptance points run at. Denser "sparse" workloads take the
+/// dense budgets instead (their plans approach the dense op counts).
+pub const SPARSE_REPLAY_NNZ_ROW: usize = 64;
+
 /// How a measurement was produced.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fidelity {
@@ -66,6 +72,13 @@ impl Measurement {
 /// O(P²) messages so their budget is tighter than the logarithmic
 /// family's, and the plan/replay executor (no rank threads) affords a
 /// much larger exact budget than thread-per-rank execution.
+///
+/// The replay budget is **sparsity-aware**: structurally sparse
+/// workloads compile plans whose op count scales with the nonzeros, not
+/// P² (linear families included), so they use the far larger
+/// `limit-replay-sparse` budget — exact replay at P ≥ 32k — while dense
+/// workloads keep the dense caps (streaming compilation holds O(P·K)
+/// working memory, but dense linear plans still hold O(P²) ops).
 pub fn choose_fidelity(kind: &AlgoKind, p: usize, cfg: &RunConfig) -> Fidelity {
     let linear = matches!(
         kind,
@@ -81,7 +94,19 @@ pub fn choose_fidelity(kind: &AlgoKind, p: usize, cfg: &RunConfig) -> Fidelity {
         cfg.engine_limit_log
     };
     if cfg.mode.resolve(cfg.real_payloads) == ExecMode::Replay {
-        let replay_limit = if linear {
+        // Sparse plans hold O(total nnz) ops, so the sparse budget is a
+        // *volume* budget, not just a rank count: it applies only while
+        // the expected nonzeros stay inside the documented envelope
+        // (nnz_row <= SPARSE_REPLAY_NNZ_ROW, the acceptance bound). A
+        // sparse dist dense enough to escape it (nnz ~ P would rebuild
+        // the O(P²) plans the dense caps exist to prevent) falls through
+        // to the dense rules below.
+        let sparse_within_budget = cfg.dist.sparse_nnz().is_some_and(|nnz| {
+            p <= cfg.engine_limit_replay_sparse && nnz <= SPARSE_REPLAY_NNZ_ROW
+        });
+        let replay_limit = if sparse_within_budget {
+            cfg.engine_limit_replay_sparse
+        } else if linear {
             cfg.engine_limit_replay.min(REPLAY_LIMIT_LINEAR)
         } else {
             cfg.engine_limit_replay
@@ -89,10 +114,10 @@ pub fn choose_fidelity(kind: &AlgoKind, p: usize, cfg: &RunConfig) -> Fidelity {
         if p <= replay_limit {
             return Fidelity::Replay;
         }
-        // Beyond the replay budget (O(P²)-op plans for linear families,
-        // O(P²) counts-matrix memory in general), fall through: the
-        // threaded oracle still applies its own budget, so replay never
-        // shrinks exact coverage — it only extends it.
+        // Beyond the replay budget (O(P²)-op plans for dense linear
+        // families), fall through: the threaded oracle still applies its
+        // own budget, so replay never shrinks exact coverage — it only
+        // extends it.
     }
     if p <= threaded_limit {
         Fidelity::Engine
@@ -141,8 +166,8 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
         }
         Fidelity::Analytic => {
             let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
-            let mean = sizes.mean_size();
-            let est = Estimator::new(&cfg.profile, topo).estimate(kind, mean);
+            let shape = crate::model::analytic::WorkloadShape::of(&sizes);
+            let est = Estimator::new(&cfg.profile, topo).estimate_shape(kind, &shape);
             Ok(Measurement {
                 algo: *kind,
                 summary: Summary::of(&[est.makespan]),
@@ -247,13 +272,13 @@ mod tests {
     fn replay_budget_extends_exact_fidelity() {
         // Phantom + auto: log-family points replay far past the thread
         // budget; linear families are capped at REPLAY_LIMIT_LINEAR.
-        let c = RunConfig::default(); // limits 512 / 2048 / 4096, auto
+        let c = RunConfig::default(); // limits 512 / 2048 / 8192 / 32768, auto
         assert_eq!(
-            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 4096, &c),
+            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 8192, &c),
             Fidelity::Replay
         );
         assert_eq!(
-            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 8192, &c),
+            choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 16384, &c),
             Fidelity::Analytic
         );
         assert_eq!(
@@ -285,6 +310,55 @@ mod tests {
             choose_fidelity(&AlgoKind::SpreadOut, 8192, &wide_linear),
             Fidelity::Engine
         );
+    }
+
+    #[test]
+    fn sparse_workloads_use_the_sparse_replay_budget() {
+        // Sparse plans scale with nnz, so the far larger sparse budget
+        // applies — to every family, linear ones included.
+        let c = RunConfig {
+            dist: Dist::Sparse { nnz: 16, max: 1024 },
+            ..RunConfig::default()
+        };
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 4 }, 32768, &c),
+            Fidelity::Replay
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, 32768, &c),
+            Fidelity::Replay
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 4 }, 65536, &c),
+            Fidelity::Analytic
+        );
+        // Dense workloads keep the dense caps.
+        let d = RunConfig::default();
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, 32768, &d),
+            Fidelity::Analytic
+        );
+        // A "sparse" dist dense enough to escape the nnz envelope must
+        // not smuggle O(P²)-scale plans past the dense caps: it falls
+        // back to the dense rules (linear cap / dense log cap).
+        let dense_sparse = RunConfig {
+            dist: Dist::Sparse { nnz: 32768, max: 1024 },
+            ..RunConfig::default()
+        };
+        assert_eq!(
+            choose_fidelity(&AlgoKind::SpreadOut, 32768, &dense_sparse),
+            Fidelity::Analytic
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 4 }, 32768, &dense_sparse),
+            Fidelity::Analytic
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 4 }, 8192, &dense_sparse),
+            Fidelity::Replay,
+            "inside the dense log budget the fallback still replays"
+        );
+        assert_eq!(SPARSE_REPLAY_NNZ_ROW, 64);
     }
 
     #[test]

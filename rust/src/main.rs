@@ -84,12 +84,16 @@ USAGE:
   tuna list                                list algorithms / profiles / dists
 
 CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
-  (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2), seed, iters,
-  real (true|false), limit-linear, limit-log, limit-replay,
+  (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2|sparse:nnz=K[,max=S]),
+  seed, iters, real (true|false), limit-linear, limit-log, limit-replay,
+  limit-replay-sparse,
   mode (auto|threaded|replay: auto replays phantom workloads on the
   single-threaded plan executor — bit-identical to the threaded engine,
   and the way to run P=4096+ points, e.g. `tuna run algo=tuna:r=2
-  p=4096 q=32 mode=replay`)
+  p=4096 q=32 mode=replay`; structurally sparse workloads compile
+  O(nnz)-op plans, so exact replay reaches P=32768, e.g. `tuna run
+  dist=sparse:nnz=16 algo=hier:l=tuna:r=4,g=coalesced:b=2 p=32768 q=64
+  mode=replay`)
 SELECT KEYS: shortlist (engine-refined candidates, default 6),
   refine (true|false), skewed (true|false: also stress the shortlist
   under a heavy-tailed companion workload), top (rows printed),
@@ -470,7 +474,10 @@ fn cmd_list() -> Result<()> {
         println!("  {a}");
     }
     println!("profiles: polaris, fugaku, test-flat");
-    println!("distributions: uniform:S, normal, powerlaw, const:S, fft-n1, fft-n2");
+    println!(
+        "distributions: uniform:S, normal, powerlaw, const:S, fft-n1, fft-n2, \
+         sparse:nnz=K[,max=S]"
+    );
     println!("figures: {}", harness::ALL_FIGURES.join(", "));
     Ok(())
 }

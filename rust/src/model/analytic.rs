@@ -14,12 +14,56 @@ use crate::algos::{radix, tuning, AlgoKind, GlobalAlgo, LocalAlgo, VENDOR_BLOCK_
 use crate::comm::clock::Clock;
 use crate::comm::{Phase, PhaseBreakdown, Topology};
 use crate::model::{Link, MachineProfile};
+use crate::workload::BlockSizes;
 
 /// Analytic estimate: simulated seconds plus a phase breakdown.
 #[derive(Clone, Debug)]
 pub struct Estimate {
     pub makespan: f64,
     pub phases: PhaseBreakdown,
+}
+
+/// Sparsity-aware workload summary consumed by
+/// [`Estimator::estimate_shape`] and the selector: enough structure to
+/// rank sparse workloads sensibly without touching the matrix again.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadShape {
+    /// Mean block size over all P² pairs (absent entries count as 0) —
+    /// the quantity the dense estimator always keyed on.
+    pub mean_block: f64,
+    /// Mean size of the structural entries alone (== `mean_block` for
+    /// dense workloads).
+    pub mean_structural: f64,
+    /// Mean structural destinations per row (P for dense workloads).
+    pub nnz_row: f64,
+    /// Structural sparsity: absent pairs exchange nothing at all, and
+    /// the sparse-aware schedules skip them.
+    pub sparse: bool,
+}
+
+impl WorkloadShape {
+    /// Summarize a workload — one sampled pass over the row views
+    /// ([`BlockSizes::shape_stats`]), not three.
+    pub fn of(sizes: &BlockSizes) -> WorkloadShape {
+        let (mean_block, mean_structural, nnz_row) = sizes.shape_stats();
+        WorkloadShape {
+            mean_block,
+            mean_structural,
+            nnz_row,
+            sparse: sizes.is_sparse(),
+        }
+    }
+
+    /// A dense shape from a bare per-pair mean — what every pre-sparsity
+    /// call site supplies; routed to the unchanged dense estimator.
+    pub fn dense(mean_block: f64) -> WorkloadShape {
+        WorkloadShape {
+            mean_block,
+            mean_structural: mean_block,
+            nnz_row: f64::INFINITY,
+            sparse: false,
+        }
+    }
 }
 
 /// Single-rank replay estimator.
@@ -48,6 +92,212 @@ impl<'a> Estimator<'a> {
                 self.tuna(mean_block, tuning::heuristic_radix(self.topo.p(), mean_block))
             }
             AlgoKind::Hier { local, global } => self.hier(mean_block, local, global),
+        }
+    }
+
+    /// Shape-aware estimate. Dense shapes take the exact dense paths
+    /// (bit-identical to [`Estimator::estimate`], which the golden
+    /// snapshots pin); sparse shapes model the *sparse-aware* schedules —
+    /// linear families send ~nnz messages instead of P−1, the
+    /// hierarchical global phase ships only expectedly non-empty node
+    /// buckets, and the log families keep their structural round count
+    /// with volume scaled by the per-pair mean.
+    pub fn estimate_shape(&self, kind: &AlgoKind, shape: &WorkloadShape) -> Estimate {
+        if !shape.sparse {
+            return self.estimate(kind, shape.mean_block);
+        }
+        let p = self.topo.p();
+        let nnz = shape.nnz_row.max(0.0).min(p as f64);
+        let s_nz = shape.mean_structural.max(0.0);
+        match *kind {
+            AlgoKind::SpreadOut => self.linear_sparse(s_nz, nnz, usize::MAX, false),
+            AlgoKind::OmpiLinear => self.linear_sparse(s_nz, nnz, usize::MAX, true),
+            AlgoKind::Scattered { block_count } => {
+                self.linear_sparse(s_nz, nnz, block_count, false)
+            }
+            AlgoKind::Vendor => self.linear_sparse(s_nz, nnz, VENDOR_BLOCK_COUNT, false),
+            AlgoKind::Pairwise => self.linear_sparse(s_nz, nnz, 1, false),
+            // Log families run their structural schedule regardless of
+            // sparsity; per-round volume scales through the per-pair
+            // mean, which the dense formulas already key on.
+            AlgoKind::Bruck2 => self.tuna(shape.mean_block, 2),
+            AlgoKind::Tuna { radix } => self.tuna(shape.mean_block, radix),
+            AlgoKind::TunaAuto => self.tuna(
+                shape.mean_block,
+                tuning::heuristic_radix(p, shape.mean_block),
+            ),
+            AlgoKind::Hier { local, global } => {
+                self.hier_sparse(shape.mean_block, s_nz, nnz, local, global)
+            }
+        }
+    }
+
+    /// Sparse linear family: ~nnz structural messages (instead of P−1)
+    /// of the structural mean size, batched by `block_count`.
+    fn linear_sparse(&self, s_nz: f64, nnz: f64, block_count: usize, incast: bool) -> Estimate {
+        let p = self.topo.p();
+        let msgs = (nnz * (p.saturating_sub(1)) as f64 / p as f64).round() as usize;
+        let bytes = s_nz.round() as u64;
+        let mut clock = Clock::new();
+        let mut phases = PhaseBreakdown::default();
+        let mut sent = 0usize;
+        while sent < msgs {
+            let batch = block_count.max(1).min(msgs - sent);
+            let mut mirror: Vec<(f64, u64, Link)> = Vec::with_capacity(batch);
+            let mut send_done = 0.0f64;
+            for i in 0..batch {
+                // Structural peers land on arbitrary offsets; spread the
+                // link classes like the dense round-robin does.
+                let dst = 1 + (sent + i) % (p - 1);
+                let link = self.link_to(dst);
+                let t = clock.post_send(self.profile, link, bytes, p);
+                send_done = send_done.max(t.complete);
+                mirror.push((t.arrive, bytes, link));
+            }
+            if incast {
+                let first = mirror.iter().map(|m| m.0).fold(f64::INFINITY, f64::min);
+                for m in mirror.iter_mut() {
+                    m.0 = first;
+                }
+            }
+            let completions = clock.drain_receives(self.profile, &mirror);
+            let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+            clock.finish_wait(last);
+            sent += batch;
+        }
+        phases.add(Phase::Data, clock.now);
+        Estimate {
+            makespan: clock.now,
+            phases,
+        }
+    }
+
+    /// Sparse hierarchical composition: the dense local phase (per-pair
+    /// mean already dilutes volume), then a global phase shipping only
+    /// the expectedly non-empty node buckets.
+    fn hier_sparse(
+        &self,
+        s: f64,
+        s_nz: f64,
+        nnz: f64,
+        local: LocalAlgo,
+        global: GlobalAlgo,
+    ) -> Estimate {
+        let p = self.topo.p();
+        let q = self.topo.q();
+        let n = self.topo.nodes();
+        let mut clock = Clock::new();
+        let mut phases = PhaseBreakdown::default();
+
+        let t0 = clock.now;
+        self.allreduce_cost(&mut clock);
+        clock.charge_copy(self.profile, 4 * p as u64);
+        phases.add(Phase::Prepare, clock.now - t0);
+
+        match local {
+            LocalAlgo::Tuna { radix } => {
+                self.tuna_core_replay(
+                    &mut clock,
+                    &mut phases,
+                    q,
+                    radix.clamp(2, q.max(2)),
+                    n,
+                    s,
+                    Some(Link::Local),
+                    None,
+                );
+            }
+            LocalAlgo::Linear => {
+                let t1 = clock.now;
+                let bytes = (n as f64 * s).round() as u64;
+                let mut mirror = Vec::with_capacity(q - 1);
+                let mut send_done = 0.0f64;
+                for _ in 0..q.saturating_sub(1) {
+                    let t = clock.post_send(self.profile, Link::Local, bytes, p);
+                    send_done = send_done.max(t.complete);
+                    mirror.push((t.arrive, bytes, Link::Local));
+                }
+                let completions = clock.drain_receives(self.profile, &mirror);
+                let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+                clock.finish_wait(last);
+                phases.add(Phase::Data, clock.now - t1);
+            }
+        }
+
+        let t1 = clock.now;
+        clock.charge_copy(self.profile, (q as f64 * s).round() as u64);
+        phases.add(Phase::Replace, clock.now - t1);
+        if n == 1 {
+            return Estimate {
+                makespan: clock.now,
+                phases,
+            };
+        }
+
+        // Expected non-empty foreign buckets per rank: each of the ~nnz
+        // structural destinations of each of the node's Q rows lands on a
+        // uniform node, so a bucket is empty with probability
+        // (1 − 1/P·…)^Q ≈ (1 − nnz/P)^Q.
+        let p_bucket = 1.0 - (1.0 - (nnz / p as f64).min(1.0)).powi(q as i32);
+        let eff_buckets = (((n - 1) as f64) * p_bucket).ceil() as usize;
+        let inter_total = ((n - 1) as f64 * q as f64 * s).round() as u64;
+
+        match global {
+            GlobalAlgo::Bruck { radix } => {
+                self.tuna_core_replay(
+                    &mut clock,
+                    &mut phases,
+                    n,
+                    radix.clamp(2, n.max(2)),
+                    q,
+                    s,
+                    Some(Link::Global),
+                    Some(Phase::InterNode),
+                );
+            }
+            GlobalAlgo::Coalesced { .. } | GlobalAlgo::Staggered { .. } | GlobalAlgo::Linear => {
+                let (msg_bytes, total_msgs, block_count, rearrange) = match global {
+                    GlobalAlgo::Coalesced { block_count } => {
+                        let m = eff_buckets.max(usize::from(inter_total > 0));
+                        ((inter_total as f64 / m.max(1) as f64).round() as u64, m, block_count, true)
+                    }
+                    GlobalAlgo::Staggered { block_count } => {
+                        let m = ((n - 1) as f64 * q as f64 * (nnz / p as f64)).ceil() as usize;
+                        (s_nz.round() as u64, m, block_count, false)
+                    }
+                    _ => {
+                        let m = eff_buckets.max(usize::from(inter_total > 0));
+                        ((inter_total as f64 / m.max(1) as f64).round() as u64, m, m.max(1), false)
+                    }
+                };
+                if rearrange {
+                    let t2 = clock.now;
+                    clock.charge_copy(self.profile, inter_total);
+                    phases.add(Phase::Rearrange, clock.now - t2);
+                }
+                let t3 = clock.now;
+                let mut sent = 0usize;
+                while sent < total_msgs {
+                    let batch = block_count.max(1).min(total_msgs - sent);
+                    let mut mirror = Vec::with_capacity(batch);
+                    let mut send_done = 0.0f64;
+                    for _ in 0..batch {
+                        let t = clock.post_send(self.profile, Link::Global, msg_bytes, p);
+                        send_done = send_done.max(t.complete);
+                        mirror.push((t.arrive, msg_bytes, Link::Global));
+                    }
+                    let completions = clock.drain_receives(self.profile, &mirror);
+                    let last = completions.iter().fold(send_done, |a, &b| a.max(b));
+                    clock.finish_wait(last);
+                    sent += batch;
+                }
+                phases.add(Phase::InterNode, clock.now - t3);
+            }
+        }
+
+        Estimate {
+            makespan: clock.now,
+            phases,
         }
     }
 
@@ -396,6 +646,77 @@ mod tests {
             "estimate took {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn dense_shape_routes_to_the_exact_dense_estimator() {
+        // WorkloadShape::dense must be bit-identical to estimate(): the
+        // golden snapshots pin the dense numbers.
+        let prof = MachineProfile::fugaku();
+        let est = Estimator::new(&prof, Topology::new(256, 32));
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Pairwise,
+            AlgoKind::Tuna { radix: 4 },
+            AlgoKind::hier_coalesced(2, 2),
+        ] {
+            let a = est.estimate(&kind, 777.0).makespan;
+            let b = est.estimate_shape(&kind, &WorkloadShape::dense(777.0)).makespan;
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_shape_scales_linear_families_with_nnz_not_p() {
+        let prof = MachineProfile::fugaku();
+        let p = 1024;
+        let est = Estimator::new(&prof, Topology::new(p, 32));
+        let shape = |nnz: f64| WorkloadShape {
+            mean_block: 512.0 * nnz / p as f64,
+            mean_structural: 512.0,
+            nnz_row: nnz,
+            sparse: true,
+        };
+        let dense = est.estimate(&AlgoKind::SpreadOut, 512.0).makespan;
+        let sp8 = est.estimate_shape(&AlgoKind::SpreadOut, &shape(8.0)).makespan;
+        let sp64 = est.estimate_shape(&AlgoKind::SpreadOut, &shape(64.0)).makespan;
+        assert!(sp8 > 0.0 && sp8.is_finite());
+        assert!(
+            sp8 < dense / 8.0,
+            "8 structural messages ({sp8}) must be far under P-1 dense ({dense})"
+        );
+        assert!(sp8 < sp64, "estimate must grow with nnz: {sp8} vs {sp64}");
+        // Pairwise and scattered take the same structural shrink.
+        let pw = est.estimate_shape(&AlgoKind::Pairwise, &shape(8.0)).makespan;
+        assert!(pw > 0.0 && pw < est.estimate(&AlgoKind::Pairwise, 512.0).makespan);
+    }
+
+    #[test]
+    fn sparse_shape_hier_ships_fewer_node_buckets() {
+        let prof = MachineProfile::fugaku();
+        let (p, q) = (2048usize, 32usize);
+        let est = Estimator::new(&prof, Topology::new(p, q));
+        let kind = AlgoKind::hier_coalesced(4, 2);
+        let shape = WorkloadShape {
+            mean_block: 512.0 * 4.0 / p as f64,
+            mean_structural: 512.0,
+            nnz_row: 4.0,
+            sparse: true,
+        };
+        let sp = est.estimate_shape(&kind, &shape).makespan;
+        // Same total volume forced through the dense schedule (N-1
+        // buckets per rank) must cost more than the sparse one.
+        let dense_same_volume = est.estimate(&kind, shape.mean_block).makespan;
+        assert!(sp > 0.0 && sp.is_finite());
+        assert!(
+            sp < dense_same_volume,
+            "sparse hier {sp} must undercut dense-schedule {dense_same_volume}"
+        );
+        // Log-family estimates stay structural and finite.
+        let tn = est
+            .estimate_shape(&AlgoKind::Tuna { radix: 4 }, &shape)
+            .makespan;
+        assert!(tn > 0.0 && tn.is_finite());
     }
 
     #[test]

@@ -1,0 +1,690 @@
+//! The `Counts` abstraction: the P x P block-size ("counts") matrix
+//! behind every layer of the crate, in three interchangeable
+//! representations sharing one **CountsView** API (see [`super`] for the
+//! contract):
+//!
+//! * **generator-backed lazy rows** ([`Counts::generate`]) — row `src` is
+//!   regenerated on demand from `(seed, src)` with an independent PRNG
+//!   stream, so no O(P²) memory is ever held and any rank (or the
+//!   validator) can reproduce any other rank's row;
+//! * **dense rows** ([`Counts::from_dense`]) — explicit `Vec<Vec<u64>>`
+//!   for tests and externally supplied workloads;
+//! * **CSR-style sparse rows** ([`Counts::from_sparse_rows`]) — only the
+//!   structural nonzeros of each row are stored, sorted by destination.
+//!
+//! # Structural sparsity
+//!
+//! A matrix entry is **structural** when the pair `(src, dst)` exchanges
+//! a block at all. Dense representations (generator-backed dense
+//! distributions included) treat *every* destination as structural — a
+//! sampled size of 0 still sends a zero-byte block, exactly as before
+//! this abstraction existed, so all dense schedules, golden snapshots
+//! and replay bit-identity are unchanged. Sparse representations
+//! (`Dist::Sparse` generators and CSR rows) treat *absent* entries as
+//! "no block": algorithms skip them entirely — no phantom sends, no
+//! empty rope segments — and plan op-counts scale with the number of
+//! nonzeros instead of P². Sparse structural entries always carry a
+//! positive size ([`Counts::from_sparse_rows`] drops explicit zeros), so
+//! "structural" and "nonzero" coincide for sparse rows.
+
+use std::sync::{Arc, OnceLock};
+
+use super::distributions::Dist;
+use crate::util::prng::Pcg64;
+
+/// Handle on a counts matrix: cheap to clone and share (all backing
+/// storage is `Arc`-shared; the lazily built transpose is shared too).
+#[derive(Clone, Debug)]
+pub struct Counts {
+    p: usize,
+    repr: Repr,
+    /// Sorted structural sender lists per destination, built on first
+    /// use (sparse representations only — a dense transpose would be the
+    /// O(P²) matrix this type exists to avoid).
+    transpose: Arc<OnceLock<Arc<Vec<Vec<u32>>>>>,
+}
+
+#[derive(Clone, Debug)]
+enum Repr {
+    /// Rows regenerated on demand from `(seed, src)`.
+    Gen { dist: Dist, seed: u64 },
+    /// Materialized dense rows.
+    Dense(Arc<Vec<Vec<u64>>>),
+    /// CSR-style sparse rows.
+    Csr(Arc<CsrCounts>),
+}
+
+/// Compressed sparse rows: `entries[indptr[r]..indptr[r+1]]` are row
+/// `r`'s structural `(dst, size)` pairs, sorted by `dst`, sizes > 0.
+#[derive(Debug)]
+struct CsrCounts {
+    indptr: Vec<usize>,
+    entries: Vec<(u32, u64)>,
+}
+
+/// One rank's send row in whichever representation the workload uses —
+/// the per-row half of the CountsView API.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CountsRow {
+    /// Every destination structural (index = destination).
+    Dense(Vec<u64>),
+    /// Only the stored `(dst, size)` pairs are structural (sorted by
+    /// `dst`, sizes > 0); `p` is the row length.
+    Sparse { p: usize, entries: Vec<(u32, u64)> },
+}
+
+impl CountsRow {
+    /// Row length (the communicator size P).
+    pub fn p(&self) -> usize {
+        match self {
+            CountsRow::Dense(v) => v.len(),
+            CountsRow::Sparse { p, .. } => *p,
+        }
+    }
+
+    /// Number of structural entries: P for dense rows, the stored
+    /// nonzero count for sparse rows.
+    pub fn nnz(&self) -> usize {
+        match self {
+            CountsRow::Dense(v) => v.len(),
+            CountsRow::Sparse { entries, .. } => entries.len(),
+        }
+    }
+
+    /// Block size for `dst`: the stored value, or 0 when `(src, dst)` is
+    /// structurally absent (sparse rows only — dense rows store every
+    /// destination).
+    pub fn get(&self, dst: usize) -> u64 {
+        match self {
+            CountsRow::Dense(v) => v[dst],
+            CountsRow::Sparse { entries, .. } => entries
+                .binary_search_by_key(&(dst as u32), |&(d, _)| d)
+                .map(|i| entries[i].1)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Is `dst` a structural destination of this row?
+    pub fn contains(&self, dst: usize) -> bool {
+        match self {
+            CountsRow::Dense(v) => dst < v.len(),
+            CountsRow::Sparse { entries, .. } => entries
+                .binary_search_by_key(&(dst as u32), |&(d, _)| d)
+                .is_ok(),
+        }
+    }
+
+    /// Row total in bytes.
+    pub fn total(&self) -> u64 {
+        match self {
+            CountsRow::Dense(v) => v.iter().sum(),
+            CountsRow::Sparse { entries, .. } => entries.iter().map(|&(_, s)| s).sum(),
+        }
+    }
+
+    /// Largest block in the row.
+    pub fn max_size(&self) -> u64 {
+        match self {
+            CountsRow::Dense(v) => v.iter().copied().max().unwrap_or(0),
+            CountsRow::Sparse { entries, .. } => {
+                entries.iter().map(|&(_, s)| s).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Iterate the row's structural `(dst, size)` entries in ascending
+    /// destination order. Dense rows yield every destination (including
+    /// zero sizes); sparse rows yield only their stored nonzeros.
+    pub fn entries(&self) -> CountsRowIter<'_> {
+        match self {
+            CountsRow::Dense(v) => CountsRowIter::Dense(v.iter().enumerate()),
+            CountsRow::Sparse { entries, .. } => CountsRowIter::Sparse(entries.iter()),
+        }
+    }
+
+    /// Materialize the row densely (index = destination), consuming the
+    /// view — dense rows hand over their buffer without copying. The
+    /// bridge for dense-only consumers; sparse callers should prefer
+    /// [`CountsRow::entries`].
+    pub fn into_dense(self) -> Vec<u64> {
+        match self {
+            CountsRow::Dense(v) => v,
+            CountsRow::Sparse { p, entries } => {
+                let mut out = vec![0u64; p];
+                for (d, s) in entries {
+                    out[d as usize] = s;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Iterator over a row's structural `(dst, size)` entries.
+pub enum CountsRowIter<'a> {
+    Dense(std::iter::Enumerate<std::slice::Iter<'a, u64>>),
+    Sparse(std::slice::Iter<'a, (u32, u64)>),
+}
+
+impl Iterator for CountsRowIter<'_> {
+    type Item = (usize, u64);
+
+    fn next(&mut self) -> Option<(usize, u64)> {
+        match self {
+            CountsRowIter::Dense(it) => it.next().map(|(d, &s)| (d, s)),
+            CountsRowIter::Sparse(it) => it.next().map(|&(d, s)| (d as usize, s)),
+        }
+    }
+}
+
+impl Counts {
+    /// Generator-backed workload: rows are regenerated on demand from
+    /// `(seed, src)`. Dense distributions produce dense rows exactly as
+    /// they always have; [`Dist::Sparse`] produces structural-sparse
+    /// rows (see the module header).
+    pub fn generate(p: usize, dist: Dist, seed: u64) -> Counts {
+        assert!(p >= 1);
+        Counts {
+            p,
+            repr: Repr::Gen { dist, seed },
+            transpose: Arc::new(OnceLock::new()),
+        }
+    }
+
+    /// Materialized dense rows: every destination structural, zero sizes
+    /// included (a zero-size block is still exchanged).
+    pub fn from_dense(rows: Vec<Vec<u64>>) -> Counts {
+        let p = rows.len();
+        assert!(p >= 1, "counts matrix needs at least one row");
+        for (src, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), p, "row {src} has {} entries, want {p}", row.len());
+        }
+        Counts {
+            p,
+            repr: Repr::Dense(Arc::new(rows)),
+            transpose: Arc::new(OnceLock::new()),
+        }
+    }
+
+    /// CSR-style sparse rows from per-row `(dst, size)` lists. Entries
+    /// are sorted by destination, explicit zero sizes are dropped
+    /// (structurally absent = no block at all), and duplicate
+    /// destinations are rejected.
+    pub fn from_sparse_rows(p: usize, rows: Vec<Vec<(usize, u64)>>) -> Counts {
+        assert!(p >= 1);
+        assert_eq!(rows.len(), p, "need one entry list per source rank");
+        let mut indptr = Vec::with_capacity(p + 1);
+        let mut entries: Vec<(u32, u64)> = Vec::new();
+        indptr.push(0);
+        for (src, row) in rows.into_iter().enumerate() {
+            let mut cleaned: Vec<(u32, u64)> = row
+                .into_iter()
+                .filter(|&(_, s)| s > 0)
+                .map(|(d, s)| {
+                    assert!(d < p, "row {src}: destination {d} out of range (P={p})");
+                    (d as u32, s)
+                })
+                .collect();
+            cleaned.sort_unstable_by_key(|&(d, _)| d);
+            for w in cleaned.windows(2) {
+                assert!(w[0].0 != w[1].0, "row {src}: duplicate destination {}", w[0].0);
+            }
+            entries.extend(cleaned);
+            indptr.push(entries.len());
+        }
+        Counts {
+            p,
+            repr: Repr::Csr(Arc::new(CsrCounts { indptr, entries })),
+            transpose: Arc::new(OnceLock::new()),
+        }
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// The generating distribution, for generator-backed workloads.
+    pub fn dist(&self) -> Option<&Dist> {
+        match &self.repr {
+            Repr::Gen { dist, .. } => Some(dist),
+            _ => None,
+        }
+    }
+
+    /// The generator seed, for generator-backed workloads.
+    pub fn seed(&self) -> Option<u64> {
+        match &self.repr {
+            Repr::Gen { seed, .. } => Some(*seed),
+            _ => None,
+        }
+    }
+
+    /// Does this workload use structural sparsity (absent entries send
+    /// nothing at all)? Decides which dispatch/compile path every
+    /// algorithm takes.
+    pub fn is_sparse(&self) -> bool {
+        match &self.repr {
+            Repr::Gen { dist, .. } => dist.sparse_nnz().is_some(),
+            Repr::Dense(_) => false,
+            Repr::Csr(_) => true,
+        }
+    }
+
+    /// Row `src` in its native representation — the CountsView row.
+    pub fn row_view(&self, src: usize) -> CountsRow {
+        assert!(src < self.p);
+        match &self.repr {
+            Repr::Gen { dist, seed } => match dist.sparse_nnz() {
+                None => {
+                    let mut rng = Pcg64::new(*seed, src as u64);
+                    CountsRow::Dense(
+                        (0..self.p)
+                            .map(|dst| dist.sample(&mut rng, src, dst, self.p))
+                            .collect(),
+                    )
+                }
+                Some(nnz) => CountsRow::Sparse {
+                    p: self.p,
+                    entries: gen_sparse_row(self.p, src, *seed, nnz, dist.sparse_max()),
+                },
+            },
+            Repr::Dense(rows) => CountsRow::Dense(rows[src].clone()),
+            Repr::Csr(csr) => CountsRow::Sparse {
+                p: self.p,
+                entries: csr.entries[csr.indptr[src]..csr.indptr[src + 1]].to_vec(),
+            },
+        }
+    }
+
+    /// Sizes of the blocks rank `src` sends to every destination, as a
+    /// dense vector (structurally absent entries read as 0) — one
+    /// materialization, no intermediate copy. Sparse-aware consumers
+    /// should use [`Counts::row_view`] instead.
+    pub fn row(&self, src: usize) -> Vec<u64> {
+        self.row_view(src).into_dense()
+    }
+
+    /// One matrix entry — the CountsView `block(r, d)` accessor
+    /// (regenerates the row for generator-backed workloads; use
+    /// [`Counts::row_view`] in loops).
+    pub fn block(&self, src: usize, dst: usize) -> u64 {
+        assert!(dst < self.p);
+        self.row_view(src).get(dst)
+    }
+
+    /// Alias of [`Counts::block`], kept for existing call sites.
+    pub fn size(&self, src: usize, dst: usize) -> u64 {
+        self.block(src, dst)
+    }
+
+    /// Structural entry count of row `src` (P for dense rows, answered
+    /// without sampling them).
+    pub fn nnz_row(&self, src: usize) -> usize {
+        assert!(src < self.p);
+        match &self.repr {
+            Repr::Gen { dist, .. } => match dist.sparse_nnz() {
+                None => self.p,
+                Some(_) => self.row_view(src).nnz(),
+            },
+            Repr::Dense(_) => self.p,
+            Repr::Csr(csr) => csr.indptr[src + 1] - csr.indptr[src],
+        }
+    }
+
+    /// Total structural entries across the matrix (P² for dense).
+    pub fn total_nnz(&self) -> u64 {
+        (0..self.p).map(|s| self.nnz_row(s) as u64).sum()
+    }
+
+    /// Maximum block size across the whole matrix (the paper's `M`).
+    pub fn max_block(&self) -> u64 {
+        (0..self.p).map(|s| self.row_view(s).max_size()).max().unwrap_or(0)
+    }
+
+    /// Total bytes moved by one all-to-allv.
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.p).map(|s| self.row_view(s).total()).sum()
+    }
+
+    /// Mean block size over all P² pairs (absent entries count as 0, so
+    /// dense and sparse workloads are comparable volume-wise). Exact up
+    /// to P = 256; beyond that a deterministic 256-row sample is used —
+    /// the full matrix would cost O(P²) generator calls per estimate
+    /// (1.9 s at P = 16,384), and a 256-row sample of P entries each is
+    /// already a ±0.1%-accurate mean for every distribution we ship.
+    pub fn mean_size(&self) -> f64 {
+        let (total, pairs, _) = self.sampled_sums();
+        total as f64 / pairs as f64
+    }
+
+    /// Mean size of the *structural* entries alone (equals
+    /// [`Counts::mean_size`] for dense workloads). Sampled like
+    /// `mean_size`.
+    pub fn mean_structural(&self) -> f64 {
+        let (total, _, nnz) = self.sampled_sums();
+        if nnz == 0 {
+            0.0
+        } else {
+            total as f64 / nnz as f64
+        }
+    }
+
+    /// Mean structural entries per row (P for dense workloads). Sampled
+    /// like `mean_size`.
+    pub fn mean_nnz_row(&self) -> f64 {
+        let sample_rows = self.p.min(256);
+        let stride = (self.p / sample_rows).max(1);
+        let mut nnz = 0u64;
+        let mut rows = 0u64;
+        let mut src = 0usize;
+        while src < self.p && rows < sample_rows as u64 {
+            nnz += self.nnz_row(src) as u64;
+            rows += 1;
+            src += stride;
+        }
+        nnz as f64 / rows as f64
+    }
+
+    /// `(mean_size, mean_structural, mean_nnz_row)` from **one** sampled
+    /// pass — what [`crate::model::analytic::WorkloadShape`] consumes
+    /// instead of three independent row-generating passes.
+    pub fn shape_stats(&self) -> (f64, f64, f64) {
+        let (total, pairs, nnz) = self.sampled_sums();
+        let mean = total as f64 / pairs as f64;
+        let mean_nz = if nnz == 0 { 0.0 } else { total as f64 / nnz as f64 };
+        let rows = (pairs / self.p as u64).max(1);
+        (mean, mean_nz, nnz as f64 / rows as f64)
+    }
+
+    /// `(total bytes, pair count, structural count)` over the sample rows.
+    fn sampled_sums(&self) -> (u64, u64, u64) {
+        let sample_rows = self.p.min(256);
+        let stride = (self.p / sample_rows).max(1);
+        let mut total = 0u64;
+        let mut pairs = 0u64;
+        let mut nnz = 0u64;
+        let mut src = 0usize;
+        while src < self.p && pairs < (sample_rows * self.p) as u64 {
+            let row = self.row_view(src);
+            total += row.total();
+            pairs += self.p as u64;
+            nnz += row.nnz() as u64;
+            src += stride;
+        }
+        (total, pairs, nnz)
+    }
+
+    /// Per-destination validation fingerprints, computed in O(nnz) time
+    /// and O(P) memory: `fp[dst]` folds `(src, size)` over the
+    /// *structural* senders of `dst` (every source for dense workloads).
+    /// A rank that received its full, correctly-sized block set can
+    /// reproduce its fingerprint without the matrix.
+    pub fn recv_fingerprints(&self) -> Vec<u64> {
+        let mut fp = vec![0u64; self.p];
+        for src in 0..self.p {
+            for (dst, sz) in self.row_view(src).entries() {
+                fp[dst] = fp[dst].wrapping_add(super::fingerprint_one(src, sz));
+            }
+        }
+        fp
+    }
+
+    /// Sorted structural sender lists per destination — the transpose of
+    /// the structural pattern, built once (O(total nnz) time and memory)
+    /// and shared across clones. Receivers use it to know whom to post
+    /// receives for. Sparse workloads only: the dense transpose is
+    /// "everyone", and materializing it would be the O(P²) structure
+    /// this type exists to avoid.
+    pub fn senders(&self) -> Arc<Vec<Vec<u32>>> {
+        assert!(
+            self.is_sparse(),
+            "senders(): dense workloads receive from every rank"
+        );
+        self.transpose
+            .get_or_init(|| {
+                let mut lists: Vec<Vec<u32>> = vec![Vec::new(); self.p];
+                for src in 0..self.p {
+                    for (dst, _) in self.row_view(src).entries() {
+                        lists[dst].push(src as u32);
+                    }
+                }
+                // Ascending src per destination by construction.
+                Arc::new(lists)
+            })
+            .clone()
+    }
+
+    /// Content identity for plan caching, hashed *incrementally through
+    /// the row views* — no dense materialization for sparse or CSR
+    /// workloads. Generator-backed workloads hash their `(p, dist,
+    /// seed)` descriptor (rows are a pure function of it, so equal
+    /// descriptors guarantee equal matrices in O(1)); materialized
+    /// representations hash their structural entries row by row. The
+    /// representation class is part of the identity: a dense row with an
+    /// explicit zero schedules a zero-byte send, which an absent sparse
+    /// entry does not.
+    pub fn identity_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |h: &mut u64, v: u64| {
+            *h ^= v;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        mix(&mut h, self.p as u64);
+        match &self.repr {
+            Repr::Gen { dist, seed } => {
+                mix(&mut h, 1);
+                mix(&mut h, *seed);
+                for byte in format!("{dist:?}").bytes() {
+                    mix(&mut h, byte as u64);
+                }
+            }
+            Repr::Dense(rows) => {
+                mix(&mut h, 2);
+                for row in rows.iter() {
+                    mix(&mut h, row.len() as u64);
+                    for &v in row {
+                        mix(&mut h, v);
+                    }
+                }
+            }
+            Repr::Csr(csr) => {
+                mix(&mut h, 3);
+                for src in 0..self.p {
+                    let span = &csr.entries[csr.indptr[src]..csr.indptr[src + 1]];
+                    mix(&mut h, span.len() as u64);
+                    for &(d, s) in span {
+                        mix(&mut h, d as u64);
+                        mix(&mut h, s);
+                    }
+                }
+            }
+        }
+        h
+    }
+}
+
+/// Deterministic structural-sparse row: exactly `min(nnz, p)` distinct
+/// destinations drawn with Floyd's sampling from `(seed, src)`, sorted,
+/// then one uniform size in `[8, max]` (multiple of 8) per destination in
+/// sorted order — so the row is a pure function of `(p, src, seed, nnz,
+/// max)` and any rank can reproduce any other rank's row.
+fn gen_sparse_row(p: usize, src: usize, seed: u64, nnz: usize, max: u64) -> Vec<(u32, u64)> {
+    let mut rng = Pcg64::new(seed, src as u64);
+    let k = nnz.min(p);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut chosen: std::collections::HashSet<u32> = std::collections::HashSet::with_capacity(k);
+    for j in (p - k)..p {
+        let t = rng.next_below(j as u64 + 1) as u32;
+        if !chosen.insert(t) {
+            chosen.insert(j as u32);
+        }
+    }
+    let mut dsts: Vec<u32> = chosen.into_iter().collect();
+    dsts.sort_unstable();
+    let units = (max / 8).max(1);
+    dsts.into_iter()
+        .map(|d| (d, 8 * rng.range_inclusive(1, units)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_rows_deterministic_exact_nnz_sorted_unique() {
+        let w = Counts::generate(64, Dist::Sparse { nnz: 7, max: 1024 }, 9);
+        assert!(w.is_sparse());
+        for src in 0..64 {
+            let a = w.row_view(src);
+            let b = w.row_view(src);
+            assert_eq!(a, b, "row {src} must be deterministic");
+            assert_eq!(a.nnz(), 7, "row {src}");
+            let ents: Vec<(usize, u64)> = a.entries().collect();
+            for w2 in ents.windows(2) {
+                assert!(w2[0].0 < w2[1].0, "row {src} not sorted/unique: {ents:?}");
+            }
+            for &(d, s) in &ents {
+                assert!(d < 64);
+                assert!(s >= 8 && s <= 1024 && s % 8 == 0, "row {src}: size {s}");
+            }
+        }
+        // Different seeds give different patterns.
+        let other = Counts::generate(64, Dist::Sparse { nnz: 7, max: 1024 }, 10);
+        assert_ne!(w.row_view(0), other.row_view(0));
+    }
+
+    #[test]
+    fn sparse_nnz_clamps_to_p_and_zero_is_empty() {
+        let full = Counts::generate(8, Dist::Sparse { nnz: 100, max: 64 }, 1);
+        for src in 0..8 {
+            assert_eq!(full.nnz_row(src), 8);
+        }
+        let empty = Counts::generate(8, Dist::Sparse { nnz: 0, max: 64 }, 1);
+        assert_eq!(empty.total_nnz(), 0);
+        assert_eq!(empty.total_bytes(), 0);
+        assert!(empty.recv_fingerprints().iter().all(|&f| f == 0));
+    }
+
+    #[test]
+    fn row_dense_view_and_get_agree() {
+        let w = Counts::generate(32, Dist::Sparse { nnz: 5, max: 256 }, 3);
+        for src in 0..32 {
+            let dense = w.row(src);
+            let view = w.row_view(src);
+            assert_eq!(dense.len(), 32);
+            for dst in 0..32 {
+                assert_eq!(dense[dst], view.get(dst), "({src},{dst})");
+                assert_eq!(dense[dst], w.block(src, dst));
+            }
+            assert_eq!(dense.iter().sum::<u64>(), view.total());
+            assert_eq!(dense.iter().copied().max().unwrap(), view.max_size());
+        }
+    }
+
+    #[test]
+    fn from_sparse_rows_drops_zeros_and_sorts() {
+        let w = Counts::from_sparse_rows(
+            4,
+            vec![
+                vec![(3, 16), (1, 8), (2, 0)], // zero dropped, sorted
+                vec![],                        // empty send row
+                vec![(0, 24)],
+                vec![(3, 8)], // self entry allowed
+            ],
+        );
+        assert!(w.is_sparse());
+        assert_eq!(w.nnz_row(0), 2);
+        assert_eq!(w.nnz_row(1), 0);
+        assert_eq!(w.block(0, 2), 0, "explicit zero must be structurally absent");
+        assert!(!w.row_view(0).contains(2));
+        assert!(w.row_view(0).contains(1));
+        assert_eq!(
+            w.row_view(0).entries().collect::<Vec<_>>(),
+            vec![(1, 8), (3, 16)]
+        );
+        assert_eq!(w.total_bytes(), 16 + 8 + 24 + 8);
+        assert_eq!(w.total_nnz(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate destination")]
+    fn from_sparse_rows_rejects_duplicates() {
+        Counts::from_sparse_rows(2, vec![vec![(1, 8), (1, 16)], vec![]]);
+    }
+
+    #[test]
+    fn transpose_matches_brute_force() {
+        let w = Counts::generate(48, Dist::Sparse { nnz: 6, max: 128 }, 17);
+        let senders = w.senders();
+        for dst in 0..48 {
+            let brute: Vec<u32> = (0..48)
+                .filter(|&src| w.row_view(src).contains(dst))
+                .map(|s| s as u32)
+                .collect();
+            assert_eq!(senders[dst], brute, "dst {dst}");
+        }
+        // Shared across clones: same Arc.
+        let clone = w.clone();
+        assert!(Arc::ptr_eq(&senders, &clone.senders()));
+    }
+
+    #[test]
+    fn dense_from_rows_counts_every_destination_as_structural() {
+        let w = Counts::from_dense(vec![vec![0, 8], vec![16, 0]]);
+        assert!(!w.is_sparse());
+        assert_eq!(w.nnz_row(0), 2, "dense zero entries stay structural");
+        assert_eq!(w.total_nnz(), 4);
+        assert_eq!(w.total_bytes(), 24);
+        assert_eq!(w.block(0, 0), 0);
+    }
+
+    #[test]
+    fn identity_hash_is_content_identity() {
+        // Same generator descriptor, separately constructed: same hash.
+        let a = Counts::generate(16, Dist::Sparse { nnz: 4, max: 64 }, 5);
+        let b = Counts::generate(16, Dist::Sparse { nnz: 4, max: 64 }, 5);
+        assert_eq!(a.identity_hash(), b.identity_hash());
+        // Different seed: different hash.
+        let c = Counts::generate(16, Dist::Sparse { nnz: 4, max: 64 }, 6);
+        assert_ne!(a.identity_hash(), c.identity_hash());
+        // Equal CSR contents, separately built: same hash.
+        let r1 = Counts::from_sparse_rows(3, vec![vec![(1, 8)], vec![], vec![(0, 16)]]);
+        let r2 = Counts::from_sparse_rows(3, vec![vec![(1, 8), (2, 0)], vec![], vec![(0, 16)]]);
+        assert_eq!(r1.identity_hash(), r2.identity_hash());
+        // A dense matrix with the same nonzeros is a *different* structure
+        // (its zero entries still schedule sends) and must not collide.
+        let dense = Counts::from_dense(vec![vec![0, 8, 0], vec![0, 0, 0], vec![16, 0, 0]]);
+        assert_ne!(dense.identity_hash(), r1.identity_hash());
+    }
+
+    #[test]
+    fn sparse_fingerprints_cover_only_structural_senders() {
+        let w = Counts::from_sparse_rows(3, vec![vec![(2, 8)], vec![(2, 24)], vec![]]);
+        let fp = w.recv_fingerprints();
+        assert_eq!(fp[0], 0);
+        assert_eq!(fp[1], 0);
+        let expect = super::super::fingerprint_one(0, 8)
+            .wrapping_add(super::super::fingerprint_one(1, 24));
+        assert_eq!(fp[2], expect);
+    }
+
+    #[test]
+    fn mean_helpers_distinguish_structural_density() {
+        let w = Counts::generate(64, Dist::Sparse { nnz: 8, max: 800 }, 2);
+        let mean = w.mean_size();
+        let nz = w.mean_structural();
+        let nnz = w.mean_nnz_row();
+        assert!((nnz - 8.0).abs() < 1e-9, "nnz_row {nnz}");
+        // Per-pair mean is the structural mean diluted by sparsity.
+        assert!((mean - nz * 8.0 / 64.0).abs() < 1e-6 * nz.max(1.0));
+        assert!(nz >= 8.0 && nz <= 800.0);
+        // Dense workloads: structural mean == pair mean, nnz_row == P.
+        let d = Counts::generate(16, Dist::Uniform { max: 256 }, 3);
+        assert!((d.mean_structural() - d.mean_size()).abs() < 1e-12);
+        assert!((d.mean_nnz_row() - 16.0).abs() < 1e-12);
+    }
+}

@@ -11,6 +11,12 @@
 //!   histogram shape (documented substitution, DESIGN.md §2).
 //! * `Const` — uniform all-to-all (for the Bruck lineage tests).
 //! * `FftN1` / `FftN2` — §VI-A FFT decompositions (see [`super::fft`]).
+//! * `Sparse` — structurally sparse traffic (relational algebra / graph
+//!   workloads): exactly `nnz` destinations per row, the rest absent —
+//!   not zero-*sized*, absent: no block is exchanged at all. Rows are
+//!   generated whole by [`super::Counts::row_view`] (Floyd sampling of
+//!   destinations plus uniform sizes in `[8, max]`), never through
+//!   per-entry [`Dist::sample`].
 
 use crate::util::prng::Pcg64;
 
@@ -30,6 +36,10 @@ pub enum Dist {
     FftN1,
     /// FFT near-uniform distribution 𝒩₂ (§VI-A).
     FftN2,
+    /// Structurally sparse rows: exactly `nnz` destinations per row
+    /// (clamped to P), sizes uniform in `[8, max]`; absent pairs send
+    /// nothing at all. Spec `sparse:nnz=K[,max=S]`.
+    Sparse { nnz: usize, max: u64 },
 }
 
 impl Dist {
@@ -68,6 +78,28 @@ impl Dist {
             }
             Dist::FftN1 => super::fft::n1_size(src, dst, p, rng),
             Dist::FftN2 => super::fft::n2_size(src, dst, p, rng),
+            Dist::Sparse { .. } => unreachable!(
+                "sparse rows are generated whole by Counts::row_view, \
+                 never through per-entry sampling"
+            ),
+        }
+    }
+
+    /// Target structural entries per row for sparse distributions;
+    /// `None` for the dense families. This is what routes a workload
+    /// down the structural-sparse dispatch/compile paths.
+    pub fn sparse_nnz(&self) -> Option<usize> {
+        match *self {
+            Dist::Sparse { nnz, .. } => Some(nnz),
+            _ => None,
+        }
+    }
+
+    /// Upper size bound of the sparse generator (8 when unset/smaller).
+    pub fn sparse_max(&self) -> u64 {
+        match *self {
+            Dist::Sparse { max, .. } => max.max(8),
+            _ => 0,
         }
     }
 
@@ -89,6 +121,10 @@ impl Dist {
             // The FFT distributions are structural; stress them with the
             // paper's default power law.
             Dist::FftN1 | Dist::FftN2 => Dist::powerlaw_default(),
+            // Structural sparsity already is the extreme-skew regime (the
+            // paper's graph/relational workloads); it is its own
+            // companion.
+            Dist::Sparse { .. } => *self,
         }
     }
 
@@ -101,11 +137,13 @@ impl Dist {
             Dist::Const { .. } => "const",
             Dist::FftN1 => "fft-n1",
             Dist::FftN2 => "fft-n2",
+            Dist::Sparse { .. } => "sparse",
         }
     }
 
     /// Parse `"uniform:1024"`, `"normal"`, `"powerlaw"`, `"const:64"`,
-    /// `"fft-n1"`, `"fft-n2"`.
+    /// `"fft-n1"`, `"fft-n2"`, `"sparse:nnz=16"`,
+    /// `"sparse:nnz=16,max=2048"`.
     pub fn parse(s: &str) -> Option<Dist> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
@@ -122,6 +160,22 @@ impl Dist {
             }),
             "fft-n1" => Some(Dist::FftN1),
             "fft-n2" => Some(Dist::FftN2),
+            "sparse" => {
+                let mut nnz: Option<usize> = None;
+                let mut max: u64 = 1024;
+                for kv in arg?.split(',') {
+                    let (k, v) = kv.split_once('=')?;
+                    match k {
+                        "nnz" => nnz = Some(v.parse().ok()?),
+                        "max" => max = v.parse().ok()?,
+                        _ => return None,
+                    }
+                }
+                Some(Dist::Sparse {
+                    nnz: nnz?,
+                    max: max.max(8),
+                })
+            }
             _ => None,
         }
     }
@@ -205,5 +259,33 @@ mod tests {
         assert_eq!(Dist::parse("fft-n1"), Some(Dist::FftN1));
         assert_eq!(Dist::parse("bogus"), None);
         assert_eq!(Dist::parse("uniform"), None);
+    }
+
+    #[test]
+    fn parse_sparse_family() {
+        assert_eq!(
+            Dist::parse("sparse:nnz=16"),
+            Some(Dist::Sparse { nnz: 16, max: 1024 })
+        );
+        assert_eq!(
+            Dist::parse("sparse:nnz=4,max=2048"),
+            Some(Dist::Sparse { nnz: 4, max: 2048 })
+        );
+        // Sub-8 bounds clamp so structural entries keep a positive size.
+        assert_eq!(
+            Dist::parse("sparse:nnz=4,max=1"),
+            Some(Dist::Sparse { nnz: 4, max: 8 })
+        );
+        assert_eq!(Dist::parse("sparse"), None);
+        assert_eq!(Dist::parse("sparse:max=64"), None);
+        assert_eq!(Dist::parse("sparse:nnz=x"), None);
+        assert_eq!(Dist::parse("sparse:nnz=4,zig=1"), None);
+        // Sparse-family helpers.
+        let d = Dist::Sparse { nnz: 7, max: 512 };
+        assert_eq!(d.sparse_nnz(), Some(7));
+        assert_eq!(d.sparse_max(), 512);
+        assert_eq!(d.name(), "sparse");
+        assert_eq!(d.skewed_companion(), d);
+        assert_eq!(Dist::Uniform { max: 64 }.sparse_nnz(), None);
     }
 }

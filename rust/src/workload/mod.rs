@@ -1,105 +1,72 @@
-//! Non-uniform all-to-all workload generation.
+//! Non-uniform all-to-all workload generation: the **counts matrix**
+//! (`size(src, dst)` for every rank pair) behind every layer of the
+//! crate, in three representations sharing one API.
 //!
-//! A workload is the P x P matrix of block sizes `size(src, dst)`. The
-//! matrix is never materialized: row `src` is regenerated on demand from
-//! `(seed, src)` with an independent PRNG stream, so a 16,384-rank
-//! simulation needs no O(P^2) memory and any rank (or the validator) can
-//! reproduce any other rank's row.
+//! # The CountsView contract
+//!
+//! [`Counts`] (aliased as [`BlockSizes`] for historical call sites) is
+//! the load-bearing type of the whole crate: the threaded engine builds
+//! payloads from it, every plan compiler derives its schedule from it,
+//! the analytic model summarizes it, and the plan cache keys on its
+//! identity. All three representations — generator-backed lazy rows,
+//! dense rows, and CSR-style sparse rows — answer the same queries:
+//!
+//! * `row_view(r)` — row `r` as a [`CountsRow`] in its native
+//!   representation; `row(r)` is the dense materialization of the same
+//!   row for legacy/diagnostic consumers.
+//! * `block(r, d)` / `nnz_row(r)` — one entry; the row's structural
+//!   entry count.
+//! * Row/total reductions — `total_bytes`, `max_block`, `total_nnz`,
+//!   `mean_size`, `mean_structural`, `mean_nnz_row`,
+//!   `recv_fingerprints`.
+//! * `senders()` — the structural transpose (sparse only): sorted sender
+//!   lists per destination, O(total nnz), built once and shared.
+//! * `identity_hash()` — content identity for the plan cache, hashed
+//!   incrementally through the row views (never via a dense
+//!   materialization).
+//!
+//! **Structural semantics.** Dense representations treat every
+//! destination as structural — a sampled size of 0 still exchanges a
+//! zero-byte block, so all pre-sparsity schedules, golden snapshots and
+//! replay bit-identity are unchanged. Sparse representations
+//! ([`Dist::Sparse`] generators, CSR rows) treat absent entries as "no
+//! block at all": algorithms send nothing for them, and compiled plans
+//! scale with the nonzero count instead of P².
+//!
+//! # Memory envelope per execution mode
+//!
+//! * **Threaded** (`mode=threaded`, real or phantom): one OS thread per
+//!   rank; each rank materializes only its own row (O(P) dense, O(nnz)
+//!   sparse). Bounded by the thread budget (`limit-linear` /
+//!   `limit-log`), not by counts memory.
+//! * **Replay** (`mode=replay`, phantom): plan compilation is
+//!   **streaming** — per-rank op lists are built from row views without
+//!   ever materializing the P×P matrix. Dense log-family plans hold
+//!   O(P·K) working state and O(P·K) ops (K = rounds); dense linear
+//!   plans hold O(P²) ops (hence their tighter `limit-replay` cap);
+//!   sparse plans hold O(nnz) ops plus O(P·K) accumulators, which is
+//!   what lets exact replay reach P ≥ 32k on sparse workloads
+//!   (`limit-replay-sparse`). The one exception: a `bruck` *global*
+//!   level compiles from node-level bucket sums, O(P·N) transient.
+//! * **Analytic** (beyond the exact budgets): O(1) — closed-form
+//!   estimates from the workload's sampled shape summary.
+//!
+//! Rows are never stored globally for generator-backed workloads: row
+//! `src` is regenerated on demand from `(seed, src)` with an independent
+//! PRNG stream, so a 32k-rank simulation needs no O(P²) memory and any
+//! rank (or the validator) can reproduce any other rank's row.
 
+pub mod counts;
 pub mod distributions;
 pub mod fft;
 pub mod graph;
 
+pub use counts::{Counts, CountsRow, CountsRowIter};
 pub use distributions::Dist;
 
-use crate::util::prng::Pcg64;
-
-/// Handle on a generated workload: cheap to clone and share.
-#[derive(Clone, Debug)]
-pub struct BlockSizes {
-    p: usize,
-    dist: Dist,
-    seed: u64,
-}
-
-impl BlockSizes {
-    pub fn generate(p: usize, dist: Dist, seed: u64) -> BlockSizes {
-        assert!(p >= 1);
-        BlockSizes { p, dist, seed }
-    }
-
-    #[inline]
-    pub fn p(&self) -> usize {
-        self.p
-    }
-
-    pub fn dist(&self) -> &Dist {
-        &self.dist
-    }
-
-    pub fn seed(&self) -> u64 {
-        self.seed
-    }
-
-    /// Sizes of the blocks rank `src` sends to every destination.
-    pub fn row(&self, src: usize) -> Vec<u64> {
-        assert!(src < self.p);
-        let mut rng = Pcg64::new(self.seed, src as u64);
-        (0..self.p)
-            .map(|dst| self.dist.sample(&mut rng, src, dst, self.p))
-            .collect()
-    }
-
-    /// One matrix entry (regenerates the row prefix; use `row` in loops).
-    pub fn size(&self, src: usize, dst: usize) -> u64 {
-        self.row(src)[dst]
-    }
-
-    /// Maximum block size across the whole matrix (the paper's `M`).
-    pub fn max_block(&self) -> u64 {
-        (0..self.p).map(|s| self.row(s).iter().copied().max().unwrap_or(0)).max().unwrap_or(0)
-    }
-
-    /// Total bytes moved by one all-to-allv.
-    pub fn total_bytes(&self) -> u64 {
-        (0..self.p).map(|s| self.row(s).iter().sum::<u64>()).sum()
-    }
-
-    /// Mean block size (for the analytic model). Exact up to P = 256;
-    /// beyond that a deterministic 256-row sample is used — the full
-    /// matrix would cost O(P²) generator calls per estimate (1.9 s at
-    /// P = 16,384), and a 256-row sample of P entries each is already a
-    /// ±0.1%-accurate mean for every distribution we ship.
-    pub fn mean_size(&self) -> f64 {
-        let sample_rows = self.p.min(256);
-        let stride = (self.p / sample_rows).max(1);
-        let mut total = 0u64;
-        let mut count = 0u64;
-        let mut src = 0usize;
-        while src < self.p && count < (sample_rows * self.p) as u64 {
-            let row = self.row(src);
-            total += row.iter().sum::<u64>();
-            count += row.len() as u64;
-            src += stride;
-        }
-        total as f64 / count as f64
-    }
-
-    /// Per-destination validation fingerprints, computed in O(P^2) time but
-    /// O(P) memory: `fp[dst]` folds `(src, size(src, dst))` over all
-    /// sources. A rank that received a full, correctly-sized block set can
-    /// reproduce its fingerprint without the matrix.
-    pub fn recv_fingerprints(&self) -> Vec<u64> {
-        let mut fp = vec![0u64; self.p];
-        for src in 0..self.p {
-            let row = self.row(src);
-            for (dst, &sz) in row.iter().enumerate() {
-                fp[dst] = fp[dst].wrapping_add(fingerprint_one(src, sz));
-            }
-        }
-        fp
-    }
-}
+/// Historical name of [`Counts`]: the workload handle every call site
+/// passes around. Cheap to clone and share.
+pub type BlockSizes = Counts;
 
 /// Commutative per-block fingerprint so receive order does not matter.
 #[inline]

@@ -154,6 +154,101 @@ fn alltoallv_randomized_real_payloads() {
 }
 
 #[test]
+fn sparse_workloads_round_trip_every_family_real_payloads() {
+    // Structural sparsity: zero-size entries are *absent* — no block, no
+    // message, no rope segment. Every family must deliver exactly the
+    // structural block set (the validator counts blocks per rank, so a
+    // phantom send for an absent pair fails loudly), with real payload
+    // bytes intact, across empty rows, self-only rows and nnz = 0.
+    forall("sparse alltoallv randomized (P, Q, nnz, kind)", 120, |rng| {
+        let (p, q) = gen_topology(rng);
+        let nnz = rng.next_below(p as u64 + 1) as usize;
+        let dist = Dist::Sparse {
+            nnz,
+            max: 8 * (1 + rng.next_below(64)),
+        };
+        let kind = gen_kind(rng, p, q);
+        let seed = rng.next_u64();
+        let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let sizes = BlockSizes::generate(p, dist, seed);
+        match run_alltoallv(&engine, &kind, &sizes, true) {
+            Ok(rep) if rep.validated => Ok(()),
+            Ok(_) => Err(format!("{} P={p} Q={q} nnz={nnz}: invalid result", kind.name())),
+            Err(e) => Err(format!("{} P={p} Q={q} nnz={nnz}: {e}", kind.name())),
+        }
+    });
+}
+
+#[test]
+fn sparse_linear_families_send_no_phantom_messages() {
+    // For the direct-shipping families the data message count is exactly
+    // the off-diagonal structural entry count — absent pairs produce no
+    // traffic at all (and an empty matrix produces zero messages).
+    let p = 24;
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz: 5, max: 256 }, 3);
+    let offdiag: u64 = (0..p)
+        .map(|s| {
+            sizes
+                .row_view(s)
+                .entries()
+                .filter(|&(d, _)| d != s)
+                .count() as u64
+        })
+        .sum();
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::OmpiLinear,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 3 },
+    ] {
+        let rep = run_alltoallv(&engine, &kind, &sizes, true).unwrap();
+        assert_eq!(
+            rep.counters.total_msgs(),
+            offdiag,
+            "{}: phantom sends on a sparse workload",
+            kind.name()
+        );
+    }
+    // Fully empty matrix: zero messages, still valid.
+    let empty = BlockSizes::generate(p, Dist::Sparse { nnz: 0, max: 256 }, 3);
+    let rep = run_alltoallv(&engine, &AlgoKind::SpreadOut, &empty, true).unwrap();
+    assert_eq!(rep.counters.total_msgs(), 0);
+    assert!(rep.validated);
+}
+
+#[test]
+fn csr_zero_entries_and_empty_rows_round_trip() {
+    // Hand-built CSR rows: explicit zeros are dropped at construction
+    // (structurally absent), empty send rows coexist with full ones, and
+    // every family delivers the exact structural set in real mode.
+    let p = 12;
+    let q = 4;
+    let mut rows: Vec<Vec<(usize, u64)>> = vec![Vec::new(); p];
+    rows[0] = vec![(1, 8), (4, 0), (9, 32)]; // zero entry dropped
+    rows[3] = vec![(3, 16)]; // self only
+    rows[5] = (0..p).map(|d| (d, 24)).collect(); // full row
+    rows[11] = vec![(0, 8)];
+    let sizes = BlockSizes::from_sparse_rows(p, rows);
+    assert_eq!(sizes.nnz_row(0), 2, "zero entry must be structurally absent");
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::Pairwise,
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::TunaAuto,
+        AlgoKind::hier_coalesced(2, 1),
+        AlgoKind::hier_staggered(2, 4),
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 2 } },
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear },
+    ] {
+        let rep = run_alltoallv(&engine, &kind, &sizes, true)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+        assert!(rep.validated, "{}", kind.name());
+    }
+}
+
+#[test]
 fn selector_and_heuristic_never_emit_invalid_params() {
     forall("selector/heuristic params pass AlgoKind::check", 220, |rng| {
         // Paper-scale topologies too: validity must not depend on the

@@ -194,6 +194,171 @@ fn property_random_configs_all_families() {
 }
 
 #[test]
+fn sparse_workloads_bit_identical_across_every_family() {
+    // Structural sparsity switches every family onto its sparse
+    // schedule (structural peers only); threaded and replay must stay
+    // bit-identical there too, zero tolerance.
+    for (p, q, nnz) in [(24usize, 4usize, 3usize), (64, 8, 6), (96, 8, 0), (128, 16, 16)] {
+        let e = engine(MachineProfile::fugaku(), p, q);
+        let sizes = BlockSizes::generate(p, Dist::Sparse { nnz, max: 512 }, p as u64);
+        let n = p / q;
+        let kinds = vec![
+            AlgoKind::SpreadOut,
+            AlgoKind::OmpiLinear,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 3 },
+            AlgoKind::Vendor,
+            AlgoKind::Bruck2,
+            AlgoKind::Tuna { radix: 2 },
+            AlgoKind::Tuna { radix: p },
+            AlgoKind::TunaAuto,
+            AlgoKind::hier_coalesced(2, 2),
+            AlgoKind::hier_staggered(2, 5),
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear },
+            AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Coalesced { block_count: 1 } },
+            AlgoKind::Hier {
+                local: LocalAlgo::Tuna { radix: 2 },
+                global: GlobalAlgo::Bruck { radix: 2.min(n).max(2) },
+            },
+        ];
+        for kind in kinds {
+            assert_identical(&e, &kind, &sizes);
+        }
+    }
+}
+
+#[test]
+fn sparse_bit_identity_holds_at_p512() {
+    // The satellite bound: zero-tolerance threaded-vs-replay identity at
+    // P = 512 on a sparse composed hierarchy and a sparse linear family.
+    let (p, q) = (512usize, 32usize);
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz: 8, max: 1024 }, 11);
+    for kind in [
+        AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap(),
+        AlgoKind::SpreadOut,
+    ] {
+        assert_identical(&e, &kind, &sizes);
+    }
+}
+
+#[test]
+fn csr_workloads_with_empty_rows_bit_identical() {
+    // Hand-built CSR patterns: empty send rows, zero entries dropped at
+    // construction, self-only rows — every family round-trips them in
+    // both modes without phantom sends.
+    let p = 12;
+    let mut rows: Vec<Vec<(usize, u64)>> = vec![Vec::new(); p];
+    rows[0] = vec![(3, 64), (7, 8)];
+    rows[1] = vec![(1, 16)]; // self only
+    rows[2] = vec![(0, 0), (5, 24)]; // zero dropped
+    rows[7] = (0..p).map(|d| (d, 8)).collect(); // full row
+    // rows 3..=6 and 8..=11 send nothing at all.
+    let sizes = BlockSizes::from_sparse_rows(p, rows);
+    let e = engine(MachineProfile::test_flat(), p, 4);
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::Pairwise,
+        AlgoKind::Tuna { radix: 3 },
+        AlgoKind::hier_staggered(2, 3),
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Bruck { radix: 3 } },
+    ] {
+        assert_identical(&e, &kind, &sizes);
+    }
+}
+
+#[test]
+fn property_random_sparse_configs_all_families() {
+    forall("sparse replay == threaded", 25, |rng| {
+        let q = 2 + rng.next_below(5) as usize; // 2..=6
+        let n = 2 + rng.next_below(5) as usize; // 2..=6 nodes
+        let p = q * n;
+        let nnz = rng.next_below(p as u64 + 1) as usize;
+        let sizes = BlockSizes::generate(p, Dist::Sparse { nnz, max: 256 }, rng.next_u64());
+        let e = engine(MachineProfile::polaris(), p, q);
+        let kind = match rng.next_below(6) {
+            0 => AlgoKind::SpreadOut,
+            1 => AlgoKind::Scattered { block_count: 1 + rng.next_below(6) as usize },
+            2 => AlgoKind::TunaAuto,
+            3 => AlgoKind::Tuna { radix: (2 + rng.next_below(p as u64) as usize).min(p) },
+            _ => hier::random_composition(rng, q, n),
+        };
+        let threaded = run_alltoallv(&e, &kind, &sizes, false).map_err(|e| e.to_string())?;
+        let replayed = run_alltoallv_replay(&e, &kind, &sizes).map_err(|e| e.to_string())?;
+        if threaded.makespan.to_bits() != replayed.makespan.to_bits() {
+            return Err(format!(
+                "{} P={p} Q={q} nnz={nnz}: makespan {} != {}",
+                kind.name(),
+                threaded.makespan,
+                replayed.makespan
+            ));
+        }
+        if threaded.phases != replayed.phases || threaded.counters != replayed.counters {
+            return Err(format!("{} P={p} nnz={nnz}: phases/counters diverged", kind.name()));
+        }
+        if (threaded.t_peak, threaded.rounds) != (replayed.t_peak, replayed.rounds) {
+            return Err(format!("{} P={p} nnz={nnz}: stats diverged", kind.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sparse_composed_hierarchy_scales_to_p8192() {
+    // The satellite scale point: a sparse composed hierarchy at P = 8192
+    // compiles a plan whose op count is proportional to the total
+    // nonzeros (not P²) and replays exactly.
+    let (p, q, nnz) = (8192usize, 64usize, 32usize);
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz, max: 1024 }, 5);
+    let kind = AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap();
+    let plan = tuna::algos::plan_for(&e, &kind, &sizes).unwrap();
+    let nnz_total = sizes.total_nnz();
+    assert_eq!(nnz_total, (p * nnz) as u64, "sparse generator draws exactly nnz per row");
+    assert!(
+        (plan.total_ops() as u64) <= 64 * nnz_total,
+        "plan {} ops not proportional to nnz ({})",
+        plan.total_ops(),
+        nnz_total
+    );
+    let rep = run_alltoallv_replay(&e, &kind, &sizes).unwrap();
+    assert!(rep.makespan > 0.0 && rep.validated);
+}
+
+#[test]
+fn sparse_replay_completes_at_p32768() {
+    // The acceptance point: exact (plan/replay) execution at P = 32768
+    // on a sparse workload — four times past the dense replay wall —
+    // with the op-count proportionality asserted in-test.
+    let (p, q, nnz) = (32768usize, 64usize, 16usize);
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz, max: 1024 }, 9);
+    let kind = AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap();
+    let plan = tuna::algos::plan_for(&e, &kind, &sizes).unwrap();
+    let nnz_total = sizes.total_nnz();
+    assert!(
+        (plan.total_ops() as u64) <= 64 * nnz_total,
+        "plan {} ops not proportional to nnz ({})",
+        plan.total_ops(),
+        nnz_total
+    );
+    let rep = run_alltoallv_replay(&e, &kind, &sizes).unwrap();
+    assert!(rep.makespan > 0.0 && rep.validated);
+    // And the budgeted coordinator path picks exact replay here.
+    let cfg = RunConfig {
+        p,
+        q,
+        dist: Dist::Sparse { nnz, max: 1024 },
+        iters: 1,
+        ..RunConfig::default()
+    };
+    assert_eq!(
+        tuna::coordinator::choose_fidelity(&kind, p, &cfg).name(),
+        "replay"
+    );
+}
+
+#[test]
 fn tuna_auto_with_tuning_table_resolves_identically() {
     // A table-backed tuna:auto must compile the same radix the threaded
     // dispatch agrees on — exercised by pointing the table at a radix

@@ -141,6 +141,71 @@ fn composition_grid_satisfies_the_write_once_read_once_bound() {
 }
 
 #[test]
+fn sparse_workloads_satisfy_write_once_read_once() {
+    // Sparse real-mode runs write only the structural bytes into the
+    // per-rank arenas and read each delivered block once: the invariant
+    // is still exactly 2 x total (structural) bytes — absent pairs
+    // contribute no arena bytes, no messages and no rope segments.
+    forall("zero-copy invariant (sparse)", 30, |rng| {
+        let (p, q) = gen_topology(rng);
+        let nnz = rng.next_below(p as u64 + 1) as usize;
+        let kind = gen_forwarding_kind(rng, p, q);
+        let sizes = BlockSizes::generate(
+            p,
+            Dist::Sparse { nnz, max: 8 * (1 + rng.next_below(64)) },
+            rng.next_u64(),
+        );
+        let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, q));
+        let rep = run_alltoallv(&engine, &kind, &sizes, true)
+            .map_err(|e| format!("{} P={p} Q={q} nnz={nnz}: {e}", kind.name()))?;
+        let expect = 2 * sizes.total_bytes();
+        if rep.counters.copied_bytes == expect {
+            Ok(())
+        } else {
+            Err(format!(
+                "{} P={p} Q={q} nnz={nnz}: copied {} B != {} B",
+                kind.name(),
+                rep.counters.copied_bytes,
+                expect
+            ))
+        }
+    });
+    // The sparse linear families hold the same bound.
+    let p = 16;
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz: 4, max: 512 }, 7);
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 2 },
+    ] {
+        let rep = run_alltoallv(&engine, &kind, &sizes, true).unwrap();
+        assert_eq!(rep.counters.copied_bytes, 2 * sizes.total_bytes(), "{}", kind.name());
+    }
+}
+
+#[test]
+fn zero_size_blocks_carry_no_rope_segments() {
+    // Dense rows may sample genuine zero-size blocks; their buffers must
+    // be empty ropes (no segments), and a dense run whose matrix
+    // contains zeros still satisfies the write-once/read-once bound.
+    use tuna::comm::DataBuf;
+    let row = DataBuf::pattern_row(1, &[16, 0, 8, 0]);
+    assert_eq!(row[1].rope().segment_count(), 0);
+    assert_eq!(row[3].rope().segment_count(), 0);
+    assert_eq!(row[0].rope().segment_count(), 1);
+    // PowerLaw with heavy skew samples plenty of zeros.
+    let p = 12;
+    let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
+    let sizes = BlockSizes::generate(p, Dist::PowerLaw { max: 64, skew: 6.0 }, 5);
+    for kind in [AlgoKind::SpreadOut, AlgoKind::Tuna { radix: 2 }, AlgoKind::hier_coalesced(2, 2)]
+    {
+        let rep = run_alltoallv(&engine, &kind, &sizes, true).unwrap();
+        assert_eq!(rep.counters.copied_bytes, 2 * sizes.total_bytes(), "{}", kind.name());
+    }
+}
+
+#[test]
 fn phantom_mode_moves_no_host_bytes() {
     let p = 16;
     let engine = Engine::new(MachineProfile::test_flat(), Topology::new(p, 4));
