@@ -9,11 +9,16 @@
 //!   plan/replay — with derived messages/second, the host copied-bytes
 //!   counter (the zero-copy rope accounting, see `comm::buffer`), and on
 //!   replay rows the compiled plan telemetry (`plan_ops`, peak per-rank
-//!   plan bytes, workload `nnz_total`). Replay rows include P >= 4096
-//!   dense points and the sparse P = 32768 acceptance point, whose plan
-//!   op-count is asserted proportional to the nonzeros;
+//!   plan bytes, workload `nnz_total`, and the `replay_shards` the
+//!   sharded executor auto-sized to). Replay rows include P >= 4096
+//!   dense points, the sparse P = 32768 acceptance point — whose plan
+//!   op-count is asserted proportional to the nonzeros — and the PR 6
+//!   sparse P = 262144 point;
 //! * a threaded-vs-replay radix *sweep* at P = 512 phantom (the selector
 //!   refinement workload), recording the replay speedup per commit;
+//! * a serial-vs-sharded *parallel replay* row over one cached plan
+//!   (P = 262144 full / 32768 quick), recording the shard speedup with
+//!   makespan bit-identity asserted in passing;
 //! * engine spawn overhead vs P.
 //!
 //! Besides the human-readable table, every run writes a machine-readable
@@ -83,6 +88,11 @@ struct AlgoRow {
     plan_row_bytes: u64,
     /// Total structural nonzeros of the workload (P² for dense rows).
     nnz_total: u64,
+    /// Worker shards the replay executor ran with (the `replay-shards`
+    /// auto policy — bit-identical for every value, recorded so the
+    /// trajectory ties wallclock to the parallelism used). 0 on
+    /// threaded rows.
+    replay_shards: u64,
 }
 
 fn bench_algo(
@@ -134,7 +144,44 @@ fn bench_algo(
         plan_ops,
         plan_row_bytes,
         nnz_total: sizes.total_nnz(),
+        replay_shards: if exec == ExecMode::Replay {
+            tuna::comm::replay::auto_shards(p) as u64
+        } else {
+            0
+        },
     }
+}
+
+struct ParallelRow {
+    p: usize,
+    shards: usize,
+    serial_s: f64,
+    sharded_s: f64,
+}
+
+/// The PR 6 acceptance row: the same cached plan replayed by the
+/// single-threaded executor and by the sharded executor, timed head to
+/// head. Bit-identity of the makespan is asserted in passing — the
+/// speedup is pure wallclock.
+fn bench_parallel_replay(p: usize, q: usize, nnz: usize, shards: usize) -> ParallelRow {
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let kind = AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap();
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz, max: 1024 }, 7);
+    let plan = tuna::algos::plan_for(&engine, &kind, &sizes).unwrap();
+    let t0 = Instant::now();
+    let serial = tuna::comm::replay::execute_sharded(&engine.profile, engine.topo, &plan, 1)
+        .unwrap();
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let sharded = tuna::comm::replay::execute_sharded(&engine.profile, engine.topo, &plan, shards)
+        .unwrap();
+    let sharded_s = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        serial.makespan.to_bits(),
+        sharded.makespan.to_bits(),
+        "sharded replay diverged from serial at P={p}, shards={shards}"
+    );
+    ParallelRow { p, shards, serial_s, sharded_s }
 }
 
 struct SweepRow {
@@ -274,6 +321,18 @@ fn main() {
                 false,
                 rpl,
             ),
+            // PR 6 acceptance point: exact sparse replay a further 8x past
+            // the PR 5 wall, carried by the sharded executor.
+            (
+                AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap(),
+                262_144,
+                64,
+                1024,
+                sparse16,
+                1,
+                false,
+                rpl,
+            ),
         ]
     };
 
@@ -356,6 +415,18 @@ fn main() {
         speedup
     );
 
+    // Serial-vs-sharded replay of one cached plan (the PR 6 executor).
+    let par = if quick {
+        bench_parallel_replay(32_768, 64, 16, 4)
+    } else {
+        bench_parallel_replay(262_144, 64, 16, 8)
+    };
+    let par_speedup = par.serial_s / par.sharded_s.max(1e-12);
+    println!(
+        "\nparallel replay P={} sparse: serial {:.3} s, {} shards {:.3} s — {:.1}x speedup",
+        par.p, par.serial_s, par.shards, par.sharded_s, par_speedup
+    );
+
     println!();
     let spawn_grid: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024, 4096] };
     let mut spawn_rows: Vec<(usize, f64)> = Vec::new();
@@ -391,7 +462,8 @@ fn main() {
              \"exec\": \"{}\", \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \
              \"copied_bytes\": {}, \"payload_bytes\": {}, \
              \"plan_hits\": {}, \"plan_misses\": {}, \
-             \"plan_ops\": {}, \"plan_row_bytes\": {}, \"nnz_total\": {}}}{}\n",
+             \"plan_ops\": {}, \"plan_row_bytes\": {}, \"nnz_total\": {}, \
+             \"replay_shards\": {}}}{}\n",
             json_escape(&r.algo),
             r.p,
             r.q,
@@ -408,6 +480,7 @@ fn main() {
             r.plan_ops,
             r.plan_row_bytes,
             r.nnz_total,
+            r.replay_shards,
             if i + 1 < algo_rows.len() { "," } else { "" }
         ));
     }
@@ -420,6 +493,11 @@ fn main() {
         sweep.threaded_s,
         sweep.replay_s,
         speedup
+    ));
+    j.push_str(&format!(
+        "  \"parallel_replay\": {{\"p\": {}, \"shards\": {}, \"serial_s\": {:.6}, \
+         \"sharded_s\": {:.6}, \"speedup\": {:.2}}},\n",
+        par.p, par.shards, par.serial_s, par.sharded_s, par_speedup
     ));
     j.push_str("  \"spawn\": [\n");
     for (i, (p, t)) in spawn_rows.iter().enumerate() {

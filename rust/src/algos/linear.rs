@@ -239,7 +239,7 @@ pub(crate) fn sparse_linear_events(
 
 /// How a sparse linear schedule groups its steps between waits.
 #[derive(Clone, Copy, Debug)]
-enum SparseBatching {
+pub(crate) enum SparseBatching {
     /// Every step posted, one wait (spread-out / OpenMPI linear).
     SingleWait,
     /// One wait per step (pairwise).
@@ -341,33 +341,48 @@ fn plan_linear_sparse(
     batching: SparseBatching,
 ) {
     for (me, b) in builders.iter_mut().enumerate() {
-        b.mark();
-        b.copy(sizes.row_view(me).get(me));
-        let events = sparse_linear_events(sizes, me, order);
-        let chunk = match batching {
-            SparseBatching::SingleWait => events.len().max(1),
-            SparseBatching::PerStep => 1,
-            SparseBatching::Chunk(bc) => bc.max(1),
-        };
-        let mut i = 0usize;
-        while i < events.len() {
-            let batch = chunk.min(events.len() - i);
-            for ev in &events[i..i + batch] {
-                if let Some(src) = ev.recv {
-                    b.recv(src, TAG);
-                }
-                if let Some((dst, bytes)) = ev.send {
-                    b.send(dst, TAG, bytes);
-                }
-            }
-            b.wait();
-            i += batch;
-        }
-        if events.is_empty() {
-            b.wait();
-        }
-        b.lap(Phase::Data);
+        plan_sparse_rank(b, sizes, me, order, batching);
     }
+}
+
+/// Emit rank `me`'s sparse ops alone — the unit `algos::patch_plan`
+/// recompiles when a row diff touches only a few ranks. Rank `me`'s
+/// schedule depends on row `me` (sends) and on `senders()[me]` (the
+/// structural transpose column), so a patch is sound only while the
+/// changed rows' destination *sets* are unchanged.
+pub(crate) fn plan_sparse_rank(
+    b: &mut PlanBuilder,
+    sizes: &BlockSizes,
+    me: usize,
+    order: SparseOrder,
+    batching: SparseBatching,
+) {
+    b.mark();
+    b.copy(sizes.row_view(me).get(me));
+    let events = sparse_linear_events(sizes, me, order);
+    let chunk = match batching {
+        SparseBatching::SingleWait => events.len().max(1),
+        SparseBatching::PerStep => 1,
+        SparseBatching::Chunk(bc) => bc.max(1),
+    };
+    let mut i = 0usize;
+    while i < events.len() {
+        let batch = chunk.min(events.len() - i);
+        for ev in &events[i..i + batch] {
+            if let Some(src) = ev.recv {
+                b.recv(src, TAG);
+            }
+            if let Some((dst, bytes)) = ev.send {
+                b.send(dst, TAG, bytes);
+            }
+        }
+        b.wait();
+        i += batch;
+    }
+    if events.is_empty() {
+        b.wait();
+    }
+    b.lap(Phase::Data);
 }
 
 /// Compile [`spread_out_sparse`] for every rank.
@@ -405,81 +420,109 @@ pub(crate) fn plan_scattered_sparse(
 
 /// Compile [`spread_out`] for every rank.
 pub(crate) fn plan_spread_out(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
-    let p = sizes.p();
     for (me, b) in builders.iter_mut().enumerate() {
-        let row = sizes.row(me);
-        b.mark();
-        b.copy(row[me]); // self-block delivery memcpy
-        for i in 0..p - 1 {
-            let dst = (me + i + 1) % p;
-            let src = (me + p - i - 1) % p;
-            b.recv(src, TAG);
-            b.send(dst, TAG, row[dst]);
-        }
-        b.wait();
-        b.lap(Phase::Data);
+        plan_spread_out_rank(b, sizes, me);
     }
+}
+
+/// Emit rank `me`'s [`spread_out`] ops alone. All four dense per-rank
+/// emitters read only row `me` of the counts matrix (receives carry no
+/// size), which is what makes single-rank patching sound.
+pub(crate) fn plan_spread_out_rank(b: &mut PlanBuilder, sizes: &BlockSizes, me: usize) {
+    let p = sizes.p();
+    let row = sizes.row(me);
+    b.mark();
+    b.copy(row[me]); // self-block delivery memcpy
+    for i in 0..p - 1 {
+        let dst = (me + i + 1) % p;
+        let src = (me + p - i - 1) % p;
+        b.recv(src, TAG);
+        b.send(dst, TAG, row[dst]);
+    }
+    b.wait();
+    b.lap(Phase::Data);
 }
 
 /// Compile [`ompi_linear`] for every rank.
 pub(crate) fn plan_ompi_linear(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
-    let p = sizes.p();
     for (me, b) in builders.iter_mut().enumerate() {
-        let row = sizes.row(me);
-        b.mark();
-        b.copy(row[me]);
-        for dst in (0..p).filter(|&d| d != me) {
-            b.recv(dst, TAG);
-            b.send(dst, TAG, row[dst]);
-        }
-        b.wait();
-        b.lap(Phase::Data);
+        plan_ompi_linear_rank(b, sizes, me);
     }
+}
+
+/// Emit rank `me`'s [`ompi_linear`] ops alone.
+pub(crate) fn plan_ompi_linear_rank(b: &mut PlanBuilder, sizes: &BlockSizes, me: usize) {
+    let p = sizes.p();
+    let row = sizes.row(me);
+    b.mark();
+    b.copy(row[me]);
+    for dst in (0..p).filter(|&d| d != me) {
+        b.recv(dst, TAG);
+        b.send(dst, TAG, row[dst]);
+    }
+    b.wait();
+    b.lap(Phase::Data);
 }
 
 /// Compile [`pairwise`] for every rank.
 pub(crate) fn plan_pairwise(builders: &mut [PlanBuilder], sizes: &BlockSizes) {
+    for (me, b) in builders.iter_mut().enumerate() {
+        plan_pairwise_rank(b, sizes, me);
+    }
+}
+
+/// Emit rank `me`'s [`pairwise`] ops alone.
+pub(crate) fn plan_pairwise_rank(b: &mut PlanBuilder, sizes: &BlockSizes, me: usize) {
     let p = sizes.p();
     let pow2 = p.is_power_of_two();
-    for (me, b) in builders.iter_mut().enumerate() {
-        let row = sizes.row(me);
-        b.mark();
-        b.copy(row[me]);
-        for i in 1..p {
-            let (dst, src) = if pow2 {
-                (me ^ i, me ^ i)
-            } else {
-                ((me + i) % p, (me + p - i) % p)
-            };
-            b.sendrecv(dst, TAG, row[dst], src, TAG);
-        }
-        b.lap(Phase::Data);
+    let row = sizes.row(me);
+    b.mark();
+    b.copy(row[me]);
+    for i in 1..p {
+        let (dst, src) = if pow2 {
+            (me ^ i, me ^ i)
+        } else {
+            ((me + i) % p, (me + p - i) % p)
+        };
+        b.sendrecv(dst, TAG, row[dst], src, TAG);
     }
+    b.lap(Phase::Data);
 }
 
 /// Compile [`scattered`] for every rank.
 pub(crate) fn plan_scattered(builders: &mut [PlanBuilder], sizes: &BlockSizes, block_count: usize) {
     assert!(block_count >= 1, "block_count must be >= 1");
-    let p = sizes.p();
     for (me, b) in builders.iter_mut().enumerate() {
-        let row = sizes.row(me);
-        b.mark();
-        b.copy(row[me]);
-        let mut i = 0usize;
-        while i < p - 1 {
-            let batch = block_count.min(p - 1 - i);
-            for j in 0..batch {
-                let off = i + j + 1;
-                let src = (me + p - off) % p;
-                let dst = (me + off) % p;
-                b.recv(src, TAG);
-                b.send(dst, TAG, row[dst]);
-            }
-            b.wait();
-            i += batch;
-        }
-        b.lap(Phase::Data);
+        plan_scattered_rank(b, sizes, me, block_count);
     }
+}
+
+/// Emit rank `me`'s [`scattered`] ops alone.
+pub(crate) fn plan_scattered_rank(
+    b: &mut PlanBuilder,
+    sizes: &BlockSizes,
+    me: usize,
+    block_count: usize,
+) {
+    assert!(block_count >= 1, "block_count must be >= 1");
+    let p = sizes.p();
+    let row = sizes.row(me);
+    b.mark();
+    b.copy(row[me]);
+    let mut i = 0usize;
+    while i < p - 1 {
+        let batch = block_count.min(p - 1 - i);
+        for j in 0..batch {
+            let off = i + j + 1;
+            let src = (me + p - off) % p;
+            let dst = (me + off) % p;
+            b.recv(src, TAG);
+            b.send(dst, TAG, row[dst]);
+        }
+        b.wait();
+        i += batch;
+    }
+    b.lap(Phase::Data);
 }
 
 #[cfg(test)]

@@ -37,7 +37,9 @@ pub use hier::{GlobalAlgo, LocalAlgo};
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use crate::comm::{Block, CommPlan, Counters, DataBuf, Engine, PhaseBreakdown, PlanBuilder, RankCtx};
+use crate::comm::{
+    Block, CommPlan, Counters, DataBuf, Engine, PhaseBreakdown, PlanBuilder, RankCtx, RankPlan,
+};
 use crate::error::{Result, TunaError};
 use crate::workload::{fingerprint_one, BlockSizes};
 
@@ -504,17 +506,22 @@ pub fn run_alltoallv_mode(
 }
 
 /// Replay `kind` over `sizes`: compile (or fetch the cached) plan, then
-/// advance it on the single-threaded discrete-event executor. The report
-/// is bit-identical to a threaded phantom run (`tests/replay_equivalence
-/// .rs`); `validated` reflects the compile-time schedule checks — byte
-/// validation requires real payloads and therefore the threaded oracle.
+/// advance it on the discrete-event executor — sharded across
+/// `engine.replay_shards` workers (auto-sized from P and the host when
+/// unset), bit-identical for every shard count. The report matches a
+/// threaded phantom run (`tests/replay_equivalence.rs`); `validated`
+/// reflects the compile-time schedule checks — byte validation requires
+/// real payloads and therefore the threaded oracle.
 pub fn run_alltoallv_replay(
     engine: &Engine,
     kind: &AlgoKind,
     sizes: &BlockSizes,
 ) -> Result<RunReport> {
     let plan = plan_for(engine, kind, sizes)?;
-    let res = crate::comm::replay::execute(&engine.profile, engine.topo, &plan);
+    let shards = engine
+        .replay_shards
+        .unwrap_or_else(|| crate::comm::replay::auto_shards(engine.topo.p()));
+    let res = crate::comm::replay::execute_sharded(&engine.profile, engine.topo, &plan, shards)?;
     Ok(RunReport {
         algo: kind.name(),
         makespan: res.makespan,
@@ -526,15 +533,14 @@ pub fn run_alltoallv_replay(
     })
 }
 
-/// Fetch `kind`'s compiled plan for `sizes` from the engine's cache,
-/// compiling on a miss. The key is `(resolved algo spec, counts-matrix
-/// identity)`, with the matrix identity hashed incrementally through
-/// [`BlockSizes::identity_hash`] — generator-backed workloads hash their
-/// `(p, dist, seed)` descriptor (rows are a pure function of it, so two
-/// separately constructed handles with equal contents share one cache
-/// entry), materialized workloads hash their structural entries row by
-/// row, never via a dense materialization.
-pub fn plan_for(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<Arc<CommPlan>> {
+/// The cache key of `kind`'s plan for `sizes` on `engine`: `(resolved
+/// algo spec, mixed identity hash)`. The matrix identity comes
+/// incrementally through [`BlockSizes::identity_hash`] — generator-backed
+/// workloads hash their `(p, dist, seed)` descriptor (rows are a pure
+/// function of it, so two separately constructed handles with equal
+/// contents share one cache entry), materialized workloads hash their
+/// structural entries row by row, never via a dense materialization.
+pub fn plan_key(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> (String, u64) {
     let mut h: u64 = sizes.identity_hash();
     let mut mix = |v: u64| {
         h ^= v;
@@ -548,10 +554,156 @@ pub fn plan_for(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<
     if let Some(table) = &engine.tuning {
         mix(Arc::as_ptr(table) as u64);
     }
-    let key = (kind.spec(), h);
+    (kind.spec(), h)
+}
+
+/// Fetch `kind`'s compiled plan for `sizes` from the engine's cache,
+/// compiling on a miss. Keyed by [`plan_key`]; the engine's `(p, q)`
+/// shape is re-verified on every hit so a 64-bit hash collision can
+/// never hand a wrong-shape plan to the replay executor.
+pub fn plan_for(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<Arc<CommPlan>> {
+    let key = plan_key(engine, kind, sizes);
     engine
         .plan_cache
-        .get_or_try_insert(key, || compile_plan(engine, kind, sizes))
+        .get_or_try_insert(key, engine.topo.p(), engine.topo.q(), || {
+            compile_plan(engine, kind, sizes)
+        })
+}
+
+/// Row-diff bound for [`patch_plan`]: beyond this many changed rows a
+/// full recompile is cheaper than diffing P row views.
+pub const PLAN_PATCH_MAX_ROWS: usize = 64;
+
+/// Incrementally patch `base_plan` (compiled for `base_sizes`) into the
+/// plan for `new_sizes`, recompiling only the ranks whose send rows
+/// changed, and cache the result under `new_sizes`' [`plan_key`].
+/// Returns `None` whenever patching would not be provably equivalent to
+/// a fresh compile, in which case the caller should fall back to
+/// [`plan_for`]:
+///
+/// * non-linear families — TuNA's moving-slot metadata, `tuna:auto`'s
+///   allreduced mean and the hierarchy's bucketing couple every rank's
+///   schedule to the whole matrix;
+/// * shape mismatches, sparsity-class changes, or more than
+///   [`PLAN_PATCH_MAX_ROWS`] changed rows ([`BlockSizes::row_diff`]);
+/// * sparse rows whose structural destination *set* changed — receivers'
+///   recv schedules follow the transpose, so such a change reaches
+///   beyond the changed rows' own plans.
+///
+/// For the linear families, rank `r`'s plan is a function of row `r`
+/// alone (receives carry no sizes), so splicing freshly emitted rank
+/// plans for the changed rows is op-for-op identical to a full
+/// recompile — asserted in `tests/replay_equivalence.rs`.
+pub fn patch_plan(
+    engine: &Engine,
+    kind: &AlgoKind,
+    base_sizes: &BlockSizes,
+    base_plan: &Arc<CommPlan>,
+    new_sizes: &BlockSizes,
+) -> Option<Arc<CommPlan>> {
+    let p = engine.topo.p();
+    if base_plan.p != p || base_plan.q != engine.topo.q() || new_sizes.p() != p {
+        return None;
+    }
+    let changed = new_sizes.row_diff(base_sizes, PLAN_PATCH_MAX_ROWS)?;
+    if changed.is_empty() {
+        return Some(base_plan.clone());
+    }
+    if new_sizes.is_sparse() {
+        for &src in &changed {
+            let old: Vec<usize> = base_sizes.row_view(src).entries().map(|(d, _)| d).collect();
+            let new: Vec<usize> = new_sizes.row_view(src).entries().map(|(d, _)| d).collect();
+            if old != new {
+                return None;
+            }
+        }
+    }
+    let mut replacements = Vec::with_capacity(changed.len());
+    for &src in &changed {
+        replacements.push((src, linear_rank_plan(kind, new_sizes, src)?));
+    }
+    let patched = Arc::new(base_plan.with_rank_plans(replacements));
+    engine
+        .plan_cache
+        .insert(plan_key(engine, kind, new_sizes), patched.clone());
+    Some(patched)
+}
+
+/// Emit rank `me`'s plan alone — defined (and patchable) only for the
+/// linear families, whose per-rank schedules depend solely on row `me`.
+fn linear_rank_plan(kind: &AlgoKind, sizes: &BlockSizes, me: usize) -> Option<RankPlan> {
+    use linear::{SparseBatching, SparseOrder};
+    let sparse = sizes.is_sparse();
+    let mut b = PlanBuilder::new(me, sizes.p());
+    match *kind {
+        AlgoKind::SpreadOut => {
+            if sparse {
+                linear::plan_sparse_rank(
+                    &mut b,
+                    sizes,
+                    me,
+                    SparseOrder::RoundRobin,
+                    SparseBatching::SingleWait,
+                );
+            } else {
+                linear::plan_spread_out_rank(&mut b, sizes, me);
+            }
+        }
+        AlgoKind::OmpiLinear => {
+            if sparse {
+                linear::plan_sparse_rank(
+                    &mut b,
+                    sizes,
+                    me,
+                    SparseOrder::Ascending,
+                    SparseBatching::SingleWait,
+                );
+            } else {
+                linear::plan_ompi_linear_rank(&mut b, sizes, me);
+            }
+        }
+        AlgoKind::Pairwise => {
+            if sparse {
+                linear::plan_sparse_rank(
+                    &mut b,
+                    sizes,
+                    me,
+                    SparseOrder::Pairwise,
+                    SparseBatching::PerStep,
+                );
+            } else {
+                linear::plan_pairwise_rank(&mut b, sizes, me);
+            }
+        }
+        AlgoKind::Scattered { block_count } => {
+            if sparse {
+                linear::plan_sparse_rank(
+                    &mut b,
+                    sizes,
+                    me,
+                    SparseOrder::RoundRobin,
+                    SparseBatching::Chunk(block_count),
+                );
+            } else {
+                linear::plan_scattered_rank(&mut b, sizes, me, block_count);
+            }
+        }
+        AlgoKind::Vendor => {
+            if sparse {
+                linear::plan_sparse_rank(
+                    &mut b,
+                    sizes,
+                    me,
+                    SparseOrder::RoundRobin,
+                    SparseBatching::Chunk(VENDOR_BLOCK_COUNT),
+                );
+            } else {
+                linear::plan_scattered_rank(&mut b, sizes, me, VENDOR_BLOCK_COUNT);
+            }
+        }
+        _ => return None,
+    }
+    Some(b.finish())
 }
 
 /// Compile `kind`'s [`CommPlan`] from the counts matrix — without

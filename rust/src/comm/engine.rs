@@ -517,6 +517,10 @@ pub struct Engine {
     /// `(algo spec, counts-matrix identity)` — repeated collectives on
     /// one engine replay without re-compiling (`algos::plan_for`).
     pub plan_cache: super::plan::PlanCache,
+    /// Worker-shard count for the replay executor; `None` picks
+    /// [`super::replay::auto_shards`] from P and the host. Purely a
+    /// wallclock knob — replay results are bit-identical for every value.
+    pub replay_shards: Option<usize>,
 }
 
 impl Engine {
@@ -527,6 +531,7 @@ impl Engine {
             stack_size: 1 << 20,
             tuning: None,
             plan_cache: super::plan::PlanCache::default(),
+            replay_shards: None,
         }
     }
 
@@ -537,6 +542,14 @@ impl Engine {
     pub fn with_tuning(mut self, table: Option<Arc<TuningTable>>) -> Engine {
         self.tuning = table;
         self.plan_cache = super::plan::PlanCache::default();
+        self
+    }
+
+    /// Pin the replay executor's worker-shard count (`Some(n)`) or
+    /// restore auto-sizing (`None`). The plan cache is untouched: shard
+    /// count never changes what a plan computes, only how fast.
+    pub fn with_replay_shards(mut self, shards: Option<usize>) -> Engine {
+        self.replay_shards = shards;
         self
     }
 

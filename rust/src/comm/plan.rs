@@ -36,7 +36,7 @@
 //! (size-only) fast path for large-P model sweeps.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use super::engine::{prev_pow2, TAG_AR_FOLD, TAG_AR_ROUND, TAG_AR_UNFOLD};
 use super::Phase;
@@ -103,6 +103,27 @@ impl CommPlan {
     /// as the per-row plan envelope.
     pub fn peak_rank_bytes(&self) -> usize {
         self.peak_rank_ops() * std::mem::size_of::<PlanOp>()
+    }
+
+    /// A copy of this plan with the listed ranks' op sequences replaced —
+    /// the incremental-patch primitive: when a row diff shows only a few
+    /// ranks' schedules changed, `algos::patch_plan` recompiles just those
+    /// ranks and splices them in here instead of recompiling O(nnz).
+    /// Schedule stats (`t_peak`, `rounds`) carry over; they are 0 for the
+    /// linear families patching supports.
+    pub fn with_rank_plans(&self, replacements: Vec<(usize, RankPlan)>) -> CommPlan {
+        let mut ranks = self.ranks.clone();
+        for (rank, rp) in replacements {
+            ranks[rank] = rp;
+        }
+        CommPlan {
+            p: self.p,
+            q: self.q,
+            algo: self.algo.clone(),
+            ranks,
+            t_peak: self.t_peak,
+            rounds: self.rounds,
+        }
     }
 }
 
@@ -249,41 +270,90 @@ impl PlanCache {
     /// the hundreds of MB.
     pub const MAX_PLANS: usize = 8;
 
+    /// Acquire the cache lock, recovering from poisoning. Cache
+    /// operations never leave `CacheInner` torn mid-update (map and order
+    /// are mutated only after all fallible work), so a panic on another
+    /// thread holding the lock — e.g. a builder assertion during a
+    /// concurrent refinement sweep — must not brick every subsequent run
+    /// in-process: we take the inner value and continue, parking_lot
+    /// style.
+    fn lock(&self) -> MutexGuard<'_, CacheInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Look `key` up, compiling (outside the lock) and inserting on a
     /// miss. Concurrent misses on the same key may both compile; the
     /// first insert wins and the duplicate is dropped — plans are pure
     /// data, so this is only wasted work, never an inconsistency.
+    ///
+    /// `(p, q)` is the shape the caller is about to execute against. A
+    /// key hit whose cached plan was compiled for a different shape is a
+    /// hash collision (the 64-bit identity hash is not injective) — the
+    /// stale entry is dropped and the plan recompiled, instead of handing
+    /// a wrong-shape plan to the replay executor.
     pub fn get_or_try_insert<E>(
         &self,
         key: (String, u64),
+        p: usize,
+        q: usize,
         build: impl FnOnce() -> Result<CommPlan, E>,
     ) -> Result<Arc<CommPlan>, E> {
         {
-            let mut inner = self.inner.lock().unwrap();
-            if let Some(hit) = inner.map.get(&key).cloned() {
-                inner.hits += 1;
-                return Ok(hit);
+            let mut inner = self.lock();
+            match inner.map.get(&key).cloned() {
+                Some(hit) if hit.p == p && hit.q == q => {
+                    inner.hits += 1;
+                    return Ok(hit);
+                }
+                Some(_) => {
+                    // Collision: same (spec, hash), different shape.
+                    inner.map.remove(&key);
+                    inner.order.retain(|k| k != &key);
+                }
+                None => {}
             }
         }
         let plan = Arc::new(build()?);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         inner.misses += 1;
-        if let Some(existing) = inner.map.get(&key).cloned() {
-            return Ok(existing);
+        match inner.map.get(&key).cloned() {
+            Some(existing) if existing.p == p && existing.q == q => return Ok(existing),
+            Some(_) => {
+                inner.map.remove(&key);
+                inner.order.retain(|k| k != &key);
+            }
+            None => {}
         }
+        Self::insert_locked(&mut inner, key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Insert (or replace) `plan` under `key` without touching the
+    /// hit/miss counters — the path patched plans take, so bench rows
+    /// still read `(hits, misses)` as (replays, compiles).
+    pub fn insert(&self, key: (String, u64), plan: Arc<CommPlan>) {
+        let mut inner = self.lock();
+        if inner.map.contains_key(&key) {
+            inner.map.insert(key, plan);
+            return;
+        }
+        Self::insert_locked(&mut inner, key, plan);
+    }
+
+    /// FIFO-evict at capacity, then insert a key not currently present.
+    fn insert_locked(inner: &mut CacheInner, key: (String, u64), plan: Arc<CommPlan>) {
         if inner.map.len() >= Self::MAX_PLANS {
             if let Some(oldest) = inner.order.pop_front() {
                 inner.map.remove(&oldest);
             }
         }
         inner.order.push_back(key.clone());
-        inner.map.insert(key, plan.clone());
-        Ok(plan)
+        inner.map.insert(key, plan);
     }
 
     /// Cached plan count.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.lock().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -292,7 +362,7 @@ impl PlanCache {
 
     /// `(hits, misses)` since construction.
     pub fn stats(&self) -> (u64, u64) {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock();
         (inner.hits, inner.misses)
     }
 }
@@ -374,14 +444,14 @@ mod tests {
                 rounds: 1,
             })
         };
-        let a = cache.get_or_try_insert(key.clone(), build).unwrap();
-        let b = cache.get_or_try_insert(key, build).unwrap();
+        let a = cache.get_or_try_insert(key.clone(), 2, 1, build).unwrap();
+        let b = cache.get_or_try_insert(key, 2, 1, build).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.stats(), (1, 1));
         // A different key compiles fresh.
         let c = cache
-            .get_or_try_insert(("tuna:r=2".to_string(), 43u64), build)
+            .get_or_try_insert(("tuna:r=2".to_string(), 43u64), 2, 1, build)
             .unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(cache.stats(), (1, 2));
@@ -401,18 +471,137 @@ mod tests {
             })
         };
         for i in 0..PlanCache::MAX_PLANS as u64 + 3 {
-            cache.get_or_try_insert(("a".to_string(), i), build).unwrap();
+            cache
+                .get_or_try_insert(("a".to_string(), i), 1, 1, build)
+                .unwrap();
         }
         assert_eq!(cache.len(), PlanCache::MAX_PLANS);
         // The first keys were evicted FIFO; the newest are retained.
         let (hits_before, _) = cache.stats();
-        cache.get_or_try_insert(("a".to_string(), 0), build).unwrap();
+        cache
+            .get_or_try_insert(("a".to_string(), 0), 1, 1, build)
+            .unwrap();
         let (hits_after_old, _) = cache.stats();
         assert_eq!(hits_after_old, hits_before, "evicted key must recompile");
         let newest = PlanCache::MAX_PLANS as u64 + 2;
-        cache.get_or_try_insert(("a".to_string(), newest), build).unwrap();
+        cache
+            .get_or_try_insert(("a".to_string(), newest), 1, 1, build)
+            .unwrap();
         let (hits_after_new, _) = cache.stats();
         assert_eq!(hits_after_new, hits_before + 1, "retained key must hit");
+    }
+
+    fn plan_of_shape(p: usize, q: usize) -> CommPlan {
+        CommPlan {
+            p,
+            q,
+            algo: "x".into(),
+            ranks: vec![RankPlan::default(); p],
+            t_peak: 0,
+            rounds: 0,
+        }
+    }
+
+    #[test]
+    fn key_collision_with_different_shape_recompiles() {
+        // Two workloads whose (spec, identity_hash) keys collide but that
+        // were compiled for different (p, q) must never share a plan.
+        let cache = PlanCache::default();
+        let key = ("so".to_string(), 7u64);
+        let small = cache
+            .get_or_try_insert(key.clone(), 2, 1, || Ok::<_, ()>(plan_of_shape(2, 1)))
+            .unwrap();
+        // Same key, different shape: the stale entry is dropped and the
+        // correct-shape plan compiled and returned.
+        let big = cache
+            .get_or_try_insert(key.clone(), 4, 2, || Ok::<_, ()>(plan_of_shape(4, 2)))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&small, &big));
+        assert_eq!((big.p, big.q), (4, 2));
+        assert_eq!(cache.stats(), (0, 2), "a collision is a miss, not a hit");
+        // The replacement is now the cached entry for the key.
+        let again = cache
+            .get_or_try_insert(key, 4, 2, || Ok::<_, ()>(plan_of_shape(4, 2)))
+            .unwrap();
+        assert!(Arc::ptr_eq(&big, &again));
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_instead_of_bricking_the_cache() {
+        let cache = PlanCache::default();
+        cache
+            .get_or_try_insert(("k".to_string(), 1), 1, 1, || {
+                Ok::<_, ()>(plan_of_shape(1, 1))
+            })
+            .unwrap();
+        // Poison the mutex: panic on another thread while holding it.
+        let result = std::thread::scope(|scope| {
+            scope
+                .spawn(|| {
+                    let _guard = cache.inner.lock().unwrap();
+                    panic!("boom while holding the cache lock");
+                })
+                .join()
+        });
+        assert!(result.is_err(), "the poisoning thread must have panicked");
+        // Every cache entry point still works — the poisoned state is
+        // taken over, parking_lot style, not propagated as a panic.
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats(), (0, 1));
+        let hit = cache
+            .get_or_try_insert(("k".to_string(), 1), 1, 1, || {
+                Ok::<_, ()>(plan_of_shape(1, 1))
+            })
+            .unwrap();
+        assert_eq!((hit.p, hit.q), (1, 1));
+        assert_eq!(cache.stats(), (1, 1));
+        cache.insert(("k".to_string(), 2), Arc::new(plan_of_shape(1, 1)));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn insert_replaces_in_place_without_counter_bumps() {
+        let cache = PlanCache::default();
+        let key = ("p".to_string(), 9u64);
+        let first = Arc::new(plan_of_shape(2, 1));
+        cache.insert(key.clone(), first.clone());
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats(), (0, 0));
+        let second = Arc::new(plan_of_shape(2, 1));
+        cache.insert(key.clone(), second.clone());
+        assert_eq!(cache.len(), 1, "replace in place, no duplicate order entry");
+        let got = cache
+            .get_or_try_insert(key, 2, 1, || Ok::<_, ()>(plan_of_shape(2, 1)))
+            .unwrap();
+        assert!(Arc::ptr_eq(&got, &second));
+    }
+
+    #[test]
+    fn with_rank_plans_splices_only_the_named_ranks() {
+        let base = {
+            let mut b0 = PlanBuilder::new(0, 3);
+            b0.copy(8);
+            let mut b1 = PlanBuilder::new(1, 3);
+            b1.copy(16);
+            let mut b2 = PlanBuilder::new(2, 3);
+            b2.copy(24);
+            CommPlan {
+                p: 3,
+                q: 1,
+                algo: "x".into(),
+                ranks: vec![b0.finish(), b1.finish(), b2.finish()],
+                t_peak: 5,
+                rounds: 7,
+            }
+        };
+        let mut nb = PlanBuilder::new(1, 3);
+        nb.copy(999);
+        let patched = base.with_rank_plans(vec![(1, nb.finish())]);
+        assert_eq!(patched.ranks[0], base.ranks[0]);
+        assert_eq!(patched.ranks[2], base.ranks[2]);
+        assert_eq!(patched.ranks[1].ops, vec![PlanOp::Copy { bytes: 999 }]);
+        assert_eq!((patched.t_peak, patched.rounds), (5, 7));
+        assert_eq!(patched.algo, base.algo);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Single-threaded discrete-event replay of a [`CommPlan`].
+//! Discrete-event replay of a [`CommPlan`] — single-threaded or sharded
+//! across worker threads, always bit-identical.
 //!
 //! [`execute`] advances every rank's [`Clock`] through its compiled op
 //! sequence in dependency order: a rank runs until a `Wait` whose
@@ -7,15 +8,49 @@
 //! condvars — a P = 16,384 phantom simulation is ordinary single-core
 //! arithmetic instead of 16k spawned threads.
 //!
-//! **Bit-identity.** Every clock call made here replicates the threaded
-//! engine exactly: sends charge `Clock::post_send` in sender program
-//! order, receive posts charge `Clock::post_recv`, and each `Wait` drains
-//! its matched messages in the same deterministic order as
-//! `RankCtx::waitall` — stable-sorted by `(arrival, src, tag)` with FIFO
-//! matching per `(src, tag)` channel. Virtual time is a pure function of
-//! the per-rank op sequences, so makespans, phase breakdowns and counters
-//! are bit-identical to a threaded phantom run of the same algorithm
-//! (asserted with zero tolerance by `tests/replay_equivalence.rs`).
+//! [`execute_sharded`] partitions the ranks into contiguous shards and
+//! runs the same event loop on each shard concurrently, synchronized by
+//! conservative time windows: within a window every shard advances its
+//! own ranks until they are all parked or done, buffering cross-shard
+//! sends in a per-shard boundary queue; at the window barrier the
+//! coordinator drains every boundary queue into the destination shards'
+//! mailboxes (waking receivers whose deficits clear) and opens the next
+//! window. The loop ends when a barrier delivers nothing and no rank is
+//! runnable.
+//!
+//! **Why window barriers preserve the drain order (shard-count
+//! independence).** Virtual time is a pure function of the per-rank op
+//! sequences; the only cross-rank interaction is a send depositing its
+//! `(arrive, bytes, link)` tuple into the receiver's `(src, tag)`
+//! channel. Three facts make the schedule independent of sharding:
+//!
+//! 1. **Channels are single-writer.** A mailbox channel is keyed by
+//!    `(src, tag)`, so every message in it comes from one rank, which
+//!    executes serially inside exactly one shard. Boundary queues are
+//!    appended in sender program order and drained in order at the
+//!    barrier, so FIFO-per-channel is sender program order under any
+//!    shard count — exactly what the threaded engine's mailbox yields.
+//! 2. **Matching is by count, not by time.** A `Wait` matches the
+//!    channel-FIFO prefix of its posted receives; a barrier only changes
+//!    *when* (in wallclock) the deficit clears, never *which* messages
+//!    match. Arrival timestamps are computed on the sender's clock and
+//!    travel with the message, unchanged by the delivery delay.
+//! 3. **The drain sort is over the matched set.** Each completed `Wait`
+//!    stable-sorts its matched messages by `(arrive, src, tag)` — a
+//!    deterministic function of facts fixed by 1 and 2.
+//!
+//! Hence every clock advance sees identical inputs regardless of shard
+//! count, and makespans, phase breakdowns and counters are bit-identical
+//! to the single-threaded replay and to a threaded phantom run
+//! (asserted with zero tolerance by `tests/replay_equivalence.rs` across
+//! 1/2/4/8 shards).
+//!
+//! Invalid inputs surface as typed [`ReplayError`]s, never panics:
+//! plan/topology shape mismatches ([`ReplayError::ShapeMismatch`]), plans
+//! that park a rank forever ([`ReplayError::PlanDeadlock`]) and plans
+//! that leave sent messages unreceived
+//! ([`ReplayError::UndrainedMailbox`]) — the latter two are compiler
+//! bugs, reported with the rank/op context needed to debug one.
 //!
 //! The threaded engine stays the golden oracle for real payloads; replay
 //! never materializes payload bytes, so `Counters::copied_bytes` is zero,
@@ -24,6 +59,8 @@
 use std::collections::{HashMap, VecDeque};
 use std::hash::BuildHasherDefault;
 
+use thiserror::Error;
+
 use super::clock::Clock;
 use super::engine::{ChanHasher, EngineResult, RankResult};
 use super::plan::{CommPlan, PlanOp};
@@ -31,12 +68,74 @@ use super::topology::Topology;
 use super::PhaseBreakdown;
 use crate::model::{Link, MachineProfile};
 
+/// Typed replay failures. `ShapeMismatch` is a configuration error (the
+/// caller handed a plan to the wrong topology); the other two mean the
+/// plan itself is broken — a compiler bug — and carry the context a
+/// compiler author needs. Converted into [`crate::TunaError`] where the
+/// public API surfaces them (`algos::run_alltoallv_replay`).
+#[derive(Clone, Debug, Error, PartialEq)]
+pub enum ReplayError {
+    /// The plan was compiled for a different process layout.
+    #[error(
+        "plan/topology mismatch: plan is for P={plan_p}, Q={plan_q} \
+         but topology has P={topo_p}, Q={topo_q}"
+    )]
+    ShapeMismatch {
+        plan_p: usize,
+        plan_q: usize,
+        topo_p: usize,
+        topo_q: usize,
+    },
+    /// A `Wait` whose messages are never sent: `rank` stays parked at op
+    /// `pc` (of `ops` total) with `missing` messages outstanding.
+    #[error(
+        "replay deadlock: rank {rank} parked at op {pc}/{ops} of {algo} \
+         ({missing} messages missing)"
+    )]
+    PlanDeadlock {
+        rank: usize,
+        pc: usize,
+        ops: usize,
+        algo: String,
+        missing: usize,
+    },
+    /// Messages were sent to `rank` but never received — the plan ended
+    /// with `messages` undrained messages on `channels` channels.
+    #[error(
+        "rank {rank} mailbox not drained — plan left {messages} unreceived \
+         messages on {channels} (src, tag) channels"
+    )]
+    UndrainedMailbox {
+        rank: usize,
+        messages: usize,
+        channels: usize,
+    },
+}
+
+impl From<ReplayError> for crate::TunaError {
+    fn from(e: ReplayError) -> crate::TunaError {
+        match e {
+            ReplayError::ShapeMismatch { .. } => crate::TunaError::Config(e.to_string()),
+            _ => crate::TunaError::Validation(e.to_string()),
+        }
+    }
+}
+
 /// A message in flight: what the receiver's drain needs, nothing more.
 #[derive(Clone, Copy, Debug)]
 struct InMsg {
     arrive: f64,
     bytes: u64,
     link: Link,
+}
+
+/// A cross-shard send buffered until the next window barrier.
+#[derive(Clone, Copy, Debug)]
+struct BoundaryMsg {
+    dst: u32,
+    src: u32,
+    tag: u32,
+    msg: InMsg,
 }
 
 type ChanMap = HashMap<(u32, u32), VecDeque<InMsg>, BuildHasherDefault<ChanHasher>>;
@@ -79,124 +178,269 @@ impl ReplayRank {
     }
 }
 
-/// Execute `plan` and return per-rank results plus the simulated makespan
-/// — the same shape [`Engine::run`](super::Engine::run) produces, so
-/// `phase_critical_path` / `total_counters` aggregation is shared.
-///
-/// Panics on a deadlocked plan (a `Wait` whose messages are never sent)
-/// and on undrained mailboxes (messages sent but never received) — both
-/// are compiler bugs, reported like the engine's undrained-mailbox check.
-pub fn execute(profile: &MachineProfile, topo: Topology, plan: &CommPlan) -> EngineResult<()> {
-    let p = topo.p();
-    assert_eq!(plan.p, p, "plan is for P={} but topology has P={p}", plan.p);
-    assert_eq!(
-        plan.q,
-        topo.q(),
-        "plan is for Q={} but topology has Q={}",
-        plan.q,
-        topo.q()
-    );
+/// One worker shard: a contiguous range of ranks plus their mailboxes,
+/// ready queue and the boundary queue of cross-shard sends produced in
+/// the current window. Shards share nothing during a window, so the
+/// parallel phase needs no locks.
+struct Shard {
+    /// First global rank owned by this shard.
+    start: usize,
+    states: Vec<ReplayRank>,
+    mailboxes: Vec<ChanMap>,
+    /// Runnable ranks, as local indices.
+    ready: VecDeque<usize>,
+    in_queue: Vec<bool>,
+    /// Cross-shard sends of the current window, in sender program order
+    /// (per sender; senders within a shard are interleaved by the event
+    /// loop, which is fine — FIFO only matters per `(src, tag)` channel).
+    outbox: Vec<BoundaryMsg>,
+}
 
-    let mut mailboxes: Vec<ChanMap> = (0..p).map(|_| ChanMap::default()).collect();
-    let mut states: Vec<ReplayRank> = (0..p).map(|_| ReplayRank::new()).collect();
-    let mut ready: VecDeque<usize> = (0..p).collect();
-    let mut in_queue = vec![true; p];
-
-    while let Some(me) = ready.pop_front() {
-        in_queue[me] = false;
-        let ops = &plan.ranks[me].ops;
-        loop {
-            if states[me].pc == ops.len() {
-                states[me].done = true;
-                break;
-            }
-            match ops[states[me].pc] {
-                PlanOp::Send { dst, tag, bytes } => {
-                    let d = dst as usize;
-                    let link = topo.link(me, d);
-                    let st = &mut states[me];
-                    let timing = st.clock.post_send(profile, link, bytes, p);
-                    st.pending_sends.push(timing.complete);
-                    mailboxes[d].entry((me as u32, tag)).or_default().push_back(InMsg {
-                        arrive: timing.arrive,
-                        bytes,
-                        link,
-                    });
-                    // Wake the receiver if this send clears its last
-                    // deficit. (A self-send needs no wake: we are the
-                    // running rank.)
-                    if d != me && states[d].blocked {
-                        if let Some(n) = states[d].missing.get_mut(&(me as u32, tag)) {
-                            if *n > 0 {
-                                *n -= 1;
-                                states[d].missing_total -= 1;
-                                if states[d].missing_total == 0 {
-                                    states[d].blocked = false;
-                                    if !in_queue[d] {
-                                        in_queue[d] = true;
-                                        ready.push_back(d);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                PlanOp::Recv { src, tag } => {
-                    let link = topo.link(me, src as usize);
-                    let st = &mut states[me];
-                    st.clock.post_recv(profile, link);
-                    st.pending_recvs.push((src, tag));
-                }
-                PlanOp::Wait => {
-                    let (missing, missing_total) =
-                        channel_deficits(&states[me].pending_recvs, &mailboxes[me]);
-                    if missing_total > 0 {
-                        let st = &mut states[me];
-                        st.missing = missing;
-                        st.missing_total = missing_total;
-                        st.blocked = true;
-                        // pc stays on this Wait; resumed once the
-                        // deficits drain.
-                        break;
-                    }
-                    perform_wait(&mut states[me], &mut mailboxes[me], profile);
-                }
-                PlanOp::Copy { bytes } => {
-                    states[me].clock.charge_copy(profile, bytes);
-                }
-                PlanOp::Compute { secs } => {
-                    states[me].clock.charge_compute(secs);
-                }
-                PlanOp::Mark => {
-                    let st = &mut states[me];
-                    st.mark = st.clock.now;
-                }
-                PlanOp::Lap { phase } => {
-                    let st = &mut states[me];
-                    let now = st.clock.now;
-                    st.phases.add(phase, now - st.mark);
-                    st.mark = now;
-                }
-            }
-            states[me].pc += 1;
+impl Shard {
+    fn new(start: usize, len: usize) -> Shard {
+        Shard {
+            start,
+            states: (0..len).map(|_| ReplayRank::new()).collect(),
+            mailboxes: (0..len).map(|_| ChanMap::default()).collect(),
+            ready: (0..len).collect(),
+            in_queue: vec![true; len],
+            outbox: Vec::new(),
         }
     }
 
+    #[inline]
+    fn owns(&self, rank: usize) -> bool {
+        rank >= self.start && rank < self.start + self.states.len()
+    }
+
+    /// Deposit a message into local rank `dl`'s mailbox and wake it if
+    /// this clears its last deficit. The running rank is never `blocked`,
+    /// so self-sends skip the wake branch naturally.
+    fn deposit(&mut self, dl: usize, src: u32, tag: u32, msg: InMsg) {
+        self.mailboxes[dl].entry((src, tag)).or_default().push_back(msg);
+        let st = &mut self.states[dl];
+        if st.blocked {
+            if let Some(n) = st.missing.get_mut(&(src, tag)) {
+                if *n > 0 {
+                    *n -= 1;
+                    st.missing_total -= 1;
+                    if st.missing_total == 0 {
+                        st.blocked = false;
+                        if !self.in_queue[dl] {
+                            self.in_queue[dl] = true;
+                            self.ready.push_back(dl);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run this shard's event loop until every owned rank is parked or
+    /// done — one conservative window. Cross-shard sends accumulate in
+    /// `self.outbox` for the barrier to deliver.
+    fn run_window(&mut self, profile: &MachineProfile, topo: Topology, plan: &CommPlan) {
+        while let Some(li) = self.ready.pop_front() {
+            self.in_queue[li] = false;
+            let me = self.start + li;
+            let ops = &plan.ranks[me].ops;
+            loop {
+                if self.states[li].pc == ops.len() {
+                    self.states[li].done = true;
+                    break;
+                }
+                match ops[self.states[li].pc] {
+                    PlanOp::Send { dst, tag, bytes } => {
+                        let d = dst as usize;
+                        let link = topo.link(me, d);
+                        let st = &mut self.states[li];
+                        let timing = st.clock.post_send(profile, link, bytes, plan.p);
+                        st.pending_sends.push(timing.complete);
+                        let msg = InMsg {
+                            arrive: timing.arrive,
+                            bytes,
+                            link,
+                        };
+                        if self.owns(d) {
+                            self.deposit(d - self.start, me as u32, tag, msg);
+                        } else {
+                            self.outbox.push(BoundaryMsg {
+                                dst,
+                                src: me as u32,
+                                tag,
+                                msg,
+                            });
+                        }
+                    }
+                    PlanOp::Recv { src, tag } => {
+                        let link = topo.link(me, src as usize);
+                        let st = &mut self.states[li];
+                        st.clock.post_recv(profile, link);
+                        st.pending_recvs.push((src, tag));
+                    }
+                    PlanOp::Wait => {
+                        let (missing, missing_total) =
+                            channel_deficits(&self.states[li].pending_recvs, &self.mailboxes[li]);
+                        if missing_total > 0 {
+                            let st = &mut self.states[li];
+                            st.missing = missing;
+                            st.missing_total = missing_total;
+                            st.blocked = true;
+                            // pc stays on this Wait; resumed once the
+                            // deficits drain (locally or at a barrier).
+                            break;
+                        }
+                        perform_wait(&mut self.states[li], &mut self.mailboxes[li], profile);
+                    }
+                    PlanOp::Copy { bytes } => {
+                        self.states[li].clock.charge_copy(profile, bytes);
+                    }
+                    PlanOp::Compute { secs } => {
+                        self.states[li].clock.charge_compute(secs);
+                    }
+                    PlanOp::Mark => {
+                        let st = &mut self.states[li];
+                        st.mark = st.clock.now;
+                    }
+                    PlanOp::Lap { phase } => {
+                        let st = &mut self.states[li];
+                        let now = st.clock.now;
+                        st.phases.add(phase, now - st.mark);
+                        st.mark = now;
+                    }
+                }
+                self.states[li].pc += 1;
+            }
+        }
+    }
+}
+
+/// Default shard count for a `p`-rank replay when `replay-shards=auto`:
+/// 1 below the scale where window-barrier overhead pays for itself, then
+/// scaling with both the host's cores and the rank count. Any value is
+/// correct — shard count is purely a wallclock knob; results are
+/// bit-identical for every choice.
+pub fn auto_shards(p: usize) -> usize {
+    if p < 8192 {
+        return 1;
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.min(p / 2048).clamp(1, 16)
+}
+
+/// Execute `plan` on the single-threaded event loop (the `shards = 1`
+/// case of [`execute_sharded`]) and return per-rank results plus the
+/// simulated makespan — the same shape
+/// [`Engine::run`](super::Engine::run) produces, so
+/// `phase_critical_path` / `total_counters` aggregation is shared.
+pub fn execute(
+    profile: &MachineProfile,
+    topo: Topology,
+    plan: &CommPlan,
+) -> Result<EngineResult<()>, ReplayError> {
+    execute_sharded(profile, topo, plan, 1)
+}
+
+/// Execute `plan` across `shards` worker shards with conservative
+/// time-window synchronization (see the module header for the
+/// determinism argument). `shards` is clamped to `[1, P]`; with one
+/// shard no threads are spawned and this is exactly the classic
+/// single-threaded replay.
+pub fn execute_sharded(
+    profile: &MachineProfile,
+    topo: Topology,
+    plan: &CommPlan,
+    shards: usize,
+) -> Result<EngineResult<()>, ReplayError> {
+    let p = topo.p();
+    if plan.p != p || plan.q != topo.q() {
+        return Err(ReplayError::ShapeMismatch {
+            plan_p: plan.p,
+            plan_q: plan.q,
+            topo_p: p,
+            topo_q: topo.q(),
+        });
+    }
+
+    // Near-equal contiguous partition: the first `rem` shards own one
+    // extra rank. Contiguity keeps node-local traffic (ranks on a node
+    // are contiguous) mostly intra-shard.
+    let shards = shards.clamp(1, p);
+    let base = p / shards;
+    let rem = p % shards;
+    let shard_of = |rank: usize| -> usize {
+        let cut = rem * (base + 1);
+        if rank < cut {
+            rank / (base + 1)
+        } else {
+            rem + (rank - cut) / base
+        }
+    };
+    let mut parts: Vec<Shard> = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        parts.push(Shard::new(start, len));
+        start += len;
+    }
+
+    // Window loop: run every shard with runnable ranks to quiescence
+    // (in parallel), then deliver the boundary queues at the barrier.
+    // Each popped rank advances at least one op, so the loop terminates;
+    // it exits when a barrier wakes nobody.
+    loop {
+        let mut active: Vec<&mut Shard> =
+            parts.iter_mut().filter(|s| !s.ready.is_empty()).collect();
+        match active.len() {
+            0 => break,
+            1 => active[0].run_window(profile, topo, plan),
+            _ => {
+                std::thread::scope(|scope| {
+                    for shard in active {
+                        scope.spawn(move || shard.run_window(profile, topo, plan));
+                    }
+                });
+            }
+        }
+        // Barrier: drain every outbox in shard order. Per-channel FIFO is
+        // preserved because a channel's messages come from one sender,
+        // whose shard appended them in program order.
+        let batches: Vec<Vec<BoundaryMsg>> = parts
+            .iter_mut()
+            .map(|s| std::mem::take(&mut s.outbox))
+            .collect();
+        for bm in batches.into_iter().flatten() {
+            let t = shard_of(bm.dst as usize);
+            let dl = bm.dst as usize - parts[t].start;
+            parts[t].deposit(dl, bm.src, bm.tag, bm.msg);
+        }
+    }
+
+    let mut states: Vec<ReplayRank> = Vec::with_capacity(p);
+    let mut mailboxes: Vec<ChanMap> = Vec::with_capacity(p);
+    for shard in parts {
+        states.extend(shard.states);
+        mailboxes.extend(shard.mailboxes);
+    }
     for (rank, st) in states.iter().enumerate() {
-        assert!(
-            st.done,
-            "replay deadlock: rank {rank} parked at op {}/{} of {} ({} messages missing)",
-            st.pc,
-            plan.ranks[rank].ops.len(),
-            plan.algo,
-            st.missing_total
-        );
+        if !st.done {
+            return Err(ReplayError::PlanDeadlock {
+                rank,
+                pc: st.pc,
+                ops: plan.ranks[rank].ops.len(),
+                algo: plan.algo.clone(),
+                missing: st.missing_total,
+            });
+        }
     }
     for (rank, mb) in mailboxes.iter().enumerate() {
-        assert!(
-            mb.is_empty(),
-            "rank {rank} mailbox not drained — plan left unreceived messages"
-        );
+        if !mb.is_empty() {
+            return Err(ReplayError::UndrainedMailbox {
+                rank,
+                messages: mb.values().map(VecDeque::len).sum(),
+                channels: mb.len(),
+            });
+        }
     }
 
     let ranks: Vec<RankResult<()>> = states
@@ -211,7 +455,7 @@ pub fn execute(profile: &MachineProfile, topo: Topology, plan: &CommPlan) -> Eng
         })
         .collect();
     let makespan = ranks.iter().fold(0.0f64, |m, r| m.max(r.finish));
-    EngineResult { ranks, makespan }
+    Ok(EngineResult { ranks, makespan })
 }
 
 /// Per-channel message deficits of a pending receive set against a
@@ -310,7 +554,7 @@ mod tests {
         let profile = MachineProfile::test_flat();
         let topo = Topology::new(4, 2);
         let plan = ring_plan(4, 1024);
-        let replayed = execute(&profile, topo, &plan);
+        let replayed = execute(&profile, topo, &plan).unwrap();
 
         let engine = Engine::new(profile, topo);
         let threaded = engine.run(|ctx| {
@@ -332,6 +576,27 @@ mod tests {
             assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "rank {}", a.rank);
             assert_eq!(a.phases, b.phases, "rank {}", a.rank);
             assert_eq!(a.counters, b.counters, "rank {}", a.rank);
+        }
+    }
+
+    #[test]
+    fn sharded_ring_is_bit_identical_for_every_shard_count() {
+        let profile = MachineProfile::test_flat();
+        let topo = Topology::new(8, 2);
+        let plan = ring_plan(8, 512);
+        let single = execute(&profile, topo, &plan).unwrap();
+        for shards in [2usize, 3, 4, 8, 64] {
+            let sharded = execute_sharded(&profile, topo, &plan, shards).unwrap();
+            assert_eq!(
+                single.makespan.to_bits(),
+                sharded.makespan.to_bits(),
+                "{shards} shards"
+            );
+            for (a, b) in single.ranks.iter().zip(sharded.ranks.iter()) {
+                assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "rank {}", a.rank);
+                assert_eq!(a.phases, b.phases, "rank {}", a.rank);
+                assert_eq!(a.counters, b.counters, "rank {}", a.rank);
+            }
         }
     }
 
@@ -361,14 +626,17 @@ mod tests {
             t_peak: 0,
             rounds: 0,
         };
-        let res = execute(&profile, topo, &plan);
+        let res = execute(&profile, topo, &plan).unwrap();
         assert!(res.makespan > 0.0);
         assert_eq!(res.ranks.len(), 2);
+        // The cross-shard dependency chain (0 -> barrier -> 1 -> barrier
+        // -> 0) resolves identically with every rank on its own shard.
+        let sharded = execute_sharded(&profile, topo, &plan, 2).unwrap();
+        assert_eq!(res.makespan.to_bits(), sharded.makespan.to_bits());
     }
 
     #[test]
-    #[should_panic(expected = "replay deadlock")]
-    fn missing_sender_deadlocks_loudly() {
+    fn missing_sender_surfaces_typed_deadlock_error() {
         let mut b0 = PlanBuilder::new(0, 2);
         b0.recv(1, 1);
         b0.wait();
@@ -381,12 +649,30 @@ mod tests {
             t_peak: 0,
             rounds: 0,
         };
-        execute(&MachineProfile::test_flat(), Topology::flat(2), &plan);
+        let err = execute(&MachineProfile::test_flat(), Topology::flat(2), &plan).unwrap_err();
+        assert_eq!(
+            err,
+            ReplayError::PlanDeadlock {
+                rank: 0,
+                pc: 1,
+                ops: 2,
+                algo: "x".into(),
+                missing: 1,
+            }
+        );
+        assert!(err.to_string().contains("replay deadlock"), "{err}");
+        // The sharded scheduler detects the same deadlock, identically.
+        let sharded =
+            execute_sharded(&MachineProfile::test_flat(), Topology::flat(2), &plan, 2).unwrap_err();
+        assert_eq!(err, sharded);
+        // And it converts to a validation-class TunaError for the public
+        // API (`run_alltoallv_replay` surfaces it via `?`).
+        let typed: crate::TunaError = err.into();
+        assert!(typed.to_string().contains("validation"), "{typed}");
     }
 
     #[test]
-    #[should_panic(expected = "not drained")]
-    fn unreceived_message_detected() {
+    fn unreceived_message_surfaces_typed_undrained_error() {
         let mut b0 = PlanBuilder::new(0, 2);
         b0.send(1, 9, 8);
         b0.wait();
@@ -399,13 +685,43 @@ mod tests {
             t_peak: 0,
             rounds: 0,
         };
-        execute(&MachineProfile::test_flat(), Topology::flat(2), &plan);
+        let err = execute(&MachineProfile::test_flat(), Topology::flat(2), &plan).unwrap_err();
+        assert_eq!(
+            err,
+            ReplayError::UndrainedMailbox {
+                rank: 1,
+                messages: 1,
+                channels: 1,
+            }
+        );
+        assert!(err.to_string().contains("not drained"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_surfaces_typed_config_error() {
+        let plan = ring_plan(4, 64); // compiled for P=4, Q=2
+        let profile = MachineProfile::test_flat();
+        let err = execute(&profile, Topology::new(8, 2), &plan).unwrap_err();
+        assert_eq!(
+            err,
+            ReplayError::ShapeMismatch {
+                plan_p: 4,
+                plan_q: 2,
+                topo_p: 8,
+                topo_q: 2,
+            }
+        );
+        let err = execute(&profile, Topology::flat(4), &plan).unwrap_err();
+        assert!(matches!(err, ReplayError::ShapeMismatch { plan_q: 2, topo_q: 1, .. }));
+        let typed: crate::TunaError = err.into();
+        assert!(typed.to_string().contains("configuration"), "{typed}");
     }
 
     #[test]
     fn fifo_per_channel_preserved_under_duplicate_requests() {
         // Two messages on one (src, tag) channel received by duplicate
-        // requests in one wait — must match FIFO like the engine.
+        // requests in one wait — must match FIFO like the engine, on the
+        // single-threaded path and through a shard boundary queue.
         let profile = MachineProfile::test_flat();
         let mut b0 = PlanBuilder::new(0, 2);
         b0.recv(1, 3);
@@ -423,9 +739,21 @@ mod tests {
             t_peak: 0,
             rounds: 0,
         };
-        let res = execute(&profile, Topology::flat(2), &plan);
+        let res = execute(&profile, Topology::flat(2), &plan).unwrap();
         // 64 + 128 wire bytes on the global link, both counted at rank 1.
         assert_eq!(res.total_counters().bytes_global, 192);
         assert_eq!(res.total_counters().msgs_global, 2);
+        let sharded = execute_sharded(&profile, Topology::flat(2), &plan, 2).unwrap();
+        assert_eq!(res.makespan.to_bits(), sharded.makespan.to_bits());
+        assert_eq!(res.total_counters(), sharded.total_counters());
+    }
+
+    #[test]
+    fn auto_shards_scales_with_p() {
+        assert_eq!(auto_shards(2), 1);
+        assert_eq!(auto_shards(4096), 1);
+        assert!(auto_shards(8192) >= 1);
+        assert!(auto_shards(1 << 18) >= auto_shards(8192));
+        assert!(auto_shards(1 << 18) <= 16);
     }
 }

@@ -34,12 +34,17 @@ pub struct RunConfig {
     pub engine_limit_replay: usize,
     /// Rank budget for plan/replay execution of structurally *sparse*
     /// workloads (`dist=sparse:nnz=K`), every family included: sparse
-    /// plans hold O(nnz) ops, so exact bit-identical replay extends to
-    /// P ≥ 32k.
+    /// plans hold O(nnz) ops and the replay loop shards across workers,
+    /// so exact bit-identical replay extends to P ≥ 64k by default.
     pub engine_limit_replay_sparse: usize,
     /// Execution mode for exact-fidelity points: threaded oracle,
     /// plan/replay, or auto (replay phantom, thread real).
     pub mode: ExecMode,
+    /// Worker-shard count for the replay executor (`replay-shards=N`);
+    /// `None` (`replay-shards=auto`, the default) sizes from P and the
+    /// host. Purely a wallclock knob — results are bit-identical for
+    /// every value.
+    pub replay_shards: Option<usize>,
     /// Persisted tuning table attached to every engine this config
     /// creates, consulted by `tuna:auto` (loaded by the CLI from
     /// `artifacts/tuning/`; not a `key=value` field).
@@ -59,8 +64,9 @@ impl Default for RunConfig {
             engine_limit_linear: 512,
             engine_limit_log: 2048,
             engine_limit_replay: 8192,
-            engine_limit_replay_sparse: 32768,
+            engine_limit_replay_sparse: 65536,
             mode: ExecMode::Auto,
+            replay_shards: None,
             tuning: None,
         }
     }
@@ -69,9 +75,9 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Parse `key=value` arguments: `p=128 q=16 profile=polaris
     /// dist=uniform:1024 seed=7 iters=20 real=true limit-linear=256
-    /// limit-log=1024 limit-replay=8192 limit-replay-sparse=32768
-    /// mode=replay`. Unknown keys are errors (typos should not pass
-    /// silently).
+    /// limit-log=1024 limit-replay=8192 limit-replay-sparse=65536
+    /// mode=replay replay-shards=4`. Unknown keys are errors (typos
+    /// should not pass silently).
     pub fn parse_args(args: &[String]) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         for arg in args {
@@ -92,6 +98,19 @@ impl RunConfig {
                 "limit-log" => cfg.engine_limit_log = parse_num(k, v)?,
                 "limit-replay" => cfg.engine_limit_replay = parse_num(k, v)?,
                 "limit-replay-sparse" => cfg.engine_limit_replay_sparse = parse_num(k, v)?,
+                "replay-shards" => {
+                    cfg.replay_shards = if v == "auto" {
+                        None
+                    } else {
+                        let n = parse_num(k, v)?;
+                        if n == 0 {
+                            return Err(TunaError::config(
+                                "replay-shards must be >= 1 (or `auto`)",
+                            ));
+                        }
+                        Some(n)
+                    }
+                }
                 "mode" => {
                     cfg.mode = ExecMode::parse(v).ok_or_else(|| {
                         TunaError::config(format!(
@@ -243,15 +262,26 @@ mod tests {
         assert_eq!(cfg.engine_limit_replay, 16384);
         assert_eq!(cfg.engine_limit_replay_sparse, 65536);
         // Mode-aware defaults: dense log plans stream (8192), sparse
-        // plans scale with nnz (32768).
+        // plans scale with nnz and shard across workers (65536).
         assert_eq!(RunConfig::default().engine_limit_replay, 8192);
-        assert_eq!(RunConfig::default().engine_limit_replay_sparse, 32768);
+        assert_eq!(RunConfig::default().engine_limit_replay_sparse, 65536);
         assert_eq!(RunConfig::default().mode, ExecMode::Auto);
         assert!(RunConfig::parse_args(&args("mode=turbo")).is_err());
         // Replay never materializes payload bytes: the combination with
         // real payloads is a contradiction, not a silent downgrade.
         assert!(RunConfig::parse_args(&args("mode=replay real=true")).is_err());
         assert!(RunConfig::parse_args(&args("mode=auto real=true")).is_ok());
+    }
+
+    #[test]
+    fn parse_replay_shards() {
+        assert_eq!(RunConfig::default().replay_shards, None, "default is auto");
+        let cfg = RunConfig::parse_args(&args("p=64 q=8 replay-shards=4")).unwrap();
+        assert_eq!(cfg.replay_shards, Some(4));
+        let cfg = RunConfig::parse_args(&args("p=64 q=8 replay-shards=auto")).unwrap();
+        assert_eq!(cfg.replay_shards, None);
+        assert!(RunConfig::parse_args(&args("replay-shards=0")).is_err());
+        assert!(RunConfig::parse_args(&args("replay-shards=lots")).is_err());
     }
 
     #[test]

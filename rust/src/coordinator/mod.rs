@@ -144,7 +144,9 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
     let topo = Topology::try_new(cfg.p, cfg.q)?;
     match choose_fidelity(kind, cfg.p, cfg) {
         fidelity @ (Fidelity::Engine | Fidelity::Replay) => {
-            let engine = Engine::new(cfg.profile.clone(), topo).with_tuning(cfg.tuning.clone());
+            let engine = Engine::new(cfg.profile.clone(), topo)
+                .with_tuning(cfg.tuning.clone())
+                .with_replay_shards(cfg.replay_shards);
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
             for it in 0..cfg.iters.max(1) {
@@ -272,7 +274,7 @@ mod tests {
     fn replay_budget_extends_exact_fidelity() {
         // Phantom + auto: log-family points replay far past the thread
         // budget; linear families are capped at REPLAY_LIMIT_LINEAR.
-        let c = RunConfig::default(); // limits 512 / 2048 / 8192 / 32768, auto
+        let c = RunConfig::default(); // limits 512 / 2048 / 8192 / 65536, auto
         assert_eq!(
             choose_fidelity(&AlgoKind::Tuna { radix: 2 }, 8192, &c),
             Fidelity::Replay
@@ -330,6 +332,11 @@ mod tests {
         );
         assert_eq!(
             choose_fidelity(&AlgoKind::Tuna { radix: 4 }, 65536, &c),
+            Fidelity::Replay,
+            "sharded replay raised the default sparse budget to 65536"
+        );
+        assert_eq!(
+            choose_fidelity(&AlgoKind::Tuna { radix: 4 }, 131072, &c),
             Fidelity::Analytic
         );
         // Dense workloads keep the dense caps.

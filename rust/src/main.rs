@@ -86,14 +86,16 @@ USAGE:
 CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   (uniform:S|normal|powerlaw|const:S|fft-n1|fft-n2|sparse:nnz=K[,max=S]),
   seed, iters, real (true|false), limit-linear, limit-log, limit-replay,
-  limit-replay-sparse,
+  limit-replay-sparse, replay-shards (N|auto: worker shards for the
+  replay executor — bit-identical for every value, auto sizes from P
+  and the host),
   mode (auto|threaded|replay: auto replays phantom workloads on the
-  single-threaded plan executor — bit-identical to the threaded engine,
-  and the way to run P=4096+ points, e.g. `tuna run algo=tuna:r=2
-  p=4096 q=32 mode=replay`; structurally sparse workloads compile
-  O(nnz)-op plans, so exact replay reaches P=32768, e.g. `tuna run
-  dist=sparse:nnz=16 algo=hier:l=tuna:r=4,g=coalesced:b=2 p=32768 q=64
-  mode=replay`)
+  plan executor — bit-identical to the threaded engine, and the way to
+  run P=4096+ points, e.g. `tuna run algo=tuna:r=2 p=4096 q=32
+  mode=replay`; structurally sparse workloads compile O(nnz)-op plans
+  and shard the replay loop, so exact replay reaches P=65536+, e.g.
+  `tuna run dist=sparse:nnz=16 algo=hier:l=tuna:r=4,g=coalesced:b=2
+  p=65536 q=64 mode=replay replay-shards=4`)
 SELECT KEYS: shortlist (engine-refined candidates, default 6),
   refine (true|false), skewed (true|false: also stress the shortlist
   under a heavy-tailed companion workload), top (rows printed),

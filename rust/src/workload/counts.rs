@@ -455,6 +455,73 @@ impl Counts {
             .clone()
     }
 
+    /// Source ranks whose send rows differ from `base`'s, in ascending
+    /// order — the input to incremental plan patching
+    /// (`algos::patch_plan`): when only a few rows of an iterating
+    /// workload change, only those ranks' op sequences need recompiling.
+    ///
+    /// Returns `None` when the diff is unusable for patching: the shapes
+    /// or structural-sparsity classes differ (a dense row and a sparse
+    /// row schedule different ops even with equal nonzeros), or more
+    /// than `limit` rows changed (at which point a full recompile is
+    /// cheaper than diffing). Equal generator descriptors short-circuit
+    /// to `Some(vec![])` in O(1) — rows are a pure function of
+    /// `(p, dist, seed)`.
+    pub fn row_diff(&self, base: &Counts, limit: usize) -> Option<Vec<usize>> {
+        if self.p != base.p || self.is_sparse() != base.is_sparse() {
+            return None;
+        }
+        if let (Repr::Gen { dist: da, seed: sa }, Repr::Gen { dist: db, seed: sb }) =
+            (&self.repr, &base.repr)
+        {
+            if da == db && sa == sb {
+                return Some(Vec::new());
+            }
+        }
+        let mut changed = Vec::new();
+        for src in 0..self.p {
+            if self.row_view(src) != base.row_view(src) {
+                changed.push(src);
+                if changed.len() > limit {
+                    return None;
+                }
+            }
+        }
+        Some(changed)
+    }
+
+    /// A new sparse workload equal to this one except that row `src` is
+    /// replaced by `entries` (same cleaning rules as
+    /// [`Counts::from_sparse_rows`]: sorted, zero sizes dropped,
+    /// duplicates rejected). Materializes generator-backed rows into CSR
+    /// — the iterating-workload path that feeds [`Counts::row_diff`].
+    pub fn replace_sparse_row(&self, src: usize, entries: Vec<(usize, u64)>) -> Counts {
+        assert!(
+            self.is_sparse(),
+            "replace_sparse_row needs a structurally sparse workload"
+        );
+        assert!(src < self.p);
+        let mut rows: Vec<Vec<(usize, u64)>> = (0..self.p)
+            .map(|r| self.row_view(r).entries().collect())
+            .collect();
+        rows[src] = entries;
+        Counts::from_sparse_rows(self.p, rows)
+    }
+
+    /// A new dense workload equal to this one except that row `src` is
+    /// replaced by `row` (which must have length P).
+    pub fn replace_dense_row(&self, src: usize, row: Vec<u64>) -> Counts {
+        assert!(
+            !self.is_sparse(),
+            "replace_dense_row needs a dense workload"
+        );
+        assert!(src < self.p);
+        assert_eq!(row.len(), self.p, "replacement row must have length P");
+        let mut rows: Vec<Vec<u64>> = (0..self.p).map(|r| self.row(r)).collect();
+        rows[src] = row;
+        Counts::from_dense(rows)
+    }
+
     /// Content identity for plan caching, hashed *incrementally through
     /// the row views* — no dense materialization for sparse or CSR
     /// workloads. Generator-backed workloads hash their `(p, dist,
@@ -670,6 +737,51 @@ mod tests {
         let expect = super::super::fingerprint_one(0, 8)
             .wrapping_add(super::super::fingerprint_one(1, 24));
         assert_eq!(fp[2], expect);
+    }
+
+    #[test]
+    fn row_diff_reports_changed_rows_and_bails_over_limit() {
+        // Identical generator descriptors: O(1) empty diff.
+        let a = Counts::generate(32, Dist::Sparse { nnz: 4, max: 64 }, 5);
+        let b = Counts::generate(32, Dist::Sparse { nnz: 4, max: 64 }, 5);
+        assert_eq!(a.row_diff(&b, 8), Some(vec![]));
+        // One replaced row: exactly that row reported.
+        let patched = a.replace_sparse_row(7, vec![(0, 8), (31, 16)]);
+        assert_eq!(patched.row_diff(&a, 8), Some(vec![7]));
+        assert_eq!(a.row_diff(&patched, 8), Some(vec![7]), "diff is symmetric");
+        // Over the limit: unusable.
+        let other_seed = Counts::generate(32, Dist::Sparse { nnz: 4, max: 64 }, 6);
+        assert_eq!(other_seed.row_diff(&a, 2), None);
+        // Shape or sparsity-class mismatch: unusable.
+        let smaller = Counts::generate(16, Dist::Sparse { nnz: 4, max: 64 }, 5);
+        assert_eq!(smaller.row_diff(&a, 8), None);
+        let dense = Counts::generate(32, Dist::Uniform { max: 64 }, 5);
+        assert_eq!(dense.row_diff(&a, 8), None);
+        // Dense diffs work the same way.
+        let d = Counts::from_dense(vec![vec![1, 2], vec![3, 4]]);
+        let d2 = d.replace_dense_row(1, vec![9, 9]);
+        assert_eq!(d2.row_diff(&d, 8), Some(vec![1]));
+        assert_eq!(d.row_diff(&d, 8), Some(vec![]));
+    }
+
+    #[test]
+    fn replace_rows_keep_other_rows_and_clean_entries() {
+        let w = Counts::from_sparse_rows(3, vec![vec![(1, 8)], vec![(2, 16)], vec![]]);
+        let r = w.replace_sparse_row(1, vec![(0, 24), (2, 0)]);
+        assert_eq!(r.row_view(0), w.row_view(0));
+        assert_eq!(r.row_view(2), w.row_view(2));
+        assert_eq!(
+            r.row_view(1).entries().collect::<Vec<_>>(),
+            vec![(0, 24)],
+            "explicit zero dropped"
+        );
+        // The replacement is a distinct workload with its own identity.
+        assert_ne!(r.identity_hash(), w.identity_hash());
+
+        let d = Counts::from_dense(vec![vec![0, 8], vec![16, 0]]);
+        let d2 = d.replace_dense_row(0, vec![4, 4]);
+        assert_eq!(d2.row(0), vec![4, 4]);
+        assert_eq!(d2.row(1), d.row(1));
     }
 
     #[test]

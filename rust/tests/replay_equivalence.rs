@@ -12,9 +12,11 @@
 use std::sync::Arc;
 
 use tuna::algos::{
-    hier, run_alltoallv, run_alltoallv_replay, tuning, AlgoKind, ExecMode, GlobalAlgo, LocalAlgo,
+    compile_plan, hier, patch_plan, plan_for, run_alltoallv, run_alltoallv_replay, tuning,
+    AlgoKind, ExecMode, GlobalAlgo, LocalAlgo,
 };
-use tuna::comm::{Engine, Topology};
+use tuna::comm::replay::{self, ReplayError};
+use tuna::comm::{CommPlan, Engine, EngineResult, PlanBuilder, Topology};
 use tuna::coordinator::{measure, RunConfig};
 use tuna::model::MachineProfile;
 use tuna::util::prop::forall;
@@ -414,6 +416,285 @@ fn cached_replays_are_stable() {
     }
     let (hits, misses) = e.plan_cache.stats();
     assert_eq!((hits, misses), (3, 1));
+}
+
+fn assert_results_identical(a: &EngineResult<()>, b: &EngineResult<()>, ctx: &str) {
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{ctx}: makespan {} vs {}",
+        a.makespan,
+        b.makespan
+    );
+    assert_eq!(a.ranks.len(), b.ranks.len(), "{ctx}: rank count");
+    for (x, y) in a.ranks.iter().zip(b.ranks.iter()) {
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits(), "{ctx}: rank {} finish", x.rank);
+        assert_eq!(x.phases, y.phases, "{ctx}: rank {} phases", x.rank);
+        assert_eq!(x.counters, y.counters, "{ctx}: rank {} counters", x.rank);
+    }
+}
+
+/// The tentpole contract: sharded replay is bit-identical to the
+/// single-threaded executor for every shard count, across all algorithm
+/// families (legacy-alias hier specs included), dense and sparse.
+#[test]
+fn shard_count_independence_across_all_families() {
+    let dense_kinds = |p: usize, q: usize| {
+        let mut kinds = vec![
+            AlgoKind::SpreadOut,
+            AlgoKind::OmpiLinear,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 3 },
+            AlgoKind::Vendor,
+            AlgoKind::Bruck2,
+            AlgoKind::Tuna { radix: 2 },
+            AlgoKind::Tuna { radix: p },
+            AlgoKind::TunaAuto,
+        ];
+        if q >= 2 && p / q >= 2 {
+            kinds.push(AlgoKind::hier_coalesced(2, 2));
+            kinds.push(AlgoKind::hier_staggered(2, 3));
+            kinds.push(AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear });
+            kinds.push(AlgoKind::parse("tuna-hier-coalesced:r=2,b=2").unwrap());
+            kinds.push(AlgoKind::parse("tuna-hier-staggered:r=3,b=4").unwrap());
+        }
+        kinds
+    };
+    let cases = [
+        (12usize, 4usize, Dist::Uniform { max: 512 }),
+        (16, 4, Dist::powerlaw_default()),
+        (64, 8, Dist::Sparse { nnz: 6, max: 512 }),
+        (24, 4, Dist::Sparse { nnz: 3, max: 256 }),
+    ];
+    for (p, q, dist) in cases {
+        let e = engine(MachineProfile::fugaku(), p, q);
+        let sizes = BlockSizes::generate(p, dist, p as u64);
+        for kind in dense_kinds(p, q) {
+            let plan = plan_for(&e, &kind, &sizes).unwrap();
+            let single = replay::execute_sharded(&e.profile, e.topo, &plan, 1).unwrap();
+            for shards in [2usize, 4, 8] {
+                let sharded = replay::execute_sharded(&e.profile, e.topo, &plan, shards).unwrap();
+                assert_results_identical(
+                    &single,
+                    &sharded,
+                    &format!("{} P={p} Q={q} shards={shards}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_random_shard_counts_bit_identical() {
+    forall("sharded replay == single-threaded replay", 20, |rng| {
+        let q = 1 + rng.next_below(6) as usize;
+        let n = 1 + rng.next_below(5) as usize;
+        let p = (q * n).max(2);
+        let q = if p % q == 0 { q } else { 1 };
+        let sparse = rng.next_below(2) == 0;
+        let dist = if sparse {
+            Dist::Sparse { nnz: rng.next_below(p as u64 + 1) as usize, max: 256 }
+        } else {
+            Dist::Uniform { max: 256 }
+        };
+        let sizes = BlockSizes::generate(p, dist, rng.next_u64());
+        let e = engine(MachineProfile::polaris(), p, q);
+        let kind = match rng.next_below(5) {
+            0 => AlgoKind::SpreadOut,
+            1 => AlgoKind::Pairwise,
+            2 => AlgoKind::TunaAuto,
+            3 if q >= 2 && p / q >= 2 => hier::random_composition(rng, q, p / q),
+            _ => AlgoKind::Tuna { radix: (2 + rng.next_below(p as u64) as usize).min(p) },
+        };
+        let plan = plan_for(&e, &kind, &sizes).map_err(|e| e.to_string())?;
+        let single =
+            replay::execute_sharded(&e.profile, e.topo, &plan, 1).map_err(|e| e.to_string())?;
+        let shards = 1 + rng.next_below(10) as usize;
+        let sharded = replay::execute_sharded(&e.profile, e.topo, &plan, shards)
+            .map_err(|e| e.to_string())?;
+        if single.makespan.to_bits() != sharded.makespan.to_bits() {
+            return Err(format!(
+                "{} P={p} shards={shards}: makespan {} != {}",
+                kind.name(),
+                single.makespan,
+                sharded.makespan
+            ));
+        }
+        for (x, y) in single.ranks.iter().zip(sharded.ranks.iter()) {
+            if x.finish.to_bits() != y.finish.to_bits()
+                || x.phases != y.phases
+                || x.counters != y.counters
+            {
+                return Err(format!(
+                    "{} P={p} shards={shards}: rank {} diverged",
+                    kind.name(),
+                    x.rank
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replay_shards_knob_preserves_identity_end_to_end() {
+    // The engine-level knob: a pinned shard count flows through
+    // `run_alltoallv_replay` and stays bit-identical to the threaded
+    // engine and to the serial replay.
+    let (p, q) = (64usize, 8usize);
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz: 8, max: 512 }, 13);
+    let kind = AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap();
+    let sharded_engine =
+        Engine::new(MachineProfile::fugaku(), Topology::new(p, q)).with_replay_shards(Some(4));
+    assert_identical(&sharded_engine, &kind, &sizes);
+    let serial_engine =
+        Engine::new(MachineProfile::fugaku(), Topology::new(p, q)).with_replay_shards(Some(1));
+    let a = run_alltoallv_replay(&serial_engine, &kind, &sizes).unwrap();
+    let b = run_alltoallv_replay(&sharded_engine, &kind, &sizes).unwrap();
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.phases, b.phases);
+    assert_eq!(a.counters, b.counters);
+}
+
+fn two_rank_plan(r0: PlanBuilder, r1: PlanBuilder) -> CommPlan {
+    CommPlan {
+        p: 2,
+        q: 1,
+        algo: "hand-built".into(),
+        ranks: vec![r0.finish(), r1.finish()],
+        t_peak: 0,
+        rounds: 0,
+    }
+}
+
+/// The hardening satellites: broken plans surface typed errors, never
+/// panics, identically on the serial and sharded paths.
+#[test]
+fn broken_plans_surface_typed_errors_not_panics() {
+    let profile = MachineProfile::test_flat();
+    let topo = Topology::flat(2);
+
+    // A Wait whose message is never sent: typed deadlock with the
+    // parked rank's program position.
+    let mut b0 = PlanBuilder::new(0, 2);
+    b0.recv(1, 1);
+    b0.wait();
+    let deadlocked = two_rank_plan(b0, PlanBuilder::new(1, 2));
+    for shards in [1usize, 2] {
+        let err = replay::execute_sharded(&profile, topo, &deadlocked, shards).unwrap_err();
+        assert_eq!(
+            err,
+            ReplayError::PlanDeadlock {
+                rank: 0,
+                pc: 1,
+                ops: 2,
+                algo: "hand-built".into(),
+                missing: 1,
+            },
+            "shards={shards}"
+        );
+        assert!(err.to_string().contains("replay deadlock"));
+    }
+
+    // A send nobody receives: typed undrained-mailbox report.
+    let mut b0 = PlanBuilder::new(0, 2);
+    b0.send(1, 9, 8);
+    b0.wait();
+    let undrained = two_rank_plan(b0, PlanBuilder::new(1, 2));
+    for shards in [1usize, 2] {
+        let err = replay::execute_sharded(&profile, topo, &undrained, shards).unwrap_err();
+        assert_eq!(
+            err,
+            ReplayError::UndrainedMailbox { rank: 1, messages: 1, channels: 1 },
+            "shards={shards}"
+        );
+        assert!(err.to_string().contains("not drained"));
+    }
+
+    // A plan executed against the wrong topology: typed shape mismatch
+    // (the PR 4 `Topology::try_new` precedent, now on the replay path).
+    let shaped = two_rank_plan(PlanBuilder::new(0, 2), PlanBuilder::new(1, 2));
+    let err = replay::execute(&profile, Topology::flat(4), &shaped).unwrap_err();
+    assert_eq!(
+        err,
+        ReplayError::ShapeMismatch { plan_p: 2, plan_q: 1, topo_p: 4, topo_q: 1 }
+    );
+    // And it converts into the crate error type callers surface.
+    let typed: tuna::TunaError = err.into();
+    assert!(typed.to_string().contains("configuration"), "{typed}");
+}
+
+/// The incremental-patching half of the tentpole: a patched plan is
+/// op-for-op identical to a fresh compile, lands in the cache under the
+/// new workload's key, and replays bit-identically.
+#[test]
+fn patched_plans_equal_fresh_compilation_op_for_op() {
+    let (p, q) = (12usize, 4usize);
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let gen = BlockSizes::generate(p, Dist::Uniform { max: 256 }, 7);
+    let base = BlockSizes::from_dense((0..p).map(|r| gen.row(r)).collect());
+    let kinds = [
+        AlgoKind::SpreadOut,
+        AlgoKind::OmpiLinear,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 3 },
+        AlgoKind::Vendor,
+    ];
+    for kind in kinds {
+        let base_plan = plan_for(&e, &kind, &base).unwrap();
+        let new = base
+            .replace_dense_row(2, vec![64; p])
+            .replace_dense_row(5, (0..p as u64).map(|d| d * 8).collect());
+        let patched = patch_plan(&e, &kind, &base, &base_plan, &new)
+            .expect("linear dense plans must be patchable");
+        let fresh = compile_plan(&e, &kind, &new).unwrap();
+        assert_eq!(*patched, fresh, "{}: patched != fresh compile", kind.name());
+        // The patched plan is cached under the new workload's key.
+        let cached = plan_for(&e, &kind, &new).unwrap();
+        assert!(Arc::ptr_eq(&patched, &cached), "{}: cache miss after patch", kind.name());
+        // And the replayed report still matches the threaded engine.
+        assert_identical(&e, &kind, &new);
+    }
+}
+
+#[test]
+fn sparse_patching_requires_stable_structure() {
+    let (p, q) = (24usize, 4usize);
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let base = BlockSizes::generate(p, Dist::Sparse { nnz: 4, max: 256 }, 3);
+    let kind = AlgoKind::Scattered { block_count: 2 };
+    let base_plan = plan_for(&e, &kind, &base).unwrap();
+
+    // Size-only change on one row (same destination set): patchable and
+    // equal to a fresh compile, op for op.
+    let row7: Vec<(usize, u64)> = base.row_view(7).entries().map(|(d, s)| (d, s * 2)).collect();
+    let resized = base.replace_sparse_row(7, row7);
+    let patched = patch_plan(&e, &kind, &base, &base_plan, &resized)
+        .expect("size-only sparse change must patch");
+    let fresh = compile_plan(&e, &kind, &resized).unwrap();
+    assert_eq!(*patched, fresh);
+    assert_identical(&e, &kind, &resized);
+
+    // Structural change (a destination added): receivers' schedules
+    // would shift, so patching must refuse.
+    let mut grown: Vec<(usize, u64)> = base.row_view(7).entries().collect();
+    let absent = (0..p).find(|&d| !base.row_view(7).contains(d)).unwrap();
+    grown.push((absent, 8));
+    let restructured = base.replace_sparse_row(7, grown);
+    assert_eq!(patch_plan(&e, &kind, &base, &base_plan, &restructured), None);
+
+    // Globally coupled families are never patchable.
+    let tuna_plan = plan_for(&e, &AlgoKind::Tuna { radix: 4 }, &base).unwrap();
+    assert_eq!(
+        patch_plan(&e, &AlgoKind::Tuna { radix: 4 }, &base, &tuna_plan, &resized),
+        None
+    );
+
+    // Identical generator descriptors: the O(1) empty diff returns the
+    // base plan itself.
+    let same = BlockSizes::generate(p, Dist::Sparse { nnz: 4, max: 256 }, 3);
+    let unchanged = patch_plan(&e, &kind, &base, &base_plan, &same).unwrap();
+    assert!(Arc::ptr_eq(&unchanged, &base_plan));
 }
 
 #[test]
