@@ -19,6 +19,11 @@
 //! * a serial-vs-sharded *parallel replay* row over one cached plan
 //!   (P = 262144 full / 32768 quick), recording the shard speedup with
 //!   makespan bit-identity asserted in passing;
+//! * a *persistent handle* row (the PR 7 acceptance point): 16 one-shot
+//!   calls — fresh engine per call, so each pays plan compilation —
+//!   against one `PersistentColl` started 16 times at P = 4096, with
+//!   every makespan asserted bit-identical and the same-engine one-shot
+//!   plan-cache contract (`hits == calls - 1`) asserted in passing;
 //! * engine spawn overhead vs P.
 //!
 //! Besides the human-readable table, every run writes a machine-readable
@@ -38,7 +43,7 @@
 use std::time::Instant;
 
 use tuna::algos::{run_alltoallv_mode, AlgoKind, ExecMode};
-use tuna::comm::{DataBuf, Engine, Payload, Topology};
+use tuna::comm::{DataBuf, Engine, Payload, PersistentColl, Topology};
 use tuna::model::MachineProfile;
 use tuna::workload::{BlockSizes, Dist};
 
@@ -182,6 +187,80 @@ fn bench_parallel_replay(p: usize, q: usize, nnz: usize, shards: usize) -> Paral
         "sharded replay diverged from serial at P={p}, shards={shards}"
     );
     ParallelRow { p, shards, serial_s, sharded_s }
+}
+
+struct PersistentRow {
+    p: usize,
+    calls: usize,
+    algo: String,
+    oneshot_s: f64,
+    persistent_s: f64,
+}
+
+/// The PR 7 acceptance row: `calls` one-shot invocations with a fresh
+/// engine per call — the `MPI_Alltoallv` usage pattern, where every
+/// call pays plan compilation — against one persistent handle
+/// (`alltoallv_init` pattern) started `calls` times over the frozen
+/// plan. Every makespan (across one-shot calls, across starts, and
+/// between the two sides) is asserted bit-identical, so the recorded
+/// speedup is pure setup amortization, not a different schedule. The
+/// same-engine plan-cache contract (`hits == calls - 1`, one miss) is
+/// asserted in passing on a third, untimed loop.
+fn bench_persistent(p: usize, q: usize, s: u64, calls: usize) -> PersistentRow {
+    assert!(calls >= 2);
+    let kind = AlgoKind::Tuna { radix: 2 };
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: s }, 7);
+
+    // One-shot side: fresh engine per call, each compiles from scratch.
+    let t0 = Instant::now();
+    let mut makespan_bits = 0u64;
+    for i in 0..calls {
+        let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+        let rep = run_alltoallv_mode(&engine, &kind, &sizes, false, ExecMode::Replay).unwrap();
+        if i == 0 {
+            makespan_bits = rep.makespan.to_bits();
+        } else {
+            assert_eq!(rep.makespan.to_bits(), makespan_bits, "one-shot calls diverged at P={p}");
+        }
+    }
+    let oneshot_s = t0.elapsed().as_secs_f64();
+
+    // Persistent side: init once (compile + freeze), start `calls`
+    // times. Init is outside the timed window by design — that is the
+    // cost the handle exists to amortize.
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let handle = PersistentColl::init(&engine, kind, &sizes, false, ExecMode::Replay).unwrap();
+    let t1 = Instant::now();
+    for _ in 0..calls {
+        let rep = handle.start_frozen().unwrap();
+        assert_eq!(
+            rep.makespan.to_bits(),
+            makespan_bits,
+            "persistent start diverged from one-shot at P={p}"
+        );
+    }
+    let persistent_s = t1.elapsed().as_secs_f64();
+
+    // Same-engine one-shot loop: the plan cache must miss exactly once
+    // (first call compiles) and hit on every later call — the hoisting
+    // contract the coordinator's measure loop relies on.
+    let cached = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    for _ in 0..calls {
+        let _ = run_alltoallv_mode(&cached, &kind, &sizes, false, ExecMode::Replay).unwrap();
+    }
+    assert_eq!(
+        cached.plan_cache.stats(),
+        (calls as u64 - 1, 1),
+        "plan cache ineffective across same-engine one-shot calls at P={p}"
+    );
+
+    PersistentRow {
+        p,
+        calls,
+        algo: kind.name(),
+        oneshot_s,
+        persistent_s,
+    }
 }
 
 struct SweepRow {
@@ -427,6 +506,20 @@ fn main() {
         par.p, par.serial_s, par.shards, par.sharded_s, par_speedup
     );
 
+    // Persistent handle vs one-shot (the PR 7 acceptance point). The
+    // same point in quick and full mode: the acceptance criterion is
+    // P = 4096, 16 calls.
+    let pers = bench_persistent(4096, 32, 256, 16);
+    let pers_speedup = pers.oneshot_s / pers.persistent_s.max(1e-12);
+    println!(
+        "\npersistent P={} {} x{} calls: one-shot {:.3} s, persistent {:.3} s — {:.1}x speedup",
+        pers.p, pers.algo, pers.calls, pers.oneshot_s, pers.persistent_s, pers_speedup
+    );
+    assert!(
+        pers_speedup >= 2.0,
+        "persistent handle speedup {pers_speedup:.2}x below the 2x acceptance bar"
+    );
+
     println!();
     let spawn_grid: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024, 4096] };
     let mut spawn_rows: Vec<(usize, f64)> = Vec::new();
@@ -498,6 +591,16 @@ fn main() {
         "  \"parallel_replay\": {{\"p\": {}, \"shards\": {}, \"serial_s\": {:.6}, \
          \"sharded_s\": {:.6}, \"speedup\": {:.2}}},\n",
         par.p, par.shards, par.serial_s, par.sharded_s, par_speedup
+    ));
+    j.push_str(&format!(
+        "  \"persistent_speedup\": {{\"p\": {}, \"calls\": {}, \"algo\": \"{}\", \
+         \"oneshot_s\": {:.6}, \"persistent_s\": {:.6}, \"speedup\": {:.2}}},\n",
+        pers.p,
+        pers.calls,
+        json_escape(&pers.algo),
+        pers.oneshot_s,
+        pers.persistent_s,
+        pers_speedup
     ));
     j.push_str("  \"spawn\": [\n");
     for (i, (p, t)) in spawn_rows.iter().enumerate() {

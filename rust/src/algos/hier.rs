@@ -44,6 +44,14 @@
 //! * [`LocalAlgo::Linear`] — spread-out-style direct slot delivery: each
 //!   slot goes straight to its final intra-node holder, Q−1 non-blocking
 //!   pairs and one waitall, no metadata rounds, no temporary buffer.
+//! * [`LocalAlgo::Balanced`] — the same Q−1 direct pairs as `linear`,
+//!   posted in *measured heavy-first order* (per-slot bytes descending)
+//!   so the fattest slot transfers start draining first. Enumerating the
+//!   order costs an O(P·r) pass over the counts per rank, which is only
+//!   worth paying when amortized — the schedule is therefore
+//!   **persistent-only**: `LocalAlgo::parse` rejects it and the one-shot
+//!   entry points refuse it; construct it through
+//!   [`crate::comm::persist::PersistentColl`].
 //! * [`GlobalAlgo::Coalesced`] — Alg. 3: one message of Q blocks per
 //!   target node, batched by `block_count`, after a rearrangement pass
 //!   that compacts T (N−1 messages).
@@ -84,6 +92,11 @@ pub enum LocalAlgo {
     /// Direct spread-out slot delivery: Q−1 non-blocking pairs, one
     /// waitall, no metadata rounds.
     Linear,
+    /// Load-balanced direct delivery: the `Linear` pairs posted in
+    /// measured heavy-first slot order (bytes descending, ties by slot
+    /// index). Persistent-only — see the module header; `parse` rejects
+    /// the spec and the one-shot entry points refuse the kind.
+    Balanced,
 }
 
 impl LocalAlgo {
@@ -98,17 +111,26 @@ impl LocalAlgo {
                 radix: param(head, args, "r")?,
             }),
             "linear" => Ok(LocalAlgo::Linear),
+            "balanced" => Err(TunaError::config(
+                "hier local `balanced` is persistent-only: its setup cost is \
+                 per-handle, so it cannot be named in a one-shot spec — \
+                 construct it through comm::persist::PersistentColl",
+            )),
             other => Err(TunaError::config(format!(
                 "hier: unknown local algorithm `{other}` (try tuna:r=N or linear)"
             ))),
         }
     }
 
-    /// Parseable spec, the inverse of [`LocalAlgo::parse`].
+    /// Parseable spec, the inverse of [`LocalAlgo::parse`] — except
+    /// `balanced`, whose spec is intentionally *not* re-parseable (the
+    /// schedule is persistent-only and must never round-trip into
+    /// tuning tables or one-shot CLI runs).
     pub fn spec(&self) -> String {
         match self {
             LocalAlgo::Tuna { radix } => format!("tuna:r={radix}"),
             LocalAlgo::Linear => "linear".into(),
+            LocalAlgo::Balanced => "balanced".into(),
         }
     }
 
@@ -116,6 +138,7 @@ impl LocalAlgo {
         match self {
             LocalAlgo::Tuna { radix } => format!("tuna(r={radix})"),
             LocalAlgo::Linear => "linear".into(),
+            LocalAlgo::Balanced => "balanced".into(),
         }
     }
 }
@@ -383,6 +406,7 @@ pub fn run(
             (out.slots, out.stats)
         }
         LocalAlgo::Linear => run_local_linear(ctx, my_node * q, q, g, slots),
+        LocalAlgo::Balanced => run_local_balanced(ctx, my_node * q, q, g, slots),
     };
 
     // ---- contract stage 2 → 3: bucket the now group-aligned blocks by
@@ -718,6 +742,9 @@ pub fn run_sparse(
             (out.slots, out.stats)
         }
         LocalAlgo::Linear => run_local_linear_sparse(ctx, my_node * q, q, g, slots, sizes, &topo),
+        LocalAlgo::Balanced => {
+            run_local_balanced_sparse(ctx, my_node * q, q, g, slots, sizes, &topo)
+        }
     };
 
     // ---- bucket by destination node, origin-sorted.
@@ -912,6 +939,89 @@ fn run_local_linear_sparse(
     (slots, AlgoStats { t_peak: 0, rounds: 1 })
 }
 
+/// The load-balanced drain order of [`LocalAlgo::Balanced`]: slot
+/// indices `1..Q` sorted by measured slot bytes descending, ties broken
+/// by ascending index. Shared verbatim between the threaded runners and
+/// the plan compilers — both sides derive `slot_bytes` from the same
+/// counts, so the permutation (and with it bit-identity) cannot drift.
+pub(crate) fn balanced_order(slot_bytes: &[u64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (1..slot_bytes.len()).collect();
+    order.sort_by_key(|&j| (std::cmp::Reverse(slot_bytes[j]), j));
+    order
+}
+
+/// [`LocalAlgo::Balanced`]: the `Linear` pairs posted in heavy-first
+/// slot order, so the fattest transfer is in flight before the light
+/// ones queue behind it on the intra-node links.
+fn run_local_balanced(
+    ctx: &mut RankCtx,
+    base: usize,
+    q: usize,
+    g: usize,
+    mut slots: Vec<SlotContent>,
+) -> (Vec<SlotContent>, AlgoStats) {
+    ctx.phase_mark();
+    let bytes: Vec<u64> = slots
+        .iter()
+        .map(|s| s.iter().map(|b| b.len()).sum())
+        .collect();
+    let order = balanced_order(&bytes);
+    let mut sends: Vec<SendReq> = Vec::with_capacity(q - 1);
+    let mut recvs: Vec<RecvReq> = Vec::with_capacity(q - 1);
+    for &j in &order {
+        let dst = base + (g + j) % q;
+        let src = base + (g + q - j) % q;
+        recvs.push(ctx.irecv(src, j as u32));
+        let payload = Payload::Blocks(std::mem::take(&mut slots[j]));
+        sends.push(ctx.isend(dst, j as u32, payload));
+    }
+    for (&j, pl) in order.iter().zip(ctx.waitall(&sends, &recvs)) {
+        slots[j] = pl.into_blocks();
+    }
+    ctx.phase_lap(Phase::Data);
+    (slots, AlgoStats { t_peak: 0, rounds: 1 })
+}
+
+/// [`LocalAlgo::Balanced`] on a sparse workload: the sparse `Linear`
+/// gates evaluated in heavy-first slot order (ordering by structural
+/// slot bytes; absent slots sort last and are skipped on both sides).
+fn run_local_balanced_sparse(
+    ctx: &mut RankCtx,
+    base: usize,
+    q: usize,
+    g: usize,
+    mut slots: Vec<SlotContent>,
+    sizes: &BlockSizes,
+    topo: &Topology,
+) -> (Vec<SlotContent>, AlgoStats) {
+    ctx.phase_mark();
+    let bytes: Vec<u64> = slots
+        .iter()
+        .map(|s| s.iter().map(|b| b.len()).sum())
+        .collect();
+    let order = balanced_order(&bytes);
+    let mut sends: Vec<SendReq> = Vec::new();
+    let mut recvs: Vec<RecvReq> = Vec::new();
+    let mut recv_js: Vec<usize> = Vec::new();
+    for &j in &order {
+        let dst = base + (g + j) % q;
+        let src = base + (g + q - j) % q;
+        if sparse_slot_nonempty(sizes, topo, src, g) {
+            recvs.push(ctx.irecv(src, j as u32));
+            recv_js.push(j);
+        }
+        if !slots[j].is_empty() {
+            let payload = Payload::Blocks(std::mem::take(&mut slots[j]));
+            sends.push(ctx.isend(dst, j as u32, payload));
+        }
+    }
+    for (j, pl) in recv_js.into_iter().zip(ctx.waitall(&sends, &recvs)) {
+        slots[j] = pl.into_blocks();
+    }
+    ctx.phase_lap(Phase::Data);
+    (slots, AlgoStats { t_peak: 0, rounds: 1 })
+}
+
 /// [`LocalAlgo::Linear`]: direct spread-out slot delivery within the
 /// node. Each slot already names its final intra-node holder — send it
 /// straight there, Q−1 non-blocking pairs, one waitall.
@@ -1033,6 +1143,24 @@ fn plan_into_dense(
                         let src = base + (g + q - j) % q;
                         b.recv(src, j as u32);
                         b.send(dst, j as u32, slot_bytes(g, j));
+                    }
+                    b.wait();
+                    b.lap(Phase::Data);
+                }
+                t_peak = 0;
+                rounds = 1;
+            }
+            LocalAlgo::Balanced => {
+                for g in 0..q {
+                    let bytes: Vec<u64> = (0..q).map(|j| slot_bytes(g, j)).collect();
+                    let order = balanced_order(&bytes);
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    for &j in &order {
+                        let dst = base + (g + j) % q;
+                        let src = base + (g + q - j) % q;
+                        b.recv(src, j as u32);
+                        b.send(dst, j as u32, bytes[j]);
                     }
                     b.wait();
                     b.lap(Phase::Data);
@@ -1254,6 +1382,28 @@ fn plan_into_sparse(
                         }
                         if slots[g][j].1 > 0 {
                             b.send(dst, j as u32, slots[g][j].0);
+                        }
+                    }
+                    b.wait();
+                    b.lap(Phase::Data);
+                }
+                t_peak = 0;
+                local_rounds = 1;
+            }
+            LocalAlgo::Balanced => {
+                for g in 0..q {
+                    let bytes: Vec<u64> = (0..q).map(|j| slots[g][j].0).collect();
+                    let order = balanced_order(&bytes);
+                    let b = &mut builders[base + g];
+                    b.mark();
+                    for &j in &order {
+                        let dst = base + (g + j) % q;
+                        let src_g = (g + q - j) % q;
+                        if slots[src_g][j].1 > 0 {
+                            b.recv(base + src_g, j as u32);
+                        }
+                        if slots[g][j].1 > 0 {
+                            b.send(dst, j as u32, bytes[j]);
                         }
                     }
                     b.wait();
@@ -1680,6 +1830,33 @@ mod tests {
             );
             assert!(rep.counters.bytes_local > 0);
         }
+    }
+
+    #[test]
+    fn balanced_order_is_heavy_first_and_deterministic() {
+        // Slot 0 never participates; heavier slots drain first; byte
+        // ties break by ascending slot index so the permutation is a
+        // pure function of the counts.
+        assert_eq!(balanced_order(&[99, 10, 30, 20]), vec![2, 3, 1]);
+        assert_eq!(balanced_order(&[0, 5, 5, 5]), vec![1, 2, 3]);
+        assert_eq!(balanced_order(&[7, 0, 0]), vec![1, 2]);
+        assert_eq!(balanced_order(&[4]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn balanced_local_is_not_parseable() {
+        // Persistent-only: the spec never round-trips, so tuning tables
+        // and one-shot CLI runs cannot name it.
+        let e = LocalAlgo::parse("balanced").unwrap_err().to_string();
+        assert!(e.contains("persistent-only"), "{e}");
+        let e = AlgoKind::parse("hier:l=balanced,g=linear").unwrap_err().to_string();
+        assert!(e.contains("persistent-only"), "{e}");
+        assert_eq!(LocalAlgo::Balanced.spec(), "balanced");
+        assert!(AlgoKind::Hier {
+            local: LocalAlgo::Balanced,
+            global: GlobalAlgo::Linear,
+        }
+        .persistent_only());
     }
 
     #[test]

@@ -190,6 +190,18 @@ impl AlgoKind {
         }
     }
 
+    /// Is this kind only runnable through a persistent handle
+    /// ([`crate::comm::persist::PersistentColl`])? True for schedules
+    /// whose setup cost is per-handle (the hier `balanced` local): the
+    /// one-shot entry points refuse them so the cost model's rankings
+    /// and the tuning tables can never quietly pay that setup per call.
+    pub fn persistent_only(&self) -> bool {
+        matches!(
+            self,
+            AlgoKind::Hier { local: LocalAlgo::Balanced, .. }
+        )
+    }
+
     /// Validate parameters against a topology before running.
     pub fn check(&self, p: usize, q: usize) -> Result<()> {
         let bad = |m: String| Err(TunaError::Config(m));
@@ -395,6 +407,116 @@ pub fn run_alltoallv(
     sizes: &BlockSizes,
     real_payloads: bool,
 ) -> Result<RunReport> {
+    if kind.persistent_only() {
+        return Err(TunaError::config(format!(
+            "{} is persistent-only: its setup is amortized per handle, not per \
+             call — construct it through comm::persist::PersistentColl",
+            kind.name()
+        )));
+    }
+    let parts = PreparedParts::build(engine, sizes)?;
+    run_alltoallv_prepared(engine, kind, sizes, real_payloads, &parts, None)
+}
+
+/// The per-workload one-shot setup [`run_alltoallv`] performs before any
+/// rank thread starts: the structural expectation counts (the
+/// `senders()` transpose for sparse workloads) and the per-rank receive
+/// fingerprints. Persistent handles build this once at `init` and hand
+/// it to every `start`; repeated one-shot runs rebuild it per call.
+pub(crate) struct PreparedParts {
+    pub expect_counts: Arc<Vec<usize>>,
+    pub fingerprints: Arc<Vec<u64>>,
+}
+
+impl PreparedParts {
+    pub(crate) fn build(engine: &Engine, sizes: &BlockSizes) -> Result<PreparedParts> {
+        let p = engine.topo.p();
+        if sizes.p() != p {
+            return Err(TunaError::config(format!(
+                "workload is for P={} but engine has P={p}",
+                sizes.p()
+            )));
+        }
+        // A rank expects exactly one block per structural sender (every
+        // rank for dense workloads). Build the transpose once, up front,
+        // so rank threads share it instead of racing to construct it.
+        let expect_counts: Arc<Vec<usize>> = if sizes.is_sparse() {
+            Arc::new(sizes.senders().iter().map(Vec::len).collect())
+        } else {
+            Arc::new(vec![p; p])
+        };
+        Ok(PreparedParts {
+            expect_counts,
+            fingerprints: Arc::new(sizes.recv_fingerprints()),
+        })
+    }
+}
+
+/// Prebuilt per-rank send blocks for the threaded path: pattern-row
+/// payload ropes (real mode) or row entry lists (phantom), materialized
+/// once and cheaply re-instantiated per call. Payload ropes are
+/// Arc-backed views, so a clone shares the underlying bytes — the
+/// zero-copy accounting (`copied_bytes == 2 * total_bytes`) is
+/// unaffected because it counts *simulated* writes/reads, which are
+/// identical whether the views were built this call or at `init`.
+pub(crate) struct PayloadArena {
+    /// Per-rank `(dest, len)` send entries (every dest for dense rows).
+    entries: Vec<Vec<(usize, u64)>>,
+    /// Per-rank pattern payloads aligned with `entries`; `None` in
+    /// phantom mode.
+    bufs: Option<Vec<Vec<DataBuf>>>,
+}
+
+impl PayloadArena {
+    pub(crate) fn build(sizes: &BlockSizes, real_payloads: bool) -> PayloadArena {
+        let p = sizes.p();
+        let entries: Vec<Vec<(usize, u64)>> = if sizes.is_sparse() {
+            (0..p).map(|me| sizes.row_view(me).entries().collect()).collect()
+        } else {
+            (0..p)
+                .map(|me| sizes.row(me).into_iter().enumerate().collect())
+                .collect()
+        };
+        let bufs = real_payloads.then(|| {
+            entries
+                .iter()
+                .enumerate()
+                .map(|(me, es)| DataBuf::pattern_row_entries(me, es))
+                .collect()
+        });
+        PayloadArena { entries, bufs }
+    }
+
+    /// Instantiate rank `me`'s send blocks: cloned payload views (real)
+    /// or fresh phantoms (free).
+    pub(crate) fn blocks_for(&self, me: usize) -> Vec<Block> {
+        match &self.bufs {
+            Some(bufs) => bufs[me]
+                .iter()
+                .zip(self.entries[me].iter())
+                .map(|(data, &(d, _))| Block::new(me, d, data.clone()))
+                .collect(),
+            None => self.entries[me]
+                .iter()
+                .map(|&(d, len)| Block::new(me, d, DataBuf::Phantom(len)))
+                .collect(),
+        }
+    }
+}
+
+/// The threaded-run core shared by [`run_alltoallv`] and the persistent
+/// handles: every per-workload one-shot artifact arrives prebuilt
+/// (`parts`, optionally an `arena`), so this function adds no setup of
+/// its own. Persistent-only kinds are admitted here — the public entry
+/// points gate them; a handle *is* the authorization.
+pub(crate) fn run_alltoallv_prepared(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    real_payloads: bool,
+    parts: &PreparedParts,
+    arena: Option<&Arc<PayloadArena>>,
+) -> Result<RunReport> {
     let p = engine.topo.p();
     if sizes.p() != p {
         return Err(TunaError::config(format!(
@@ -405,54 +527,53 @@ pub fn run_alltoallv(
     kind.check(p, engine.topo.q())?;
 
     let sparse = sizes.is_sparse();
-    // A rank expects exactly one block per structural sender (every rank
-    // for dense workloads). Build the transpose once, up front, so rank
-    // threads share it instead of racing to construct it.
-    let expect_counts: Arc<Vec<usize>> = if sparse {
-        Arc::new(sizes.senders().iter().map(Vec::len).collect())
-    } else {
-        Arc::new(vec![p; p])
-    };
-    let fingerprints = Arc::new(sizes.recv_fingerprints());
     let kind_c = *kind;
     let sizes_c = sizes.clone();
-    let fp = fingerprints.clone();
-    let expect = expect_counts.clone();
+    let fp = parts.fingerprints.clone();
+    let expect = parts.expect_counts.clone();
+    let arena_c = arena.cloned();
 
     let res = engine.run(move |ctx| {
         let me = ctx.rank();
         // Real payloads are written once into a per-rank arena and handed
         // to the algorithm as zero-copy views; every hop from here to the
         // destination moves views, not bytes (see comm::buffer).
+        let blocks: Vec<Block> = match &arena_c {
+            Some(a) => a.blocks_for(me),
+            None if sparse => {
+                let entries: Vec<(usize, u64)> = sizes_c.row_view(me).entries().collect();
+                if real_payloads {
+                    DataBuf::pattern_row_entries(me, &entries)
+                        .into_iter()
+                        .zip(entries.iter())
+                        .map(|(data, &(d, _))| Block::new(me, d, data))
+                        .collect()
+                } else {
+                    entries
+                        .iter()
+                        .map(|&(d, len)| Block::new(me, d, DataBuf::Phantom(len)))
+                        .collect()
+                }
+            }
+            None => {
+                let row = sizes_c.row(me);
+                if real_payloads {
+                    DataBuf::pattern_row(me, &row)
+                        .into_iter()
+                        .enumerate()
+                        .map(|(d, data)| Block::new(me, d, data))
+                        .collect()
+                } else {
+                    row.iter()
+                        .enumerate()
+                        .map(|(d, &len)| Block::new(me, d, DataBuf::Phantom(len)))
+                        .collect()
+                }
+            }
+        };
         let (recv, stats) = if sparse {
-            let entries: Vec<(usize, u64)> = sizes_c.row_view(me).entries().collect();
-            let blocks: Vec<Block> = if real_payloads {
-                DataBuf::pattern_row_entries(me, &entries)
-                    .into_iter()
-                    .zip(entries.iter())
-                    .map(|(data, &(d, _))| Block::new(me, d, data))
-                    .collect()
-            } else {
-                entries
-                    .iter()
-                    .map(|&(d, len)| Block::new(me, d, DataBuf::Phantom(len)))
-                    .collect()
-            };
             kind_c.dispatch_sparse(ctx, blocks, &sizes_c)
         } else {
-            let row = sizes_c.row(me);
-            let blocks: Vec<Block> = if real_payloads {
-                DataBuf::pattern_row(me, &row)
-                    .into_iter()
-                    .enumerate()
-                    .map(|(d, data)| Block::new(me, d, data))
-                    .collect()
-            } else {
-                row.iter()
-                    .enumerate()
-                    .map(|(d, &len)| Block::new(me, d, DataBuf::Phantom(len)))
-                    .collect()
-            };
             kind_c.dispatch(ctx, blocks)
         };
         let ok = validate_received(me, expect[me], &recv, fp[me], real_payloads);
@@ -517,11 +638,31 @@ pub fn run_alltoallv_replay(
     kind: &AlgoKind,
     sizes: &BlockSizes,
 ) -> Result<RunReport> {
+    if kind.persistent_only() {
+        return Err(TunaError::config(format!(
+            "{} is persistent-only: its setup is amortized per handle, not per \
+             call — construct it through comm::persist::PersistentColl",
+            kind.name()
+        )));
+    }
     let plan = plan_for(engine, kind, sizes)?;
     let shards = engine
         .replay_shards
         .unwrap_or_else(|| crate::comm::replay::auto_shards(engine.topo.p()));
-    let res = crate::comm::replay::execute_sharded(&engine.profile, engine.topo, &plan, shards)?;
+    replay_plan_report(engine, kind, &plan, shards)
+}
+
+/// Advance an already-compiled plan on the sharded replay executor and
+/// assemble the [`RunReport`] — the replay tail shared by
+/// [`run_alltoallv_replay`] and the persistent handles (which hold their
+/// plan and shard count frozen across `start` calls).
+pub(crate) fn replay_plan_report(
+    engine: &Engine,
+    kind: &AlgoKind,
+    plan: &Arc<CommPlan>,
+    shards: usize,
+) -> Result<RunReport> {
+    let res = crate::comm::replay::execute_sharded(&engine.profile, engine.topo, plan, shards)?;
     Ok(RunReport {
         algo: kind.name(),
         makespan: res.makespan,

@@ -1,0 +1,241 @@
+//! Persistent collective handles (`MPI_Alltoallv_init`-style).
+//!
+//! A [`PersistentColl`] freezes one collective at construction and
+//! replays it cheaply on every [`PersistentColl::start`] call — the
+//! amortization pattern the locality-aware MPI literature is explicit
+//! about: expensive schedules only pay off in a persistent version.
+//!
+//! # The freeze contract
+//!
+//! **Frozen at [`PersistentColl::init`], shared by every `start`:**
+//!
+//! * the counts matrix identity (`BlockSizes::identity_hash`) and its
+//!   `(P, Q)` shape against the engine topology;
+//! * the algorithm, parameters fully resolved (`tuna:auto` resolves its
+//!   radix once, at compile time, via the engine's tuning table);
+//! * the execution mode (`ExecMode::Auto` resolves against the payload
+//!   flag here, once) and the payload mode (real / phantom);
+//! * replay mode: the compiled [`CommPlan`] and the worker-shard count;
+//! * threaded mode: the `senders()` transpose / expectation counts, the
+//!   receive fingerprints, and the payload arena (pattern ropes written
+//!   once; each call clones zero-copy views);
+//! * the load-balanced drain order of `hier` local `balanced` — the
+//!   schedule whose O(P·r) enumeration is only worth paying per handle,
+//!   and which is therefore *only* constructible through this type
+//!   ([`AlgoKind::persistent_only`]).
+//!
+//! **Allowed to vary per call:** nothing that the schedule can observe.
+//! In MPI terms the user may refill the send buffers between starts; our
+//! payloads are deterministic patterns, so consecutive `start` calls are
+//! bit-identical replays of the same virtual-time run — asserted against
+//! the equivalent one-shot execution in `tests/persistent.rs`.
+//!
+//! **Misuse:** calling [`PersistentColl::start`] with a workload whose
+//! identity no longer matches the frozen counts (the classic stale
+//! pattern: the app regenerated its distribution and kept the old
+//! handle) is a typed [`TunaError`], never a panic or a silent wrong
+//! answer.
+
+use std::sync::Arc;
+
+use crate::algos::{
+    plan_for, replay_plan_report, run_alltoallv_prepared, AlgoKind, ExecMode, PayloadArena,
+    PreparedParts, RunReport,
+};
+use crate::comm::{CommPlan, Engine};
+use crate::error::{Result, TunaError};
+use crate::workload::BlockSizes;
+
+/// A collective frozen at init and restartable at plan-replay (or
+/// prebuilt-arena) cost. Borrows the engine: handles are as long-lived
+/// as the engine that compiled them, and several handles (one per
+/// tenant, say) may share one engine and its plan cache.
+pub struct PersistentColl<'e> {
+    engine: &'e Engine,
+    kind: AlgoKind,
+    /// The frozen workload (cheap to hold: generator descriptor or
+    /// shared CSR storage).
+    sizes: BlockSizes,
+    identity: u64,
+    real_payloads: bool,
+    mode: ExecMode,
+    /// Replay mode: the compiled plan, fetched through the engine cache
+    /// once at init.
+    plan: Option<Arc<CommPlan>>,
+    /// Replay mode: frozen worker-shard assignment.
+    shards: usize,
+    /// Threaded mode: expectation counts + fingerprints, built once.
+    parts: Option<PreparedParts>,
+    /// Threaded mode: prebuilt pattern rows / entry lists.
+    arena: Option<Arc<PayloadArena>>,
+}
+
+impl<'e> PersistentColl<'e> {
+    /// Freeze `kind` over `sizes` on `engine`. All setup happens here:
+    /// plan compilation and shard sizing (replay), or transpose,
+    /// fingerprints and payload arena (threaded). `mode` resolves
+    /// `Auto` against `real_payloads` exactly like the one-shot path.
+    pub fn init(
+        engine: &'e Engine,
+        kind: AlgoKind,
+        sizes: &BlockSizes,
+        real_payloads: bool,
+        mode: ExecMode,
+    ) -> Result<PersistentColl<'e>> {
+        let p = engine.topo.p();
+        if sizes.p() != p {
+            return Err(TunaError::config(format!(
+                "persistent init: workload is for P={} but engine has P={p}",
+                sizes.p()
+            )));
+        }
+        kind.check(p, engine.topo.q())?;
+
+        let mode = mode.resolve(real_payloads);
+        let mut handle = PersistentColl {
+            engine,
+            kind,
+            sizes: sizes.clone(),
+            identity: sizes.identity_hash(),
+            real_payloads,
+            mode,
+            plan: None,
+            shards: 1,
+            parts: None,
+            arena: None,
+        };
+        match mode {
+            ExecMode::Replay => {
+                if real_payloads {
+                    return Err(TunaError::config(
+                        "persistent init: mode=replay is phantom-only (real payloads \
+                         need the threaded oracle); use real=false or mode=threaded",
+                    ));
+                }
+                handle.plan = Some(plan_for(engine, &kind, sizes)?);
+                handle.shards = engine
+                    .replay_shards
+                    .unwrap_or_else(|| crate::comm::replay::auto_shards(p));
+            }
+            _ => {
+                handle.parts = Some(PreparedParts::build(engine, sizes)?);
+                handle.arena = Some(Arc::new(PayloadArena::build(sizes, real_payloads)));
+            }
+        }
+        Ok(handle)
+    }
+
+    /// Start one collective call. `sizes` is the caller's current
+    /// workload and must still match the frozen counts — the handle
+    /// checks content identity (not object identity) and returns a
+    /// typed error on any drift, so a stale handle can never replay a
+    /// schedule against counts it was not compiled for.
+    pub fn start(&self, sizes: &BlockSizes) -> Result<RunReport> {
+        if sizes.p() != self.sizes.p() || sizes.identity_hash() != self.identity {
+            return Err(TunaError::config(format!(
+                "persistent start: workload changed shape since init (frozen {} \
+                 P={}, got P={}) — counts are frozen at init; re-init the handle \
+                 for the new workload",
+                self.kind.name(),
+                self.sizes.p(),
+                sizes.p(),
+            )));
+        }
+        self.start_frozen()
+    }
+
+    /// Start one collective call against the frozen workload without a
+    /// caller-side counts check (the handle owns the workload, so there
+    /// is nothing to drift). This is the hot path the serving engine
+    /// drives.
+    pub fn start_frozen(&self) -> Result<RunReport> {
+        match self.mode {
+            ExecMode::Replay => {
+                let plan = self.plan.as_ref().expect("replay handle holds a plan");
+                replay_plan_report(self.engine, &self.kind, plan, self.shards)
+            }
+            _ => run_alltoallv_prepared(
+                self.engine,
+                &self.kind,
+                &self.sizes,
+                self.real_payloads,
+                self.parts.as_ref().expect("threaded handle holds parts"),
+                self.arena.as_ref(),
+            ),
+        }
+    }
+
+    /// The frozen algorithm.
+    pub fn kind(&self) -> &AlgoKind {
+        &self.kind
+    }
+
+    /// The resolved execution mode (never `Auto`).
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Replay handles: the frozen compiled plan.
+    pub fn plan(&self) -> Option<&Arc<CommPlan>> {
+        self.plan.as_ref()
+    }
+
+    /// Replay handles: the frozen worker-shard count (0 threads spawned
+    /// on the threaded path, where this is 1 and unused).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Topology;
+    use crate::model::MachineProfile;
+    use crate::workload::Dist;
+
+    #[test]
+    fn init_freezes_and_start_replays() {
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(12, 4));
+        let sizes = BlockSizes::generate(12, Dist::Uniform { max: 128 }, 5);
+        let kind = AlgoKind::Tuna { radix: 2 };
+        let h = PersistentColl::init(&e, kind, &sizes, false, ExecMode::Replay).unwrap();
+        assert_eq!(h.mode(), ExecMode::Replay);
+        assert!(h.plan().is_some());
+        let a = h.start(&sizes).unwrap();
+        let b = h.start_frozen().unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        // One compile at init; every start hits the frozen Arc without
+        // touching the cache again.
+        assert_eq!(e.plan_cache.stats(), (0, 1));
+    }
+
+    #[test]
+    fn stale_counts_is_a_typed_error() {
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(8, 2));
+        let sizes = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 1);
+        let kind = AlgoKind::SpreadOut;
+        let h = PersistentColl::init(&e, kind, &sizes, false, ExecMode::Auto).unwrap();
+        let drifted = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 2);
+        let err = h.start(&drifted).unwrap_err();
+        assert!(matches!(err, TunaError::Config(_)), "{err}");
+        assert!(err.to_string().contains("frozen at init"), "{err}");
+        // The handle itself still works.
+        assert!(h.start(&sizes).unwrap().validated);
+    }
+
+    #[test]
+    fn replay_handles_reject_real_payloads() {
+        let e = Engine::new(MachineProfile::test_flat(), Topology::new(8, 2));
+        let sizes = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 1);
+        let err = PersistentColl::init(&e, AlgoKind::SpreadOut, &sizes, true, ExecMode::Replay)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("phantom-only"), "{err}");
+        // Auto resolves real payloads to the threaded oracle.
+        let h = PersistentColl::init(&e, AlgoKind::SpreadOut, &sizes, true, ExecMode::Auto)
+            .unwrap();
+        assert_eq!(h.mode(), ExecMode::Threaded);
+        assert!(h.start(&sizes).unwrap().validated);
+    }
+}

@@ -40,6 +40,13 @@ pub struct RunConfig {
     /// Execution mode for exact-fidelity points: threaded oracle,
     /// plan/replay, or auto (replay phantom, thread real).
     pub mode: ExecMode,
+    /// Measure through a persistent handle (`persistent=true`): freeze
+    /// the workload at `seed`, build one
+    /// [`crate::comm::PersistentColl`] before the iteration loop, and
+    /// `start` it per iteration — so plan compilation, payload arenas and
+    /// transposes are paid once, not per iter. The default (one-shot)
+    /// varies the seed per iteration like the paper's repetitions.
+    pub persistent: bool,
     /// Worker-shard count for the replay executor (`replay-shards=N`);
     /// `None` (`replay-shards=auto`, the default) sizes from P and the
     /// host. Purely a wallclock knob — results are bit-identical for
@@ -66,6 +73,7 @@ impl Default for RunConfig {
             engine_limit_replay: 8192,
             engine_limit_replay_sparse: 65536,
             mode: ExecMode::Auto,
+            persistent: false,
             replay_shards: None,
             tuning: None,
         }
@@ -76,8 +84,8 @@ impl RunConfig {
     /// Parse `key=value` arguments: `p=128 q=16 profile=polaris
     /// dist=uniform:1024 seed=7 iters=20 real=true limit-linear=256
     /// limit-log=1024 limit-replay=8192 limit-replay-sparse=65536
-    /// mode=replay replay-shards=4`. Unknown keys are errors (typos
-    /// should not pass silently).
+    /// mode=replay replay-shards=4 persistent=true`. Unknown keys are
+    /// errors (typos should not pass silently).
     pub fn parse_args(args: &[String]) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         for arg in args {
@@ -91,6 +99,11 @@ impl RunConfig {
                 "iters" => cfg.iters = parse_num(k, v)?,
                 "real" => {
                     cfg.real_payloads = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad bool for {k}: `{v}`")))?
+                }
+                "persistent" => {
+                    cfg.persistent = v
                         .parse()
                         .map_err(|_| TunaError::config(format!("bad bool for {k}: `{v}`")))?
                 }
@@ -245,6 +258,14 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.iters, 20);
         assert!(cfg.real_payloads);
+    }
+
+    #[test]
+    fn parse_persistent() {
+        assert!(!RunConfig::default().persistent);
+        assert!(RunConfig::parse_args(&args("p=64 q=8 persistent=true")).unwrap().persistent);
+        assert!(!RunConfig::parse_args(&args("p=64 q=8 persistent=false")).unwrap().persistent);
+        assert!(RunConfig::parse_args(&args("persistent=maybe")).is_err());
     }
 
     #[test]

@@ -11,11 +11,13 @@
 
 pub mod config;
 pub mod metrics;
+pub mod serve;
 
 pub use config::{RunConfig, SelectConfig};
+pub use serve::{ServeConfig, ServeReport, TenantSpec, TenantStat};
 
 use crate::algos::{run_alltoallv, run_alltoallv_replay, AlgoKind, ExecMode};
-use crate::comm::{Engine, PhaseBreakdown, Topology};
+use crate::comm::{Engine, PersistentColl, PhaseBreakdown, Topology};
 use crate::model::analytic::Estimator;
 use crate::util::stats::Summary;
 use crate::workload::BlockSizes;
@@ -149,15 +151,36 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                 .with_replay_shards(cfg.replay_shards);
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
-            for it in 0..cfg.iters.max(1) {
-                let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed.wrapping_add(it as u64));
-                let rep = if fidelity == Fidelity::Replay {
-                    run_alltoallv_replay(&engine, kind, &sizes)?
-                } else {
-                    run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?
+            if cfg.persistent {
+                // Persistent path: freeze the workload at `seed` and hoist
+                // every one-shot artifact (plan compile, payload arena,
+                // transpose, fingerprints) out of the iteration loop —
+                // init once, start per iter. The only path that admits
+                // persistent-only kinds (hier local `balanced`).
+                let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
+                let mode = match fidelity {
+                    Fidelity::Replay => ExecMode::Replay,
+                    _ => ExecMode::Threaded,
                 };
-                times.push(rep.makespan);
-                phases.max_with(&rep.phases);
+                let handle =
+                    PersistentColl::init(&engine, *kind, &sizes, cfg.real_payloads, mode)?;
+                for _ in 0..cfg.iters.max(1) {
+                    let rep = handle.start_frozen()?;
+                    times.push(rep.makespan);
+                    phases.max_with(&rep.phases);
+                }
+            } else {
+                for it in 0..cfg.iters.max(1) {
+                    let sizes =
+                        BlockSizes::generate(cfg.p, cfg.dist, cfg.seed.wrapping_add(it as u64));
+                    let rep = if fidelity == Fidelity::Replay {
+                        run_alltoallv_replay(&engine, kind, &sizes)?
+                    } else {
+                        run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?
+                    };
+                    times.push(rep.makespan);
+                    phases.max_with(&rep.phases);
+                }
             }
             Ok(Measurement {
                 algo: *kind,
@@ -240,6 +263,31 @@ mod tests {
             assert_eq!(a.summary.max.to_bits(), b.summary.max.to_bits());
             assert_eq!(a.phases, b.phases, "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn persistent_measure_freezes_workload_and_admits_balanced() {
+        use crate::algos::{GlobalAlgo, LocalAlgo};
+        let base = cfg(16, 4);
+        // Frozen workload: every start is the same run, and it matches a
+        // one-shot measurement of the seed workload bit for bit.
+        let one = measure(&RunConfig { iters: 1, ..base.clone() }, &AlgoKind::Tuna { radix: 4 })
+            .unwrap();
+        let per = measure(
+            &RunConfig { persistent: true, ..base.clone() },
+            &AlgoKind::Tuna { radix: 4 },
+        )
+        .unwrap();
+        assert_eq!(per.summary.n, 3);
+        assert_eq!(per.summary.min.to_bits(), per.summary.max.to_bits());
+        assert_eq!(per.median().to_bits(), one.median().to_bits());
+        // The balanced local schedule is only measurable persistently.
+        let kind = AlgoKind::Hier { local: LocalAlgo::Balanced, global: GlobalAlgo::Linear };
+        let err = measure(&base, &kind).unwrap_err().to_string();
+        assert!(err.contains("persistent-only"), "{err}");
+        let m = measure(&RunConfig { persistent: true, ..base }, &kind).unwrap();
+        assert!(m.median() > 0.0);
+        assert_eq!(m.fidelity, Fidelity::Replay);
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! Multi-tenant serving of persistent collectives (`tuna serve`).
+//!
+//! N tenants each freeze one collective in a [`PersistentColl`] handle
+//! — heterogeneous (P, Q, distribution, algorithm) mixes are the point —
+//! and issue calls with Poisson arrivals into one shared serving engine.
+//! Per-call demand (the collective's virtual-time makespan) is measured
+//! **once per tenant** through the handle; the serving simulation then
+//! models cross-tenant contention with deterministic processor sharing:
+//! all admitted calls share the engine's capacity equally, so a call's
+//! service rate is 1/n while n calls are in flight.
+//!
+//! The `pace` knob is burst pacing / admission control: at most `pace`
+//! calls are admitted concurrently (0 = unlimited), the rest wait in a
+//! FIFO queue. Latency is completion minus arrival — queue wait included
+//! — reported per tenant as nearest-rank p50/p95/p99.
+//!
+//! Everything is deterministic: arrivals come from per-tenant PCG
+//! streams, the event loop breaks ties by (time, sequence), and demands
+//! come from the bit-identical simulator — two runs of the same config
+//! produce byte-identical reports.
+
+use std::collections::VecDeque;
+
+use crate::algos::{AlgoKind, ExecMode};
+use crate::comm::{Engine, PersistentColl, Topology};
+use crate::error::{Result, TunaError};
+use crate::model::MachineProfile;
+use crate::util::prng::Pcg64;
+use crate::workload::{BlockSizes, Dist};
+
+/// One tenant: a frozen collective plus its traffic intensity.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    pub p: usize,
+    pub q: usize,
+    pub dist: Dist,
+    pub algo: AlgoKind,
+    /// Mean arrival rate, calls per simulated second.
+    pub rate: f64,
+    /// Workload seed (frozen into the tenant's handle).
+    pub seed: u64,
+}
+
+/// Configuration of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub tenants: Vec<TenantSpec>,
+    pub profile: MachineProfile,
+    /// Arrival horizon, simulated seconds (arrivals stop here; in-flight
+    /// calls drain to completion).
+    pub seconds: f64,
+    /// Max concurrently admitted calls (0 = unlimited).
+    pub pace: usize,
+    /// Seed for the arrival processes.
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(TunaError::config("serve: need at least one tenant"));
+        }
+        if !(self.seconds > 0.0) {
+            return Err(TunaError::config("serve: seconds must be > 0"));
+        }
+        for t in &self.tenants {
+            if !(t.rate > 0.0) {
+                return Err(TunaError::config(format!(
+                    "serve: tenant `{}` rate must be > 0",
+                    t.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-tenant serving statistics.
+#[derive(Clone, Debug)]
+pub struct TenantStat {
+    pub name: String,
+    pub algo: String,
+    pub p: usize,
+    pub q: usize,
+    pub dist: String,
+    pub rate: f64,
+    /// Per-call demand through the persistent handle, seconds.
+    pub demand: f64,
+    pub calls: usize,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Result of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub tenants: Vec<TenantStat>,
+    pub pace: usize,
+    pub seconds: f64,
+    pub total_calls: usize,
+    /// Time the last call completed (>= `seconds` under load).
+    pub drain: f64,
+    /// Offered load: Σ rate·demand — > 1 means arrivals outpace the
+    /// engine and queues grow until the horizon.
+    pub offered_load: f64,
+}
+
+/// One call arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct Call {
+    pub tenant: usize,
+    pub arrival: f64,
+}
+
+/// Measure each tenant's per-call demand: build the tenant's engine,
+/// freeze its collective in a [`PersistentColl`], and start it once.
+/// Phantom payloads, so `Auto` resolves to the bit-identical replay
+/// executor; persistent-only kinds (hier local `balanced`) are admitted
+/// because the handle is the authorization. Split from [`simulate`] so
+/// pace/load sweeps re-simulate without re-measuring.
+pub fn measure_tenants(cfg: &ServeConfig) -> Result<Vec<f64>> {
+    cfg.validate()?;
+    let mut demands = Vec::with_capacity(cfg.tenants.len());
+    for t in &cfg.tenants {
+        let topo = Topology::try_new(t.p, t.q)?;
+        let engine = Engine::new(cfg.profile.clone(), topo);
+        let sizes = BlockSizes::generate(t.p, t.dist, t.seed);
+        let handle = PersistentColl::init(&engine, t.algo, &sizes, false, ExecMode::Auto)?;
+        demands.push(handle.start_frozen()?.makespan);
+    }
+    Ok(demands)
+}
+
+/// Poisson arrivals for every tenant over `[0, cfg.seconds)`, merged and
+/// sorted by (time, generation order). Each tenant draws from its own
+/// PCG stream, so adding a tenant never perturbs the others' arrivals.
+pub fn poisson_calls(cfg: &ServeConfig) -> Vec<Call> {
+    let mut calls: Vec<(f64, usize, Call)> = Vec::new();
+    let mut seq = 0usize;
+    for (i, t) in cfg.tenants.iter().enumerate() {
+        let mut rng = Pcg64::new(cfg.seed, 0x5E12_5E12u64 ^ (i as u64));
+        let mut at = 0.0f64;
+        loop {
+            let u = rng.next_f64();
+            at += -(1.0 - u).ln() / t.rate;
+            if at >= cfg.seconds {
+                break;
+            }
+            calls.push((at, seq, Call { tenant: i, arrival: at }));
+            seq += 1;
+        }
+    }
+    calls.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    calls.into_iter().map(|(_, _, c)| c).collect()
+}
+
+/// Deterministic processor-sharing event loop: admitted calls split the
+/// engine's capacity equally; beyond `pace` concurrent calls (0 =
+/// unlimited) arrivals queue FIFO. Returns per-tenant latency lists (in
+/// completion order) and the drain time. Completions tie-break before
+/// arrivals, and simultaneous completions resolve in admission order —
+/// the loop is a pure function of its inputs.
+pub fn simulate_calls(
+    n_tenants: usize,
+    calls: &[Call],
+    demands: &[f64],
+    pace: usize,
+) -> (Vec<Vec<f64>>, f64) {
+    let cap = if pace == 0 { usize::MAX } else { pace };
+    // Progress is tracked in cumulative per-call service `v` (the classic
+    // PS virtual time): while n calls are admitted, v advances at 1/n per
+    // wall second, and a call admitted at v0 with demand d completes when
+    // v reaches v0 + d. Completion times are then exact comparisons on
+    // targets — no per-call decrement drift.
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_tenants];
+    let mut active: Vec<(usize, f64)> = Vec::new(); // (call idx, target v)
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut t = 0.0f64;
+    let mut v = 0.0f64;
+    let mut next = 0usize;
+    let mut drain = 0.0f64;
+    loop {
+        let min_target = active
+            .iter()
+            .map(|&(_, tv)| tv)
+            .fold(f64::INFINITY, f64::min);
+        let t_comp = if active.is_empty() {
+            f64::INFINITY
+        } else {
+            t + (min_target - v) * active.len() as f64
+        };
+        let t_arr = if next < calls.len() { calls[next].arrival } else { f64::INFINITY };
+        if t_comp == f64::INFINITY && t_arr == f64::INFINITY {
+            break;
+        }
+        if t_comp <= t_arr {
+            t = t_comp;
+            v = min_target;
+            // Complete every call whose target is reached (ties complete
+            // together, in admission order — `retain` preserves it).
+            active.retain(|&(idx, tv)| {
+                if tv <= v {
+                    let c = calls[idx];
+                    latencies[c.tenant].push(t - c.arrival);
+                    drain = t;
+                    false
+                } else {
+                    true
+                }
+            });
+            while active.len() < cap {
+                match queue.pop_front() {
+                    Some(idx) => active.push((idx, v + demands[calls[idx].tenant])),
+                    None => break,
+                }
+            }
+        } else {
+            if !active.is_empty() {
+                v += (t_arr - t) / active.len() as f64;
+            }
+            t = t_arr;
+            let idx = next;
+            next += 1;
+            if active.len() < cap {
+                active.push((idx, v + demands[calls[idx].tenant]));
+            } else {
+                queue.push_back(idx);
+            }
+        }
+    }
+    (latencies, drain)
+}
+
+/// Nearest-rank percentile of an unsorted sample (0.0 on empty input).
+pub fn percentile(samples: &[f64], pct: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((pct / 100.0) * s.len() as f64).ceil() as usize;
+    s[rank.clamp(1, s.len()) - 1]
+}
+
+/// Simulate serving with pre-measured `demands` (from
+/// [`measure_tenants`]) and assemble the per-tenant report.
+pub fn simulate(cfg: &ServeConfig, demands: &[f64]) -> ServeReport {
+    let calls = poisson_calls(cfg);
+    let (latencies, drain) = simulate_calls(cfg.tenants.len(), &calls, demands, cfg.pace);
+    let tenants: Vec<TenantStat> = cfg
+        .tenants
+        .iter()
+        .zip(demands)
+        .zip(&latencies)
+        .map(|((t, &demand), lat)| TenantStat {
+            name: t.name.clone(),
+            algo: t.algo.name(),
+            p: t.p,
+            q: t.q,
+            dist: t.dist.name().to_string(),
+            rate: t.rate,
+            demand,
+            calls: lat.len(),
+            p50: percentile(lat, 50.0),
+            p95: percentile(lat, 95.0),
+            p99: percentile(lat, 99.0),
+            mean: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+            max: lat.iter().copied().fold(0.0, f64::max),
+        })
+        .collect();
+    let total_calls = tenants.iter().map(|t| t.calls).sum();
+    let offered_load = cfg
+        .tenants
+        .iter()
+        .zip(demands)
+        .map(|(t, &d)| t.rate * d)
+        .sum();
+    ServeReport {
+        tenants,
+        pace: cfg.pace,
+        seconds: cfg.seconds,
+        total_calls,
+        drain,
+        offered_load,
+    }
+}
+
+/// Full serving run: measure every tenant's demand through its
+/// persistent handle, then simulate the shared engine.
+pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    let demands = measure_tenants(cfg)?;
+    Ok(simulate(cfg, &demands))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{GlobalAlgo, LocalAlgo};
+
+    fn tenant(name: &str, rate: f64, algo: AlgoKind) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            p: 16,
+            q: 4,
+            dist: Dist::Uniform { max: 128 },
+            algo,
+            rate,
+            seed: 7,
+        }
+    }
+
+    fn cfg2() -> ServeConfig {
+        ServeConfig {
+            tenants: vec![
+                tenant("a", 40.0, AlgoKind::Tuna { radix: 4 }),
+                tenant("b", 25.0, AlgoKind::SpreadOut),
+            ],
+            profile: MachineProfile::test_flat(),
+            seconds: 0.5,
+            pace: 0,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn two_simultaneous_calls_share_capacity() {
+        let calls = [
+            Call { tenant: 0, arrival: 0.0 },
+            Call { tenant: 1, arrival: 0.0 },
+        ];
+        let (lat, drain) = simulate_calls(2, &calls, &[1.0, 1.0], 0);
+        // Processor sharing: both run at rate 1/2, both finish at t = 2.
+        assert_eq!(lat[0], vec![2.0]);
+        assert_eq!(lat[1], vec![2.0]);
+        assert_eq!(drain, 2.0);
+    }
+
+    #[test]
+    fn pace_one_serializes_with_fifo_queueing() {
+        let calls = [
+            Call { tenant: 0, arrival: 0.0 },
+            Call { tenant: 1, arrival: 0.0 },
+        ];
+        let (lat, drain) = simulate_calls(2, &calls, &[1.0, 1.0], 1);
+        // Admission control: the first call runs alone (finishes at 1),
+        // the second waits in queue and finishes at 2.
+        assert_eq!(lat[0], vec![1.0]);
+        assert_eq!(lat[1], vec![2.0]);
+        assert_eq!(drain, 2.0);
+    }
+
+    #[test]
+    fn staggered_arrivals_interleave_correctly() {
+        // Call A (demand 2) arrives at 0; call B (demand 1) at 1. From
+        // t=1 they share: A has 1 unit left, B has 1; both finish at 3.
+        let calls = [
+            Call { tenant: 0, arrival: 0.0 },
+            Call { tenant: 1, arrival: 1.0 },
+        ];
+        let (lat, _) = simulate_calls(2, &calls, &[2.0, 1.0], 0);
+        assert_eq!(lat[0], vec![3.0]);
+        assert_eq!(lat[1], vec![2.0]);
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let s = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert_eq!(percentile(&s, 95.0), 4.0);
+        assert_eq!(percentile(&s, 99.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn poisson_streams_are_per_tenant_and_deterministic() {
+        let cfg = cfg2();
+        let a = poisson_calls(&cfg);
+        let b = poisson_calls(&cfg);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.arrival.to_bits() == y.arrival.to_bits() && x.tenant == y.tenant));
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(a.iter().all(|c| c.arrival < cfg.seconds));
+        // Dropping a tenant leaves the survivor's stream untouched.
+        let solo = ServeConfig { tenants: vec![cfg.tenants[0].clone()], ..cfg.clone() };
+        let sa = poisson_calls(&solo);
+        let first: Vec<u64> = a
+            .iter()
+            .filter(|c| c.tenant == 0)
+            .map(|c| c.arrival.to_bits())
+            .collect();
+        let solo_bits: Vec<u64> = sa.iter().map(|c| c.arrival.to_bits()).collect();
+        assert_eq!(first, solo_bits);
+    }
+
+    #[test]
+    fn serve_end_to_end_is_deterministic_and_reports_percentiles() {
+        let cfg = cfg2();
+        let r1 = serve(&cfg).unwrap();
+        let r2 = serve(&cfg).unwrap();
+        assert_eq!(r1.total_calls, r2.total_calls);
+        assert!(r1.total_calls > 0);
+        assert!(r1.offered_load > 0.0);
+        for (a, b) in r1.tenants.iter().zip(&r2.tenants) {
+            assert_eq!(a.p50.to_bits(), b.p50.to_bits());
+            assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits());
+            assert!(a.p50 <= a.p95 && a.p95 <= a.p99, "{}: percentile order", a.name);
+            // Latency can never beat the bare demand (tolerance: the
+            // completion-minus-arrival subtraction rounds at ~1 ulp of
+            // the arrival clock).
+            assert!(a.p50 >= a.demand * (1.0 - 1e-9), "{} p50 < demand", a.name);
+        }
+        assert!(r1.drain > 0.0);
+    }
+
+    #[test]
+    fn balanced_tenants_serve_through_their_handles() {
+        // The persistent-only composition is a legal tenant algo: the
+        // serving engine runs everything through PersistentColl.
+        let cfg = ServeConfig {
+            tenants: vec![tenant(
+                "bal",
+                30.0,
+                AlgoKind::Hier { local: LocalAlgo::Balanced, global: GlobalAlgo::Linear },
+            )],
+            ..cfg2()
+        };
+        let r = serve(&cfg).unwrap();
+        assert!(r.tenants[0].calls > 0);
+        assert!(r.tenants[0].demand > 0.0);
+    }
+
+    #[test]
+    fn tighter_pace_never_reduces_queueing_below_zero_and_validates() {
+        let cfg = cfg2();
+        let demands = measure_tenants(&cfg).unwrap();
+        let free = simulate(&cfg, &demands);
+        let paced = simulate(&ServeConfig { pace: 1, ..cfg.clone() }, &demands);
+        // Same arrivals either way; the knob only changes scheduling.
+        assert_eq!(free.total_calls, paced.total_calls);
+        // Bad configs are typed errors.
+        assert!(ServeConfig { tenants: vec![], ..cfg.clone() }.validate().is_err());
+        assert!(ServeConfig { seconds: 0.0, ..cfg.clone() }.validate().is_err());
+        let mut bad = cfg;
+        bad.tenants[0].rate = 0.0;
+        assert!(bad.validate().is_err());
+    }
+}

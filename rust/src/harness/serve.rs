@@ -1,0 +1,396 @@
+//! `tuna serve` — the multi-tenant serving harness.
+//!
+//! Builds a heterogeneous tenant mix (cycling distributions, alternating
+//! process counts, algorithms drawn from the persistent menu — the
+//! balanced local schedule included where the topology allows it),
+//! measures each tenant's per-call demand through its
+//! [`PersistentColl`]-backed handle, simulates Poisson traffic through
+//! the shared serving engine ([`crate::coordinator::serve`]), prints the
+//! per-tenant p50/p95/p99 table, and writes `BENCH_serve.json` with the
+//! same numbers plus a pace sweep of the admission knob.
+
+use std::path::PathBuf;
+
+use crate::algos::{AlgoKind, GlobalAlgo, LocalAlgo};
+use crate::coordinator::serve::{measure_tenants, simulate, ServeConfig, ServeReport, TenantSpec};
+use crate::error::{Result, TunaError};
+use crate::model::MachineProfile;
+use crate::util::stats::fmt_time;
+use crate::util::table::Table;
+use crate::workload::Dist;
+
+/// CLI arguments of `tuna serve`.
+#[derive(Clone, Debug)]
+pub struct ServeArgs {
+    /// Tenant count.
+    pub tenants: usize,
+    /// Base process count (odd-indexed tenants run at P/2 when the
+    /// topology allows, so the mix is heterogeneous in scale too).
+    pub p: usize,
+    pub q: usize,
+    /// Arrival horizon, simulated seconds.
+    pub seconds: f64,
+    /// Target offered load Σ rate·demand (each tenant gets an equal
+    /// share: its rate is `load / (tenants · demand)`).
+    pub load: f64,
+    /// Admission-control knob: max concurrently admitted calls
+    /// (0 = unlimited processor sharing).
+    pub pace: usize,
+    pub seed: u64,
+    pub profile: MachineProfile,
+    /// Output path for the JSON artifact.
+    pub out: PathBuf,
+    /// Smoke mode: lighter default load and a shorter pace sweep.
+    pub quick: bool,
+}
+
+impl Default for ServeArgs {
+    fn default() -> Self {
+        ServeArgs {
+            tenants: 4,
+            p: 1024,
+            q: 16,
+            seconds: 5.0,
+            load: 0.7,
+            pace: 0,
+            seed: 0xC0FFEE,
+            profile: MachineProfile::fugaku(),
+            out: PathBuf::from("BENCH_serve.json"),
+            quick: false,
+        }
+    }
+}
+
+impl ServeArgs {
+    /// Parse `tenants=4 p=1024 q=16 seconds=2 load=0.7 pace=0 seed=7
+    /// profile=fugaku out=BENCH_serve.json` plus the `--quick` flag.
+    pub fn parse(args: &[String]) -> Result<ServeArgs> {
+        let mut a = ServeArgs::default();
+        let mut load_given = false;
+        for arg in args {
+            if arg == "--quick" {
+                a.quick = true;
+                continue;
+            }
+            let (k, v) = arg
+                .split_once('=')
+                .ok_or_else(|| TunaError::config(format!("expected key=value, got `{arg}`")))?;
+            let num = |v: &str| -> Result<usize> {
+                v.parse()
+                    .map_err(|_| TunaError::config(format!("bad number for {k}: `{v}`")))
+            };
+            let fnum = |v: &str| -> Result<f64> {
+                v.parse()
+                    .map_err(|_| TunaError::config(format!("bad number for {k}: `{v}`")))
+            };
+            match k {
+                "tenants" => a.tenants = num(v)?,
+                "p" => a.p = num(v)?,
+                "q" => a.q = num(v)?,
+                "seconds" => a.seconds = fnum(v)?,
+                "load" => {
+                    a.load = fnum(v)?;
+                    load_given = true;
+                }
+                "pace" => a.pace = num(v)?,
+                "seed" => a.seed = num(v)? as u64,
+                "profile" => {
+                    a.profile = MachineProfile::by_name(v).ok_or_else(|| {
+                        TunaError::config(format!(
+                            "unknown profile `{v}` (try polaris, fugaku, test-flat)"
+                        ))
+                    })?
+                }
+                "out" => a.out = PathBuf::from(v),
+                _ => return Err(TunaError::config(format!("unknown serve key `{k}`"))),
+            }
+        }
+        if a.quick && !load_given {
+            a.load = 0.5;
+        }
+        if a.tenants == 0 {
+            return Err(TunaError::config("serve: tenants must be >= 1"));
+        }
+        if !(a.load > 0.0) {
+            return Err(TunaError::config("serve: load must be > 0"));
+        }
+        crate::comm::Topology::try_new(a.p, a.q)?;
+        Ok(a)
+    }
+}
+
+/// The algorithm menu tenants cycle through: the persistent-only
+/// balanced composition deliberately included (the serving engine runs
+/// everything through persistent handles, which is the only path that
+/// admits it), filtered to what this (P, Q) topology can run.
+fn algo_menu(p: usize, q: usize) -> Vec<AlgoKind> {
+    let menu = [
+        AlgoKind::Tuna { radix: 4 },
+        AlgoKind::Hier { local: LocalAlgo::Balanced, global: GlobalAlgo::Linear },
+        AlgoKind::SpreadOut,
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix: 2 },
+            global: GlobalAlgo::Coalesced { block_count: 1 },
+        },
+        AlgoKind::Bruck2,
+        AlgoKind::Pairwise,
+    ];
+    let mut out: Vec<AlgoKind> = menu.into_iter().filter(|k| k.check(p, q).is_ok()).collect();
+    if out.is_empty() {
+        out.push(AlgoKind::SpreadOut);
+    }
+    out
+}
+
+/// Build the heterogeneous tenant mix: distributions cycle, odd tenants
+/// drop to P/2 where the topology allows, algorithms cycle through
+/// [`algo_menu`]. Rates are provisional (1.0) — [`run`] rebalances them
+/// to the target offered load once demands are measured.
+pub fn default_tenants(a: &ServeArgs) -> Vec<TenantSpec> {
+    let dists = [
+        Dist::Uniform { max: 1024 },
+        Dist::normal_default(),
+        Dist::powerlaw_default(),
+        Dist::Sparse { nnz: 8, max: 1024 },
+    ];
+    (0..a.tenants)
+        .map(|i| {
+            let half = a.p / 2;
+            let p = if i % 2 == 1 && half >= a.q && half % a.q == 0 && half >= 2 {
+                half
+            } else {
+                a.p
+            };
+            let menu = algo_menu(p, a.q);
+            TenantSpec {
+                name: format!("t{i}"),
+                p,
+                q: a.q,
+                dist: dists[i % dists.len()],
+                algo: menu[i % menu.len()],
+                rate: 1.0,
+                seed: a.seed.wrapping_add(i as u64),
+            }
+        })
+        .collect()
+}
+
+/// Pace values the JSON artifact sweeps (reusing the measured demands)
+/// so the admission knob's effect is visible without re-running.
+fn pace_sweep(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![0, 4]
+    } else {
+        vec![0, 1, 2, 4, 8]
+    }
+}
+
+/// Run the serving harness: measure demands, balance rates to the target
+/// offered load, simulate, and return the report with its table and JSON.
+pub fn run(a: &ServeArgs) -> Result<(ServeReport, Table, String)> {
+    let mut cfg = ServeConfig {
+        tenants: default_tenants(a),
+        profile: a.profile.clone(),
+        seconds: a.seconds,
+        pace: a.pace,
+        seed: a.seed,
+    };
+    let demands = measure_tenants(&cfg)?;
+    // Equal offered-load share per tenant: Σ rate·demand == a.load.
+    for (t, &d) in cfg.tenants.iter_mut().zip(&demands) {
+        t.rate = a.load / (a.tenants as f64 * d.max(1e-30));
+    }
+    let report = simulate(&cfg, &demands);
+
+    let mut table = Table::new(
+        format!(
+            "tuna serve — {} tenants on {} (load {:.2}, pace {})",
+            a.tenants,
+            a.profile.name,
+            a.load,
+            if a.pace == 0 { "unlimited".to_string() } else { a.pace.to_string() },
+        ),
+        &["tenant", "algo", "P", "Q", "dist", "calls", "demand", "p50", "p95", "p99"],
+    );
+    for t in &report.tenants {
+        table.row(vec![
+            t.name.clone(),
+            t.algo.clone(),
+            t.p.to_string(),
+            t.q.to_string(),
+            t.dist.clone(),
+            t.calls.to_string(),
+            fmt_time(t.demand),
+            fmt_time(t.p50),
+            fmt_time(t.p95),
+            fmt_time(t.p99),
+        ]);
+    }
+    table.note(format!(
+        "offered load {:.3}; {} calls over {:.1}s horizon, drained at {:.3}s",
+        report.offered_load, report.total_calls, report.seconds, report.drain
+    ));
+    table.note(
+        "demands measured once per tenant through a persistent handle; \
+         latencies include queueing under processor-sharing contention",
+    );
+
+    let json = to_json(a, &cfg, &demands, &report);
+    Ok((report, table, json))
+}
+
+fn fmt_f(v: f64) -> String {
+    format!("{v:.9e}")
+}
+
+/// Hand-rolled JSON (the crate deliberately has no serde dependency).
+fn to_json(a: &ServeArgs, cfg: &ServeConfig, demands: &[f64], report: &ServeReport) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"config\": {{\"tenants\": {}, \"p\": {}, \"q\": {}, \"seconds\": {}, \
+         \"load\": {}, \"pace\": {}, \"seed\": {}, \"profile\": \"{}\", \"quick\": {}}},\n",
+        a.tenants, a.p, a.q, a.seconds, a.load, a.pace, a.seed, a.profile.name, a.quick
+    ));
+    s.push_str(&format!("  \"offered_load\": {},\n", fmt_f(report.offered_load)));
+    s.push_str(&format!("  \"total_calls\": {},\n", report.total_calls));
+    s.push_str(&format!("  \"drain_s\": {},\n", fmt_f(report.drain)));
+    s.push_str("  \"tenants\": [\n");
+    for (i, t) in report.tenants.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"algo\": \"{}\", \"p\": {}, \"q\": {}, \
+             \"dist\": \"{}\", \"rate_hz\": {}, \"demand_s\": {}, \"calls\": {}, \
+             \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \"mean_s\": {}, \"max_s\": {}}}{}\n",
+            t.name,
+            t.algo,
+            t.p,
+            t.q,
+            t.dist,
+            fmt_f(t.rate),
+            fmt_f(t.demand),
+            t.calls,
+            fmt_f(t.p50),
+            fmt_f(t.p95),
+            fmt_f(t.p99),
+            fmt_f(t.mean),
+            fmt_f(t.max),
+            if i + 1 < report.tenants.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    // The admission knob, swept over the same arrivals and demands: the
+    // aggregate worst p99 per pace value shows what pacing buys (or
+    // costs) without re-measuring anything.
+    s.push_str("  \"pace_sweep\": [\n");
+    let paces = pace_sweep(a.quick);
+    for (i, &pace) in paces.iter().enumerate() {
+        let r = simulate(&ServeConfig { pace, ..cfg.clone() }, demands);
+        let worst_p99 = r.tenants.iter().map(|t| t.p99).fold(0.0, f64::max);
+        let worst_p50 = r.tenants.iter().map(|t| t.p50).fold(0.0, f64::max);
+        s.push_str(&format!(
+            "    {{\"pace\": {}, \"worst_p50_s\": {}, \"worst_p99_s\": {}, \"drain_s\": {}}}{}\n",
+            pace,
+            fmt_f(worst_p50),
+            fmt_f(worst_p99),
+            fmt_f(r.drain),
+            if i + 1 < paces.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// CLI entry: parse, run, print the table, write the JSON artifact.
+pub fn cmd(args: &[String]) -> Result<()> {
+    let a = ServeArgs::parse(args)?;
+    let (report, table, json) = run(&a)?;
+    println!("{}", table.render());
+    std::fs::write(&a.out, &json)?;
+    println!(
+        "serve: {} calls, offered load {:.3}, artifact {}",
+        report.total_calls,
+        report.offered_load,
+        a.out.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_serve_args() {
+        let a = ServeArgs::parse(&args("tenants=4 p=64 q=8 seconds=2 load=0.6 pace=2 seed=9"))
+            .unwrap();
+        assert_eq!(a.tenants, 4);
+        assert_eq!((a.p, a.q), (64, 8));
+        assert_eq!(a.seconds, 2.0);
+        assert_eq!(a.load, 0.6);
+        assert_eq!(a.pace, 2);
+        assert!(!a.quick);
+        let q = ServeArgs::parse(&args("--quick tenants=2 p=16 q=4")).unwrap();
+        assert!(q.quick);
+        assert_eq!(q.load, 0.5, "quick lowers the default load");
+        assert!(ServeArgs::parse(&args("tenants=0")).is_err());
+        assert!(ServeArgs::parse(&args("p=10 q=4")).is_err());
+        assert!(ServeArgs::parse(&args("pace=lots")).is_err());
+        assert!(ServeArgs::parse(&args("bogus=1")).is_err());
+    }
+
+    #[test]
+    fn tenant_mix_is_heterogeneous() {
+        let a = ServeArgs {
+            tenants: 4,
+            p: 32,
+            q: 4,
+            ..ServeArgs::default()
+        };
+        let ts = default_tenants(&a);
+        assert_eq!(ts.len(), 4);
+        // Odd tenants drop to P/2; distributions cycle; every algo is
+        // runnable on its tenant's topology.
+        assert_eq!(ts[0].p, 32);
+        assert_eq!(ts[1].p, 16);
+        let dists: std::collections::HashSet<&str> =
+            ts.iter().map(|t| t.dist.name()).collect();
+        assert!(dists.len() >= 3, "distribution mix too homogeneous");
+        for t in &ts {
+            t.algo.check(t.p, t.q).unwrap();
+        }
+        // The persistent-only balanced composition is in the mix.
+        assert!(
+            ts.iter().any(|t| t.algo.persistent_only()),
+            "balanced composition missing from the tenant mix"
+        );
+    }
+
+    #[test]
+    fn serve_harness_end_to_end() {
+        let a = ServeArgs {
+            tenants: 3,
+            p: 16,
+            q: 4,
+            seconds: 0.2,
+            load: 0.5,
+            profile: MachineProfile::test_flat(),
+            quick: true,
+            ..ServeArgs::default()
+        };
+        let (report, table, json) = run(&a).unwrap();
+        assert_eq!(report.tenants.len(), 3);
+        assert!(report.total_calls > 0);
+        // Rates were balanced to the target offered load exactly:
+        // Σ (load / (n·dᵢ)) · dᵢ == load up to rounding.
+        assert!((report.offered_load - 0.5).abs() < 1e-9, "load {}", report.offered_load);
+        assert_eq!(table.rows.len(), 3);
+        assert!(json.contains("\"pace_sweep\""));
+        assert!(json.contains("\"p99_s\""));
+        // Deterministic end to end.
+        let (_, _, json2) = run(&a).unwrap();
+        assert_eq!(json, json2);
+    }
+}

@@ -7,16 +7,20 @@
 //!            the engine, persist a tuning table (TunaSelect)
 //!   tune     table-backed autotune: answer from artifacts/tuning/ when a
 //!            snapshot exists, full selection otherwise
+//!   serve    multi-tenant serving: N tenants with persistent handles,
+//!            Poisson traffic through one shared engine, p50/p95/p99
 //!   tc       distributed transitive closure on a synthetic graph
 //!   fft      distributed 4-step FFT through the PJRT runtime
 //!   list     list algorithms, profiles and distributions
 //!
 //! Examples:
 //!   tuna run algo=tuna:r=8 p=128 q=16 profile=fugaku dist=uniform:1024
+//!   tuna run algo=tuna:r=8 p=256 q=16 persistent=true
 //!   tuna figure fig8 --full
 //!   tuna select p=256 q=32 dist=uniform:512 shortlist=8
 //!   tuna select --write-golden
 //!   tuna tune p=256 q=32 dist=uniform:512
+//!   tuna serve tenants=4 p=1024 q=16 seconds=5 load=0.7
 //!   tuna tc p=8 q=4 algo=hier:l=tuna:r=2,g=coalesced:b=1
 //!   tuna fft n1=64 n2=64 p=8 algo=tuna:r=4
 
@@ -51,6 +55,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "figure" => cmd_figure(rest),
         "select" => cmd_select(rest),
         "tune" => cmd_tune(rest),
+        "serve" => harness::serve::cmd(rest),
         "tc" => cmd_tc(rest),
         "fft" => cmd_fft(rest),
         "list" => cmd_list(),
@@ -79,6 +84,16 @@ USAGE:
   tuna select --write-golden               regenerate tests/golden snapshots
   tuna tune [key=value ...]                table-backed autotune (force=true
                                            to ignore stored tables)
+  tuna serve [--quick] [tenants=4] [p=1024] [q=16] [seconds=5] [load=0.7]
+                                           [pace=0] [seed=N] [profile=..]
+                                           [out=BENCH_serve.json]
+                                           multi-tenant serving: each tenant
+                                           freezes its collective in a
+                                           persistent handle, Poisson calls
+                                           share one engine; reports per-tenant
+                                           p50/p95/p99 and writes a JSON
+                                           artifact with a pace (admission
+                                           knob) sweep. --quick = CI smoke.
   tuna tc [n=220] [algo=<spec>] [key=value ...]
   tuna fft [n1=64] [n2=64] [algo=<spec>] [key=value ...]
   tuna list                                list algorithms / profiles / dists
@@ -95,14 +110,20 @@ CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   mode=replay`; structurally sparse workloads compile O(nnz)-op plans
   and shard the replay loop, so exact replay reaches P=65536+, e.g.
   `tuna run dist=sparse:nnz=16 algo=hier:l=tuna:r=4,g=coalesced:b=2
-  p=65536 q=64 mode=replay replay-shards=4`)
+  p=65536 q=64 mode=replay replay-shards=4`),
+  persistent (true|false: freeze the workload at `seed` and measure
+  through one persistent handle — plan compilation, payload arenas and
+  transposes are built once and reused by every iteration; also the only
+  way to run the persistent-only hier local `balanced` schedule)
 SELECT KEYS: shortlist (engine-refined candidates, default 6),
   refine (true|false), skewed (true|false: also stress the shortlist
   under a heavy-tailed companion workload), top (rows printed),
   table-dir, golden-dir
 ALGO SPECS: spread-out | ompi-linear | pairwise | scattered:b=N | vendor |
   bruck2 | tuna:r=N | tuna:auto | hier:l=<local>,g=<global>
-  hier locals:  tuna:r=N | linear
+  hier locals:  tuna:r=N | linear (one-shot) | balanced (persistent-only:
+                constructed through a persistent handle, e.g. `tuna run
+                persistent=true`; never parseable in a one-shot spec)
   hier globals: coalesced:b=N | staggered:b=N | linear | bruck:r=N
   (legacy aliases: tuna-hier-coalesced:r=N,b=M = hier:l=tuna:r=N,g=coalesced:b=M,
    tuna-hier-staggered:r=N,b=M = hier:l=tuna:r=N,g=staggered:b=M)
@@ -470,6 +491,7 @@ fn cmd_list() -> Result<()> {
         "tuna:r=N",
         "tuna:auto",
         "hier:l=<tuna:r=N|linear>,g=<coalesced:b=N|staggered:b=N|linear|bruck:r=N>",
+        "hier local `balanced` (persistent-only: via `tuna run persistent=true` or `tuna serve`)",
         "tuna-hier-coalesced:r=N,b=M (alias for hier:l=tuna:r=N,g=coalesced:b=M)",
         "tuna-hier-staggered:r=N,b=M (alias for hier:l=tuna:r=N,g=staggered:b=M)",
     ] {

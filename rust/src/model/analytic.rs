@@ -207,7 +207,11 @@ impl<'a> Estimator<'a> {
                     None,
                 );
             }
-            LocalAlgo::Linear => {
+            // Balanced posts the same Q−1 messages as Linear in a
+            // different order; the per-rank expected cost is identical
+            // under the mean-size model (the reorder only helps the
+            // exact simulation's tail slots).
+            LocalAlgo::Linear | LocalAlgo::Balanced => {
                 let t1 = clock.now;
                 let bytes = (n as f64 * s).round() as u64;
                 let mut mirror = Vec::with_capacity(q - 1);
@@ -482,7 +486,9 @@ impl<'a> Estimator<'a> {
                     None,
                 );
             }
-            LocalAlgo::Linear => {
+            // Balanced = the same burst in heavy-first order; identical
+            // expected cost under the mean-size model.
+            LocalAlgo::Linear | LocalAlgo::Balanced => {
                 // Q-1 direct slot deliveries of N sub-blocks each, one
                 // burst, one waitall — no metadata rounds, no T.
                 let t1 = clock.now;

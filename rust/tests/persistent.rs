@@ -1,0 +1,228 @@
+//! Persistent-handle contract (PR 7): a [`PersistentColl`] must be a
+//! pure amortization — every `start` call is **bit-identical** (makespan,
+//! phase breakdown, counters, schedule stats) to the equivalent one-shot
+//! `run_alltoallv` / `run_alltoallv_replay` invocation, across every
+//! algorithm family, dense and sparse workloads, and both executors.
+//! The only observable differences a handle is allowed are the ones it
+//! exists for:
+//!
+//! * setup cost paid once at `init` instead of per call (plan
+//!   compilation, transpose, fingerprints, payload arena);
+//! * real-payload host copies amortized: one-shot runs copy
+//!   2 x total_bytes (build + deliver), persistent starts copy
+//!   total_bytes (the arena is built at init, deliveries still copy);
+//! * access to the persistent-only `hier` local `balanced` schedule,
+//!   which no one-shot entry point will run.
+//!
+//! Misuse (stale counts after the app regenerated its workload) must be
+//! a typed [`TunaError`], never a panic.
+
+use tuna::algos::{
+    run_alltoallv, run_alltoallv_replay, AlgoKind, ExecMode, GlobalAlgo, LocalAlgo, RunReport,
+};
+use tuna::comm::{Engine, PersistentColl, Topology};
+use tuna::model::MachineProfile;
+use tuna::workload::{BlockSizes, Dist};
+use tuna::TunaError;
+
+fn engine(p: usize, q: usize) -> Engine {
+    Engine::new(MachineProfile::fugaku(), Topology::new(p, q))
+}
+
+/// One representative per family, plus hier compositions covering every
+/// global level (all legal at P = 12, Q = 4 → N = 3 nodes).
+fn family_menu() -> Vec<AlgoKind> {
+    vec![
+        AlgoKind::SpreadOut,
+        AlgoKind::OmpiLinear,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 2 },
+        AlgoKind::Bruck2,
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::TunaAuto,
+        AlgoKind::hier_coalesced(2, 2),
+        AlgoKind::hier_staggered(2, 1),
+        AlgoKind::Hier {
+            local: LocalAlgo::Linear,
+            global: GlobalAlgo::Bruck { radix: 2 },
+        },
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix: 2 },
+            global: GlobalAlgo::Linear,
+        },
+    ]
+}
+
+fn assert_reports_identical(kind: &AlgoKind, a: &RunReport, b: &RunReport) {
+    let name = kind.name();
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{name}: makespan {} vs {}",
+        a.makespan,
+        b.makespan
+    );
+    assert_eq!(a.phases, b.phases, "{name}: phase breakdown");
+    assert_eq!(a.counters, b.counters, "{name}: counters");
+    assert_eq!(a.t_peak, b.t_peak, "{name}: t_peak");
+    assert_eq!(a.rounds, b.rounds, "{name}: rounds");
+}
+
+#[test]
+fn every_start_matches_the_one_shot_run_threaded() {
+    let e = engine(12, 4);
+    for dist in [
+        Dist::Uniform { max: 512 },
+        Dist::Sparse { nnz: 4, max: 512 },
+    ] {
+        let sizes = BlockSizes::generate(12, dist, 9);
+        for kind in family_menu() {
+            let oneshot = run_alltoallv(&e, &kind, &sizes, false).expect("one-shot threaded");
+            let h = PersistentColl::init(&e, kind, &sizes, false, ExecMode::Threaded)
+                .expect("persistent init");
+            for _ in 0..3 {
+                let rep = h.start(&sizes).expect("persistent start");
+                assert_reports_identical(h.kind(), &oneshot, &rep);
+                assert!(rep.validated);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_start_matches_the_one_shot_run_replay() {
+    let e = engine(12, 4);
+    for dist in [
+        Dist::Uniform { max: 512 },
+        Dist::Sparse { nnz: 4, max: 512 },
+    ] {
+        let sizes = BlockSizes::generate(12, dist, 9);
+        for kind in family_menu() {
+            let oneshot = run_alltoallv_replay(&e, &kind, &sizes).expect("one-shot replay");
+            let h = PersistentColl::init(&e, kind, &sizes, false, ExecMode::Replay)
+                .expect("persistent init");
+            assert!(h.plan().is_some());
+            for _ in 0..3 {
+                let rep = h.start(&sizes).expect("persistent start");
+                assert_reports_identical(h.kind(), &oneshot, &rep);
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_and_replay_handles_agree() {
+    let e = engine(12, 4);
+    let sizes = BlockSizes::generate(12, Dist::Uniform { max: 256 }, 3);
+    for kind in family_menu() {
+        let t = PersistentColl::init(&e, kind, &sizes, false, ExecMode::Threaded)
+            .unwrap()
+            .start_frozen()
+            .unwrap();
+        let r = PersistentColl::init(&e, kind, &sizes, false, ExecMode::Replay)
+            .unwrap()
+            .start_frozen()
+            .unwrap();
+        assert_reports_identical(&kind, &t, &r);
+    }
+}
+
+#[test]
+fn stale_counts_are_a_typed_error_not_a_panic() {
+    let e = engine(8, 2);
+    let sizes = BlockSizes::generate(8, Dist::Uniform { max: 128 }, 1);
+    let h = PersistentColl::init(&e, AlgoKind::Tuna { radix: 2 }, &sizes, false, ExecMode::Auto)
+        .unwrap();
+
+    // Same shape, regenerated counts: the classic stale-handle misuse.
+    let drifted = BlockSizes::generate(8, Dist::Uniform { max: 128 }, 2);
+    let err = h.start(&drifted).unwrap_err();
+    assert!(matches!(err, TunaError::Config(_)), "{err}");
+    assert!(err.to_string().contains("frozen at init"), "{err}");
+
+    // Wrong P entirely.
+    let wrong_p = BlockSizes::generate(4, Dist::Uniform { max: 128 }, 1);
+    assert!(matches!(h.start(&wrong_p).unwrap_err(), TunaError::Config(_)));
+
+    // The handle is not poisoned by rejected starts.
+    let good = h.start(&sizes).unwrap();
+    assert!(good.validated);
+}
+
+#[test]
+fn balanced_local_schedule_is_persistent_only() {
+    // The spec never parses: tuning tables and golden grids cannot
+    // carry the kind, so it can only enter through a handle.
+    assert!(LocalAlgo::parse("balanced").is_err());
+    let parse_err = AlgoKind::parse("hier:l=balanced,g=linear").unwrap_err().to_string();
+    assert!(parse_err.contains("persistent-only"), "{parse_err}");
+
+    let balanced = AlgoKind::Hier {
+        local: LocalAlgo::Balanced,
+        global: GlobalAlgo::Linear,
+    };
+    let e = engine(12, 4);
+    // Skewed blocks so the heavy-first drain order is not the identity.
+    let sizes = BlockSizes::generate(12, Dist::Sparse { nnz: 6, max: 1024 }, 11);
+
+    // Both one-shot entry points refuse the kind.
+    let err = run_alltoallv(&e, &balanced, &sizes, false).unwrap_err().to_string();
+    assert!(err.contains("persistent-only"), "{err}");
+    let err = run_alltoallv_replay(&e, &balanced, &sizes).unwrap_err().to_string();
+    assert!(err.contains("persistent-only"), "{err}");
+
+    // A handle is the authorization: both executors run it, repeated
+    // starts are stable, and threaded and replay agree bit for bit.
+    let t = PersistentColl::init(&e, balanced, &sizes, false, ExecMode::Threaded).unwrap();
+    let r = PersistentColl::init(&e, balanced, &sizes, false, ExecMode::Replay).unwrap();
+    let t1 = t.start_frozen().unwrap();
+    let t2 = t.start_frozen().unwrap();
+    let r1 = r.start_frozen().unwrap();
+    assert_reports_identical(&balanced, &t1, &t2);
+    assert_reports_identical(&balanced, &t1, &r1);
+    assert!(t1.validated);
+}
+
+#[test]
+fn real_mode_persistent_amortizes_host_copies() {
+    let e = engine(8, 2);
+    let sizes = BlockSizes::generate(8, Dist::Uniform { max: 256 }, 5);
+    let total = sizes.total_bytes();
+    for kind in [AlgoKind::Tuna { radix: 2 }, AlgoKind::SpreadOut] {
+        // One-shot real mode builds the payloads (total_bytes) and
+        // delivers them (total_bytes again): the 2x zero-copy invariant.
+        let oneshot = run_alltoallv(&e, &kind, &sizes, true).unwrap();
+        assert_eq!(oneshot.counters.copied_bytes, 2 * total, "{}", kind.name());
+
+        // Persistent real mode builds the arena once at init; every
+        // start only pays the delivery copies. Timing is unchanged.
+        let h = PersistentColl::init(&e, kind, &sizes, true, ExecMode::Auto).unwrap();
+        assert_eq!(h.mode(), ExecMode::Threaded);
+        for _ in 0..2 {
+            let rep = h.start_frozen().unwrap();
+            assert_eq!(rep.counters.copied_bytes, total, "{}", kind.name());
+            assert_eq!(
+                rep.makespan.to_bits(),
+                oneshot.makespan.to_bits(),
+                "{}: real-mode persistent makespan drifted",
+                kind.name()
+            );
+            assert!(rep.validated);
+        }
+    }
+}
+
+#[test]
+fn replay_handles_are_phantom_only_and_auto_resolves() {
+    let e = engine(8, 2);
+    let sizes = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 2);
+    let err = PersistentColl::init(&e, AlgoKind::Bruck2, &sizes, true, ExecMode::Replay)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("phantom-only"), "{err}");
+    // Phantom + Auto resolves to replay and shares the engine plan cache.
+    let h = PersistentColl::init(&e, AlgoKind::Bruck2, &sizes, false, ExecMode::Auto).unwrap();
+    assert_eq!(h.mode(), ExecMode::Replay);
+    assert!(h.shards() >= 1);
+    assert!(h.start(&sizes).is_ok());
+}
