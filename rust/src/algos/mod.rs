@@ -662,7 +662,13 @@ pub(crate) fn replay_plan_report(
     plan: &Arc<CommPlan>,
     shards: usize,
 ) -> Result<RunReport> {
-    let res = crate::comm::replay::execute_sharded(&engine.profile, engine.topo, plan, shards)?;
+    let res = crate::comm::replay::execute_faulted(
+        &engine.profile,
+        engine.topo,
+        plan,
+        shards,
+        engine.faults.as_deref(),
+    )?;
     Ok(RunReport {
         algo: kind.name(),
         makespan: res.makespan,

@@ -6,6 +6,7 @@
 //! (receive processing is ordered by virtual arrival time, not OS arrival
 //! order — see `Engine::waitall`).
 
+use crate::comm::faults::{FaultLens, NO_PEER};
 use crate::model::{Link, MachineProfile};
 
 /// Communication counters, kept per rank and merged by the harness.
@@ -60,6 +61,17 @@ pub struct Clock {
     /// Sends posted since the last wait — the burst size the congestion
     /// model keys on.
     outstanding_tx: u32,
+    /// Deterministic fault perturbations for this rank (`None` =
+    /// healthy; see `comm::faults` for the zero-perturbation argument).
+    faults: Option<FaultLens>,
+    /// Sends posted over this clock's lifetime — the tx event index the
+    /// fault model keys jitter on. Counts in program order, so both
+    /// executors see identical indices.
+    tx_events: u64,
+    /// Receives drained over this clock's lifetime — the rx event
+    /// index. Drain order is deterministic (`(arrive, src, tag)`), so
+    /// the sequence is executor-independent too.
+    rx_events: u64,
     pub counters: Counters,
 }
 
@@ -74,29 +86,70 @@ pub struct SendTiming {
 
 impl Clock {
     pub fn new() -> Clock {
+        Clock::with_faults(None)
+    }
+
+    /// A clock carrying one rank's fault projection. `None` is exactly
+    /// [`Clock::new`]: the healthy arms multiply by the constant `1.0`,
+    /// which IEEE-754 guarantees returns the operand unchanged, so an
+    /// empty fault spec is bit-identical to a lens-free build.
+    pub fn with_faults(faults: Option<FaultLens>) -> Clock {
         Clock {
             now: 0.0,
             tx_free: 0.0,
             rx_free: 0.0,
             outstanding_tx: 0,
+            faults,
+            tx_events: 0,
+            rx_events: 0,
             counters: Counters::default(),
         }
     }
 
     /// Post a send of `bytes` over `link` in a job of `p` ranks.
     ///
+    /// Peer-less convenience for call sites that never carry a lens
+    /// (the analytic estimator's probe clocks).
+    pub fn post_send(&mut self, prof: &MachineProfile, link: Link, bytes: u64, p: usize) -> SendTiming {
+        self.post_send_to(prof, link, bytes, p, NO_PEER)
+    }
+
+    /// Post a send of `bytes` over `link` to `peer` in a job of `p`
+    /// ranks.
+    ///
     /// Charges the per-message software overhead to program order, then
     /// serializes the payload on the tx port with the burst congestion
-    /// factor applied.
-    pub fn post_send(&mut self, prof: &MachineProfile, link: Link, bytes: u64, p: usize) -> SendTiming {
-        self.now += prof.o_send(link);
+    /// factor applied. With a fault lens, the overhead is scaled by the
+    /// rank's CPU multiplier, serialization and wire latency by the
+    /// link/jitter multipliers keyed on `(peer, tx event index)`, and
+    /// the port start is deferred out of outage windows.
+    pub fn post_send_to(
+        &mut self,
+        prof: &MachineProfile,
+        link: Link,
+        bytes: u64,
+        p: usize,
+        peer: usize,
+    ) -> SendTiming {
+        let (cpu, ser, lat) = match &self.faults {
+            Some(f) => {
+                let (ser, lat) = f.tx(peer, self.tx_events);
+                (f.cpu(), ser, lat)
+            }
+            None => (1.0, 1.0, 1.0),
+        };
+        self.tx_events += 1;
+        self.now += prof.o_send(link) * cpu;
         let factor = match link {
             Link::Local => 1.0,
             Link::Global => prof.congestion.tx_factor(self.outstanding_tx, p as u32),
         };
         self.outstanding_tx += 1;
-        let start = self.now.max(self.tx_free);
-        self.tx_free = start + bytes as f64 * prof.beta(link) * factor;
+        let mut start = self.now.max(self.tx_free);
+        if let Some(f) = &self.faults {
+            start = f.defer(start);
+        }
+        self.tx_free = start + bytes as f64 * prof.beta(link) * factor * ser;
         match link {
             Link::Local => {
                 self.counters.msgs_local += 1;
@@ -109,33 +162,64 @@ impl Clock {
         }
         SendTiming {
             complete: self.tx_free,
-            arrive: self.tx_free + prof.alpha(link),
+            arrive: self.tx_free + prof.alpha(link) * lat,
         }
     }
 
     /// Charge the posting overhead of a receive request (cheap, but real).
     pub fn post_recv(&mut self, prof: &MachineProfile, link: Link) {
+        let cpu = match &self.faults {
+            Some(f) => f.cpu(),
+            None => 1.0,
+        };
         // Posting an irecv costs a fraction of a full receive overhead.
-        self.now += 0.25 * prof.o_recv(link);
+        self.now += 0.25 * prof.o_recv(link) * cpu;
     }
 
     /// Drain a batch of matched receives through the rx port.
     ///
-    /// `msgs` is `(arrive_time, bytes, link)` and MUST be sorted by
-    /// `(arrive_time, tiebreak)` by the caller — the deterministic order.
-    /// Returns per-message completion times. Applies the incast factor
-    /// based on instantaneous queue depth.
+    /// Peer-less convenience; must not be used on a faulted clock (the
+    /// rx perturbations are keyed on the sender).
     pub fn drain_receives(
         &mut self,
         prof: &MachineProfile,
         msgs: &[(f64, u64, Link)],
     ) -> Vec<f64> {
+        debug_assert!(self.faults.is_none(), "faulted clocks must use drain_receives_from");
+        let from: Vec<(f64, u64, Link, usize)> =
+            msgs.iter().map(|&(a, b, l)| (a, b, l, NO_PEER)).collect();
+        self.drain_receives_from(prof, &from)
+    }
+
+    /// Drain a batch of matched receives through the rx port.
+    ///
+    /// `msgs` is `(arrive_time, bytes, link, src)` and MUST be sorted by
+    /// `(arrive_time, tiebreak)` by the caller — the deterministic order.
+    /// Returns per-message completion times. Applies the incast factor
+    /// based on instantaneous queue depth. With a fault lens, each
+    /// message's serialization is scaled by the link/jitter multipliers
+    /// keyed on `(src, rx event index)`, the receive overhead by the
+    /// rank's CPU multiplier, and the port start is deferred out of
+    /// outage windows.
+    pub fn drain_receives_from(
+        &mut self,
+        prof: &MachineProfile,
+        msgs: &[(f64, u64, Link, usize)],
+    ) -> Vec<f64> {
         let mut completions = Vec::with_capacity(msgs.len());
-        for (i, &(arrive, bytes, link)) in msgs.iter().enumerate() {
-            let start = arrive.max(self.rx_free);
+        for (i, &(arrive, bytes, link, src)) in msgs.iter().enumerate() {
+            let (cpu, ser) = match &self.faults {
+                Some(f) => (f.cpu(), f.rx(src, self.rx_events)),
+                None => (1.0, 1.0),
+            };
+            self.rx_events += 1;
+            let mut start = arrive.max(self.rx_free);
+            if let Some(f) = &self.faults {
+                start = f.defer(start);
+            }
             // Queue depth: messages already arrived but not yet drained.
             let mut depth = 1u32;
-            for &(a2, _, _) in msgs[i + 1..].iter() {
+            for &(a2, _, _, _) in msgs[i + 1..].iter() {
                 if a2 <= start {
                     depth += 1;
                 } else {
@@ -146,24 +230,47 @@ impl Clock {
                 Link::Local => 1.0,
                 Link::Global => prof.congestion.rx_factor(depth),
             };
-            self.rx_free = start + bytes as f64 * prof.beta(link) * factor;
-            completions.push(self.rx_free + prof.o_recv(link));
+            self.rx_free = start + bytes as f64 * prof.beta(link) * factor * ser;
+            completions.push(self.rx_free + prof.o_recv(link) * cpu);
         }
         completions
     }
 
     /// Drain exactly one matched receive — `waitall`'s single-receive
-    /// fast path. The arithmetic is bit-identical to
-    /// [`Clock::drain_receives`] on a one-message batch (queue depth is
-    /// necessarily 1), without the completion vector.
+    /// fast path. Peer-less convenience; must not be used on a faulted
+    /// clock.
     pub fn drain_one(&mut self, prof: &MachineProfile, arrive: f64, bytes: u64, link: Link) -> f64 {
-        let start = arrive.max(self.rx_free);
+        debug_assert!(self.faults.is_none(), "faulted clocks must use drain_one_from");
+        self.drain_one_from(prof, arrive, bytes, link, NO_PEER)
+    }
+
+    /// Drain exactly one matched receive from `src`. The arithmetic is
+    /// bit-identical to [`Clock::drain_receives_from`] on a one-message
+    /// batch (queue depth is necessarily 1), without the completion
+    /// vector.
+    pub fn drain_one_from(
+        &mut self,
+        prof: &MachineProfile,
+        arrive: f64,
+        bytes: u64,
+        link: Link,
+        src: usize,
+    ) -> f64 {
+        let (cpu, ser) = match &self.faults {
+            Some(f) => (f.cpu(), f.rx(src, self.rx_events)),
+            None => (1.0, 1.0),
+        };
+        self.rx_events += 1;
+        let mut start = arrive.max(self.rx_free);
+        if let Some(f) = &self.faults {
+            start = f.defer(start);
+        }
         let factor = match link {
             Link::Local => 1.0,
             Link::Global => prof.congestion.rx_factor(1),
         };
-        self.rx_free = start + bytes as f64 * prof.beta(link) * factor;
-        self.rx_free + prof.o_recv(link)
+        self.rx_free = start + bytes as f64 * prof.beta(link) * factor * ser;
+        self.rx_free + prof.o_recv(link) * cpu
     }
 
     /// A wait completed at `t`: advance program order and close the burst.
@@ -172,16 +279,26 @@ impl Clock {
         self.outstanding_tx = 0;
     }
 
-    /// Charge a local memory copy.
+    /// Charge a local memory copy (scaled by the straggler multiplier
+    /// when a fault lens is present).
     pub fn charge_copy(&mut self, prof: &MachineProfile, bytes: u64) {
-        self.now += prof.copy_cost(bytes);
+        let cpu = match &self.faults {
+            Some(f) => f.cpu(),
+            None => 1.0,
+        };
+        self.now += prof.copy_cost(bytes) * cpu;
         self.counters.bytes_copied += bytes;
     }
 
-    /// Charge arbitrary local compute time.
+    /// Charge arbitrary local compute time (scaled by the straggler
+    /// multiplier when a fault lens is present).
     pub fn charge_compute(&mut self, seconds: f64) {
         debug_assert!(seconds >= 0.0);
-        self.now += seconds;
+        let cpu = match &self.faults {
+            Some(f) => f.cpu(),
+            None => 1.0,
+        };
+        self.now += seconds * cpu;
     }
 }
 
@@ -279,6 +396,82 @@ mod tests {
         c.charge_compute(2e-3);
         assert!((c.now - 3e-3).abs() < 1e-12);
         assert_eq!(c.counters.bytes_copied, 1_000_000);
+    }
+
+    #[test]
+    fn lens_free_peer_calls_match_legacy_bit_for_bit() {
+        let p = prof();
+        let mut legacy = Clock::new();
+        let mut peered = Clock::with_faults(None);
+        let a = legacy.post_send(&p, Link::Global, 1000, 64);
+        let b = peered.post_send_to(&p, Link::Global, 1000, 64, 17);
+        assert_eq!(a.complete.to_bits(), b.complete.to_bits());
+        assert_eq!(a.arrive.to_bits(), b.arrive.to_bits());
+        let da = legacy.drain_one(&p, 1e-3, 500, Link::Global);
+        let db = peered.drain_one_from(&p, 1e-3, 500, Link::Global, 17);
+        assert_eq!(da.to_bits(), db.to_bits());
+        let msgs = [(1e-3, 100u64, Link::Global), (1e-3, 100u64, Link::Global)];
+        let from: Vec<_> = msgs.iter().map(|&(a, b, l)| (a, b, l, 3usize)).collect();
+        let va = legacy.drain_receives(&p, &msgs);
+        let vb = peered.drain_receives_from(&p, &from);
+        for (x, y) in va.iter().zip(vb.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(legacy.now.to_bits(), peered.now.to_bits());
+    }
+
+    #[test]
+    fn straggler_lens_scales_cpu_costs() {
+        use crate::comm::faults::{FaultModel, FaultSpec};
+        let p = prof();
+        let spec = FaultSpec::parse("straggler:rank=0,slow=3").unwrap();
+        let model = FaultModel::compile(&spec, 1);
+        let mut c = Clock::with_faults(Some(model.lens(0)));
+        c.post_send_to(&p, Link::Global, 0, 4, 1);
+        // o_send = 1e-7, tripled.
+        assert!((c.now - 3e-7).abs() < 1e-15, "{}", c.now);
+        c.charge_compute(1e-3);
+        assert!((c.now - (3e-7 + 3e-3)).abs() < 1e-12, "{}", c.now);
+        // An unaffected rank is bit-identical to a healthy clock.
+        let mut healthy = Clock::new();
+        let mut other = Clock::with_faults(Some(model.lens(1)));
+        let a = healthy.post_send(&p, Link::Global, 4096, 4);
+        let b = other.post_send_to(&p, Link::Global, 4096, 4, 0);
+        assert_eq!(a.arrive.to_bits(), b.arrive.to_bits());
+    }
+
+    #[test]
+    fn link_lens_scales_serialization_and_latency() {
+        use crate::comm::faults::{FaultModel, FaultSpec};
+        let p = prof();
+        // Nodes of one rank each; degrade the 0-1 link to 1/4 bandwidth
+        // and 2x latency.
+        let spec = FaultSpec::parse("link:node=0-1,bw=0.25,lat=2").unwrap();
+        let model = FaultModel::compile(&spec, 1);
+        let mut c = Clock::with_faults(Some(model.lens(0)));
+        let t = c.post_send_to(&p, Link::Global, 1000, 4, 1);
+        // o_send 1e-7 + 1000 B * 1e-9 * 4 = 4.1e-6 complete; + 2e-6 arrive.
+        assert!((t.complete - 4.1e-6).abs() < 1e-14, "{}", t.complete);
+        assert!((t.arrive - 6.1e-6).abs() < 1e-14, "{}", t.arrive);
+        // A send to an untouched node is unperturbed.
+        let mut c2 = Clock::with_faults(Some(model.lens(0)));
+        let t2 = c2.post_send_to(&p, Link::Global, 1000, 4, 2);
+        assert!((t2.complete - 1.1e-6).abs() < 1e-14, "{}", t2.complete);
+    }
+
+    #[test]
+    fn outage_defers_port_starts() {
+        use crate::comm::faults::{FaultModel, FaultSpec};
+        let p = prof();
+        let spec = FaultSpec::parse("outage:node=0,from=0,until=0.5").unwrap();
+        let model = FaultModel::compile(&spec, 1);
+        let mut c = Clock::with_faults(Some(model.lens(0)));
+        let t = c.post_send_to(&p, Link::Global, 1000, 4, 1);
+        // Serialization starts at 0.5, not at o_send.
+        assert!((t.complete - (0.5 + 1e-6)).abs() < 1e-12, "{}", t.complete);
+        let done = c.drain_one_from(&p, 0.1, 1000, Link::Global, 1);
+        // rx start deferred from max(0.1, rx_free=0) to 0.5.
+        assert!((done - (0.5 + 1e-6 + 1e-7)).abs() < 1e-12, "{done}");
     }
 
     #[test]

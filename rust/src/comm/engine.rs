@@ -234,7 +234,7 @@ impl<'e> RankCtx<'e> {
     fn isend_impl(&mut self, dst: usize, tag: u32, payload: Payload) -> SendReq {
         let link = self.topo.link(self.rank, dst);
         let bytes = payload.wire_bytes();
-        let timing = self.clock.post_send(self.profile, link, bytes, self.size());
+        let timing = self.clock.post_send_to(self.profile, link, bytes, self.size(), dst);
         self.mailboxes[dst].push(
             self.rank as u32,
             tag,
@@ -279,7 +279,9 @@ impl<'e> RankCtx<'e> {
         if let [r] = recvs {
             let msg = self.mailboxes[self.rank].pop_one((r.src, r.tag));
             let bytes = msg.payload.wire_bytes();
-            let done = self.clock.drain_one(self.profile, msg.arrive, bytes, msg.link);
+            let done =
+                self.clock
+                    .drain_one_from(self.profile, msg.arrive, bytes, msg.link, r.src as usize);
             self.clock.finish_wait(t.max(done));
             return vec![msg.payload];
         }
@@ -304,11 +306,18 @@ impl<'e> RankCtx<'e> {
                 .then(recvs[*ia].src.cmp(&recvs[*ib].src))
                 .then(recvs[*ia].tag.cmp(&recvs[*ib].tag))
         });
-        let sorted: Vec<(f64, u64, Link)> = order
+        let sorted: Vec<(f64, u64, Link, usize)> = order
             .iter()
-            .map(|&i| (msgs[i].1.arrive, msgs[i].1.payload.wire_bytes(), msgs[i].1.link))
+            .map(|&i| {
+                (
+                    msgs[i].1.arrive,
+                    msgs[i].1.payload.wire_bytes(),
+                    msgs[i].1.link,
+                    recvs[msgs[i].0].src as usize,
+                )
+            })
             .collect();
-        let completions = self.clock.drain_receives(self.profile, &sorted);
+        let completions = self.clock.drain_receives_from(self.profile, &sorted);
 
         for c in &completions {
             t = t.max(*c);
@@ -521,6 +530,11 @@ pub struct Engine {
     /// [`super::replay::auto_shards`] from P and the host. Purely a
     /// wallclock knob — replay results are bit-identical for every value.
     pub replay_shards: Option<usize>,
+    /// Deterministic fault model (`None` = healthy). Threaded runs hand
+    /// each rank clock its per-rank lens; replay runs thread the model
+    /// through `replay::execute_faulted`. The plan cache is *not* keyed
+    /// on faults: perturbations scale execution times, never schedules.
+    pub faults: Option<Arc<super::faults::FaultModel>>,
 }
 
 impl Engine {
@@ -532,6 +546,7 @@ impl Engine {
             tuning: None,
             plan_cache: super::plan::PlanCache::default(),
             replay_shards: None,
+            faults: None,
         }
     }
 
@@ -553,6 +568,22 @@ impl Engine {
         self
     }
 
+    /// Attach a fault specification, compiled against this engine's
+    /// topology. The empty spec compiles to no model at all, so healthy
+    /// engines stay provably zero-perturbation. The plan cache is
+    /// untouched — faults perturb execution, not compiled schedules.
+    pub fn with_faults(mut self, spec: &super::faults::FaultSpec) -> Engine {
+        self.faults = if spec.is_empty() {
+            None
+        } else {
+            Some(Arc::new(super::faults::FaultModel::compile(
+                spec,
+                self.topo.q(),
+            )))
+        };
+        self
+    }
+
     /// Run `f` on every rank concurrently; returns per-rank results sorted
     /// by rank plus the simulated makespan. Panics in rank code propagate.
     pub fn run<R, F>(&self, f: F) -> EngineResult<R>
@@ -565,6 +596,7 @@ impl Engine {
         let mut results: Vec<Option<RankResult<R>>> = (0..p).map(|_| None).collect();
 
         let tuning = self.tuning.as_deref();
+        let faults = self.faults.as_deref();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(p);
             for rank in 0..p {
@@ -586,7 +618,7 @@ impl Engine {
                             profile,
                             mailboxes,
                             tuning,
-                            clock: Clock::new(),
+                            clock: Clock::with_faults(faults.map(|m| m.lens(rank))),
                             phases: PhaseBreakdown::default(),
                             mark: 0.0,
                         };

@@ -1,0 +1,612 @@
+//! Deterministic fault injection.
+//!
+//! A [`FaultSpec`] describes machine degradations — stragglers, degraded
+//! links, serialization jitter, node outages — parsed from the CLI
+//! (`faults=<clause>/<clause>/...`) and round-tripping through
+//! [`FaultSpec::spec`] exactly like `AlgoKind`. Compiling a spec against
+//! a topology yields a [`FaultModel`]; each rank's clock holds a
+//! [`FaultLens`] (the per-rank projection) and consults it inside
+//! `Clock::post_send_to` / `drain_*` / `charge_compute`.
+//!
+//! # Determinism contract
+//!
+//! Every perturbation is a **pure function of (spec, rank, peer,
+//! event index)** — never wall-clock time, never an RNG whose state is
+//! shared across ranks or threads:
+//!
+//! * **seed-keyed** — jitter draws come from a stateless splitmix64
+//!   hash of `(seed, rank, peer, direction, event index)` pushed through
+//!   Box-Muller; re-running the same spec reproduces every draw.
+//! * **event-indexed** — each clock counts its own tx and rx events in
+//!   program order. Both executors replay the same per-rank program
+//!   order and the same deterministic drain order `(arrive, src, tag)`,
+//!   so the event indices — and therefore every perturbation — agree.
+//! * **executor-independent** — the threaded engine and the sharded
+//!   plan/replay executor apply identical multiplier sequences, so
+//!   makespans stay bit-identical under any fault spec and any shard
+//!   count (`tests/replay_equivalence.rs`, faulted grid). Faults scale
+//!   *times*, never counts or matching, so the message-matching
+//!   argument in `comm/replay.rs` is unaffected; compiled plans are
+//!   fault-independent and the plan cache needs no fault key.
+//!
+//! The empty spec is **provably zero-perturbation**: a clock without a
+//! lens multiplies nothing (the `None` arm uses the constant `1.0`, and
+//! IEEE-754 multiplication by `1.0` returns the operand unchanged), so
+//! healthy makespans are bit-identical to a build without this module —
+//! asserted against the golden snapshots.
+//!
+//! # Clause semantics
+//!
+//! * `straggler:rank=R,slow=X` — rank `R`'s CPU-side costs (send/recv
+//!   overheads, local copies, compute) are multiplied by `X`.
+//! * `link:node=A-B,bw=F,lat=F2` — traffic between the unordered node
+//!   pair `{A, B}` sees its bandwidth scaled by `F` (serialization time
+//!   x 1/F, charged at both NICs) and its wire latency scaled by `F2`.
+//!   `node=A-A` degrades node A's intra-node fabric.
+//! * `jitter:sigma=S,seed=N` — every serialization is multiplied by a
+//!   lognormal factor `exp(S * z)`, `z` a hashed standard normal.
+//! * `outage:node=N,from=T,until=T2` — node `N`'s ports are down during
+//!   `[T, T2)` (virtual seconds): any serialization that would start in
+//!   the window is deferred to `T2`.
+
+use crate::error::{Result, TunaError};
+
+/// Sentinel peer for call sites with no counterpart rank (the analytic
+/// estimator's probe clocks). Link and jitter perturbations are skipped;
+/// the rank-local CPU multiplier still applies.
+pub const NO_PEER: usize = usize::MAX;
+
+/// One parsed fault clause. See the module header for semantics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultClause {
+    Straggler { rank: usize, slow: f64 },
+    Link { a: usize, b: usize, bw: f64, lat: f64 },
+    Jitter { sigma: f64, seed: u64 },
+    Outage { node: usize, from: f64, until: f64 },
+}
+
+/// A parsed, validated fault specification. Empty means healthy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub clauses: Vec<FaultClause>,
+}
+
+fn bad(msg: impl std::fmt::Display) -> TunaError {
+    TunaError::config(format!("faults: {msg}"))
+}
+
+fn parse_usize(clause: &str, key: &str, v: &str) -> Result<usize> {
+    v.parse::<usize>()
+        .map_err(|_| bad(format!("{clause}: {key}={v} is not a non-negative integer")))
+}
+
+fn parse_u64(clause: &str, key: &str, v: &str) -> Result<u64> {
+    v.parse::<u64>()
+        .map_err(|_| bad(format!("{clause}: {key}={v} is not a non-negative integer")))
+}
+
+fn parse_f64(clause: &str, key: &str, v: &str) -> Result<f64> {
+    let x: f64 = v
+        .parse()
+        .map_err(|_| bad(format!("{clause}: {key}={v} is not a number")))?;
+    if !x.is_finite() {
+        return Err(bad(format!("{clause}: {key}={v} must be finite")));
+    }
+    Ok(x)
+}
+
+fn parse_pos(clause: &str, key: &str, v: &str) -> Result<f64> {
+    let x = parse_f64(clause, key, v)?;
+    if x <= 0.0 {
+        return Err(bad(format!("{clause}: {key}={v} must be > 0")));
+    }
+    Ok(x)
+}
+
+impl FaultSpec {
+    /// Parse a CLI spec: clauses separated by `/`, fields by `,`, the
+    /// clause kind before `:`. The empty string is the healthy spec.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut clauses = Vec::new();
+        for part in s.split('/') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, fields) = part
+                .split_once(':')
+                .ok_or_else(|| bad(format!("clause `{part}` needs `<kind>:<k>=<v>,...`")))?;
+            let mut kv = Vec::new();
+            for field in fields.split(',') {
+                let (k, v) = field
+                    .split_once('=')
+                    .ok_or_else(|| bad(format!("{kind}: field `{field}` needs `<k>=<v>`")))?;
+                kv.push((k.trim(), v.trim()));
+            }
+            let get = |key: &str| kv.iter().find(|(k, _)| *k == key).map(|&(_, v)| v);
+            let known = |keys: &[&str]| -> Result<()> {
+                for (k, _) in &kv {
+                    if !keys.contains(k) {
+                        return Err(bad(format!("{kind}: unknown field `{k}`")));
+                    }
+                }
+                Ok(())
+            };
+            let clause = match kind {
+                "straggler" => {
+                    known(&["rank", "slow"])?;
+                    let rank = get("rank").ok_or_else(|| bad("straggler: needs rank="))?;
+                    let slow = get("slow").ok_or_else(|| bad("straggler: needs slow="))?;
+                    FaultClause::Straggler {
+                        rank: parse_usize(kind, "rank", rank)?,
+                        slow: parse_pos(kind, "slow", slow)?,
+                    }
+                }
+                "link" => {
+                    known(&["node", "bw", "lat"])?;
+                    let pair = get("node").ok_or_else(|| bad("link: needs node=A-B"))?;
+                    let (a, b) = pair
+                        .split_once('-')
+                        .ok_or_else(|| bad(format!("link: node={pair} needs `A-B`")))?;
+                    let a = parse_usize(kind, "node", a)?;
+                    let b = parse_usize(kind, "node", b)?;
+                    FaultClause::Link {
+                        a: a.min(b),
+                        b: a.max(b),
+                        bw: match get("bw") {
+                            Some(v) => parse_pos(kind, "bw", v)?,
+                            None => 1.0,
+                        },
+                        lat: match get("lat") {
+                            Some(v) => parse_pos(kind, "lat", v)?,
+                            None => 1.0,
+                        },
+                    }
+                }
+                "jitter" => {
+                    known(&["sigma", "seed"])?;
+                    let sigma = get("sigma").ok_or_else(|| bad("jitter: needs sigma="))?;
+                    let sigma = parse_f64(kind, "sigma", sigma)?;
+                    if sigma < 0.0 {
+                        return Err(bad("jitter: sigma must be >= 0"));
+                    }
+                    FaultClause::Jitter {
+                        sigma,
+                        seed: match get("seed") {
+                            Some(v) => parse_u64(kind, "seed", v)?,
+                            None => 0,
+                        },
+                    }
+                }
+                "outage" => {
+                    known(&["node", "from", "until"])?;
+                    let node = get("node").ok_or_else(|| bad("outage: needs node="))?;
+                    let until = get("until").ok_or_else(|| bad("outage: needs until="))?;
+                    let from = match get("from") {
+                        Some(v) => parse_f64(kind, "from", v)?,
+                        None => 0.0,
+                    };
+                    let until = parse_f64(kind, "until", until)?;
+                    if from < 0.0 {
+                        return Err(bad("outage: from must be >= 0"));
+                    }
+                    if until < from {
+                        return Err(bad(format!(
+                            "outage: until ({until}) must be >= from ({from})"
+                        )));
+                    }
+                    FaultClause::Outage {
+                        node: parse_usize(kind, "node", node)?,
+                        from,
+                        until,
+                    }
+                }
+                other => {
+                    return Err(bad(format!(
+                        "unknown clause `{other}` (expected straggler | link | jitter | outage)"
+                    )))
+                }
+            };
+            clauses.push(clause);
+        }
+        Ok(FaultSpec { clauses })
+    }
+
+    /// The canonical spec string; `parse(spec())` reproduces the value
+    /// exactly (floats print in shortest round-trip form).
+    pub fn spec(&self) -> String {
+        let parts: Vec<String> = self
+            .clauses
+            .iter()
+            .map(|c| match *c {
+                FaultClause::Straggler { rank, slow } => {
+                    format!("straggler:rank={rank},slow={slow}")
+                }
+                FaultClause::Link { a, b, bw, lat } => {
+                    format!("link:node={a}-{b},bw={bw},lat={lat}")
+                }
+                FaultClause::Jitter { sigma, seed } => format!("jitter:sigma={sigma},seed={seed}"),
+                FaultClause::Outage { node, from, until } => {
+                    format!("outage:node={node},from={from},until={until}")
+                }
+            })
+            .collect();
+        parts.join("/")
+    }
+
+    /// True for the healthy (zero-perturbation) spec.
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Range-check clause targets against a concrete (P, Q) topology.
+    pub fn check(&self, p: usize, q: usize) -> Result<()> {
+        let nodes = if q >= 1 { p / q } else { 0 };
+        for c in &self.clauses {
+            match *c {
+                FaultClause::Straggler { rank, .. } if rank >= p => {
+                    return Err(bad(format!("straggler: rank={rank} out of range (P={p})")));
+                }
+                FaultClause::Link { a, b, .. } if a >= nodes || b >= nodes => {
+                    return Err(bad(format!(
+                        "link: node={a}-{b} out of range ({nodes} nodes)"
+                    )));
+                }
+                FaultClause::Outage { node, .. } if node >= nodes => {
+                    return Err(bad(format!(
+                        "outage: node={node} out of range ({nodes} nodes)"
+                    )));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A spec compiled against a topology's ranks-per-node. Shared by every
+/// rank of an engine; hands out per-rank [`FaultLens`] projections.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    spec: FaultSpec,
+    q: usize,
+}
+
+impl FaultModel {
+    pub fn compile(spec: &FaultSpec, q: usize) -> FaultModel {
+        debug_assert!(q >= 1);
+        FaultModel { spec: spec.clone(), q }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.is_empty()
+    }
+
+    /// The per-rank projection consulted by that rank's clock.
+    pub fn lens(&self, rank: usize) -> FaultLens {
+        let node = rank / self.q;
+        let mut cpu = 1.0;
+        let mut jitters = Vec::new();
+        let mut links = Vec::new();
+        let mut outages = Vec::new();
+        for c in &self.spec.clauses {
+            match *c {
+                FaultClause::Straggler { rank: r, slow } => {
+                    if r == rank {
+                        cpu *= slow;
+                    }
+                }
+                FaultClause::Link { a, b, bw, lat } => {
+                    if a == node || b == node {
+                        links.push((a, b, bw, lat));
+                    }
+                }
+                FaultClause::Jitter { sigma, seed } => jitters.push((sigma, seed)),
+                FaultClause::Outage { node: n, from, until } => {
+                    if n == node && until > from {
+                        outages.push((from, until));
+                    }
+                }
+            }
+        }
+        outages.sort_by(|x, y| x.0.total_cmp(&y.0));
+        FaultLens { rank, node, q: self.q, cpu, jitters, links, outages }
+    }
+
+    /// Coarse degradation summary for the analytic estimator's degraded
+    /// arm: a worst-case multiplicative slowdown plus an additive stall
+    /// (total outage duration). Deliberately pessimistic — the model's
+    /// job under faults is ranking, not absolute accuracy.
+    pub fn analytic_slowdown(&self) -> (f64, f64) {
+        let mut mult = 1.0_f64;
+        let mut add = 0.0_f64;
+        for c in &self.spec.clauses {
+            match *c {
+                FaultClause::Straggler { slow, .. } => mult = mult.max(slow),
+                FaultClause::Link { bw, lat, .. } => mult = mult.max((1.0 / bw).max(lat)),
+                // Mean of the lognormal factor exp(sigma * z).
+                FaultClause::Jitter { sigma, .. } => mult = mult.max((sigma * sigma / 2.0).exp()),
+                FaultClause::Outage { from, until, .. } => add += until - from,
+            }
+        }
+        (mult, add)
+    }
+}
+
+/// One rank's view of a [`FaultModel`]: everything its clock needs,
+/// precomputed. Cheap to clone into each rank thread / replay shard.
+#[derive(Clone, Debug)]
+pub struct FaultLens {
+    rank: usize,
+    node: usize,
+    q: usize,
+    /// Straggler multiplier on this rank's CPU-side costs.
+    cpu: f64,
+    /// All jitter clauses (global: every rank draws, keyed by itself).
+    jitters: Vec<(f64, u64)>,
+    /// Link clauses touching this rank's node.
+    links: Vec<(usize, usize, f64, f64)>,
+    /// Outage windows for this rank's node, sorted by start.
+    outages: Vec<(f64, f64)>,
+}
+
+impl FaultLens {
+    /// Multiplier on CPU-side costs (overheads, copies, compute).
+    #[inline]
+    pub fn cpu(&self) -> f64 {
+        self.cpu
+    }
+
+    /// (serialization multiplier, latency multiplier) for link clauses
+    /// on the unordered node pair {this rank's node, peer's node}.
+    fn link_mults(&self, peer: usize) -> (f64, f64) {
+        if peer == NO_PEER || self.links.is_empty() {
+            return (1.0, 1.0);
+        }
+        let pn = peer / self.q;
+        let (lo, hi) = if self.node <= pn { (self.node, pn) } else { (pn, self.node) };
+        let mut ser = 1.0;
+        let mut lat = 1.0;
+        for &(a, b, bw, l) in &self.links {
+            if a == lo && b == hi {
+                ser *= 1.0 / bw;
+                lat *= l;
+            }
+        }
+        (ser, lat)
+    }
+
+    fn jitter_mult(&self, peer: usize, dir: u64, idx: u64) -> f64 {
+        if peer == NO_PEER || self.jitters.is_empty() {
+            return 1.0;
+        }
+        let mut m = 1.0;
+        for &(sigma, seed) in &self.jitters {
+            let h = hash5(seed, self.rank as u64, peer as u64, dir, idx);
+            m *= (sigma * gauss(h)).exp();
+        }
+        m
+    }
+
+    /// Perturbations for the `idx`-th send to `peer`:
+    /// (serialization multiplier, wire-latency multiplier).
+    pub fn tx(&self, peer: usize, idx: u64) -> (f64, f64) {
+        let (ser, lat) = self.link_mults(peer);
+        (ser * self.jitter_mult(peer, 0, idx), lat)
+    }
+
+    /// Serialization multiplier for the `idx`-th drained receive from
+    /// `peer`.
+    pub fn rx(&self, peer: usize, idx: u64) -> f64 {
+        let (ser, _) = self.link_mults(peer);
+        ser * self.jitter_mult(peer, 1, idx)
+    }
+
+    /// Defer a port start time out of any outage window it lands in.
+    #[inline]
+    pub fn defer(&self, start: f64) -> f64 {
+        let mut s = start;
+        for &(from, until) in &self.outages {
+            if s >= from && s < until {
+                s = until;
+            }
+        }
+        s
+    }
+}
+
+/// splitmix64 finalizer — the stateless mixing primitive.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+fn hash5(seed: u64, a: u64, b: u64, c: u64, d: u64) -> u64 {
+    let mut h = mix64(seed ^ 0x9E37_79B9_7F4A_7C15);
+    h = mix64(h ^ a);
+    h = mix64(h ^ b);
+    h = mix64(h ^ c);
+    h = mix64(h ^ d);
+    h
+}
+
+/// A standard normal from one hash word via Box-Muller. Pure f64
+/// arithmetic on deterministic inputs — identical across executors.
+fn gauss(h: u64) -> f64 {
+    const SCALE: f64 = 1.0 / (1u64 << 53) as f64;
+    let u1 = ((h >> 11) as f64) * SCALE; // in [0, 1)
+    let u2 = ((mix64(h ^ 0xD1B5_4A32_D192_ED03) >> 11) as f64) * SCALE;
+    // 1 - u1 is in (0, 1], so the log is finite.
+    let r = (-2.0 * (1.0 - u1).ln()).sqrt();
+    r * (std::f64::consts::TAU * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_round_trips_every_clause() {
+        let specs = [
+            "straggler:rank=7,slow=8",
+            "link:node=0-3,bw=0.25,lat=4",
+            "jitter:sigma=0.2,seed=42",
+            "outage:node=1,from=0.001,until=0.002",
+            "straggler:rank=0,slow=2.5/link:node=1-2,bw=0.5,lat=1/jitter:sigma=0.1,seed=9/outage:node=0,from=0,until=0.5",
+        ];
+        for s in specs {
+            let parsed = FaultSpec::parse(s).unwrap();
+            let rendered = parsed.spec();
+            let reparsed = FaultSpec::parse(&rendered).unwrap();
+            assert_eq!(parsed, reparsed, "round trip failed for `{s}` -> `{rendered}`");
+        }
+    }
+
+    #[test]
+    fn parse_normalizes_and_defaults() {
+        // Node pairs are stored unordered (low-high).
+        let a = FaultSpec::parse("link:node=5-2,bw=0.5").unwrap();
+        let b = FaultSpec::parse("link:node=2-5,bw=0.5,lat=1").unwrap();
+        assert_eq!(a, b);
+        // outage from defaults to 0, jitter seed to 0.
+        let o = FaultSpec::parse("outage:node=0,until=1").unwrap();
+        assert_eq!(o.clauses, vec![FaultClause::Outage { node: 0, from: 0.0, until: 1.0 }]);
+        let j = FaultSpec::parse("jitter:sigma=0.1").unwrap();
+        assert_eq!(j.clauses, vec![FaultClause::Jitter { sigma: 0.1, seed: 0 }]);
+        // Empty string is the healthy spec.
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert_eq!(FaultSpec::default().spec(), "");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for s in [
+            "meteor:rank=1",                 // unknown clause
+            "straggler:rank=1",              // missing slow
+            "straggler:rank=1,slow=0",       // non-positive multiplier
+            "straggler:rank=1,slow=-2",      // negative multiplier
+            "straggler:rank=1,slow=inf",     // non-finite
+            "straggler:rank=1,slow=nan",     // non-finite
+            "straggler:rank=x,slow=2",       // bad integer
+            "straggler:rank=1,slow=2,hat=3", // unknown field
+            "link:node=3,bw=0.5",            // pair needs A-B
+            "link:node=0-1,bw=0",            // non-positive bandwidth
+            "jitter:sigma=-0.1",             // negative sigma
+            "outage:node=0,from=2,until=1",  // until < from
+            "outage:node=0,from=-1,until=1", // negative window
+            "slowpoke",                      // no kind separator
+            "straggler:rank",                // field without value
+        ] {
+            let e = FaultSpec::parse(s);
+            assert!(e.is_err(), "`{s}` should be rejected");
+            let msg = e.unwrap_err().to_string();
+            assert!(msg.contains("configuration error"), "{msg}");
+            assert!(msg.contains("faults:"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn check_ranges_against_topology() {
+        let s = FaultSpec::parse("straggler:rank=7,slow=2").unwrap();
+        assert!(s.check(8, 2).is_ok());
+        assert!(s.check(4, 2).is_err());
+        let l = FaultSpec::parse("link:node=0-3,bw=0.5").unwrap();
+        assert!(l.check(8, 2).is_ok()); // 4 nodes
+        assert!(l.check(8, 4).is_err()); // 2 nodes
+        let o = FaultSpec::parse("outage:node=2,until=1").unwrap();
+        assert!(o.check(12, 4).is_ok());
+        assert!(o.check(8, 4).is_err());
+    }
+
+    #[test]
+    fn lens_projects_per_rank() {
+        let spec = FaultSpec::parse(
+            "straggler:rank=3,slow=4/link:node=0-1,bw=0.5,lat=2/outage:node=1,from=1,until=2",
+        )
+        .unwrap();
+        let model = FaultModel::compile(&spec, 2);
+        // Rank 3 lives on node 1: straggler applies, link 0-1 touches it,
+        // and the outage window defers starts inside [1, 2).
+        let lens = model.lens(3);
+        assert_eq!(lens.cpu(), 4.0);
+        let (ser, lat) = lens.tx(0, 0); // peer rank 0 is on node 0
+        assert_eq!(ser, 2.0); // 1 / bw
+        assert_eq!(lat, 2.0);
+        let (ser, lat) = lens.tx(2, 0); // node 1 -> node 1: no link clause
+        assert_eq!((ser, lat), (1.0, 1.0));
+        assert_eq!(lens.defer(1.5), 2.0);
+        assert_eq!(lens.defer(0.5), 0.5);
+        assert_eq!(lens.defer(2.0), 2.0);
+        // Rank 0 on node 0: healthy CPU, same link clause, no outage.
+        let lens0 = model.lens(0);
+        assert_eq!(lens0.cpu(), 1.0);
+        assert_eq!(lens0.rx(3, 7), 2.0);
+        assert_eq!(lens0.defer(1.5), 1.5);
+        // A rank on an untouched node sees nothing.
+        let spec2 = FaultSpec::parse("link:node=0-1,bw=0.5").unwrap();
+        let lens4 = FaultModel::compile(&spec2, 2).lens(4); // node 2
+        assert_eq!(lens4.tx(0, 0), (1.0, 1.0));
+    }
+
+    #[test]
+    fn jitter_is_a_pure_function_of_its_key() {
+        let spec = FaultSpec::parse("jitter:sigma=0.3,seed=11").unwrap();
+        let model = FaultModel::compile(&spec, 4);
+        let lens = model.lens(5);
+        let (a, _) = lens.tx(9, 0);
+        let (b, _) = lens.tx(9, 0);
+        assert_eq!(a.to_bits(), b.to_bits(), "same key must give same draw");
+        let (c, _) = lens.tx(9, 1);
+        assert_ne!(a.to_bits(), c.to_bits(), "event index must vary the draw");
+        let (d, _) = lens.tx(10, 0);
+        assert_ne!(a.to_bits(), d.to_bits(), "peer must vary the draw");
+        // tx and rx draws are decorrelated (direction is keyed).
+        assert_ne!(a.to_bits(), lens.rx(9, 0).to_bits());
+        // A different seed re-keys everything.
+        let spec2 = FaultSpec::parse("jitter:sigma=0.3,seed=12").unwrap();
+        let (e, _) = FaultModel::compile(&spec2, 4).lens(5).tx(9, 0);
+        assert_ne!(a.to_bits(), e.to_bits());
+        // Multipliers are positive and finite.
+        for idx in 0..256 {
+            let (m, _) = lens.tx(1, idx);
+            assert!(m.is_finite() && m > 0.0, "bad jitter multiplier {m}");
+        }
+    }
+
+    #[test]
+    fn no_peer_sentinel_skips_link_and_jitter() {
+        let spec =
+            FaultSpec::parse("straggler:rank=0,slow=3/link:node=0-1,bw=0.5/jitter:sigma=0.5")
+                .unwrap();
+        let lens = FaultModel::compile(&spec, 1).lens(0);
+        assert_eq!(lens.tx(NO_PEER, 0), (1.0, 1.0));
+        assert_eq!(lens.rx(NO_PEER, 0), 1.0);
+        assert_eq!(lens.cpu(), 3.0);
+    }
+
+    #[test]
+    fn analytic_slowdown_is_coarse_but_ordered() {
+        let healthy = FaultModel::compile(&FaultSpec::default(), 2);
+        assert_eq!(healthy.analytic_slowdown(), (1.0, 0.0));
+        let spec = FaultSpec::parse(
+            "straggler:rank=0,slow=8/link:node=0-1,bw=0.25,lat=2/outage:node=0,from=0.5,until=0.75",
+        )
+        .unwrap();
+        let (mult, add) = FaultModel::compile(&spec, 2).analytic_slowdown();
+        assert_eq!(mult, 8.0); // straggler dominates 1/bw = 4 and lat = 2
+        assert!((add - 0.25).abs() < 1e-12);
+        // Chained outage windows defer across both.
+        let spec = FaultSpec::parse("outage:node=0,from=1,until=2/outage:node=0,from=2,until=3")
+            .unwrap();
+        let lens = FaultModel::compile(&spec, 1).lens(0);
+        assert_eq!(lens.defer(1.5), 3.0);
+    }
+}

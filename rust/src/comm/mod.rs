@@ -22,6 +22,7 @@
 pub mod buffer;
 pub mod clock;
 pub mod engine;
+pub mod faults;
 pub mod persist;
 pub mod plan;
 pub mod replay;
@@ -29,6 +30,7 @@ pub mod topology;
 
 pub use buffer::{Block, ByteView, DataBuf, Payload, Rope};
 pub use clock::{Clock, Counters};
+pub use faults::{FaultModel, FaultSpec};
 pub use engine::{Engine, EngineResult, RankCtx, RankResult};
 pub use persist::PersistentColl;
 pub use plan::{CommPlan, PlanBuilder, PlanCache, PlanOp, RankPlan};

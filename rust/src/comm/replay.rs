@@ -45,6 +45,16 @@
 //! (asserted with zero tolerance by `tests/replay_equivalence.rs` across
 //! 1/2/4/8 shards).
 //!
+//! **Fault injection preserves all three facts.** A
+//! [`FaultModel`](super::faults::FaultModel) perturbs only the *times* a
+//! clock computes — multiplicatively, keyed on `(rank, peer, event
+//! index)` — never which messages are sent, matched or drained. Each
+//! rank's event indices count its own program order (tx) and its own
+//! deterministic drain order (rx), both of which are shard-count- and
+//! executor-independent by facts 1-3, so a faulted replay is still
+//! bit-identical to a faulted threaded run at any shard count
+//! (`tests/replay_equivalence.rs`, faulted grid).
+//!
 //! Invalid inputs surface as typed [`ReplayError`]s, never panics:
 //! plan/topology shape mismatches ([`ReplayError::ShapeMismatch`]), plans
 //! that park a rank forever ([`ReplayError::PlanDeadlock`]) and plans
@@ -63,6 +73,7 @@ use thiserror::Error;
 
 use super::clock::Clock;
 use super::engine::{ChanHasher, EngineResult, RankResult};
+use super::faults::{FaultLens, FaultModel};
 use super::plan::{CommPlan, PlanOp};
 use super::topology::Topology;
 use super::PhaseBreakdown;
@@ -162,10 +173,10 @@ struct ReplayRank {
 }
 
 impl ReplayRank {
-    fn new() -> ReplayRank {
+    fn new(faults: Option<FaultLens>) -> ReplayRank {
         ReplayRank {
             pc: 0,
-            clock: Clock::new(),
+            clock: Clock::with_faults(faults),
             phases: PhaseBreakdown::default(),
             mark: 0.0,
             pending_sends: Vec::new(),
@@ -197,10 +208,12 @@ struct Shard {
 }
 
 impl Shard {
-    fn new(start: usize, len: usize) -> Shard {
+    fn new(start: usize, len: usize, faults: Option<&FaultModel>) -> Shard {
         Shard {
             start,
-            states: (0..len).map(|_| ReplayRank::new()).collect(),
+            states: (0..len)
+                .map(|i| ReplayRank::new(faults.map(|m| m.lens(start + i))))
+                .collect(),
             mailboxes: (0..len).map(|_| ChanMap::default()).collect(),
             ready: (0..len).collect(),
             in_queue: vec![true; len],
@@ -254,7 +267,7 @@ impl Shard {
                         let d = dst as usize;
                         let link = topo.link(me, d);
                         let st = &mut self.states[li];
-                        let timing = st.clock.post_send(profile, link, bytes, plan.p);
+                        let timing = st.clock.post_send_to(profile, link, bytes, plan.p, d);
                         st.pending_sends.push(timing.complete);
                         let msg = InMsg {
                             arrive: timing.arrive,
@@ -338,7 +351,7 @@ pub fn execute(
     topo: Topology,
     plan: &CommPlan,
 ) -> Result<EngineResult<()>, ReplayError> {
-    execute_sharded(profile, topo, plan, 1)
+    execute_faulted(profile, topo, plan, 1, None)
 }
 
 /// Execute `plan` across `shards` worker shards with conservative
@@ -351,6 +364,20 @@ pub fn execute_sharded(
     topo: Topology,
     plan: &CommPlan,
     shards: usize,
+) -> Result<EngineResult<()>, ReplayError> {
+    execute_faulted(profile, topo, plan, shards, None)
+}
+
+/// [`execute_sharded`] under a deterministic fault model. Each rank's
+/// clock carries the model's per-rank lens; `None` is exactly the
+/// healthy replay. Perturbations never change what a plan sends or
+/// matches, so shape/deadlock/drain validation is identical.
+pub fn execute_faulted(
+    profile: &MachineProfile,
+    topo: Topology,
+    plan: &CommPlan,
+    shards: usize,
+    faults: Option<&FaultModel>,
 ) -> Result<EngineResult<()>, ReplayError> {
     let p = topo.p();
     if plan.p != p || plan.q != topo.q() {
@@ -380,7 +407,7 @@ pub fn execute_sharded(
     let mut start = 0usize;
     for s in 0..shards {
         let len = base + usize::from(s < rem);
-        parts.push(Shard::new(start, len));
+        parts.push(Shard::new(start, len, faults));
         start += len;
     }
 
@@ -504,11 +531,18 @@ fn perform_wait(st: &mut ReplayRank, mb: &mut ChanMap, profile: &MachineProfile)
             .then(st.pending_recvs[a].0.cmp(&st.pending_recvs[b].0))
             .then(st.pending_recvs[a].1.cmp(&st.pending_recvs[b].1))
     });
-    let sorted: Vec<(f64, u64, Link)> = order
+    let sorted: Vec<(f64, u64, Link, usize)> = order
         .iter()
-        .map(|&i| (msgs[i].arrive, msgs[i].bytes, msgs[i].link))
+        .map(|&i| {
+            (
+                msgs[i].arrive,
+                msgs[i].bytes,
+                msgs[i].link,
+                st.pending_recvs[i].0 as usize,
+            )
+        })
         .collect();
-    let completions = st.clock.drain_receives(profile, &sorted);
+    let completions = st.clock.drain_receives_from(profile, &sorted);
 
     let mut t = 0.0f64;
     for &s in &st.pending_sends {
@@ -746,6 +780,50 @@ mod tests {
         let sharded = execute_sharded(&profile, Topology::flat(2), &plan, 2).unwrap();
         assert_eq!(res.makespan.to_bits(), sharded.makespan.to_bits());
         assert_eq!(res.total_counters(), sharded.total_counters());
+    }
+
+    #[test]
+    fn faulted_ring_replay_matches_faulted_threaded_engine_bitwise() {
+        use crate::comm::faults::FaultSpec;
+        let profile = MachineProfile::test_flat();
+        let topo = Topology::new(4, 2);
+        let plan = ring_plan(4, 1024);
+        let spec = FaultSpec::parse(
+            "straggler:rank=1,slow=4/link:node=0-1,bw=0.5,lat=2/jitter:sigma=0.2,seed=7",
+        )
+        .unwrap();
+        let model = FaultModel::compile(&spec, 2);
+        let faulted = execute_faulted(&profile, topo, &plan, 1, Some(&model)).unwrap();
+
+        let engine = Engine::new(profile, topo).with_faults(&spec);
+        let threaded = engine.run(|ctx| {
+            let p = ctx.size();
+            let me = ctx.rank();
+            ctx.phase_mark();
+            let _ = ctx.sendrecv(
+                (me + 1) % p,
+                7,
+                Payload::Raw(DataBuf::Phantom(1024)),
+                (me + p - 1) % p,
+                7,
+            );
+            ctx.phase_lap(Phase::Data);
+        });
+
+        assert_eq!(faulted.makespan.to_bits(), threaded.makespan.to_bits());
+        for (a, b) in faulted.ranks.iter().zip(threaded.ranks.iter()) {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "rank {}", a.rank);
+            assert_eq!(a.phases, b.phases, "rank {}", a.rank);
+            assert_eq!(a.counters, b.counters, "rank {}", a.rank);
+        }
+        // The perturbation is real: a healthy replay differs.
+        let healthy = execute(&profile, topo, &plan).unwrap();
+        assert_ne!(healthy.makespan.to_bits(), faulted.makespan.to_bits());
+        // And shard-count-independent.
+        for shards in [2usize, 4] {
+            let sharded = execute_faulted(&profile, topo, &plan, shards, Some(&model)).unwrap();
+            assert_eq!(faulted.makespan.to_bits(), sharded.makespan.to_bits(), "{shards}");
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@ use std::sync::Arc;
 
 use crate::algos::tuning::TuningTable;
 use crate::algos::ExecMode;
+use crate::comm::FaultSpec;
 use crate::error::{Result, TunaError};
 use crate::model::MachineProfile;
 use crate::workload::Dist;
@@ -56,6 +57,11 @@ pub struct RunConfig {
     /// creates, consulted by `tuna:auto` (loaded by the CLI from
     /// `artifacts/tuning/`; not a `key=value` field).
     pub tuning: Option<Arc<TuningTable>>,
+    /// Deterministic fault injection (`faults=<spec>`, see
+    /// [`crate::comm::FaultSpec`]). The empty spec (the default) is
+    /// provably zero-perturbation; non-empty specs perturb both
+    /// executors identically (threaded ↔ replay stays bit-identical).
+    pub faults: FaultSpec,
 }
 
 impl Default for RunConfig {
@@ -76,6 +82,7 @@ impl Default for RunConfig {
             persistent: false,
             replay_shards: None,
             tuning: None,
+            faults: FaultSpec::default(),
         }
     }
 }
@@ -145,6 +152,7 @@ impl RunConfig {
                         ))
                     })?
                 }
+                "faults" => cfg.faults = FaultSpec::parse(v)?,
                 _ => {
                     return Err(TunaError::config(format!("unknown config key `{k}`")));
                 }
@@ -172,6 +180,11 @@ impl RunConfig {
                  set real=false or mode=threaded",
             ));
         }
+        // Machine parameters must be sane before any engine is built
+        // from them — a NaN latency silently poisons every makespan.
+        self.profile.validate()?;
+        // Fault targets must exist on this topology.
+        self.faults.check(self.p, self.q)?;
         Ok(())
     }
 }
@@ -191,6 +204,12 @@ pub struct SelectConfig {
     /// ([`Dist::skewed_companion`]) and score it by the worse of the two,
     /// so the selected algorithm is robust to skewed distributions.
     pub skewed_refine: bool,
+    /// Stress the refinement stage under faults (`faulted=<spec>`):
+    /// additionally measure each shortlisted candidate with the given
+    /// fault spec injected and score it by the worse of the healthy and
+    /// (rescaled) faulted measurements, mirroring `skewed_refine` — so
+    /// the selected algorithm degrades gracefully on sick machines.
+    pub faulted_refine: Option<FaultSpec>,
 }
 
 impl Default for SelectConfig {
@@ -200,14 +219,16 @@ impl Default for SelectConfig {
             shortlist: 6,
             refine: true,
             skewed_refine: false,
+            faulted_refine: None,
         }
     }
 }
 
 impl SelectConfig {
     /// Parse `key=value` arguments: selector keys (`shortlist=N`,
-    /// `refine=true|false`, `skewed=true|false`) are consumed here,
-    /// everything else is delegated to [`RunConfig::parse_args`].
+    /// `refine=true|false`, `skewed=true|false`, `faulted=<spec>`) are
+    /// consumed here, everything else is delegated to
+    /// [`RunConfig::parse_args`].
     pub fn parse_args(args: &[String]) -> Result<SelectConfig> {
         let mut cfg = SelectConfig::default();
         let mut rest: Vec<String> = Vec::new();
@@ -224,10 +245,14 @@ impl SelectConfig {
                         .parse()
                         .map_err(|_| TunaError::config(format!("bad bool for skewed: `{v}`")))?
                 }
+                Some(("faulted", v)) => cfg.faulted_refine = Some(FaultSpec::parse(v)?),
                 _ => rest.push(arg.clone()),
             }
         }
         cfg.run = RunConfig::parse_args(&rest)?;
+        if let Some(spec) = &cfg.faulted_refine {
+            spec.check(cfg.run.p, cfg.run.q)?;
+        }
         Ok(cfg)
     }
 }
@@ -335,6 +360,21 @@ mod tests {
     }
 
     #[test]
+    fn parse_faults() {
+        assert!(RunConfig::default().faults.is_empty(), "default is healthy");
+        let cfg = RunConfig::parse_args(&args(
+            "p=64 q=8 faults=straggler:rank=7,slow=4/jitter:sigma=0.1,seed=3",
+        ))
+        .unwrap();
+        assert_eq!(cfg.faults.spec(), "straggler:rank=7,slow=4/jitter:sigma=0.1,seed=3");
+        // Malformed specs and out-of-range targets fail loudly.
+        assert!(RunConfig::parse_args(&args("faults=straggler:rank=7")).is_err());
+        assert!(RunConfig::parse_args(&args("p=8 q=2 faults=straggler:rank=8,slow=2")).is_err());
+        assert!(RunConfig::parse_args(&args("p=8 q=2 faults=link:node=0-4,bw=0.5")).is_err());
+        assert!(RunConfig::parse_args(&args("p=8 q=2 faults=outage:node=4,until=1")).is_err());
+    }
+
+    #[test]
     fn select_config_splits_its_keys() {
         let cfg = SelectConfig::parse_args(&args(
             "p=64 q=8 shortlist=3 refine=false skewed=true seed=9",
@@ -350,5 +390,20 @@ mod tests {
         assert!(SelectConfig::parse_args(&args("shortlist=3 px=1")).is_err());
         assert!(SelectConfig::parse_args(&args("refine=maybe")).is_err());
         assert!(SelectConfig::parse_args(&args("skewed=maybe")).is_err());
+    }
+
+    #[test]
+    fn select_config_parses_faulted_refine() {
+        assert!(SelectConfig::default().faulted_refine.is_none());
+        let cfg = SelectConfig::parse_args(&args("p=64 q=8 faulted=straggler:rank=3,slow=8"))
+            .unwrap();
+        assert_eq!(
+            cfg.faulted_refine.as_ref().map(|s| s.spec()).as_deref(),
+            Some("straggler:rank=3,slow=8")
+        );
+        assert!(cfg.run.faults.is_empty(), "faulted= stresses refinement, not the base run");
+        // The stress spec is range-checked against the run topology too.
+        assert!(SelectConfig::parse_args(&args("p=8 q=2 faulted=straggler:rank=99,slow=2")).is_err());
+        assert!(SelectConfig::parse_args(&args("faulted=bogus")).is_err());
     }
 }

@@ -143,12 +143,18 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
              set real=false or mode=threaded",
         ));
     }
+    // Guard programmatically built configs (parse_args runs the same
+    // checks): reject poisoned machine parameters and out-of-range fault
+    // targets before any clock consumes them.
+    cfg.profile.validate()?;
+    cfg.faults.check(cfg.p, cfg.q)?;
     let topo = Topology::try_new(cfg.p, cfg.q)?;
     match choose_fidelity(kind, cfg.p, cfg) {
         fidelity @ (Fidelity::Engine | Fidelity::Replay) => {
             let engine = Engine::new(cfg.profile.clone(), topo)
                 .with_tuning(cfg.tuning.clone())
-                .with_replay_shards(cfg.replay_shards);
+                .with_replay_shards(cfg.replay_shards)
+                .with_faults(&cfg.faults);
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
             if cfg.persistent {
@@ -192,7 +198,16 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
         Fidelity::Analytic => {
             let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
             let shape = crate::model::analytic::WorkloadShape::of(&sizes);
-            let est = Estimator::new(&cfg.profile, topo).estimate_shape(kind, &shape);
+            let faults = if cfg.faults.is_empty() {
+                None
+            } else {
+                Some(crate::comm::FaultModel::compile(&cfg.faults, cfg.q))
+            };
+            let est = Estimator::new(&cfg.profile, topo).estimate_shape_faulted(
+                kind,
+                &shape,
+                faults.as_ref(),
+            );
             Ok(Measurement {
                 algo: *kind,
                 summary: Summary::of(&[est.makespan]),
@@ -263,6 +278,64 @@ mod tests {
             assert_eq!(a.summary.max.to_bits(), b.summary.max.to_bits());
             assert_eq!(a.phases, b.phases, "{}", kind.name());
         }
+    }
+
+    #[test]
+    fn faulted_measurements_stay_bit_identical_across_executors() {
+        use crate::comm::FaultSpec;
+        let spec = FaultSpec::parse(
+            "straggler:rank=2,slow=3/link:node=0-2,bw=0.5,lat=2/jitter:sigma=0.15,seed=11",
+        )
+        .unwrap();
+        let threaded = RunConfig {
+            mode: ExecMode::Threaded,
+            faults: spec.clone(),
+            ..cfg(24, 4)
+        };
+        let replay = RunConfig {
+            mode: ExecMode::Replay,
+            faults: spec,
+            ..cfg(24, 4)
+        };
+        for kind in [AlgoKind::Tuna { radix: 3 }, AlgoKind::SpreadOut] {
+            let a = measure(&threaded, &kind).unwrap();
+            let b = measure(&replay, &kind).unwrap();
+            assert_eq!(a.summary.median.to_bits(), b.summary.median.to_bits(), "{}", kind.name());
+            assert_eq!(a.summary.max.to_bits(), b.summary.max.to_bits());
+            // And the faults actually bite: the healthy run differs.
+            let healthy = measure(&RunConfig { mode: ExecMode::Threaded, ..cfg(24, 4) }, &kind)
+                .unwrap();
+            assert_ne!(a.summary.median.to_bits(), healthy.summary.median.to_bits());
+        }
+    }
+
+    #[test]
+    fn measure_rejects_out_of_range_fault_targets_and_bad_profiles() {
+        use crate::comm::FaultSpec;
+        let c = RunConfig {
+            faults: FaultSpec::parse("straggler:rank=99,slow=2").unwrap(),
+            ..cfg(16, 4)
+        };
+        let err = measure(&c, &AlgoKind::SpreadOut).unwrap_err().to_string();
+        assert!(err.contains("rank"), "{err}");
+        let mut c = cfg(16, 4);
+        c.profile.alpha_g = f64::NAN;
+        let err = measure(&c, &AlgoKind::SpreadOut).unwrap_err().to_string();
+        assert!(err.contains("alpha_g"), "{err}");
+    }
+
+    #[test]
+    fn analytic_estimate_degrades_under_faults() {
+        use crate::comm::FaultSpec;
+        let mut c = cfg(16, 4);
+        c.engine_limit_log = 8;
+        c.engine_limit_replay = 8;
+        let healthy = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(healthy.fidelity, Fidelity::Analytic);
+        c.faults = FaultSpec::parse("straggler:rank=0,slow=4").unwrap();
+        let faulted = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(faulted.fidelity, Fidelity::Analytic);
+        assert!(faulted.median() > healthy.median(), "{} vs {}", faulted.median(), healthy.median());
     }
 
     #[test]

@@ -40,6 +40,16 @@ pub struct TenantSpec {
     pub rate: f64,
     /// Workload seed (frozen into the tenant's handle).
     pub seed: u64,
+    /// Per-attempt deadline, simulated seconds (0 = none). An attempt —
+    /// original call or retry — that has not completed `deadline`
+    /// seconds after *its own* issue time is cancelled (its engine
+    /// share is freed immediately) and either retried or shed.
+    pub deadline: f64,
+    /// Retry budget after a timeout. Retry k is re-issued
+    /// `deadline * 2^(k-1)` after its timeout fires — deterministic
+    /// exponential backoff, no RNG, so the event loop stays a pure
+    /// function of its inputs. A call that exhausts the budget is shed.
+    pub retries: u32,
 }
 
 /// Configuration of one serving run.
@@ -64,10 +74,25 @@ impl ServeConfig {
         if !(self.seconds > 0.0) {
             return Err(TunaError::config("serve: seconds must be > 0"));
         }
+        // Reject poisoned machine parameters before measuring demands.
+        self.profile.validate()?;
         for t in &self.tenants {
             if !(t.rate > 0.0) {
                 return Err(TunaError::config(format!(
                     "serve: tenant `{}` rate must be > 0",
+                    t.name
+                )));
+            }
+            if !t.deadline.is_finite() || t.deadline < 0.0 {
+                return Err(TunaError::config(format!(
+                    "serve: tenant `{}` deadline must be finite and >= 0 (0 = none)",
+                    t.name
+                )));
+            }
+            if t.retries > 0 && t.deadline == 0.0 {
+                return Err(TunaError::config(format!(
+                    "serve: tenant `{}` retries require a deadline (retries re-issue \
+                     timed-out calls; without a deadline nothing ever times out)",
                     t.name
                 )));
             }
@@ -87,12 +112,23 @@ pub struct TenantStat {
     pub rate: f64,
     /// Per-call demand through the persistent handle, seconds.
     pub demand: f64,
+    /// Successfully completed calls (== all arrivals when the tenant has
+    /// no deadline; percentiles and mean/max are over these).
     pub calls: usize,
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
     pub mean: f64,
     pub max: f64,
+    /// Attempts (originals and retries) cancelled at their deadline.
+    pub timeouts: u64,
+    /// Re-issued attempts after a timeout.
+    pub retries: u64,
+    /// Calls dropped after exhausting the retry budget.
+    pub shed: u64,
+    /// Fraction of the tenant's original calls that eventually
+    /// completed (1.0 when nothing is shed).
+    pub goodput: f64,
 }
 
 /// Result of one serving run.
@@ -235,43 +271,299 @@ pub fn simulate_calls(
     (latencies, drain)
 }
 
+/// Outcome of one [`simulate_calls_resilient`] run: per-tenant latency
+/// samples (successful calls only, completion minus *original* arrival)
+/// plus the degradation counters.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    pub latencies: Vec<Vec<f64>>,
+    pub drain: f64,
+    pub timeouts: Vec<u64>,
+    pub retries: Vec<u64>,
+    pub shed: Vec<u64>,
+    /// Attempts issued per tenant (originals + retries).
+    pub issued: Vec<u64>,
+}
+
+/// [`simulate_calls`] with graceful degradation: per-tenant deadlines
+/// cancel attempts (active *or* queued) that outlive them, freeing the
+/// engine share for the survivors; cancelled attempts are re-issued
+/// with deterministic exponential backoff (`deadline * 2^(k-1)` after
+/// the k-th timeout) until the tenant's retry budget runs out, then
+/// shed. Tenants with `deadline = 0` never time out. Completions
+/// tie-break before timeouts, timeouts before arrivals, so the loop
+/// remains a pure function of its inputs — a call completing exactly at
+/// its deadline succeeds.
+pub fn simulate_calls_resilient(
+    n_tenants: usize,
+    calls: &[Call],
+    demands: &[f64],
+    pace: usize,
+    deadlines: &[f64],
+    retry_budget: &[u32],
+) -> SimOutcome {
+    // One outstanding attempt per call at any time; each attempt carries
+    // its own issue time (deadlines are per attempt, queue wait counts).
+    struct Attempt {
+        tenant: usize,
+        orig_arrival: f64,
+        issued_at: f64,
+        try_no: u32,
+    }
+    let cap = if pace == 0 { usize::MAX } else { pace };
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); n_tenants];
+    let mut timeouts = vec![0u64; n_tenants];
+    let mut retries = vec![0u64; n_tenants];
+    let mut shed = vec![0u64; n_tenants];
+    let mut issued = vec![0u64; n_tenants];
+    let mut attempts: Vec<Attempt> = Vec::new();
+    let mut active: Vec<(usize, f64)> = Vec::new(); // (attempt id, target v)
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    // Scheduled retry arrivals, kept sorted by (time, schedule order).
+    let mut pending: VecDeque<(f64, usize)> = VecDeque::new();
+    let mut t = 0.0f64;
+    let mut v = 0.0f64;
+    let mut next = 0usize;
+    let mut drain = 0.0f64;
+    let expiry = |a: &Attempt| {
+        let d = deadlines[a.tenant];
+        if d > 0.0 {
+            a.issued_at + d
+        } else {
+            f64::INFINITY
+        }
+    };
+    loop {
+        let min_target = active
+            .iter()
+            .map(|&(_, tv)| tv)
+            .fold(f64::INFINITY, f64::min);
+        let t_comp = if active.is_empty() {
+            f64::INFINITY
+        } else {
+            t + (min_target - v) * active.len() as f64
+        };
+        let t_orig = if next < calls.len() { calls[next].arrival } else { f64::INFINITY };
+        let t_retry = pending.front().map_or(f64::INFINITY, |&(at, _)| at);
+        let t_arr = t_orig.min(t_retry);
+        let t_out = active
+            .iter()
+            .map(|&(id, _)| expiry(&attempts[id]))
+            .chain(queue.iter().map(|&id| expiry(&attempts[id])))
+            .fold(f64::INFINITY, f64::min);
+        if t_comp == f64::INFINITY && t_arr == f64::INFINITY && t_out == f64::INFINITY {
+            break;
+        }
+        if t_comp <= t_arr && t_comp <= t_out {
+            // Completion(s): identical to the legacy loop.
+            t = t_comp;
+            v = min_target;
+            active.retain(|&(id, tv)| {
+                if tv <= v {
+                    let a = &attempts[id];
+                    latencies[a.tenant].push(t - a.orig_arrival);
+                    drain = t;
+                    false
+                } else {
+                    true
+                }
+            });
+        } else if t_out <= t_arr {
+            // Timeout(s): cancel every expired attempt, active or
+            // queued. An active attempt's engine share is freed on the
+            // spot (its partial progress is wasted work); survivors
+            // speed up from here because t_comp re-derives from the
+            // shrunken active set.
+            if !active.is_empty() {
+                v += (t_out - t) / active.len() as f64;
+            }
+            t = t_out;
+            let mut expire = |a_id: usize,
+                              attempts: &mut Vec<Attempt>,
+                              pending: &mut VecDeque<(f64, usize)>| {
+                let (tenant, orig_arrival, try_no) = {
+                    let a = &attempts[a_id];
+                    (a.tenant, a.orig_arrival, a.try_no)
+                };
+                timeouts[tenant] += 1;
+                if try_no < retry_budget[tenant] {
+                    // Exponential backoff: retry k (1-based) waits
+                    // deadline * 2^(k-1) after its timeout.
+                    let backoff = deadlines[tenant] * (1u64 << try_no.min(62)) as f64;
+                    let at = t + backoff;
+                    retries[tenant] += 1;
+                    issued[tenant] += 1;
+                    let id = attempts.len();
+                    attempts.push(Attempt {
+                        tenant,
+                        orig_arrival,
+                        issued_at: at,
+                        try_no: try_no + 1,
+                    });
+                    // Backoffs are per-tenant multiples of now, so later
+                    // schedulings can land earlier: insert in (time,
+                    // order) position to keep the queue sorted.
+                    let pos = pending
+                        .iter()
+                        .position(|&(pt, _)| pt > at)
+                        .unwrap_or(pending.len());
+                    pending.insert(pos, (at, id));
+                } else {
+                    shed[tenant] += 1;
+                }
+            };
+            let mut survivors: Vec<(usize, f64)> = Vec::with_capacity(active.len());
+            for (id, tv) in active.drain(..) {
+                if expiry(&attempts[id]) <= t {
+                    expire(id, &mut attempts, &mut pending);
+                } else {
+                    survivors.push((id, tv));
+                }
+            }
+            active = survivors;
+            let mut waiting: VecDeque<usize> = VecDeque::with_capacity(queue.len());
+            for id in queue.drain(..) {
+                if expiry(&attempts[id]) <= t {
+                    expire(id, &mut attempts, &mut pending);
+                } else {
+                    waiting.push_back(id);
+                }
+            }
+            queue = waiting;
+        } else {
+            // Arrival (retry arrivals win time ties over originals —
+            // they were scheduled strictly earlier).
+            if !active.is_empty() {
+                v += (t_arr - t) / active.len() as f64;
+            }
+            t = t_arr;
+            let id = if t_retry <= t_orig {
+                pending.pop_front().expect("retry arrival implies a pending entry").1
+            } else {
+                let c = calls[next];
+                next += 1;
+                issued[c.tenant] += 1;
+                let id = attempts.len();
+                attempts.push(Attempt {
+                    tenant: c.tenant,
+                    orig_arrival: c.arrival,
+                    issued_at: c.arrival,
+                    try_no: 0,
+                });
+                id
+            };
+            if active.len() < cap {
+                active.push((id, v + demands[attempts[id].tenant]));
+                continue;
+            }
+            queue.push_back(id);
+            continue;
+        }
+        // Completion or timeout freed slots: admit FIFO from the queue.
+        while active.len() < cap {
+            match queue.pop_front() {
+                Some(id) => active.push((id, v + demands[attempts[id].tenant])),
+                None => break,
+            }
+        }
+    }
+    SimOutcome {
+        latencies,
+        drain,
+        timeouts,
+        retries,
+        shed,
+        issued,
+    }
+}
+
 /// Nearest-rank percentile of an unsorted sample (0.0 on empty input).
+/// Sorted with [`f64::total_cmp`]: a NaN sample (impossible from the
+/// simulator, possible from hand-fed data) sorts last instead of
+/// panicking mid-report.
 pub fn percentile(samples: &[f64], pct: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = ((pct / 100.0) * s.len() as f64).ceil() as usize;
     s[rank.clamp(1, s.len()) - 1]
 }
 
 /// Simulate serving with pre-measured `demands` (from
-/// [`measure_tenants`]) and assemble the per-tenant report.
+/// [`measure_tenants`]) and assemble the per-tenant report. When no
+/// tenant sets a deadline the legacy processor-sharing loop runs
+/// verbatim (bit-identical to every pre-degradation report); otherwise
+/// the resilient loop handles timeouts, retries and shedding.
 pub fn simulate(cfg: &ServeConfig, demands: &[f64]) -> ServeReport {
     let calls = poisson_calls(cfg);
-    let (latencies, drain) = simulate_calls(cfg.tenants.len(), &calls, demands, cfg.pace);
+    let n = cfg.tenants.len();
+    let resilient = cfg.tenants.iter().any(|t| t.deadline > 0.0);
+    let outcome = if resilient {
+        let deadlines: Vec<f64> = cfg.tenants.iter().map(|t| t.deadline).collect();
+        let budgets: Vec<u32> = cfg.tenants.iter().map(|t| t.retries).collect();
+        simulate_calls_resilient(n, &calls, demands, cfg.pace, &deadlines, &budgets)
+    } else {
+        let (latencies, drain) = simulate_calls(n, &calls, demands, cfg.pace);
+        let issued: Vec<u64> = {
+            let mut per = vec![0u64; n];
+            for c in &calls {
+                per[c.tenant] += 1;
+            }
+            per
+        };
+        SimOutcome {
+            latencies,
+            drain,
+            timeouts: vec![0; n],
+            retries: vec![0; n],
+            shed: vec![0; n],
+            issued,
+        }
+    };
+    let mut originals = vec![0u64; n];
+    for c in &calls {
+        originals[c.tenant] += 1;
+    }
     let tenants: Vec<TenantStat> = cfg
         .tenants
         .iter()
+        .enumerate()
         .zip(demands)
-        .zip(&latencies)
-        .map(|((t, &demand), lat)| TenantStat {
-            name: t.name.clone(),
-            algo: t.algo.name(),
-            p: t.p,
-            q: t.q,
-            dist: t.dist.name().to_string(),
-            rate: t.rate,
-            demand,
-            calls: lat.len(),
-            p50: percentile(lat, 50.0),
-            p95: percentile(lat, 95.0),
-            p99: percentile(lat, 99.0),
-            mean: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
-            max: lat.iter().copied().fold(0.0, f64::max),
+        .map(|((i, t), &demand)| {
+            let lat = &outcome.latencies[i];
+            TenantStat {
+                name: t.name.clone(),
+                algo: t.algo.name(),
+                p: t.p,
+                q: t.q,
+                dist: t.dist.name().to_string(),
+                rate: t.rate,
+                demand,
+                calls: lat.len(),
+                p50: percentile(lat, 50.0),
+                p95: percentile(lat, 95.0),
+                p99: percentile(lat, 99.0),
+                mean: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+                // total_cmp keeps a stray NaN from silently vanishing
+                // into the fold (f64::max would drop it).
+                max: lat
+                    .iter()
+                    .copied()
+                    .fold(0.0, |a, b| if b.total_cmp(&a).is_gt() { b } else { a }),
+                timeouts: outcome.timeouts[i],
+                retries: outcome.retries[i],
+                shed: outcome.shed[i],
+                goodput: if originals[i] == 0 {
+                    1.0
+                } else {
+                    lat.len() as f64 / originals[i] as f64
+                },
+            }
         })
         .collect();
+    let drain = outcome.drain;
     let total_calls = tenants.iter().map(|t| t.calls).sum();
     let offered_load = cfg
         .tenants
@@ -310,6 +602,8 @@ mod tests {
             algo,
             rate,
             seed: 7,
+            deadline: 0.0,
+            retries: 0,
         }
     }
 
@@ -374,6 +668,139 @@ mod tests {
         assert_eq!(percentile(&s, 99.0), 4.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // total_cmp sorts NaN last instead of panicking mid-report.
+        let s = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert!(percentile(&s, 99.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn deadline_sheds_or_retries_an_unservable_call() {
+        // Demand 1.0 against a 0.5 deadline: the call can never finish.
+        let calls = [Call { tenant: 0, arrival: 0.0 }];
+        let out = simulate_calls_resilient(1, &calls, &[1.0], 0, &[0.5], &[0]);
+        assert!(out.latencies[0].is_empty());
+        assert_eq!(out.timeouts[0], 1);
+        assert_eq!(out.retries[0], 0);
+        assert_eq!(out.shed[0], 1);
+        // One retry: re-issued at 0.5 + 0.5*2^0 = 1.0, times out again
+        // at 1.5, then shed — exponential backoff with no RNG.
+        let out = simulate_calls_resilient(1, &calls, &[1.0], 0, &[0.5], &[1]);
+        assert_eq!(out.timeouts[0], 2);
+        assert_eq!(out.retries[0], 1);
+        assert_eq!(out.shed[0], 1);
+        assert_eq!(out.issued[0], 2);
+        // A generous deadline changes nothing: completes at 1.0.
+        let out = simulate_calls_resilient(1, &calls, &[1.0], 0, &[2.0], &[3]);
+        assert_eq!(out.latencies[0], vec![1.0]);
+        assert_eq!(out.timeouts[0], 0);
+        assert_eq!(out.shed[0], 0);
+    }
+
+    #[test]
+    fn timeout_frees_capacity_for_the_survivor() {
+        // Both arrive at 0, demands 1.0 each, sharing at rate 1/2. Tenant
+        // 0's 1.5 s deadline fires before the shared completion at 2.0;
+        // tenant 1 then runs alone (progress 0.75) and finishes at 1.75.
+        let calls = [
+            Call { tenant: 0, arrival: 0.0 },
+            Call { tenant: 1, arrival: 0.0 },
+        ];
+        let out = simulate_calls_resilient(2, &calls, &[1.0, 1.0], 0, &[1.5, 0.0], &[0, 0]);
+        assert!(out.latencies[0].is_empty());
+        assert_eq!(out.shed[0], 1);
+        assert_eq!(out.latencies[1], vec![1.75]);
+        assert_eq!(out.drain, 1.75);
+    }
+
+    #[test]
+    fn queued_attempts_time_out_too() {
+        // pace=1: the second call waits its whole deadline in the queue
+        // and is cancelled without ever running.
+        let calls = [
+            Call { tenant: 0, arrival: 0.0 },
+            Call { tenant: 0, arrival: 0.0 },
+        ];
+        let out = simulate_calls_resilient(1, &calls, &[1.0], 1, &[0.8], &[0]);
+        assert!(out.latencies[0].is_empty());
+        assert_eq!(out.timeouts[0], 2);
+        assert_eq!(out.shed[0], 2);
+    }
+
+    #[test]
+    fn retry_succeeds_after_the_burst_clears() {
+        // Tenant 0: one huge call (demand 2.0, no deadline). Tenant 1:
+        // demand 0.5 under a 0.75 s deadline with 2 retries. Shared
+        // capacity makes attempts 1 and 2 miss; by the third attempt
+        // (t = 3.75) the engine is idle and the call lands at 4.25.
+        let calls = [
+            Call { tenant: 0, arrival: 0.0 },
+            Call { tenant: 1, arrival: 0.0 },
+        ];
+        let out =
+            simulate_calls_resilient(2, &calls, &[2.0, 0.5], 0, &[0.0, 0.75], &[0, 2]);
+        assert_eq!(out.latencies[0], vec![2.75]);
+        assert_eq!(out.latencies[1], vec![4.25]);
+        assert_eq!(out.timeouts[1], 2);
+        assert_eq!(out.retries[1], 2);
+        assert_eq!(out.shed[1], 0);
+        assert_eq!(out.drain, 4.25);
+    }
+
+    #[test]
+    fn resilient_loop_without_deadlines_matches_legacy_bitwise() {
+        let cfg = cfg2();
+        let calls = poisson_calls(&cfg);
+        let demands = [3.0e-4, 5.0e-4];
+        let (legacy, drain) = simulate_calls(2, &calls, &demands, 2);
+        let out = simulate_calls_resilient(2, &calls, &demands, 2, &[0.0, 0.0], &[0, 0]);
+        assert_eq!(out.drain.to_bits(), drain.to_bits());
+        for (a, b) in legacy.iter().zip(&out.latencies) {
+            assert_eq!(a.len(), b.len());
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn serve_reports_goodput_and_degradation_counters() {
+        // No deadlines: the legacy loop runs, goodput is exactly 1.
+        let cfg = cfg2();
+        let r = serve(&cfg).unwrap();
+        for t in &r.tenants {
+            assert_eq!(t.goodput, 1.0);
+            assert_eq!(t.timeouts + t.retries + t.shed, 0);
+        }
+        // An impossible deadline sheds everything, deterministically.
+        let mut strict = cfg2();
+        strict.tenants[0].deadline = 1e-9;
+        strict.tenants[0].retries = 1;
+        let r1 = serve(&strict).unwrap();
+        let r2 = serve(&strict).unwrap();
+        assert_eq!(r1.tenants[0].goodput, 0.0);
+        assert!(r1.tenants[0].shed > 0);
+        assert_eq!(r1.tenants[0].timeouts, 2 * r1.tenants[0].shed, "1 retry per call");
+        assert_eq!(r1.tenants[0].calls, 0);
+        assert!(r1.tenants[1].goodput > 0.0);
+        assert_eq!(r1.tenants[0].shed, r2.tenants[0].shed);
+        assert_eq!(r1.tenants[1].p99.to_bits(), r2.tenants[1].p99.to_bits());
+        // Bad degradation configs are typed errors.
+        let mut bad = cfg2();
+        bad.tenants[0].deadline = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg2();
+        bad.tenants[0].deadline = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg2();
+        bad.tenants[0].retries = 3;
+        assert!(bad.validate().is_err(), "retries without a deadline");
+        let mut bad = cfg2();
+        bad.profile.mem_bw = 0.0;
+        assert!(bad.validate().is_err(), "poisoned profile");
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! `tuna chaos` — fault-severity degradation sweeps.
+//!
+//! Sweeps deterministic fault severity (a straggler's CPU slowdown, then
+//! a sick link's bandwidth loss) against the algorithm families on a
+//! fixed topology, measuring every point exactly on the plan/replay
+//! executor through [`crate::coordinator::measure`] with the fault spec
+//! injected. The output is a set of *degradation curves* — faulted
+//! makespan over the family's healthy makespan — plus, per severity, the
+//! recommended (fastest-under-fault) family and the crossover points
+//! where the recommendation changes. Everything is a pure function of
+//! the config: two runs produce byte-identical `BENCH_faults.json`.
+
+use std::path::PathBuf;
+
+use crate::algos::{AlgoKind, ExecMode};
+use crate::comm::FaultSpec;
+use crate::coordinator::{measure, RunConfig};
+use crate::error::{Result, TunaError};
+use crate::model::MachineProfile;
+use crate::util::stats::fmt_time;
+use crate::util::table::Table;
+use crate::workload::Dist;
+
+/// CLI arguments of `tuna chaos`.
+#[derive(Clone, Debug)]
+pub struct ChaosArgs {
+    pub p: usize,
+    pub q: usize,
+    /// Max block size of the uniform workload, bytes.
+    pub s: u64,
+    pub iters: usize,
+    pub seed: u64,
+    pub profile: MachineProfile,
+    /// Output path for the JSON artifact.
+    pub out: PathBuf,
+    /// Smoke mode: smaller topology and a coarser severity grid.
+    pub quick: bool,
+}
+
+impl Default for ChaosArgs {
+    fn default() -> Self {
+        ChaosArgs {
+            p: 256,
+            q: 8,
+            s: 1024,
+            iters: 3,
+            seed: 0xC0FFEE,
+            profile: MachineProfile::fugaku(),
+            out: PathBuf::from("BENCH_faults.json"),
+            quick: false,
+        }
+    }
+}
+
+impl ChaosArgs {
+    /// Parse `p=256 q=8 s=1024 iters=3 seed=7 profile=fugaku
+    /// out=BENCH_faults.json` plus the `--quick` flag.
+    pub fn parse(args: &[String]) -> Result<ChaosArgs> {
+        let mut a = ChaosArgs::default();
+        for arg in args {
+            if arg == "--quick" {
+                a.quick = true;
+                continue;
+            }
+            let (k, v) = arg
+                .split_once('=')
+                .ok_or_else(|| TunaError::config(format!("expected key=value, got `{arg}`")))?;
+            let num = |v: &str| -> Result<usize> {
+                v.parse()
+                    .map_err(|_| TunaError::config(format!("bad number for {k}: `{v}`")))
+            };
+            match k {
+                "p" => a.p = num(v)?,
+                "q" => a.q = num(v)?,
+                "s" => a.s = num(v)? as u64,
+                "iters" => a.iters = num(v)?,
+                "seed" => a.seed = num(v)? as u64,
+                "profile" => {
+                    a.profile = MachineProfile::by_name(v).ok_or_else(|| {
+                        TunaError::config(format!(
+                            "unknown profile `{v}` (try polaris, fugaku, test-flat)"
+                        ))
+                    })?
+                }
+                "out" => a.out = PathBuf::from(v),
+                _ => return Err(TunaError::config(format!("unknown chaos key `{k}`"))),
+            }
+        }
+        if a.quick {
+            a.p = a.p.min(64);
+            a.q = a.q.min(8);
+            a.iters = a.iters.min(2);
+        }
+        if a.iters == 0 {
+            return Err(TunaError::config("chaos: iters must be >= 1"));
+        }
+        crate::comm::Topology::try_new(a.p, a.q)?;
+        Ok(a)
+    }
+}
+
+/// One measured sweep point.
+#[derive(Clone, Debug)]
+pub struct ChaosRow {
+    /// Fault dimension: "straggler" or "link".
+    pub fault: &'static str,
+    /// Severity knob: the straggler's `slow` factor, or `1/bw` for the
+    /// sick link (both read "1 = healthy, larger = sicker").
+    pub severity: f64,
+    pub algo: String,
+    pub makespan: f64,
+    /// `makespan / healthy makespan` of the same family.
+    pub degradation: f64,
+}
+
+/// The family menu the sweep ranks (flat log, hierarchical, linear).
+fn algo_menu(p: usize, q: usize) -> Vec<AlgoKind> {
+    let menu = [
+        AlgoKind::Tuna { radix: 4 },
+        AlgoKind::hier_coalesced(2, 2),
+        AlgoKind::SpreadOut,
+        AlgoKind::Pairwise,
+    ];
+    menu.into_iter().filter(|k| k.check(p, q).is_ok()).collect()
+}
+
+/// Severity grids: 1.0 (healthy anchor) first, then increasingly sick.
+fn severities(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![1.0, 2.0, 8.0]
+    } else {
+        vec![1.0, 1.5, 2.0, 4.0, 8.0, 16.0]
+    }
+}
+
+/// The fault spec for one (dimension, severity) cell. Severity 1.0 is
+/// the healthy anchor: an empty spec (provably zero-perturbation).
+fn spec_for(fault: &str, severity: f64) -> Result<FaultSpec> {
+    if severity <= 1.0 {
+        return Ok(FaultSpec::default());
+    }
+    let spec = match fault {
+        // The straggler sits mid-fleet; the sick link joins the first
+        // two nodes (both always exist: chaos topologies have >= 2
+        // nodes or the link dimension is skipped).
+        "straggler" => format!("straggler:rank=1,slow={severity}"),
+        "link" => format!("link:node=0-1,bw={}", 1.0 / severity),
+        other => return Err(TunaError::config(format!("unknown fault dimension `{other}`"))),
+    };
+    FaultSpec::parse(&spec)
+}
+
+/// Run the sweep: measure every (dimension, severity, family) cell in
+/// replay mode, derive degradation ratios, recommended families and
+/// crossovers. Returns the rows, the printed table, and the JSON.
+pub fn run(a: &ChaosArgs) -> Result<(Vec<ChaosRow>, Table, String)> {
+    let menu = algo_menu(a.p, a.q);
+    if menu.is_empty() {
+        return Err(TunaError::config("chaos: no runnable algorithm family"));
+    }
+    let dims: Vec<&'static str> = if a.p / a.q >= 2 {
+        vec!["straggler", "link"]
+    } else {
+        vec!["straggler"]
+    };
+    let base = RunConfig {
+        p: a.p,
+        q: a.q,
+        profile: a.profile.clone(),
+        dist: Dist::Uniform { max: a.s },
+        seed: a.seed,
+        iters: a.iters,
+        mode: ExecMode::Replay,
+        ..RunConfig::default()
+    };
+    let grid = severities(a.quick);
+    let mut rows: Vec<ChaosRow> = Vec::new();
+    for &fault in &dims {
+        // Healthy anchors per family, measured once per dimension (the
+        // empty spec is bit-identical to no fault injection at all).
+        let mut healthy: Vec<f64> = Vec::with_capacity(menu.len());
+        for kind in &menu {
+            let cfg = RunConfig {
+                faults: FaultSpec::default(),
+                ..base.clone()
+            };
+            healthy.push(measure(&cfg, kind)?.median());
+        }
+        for &sev in &grid {
+            for (kind, &h) in menu.iter().zip(&healthy) {
+                let cfg = RunConfig {
+                    faults: spec_for(fault, sev)?,
+                    ..base.clone()
+                };
+                let m = measure(&cfg, kind)?.median();
+                rows.push(ChaosRow {
+                    fault,
+                    severity: sev,
+                    algo: kind.name(),
+                    makespan: m,
+                    degradation: m / h,
+                });
+            }
+        }
+    }
+
+    let mut table = Table::new(
+        format!(
+            "tuna chaos — degradation on {} P={} Q={} S={}",
+            a.profile.name, a.p, a.q, a.s
+        ),
+        &["fault", "severity", "algo", "makespan", "degradation", "recommended"],
+    );
+    for &fault in &dims {
+        for &sev in &grid {
+            let best = recommended(&rows, fault, sev)
+                .map(|r| r.algo.clone())
+                .unwrap_or_default();
+            for r in rows.iter().filter(|r| r.fault == fault && r.severity == sev) {
+                table.row(vec![
+                    r.fault.to_string(),
+                    format!("{sev}"),
+                    r.algo.clone(),
+                    fmt_time(r.makespan),
+                    format!("{:.3}", r.degradation),
+                    if r.algo == best { "*".into() } else { String::new() },
+                ]);
+            }
+        }
+    }
+    table.note(
+        "severity 1 = healthy (empty fault spec, zero-perturbation); straggler = \
+         CPU slowdown of rank 1, link = bandwidth loss on the node 0-1 pair; every \
+         point measured exactly on the plan/replay executor with faults injected",
+    );
+
+    let json = to_json(a, &dims, &grid, &rows);
+    Ok((rows, table, json))
+}
+
+/// The fastest family at one (dimension, severity) cell.
+fn recommended<'a>(rows: &'a [ChaosRow], fault: &str, sev: f64) -> Option<&'a ChaosRow> {
+    rows.iter()
+        .filter(|r| r.fault == fault && r.severity == sev)
+        .min_by(|a, b| a.makespan.total_cmp(&b.makespan))
+}
+
+fn fmt_f(v: f64) -> String {
+    format!("{v:.9e}")
+}
+
+/// Hand-rolled JSON (the crate deliberately has no serde dependency).
+fn to_json(a: &ChaosArgs, dims: &[&'static str], grid: &[f64], rows: &[ChaosRow]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"config\": {{\"p\": {}, \"q\": {}, \"s\": {}, \"iters\": {}, \"seed\": {}, \
+         \"profile\": \"{}\", \"quick\": {}}},\n",
+        a.p, a.q, a.s, a.iters, a.seed, a.profile.name, a.quick
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"fault\": \"{}\", \"severity\": {}, \"algo\": \"{}\", \
+             \"makespan_s\": {}, \"degradation\": {}}}{}\n",
+            r.fault,
+            r.severity,
+            r.algo,
+            fmt_f(r.makespan),
+            fmt_f(r.degradation),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    // Per (dimension, severity): the recommended family, plus crossover
+    // points — severities where the recommendation changes from the
+    // previous grid step (the actionable output: "past slow=4, switch").
+    s.push_str("  \"recommended\": [\n");
+    let mut rec_lines: Vec<String> = Vec::new();
+    let mut crossovers: Vec<String> = Vec::new();
+    for &fault in dims {
+        let mut prev: Option<String> = None;
+        for &sev in grid {
+            if let Some(best) = recommended(rows, fault, sev) {
+                rec_lines.push(format!(
+                    "    {{\"fault\": \"{}\", \"severity\": {}, \"algo\": \"{}\", \
+                     \"makespan_s\": {}}}",
+                    fault,
+                    sev,
+                    best.algo,
+                    fmt_f(best.makespan)
+                ));
+                if let Some(p) = &prev {
+                    if *p != best.algo {
+                        crossovers.push(format!(
+                            "    {{\"fault\": \"{}\", \"severity\": {}, \"from\": \"{}\", \
+                             \"to\": \"{}\"}}",
+                            fault, sev, p, best.algo
+                        ));
+                    }
+                }
+                prev = Some(best.algo.clone());
+            }
+        }
+    }
+    s.push_str(&rec_lines.join(",\n"));
+    s.push_str("\n  ],\n  \"crossovers\": [\n");
+    s.push_str(&crossovers.join(",\n"));
+    if crossovers.is_empty() {
+        s.push_str("  ]\n}\n");
+    } else {
+        s.push_str("\n  ]\n}\n");
+    }
+    s
+}
+
+/// CLI entry: parse, run, print the table, write the JSON artifact.
+pub fn cmd(args: &[String]) -> Result<()> {
+    let a = ChaosArgs::parse(args)?;
+    let (rows, table, json) = run(&a)?;
+    println!("{}", table.render());
+    std::fs::write(&a.out, &json)?;
+    println!("chaos: {} sweep points, artifact {}", rows.len(), a.out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_chaos_args() {
+        let a = ChaosArgs::parse(&args("p=64 q=8 s=512 iters=2 seed=9")).unwrap();
+        assert_eq!((a.p, a.q), (64, 8));
+        assert_eq!(a.s, 512);
+        assert_eq!(a.iters, 2);
+        assert!(!a.quick);
+        let q = ChaosArgs::parse(&args("--quick")).unwrap();
+        assert!(q.quick);
+        assert!(q.p <= 64, "quick shrinks the topology");
+        assert!(ChaosArgs::parse(&args("p=10 q=4")).is_err());
+        assert!(ChaosArgs::parse(&args("iters=0")).is_err());
+        assert!(ChaosArgs::parse(&args("bogus=1")).is_err());
+    }
+
+    #[test]
+    fn severity_one_anchors_degradation_at_exactly_one() {
+        assert!(spec_for("straggler", 1.0).unwrap().is_empty());
+        assert!(spec_for("link", 1.0).unwrap().is_empty());
+        assert_eq!(spec_for("straggler", 8.0).unwrap().spec(), "straggler:rank=1,slow=8");
+        assert_eq!(spec_for("link", 2.0).unwrap().spec(), "link:node=0-1,bw=0.5");
+        assert!(spec_for("cosmic-rays", 2.0).is_err());
+    }
+
+    #[test]
+    fn chaos_harness_end_to_end() {
+        let a = ChaosArgs {
+            p: 16,
+            q: 4,
+            s: 256,
+            iters: 2,
+            profile: MachineProfile::test_flat(),
+            quick: true,
+            ..ChaosArgs::default()
+        };
+        let (rows, table, json) = run(&a).unwrap();
+        assert!(!rows.is_empty());
+        assert!(!table.rows.is_empty());
+        // The healthy anchor is exact: empty spec is zero-perturbation,
+        // so severity 1.0 rows have degradation == 1 bit for bit.
+        for r in rows.iter().filter(|r| r.severity == 1.0) {
+            assert_eq!(r.degradation.to_bits(), 1.0f64.to_bits(), "{} {}", r.fault, r.algo);
+        }
+        // Sicker is never faster: degradation is monotone per family.
+        let algos: std::collections::BTreeSet<String> =
+            rows.iter().map(|r| r.algo.clone()).collect();
+        for fault in ["straggler", "link"] {
+            for algo in &algos {
+                let degs: Vec<f64> = rows
+                    .iter()
+                    .filter(|r| r.fault == fault && r.algo == *algo)
+                    .map(|r| r.degradation)
+                    .collect();
+                assert!(
+                    degs.windows(2).all(|w| w[1] >= w[0] * (1.0 - 1e-12)),
+                    "{fault}/{algo}: {degs:?}"
+                );
+            }
+        }
+        assert!(json.contains("\"recommended\""));
+        assert!(json.contains("\"crossovers\""));
+        // Byte-identical on re-run.
+        let (_, _, json2) = run(&a).unwrap();
+        assert_eq!(json, json2);
+    }
+}

@@ -10,6 +10,7 @@
 //! column).
 
 pub mod boxplot;
+pub mod chaos;
 pub mod fig07;
 pub mod fig08;
 pub mod fig09;

@@ -36,6 +36,12 @@ pub struct ServeArgs {
     /// Admission-control knob: max concurrently admitted calls
     /// (0 = unlimited processor sharing).
     pub pace: usize,
+    /// Per-attempt deadline applied to every tenant, simulated seconds
+    /// (0 = none): timed-out calls are retried with exponential backoff
+    /// and shed when the budget runs out.
+    pub deadline: f64,
+    /// Retry budget per call (requires a deadline).
+    pub retries: u32,
     pub seed: u64,
     pub profile: MachineProfile,
     /// Output path for the JSON artifact.
@@ -53,6 +59,8 @@ impl Default for ServeArgs {
             seconds: 5.0,
             load: 0.7,
             pace: 0,
+            deadline: 0.0,
+            retries: 0,
             seed: 0xC0FFEE,
             profile: MachineProfile::fugaku(),
             out: PathBuf::from("BENCH_serve.json"),
@@ -62,8 +70,9 @@ impl Default for ServeArgs {
 }
 
 impl ServeArgs {
-    /// Parse `tenants=4 p=1024 q=16 seconds=2 load=0.7 pace=0 seed=7
-    /// profile=fugaku out=BENCH_serve.json` plus the `--quick` flag.
+    /// Parse `tenants=4 p=1024 q=16 seconds=2 load=0.7 pace=0
+    /// deadline=0.01 retries=2 seed=7 profile=fugaku
+    /// out=BENCH_serve.json` plus the `--quick` flag.
     pub fn parse(args: &[String]) -> Result<ServeArgs> {
         let mut a = ServeArgs::default();
         let mut load_given = false;
@@ -93,6 +102,8 @@ impl ServeArgs {
                     load_given = true;
                 }
                 "pace" => a.pace = num(v)?,
+                "deadline" => a.deadline = fnum(v)?,
+                "retries" => a.retries = num(v)? as u32,
                 "seed" => a.seed = num(v)? as u64,
                 "profile" => {
                     a.profile = MachineProfile::by_name(v).ok_or_else(|| {
@@ -170,6 +181,8 @@ pub fn default_tenants(a: &ServeArgs) -> Vec<TenantSpec> {
                 algo: menu[i % menu.len()],
                 rate: 1.0,
                 seed: a.seed.wrapping_add(i as u64),
+                deadline: a.deadline,
+                retries: a.retries,
             }
         })
         .collect()
@@ -210,7 +223,10 @@ pub fn run(a: &ServeArgs) -> Result<(ServeReport, Table, String)> {
             a.load,
             if a.pace == 0 { "unlimited".to_string() } else { a.pace.to_string() },
         ),
-        &["tenant", "algo", "P", "Q", "dist", "calls", "demand", "p50", "p95", "p99"],
+        &[
+            "tenant", "algo", "P", "Q", "dist", "calls", "demand", "p50", "p95", "p99", "shed",
+            "goodput",
+        ],
     );
     for t in &report.tenants {
         table.row(vec![
@@ -224,6 +240,8 @@ pub fn run(a: &ServeArgs) -> Result<(ServeReport, Table, String)> {
             fmt_time(t.p50),
             fmt_time(t.p95),
             fmt_time(t.p99),
+            t.shed.to_string(),
+            format!("{:.3}", t.goodput),
         ]);
     }
     table.note(format!(
@@ -251,6 +269,11 @@ fn to_json(a: &ServeArgs, cfg: &ServeConfig, demands: &[f64], report: &ServeRepo
          \"load\": {}, \"pace\": {}, \"seed\": {}, \"profile\": \"{}\", \"quick\": {}}},\n",
         a.tenants, a.p, a.q, a.seconds, a.load, a.pace, a.seed, a.profile.name, a.quick
     ));
+    s.push_str(&format!(
+        "  \"degradation\": {{\"deadline_s\": {}, \"retries\": {}}},\n",
+        fmt_f(a.deadline),
+        a.retries
+    ));
     s.push_str(&format!("  \"offered_load\": {},\n", fmt_f(report.offered_load)));
     s.push_str(&format!("  \"total_calls\": {},\n", report.total_calls));
     s.push_str(&format!("  \"drain_s\": {},\n", fmt_f(report.drain)));
@@ -259,7 +282,8 @@ fn to_json(a: &ServeArgs, cfg: &ServeConfig, demands: &[f64], report: &ServeRepo
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"algo\": \"{}\", \"p\": {}, \"q\": {}, \
              \"dist\": \"{}\", \"rate_hz\": {}, \"demand_s\": {}, \"calls\": {}, \
-             \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \"mean_s\": {}, \"max_s\": {}}}{}\n",
+             \"p50_s\": {}, \"p95_s\": {}, \"p99_s\": {}, \"mean_s\": {}, \"max_s\": {}, \
+             \"timeouts\": {}, \"retries\": {}, \"shed\": {}, \"goodput\": {}}}{}\n",
             t.name,
             t.algo,
             t.p,
@@ -273,6 +297,10 @@ fn to_json(a: &ServeArgs, cfg: &ServeConfig, demands: &[f64], report: &ServeRepo
             fmt_f(t.p99),
             fmt_f(t.mean),
             fmt_f(t.max),
+            t.timeouts,
+            t.retries,
+            t.shed,
+            fmt_f(t.goodput),
             if i + 1 < report.tenants.len() { "," } else { "" }
         ));
     }
@@ -339,6 +367,37 @@ mod tests {
         assert!(ServeArgs::parse(&args("p=10 q=4")).is_err());
         assert!(ServeArgs::parse(&args("pace=lots")).is_err());
         assert!(ServeArgs::parse(&args("bogus=1")).is_err());
+        let d = ServeArgs::parse(&args("deadline=0.01 retries=2")).unwrap();
+        assert_eq!(d.deadline, 0.01);
+        assert_eq!(d.retries, 2);
+        assert!(ServeArgs::parse(&args("deadline=soon")).is_err());
+    }
+
+    #[test]
+    fn degraded_serve_harness_reports_shedding() {
+        // A deadline far below any demand sheds every call: goodput 0,
+        // and the artifact carries the degradation columns.
+        let a = ServeArgs {
+            tenants: 2,
+            p: 16,
+            q: 4,
+            seconds: 0.05,
+            load: 0.5,
+            deadline: 1e-9,
+            retries: 1,
+            profile: MachineProfile::test_flat(),
+            quick: true,
+            ..ServeArgs::default()
+        };
+        let (report, table, json) = run(&a).unwrap();
+        assert!(report.tenants.iter().all(|t| t.goodput == 0.0));
+        assert!(report.tenants.iter().all(|t| t.shed > 0 && t.retries > 0));
+        assert!(json.contains("\"degradation\""));
+        assert!(json.contains("\"goodput\""));
+        assert!(table.rows.iter().all(|r| r.last().unwrap().as_str() == "0.000"));
+        // Deterministic under degradation too.
+        let (_, _, json2) = run(&a).unwrap();
+        assert_eq!(json, json2);
     }
 
     #[test]

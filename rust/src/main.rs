@@ -9,6 +9,8 @@
 //!            snapshot exists, full selection otherwise
 //!   serve    multi-tenant serving: N tenants with persistent handles,
 //!            Poisson traffic through one shared engine, p50/p95/p99
+//!   chaos    fault-severity degradation sweeps (straggler / sick link)
+//!            across algorithm families, with recommended crossovers
 //!   tc       distributed transitive closure on a synthetic graph
 //!   fft      distributed 4-step FFT through the PJRT runtime
 //!   list     list algorithms, profiles and distributions
@@ -56,6 +58,10 @@ fn dispatch(args: &[String]) -> Result<()> {
         "select" => cmd_select(rest),
         "tune" => cmd_tune(rest),
         "serve" => harness::serve::cmd(rest),
+        "chaos" => harness::chaos::cmd(rest),
+        // Hidden maintenance arm: hand-builds broken replay inputs so the
+        // CLI's typed-error path is testable end to end (tests/cli_errors.rs).
+        "debug-errors" => cmd_debug_errors(rest),
         "tc" => cmd_tc(rest),
         "fft" => cmd_fft(rest),
         "list" => cmd_list(),
@@ -86,6 +92,7 @@ USAGE:
                                            to ignore stored tables)
   tuna serve [--quick] [tenants=4] [p=1024] [q=16] [seconds=5] [load=0.7]
                                            [pace=0] [seed=N] [profile=..]
+                                           [deadline=T] [retries=N]
                                            [out=BENCH_serve.json]
                                            multi-tenant serving: each tenant
                                            freezes its collective in a
@@ -94,6 +101,23 @@ USAGE:
                                            p50/p95/p99 and writes a JSON
                                            artifact with a pace (admission
                                            knob) sweep. --quick = CI smoke.
+                                           deadline=T (secs) times out calls
+                                           whose attempt exceeds T; retries=N
+                                           re-issues each timed-out call up to
+                                           N times with exponential backoff
+                                           (deadline*2^k), then sheds it —
+                                           reported as timeouts/retries/shed
+                                           and goodput per tenant.
+  tuna chaos [--quick] [p=256] [q=8] [s=1024] [iters=3] [seed=N]
+                                           [profile=..] [out=BENCH_faults.json]
+                                           fault-severity degradation sweep:
+                                           straggler and sick-link faults at
+                                           increasing severity across algorithm
+                                           families (exact replay), reporting
+                                           degradation curves, the recommended
+                                           family per fault point, and the
+                                           crossovers where the recommendation
+                                           flips. --quick = CI smoke grid.
   tuna tc [n=220] [algo=<spec>] [key=value ...]
   tuna fft [n1=64] [n2=64] [algo=<spec>] [key=value ...]
   tuna list                                list algorithms / profiles / dists
@@ -114,10 +138,20 @@ CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   persistent (true|false: freeze the workload at `seed` and measure
   through one persistent handle — plan compilation, payload arenas and
   transposes are built once and reused by every iteration; also the only
-  way to run the persistent-only hier local `balanced` schedule)
+  way to run the persistent-only hier local `balanced` schedule),
+  faults (deterministic fault injection: '/'-separated clauses of
+  straggler:rank=R,slow=X | link:node=A-B,bw=F,lat=F |
+  jitter:sigma=S,seed=N | outage:node=N,from=T,until=T — pure
+  seed-keyed perturbations of the virtual clocks, so threaded and
+  sharded-replay runs stay bit-identical under any spec and any shard
+  count; empty spec is provably zero perturbation, e.g. `tuna run
+  algo=tuna:r=4 p=128 q=8 faults=straggler:rank=7,slow=8`)
 SELECT KEYS: shortlist (engine-refined candidates, default 6),
   refine (true|false), skewed (true|false: also stress the shortlist
-  under a heavy-tailed companion workload), top (rows printed),
+  under a heavy-tailed companion workload), faulted=<spec> (re-measure
+  the shortlist under the given fault spec — same grammar as faults= —
+  and score each candidate by its worst case across healthy and
+  faulted runs; requires refine=true), top (rows printed),
   table-dir, golden-dir
 ALGO SPECS: spread-out | ompi-linear | pairwise | scattered:b=N | vendor |
   bruck2 | tuna:r=N | tuna:auto | hier:l=<local>,g=<global>
@@ -479,6 +513,88 @@ fn cmd_fft(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Hidden maintenance arm behind `tuna debug-errors case=<name>`: builds a
+/// deliberately broken replay/persistent input in-process and feeds it to
+/// the real executors, so `tests/cli_errors.rs` can assert that every
+/// `ReplayError` variant (and the persistent stale-counts error) reaches
+/// the user as a typed `error: ...` message with exit code 1 — never a
+/// panic. Not listed in HELP: it exists only for the error-path tests.
+fn cmd_debug_errors(args: &[String]) -> Result<()> {
+    use tuna::comm::{CommPlan, Engine, PersistentColl, PlanBuilder, Topology};
+    use tuna::model::MachineProfile;
+    use tuna::workload::{BlockSizes, Dist};
+
+    let (special, rest) = split_args(args, &["case"]);
+    if let Some(extra) = rest.first() {
+        return Err(TunaError::config(format!(
+            "debug-errors takes only case=<name>, got `{extra}`"
+        )));
+    }
+    let case = get(&special, "case").ok_or_else(|| {
+        TunaError::config(
+            "usage: tuna debug-errors case=<shape-mismatch|plan-deadlock|undrained|stale-counts>",
+        )
+    })?;
+    let profile = MachineProfile::test_flat();
+    // Two-rank plan with rank 0 swapped in per case; rank 1 stays empty so
+    // the broken half is the whole story.
+    let broken = |r0: PlanBuilder| CommPlan {
+        p: 2,
+        q: 1,
+        algo: "debug".into(),
+        ranks: vec![r0.finish(), PlanBuilder::new(1, 2).finish()],
+        t_peak: 0,
+        rounds: 0,
+    };
+    match case {
+        "shape-mismatch" => {
+            // Plan compiled for P=2 replayed on a P=4 topology.
+            let plan = broken(PlanBuilder::new(0, 2));
+            tuna::comm::replay::execute(&profile, Topology::flat(4), &plan)?;
+        }
+        "plan-deadlock" => {
+            // Rank 0 waits on a receive no one ever sends.
+            let mut b = PlanBuilder::new(0, 2);
+            b.recv(1, 1);
+            b.wait();
+            tuna::comm::replay::execute(&profile, Topology::flat(2), &broken(b))?;
+        }
+        "undrained" => {
+            // Rank 0 sends a message rank 1 never receives.
+            let mut b = PlanBuilder::new(0, 2);
+            b.send(1, 1, 64);
+            b.wait();
+            tuna::comm::replay::execute(&profile, Topology::flat(2), &broken(b))?;
+        }
+        "stale-counts" => {
+            // Persistent handle frozen over one workload, started with
+            // another: the content-identity check must fire.
+            let engine = Engine::new(profile, Topology::flat(8));
+            let sizes = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 1);
+            let handle = PersistentColl::init(
+                &engine,
+                AlgoKind::SpreadOut,
+                &sizes,
+                false,
+                tuna::algos::ExecMode::Auto,
+            )?;
+            let drifted = BlockSizes::generate(8, Dist::Uniform { max: 64 }, 2);
+            handle.start(&drifted)?;
+        }
+        other => {
+            return Err(TunaError::config(format!(
+                "unknown debug-errors case `{other}` \
+                 (shape-mismatch|plan-deadlock|undrained|stale-counts)"
+            )));
+        }
+    }
+    // Every case above is constructed to fail; reaching here means the
+    // executors accepted a broken input.
+    Err(TunaError::validation(format!(
+        "debug-errors case `{case}` unexpectedly succeeded"
+    )))
+}
+
 fn cmd_list() -> Result<()> {
     println!("algorithms:");
     for a in [
@@ -501,6 +617,12 @@ fn cmd_list() -> Result<()> {
     println!(
         "distributions: uniform:S, normal, powerlaw, const:S, fft-n1, fft-n2, \
          sparse:nnz=K[,max=S]"
+    );
+    println!(
+        "fault clauses (faults= on run, faulted= on select): \
+         straggler:rank=R,slow=X, link:node=A-B,bw=F,lat=F, \
+         jitter:sigma=S,seed=N, outage:node=N,from=T,until=T \
+         ('/'-separated; deterministic, bit-identical across executors)"
     );
     println!("figures: {}", harness::ALL_FIGURES.join(", "));
     Ok(())

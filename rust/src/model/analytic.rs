@@ -132,6 +132,30 @@ impl<'a> Estimator<'a> {
         }
     }
 
+    /// Shape-aware estimate under fault injection: the healthy estimate
+    /// scaled by [`crate::comm::FaultModel::analytic_slowdown`] —
+    /// `makespan * mult + add`, where `mult` bounds the worst
+    /// multiplicative clause (straggler CPU, link bandwidth/latency,
+    /// jitter expectation) and `add` sums outage windows. Deliberately
+    /// coarse: the estimator replays one representative rank, so it
+    /// cannot localize a fault to the afflicted rank's critical path —
+    /// the exact executors do that; this arm only keeps beyond-budget
+    /// rankings fault-aware. Phase breakdowns are left unscaled (the
+    /// slowdown is not attributable to a single phase).
+    pub fn estimate_shape_faulted(
+        &self,
+        kind: &AlgoKind,
+        shape: &WorkloadShape,
+        faults: Option<&crate::comm::FaultModel>,
+    ) -> Estimate {
+        let mut est = self.estimate_shape(kind, shape);
+        if let Some(model) = faults.filter(|m| !m.is_empty()) {
+            let (mult, add) = model.analytic_slowdown();
+            est.makespan = est.makespan * mult + add;
+        }
+        est
+    }
+
     /// Sparse linear family: ~nnz structural messages (instead of P−1)
     /// of the structural mean size, batched by `block_count`.
     fn linear_sparse(&self, s_nz: f64, nnz: f64, block_count: usize, incast: bool) -> Estimate {
@@ -723,6 +747,33 @@ mod tests {
             .estimate_shape(&AlgoKind::Tuna { radix: 4 }, &shape)
             .makespan;
         assert!(tn > 0.0 && tn.is_finite());
+    }
+
+    #[test]
+    fn faulted_estimate_scales_makespan_coarsely() {
+        use crate::comm::{FaultModel, FaultSpec};
+        let prof = MachineProfile::fugaku();
+        let est = Estimator::new(&prof, Topology::new(256, 32));
+        let shape = WorkloadShape::dense(512.0);
+        let kind = AlgoKind::Tuna { radix: 4 };
+        let healthy = est.estimate_shape(&kind, &shape);
+        // None and the empty model are both exact no-ops.
+        let same = est.estimate_shape_faulted(&kind, &shape, None);
+        assert_eq!(healthy.makespan.to_bits(), same.makespan.to_bits());
+        let empty = FaultModel::compile(&FaultSpec::default(), 32);
+        let same = est.estimate_shape_faulted(&kind, &shape, Some(&empty));
+        assert_eq!(healthy.makespan.to_bits(), same.makespan.to_bits());
+        // A straggler multiplies; an outage adds its window on top.
+        let slow = FaultModel::compile(&FaultSpec::parse("straggler:rank=0,slow=4").unwrap(), 32);
+        let f = est.estimate_shape_faulted(&kind, &shape, Some(&slow));
+        assert_eq!(f.makespan.to_bits(), (healthy.makespan * 4.0).to_bits());
+        assert_eq!(f.phases, healthy.phases, "phases stay unscaled (documented coarse)");
+        let out = FaultModel::compile(
+            &FaultSpec::parse("outage:node=0,from=0.5,until=0.75").unwrap(),
+            32,
+        );
+        let f = est.estimate_shape_faulted(&kind, &shape, Some(&out));
+        assert!((f.makespan - (healthy.makespan + 0.25)).abs() < 1e-12);
     }
 
     #[test]

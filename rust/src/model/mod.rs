@@ -160,6 +160,65 @@ impl MachineProfile {
             _ => None,
         }
     }
+
+    /// Reject non-finite or out-of-range parameters with a typed
+    /// configuration error before they can poison makespans downstream
+    /// (a NaN latency turns every virtual time into NaN silently — the
+    /// clock never re-checks). Called wherever an engine is built from
+    /// caller-supplied parameters: `coordinator::measure`,
+    /// `select::measure_parallel`, `ServeConfig::validate` and the
+    /// harnesses. Latencies and overheads must be finite and >= 0;
+    /// per-byte costs, memory bandwidth and the congestion caps/slopes
+    /// must be finite, with `beta`/`mem_bw` strictly positive and the
+    /// caps >= 1 (a factor below 1 would make congestion *speed up*
+    /// transfers).
+    pub fn validate(&self) -> crate::error::Result<()> {
+        let bad = |field: &str, v: f64, need: &str| {
+            Err(crate::error::TunaError::config(format!(
+                "profile {}: {field} = {v} must be {need}",
+                self.name
+            )))
+        };
+        for (field, v) in [
+            ("alpha_l", self.alpha_l),
+            ("alpha_g", self.alpha_g),
+            ("o_send_l", self.o_send_l),
+            ("o_send_g", self.o_send_g),
+            ("o_recv_l", self.o_recv_l),
+            ("o_recv_g", self.o_recv_g),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return bad(field, v, "finite and >= 0");
+            }
+        }
+        for (field, v) in [
+            ("beta_l", self.beta_l),
+            ("beta_g", self.beta_g),
+            ("mem_bw", self.mem_bw),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return bad(field, v, "finite and > 0");
+            }
+        }
+        let c = &self.congestion;
+        for (field, v) in [("gamma_tx", c.gamma_tx), ("gamma_rx", c.gamma_rx)] {
+            if !v.is_finite() || v < 0.0 {
+                return bad(field, v, "finite and >= 0");
+            }
+        }
+        for (field, v) in [("tx_cap", c.tx_cap), ("rx_cap", c.rx_cap)] {
+            if !v.is_finite() || v < 1.0 {
+                return bad(field, v, "finite and >= 1");
+            }
+        }
+        if c.p_ref == 0 {
+            return Err(crate::error::TunaError::config(format!(
+                "profile {}: p_ref must be >= 1",
+                self.name
+            )));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +261,52 @@ mod tests {
         assert_eq!(MachineProfile::by_name("polaris").unwrap().name, "polaris");
         assert_eq!(MachineProfile::by_name("fugaku").unwrap().name, "fugaku");
         assert!(MachineProfile::by_name("summit").is_none());
+    }
+
+    #[test]
+    fn builtin_profiles_validate() {
+        for p in [
+            MachineProfile::polaris(),
+            MachineProfile::fugaku(),
+            MachineProfile::test_flat(),
+        ] {
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_every_poisoned_field() {
+        // Each (mutator, field name) poisons exactly one parameter; each
+        // must come back as a typed configuration error naming it.
+        type Mut = fn(&mut MachineProfile);
+        let cases: Vec<(Mut, &str)> = vec![
+            (|p| p.alpha_l = f64::NAN, "alpha_l"),
+            (|p| p.alpha_g = f64::INFINITY, "alpha_g"),
+            (|p| p.alpha_g = -1e-6, "alpha_g"),
+            (|p| p.beta_l = 0.0, "beta_l"),
+            (|p| p.beta_g = -1e-9, "beta_g"),
+            (|p| p.beta_g = f64::NAN, "beta_g"),
+            (|p| p.o_send_l = f64::NAN, "o_send_l"),
+            (|p| p.o_send_g = -1.0, "o_send_g"),
+            (|p| p.o_recv_l = f64::INFINITY, "o_recv_l"),
+            (|p| p.o_recv_g = f64::NAN, "o_recv_g"),
+            (|p| p.mem_bw = 0.0, "mem_bw"),
+            (|p| p.mem_bw = f64::NEG_INFINITY, "mem_bw"),
+            (|p| p.congestion.gamma_tx = -0.1, "gamma_tx"),
+            (|p| p.congestion.gamma_rx = f64::NAN, "gamma_rx"),
+            (|p| p.congestion.tx_cap = 0.5, "tx_cap"),
+            (|p| p.congestion.rx_cap = f64::NAN, "rx_cap"),
+        ];
+        for (mutate, field) in cases {
+            let mut p = MachineProfile::fugaku();
+            mutate(&mut p);
+            let e = p.validate().unwrap_err().to_string();
+            assert!(e.contains("configuration"), "{field}: {e}");
+            assert!(e.contains(field), "error should name `{field}`: {e}");
+        }
+        let mut p = MachineProfile::fugaku();
+        p.congestion.p_ref = 0;
+        let e = p.validate().unwrap_err().to_string();
+        assert!(e.contains("p_ref"), "{e}");
     }
 }

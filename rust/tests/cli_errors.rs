@@ -1,0 +1,157 @@
+//! End-to-end error-path contract for the `tuna` CLI.
+//!
+//! Every failure a user can trigger from the command line must surface as
+//! a typed `error: ...` message on stderr with a nonzero exit code —
+//! never a panic, never a zero exit with garbage output. The replay
+//! executor's `ReplayError` variants are not reachable from well-formed
+//! CLI inputs (the coordinator compiles plans and topologies that match
+//! by construction), so the hidden `tuna debug-errors case=<name>`
+//! maintenance arm hand-builds each broken input in-process and feeds it
+//! through the real `main` error path.
+
+use std::process::{Command, Output};
+
+fn tuna(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_tuna"))
+        .args(args)
+        .output()
+        .expect("spawn tuna binary")
+}
+
+/// Assert a failing invocation dies cleanly: nonzero exit, a typed
+/// `error: ` line containing `fragment`, and no panic anywhere.
+fn assert_typed_error(args: &[&str], fragment: &str) {
+    let out = tuna(args);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        !out.status.success(),
+        "`tuna {}` unexpectedly succeeded\nstdout: {stdout}",
+        args.join(" ")
+    );
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "`tuna {}` should exit 1 (a panic exits 101)\nstderr: {stderr}",
+        args.join(" ")
+    );
+    assert!(
+        stderr.starts_with("error: "),
+        "`tuna {}` stderr must start with `error: `\nstderr: {stderr}",
+        args.join(" ")
+    );
+    assert!(
+        stderr.contains(fragment),
+        "`tuna {}` stderr missing `{fragment}`\nstderr: {stderr}",
+        args.join(" ")
+    );
+    for s in [&stderr, &stdout] {
+        assert!(
+            !s.contains("panicked"),
+            "`tuna {}` panicked\noutput: {s}",
+            args.join(" ")
+        );
+    }
+}
+
+#[test]
+fn unknown_command_is_a_typed_error() {
+    assert_typed_error(&["frobnicate"], "unknown command");
+}
+
+#[test]
+fn unknown_config_key_is_a_typed_error() {
+    assert_typed_error(&["run", "algo=tuna:r=2", "bogus=1"], "unknown config key");
+}
+
+#[test]
+fn bad_topology_is_a_typed_error() {
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=10", "q=4"],
+        "must divide",
+    );
+}
+
+#[test]
+fn replay_with_real_payloads_is_a_typed_contradiction() {
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "mode=replay", "real=true"],
+        "phantom-only",
+    );
+}
+
+#[test]
+fn malformed_fault_spec_is_a_typed_error() {
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "faults=bogus"],
+        "faults",
+    );
+}
+
+#[test]
+fn out_of_range_fault_target_is_a_typed_error() {
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "faults=straggler:rank=99,slow=2"],
+        "rank",
+    );
+}
+
+#[test]
+fn serve_rejects_bad_degradation_knobs_with_typed_errors() {
+    assert_typed_error(&["serve", "--quick", "deadline=-1"], "deadline");
+    assert_typed_error(&["serve", "--quick", "retries=2"], "retries");
+}
+
+// Every `ReplayError` variant, plus the persistent stale-counts error,
+// through the real `error: {e}` / exit-1 path.
+
+#[test]
+fn replay_shape_mismatch_surfaces_through_the_cli() {
+    assert_typed_error(
+        &["debug-errors", "case=shape-mismatch"],
+        "plan/topology mismatch",
+    );
+}
+
+#[test]
+fn replay_deadlock_surfaces_through_the_cli() {
+    assert_typed_error(&["debug-errors", "case=plan-deadlock"], "replay deadlock");
+}
+
+#[test]
+fn undrained_mailbox_surfaces_through_the_cli() {
+    assert_typed_error(&["debug-errors", "case=undrained"], "not drained");
+}
+
+#[test]
+fn persistent_stale_counts_surfaces_through_the_cli() {
+    assert_typed_error(&["debug-errors", "case=stale-counts"], "frozen at init");
+}
+
+#[test]
+fn debug_errors_rejects_unknown_or_missing_cases() {
+    assert_typed_error(&["debug-errors", "case=nonsense"], "unknown debug-errors case");
+    assert_typed_error(&["debug-errors"], "usage: tuna debug-errors");
+}
+
+#[test]
+fn faulted_run_still_succeeds_end_to_end() {
+    // The fault path itself is not an error path: a well-formed spec on a
+    // tiny run exits 0 and prints a measurement.
+    let out = tuna(&[
+        "run",
+        "algo=spread-out",
+        "p=4",
+        "q=2",
+        "dist=uniform:64",
+        "iters=1",
+        "faults=straggler:rank=1,slow=2",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "faulted run failed\nstdout: {stdout}\nstderr: {stderr}"
+    );
+    assert!(stdout.contains("median"), "no measurement printed: {stdout}");
+}

@@ -16,7 +16,7 @@ use tuna::algos::{
     AlgoKind, ExecMode, GlobalAlgo, LocalAlgo,
 };
 use tuna::comm::replay::{self, ReplayError};
-use tuna::comm::{CommPlan, Engine, EngineResult, PlanBuilder, Topology};
+use tuna::comm::{CommPlan, Engine, EngineResult, FaultModel, FaultSpec, PlanBuilder, Topology};
 use tuna::coordinator::{measure, RunConfig};
 use tuna::model::MachineProfile;
 use tuna::util::prop::forall;
@@ -695,6 +695,140 @@ fn sparse_patching_requires_stable_structure() {
     let same = BlockSizes::generate(p, Dist::Sparse { nnz: 4, max: 256 }, 3);
     let unchanged = patch_plan(&e, &kind, &base, &base_plan, &same).unwrap();
     assert!(Arc::ptr_eq(&unchanged, &base_plan));
+}
+
+/// Fault specs valid on every grid below (rank targets < 12, node
+/// targets < 3): one spec per clause kind plus a combined spec, covering
+/// every perturbation path the clocks implement.
+fn fault_specs() -> Vec<FaultSpec> {
+    [
+        "straggler:rank=1,slow=4",
+        "link:node=0-1,bw=0.25,lat=2",
+        "jitter:sigma=0.2,seed=7",
+        "outage:node=0,from=0.0001,until=0.0002",
+        "straggler:rank=3,slow=2/link:node=0-2,bw=0.5,lat=1.5/jitter:sigma=0.1,seed=9/outage:node=1,from=0.00005,until=0.00015",
+    ]
+    .iter()
+    .map(|s| FaultSpec::parse(s).expect("grid specs parse"))
+    .collect()
+}
+
+/// The PR 8 tentpole contract: fault perturbations are a pure function
+/// of `(seed, rank, peer, event index)`, so threaded and replay
+/// execution stay bit-identical under any fault spec — and the sharded
+/// replay stays bit-identical at every shard count.
+#[test]
+fn faulted_runs_bit_identical_across_executors_and_shard_counts() {
+    let cases = [
+        (12usize, 4usize, Dist::Uniform { max: 512 }),
+        (12, 3, Dist::powerlaw_default()),
+        (24, 4, Dist::Sparse { nnz: 3, max: 256 }),
+    ];
+    let kinds = |p: usize, q: usize| {
+        let mut kinds = vec![
+            AlgoKind::SpreadOut,
+            AlgoKind::OmpiLinear,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 3 },
+            AlgoKind::Vendor,
+            AlgoKind::Bruck2,
+            AlgoKind::Tuna { radix: 2 },
+            AlgoKind::TunaAuto,
+        ];
+        if q >= 2 && p / q >= 2 {
+            kinds.push(AlgoKind::hier_coalesced(2, 2));
+            kinds.push(AlgoKind::hier_staggered(2, 3));
+            kinds.push(AlgoKind::Hier {
+                local: LocalAlgo::Linear,
+                global: GlobalAlgo::Bruck { radix: 2 },
+            });
+        }
+        kinds
+    };
+    for (p, q, dist) in cases {
+        let sizes = BlockSizes::generate(p, dist, p as u64);
+        for spec in fault_specs() {
+            let e = Engine::new(MachineProfile::fugaku(), Topology::new(p, q)).with_faults(&spec);
+            let model = FaultModel::compile(&spec, q);
+            for kind in kinds(p, q) {
+                // Threaded (rank threads, faulted clocks) vs replay
+                // (event loop, same lenses): zero tolerance.
+                assert_identical(&e, &kind, &sizes);
+                // Shard-count independence under the same fault model.
+                let plan = plan_for(&e, &kind, &sizes).unwrap();
+                let single =
+                    replay::execute_faulted(&e.profile, e.topo, &plan, 1, Some(&model)).unwrap();
+                for shards in [2usize, 4, 8] {
+                    let sharded =
+                        replay::execute_faulted(&e.profile, e.topo, &plan, shards, Some(&model))
+                            .unwrap();
+                    assert_results_identical(
+                        &single,
+                        &sharded,
+                        &format!(
+                            "{} P={p} Q={q} shards={shards} faults={}",
+                            kind.name(),
+                            spec.spec()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_runs_actually_differ_from_healthy_ones() {
+    // The identity above must not hold vacuously: a non-empty spec with
+    // real targets changes the makespan.
+    let (p, q) = (12usize, 4usize);
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, 3);
+    let healthy = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let spec = FaultSpec::parse("straggler:rank=1,slow=4").unwrap();
+    let faulted = Engine::new(MachineProfile::fugaku(), Topology::new(p, q)).with_faults(&spec);
+    for kind in [AlgoKind::SpreadOut, AlgoKind::Tuna { radix: 2 }] {
+        let h = run_alltoallv_replay(&healthy, &kind, &sizes).unwrap();
+        let f = run_alltoallv_replay(&faulted, &kind, &sizes).unwrap();
+        assert!(
+            f.makespan > h.makespan,
+            "{}: faulted {} not slower than healthy {}",
+            kind.name(),
+            f.makespan,
+            h.makespan
+        );
+    }
+}
+
+#[test]
+fn empty_fault_spec_is_provably_zero_perturbation() {
+    // The acceptance criterion: an empty spec leaves every recorded
+    // number bit-identical to a run with no fault plumbing at all — on
+    // the engine (empty specs compile to no model) and on the replay
+    // executor even when an explicit empty model is installed, whose
+    // identity lenses multiply every cost by exactly 1.0.
+    let (p, q) = (12usize, 4usize);
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, 3);
+    let plain = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let empty = Engine::new(MachineProfile::fugaku(), Topology::new(p, q))
+        .with_faults(&FaultSpec::default());
+    let empty_model = FaultModel::compile(&FaultSpec::default(), q);
+    for kind in [
+        AlgoKind::SpreadOut,
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::hier_coalesced(2, 2),
+    ] {
+        let a = run_alltoallv(&plain, &kind, &sizes, false).unwrap();
+        let b = run_alltoallv(&empty, &kind, &sizes, false).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{}", kind.name());
+        assert_eq!(a.phases, b.phases);
+        assert_eq!(a.counters, b.counters);
+        let plan = plan_for(&plain, &kind, &sizes).unwrap();
+        let bare = replay::execute(&plain.profile, plain.topo, &plan).unwrap();
+        let lensed =
+            replay::execute_faulted(&plain.profile, plain.topo, &plan, 2, Some(&empty_model))
+                .unwrap();
+        assert_results_identical(&bare, &lensed, &format!("{} empty-model lens", kind.name()));
+    }
 }
 
 #[test]
