@@ -294,6 +294,59 @@ fn bench_sweep(p: usize, q: usize, s: u64, radices: Vec<usize>) -> SweepRow {
     }
 }
 
+struct OverlapRow {
+    p: usize,
+    segments: usize,
+    algo: String,
+    blocking_makespan: f64,
+    pipelined_makespan: f64,
+    exposed_blocking: f64,
+    exposed_pipelined: f64,
+    overlap_speedup: f64,
+}
+
+/// The PR 9 acceptance row: one collective split into `segments` chunks
+/// and replayed twice over the same workload — blocking stitch vs
+/// pipelined stitch — with per-segment compute sized off a no-compute
+/// probe (one segment's worth of communication each, the regime where a
+/// pipeline can at best halve the critical path). The recorded numbers
+/// are *virtual* makespans and exposure counters, so the speedup is a
+/// property of the schedule, not of host wallclock.
+fn bench_overlap(p: usize, q: usize, segments: usize) -> OverlapRow {
+    use tuna::algos::{run_alltoallv_segmented_replay, SegmentCompute};
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let kind = AlgoKind::parse("hier:l=tuna:r=4,g=coalesced:b=2").unwrap();
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz: 16, max: 1024 }, 7);
+    let probe =
+        run_alltoallv_segmented_replay(&engine, &kind, &sizes, segments, false, &SegmentCompute::None)
+            .unwrap();
+    let per_seg = SegmentCompute::Uniform(probe.makespan / segments as f64);
+    let blocking =
+        run_alltoallv_segmented_replay(&engine, &kind, &sizes, segments, false, &per_seg).unwrap();
+    let pipelined =
+        run_alltoallv_segmented_replay(&engine, &kind, &sizes, segments, true, &per_seg).unwrap();
+    assert!(
+        pipelined.makespan <= blocking.makespan,
+        "pipelined stitch slower than blocking at P={p}: {} vs {}",
+        pipelined.makespan,
+        blocking.makespan
+    );
+    assert!(
+        pipelined.counters.exposed_comm <= blocking.counters.exposed_comm,
+        "pipelined stitch exposed more comm than blocking at P={p}"
+    );
+    OverlapRow {
+        p,
+        segments,
+        algo: kind.name(),
+        blocking_makespan: blocking.makespan,
+        pipelined_makespan: pipelined.makespan,
+        exposed_blocking: blocking.counters.exposed_comm,
+        exposed_pipelined: pipelined.counters.exposed_comm,
+        overlap_speedup: blocking.makespan / pipelined.makespan.max(1e-30),
+    }
+}
+
 fn bench_spawn(p: usize) -> f64 {
     let engine = Engine::new(MachineProfile::test_flat(), Topology::flat(p));
     let t0 = Instant::now();
@@ -520,6 +573,23 @@ fn main() {
         "persistent handle speedup {pers_speedup:.2}x below the 2x acceptance bar"
     );
 
+    // Segmented overlap vs blocking over one collective (the PR 9
+    // acceptance point): virtual-schedule speedup plus the exposed-comm
+    // reduction, at P = 4096 in both quick and full mode.
+    let ovl = bench_overlap(4096, 32, 4);
+    println!(
+        "\noverlap P={} {} K={}: blocking {:.6} s, pipelined {:.6} s — {:.2}x; \
+         exposed {:.6} -> {:.6} s",
+        ovl.p,
+        ovl.algo,
+        ovl.segments,
+        ovl.blocking_makespan,
+        ovl.pipelined_makespan,
+        ovl.overlap_speedup,
+        ovl.exposed_blocking,
+        ovl.exposed_pipelined
+    );
+
     println!();
     let spawn_grid: &[usize] = if quick { &[64, 256] } else { &[64, 256, 1024, 4096] };
     let mut spawn_rows: Vec<(usize, f64)> = Vec::new();
@@ -601,6 +671,19 @@ fn main() {
         pers.oneshot_s,
         pers.persistent_s,
         pers_speedup
+    ));
+    j.push_str(&format!(
+        "  \"overlap_speedup\": {{\"p\": {}, \"segments\": {}, \"algo\": \"{}\", \
+         \"blocking_makespan\": {:.9}, \"pipelined_makespan\": {:.9}, \
+         \"exposed_blocking\": {:.9}, \"exposed_pipelined\": {:.9}, \"speedup\": {:.2}}},\n",
+        ovl.p,
+        ovl.segments,
+        json_escape(&ovl.algo),
+        ovl.blocking_makespan,
+        ovl.pipelined_makespan,
+        ovl.exposed_blocking,
+        ovl.exposed_pipelined,
+        ovl.overlap_speedup
     ));
     j.push_str("  \"spawn\": [\n");
     for (i, (p, t)) in spawn_rows.iter().enumerate() {

@@ -38,10 +38,11 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::comm::{
-    Block, CommPlan, Counters, DataBuf, Engine, PhaseBreakdown, PlanBuilder, RankCtx, RankPlan,
+    Block, CommPlan, Counters, DataBuf, Engine, PhaseBreakdown, PlanBuilder, PlanOp, RankCtx,
+    RankPlan,
 };
 use crate::error::{Result, TunaError};
-use crate::workload::{fingerprint_one, BlockSizes};
+use crate::workload::{fingerprint_one, segment_counts, BlockSizes};
 
 /// MPICH's default throttle for its scattered alltoallv (`MPIR_CVAR_ALLTOALLV
 /// _THROTTLE`-style); our vendor proxy uses the same value.
@@ -678,6 +679,224 @@ pub(crate) fn replay_plan_report(
         rounds: plan.rounds,
         validated: true,
     })
+}
+
+/// Per-segment user compute charged by the segmented overlap driver
+/// ahead of each segment's communication.
+///
+/// * `None` — pure segmentation, no compute to hide (the `segments=1`
+///   bit-identity baseline).
+/// * `Uniform(secs)` — the same cost for every `(rank, segment)`; this
+///   is what the CLI's `compute=` knob produces, and the only variant
+///   the plan cache admits (its identity is one `f64`).
+/// * `PerRank(f)` — app-measured costs, `f(rank, segment)` seconds;
+///   closures have no content identity, so these plans bypass the
+///   cache.
+#[derive(Clone, Copy)]
+pub enum SegmentCompute<'a> {
+    None,
+    Uniform(f64),
+    PerRank(&'a (dyn Fn(usize, usize) -> f64 + Sync)),
+}
+
+impl<'a> SegmentCompute<'a> {
+    #[inline]
+    fn cost(&self, rank: usize, segment: usize) -> f64 {
+        match self {
+            SegmentCompute::None => 0.0,
+            SegmentCompute::Uniform(secs) => *secs,
+            SegmentCompute::PerRank(f) => f(rank, segment),
+        }
+    }
+
+    /// Cache identity when this variant has one (see [`SegmentCompute`]).
+    fn cache_id(&self) -> Option<u64> {
+        match self {
+            SegmentCompute::None => Some(0),
+            SegmentCompute::Uniform(secs) => Some(secs.to_bits()),
+            SegmentCompute::PerRank(_) => None,
+        }
+    }
+}
+
+/// Compile the **stitched** segmented plan for `kind` over `sizes`:
+/// [`segment_counts`] partitions every block's bytes into `segments`
+/// chunk workloads, each chunk compiles to a valid [`CommPlan`] through
+/// the ordinary [`compile_plan`] path, and the chunks are stitched into
+/// one plan per rank.
+///
+/// * `overlap=false` (blocking stitch): `Compute(c_i); chunk_i` in
+///   sequence — segmentation overhead with nothing hidden.
+/// * `overlap=true` (pipelined stitch): each chunk splits at its final
+///   `Wait` ([`RankPlan::split_at_last_wait`]); segment `i`'s compute
+///   runs *between* segment `i−1`'s last communication post and its
+///   completion wait, so the final round of every segment flies under
+///   the next segment's compute:
+///   `C₀ pre₀ · C₁ suf₀ pre₁ · C₂ suf₁ pre₂ · … · suf_{K−1}`.
+///
+/// At most one segment's communication is in flight per rank (the next
+/// prefix posts only after the previous suffix waits), so same-tag
+/// messages from consecutive segments can never race: per-channel FIFO
+/// delivery keeps them in segment order. With `K=1` and no compute the
+/// stitched plan is op-for-op the unsegmented plan — the `segments=1`
+/// bit-identity of `replay_equivalence.rs` holds by construction.
+///
+/// `t_peak`/`rounds` report the per-chunk maxima (the driver keeps at
+/// most two segments' buffers resident).
+pub fn compile_segmented_plan(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    segments: usize,
+    overlap: bool,
+    compute: &SegmentCompute,
+) -> Result<CommPlan> {
+    if segments == 0 {
+        return Err(TunaError::config("segments must be >= 1 (got 0)"));
+    }
+    let chunks = segment_counts(sizes, segments);
+    let mut plans = Vec::with_capacity(segments);
+    for chunk in &chunks {
+        plans.push(compile_plan(engine, kind, chunk)?);
+    }
+    let p = engine.topo.p();
+    let k = segments;
+    let push_compute = |ops: &mut Vec<PlanOp>, secs: f64| {
+        if secs > 0.0 {
+            ops.push(PlanOp::Compute { secs });
+        }
+    };
+    let mut ranks = Vec::with_capacity(p);
+    for r in 0..p {
+        let mut ops: Vec<PlanOp> = Vec::new();
+        if overlap {
+            push_compute(&mut ops, compute.cost(r, 0));
+            let (pre0, _) = plans[0].ranks[r].split_at_last_wait();
+            ops.extend_from_slice(pre0);
+            for i in 1..k {
+                push_compute(&mut ops, compute.cost(r, i));
+                let (_, suf_prev) = plans[i - 1].ranks[r].split_at_last_wait();
+                ops.extend_from_slice(suf_prev);
+                let (pre_i, _) = plans[i].ranks[r].split_at_last_wait();
+                ops.extend_from_slice(pre_i);
+            }
+            let (_, suf_last) = plans[k - 1].ranks[r].split_at_last_wait();
+            ops.extend_from_slice(suf_last);
+        } else {
+            for (i, plan) in plans.iter().enumerate() {
+                push_compute(&mut ops, compute.cost(r, i));
+                ops.extend_from_slice(&plan.ranks[r].ops);
+            }
+        }
+        ranks.push(RankPlan { ops });
+    }
+    Ok(CommPlan {
+        p,
+        q: engine.topo.q(),
+        algo: kind.name(),
+        ranks,
+        t_peak: plans.iter().map(|pl| pl.t_peak).max().unwrap_or(0),
+        rounds: plans.iter().map(|pl| pl.rounds).max().unwrap_or(0),
+    })
+}
+
+/// Fetch (or compile) the stitched segmented plan through the engine's
+/// plan cache. Cacheable compute variants extend [`plan_key`] with
+/// `(segments, overlap, compute identity)`; `PerRank` closures compile
+/// fresh every call.
+pub fn segmented_plan_for(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    segments: usize,
+    overlap: bool,
+    compute: &SegmentCompute,
+) -> Result<Arc<CommPlan>> {
+    match compute.cache_id() {
+        None => compile_segmented_plan(engine, kind, sizes, segments, overlap, compute)
+            .map(Arc::new),
+        Some(cid) => {
+            let (spec, mut h) = plan_key(engine, kind, sizes);
+            let mut mix = |v: u64| {
+                h ^= v;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            };
+            mix(segments as u64);
+            mix(overlap as u64 + 1);
+            mix(cid);
+            let key = (format!("{spec}#segments={segments},overlap={overlap}"), h);
+            engine
+                .plan_cache
+                .get_or_try_insert(key, engine.topo.p(), engine.topo.q(), || {
+                    compile_segmented_plan(engine, kind, sizes, segments, overlap, compute)
+                })
+        }
+    }
+}
+
+/// Run the segmented overlap driver on the **threaded** engine: the
+/// stitched plan is interpreted op-for-op by every rank thread
+/// ([`RankCtx::run_plan`]), so message matching is real and timing is
+/// virtual, exactly like any threaded collective. Phantom-only — plans
+/// model sizes, never payload bytes — and bit-identical to
+/// [`run_alltoallv_segmented_replay`] (asserted by
+/// `tests/replay_equivalence.rs`). `validated` reflects the compile-time
+/// schedule checks, as in replay.
+pub fn run_alltoallv_segmented(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    segments: usize,
+    overlap: bool,
+    compute: &SegmentCompute,
+) -> Result<RunReport> {
+    if kind.persistent_only() {
+        return Err(TunaError::config(format!(
+            "{} is persistent-only: its setup is amortized per handle, not per \
+             call — construct it through comm::persist::PersistentColl",
+            kind.name()
+        )));
+    }
+    let plan = segmented_plan_for(engine, kind, sizes, segments, overlap, compute)?;
+    let plan_ref = &plan;
+    let res = engine.run(move |ctx| {
+        ctx.run_plan(&plan_ref.ranks[ctx.rank()]);
+    });
+    Ok(RunReport {
+        algo: kind.name(),
+        makespan: res.makespan,
+        phases: res.phase_critical_path(),
+        counters: res.total_counters(),
+        t_peak: plan.t_peak,
+        rounds: plan.rounds,
+        validated: true,
+    })
+}
+
+/// Run the segmented overlap driver on the **sharded replay** executor:
+/// same stitched plan, advanced by `comm/replay.rs` under
+/// `engine.replay_shards` workers (auto-sized when unset), bit-identical
+/// to the threaded driver and across every shard count.
+pub fn run_alltoallv_segmented_replay(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    segments: usize,
+    overlap: bool,
+    compute: &SegmentCompute,
+) -> Result<RunReport> {
+    if kind.persistent_only() {
+        return Err(TunaError::config(format!(
+            "{} is persistent-only: its setup is amortized per handle, not per \
+             call — construct it through comm::persist::PersistentColl",
+            kind.name()
+        )));
+    }
+    let plan = segmented_plan_for(engine, kind, sizes, segments, overlap, compute)?;
+    let shards = engine
+        .replay_shards
+        .unwrap_or_else(|| crate::comm::replay::auto_shards(engine.topo.p()));
+    replay_plan_report(engine, kind, &plan, shards)
 }
 
 /// The cache key of `kind`'s plan for `sizes` on `engine`: `(resolved

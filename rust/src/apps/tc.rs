@@ -106,6 +106,19 @@ fn shuffle(
 /// Run distributed transitive closure of `g` on `engine` using `kind` for
 /// every shuffle. Validates against [`sequential_tc`] when `validate`.
 pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Result<TcReport> {
+    run_tc_inner(engine, kind, g, validate).map(|(rep, _, _)| rep)
+}
+
+/// [`run_tc`], additionally returning the run's aggregate shuffle byte
+/// matrix (`matrix[src][dst]` over every exchange of the fixed point)
+/// and per-rank host seconds spent in join/dedup compute — the inputs
+/// the segmented overlap twin replays.
+fn run_tc_inner(
+    engine: &Engine,
+    kind: &AlgoKind,
+    g: &Graph,
+    validate: bool,
+) -> Result<(TcReport, Vec<Vec<u64>>, Vec<f64>)> {
     let p = engine.topo.p();
     kind.check(p, engine.topo.q())?;
     let wall0 = std::time::Instant::now();
@@ -117,6 +130,15 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
         let p = ctx.size();
         let own = |v: u32| (v as usize) % p;
         let mut comm_time = 0.0f64;
+        // Aggregate per-destination bytes across every shuffle, and the
+        // host compute charged to the clock — the overlap twin's inputs.
+        let mut sent = vec![0u64; p];
+        let mut compute_secs = 0.0f64;
+        fn tally(sent: &mut [u64], buckets: &[Vec<(u32, u32)>]) {
+            for (d, b) in buckets.iter().enumerate() {
+                sent[d] += (b.len() * 8) as u64;
+            }
+        }
 
         // Initial distribution: striped ownership of the edge list, then
         // two shuffles to the join/store partitions (real startup comm).
@@ -134,6 +156,8 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
             to_join[own(a)].push((a, b));
             to_store[own(b)].push((a, b));
         }
+        tally(&mut sent, &to_join);
+        tally(&mut sent, &to_store);
         let t0 = ctx.now();
         let join_edges = shuffle(ctx, &kind, to_join);
         let stored = shuffle(ctx, &kind, to_store);
@@ -158,6 +182,7 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
             for &(x, y) in &delta {
                 delta_to_join[own(y)].push((x, y));
             }
+            tally(&mut sent, &delta_to_join);
             let t = ctx.now();
             let delta_joinside = shuffle(ctx, &kind, delta_to_join);
             comm_time += ctx.now() - t;
@@ -175,8 +200,11 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
             }
             // Charge the real join work to the virtual clock too, so the
             // simulated total reflects compute + comm.
-            ctx.compute(wall_join.elapsed().as_secs_f64());
+            let join_secs = wall_join.elapsed().as_secs_f64();
+            compute_secs += join_secs;
+            ctx.compute(join_secs);
 
+            tally(&mut sent, &new_buckets);
             let t = ctx.now();
             let arrivals = shuffle(ctx, &kind, new_buckets);
             comm_time += ctx.now() - t;
@@ -186,14 +214,16 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
                 .into_iter()
                 .filter(|tup| paths.insert(*tup))
                 .collect();
-            ctx.compute(wall_dedup.elapsed().as_secs_f64());
+            let dedup_secs = wall_dedup.elapsed().as_secs_f64();
+            compute_secs += dedup_secs;
+            ctx.compute(dedup_secs);
 
             let fresh = ctx.allreduce_sum(delta.len() as u64);
             if fresh == 0 {
                 break;
             }
         }
-        (paths.len() as u64, iterations, comm_time)
+        (paths.len() as u64, iterations, comm_time, sent, compute_secs)
     });
 
     let paths: u64 = res.ranks.iter().map(|r| r.value.0).sum();
@@ -203,6 +233,8 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
         .iter()
         .map(|r| r.value.2)
         .fold(0.0f64, f64::max);
+    let matrix: Vec<Vec<u64>> = res.ranks.iter().map(|r| r.value.3.clone()).collect();
+    let compute_secs: Vec<f64> = res.ranks.iter().map(|r| r.value.4).collect();
 
     if validate {
         let expect = sequential_tc(g);
@@ -213,12 +245,76 @@ pub fn run_tc(engine: &Engine, kind: &AlgoKind, g: &Graph, validate: bool) -> Re
         }
     }
 
-    Ok(TcReport {
-        paths,
-        iterations,
-        makespan: res.makespan,
-        comm_time,
-        wall: wall0.elapsed().as_secs_f64(),
+    Ok((
+        TcReport {
+            paths,
+            iterations,
+            makespan: res.makespan,
+            comm_time,
+            wall: wall0.elapsed().as_secs_f64(),
+        },
+        matrix,
+        compute_secs,
+    ))
+}
+
+/// Timing twin of [`run_tc`] under segmented overlap: blocking vs
+/// pipelined accounting of the mining run's aggregate shuffle traffic.
+#[derive(Clone, Debug)]
+pub struct TcOverlapReport {
+    /// The validated blocking run the twin is derived from.
+    pub base: TcReport,
+    /// Segment count K of the phantom timing runs.
+    pub segments: usize,
+    /// Makespan with join compute serialized before each exchange
+    /// segment (overlap=false).
+    pub blocking_makespan: f64,
+    /// Makespan with segment-i join work interleaved into
+    /// segment-(i−1)'s exchange (overlap=true).
+    pub pipelined_makespan: f64,
+    /// Comm seconds program order stalled on, blocking run.
+    pub exposed_blocking: f64,
+    /// Same, pipelined run.
+    pub exposed_pipelined: f64,
+    /// Comm seconds hidden behind host progress, pipelined run.
+    pub hidden_pipelined: f64,
+}
+
+/// Run the validated transitive closure once, then re-run its aggregate
+/// shuffle traffic as one segmented phantom collective, twice — blocking
+/// and pipelined — charging each rank's measured join/dedup seconds in K
+/// per-segment slices. The counts matrix is the run's own: `matrix[src]
+/// [dst]` sums the tuple bytes `src` shipped to `dst` over every
+/// exchange of the fixed point, so the twin times exactly the traffic
+/// the mining run moved.
+pub fn run_tc_overlap(
+    engine: &Engine,
+    kind: &AlgoKind,
+    g: &Graph,
+    validate: bool,
+    segments: usize,
+) -> Result<TcOverlapReport> {
+    use crate::algos::{run_alltoallv_segmented, SegmentCompute};
+    use crate::workload::BlockSizes;
+    if segments == 0 {
+        return Err(crate::TunaError::config(
+            "segments must be >= 1 (segments=1 is the unsegmented run)",
+        ));
+    }
+    let (base, matrix, compute_secs) = run_tc_inner(engine, kind, g, validate)?;
+    let sizes = BlockSizes::from_dense(matrix);
+    let per_segment = move |rank: usize, _segment: usize| compute_secs[rank] / segments as f64;
+    let compute = SegmentCompute::PerRank(&per_segment);
+    let blocking = run_alltoallv_segmented(engine, kind, &sizes, segments, false, &compute)?;
+    let pipelined = run_alltoallv_segmented(engine, kind, &sizes, segments, true, &compute)?;
+    Ok(TcOverlapReport {
+        base,
+        segments,
+        blocking_makespan: blocking.makespan,
+        pipelined_makespan: pipelined.makespan,
+        exposed_blocking: blocking.counters.exposed_comm,
+        exposed_pipelined: pipelined.counters.exposed_comm,
+        hidden_pipelined: pipelined.counters.hidden_comm,
     })
 }
 
@@ -263,6 +359,30 @@ mod tests {
             let rep = run_tc(&engine(8, 4), &kind, &g, true).unwrap();
             assert!(rep.paths > 0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn pipelined_tc_twin_hides_join_compute() {
+        let g = Graph::chain(24);
+        let rep = run_tc_overlap(&engine(4, 2), &AlgoKind::Tuna { radix: 2 }, &g, true, 4).unwrap();
+        assert_eq!(rep.base.paths, 24 * 23 / 2);
+        // The twin moved real traffic with real measured compute: the
+        // pipeline must hide some of the exchange the blocking schedule
+        // exposes, never at a makespan cost.
+        assert!(rep.exposed_blocking > 0.0);
+        assert!(
+            rep.exposed_pipelined < rep.exposed_blocking,
+            "pipeline hid nothing: exposed {} vs blocking {}",
+            rep.exposed_pipelined,
+            rep.exposed_blocking
+        );
+        assert!(rep.hidden_pipelined > 0.0);
+        assert!(rep.pipelined_makespan <= rep.blocking_makespan);
+        // segments=0 is a typed config error, not a panic.
+        let e = run_tc_overlap(&engine(4, 2), &AlgoKind::Tuna { radix: 2 }, &g, false, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("segments"), "{e}");
     }
 
     #[test]

@@ -28,6 +28,19 @@ pub struct Counters {
     /// bytes read at sinks exactly — the zero-copy invariant asserted by
     /// `tests/zero_copy.rs`.
     pub copied_bytes: u64,
+    /// Virtual seconds of communication the rank's program order
+    /// actually stalled on: the tail of each comm window (first
+    /// post-since-wait → wait completion) past the point program order
+    /// had already reached when the wait resolved. Measured, not
+    /// inferred — segmented overlap drivers shrink this without
+    /// changing `hidden_comm + exposed_comm`.
+    pub exposed_comm: f64,
+    /// Virtual seconds of communication hidden behind host progress
+    /// (posting overhead, copies, interleaved `Compute` ops) inside the
+    /// same windows. `exposed_comm + hidden_comm` is the total comm
+    /// window time by construction (each window contributes
+    /// `exposed` and `total - exposed`).
+    pub hidden_comm: f64,
 }
 
 impl Counters {
@@ -38,6 +51,8 @@ impl Counters {
         self.bytes_global += other.bytes_global;
         self.bytes_copied += other.bytes_copied;
         self.copied_bytes += other.copied_bytes;
+        self.exposed_comm += other.exposed_comm;
+        self.hidden_comm += other.hidden_comm;
     }
 
     pub fn total_msgs(&self) -> u64 {
@@ -46,6 +61,13 @@ impl Counters {
 
     pub fn total_bytes(&self) -> u64 {
         self.bytes_local + self.bytes_global
+    }
+
+    /// Total communication window time: the sum both exposure counters
+    /// partition. (Each wait contributes `exposed` and `total - exposed`,
+    /// so the identity is exact by construction.)
+    pub fn comm_window(&self) -> f64 {
+        self.exposed_comm + self.hidden_comm
     }
 }
 
@@ -72,6 +94,10 @@ pub struct Clock {
     /// index. Drain order is deterministic (`(arrive, src, tag)`), so
     /// the sequence is executor-independent too.
     rx_events: u64,
+    /// Program-order time at which the currently open comm window
+    /// started: set by the first send/recv posted since the last wait,
+    /// resolved (into `exposed_comm`/`hidden_comm`) by `finish_wait`.
+    comm_open: Option<f64>,
     pub counters: Counters,
 }
 
@@ -102,6 +128,7 @@ impl Clock {
             faults,
             tx_events: 0,
             rx_events: 0,
+            comm_open: None,
             counters: Counters::default(),
         }
     }
@@ -139,6 +166,9 @@ impl Clock {
             None => (1.0, 1.0, 1.0),
         };
         self.tx_events += 1;
+        if self.comm_open.is_none() {
+            self.comm_open = Some(self.now);
+        }
         self.now += prof.o_send(link) * cpu;
         let factor = match link {
             Link::Local => 1.0,
@@ -172,6 +202,9 @@ impl Clock {
             Some(f) => f.cpu(),
             None => 1.0,
         };
+        if self.comm_open.is_none() {
+            self.comm_open = Some(self.now);
+        }
         // Posting an irecv costs a fraction of a full receive overhead.
         self.now += 0.25 * prof.o_recv(link) * cpu;
     }
@@ -273,8 +306,21 @@ impl Clock {
         self.rx_free + prof.o_recv(link) * cpu
     }
 
-    /// A wait completed at `t`: advance program order and close the burst.
+    /// A wait completed at `t`: advance program order and close the
+    /// burst. Resolves the open comm window (if any) into the exposure
+    /// counters: the window runs from the first post since the previous
+    /// wait to the wait's completion; the part past the rank's current
+    /// program-order time was *exposed* (the rank stalled on it), the
+    /// rest was *hidden* behind whatever the rank did meanwhile
+    /// (posting overhead, copies, interleaved compute).
     pub fn finish_wait(&mut self, t: f64) {
+        if let Some(start) = self.comm_open.take() {
+            let end = t.max(self.now);
+            let total = (end - start).max(0.0);
+            let exposed = (end - self.now).max(0.0).min(total);
+            self.counters.exposed_comm += exposed;
+            self.counters.hidden_comm += total - exposed;
+        }
         self.now = self.now.max(t);
         self.outstanding_tx = 0;
     }
@@ -353,6 +399,8 @@ mod tests {
             bytes_global: 4,
             bytes_copied: 5,
             copied_bytes: 6,
+            exposed_comm: 0.5,
+            hidden_comm: 0.25,
         };
         let b = a;
         a.merge(&b);
@@ -362,6 +410,52 @@ mod tests {
         assert_eq!(a.bytes_global, 8);
         assert_eq!(a.bytes_copied, 10);
         assert_eq!(a.copied_bytes, 12);
+        assert_eq!(a.exposed_comm, 1.0);
+        assert_eq!(a.hidden_comm, 0.5);
+        assert_eq!(a.comm_window(), 1.5);
+    }
+
+    #[test]
+    fn exposure_partitions_each_comm_window_exactly() {
+        let p = prof();
+        // Window opens at the first post; program order then advances
+        // (as if the rank computed); the wait's tail past `now` is
+        // exposed, the covered part hidden. Dyadic values make every
+        // operation exact, so the partition is asserted bitwise:
+        // exposed + hidden == window total.
+        let mut c = Clock::new();
+        c.post_send(&p, Link::Global, 1000, 64); // window starts at 0.0
+        c.now = 3.0; // host progress inside the window
+        c.finish_wait(5.0);
+        assert_eq!(c.counters.exposed_comm.to_bits(), 2.0f64.to_bits());
+        assert_eq!(c.counters.hidden_comm.to_bits(), 3.0f64.to_bits());
+        assert_eq!(c.counters.comm_window().to_bits(), 5.0f64.to_bits());
+        // The window closed: a wait with nothing posted adds nothing.
+        c.finish_wait(9.0);
+        assert_eq!(c.counters.comm_window().to_bits(), 5.0f64.to_bits());
+
+        // A wait that resolves behind program order is fully hidden.
+        let mut h = Clock::new();
+        h.post_send(&p, Link::Global, 1000, 64);
+        h.now = 8.0;
+        h.finish_wait(2.0);
+        assert_eq!(h.counters.exposed_comm.to_bits(), 0.0f64.to_bits());
+        assert_eq!(h.counters.hidden_comm.to_bits(), 8.0f64.to_bits());
+        assert_eq!(h.now, 8.0);
+
+        // Receive-only windows open at the recv post too.
+        let mut r = Clock::new();
+        r.now = 1.0;
+        r.post_recv(&p, Link::Global);
+        r.now = 1.5;
+        r.finish_wait(3.5);
+        assert_eq!(r.counters.exposed_comm.to_bits(), 2.0f64.to_bits());
+        assert_eq!(r.counters.hidden_comm.to_bits(), 0.5f64.to_bits());
+
+        // No window, no exposure.
+        let mut n = Clock::new();
+        n.finish_wait(5.0);
+        assert_eq!(n.counters.comm_window(), 0.0);
     }
 
     #[test]

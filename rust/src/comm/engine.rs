@@ -461,6 +461,50 @@ impl<'e> RankCtx<'e> {
     pub fn barrier(&mut self) {
         self.allreduce_max(0);
     }
+
+    // ---- plan interpretation ----------------------------------------------
+
+    /// Interpret one compiled rank plan op-for-op on this context — the
+    /// threaded twin of the replay executor's loop, used by the segmented
+    /// overlap driver so both executors run the identical stitched
+    /// schedule. Sends carry phantom payloads (plans model sizes, never
+    /// bytes) and go through `isend_impl` directly: compiled plans
+    /// legitimately carry reserved allreduce tags (`TAG_AR_*`), which the
+    /// public `isend` rejects. `Wait` resolves exactly the sends/recvs
+    /// posted since the previous `Wait`, matching `PlanOp::Wait`
+    /// semantics and the replay executor's pending-set handling.
+    pub fn run_plan(&mut self, plan: &super::plan::RankPlan) {
+        use super::buffer::DataBuf;
+        use super::plan::PlanOp;
+        let mut sends: Vec<SendReq> = Vec::new();
+        let mut recvs: Vec<RecvReq> = Vec::new();
+        for op in &plan.ops {
+            match *op {
+                PlanOp::Send { dst, tag, bytes } => {
+                    let req =
+                        self.isend_impl(dst as usize, tag, Payload::Raw(DataBuf::Phantom(bytes)));
+                    sends.push(req);
+                }
+                PlanOp::Recv { src, tag } => {
+                    recvs.push(self.irecv(src as usize, tag));
+                }
+                PlanOp::Wait => {
+                    let _ = self.waitall(&sends, &recvs);
+                    sends.clear();
+                    recvs.clear();
+                }
+                PlanOp::Copy { bytes } => self.copy(bytes),
+                PlanOp::Compute { secs } => self.compute(secs),
+                PlanOp::Mark => self.phase_mark(),
+                PlanOp::Lap { phase } => self.phase_lap(phase),
+            }
+        }
+        debug_assert!(
+            sends.is_empty() && recvs.is_empty(),
+            "rank {} plan ended with posted ops and no closing Wait",
+            self.rank
+        );
+    }
 }
 
 pub(crate) fn prev_pow2(n: usize) -> usize {

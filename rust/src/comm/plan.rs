@@ -69,6 +69,23 @@ pub struct RankPlan {
     pub ops: Vec<PlanOp>,
 }
 
+impl RankPlan {
+    /// Split this rank's ops at the final `Wait`: `(prefix, suffix)`
+    /// where the suffix starts with the last `Wait` (and carries any
+    /// trailing ops, e.g. the closing `Lap`). The segmented overlap
+    /// driver stitches chunk plans by deferring each chunk's suffix
+    /// until after the next chunk's compute — the prefix posts the
+    /// chunk's communication, the suffix is the completion point that
+    /// user compute can hide. A plan with no `Wait` at all is all
+    /// prefix (nothing in flight to hide).
+    pub fn split_at_last_wait(&self) -> (&[PlanOp], &[PlanOp]) {
+        match self.ops.iter().rposition(|op| matches!(op, PlanOp::Wait)) {
+            Some(i) => self.ops.split_at(i),
+            None => (&self.ops[..], &[]),
+        }
+    }
+}
+
 /// A compiled collective: per-rank op sequences plus the schedule stats
 /// the run report carries (identical on every rank for the shipped
 /// algorithms, so they are stored once).
@@ -602,6 +619,35 @@ mod tests {
         assert_eq!(patched.ranks[1].ops, vec![PlanOp::Copy { bytes: 999 }]);
         assert_eq!((patched.t_peak, patched.rounds), (5, 7));
         assert_eq!(patched.algo, base.algo);
+    }
+
+    #[test]
+    fn split_at_last_wait_keeps_trailing_ops_with_the_suffix() {
+        let mut b = PlanBuilder::new(0, 4);
+        b.mark();
+        b.send(1, 0, 64);
+        b.recv(2, 0);
+        b.wait();
+        b.send(3, 1, 32);
+        b.recv(3, 1);
+        b.wait();
+        b.lap(Phase::Data);
+        let rp = b.finish();
+        let (prefix, suffix) = rp.split_at_last_wait();
+        assert_eq!(prefix.len(), 6, "prefix ends just before the last Wait");
+        assert_eq!(suffix[0], PlanOp::Wait);
+        assert_eq!(suffix.len(), 2, "trailing Lap rides with the suffix");
+        // Reassembly is the original sequence.
+        let mut joined = prefix.to_vec();
+        joined.extend_from_slice(suffix);
+        assert_eq!(joined, rp.ops);
+        // No Wait at all: everything is prefix.
+        let mut c = PlanBuilder::new(0, 2);
+        c.copy(8);
+        let rp = c.finish();
+        let (pre, suf) = rp.split_at_last_wait();
+        assert_eq!(pre.len(), 1);
+        assert!(suf.is_empty());
     }
 
     #[test]

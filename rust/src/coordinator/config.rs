@@ -62,6 +62,24 @@ pub struct RunConfig {
     /// provably zero-perturbation; non-empty specs perturb both
     /// executors identically (threaded ↔ replay stays bit-identical).
     pub faults: FaultSpec,
+    /// Segmented execution (`segments=K`): split the collective into K
+    /// chunk plans over [`crate::workload::segment_counts`] and run the
+    /// stitched schedule. `1` (the default) is the ordinary unsegmented
+    /// path. Phantom-only. Blocks smaller than K bytes simply occupy
+    /// fewer than K segments — the byte split is exact (floor
+    /// partition), dense workloads keep the zero-byte shares as
+    /// structural sends, sparse workloads drop them.
+    pub segments: usize,
+    /// Pipelined stitch (`overlap=true`): segment i's compute runs while
+    /// segment i−1's final round is in flight, so hiding is measured on
+    /// the virtual clock (`exposed_comm`/`hidden_comm`). Requires
+    /// `segments >= 2`; the default (`false`) is the blocking stitch.
+    pub overlap: bool,
+    /// Per-segment compute cost in seconds (`compute=secs`), charged by
+    /// the overlap driver ahead of each segment on every rank — the
+    /// constant-cost stand-in for an application's per-slab work.
+    /// Requires `segments >= 2`.
+    pub compute: f64,
 }
 
 impl Default for RunConfig {
@@ -83,6 +101,9 @@ impl Default for RunConfig {
             replay_shards: None,
             tuning: None,
             faults: FaultSpec::default(),
+            segments: 1,
+            overlap: false,
+            compute: 0.0,
         }
     }
 }
@@ -153,6 +174,17 @@ impl RunConfig {
                     })?
                 }
                 "faults" => cfg.faults = FaultSpec::parse(v)?,
+                "segments" => cfg.segments = parse_num(k, v)?,
+                "overlap" => {
+                    cfg.overlap = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad bool for {k}: `{v}`")))?
+                }
+                "compute" => {
+                    cfg.compute = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad number for {k}: `{v}`")))?
+                }
                 _ => {
                     return Err(TunaError::config(format!("unknown config key `{k}`")));
                 }
@@ -178,6 +210,38 @@ impl RunConfig {
             return Err(TunaError::config(
                 "mode=replay is phantom-only (real payloads need the threaded oracle); \
                  set real=false or mode=threaded",
+            ));
+        }
+        if self.segments == 0 {
+            return Err(TunaError::config(
+                "segments must be >= 1 (segments=1 is the unsegmented run)",
+            ));
+        }
+        if self.overlap && self.segments < 2 {
+            return Err(TunaError::config(
+                "overlap=true requires segments >= 2 (nothing to pipeline with one segment)",
+            ));
+        }
+        if self.compute != 0.0 && self.segments < 2 {
+            return Err(TunaError::config(
+                "compute= requires segments >= 2 (per-segment cost needs segments)",
+            ));
+        }
+        if !self.compute.is_finite() || self.compute < 0.0 {
+            return Err(TunaError::config(
+                "compute must be a finite number of seconds >= 0",
+            ));
+        }
+        if self.segments > 1 && self.real_payloads {
+            return Err(TunaError::config(
+                "segments are phantom-only (plans model byte ranges, never payload bytes); \
+                 set real=false",
+            ));
+        }
+        if self.segments > 1 && self.persistent {
+            return Err(TunaError::config(
+                "persistent=true does not compose with segments yet: a handle freezes one \
+                 plan, the segmented driver stitches per call",
             ));
         }
         // Machine parameters must be sane before any engine is built
@@ -372,6 +436,28 @@ mod tests {
         assert!(RunConfig::parse_args(&args("p=8 q=2 faults=straggler:rank=8,slow=2")).is_err());
         assert!(RunConfig::parse_args(&args("p=8 q=2 faults=link:node=0-4,bw=0.5")).is_err());
         assert!(RunConfig::parse_args(&args("p=8 q=2 faults=outage:node=4,until=1")).is_err());
+    }
+
+    #[test]
+    fn parse_segments_and_overlap() {
+        let d = RunConfig::default();
+        assert_eq!((d.segments, d.overlap, d.compute), (1, false, 0.0));
+        let cfg =
+            RunConfig::parse_args(&args("p=64 q=8 segments=4 overlap=true compute=1e-4")).unwrap();
+        assert_eq!(cfg.segments, 4);
+        assert!(cfg.overlap);
+        assert!((cfg.compute - 1e-4).abs() < 1e-18);
+        // Each bad combination is a typed error naming the problem.
+        let err = |s: &str| RunConfig::parse_args(&args(s)).unwrap_err().to_string();
+        assert!(err("p=64 q=8 segments=0").contains("segments must be >= 1"));
+        assert!(err("p=64 q=8 overlap=true").contains("requires segments >= 2"));
+        assert!(err("p=64 q=8 segments=1 overlap=true").contains("requires segments >= 2"));
+        assert!(err("p=64 q=8 compute=1e-4").contains("requires segments >= 2"));
+        assert!(err("p=64 q=8 segments=4 compute=-1").contains("finite number of seconds"));
+        assert!(err("p=64 q=8 segments=4 real=true").contains("phantom-only"));
+        assert!(err("p=64 q=8 segments=4 persistent=true").contains("persistent"));
+        assert!(err("p=64 q=8 overlap=maybe").contains("bad bool for overlap"));
+        assert!(err("p=64 q=8 segments=two").contains("bad number for segments"));
     }
 
     #[test]

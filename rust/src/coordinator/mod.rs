@@ -16,8 +16,11 @@ pub mod serve;
 pub use config::{RunConfig, SelectConfig};
 pub use serve::{ServeConfig, ServeReport, TenantSpec, TenantStat};
 
-use crate::algos::{run_alltoallv, run_alltoallv_replay, AlgoKind, ExecMode};
-use crate::comm::{Engine, PersistentColl, PhaseBreakdown, Topology};
+use crate::algos::{
+    run_alltoallv, run_alltoallv_replay, run_alltoallv_segmented, run_alltoallv_segmented_replay,
+    AlgoKind, ExecMode, SegmentCompute,
+};
+use crate::comm::{Counters, Engine, PersistentColl, PhaseBreakdown, Topology};
 use crate::model::analytic::Estimator;
 use crate::util::stats::Summary;
 use crate::workload::BlockSizes;
@@ -62,6 +65,11 @@ pub struct Measurement {
     pub summary: Summary,
     pub phases: PhaseBreakdown,
     pub fidelity: Fidelity,
+    /// Aggregate counters of the last exact iteration (virtual time is
+    /// seed-deterministic, so any iteration is representative of its
+    /// seed). `None` on the analytic path — the model has no clocks to
+    /// measure `exposed_comm`/`hidden_comm` with.
+    pub counters: Option<Counters>,
 }
 
 impl Measurement {
@@ -143,6 +151,31 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
              set real=false or mode=threaded",
         ));
     }
+    // Segmented knobs get the same programmatic guards parse_args
+    // applies — a hand-built config must not reach the driver with a
+    // contradiction the CLI would have rejected.
+    if cfg.segments == 0 {
+        return Err(crate::TunaError::config(
+            "segments must be >= 1 (segments=1 is the unsegmented run)",
+        ));
+    }
+    if cfg.overlap && cfg.segments < 2 {
+        return Err(crate::TunaError::config(
+            "overlap=true requires segments >= 2 (nothing to pipeline with one segment)",
+        ));
+    }
+    if cfg.segments > 1 && cfg.real_payloads {
+        return Err(crate::TunaError::config(
+            "segments are phantom-only (plans model byte ranges, never payload bytes); \
+             set real=false",
+        ));
+    }
+    if cfg.segments > 1 && cfg.persistent {
+        return Err(crate::TunaError::config(
+            "persistent=true does not compose with segments yet: a handle freezes one \
+             plan, the segmented driver stitches per call",
+        ));
+    }
     // Guard programmatically built configs (parse_args runs the same
     // checks): reject poisoned machine parameters and out-of-range fault
     // targets before any clock consumes them.
@@ -157,6 +190,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                 .with_faults(&cfg.faults);
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
+            let mut counters = None;
             if cfg.persistent {
                 // Persistent path: freeze the workload at `seed` and hoist
                 // every one-shot artifact (plan compile, payload arena,
@@ -174,18 +208,42 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                     let rep = handle.start_frozen()?;
                     times.push(rep.makespan);
                     phases.max_with(&rep.phases);
+                    counters = Some(rep.counters);
                 }
             } else {
+                // The CLI's constant `compute=` cost; `segments=1` takes
+                // the ordinary unsegmented entry points below.
+                let seg_compute = if cfg.compute > 0.0 {
+                    SegmentCompute::Uniform(cfg.compute)
+                } else {
+                    SegmentCompute::None
+                };
                 for it in 0..cfg.iters.max(1) {
                     let sizes =
                         BlockSizes::generate(cfg.p, cfg.dist, cfg.seed.wrapping_add(it as u64));
-                    let rep = if fidelity == Fidelity::Replay {
-                        run_alltoallv_replay(&engine, kind, &sizes)?
-                    } else {
-                        run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?
+                    let rep = match (cfg.segments > 1, fidelity == Fidelity::Replay) {
+                        (true, true) => run_alltoallv_segmented_replay(
+                            &engine,
+                            kind,
+                            &sizes,
+                            cfg.segments,
+                            cfg.overlap,
+                            &seg_compute,
+                        )?,
+                        (true, false) => run_alltoallv_segmented(
+                            &engine,
+                            kind,
+                            &sizes,
+                            cfg.segments,
+                            cfg.overlap,
+                            &seg_compute,
+                        )?,
+                        (false, true) => run_alltoallv_replay(&engine, kind, &sizes)?,
+                        (false, false) => run_alltoallv(&engine, kind, &sizes, cfg.real_payloads)?,
                     };
                     times.push(rep.makespan);
                     phases.max_with(&rep.phases);
+                    counters = Some(rep.counters);
                 }
             }
             Ok(Measurement {
@@ -193,6 +251,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                 summary: Summary::of(&times),
                 phases,
                 fidelity,
+                counters,
             })
         }
         Fidelity::Analytic => {
@@ -203,16 +262,25 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
             } else {
                 Some(crate::comm::FaultModel::compile(&cfg.faults, cfg.q))
             };
-            let est = Estimator::new(&cfg.profile, topo).estimate_shape_faulted(
-                kind,
-                &shape,
-                faults.as_ref(),
-            );
+            let estimator = Estimator::new(&cfg.profile, topo);
+            let est = if cfg.segments > 1 {
+                estimator.estimate_segmented_faulted(
+                    kind,
+                    &shape,
+                    cfg.segments,
+                    cfg.overlap,
+                    cfg.compute,
+                    faults.as_ref(),
+                )
+            } else {
+                estimator.estimate_shape_faulted(kind, &shape, faults.as_ref())
+            };
             Ok(Measurement {
                 algo: *kind,
                 summary: Summary::of(&[est.makespan]),
                 phases: est.phases,
                 fidelity: Fidelity::Analytic,
+                counters: None,
             })
         }
     }
@@ -515,6 +583,40 @@ mod tests {
             let err = measure(&c, &AlgoKind::SpreadOut).unwrap_err().to_string();
             assert!(err.contains("configuration"), "P={p} Q={q}: {err}");
         }
+    }
+
+    #[test]
+    fn segmented_measure_is_bit_identical_across_executors() {
+        for overlap in [false, true] {
+            let seg = |mode| RunConfig {
+                mode,
+                segments: 4,
+                overlap,
+                compute: 2e-5,
+                ..cfg(24, 4)
+            };
+            let a = measure(&seg(ExecMode::Threaded), &AlgoKind::Tuna { radix: 3 }).unwrap();
+            let b = measure(&seg(ExecMode::Replay), &AlgoKind::Tuna { radix: 3 }).unwrap();
+            assert_eq!(a.fidelity, Fidelity::Engine);
+            assert_eq!(b.fidelity, Fidelity::Replay);
+            assert_eq!(a.summary.median.to_bits(), b.summary.median.to_bits(), "overlap={overlap}");
+            assert_eq!(a.summary.min.to_bits(), b.summary.min.to_bits());
+            assert_eq!(a.summary.max.to_bits(), b.summary.max.to_bits());
+            assert_eq!(a.phases, b.phases);
+        }
+    }
+
+    #[test]
+    fn measure_rejects_segment_contradictions() {
+        let err = |c: &RunConfig| measure(c, &AlgoKind::Tuna { radix: 2 }).unwrap_err().to_string();
+        let e = err(&RunConfig { segments: 0, ..cfg(16, 4) });
+        assert!(e.contains("segments must be >= 1"), "{e}");
+        let e = err(&RunConfig { overlap: true, ..cfg(16, 4) });
+        assert!(e.contains("requires segments >= 2"), "{e}");
+        let e = err(&RunConfig { segments: 4, real_payloads: true, ..cfg(16, 4) });
+        assert!(e.contains("phantom-only"), "{e}");
+        let e = err(&RunConfig { segments: 4, persistent: true, ..cfg(16, 4) });
+        assert!(e.contains("persistent"), "{e}");
     }
 
     #[test]

@@ -477,19 +477,10 @@ pub fn simulate_calls_resilient(
     }
 }
 
-/// Nearest-rank percentile of an unsorted sample (0.0 on empty input).
-/// Sorted with [`f64::total_cmp`]: a NaN sample (impossible from the
-/// simulator, possible from hand-fed data) sorts last instead of
-/// panicking mid-report.
-pub fn percentile(samples: &[f64], pct: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    let mut s = samples.to_vec();
-    s.sort_by(f64::total_cmp);
-    let rank = ((pct / 100.0) * s.len() as f64).ceil() as usize;
-    s[rank.clamp(1, s.len()) - 1]
-}
+/// Nearest-rank percentile — re-exported from the one shared NaN-safe
+/// implementation in [`crate::util::stats`] so serving and chaos
+/// reporting can never drift apart on tie/NaN semantics.
+pub use crate::util::stats::percentile;
 
 /// Simulate serving with pre-measured `demands` (from
 /// [`measure_tenants`]) and assemble the per-tenant report. When no

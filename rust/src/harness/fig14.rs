@@ -8,10 +8,14 @@
 use super::fig10::hier_candidates;
 use super::boxplot::sweep_box;
 use super::FigOpts;
-use crate::algos::{tuning, AlgoKind};
+use crate::algos::{run_alltoallv_segmented_replay, tuning, AlgoKind, SegmentCompute};
+use crate::comm::{Engine, Topology};
 use crate::coordinator::measure;
 use crate::util::table::{cell_f, Table};
-use crate::workload::Dist;
+use crate::workload::{BlockSizes, Dist};
+
+/// Segments of the overlap columns.
+const OVERLAP_SEGMENTS: usize = 4;
 
 pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
     let mut table = Table::new(
@@ -25,6 +29,9 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
             "coalesced*(ms)",
             "staggered*(ms)",
             "best speedup",
+            "exposed-blk(ms)",
+            "exposed-pipe(ms)",
+            "overlap-x",
             "fidelity",
         ],
     );
@@ -52,6 +59,41 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
                 };
                 let v = vendor.median();
                 let best = tuna.best_time.min(coal_t).min(stag_t);
+                // Overlap columns: the same transpose workload run as a
+                // K-segment phantom collective on the replay executor,
+                // with per-segment compute sized to the blocking run's
+                // per-segment cost — the regime where a pipeline can at
+                // best halve the critical path. `exposed` is measured by
+                // the clocks, not inferred from the model.
+                let engine = Engine::new(profile.clone(), Topology::new(p, q));
+                let sizes = BlockSizes::generate(p, dist, opts.seed);
+                let okind = AlgoKind::Tuna { radix: 4.min(p).max(2) };
+                let probe = run_alltoallv_segmented_replay(
+                    &engine,
+                    &okind,
+                    &sizes,
+                    OVERLAP_SEGMENTS,
+                    false,
+                    &SegmentCompute::None,
+                )?;
+                let per_seg = probe.makespan / OVERLAP_SEGMENTS as f64;
+                let compute = SegmentCompute::Uniform(per_seg);
+                let blk = run_alltoallv_segmented_replay(
+                    &engine,
+                    &okind,
+                    &sizes,
+                    OVERLAP_SEGMENTS,
+                    false,
+                    &compute,
+                )?;
+                let pipe = run_alltoallv_segmented_replay(
+                    &engine,
+                    &okind,
+                    &sizes,
+                    OVERLAP_SEGMENTS,
+                    true,
+                    &compute,
+                )?;
                 table.row(vec![
                     profile.name.into(),
                     p.to_string(),
@@ -61,6 +103,9 @@ pub fn run(opts: &FigOpts) -> crate::Result<Vec<Table>> {
                     cell_f(coal_t * 1e3),
                     cell_f(stag_t * 1e3),
                     format!("{:.2}x", v / best),
+                    cell_f(blk.counters.exposed_comm * 1e3),
+                    cell_f(pipe.counters.exposed_comm * 1e3),
+                    format!("{:.2}x", blk.makespan / pipe.makespan),
                     tuna.fidelity.name().into(),
                 ]);
             }

@@ -156,6 +156,129 @@ impl<'a> Estimator<'a> {
         est
     }
 
+    /// Estimate of the segmented overlap driver
+    /// (`algos::run_alltoallv_segmented`): split the workload into
+    /// `segments` equal chunks, estimate one chunk, then apply the
+    /// per-segment overlap term
+    /// `effective = max(comm, compute) + exposed remainder`.
+    ///
+    /// The **overlappable window** `w` of a segment is family-specific —
+    /// the stitch hides only the final `Wait` batch of each chunk plan
+    /// behind the next segment's compute:
+    ///
+    /// * single-burst linear (spread-out, ompi-linear): the whole data
+    ///   phase is one batch — fully overlappable;
+    /// * batched linear (scattered/vendor): one batch of
+    ///   ⌈(P−1)/b⌉;
+    /// * pairwise: one synchronized round of P−1;
+    /// * bruck/tuna: one round of the radix schedule;
+    /// * hierarchical: one batch/round of the *inter-node* phase (the
+    ///   whole data phase when N = 1).
+    ///
+    /// With `overlap=false` the blocking stitch costs
+    /// `K·(compute + t_seg)`; pipelined it costs
+    /// `c + K·(t_seg − w) + (K−1)·max(c, w) + w` — at K = 1 both reduce
+    /// to `c + t_seg`. This is what lets a fully overlappable
+    /// latency-heavy family legitimately outrank the blocking winner
+    /// once per-segment compute covers its window (the selector's
+    /// `overlap=` mode, `algos::select`).
+    pub fn estimate_segmented(
+        &self,
+        kind: &AlgoKind,
+        shape: &WorkloadShape,
+        segments: usize,
+        overlap: bool,
+        compute: f64,
+    ) -> Estimate {
+        let k = segments.max(1) as f64;
+        let seg_shape = WorkloadShape {
+            mean_block: shape.mean_block / k,
+            mean_structural: shape.mean_structural / k,
+            nnz_row: shape.nnz_row,
+            sparse: shape.sparse,
+        };
+        let seg = self.estimate_shape(kind, &seg_shape);
+        let t_seg = seg.makespan;
+        let c = compute.max(0.0);
+        let makespan = if !overlap {
+            k * (c + t_seg)
+        } else {
+            let w = self.overlappable_window(kind, seg_shape.mean_block, &seg)
+                .clamp(0.0, t_seg);
+            let a = t_seg - w; // exposed per segment regardless of compute
+            c + k * a + (k - 1.0) * c.max(w) + w
+        };
+        let mut phases = seg.phases;
+        for s in phases.secs.iter_mut() {
+            *s *= k;
+        }
+        phases.add(crate::comm::Phase::Compute, k * c);
+        Estimate { makespan, phases }
+    }
+
+    /// [`Estimator::estimate_segmented`] under fault injection — the same
+    /// coarse `makespan * mult + add` scaling as
+    /// [`Estimator::estimate_shape_faulted`].
+    pub fn estimate_segmented_faulted(
+        &self,
+        kind: &AlgoKind,
+        shape: &WorkloadShape,
+        segments: usize,
+        overlap: bool,
+        compute: f64,
+        faults: Option<&crate::comm::FaultModel>,
+    ) -> Estimate {
+        let mut est = self.estimate_segmented(kind, shape, segments, overlap, compute);
+        if let Some(model) = faults.filter(|m| !m.is_empty()) {
+            let (mult, add) = model.analytic_slowdown();
+            est.makespan = est.makespan * mult + add;
+        }
+        est
+    }
+
+    /// The slice of one segment's estimate that the pipelined stitch can
+    /// hide behind the next segment's compute (see
+    /// [`Estimator::estimate_segmented`]).
+    fn overlappable_window(&self, kind: &AlgoKind, seg_mean: f64, seg: &Estimate) -> f64 {
+        let p = self.topo.p();
+        let q = self.topo.q();
+        let n = self.topo.nodes();
+        let batches = |units: usize, per: usize| -> f64 {
+            (units.div_ceil(per.max(1))).max(1) as f64
+        };
+        let log_rounds = |r: usize, group: usize| -> f64 {
+            radix::rounds(r.clamp(2, group.max(2)), group).len().max(1) as f64
+        };
+        let data = seg.phases.get(Phase::Data);
+        match *kind {
+            AlgoKind::SpreadOut | AlgoKind::OmpiLinear => data,
+            AlgoKind::Scattered { block_count } => {
+                data / batches(p.saturating_sub(1), block_count)
+            }
+            AlgoKind::Vendor => data / batches(p.saturating_sub(1), VENDOR_BLOCK_COUNT),
+            AlgoKind::Pairwise => data / p.saturating_sub(1).max(1) as f64,
+            AlgoKind::Bruck2 => data / log_rounds(2, p),
+            AlgoKind::Tuna { radix } => data / log_rounds(radix, p),
+            AlgoKind::TunaAuto => data / log_rounds(tuning::heuristic_radix(p, seg_mean), p),
+            AlgoKind::Hier { global, .. } => {
+                if n == 1 {
+                    return data;
+                }
+                let inter = seg.phases.get(Phase::InterNode);
+                match global {
+                    GlobalAlgo::Bruck { radix } => inter / log_rounds(radix, n),
+                    GlobalAlgo::Coalesced { block_count } => {
+                        inter / batches(n - 1, block_count)
+                    }
+                    GlobalAlgo::Staggered { block_count } => {
+                        inter / batches((n - 1) * q, block_count)
+                    }
+                    GlobalAlgo::Linear => inter,
+                }
+            }
+        }
+    }
+
     /// Sparse linear family: ~nnz structural messages (instead of P−1)
     /// of the structural mean size, batched by `block_count`.
     fn linear_sparse(&self, s_nz: f64, nnz: f64, block_count: usize, incast: bool) -> Estimate {
@@ -774,6 +897,75 @@ mod tests {
         );
         let f = est.estimate_shape_faulted(&kind, &shape, Some(&out));
         assert!((f.makespan - (healthy.makespan + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn segmented_estimate_reduces_to_the_plain_one_at_k1() {
+        let prof = MachineProfile::fugaku();
+        let est = Estimator::new(&prof, Topology::new(256, 32));
+        let shape = WorkloadShape::dense(1024.0);
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Tuna { radix: 4 },
+            AlgoKind::hier_coalesced(4, 2),
+        ] {
+            let plain = est.estimate_shape(&kind, &shape).makespan;
+            let blk = est.estimate_segmented(&kind, &shape, 1, false, 0.0).makespan;
+            assert_eq!(plain.to_bits(), blk.to_bits(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn pipelined_estimate_hides_compute_blocking_pays_it() {
+        let prof = MachineProfile::fugaku();
+        let est = Estimator::new(&prof, Topology::new(256, 32));
+        let shape = WorkloadShape::dense(4096.0);
+        let k = 4;
+        for kind in [
+            AlgoKind::SpreadOut,
+            AlgoKind::Tuna { radix: 4 },
+            AlgoKind::hier_coalesced(4, 2),
+            AlgoKind::Pairwise,
+        ] {
+            // Size compute to the per-segment estimate so there is
+            // something real to hide.
+            let seg = est.estimate_segmented(&kind, &shape, k, false, 0.0).makespan / k as f64;
+            let c = seg / 2.0;
+            let blocking = est.estimate_segmented(&kind, &shape, k, false, c).makespan;
+            let pipelined = est.estimate_segmented(&kind, &shape, k, true, c).makespan;
+            assert!(
+                pipelined < blocking,
+                "{kind:?}: pipelined {pipelined} must undercut blocking {blocking}"
+            );
+            assert!(pipelined.is_finite() && pipelined > 0.0);
+            // And compute shows up in the breakdown.
+            let ph = est.estimate_segmented(&kind, &shape, k, true, c).phases;
+            assert!((ph.get(Phase::Compute) - k as f64 * c).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn fully_overlappable_families_hide_more_than_round_bound_ones() {
+        // Spread-out's single burst is fully overlappable; tuna can hide
+        // only its final round. With per-segment compute sized at the
+        // spread-out segment cost, spread-out's pipelined estimate drops
+        // by a strictly larger fraction of its blocking cost.
+        let prof = MachineProfile::fugaku();
+        let est = Estimator::new(&prof, Topology::new(256, 32));
+        let shape = WorkloadShape::dense(2048.0);
+        let k = 4;
+        let frac = |kind: &AlgoKind, c: f64| {
+            let b = est.estimate_segmented(kind, &shape, k, false, c).makespan;
+            let p = est.estimate_segmented(kind, &shape, k, true, c).makespan;
+            (b - p) / b
+        };
+        let c = est
+            .estimate_segmented(&AlgoKind::SpreadOut, &shape, k, false, 0.0)
+            .makespan
+            / k as f64;
+        let so = frac(&AlgoKind::SpreadOut, c);
+        let tn = frac(&AlgoKind::Tuna { radix: 4 }, c);
+        assert!(so > tn, "spread-out hides {so:.3} of itself, tuna {tn:.3}");
     }
 
     #[test]

@@ -60,6 +60,21 @@ pub fn median(sample: &[f64]) -> f64 {
     quantile_sorted(&xs, 0.5)
 }
 
+/// Nearest-rank percentile of an unsorted sample (0.0 on empty input),
+/// `pct` in [0, 100]. The one shared implementation behind serving-
+/// latency and chaos-sweep reporting. Sorted with [`f64::total_cmp`]: a
+/// NaN sample (impossible from the simulator, possible from hand-fed
+/// data) sorts last instead of panicking mid-report.
+pub fn percentile(samples: &[f64], pct: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let rank = ((pct / 100.0) * s.len() as f64).ceil() as usize;
+    s[rank.clamp(1, s.len()) - 1]
+}
+
 /// Geometric mean — used when aggregating speedups across scenarios.
 pub fn geomean(sample: &[f64]) -> f64 {
     assert!(!sample.is_empty());
@@ -138,6 +153,24 @@ mod tests {
     fn median_unsorted() {
         assert_eq!(median(&[9.0, 1.0, 5.0]), 5.0);
         assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_and_nan_safe() {
+        let s = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&s, 50.0), 2.0);
+        assert_eq!(percentile(&s, 95.0), 4.0);
+        assert_eq!(percentile(&s, 99.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        // Degenerate pct values stay in range instead of indexing out.
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+        // total_cmp sorts NaN last instead of panicking mid-report.
+        let n = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&n, 50.0), 2.0);
+        assert!(percentile(&n, 99.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -52,6 +52,45 @@ enum Repr {
     Dense(Arc<Vec<Vec<u64>>>),
     /// CSR-style sparse rows.
     Csr(Arc<CsrCounts>),
+    /// Segment `idx` of `k` of a base workload (see [`segment_counts`]):
+    /// every base entry of B bytes contributes its `[B*idx/k,
+    /// B*(idx+1)/k)` byte range, computed on demand — no O(P²) storage
+    /// per segment.
+    Seg { base: Arc<Counts>, k: u32, idx: u32 },
+}
+
+/// The byte share segment `idx` of `k` takes from a block of `bytes`:
+/// the half-open range `[bytes*idx/k, bytes*(idx+1)/k)`. Floor
+/// arithmetic makes the shares partition the block exactly —
+/// `sum over idx == bytes` — and blocks smaller than `k` simply leave
+/// some segments empty (a zero-byte send for dense workloads, no entry
+/// at all for sparse ones).
+#[inline]
+fn segment_share(bytes: u64, k: u32, idx: u32) -> u64 {
+    bytes * (idx as u64 + 1) / k as u64 - bytes * idx as u64 / k as u64
+}
+
+/// Split a counts matrix into `k` per-destination byte-range segments:
+/// segment `idx` of the result carries bytes `[B*idx/k, B*(idx+1)/k)`
+/// of every block of B bytes, so the segments sum back to the original
+/// matrix entry-for-entry. Each segment is a full-fledged lazy
+/// [`Counts`] (any algorithm can compile a plan over it). `k = 1`
+/// returns a clone of the input. Structural sparsity is preserved:
+/// sparse entries whose share rounds to zero are absent from that
+/// segment, dense zero shares remain zero-byte structural sends.
+pub fn segment_counts(counts: &Counts, k: usize) -> Vec<Counts> {
+    assert!(k >= 1, "segment_counts needs k >= 1");
+    if k == 1 {
+        return vec![counts.clone()];
+    }
+    let base = Arc::new(counts.clone());
+    (0..k as u32)
+        .map(|idx| Counts {
+            p: counts.p,
+            repr: Repr::Seg { base: Arc::clone(&base), k: k as u32, idx },
+            transpose: Arc::new(OnceLock::new()),
+        })
+        .collect()
 }
 
 /// Compressed sparse rows: `entries[indptr[r]..indptr[r+1]]` are row
@@ -268,6 +307,7 @@ impl Counts {
             Repr::Gen { dist, .. } => dist.sparse_nnz().is_some(),
             Repr::Dense(_) => false,
             Repr::Csr(_) => true,
+            Repr::Seg { base, .. } => base.is_sparse(),
         }
     }
 
@@ -293,6 +333,21 @@ impl Counts {
             Repr::Csr(csr) => CountsRow::Sparse {
                 p: self.p,
                 entries: csr.entries[csr.indptr[src]..csr.indptr[src + 1]].to_vec(),
+            },
+            Repr::Seg { base, k, idx } => match base.row_view(src) {
+                CountsRow::Dense(v) => CountsRow::Dense(
+                    v.into_iter().map(|b| segment_share(b, *k, *idx)).collect(),
+                ),
+                CountsRow::Sparse { p, entries } => CountsRow::Sparse {
+                    p,
+                    entries: entries
+                        .into_iter()
+                        .filter_map(|(d, b)| {
+                            let share = segment_share(b, *k, *idx);
+                            (share > 0).then_some((d, share))
+                        })
+                        .collect(),
+                },
             },
         }
     }
@@ -329,6 +384,15 @@ impl Counts {
             },
             Repr::Dense(_) => self.p,
             Repr::Csr(csr) => csr.indptr[src + 1] - csr.indptr[src],
+            Repr::Seg { base, .. } => {
+                if base.is_sparse() {
+                    // Zero shares are dropped, so the segment's row can
+                    // be strictly smaller than the base row's.
+                    self.row_view(src).nnz()
+                } else {
+                    self.p
+                }
+            }
         }
     }
 
@@ -566,6 +630,12 @@ impl Counts {
                     }
                 }
             }
+            Repr::Seg { base, k, idx } => {
+                mix(&mut h, 4);
+                mix(&mut h, *k as u64);
+                mix(&mut h, *idx as u64);
+                mix(&mut h, base.identity_hash());
+            }
         }
         h
     }
@@ -782,6 +852,63 @@ mod tests {
         let d2 = d.replace_dense_row(0, vec![4, 4]);
         assert_eq!(d2.row(0), vec![4, 4]);
         assert_eq!(d2.row(1), d.row(1));
+    }
+
+    #[test]
+    fn segment_counts_partitions_every_entry_exactly() {
+        // Dense: shares sum back to the base entry-for-entry, zero
+        // shares stay structural (zero-byte sends).
+        let dense = Counts::generate(24, Dist::Uniform { max: 300 }, 11);
+        for k in [1usize, 2, 3, 5, 8] {
+            let segs = segment_counts(&dense, k);
+            assert_eq!(segs.len(), k);
+            for src in 0..24 {
+                let base_row = dense.row(src);
+                let mut sum = vec![0u64; 24];
+                for seg in &segs {
+                    assert!(!seg.is_sparse());
+                    assert_eq!(seg.nnz_row(src), 24, "dense segments stay dense");
+                    for (d, s) in seg.row_view(src).entries() {
+                        sum[d] += s;
+                    }
+                }
+                assert_eq!(sum, base_row, "k={k} src={src}");
+            }
+        }
+        // k = 1 is the base workload itself (same identity).
+        let one = segment_counts(&dense, 1);
+        assert_eq!(one[0].identity_hash(), dense.identity_hash());
+
+        // Sparse: zero shares are structurally absent, nonzero shares
+        // keep the structural == nonzero invariant, totals partition.
+        let sparse = Counts::generate(32, Dist::Sparse { nnz: 5, max: 64 }, 7);
+        let k = 4;
+        let segs = segment_counts(&sparse, k);
+        let mut total = 0u64;
+        for seg in &segs {
+            assert!(seg.is_sparse());
+            for src in 0..32 {
+                for (_, s) in seg.row_view(src).entries() {
+                    assert!(s > 0, "sparse segment carries a zero entry");
+                }
+                assert_eq!(seg.nnz_row(src), seg.row_view(src).nnz());
+            }
+            total += seg.total_bytes();
+        }
+        assert_eq!(total, sparse.total_bytes());
+
+        // Blocks smaller than k leave later segments empty: an 8-byte
+        // block split 16 ways puts one byte in the first 8 segments.
+        let tiny = Counts::from_dense(vec![vec![8, 0], vec![0, 8]]);
+        let segs = segment_counts(&tiny, 16);
+        let nonempty = segs.iter().filter(|s| s.total_bytes() > 0).count();
+        assert_eq!(nonempty, 8);
+        assert_eq!(segs.iter().map(|s| s.total_bytes()).sum::<u64>(), 16);
+
+        // Segments are distinct cache identities.
+        let a = segment_counts(&dense, 3);
+        assert_ne!(a[0].identity_hash(), a[1].identity_hash());
+        assert_ne!(a[0].identity_hash(), dense.identity_hash());
     }
 
     #[test]

@@ -61,7 +61,7 @@ pub mod distributions;
 pub mod fft;
 pub mod graph;
 
-pub use counts::{Counts, CountsRow, CountsRowIter};
+pub use counts::{segment_counts, Counts, CountsRow, CountsRowIter};
 pub use distributions::Dist;
 
 /// Historical name of [`Counts`]: the workload handle every call site

@@ -102,6 +102,64 @@ fn serve_rejects_bad_degradation_knobs_with_typed_errors() {
     assert_typed_error(&["serve", "--quick", "retries=2"], "retries");
 }
 
+#[test]
+fn segmented_overlap_knobs_reject_contradictions_with_typed_errors() {
+    // segments=0 names no collective at all.
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "segments=0"],
+        "segments must be >= 1",
+    );
+    // overlap=true with nothing to pipeline against.
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "overlap=true"],
+        "requires segments >= 2",
+    );
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "segments=1", "overlap=true"],
+        "requires segments >= 2",
+    );
+    // Segmented plans model byte ranges; real payload buffers can't be
+    // split along them.
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "segments=2", "real=true"],
+        "phantom-only",
+    );
+    // A persistent handle freezes one plan; the stitcher makes K.
+    assert_typed_error(
+        &["run", "algo=tuna:r=2", "p=8", "q=2", "segments=2", "persistent=true"],
+        "does not compose with segments",
+    );
+}
+
+#[test]
+fn segmented_run_succeeds_and_reports_exposure() {
+    // The happy path behind the error wall: a segmented overlap run
+    // exits 0 and prints the measured exposed/hidden split.
+    let out = tuna(&[
+        "run",
+        "algo=tuna:r=2",
+        "p=8",
+        "q=2",
+        "dist=uniform:256",
+        "iters=1",
+        "mode=replay",
+        "segments=4",
+        "overlap=true",
+        "compute=0.00001",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "segmented run failed\nstdout: {stdout}\nstderr: {stderr}"
+    );
+    assert!(stdout.contains("median"), "no measurement printed: {stdout}");
+    assert!(
+        stdout.contains("exposed") && stdout.contains("hidden"),
+        "no exposure report printed: {stdout}"
+    );
+}
+
 // Every `ReplayError` variant, plus the persistent stale-counts error,
 // through the real `error: {e}` / exit-1 path.
 

@@ -12,8 +12,9 @@
 use std::sync::Arc;
 
 use tuna::algos::{
-    compile_plan, hier, patch_plan, plan_for, run_alltoallv, run_alltoallv_replay, tuning,
-    AlgoKind, ExecMode, GlobalAlgo, LocalAlgo,
+    compile_plan, hier, patch_plan, plan_for, run_alltoallv, run_alltoallv_replay,
+    run_alltoallv_segmented, run_alltoallv_segmented_replay, segmented_plan_for, tuning,
+    AlgoKind, ExecMode, GlobalAlgo, LocalAlgo, SegmentCompute,
 };
 use tuna::comm::replay::{self, ReplayError};
 use tuna::comm::{CommPlan, Engine, EngineResult, FaultModel, FaultSpec, PlanBuilder, Topology};
@@ -856,4 +857,203 @@ fn measure_replay_extends_past_thread_budget() {
     };
     let m2 = measure(&threaded_only, &AlgoKind::Tuna { radix: 4 }).unwrap();
     assert_eq!(m2.fidelity.name(), "model");
+}
+
+fn assert_reports_identical(
+    a: &tuna::algos::RunReport,
+    b: &tuna::algos::RunReport,
+    ctx: &str,
+) {
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{ctx}: makespan {} vs {}",
+        a.makespan,
+        b.makespan
+    );
+    assert_eq!(a.phases, b.phases, "{ctx}: phase breakdown");
+    assert_eq!(a.counters, b.counters, "{ctx}: counters");
+    assert_eq!(a.t_peak, b.t_peak, "{ctx}: t_peak");
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.algo, b.algo, "{ctx}: algo name");
+}
+
+/// The PR 9 baseline contract: `segments=1` with no compute is the
+/// unsegmented run — bit-identical reports out of the segmented driver
+/// on BOTH executors, against the plain threaded engine, across every
+/// family, dense and sparse, and under every tested shard count.
+#[test]
+fn segments_one_bit_identical_to_unsegmented() {
+    let kinds = |p: usize, q: usize| {
+        let mut kinds = vec![
+            AlgoKind::SpreadOut,
+            AlgoKind::OmpiLinear,
+            AlgoKind::Pairwise,
+            AlgoKind::Scattered { block_count: 3 },
+            AlgoKind::Vendor,
+            AlgoKind::Bruck2,
+            AlgoKind::Tuna { radix: 2 },
+            AlgoKind::TunaAuto,
+        ];
+        if q >= 2 && p / q >= 2 {
+            kinds.push(AlgoKind::hier_coalesced(2, 2));
+            kinds.push(AlgoKind::hier_staggered(2, 3));
+            kinds.push(AlgoKind::Hier {
+                local: LocalAlgo::Tuna { radix: 2 },
+                global: GlobalAlgo::Bruck { radix: 2 },
+            });
+        }
+        kinds
+    };
+    let cases = [
+        (12usize, 4usize, Dist::Uniform { max: 512 }),
+        (16, 4, Dist::powerlaw_default()),
+        (24, 4, Dist::Sparse { nnz: 3, max: 256 }),
+    ];
+    for (p, q, dist) in cases {
+        let e = engine(MachineProfile::fugaku(), p, q);
+        let sizes = BlockSizes::generate(p, dist, p as u64);
+        for kind in kinds(p, q) {
+            let ctx = format!("{} P={p} Q={q} segments=1", kind.name());
+            let unseg = run_alltoallv(&e, &kind, &sizes, false).unwrap();
+            let seg_threaded =
+                run_alltoallv_segmented(&e, &kind, &sizes, 1, false, &SegmentCompute::None)
+                    .unwrap();
+            let seg_replay =
+                run_alltoallv_segmented_replay(&e, &kind, &sizes, 1, false, &SegmentCompute::None)
+                    .unwrap();
+            assert_reports_identical(&unseg, &seg_threaded, &format!("{ctx} threaded"));
+            assert_reports_identical(&unseg, &seg_replay, &format!("{ctx} replay"));
+            // Shard-count independence of the K=1 stitched plan.
+            let plan =
+                segmented_plan_for(&e, &kind, &sizes, 1, false, &SegmentCompute::None).unwrap();
+            let single = replay::execute_sharded(&e.profile, e.topo, &plan, 1).unwrap();
+            for shards in [2usize, 4, 8] {
+                let sharded =
+                    replay::execute_sharded(&e.profile, e.topo, &plan, shards).unwrap();
+                assert_results_identical(&single, &sharded, &format!("{ctx} shards={shards}"));
+            }
+        }
+    }
+}
+
+/// The PR 9 tentpole contract: segmented runs — every tested K, both
+/// stitches, with and without per-segment compute — stay bit-identical
+/// between the threaded engine and the sharded replay executor, under
+/// every tested shard count, and the exposure counters partition the
+/// comm window exactly (`exposed + hidden == window`, zero tolerance).
+#[test]
+fn segmented_runs_bit_identical_across_executors_and_shard_counts() {
+    let cases = [
+        (12usize, 4usize, Dist::Uniform { max: 512 }),
+        (24, 4, Dist::Sparse { nnz: 3, max: 256 }),
+    ];
+    let kinds = [
+        AlgoKind::SpreadOut,
+        AlgoKind::Pairwise,
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::hier_coalesced(2, 2),
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix: 2 },
+            global: GlobalAlgo::Bruck { radix: 2 },
+        },
+    ];
+    for (p, q, dist) in cases {
+        let e = engine(MachineProfile::fugaku(), p, q);
+        let sizes = BlockSizes::generate(p, dist, p as u64);
+        for kind in &kinds {
+            for segments in [2usize, 4] {
+                for overlap in [false, true] {
+                    for compute in [SegmentCompute::None, SegmentCompute::Uniform(2e-5)] {
+                        let ctx = format!(
+                            "{} P={p} Q={q} K={segments} overlap={overlap}",
+                            kind.name()
+                        );
+                        let threaded = run_alltoallv_segmented(
+                            &e, kind, &sizes, segments, overlap, &compute,
+                        )
+                        .unwrap();
+                        let replayed = run_alltoallv_segmented_replay(
+                            &e, kind, &sizes, segments, overlap, &compute,
+                        )
+                        .unwrap();
+                        assert_reports_identical(&threaded, &replayed, &ctx);
+                        // exposed + hidden partition the total comm
+                        // window exactly — the identity the overlap
+                        // columns and overlap_speedup rows rest on.
+                        let c = threaded.counters;
+                        assert_eq!(
+                            (c.exposed_comm + c.hidden_comm).to_bits(),
+                            c.comm_window().to_bits(),
+                            "{ctx}: exposure partition"
+                        );
+                        assert!(c.comm_window() > 0.0, "{ctx}: empty comm window");
+                        // Shard-count independence of the stitched plan.
+                        let plan =
+                            segmented_plan_for(&e, kind, &sizes, segments, overlap, &compute)
+                                .unwrap();
+                        let single =
+                            replay::execute_sharded(&e.profile, e.topo, &plan, 1).unwrap();
+                        for shards in [2usize, 4, 8] {
+                            let sharded =
+                                replay::execute_sharded(&e.profile, e.topo, &plan, shards)
+                                    .unwrap();
+                            assert_results_identical(
+                                &single,
+                                &sharded,
+                                &format!("{ctx} shards={shards}"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The hiding the tentpole exists to deliver, measured end to end: with
+/// real per-segment compute, the pipelined stitch exposes strictly less
+/// communication than the blocking stitch and hides strictly more —
+/// while moving exactly the same bytes.
+#[test]
+fn pipelined_stitch_hides_comm_the_blocking_stitch_exposes() {
+    let (p, q, segments) = (16usize, 4usize, 4usize);
+    let e = engine(MachineProfile::fugaku(), p, q);
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 4096 }, 7);
+    for kind in [AlgoKind::SpreadOut, AlgoKind::Tuna { radix: 4 }] {
+        // Size the per-segment compute off the blocking probe so the
+        // pipeline has something real to hide at any profile scale.
+        let probe =
+            run_alltoallv_segmented_replay(&e, &kind, &sizes, segments, false, &SegmentCompute::None)
+                .unwrap();
+        let per_seg = SegmentCompute::Uniform(probe.makespan / segments as f64);
+        let blocking =
+            run_alltoallv_segmented_replay(&e, &kind, &sizes, segments, false, &per_seg).unwrap();
+        let pipelined =
+            run_alltoallv_segmented_replay(&e, &kind, &sizes, segments, true, &per_seg).unwrap();
+        let name = kind.name();
+        assert!(
+            pipelined.counters.exposed_comm < blocking.counters.exposed_comm,
+            "{name}: pipelined exposed {} not below blocking {}",
+            pipelined.counters.exposed_comm,
+            blocking.counters.exposed_comm
+        );
+        assert!(
+            pipelined.counters.hidden_comm > blocking.counters.hidden_comm,
+            "{name}: pipelined hid {} vs blocking {}",
+            pipelined.counters.hidden_comm,
+            blocking.counters.hidden_comm
+        );
+        assert!(
+            pipelined.makespan <= blocking.makespan,
+            "{name}: pipelined {} slower than blocking {}",
+            pipelined.makespan,
+            blocking.makespan
+        );
+        assert_eq!(
+            pipelined.counters.total_bytes(),
+            blocking.counters.total_bytes(),
+            "{name}: stitches moved different byte totals"
+        );
+    }
 }
