@@ -9,11 +9,12 @@
 //!   plan/replay — with derived messages/second, the host copied-bytes
 //!   counter (the zero-copy rope accounting, see `comm::buffer`), and on
 //!   replay rows the compiled plan telemetry (`plan_ops`, peak per-rank
-//!   plan bytes, workload `nnz_total`, and the `replay_shards` the
-//!   sharded executor auto-sized to). Replay rows include P >= 4096
-//!   dense points, the sparse P = 32768 acceptance point — whose plan
-//!   op-count is asserted proportional to the nonzeros — and the PR 6
-//!   sparse P = 262144 point;
+//!   plan bytes, the interned arena footprint `plan_bytes` with its
+//!   `plan_programs` count, workload `nnz_total`, and the
+//!   `replay_shards` the sharded executor auto-sized to). Replay rows
+//!   include P >= 4096 dense points, the sparse P = 32768 acceptance
+//!   point — whose plan op-count is asserted proportional to the
+//!   nonzeros — and the PR 6 sparse P = 262144 point;
 //! * a threaded-vs-replay radix *sweep* at P = 512 phantom (the selector
 //!   refinement workload), recording the replay speedup per commit;
 //! * a serial-vs-sharded *parallel replay* row over one cached plan
@@ -24,6 +25,15 @@
 //!   against one `PersistentColl` started 16 times at P = 4096, with
 //!   every makespan asserted bit-identical and the same-engine one-shot
 //!   plan-cache contract (`hits == calls - 1`) asserted in passing;
+//! * a serial-vs-parallel *plan compile* row (the PR 10 tentpole): the
+//!   same sparse workload compiled by the serial packer and by the
+//!   scoped-thread forge, plan equality asserted in passing, speedup
+//!   recorded as `compile_speedup` (P = 65536 full / 16384 quick);
+//! * a *plan interning* row (the PR 10 footprint acceptance point): a
+//!   constant-size dense workload under spread-out at P = 32768
+//!   (4096 quick), where every rank's program is a rotation of one
+//!   canonical program — the interned arena is asserted to be <= 50%
+//!   of the legacy `Vec<PlanOp>`-per-rank footprint;
 //! * engine spawn overhead vs P.
 //!
 //! Besides the human-readable table, every run writes a machine-readable
@@ -91,6 +101,12 @@ struct AlgoRow {
     /// rows, which compile nothing.
     plan_ops: u64,
     plan_row_bytes: u64,
+    /// Replay rows: the interned arena's actual footprint and how many
+    /// distinct rank programs it stores — `plan_bytes` vs the
+    /// materialized `plan_ops * sizeof(PlanOp)` legacy envelope is the
+    /// PR 10 compression ratio. 0 on threaded rows.
+    plan_bytes: u64,
+    plan_programs: u64,
     /// Total structural nonzeros of the workload (P² for dense rows).
     nnz_total: u64,
     /// Worker shards the replay executor ran with (the `replay-shards`
@@ -126,11 +142,17 @@ fn bench_algo(
     let (plan_hits, plan_misses) = engine.plan_cache.stats();
     // Plan telemetry after the stats read, so the extra cache hit below
     // does not perturb the hit/miss contract the rows assert.
-    let (plan_ops, plan_row_bytes) = if exec == ExecMode::Replay {
+    let (plan_ops, plan_row_bytes, plan_bytes, plan_programs) = if exec == ExecMode::Replay {
         let plan = tuna::algos::plan_for(&engine, &kind, &sizes).unwrap();
-        (plan.total_ops() as u64, plan.peak_rank_bytes() as u64)
+        let st = plan.stats();
+        (
+            plan.total_ops() as u64,
+            plan.peak_rank_bytes() as u64,
+            st.plan_bytes as u64,
+            st.distinct_programs as u64,
+        )
     } else {
-        (0, 0)
+        (0, 0, 0, 0)
     };
     AlgoRow {
         algo: kind.name(),
@@ -148,6 +170,8 @@ fn bench_algo(
         plan_misses,
         plan_ops,
         plan_row_bytes,
+        plan_bytes,
+        plan_programs,
         nnz_total: sizes.total_nnz(),
         replay_shards: if exec == ExecMode::Replay {
             tuna::comm::replay::auto_shards(p) as u64
@@ -260,6 +284,92 @@ fn bench_persistent(p: usize, q: usize, s: u64, calls: usize) -> PersistentRow {
         algo: kind.name(),
         oneshot_s,
         persistent_s,
+    }
+}
+
+struct CompileRow {
+    p: usize,
+    algo: String,
+    threads: usize,
+    serial_s: f64,
+    parallel_s: f64,
+    plan_ops: u64,
+}
+
+/// The PR 10 tentpole row: one workload compiled by the serial packer
+/// (`threads = 1`) and by the scoped-thread forge at the engine's
+/// resolved worker count, timed head to head (best of three each, after
+/// a warm-up pass). Representation-identity of the two plans is
+/// asserted in passing — the recorded speedup buys the exact same plan
+/// bytes, not a relaxed schedule.
+fn bench_compile(p: usize, q: usize, nnz: usize) -> CompileRow {
+    use tuna::algos::compile_plan_threads;
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let kind = AlgoKind::SpreadOut;
+    let sizes = BlockSizes::generate(p, Dist::Sparse { nnz, max: 1024 }, 7);
+    let threads = engine.compile_threads_for(p).max(2);
+    let serial_plan = compile_plan_threads(&engine, &kind, &sizes, 1).unwrap();
+    let parallel_plan = compile_plan_threads(&engine, &kind, &sizes, threads).unwrap();
+    assert_eq!(
+        serial_plan, parallel_plan,
+        "parallel compile diverged from serial at P={p}, threads={threads}"
+    );
+    let best_of = |threads: usize| -> f64 {
+        (0..3)
+            .map(|_| {
+                let t0 = Instant::now();
+                let _ = compile_plan_threads(&engine, &kind, &sizes, threads).unwrap();
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let serial_s = best_of(1);
+    let parallel_s = best_of(threads);
+    CompileRow {
+        p,
+        algo: kind.name(),
+        threads,
+        serial_s,
+        parallel_s,
+        plan_ops: serial_plan.total_ops() as u64,
+    }
+}
+
+struct InternRow {
+    p: usize,
+    algo: String,
+    total_ops: u64,
+    programs: u64,
+    plan_bytes: u64,
+    legacy_bytes: u64,
+}
+
+/// The PR 10 footprint acceptance point: a constant-size dense workload
+/// under a linear family, where every rank's program is a rotation of
+/// one canonical program — the whole plan interns to a single shared
+/// program and the arena footprint collapses from O(P²) materialized
+/// ops to one program window plus the rank → program map. Asserted
+/// <= 50% of the legacy footprint (in practice it is orders of
+/// magnitude below).
+fn bench_intern(p: usize, q: usize, size: u64) -> InternRow {
+    let engine = Engine::new(MachineProfile::fugaku(), Topology::new(p, q));
+    let kind = AlgoKind::SpreadOut;
+    let sizes = BlockSizes::generate(p, Dist::Const { size }, 7);
+    let plan = tuna::algos::compile_plan(&engine, &kind, &sizes).unwrap();
+    let st = plan.stats();
+    assert!(
+        2 * st.plan_bytes <= st.legacy_bytes,
+        "interned plan {} B exceeds 50% of legacy {} B at P={p}",
+        st.plan_bytes,
+        st.legacy_bytes
+    );
+    InternRow {
+        p,
+        algo: kind.name(),
+        total_ops: st.total_ops as u64,
+        programs: st.distinct_programs as u64,
+        plan_bytes: st.plan_bytes as u64,
+        legacy_bytes: st.legacy_bytes as u64,
     }
 }
 
@@ -469,15 +579,15 @@ fn main() {
     };
 
     println!(
-        "\n{:<28} {:>6} {:>8} {:>5} {:>9} {:>12} {:>14} {:>14} {:>9} {:>12} {:>10}",
+        "\n{:<28} {:>6} {:>8} {:>5} {:>9} {:>12} {:>14} {:>14} {:>9} {:>12} {:>10} {:>12} {:>7}",
         "algorithm", "P", "dist", "mode", "exec", "s/run", "sim-msgs/s", "copied-B",
-        "plan-h/m", "plan-ops", "row-bytes"
+        "plan-h/m", "plan-ops", "row-bytes", "plan-bytes", "progs"
     );
     let mut algo_rows: Vec<AlgoRow> = Vec::new();
     for (kind, p, q, s, dist, iters, real, exec) in algo_grid {
         let row = bench_algo(kind, p, q, s, dist, iters, real, exec);
         println!(
-            "{:<28} {:>6} {:>8} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14} {:>5}/{} {:>12} {:>10}",
+            "{:<28} {:>6} {:>8} {:>5} {:>9} {:>10.3} s {:>14.0} {:>14} {:>5}/{} {:>12} {:>10} {:>12} {:>7}",
             row.algo,
             row.p,
             row.dist,
@@ -489,7 +599,9 @@ fn main() {
             row.plan_hits,
             row.plan_misses,
             row.plan_ops,
-            row.plan_row_bytes
+            row.plan_row_bytes,
+            row.plan_bytes,
+            row.plan_programs
         );
         if row.real {
             assert_eq!(
@@ -573,6 +685,39 @@ fn main() {
         "persistent handle speedup {pers_speedup:.2}x below the 2x acceptance bar"
     );
 
+    // Serial-vs-parallel plan compilation over one sparse workload (the
+    // PR 10 tentpole): the forge must buy wallclock without changing a
+    // byte of the plan.
+    let comp = if quick {
+        bench_compile(16_384, 64, 16)
+    } else {
+        bench_compile(65_536, 64, 16)
+    };
+    let comp_speedup = comp.serial_s / comp.parallel_s.max(1e-12);
+    println!(
+        "\nplan compile P={} {} ({} ops): serial {:.4} s, {} threads {:.4} s — {:.1}x speedup",
+        comp.p, comp.algo, comp.plan_ops, comp.serial_s, comp.threads, comp.parallel_s, comp_speedup
+    );
+
+    // Interned-arena footprint on the workload class it targets (the
+    // PR 10 acceptance point): constant-size dense rows under a linear
+    // family intern to one shared program.
+    let intern = if quick {
+        bench_intern(4096, 32, 1024)
+    } else {
+        bench_intern(32_768, 64, 1024)
+    };
+    println!(
+        "plan interning P={} {} dense const: {} ops in {} program(s), {} B interned vs {} B legacy ({:.4}% ratio)",
+        intern.p,
+        intern.algo,
+        intern.total_ops,
+        intern.programs,
+        intern.plan_bytes,
+        intern.legacy_bytes,
+        100.0 * intern.plan_bytes as f64 / intern.legacy_bytes.max(1) as f64
+    );
+
     // Segmented overlap vs blocking over one collective (the PR 9
     // acceptance point): virtual-schedule speedup plus the exposed-comm
     // reduction, at P = 4096 in both quick and full mode.
@@ -625,7 +770,8 @@ fn main() {
              \"exec\": \"{}\", \"s_per_run\": {:.6}, \"sim_msgs_per_sec\": {:.1}, \
              \"copied_bytes\": {}, \"payload_bytes\": {}, \
              \"plan_hits\": {}, \"plan_misses\": {}, \
-             \"plan_ops\": {}, \"plan_row_bytes\": {}, \"nnz_total\": {}, \
+             \"plan_ops\": {}, \"plan_row_bytes\": {}, \
+             \"plan_bytes\": {}, \"plan_programs\": {}, \"nnz_total\": {}, \
              \"replay_shards\": {}}}{}\n",
             json_escape(&r.algo),
             r.p,
@@ -642,6 +788,8 @@ fn main() {
             r.plan_misses,
             r.plan_ops,
             r.plan_row_bytes,
+            r.plan_bytes,
+            r.plan_programs,
             r.nnz_total,
             r.replay_shards,
             if i + 1 < algo_rows.len() { "," } else { "" }
@@ -671,6 +819,29 @@ fn main() {
         pers.oneshot_s,
         pers.persistent_s,
         pers_speedup
+    ));
+    j.push_str(&format!(
+        "  \"compile_speedup\": {{\"p\": {}, \"algo\": \"{}\", \"threads\": {}, \
+         \"plan_ops\": {}, \"serial_s\": {:.6}, \"parallel_s\": {:.6}, \"speedup\": {:.2}}},\n",
+        comp.p,
+        json_escape(&comp.algo),
+        comp.threads,
+        comp.plan_ops,
+        comp.serial_s,
+        comp.parallel_s,
+        comp_speedup
+    ));
+    j.push_str(&format!(
+        "  \"plan_interning\": {{\"p\": {}, \"algo\": \"{}\", \"total_ops\": {}, \
+         \"distinct_programs\": {}, \"plan_bytes\": {}, \"legacy_bytes\": {}, \
+         \"ratio\": {:.6}}},\n",
+        intern.p,
+        json_escape(&intern.algo),
+        intern.total_ops,
+        intern.programs,
+        intern.plan_bytes,
+        intern.legacy_bytes,
+        intern.plan_bytes as f64 / intern.legacy_bytes.max(1) as f64
     ));
     j.push_str(&format!(
         "  \"overlap_speedup\": {{\"p\": {}, \"segments\": {}, \"algo\": \"{}\", \

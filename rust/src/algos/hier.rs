@@ -69,10 +69,11 @@
 //! never touches payload bytes on the host. The `ctx.copy` charges keep
 //! modeling the rearrangement cost on the simulated machine's clock.
 
-use super::tuna::{plan_core, plan_core_sparse, tuna_core, tuna_core_sparse, SlotContent};
+use super::tuna::{plan_core, plan_core_sparse, tuna_core, tuna_core_sparse, CorePlanStats, SlotContent};
 use super::{AlgoKind, AlgoStats};
 use crate::comm::engine::{RecvReq, SendReq};
-use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx, Topology};
+use crate::comm::plan::chunk_ranges;
+use crate::comm::{Block, Payload, Phase, PlanBuilder, RankCtx, RankPlan, Topology};
 use crate::error::{Result, TunaError};
 use crate::util::prng::Pcg64;
 use crate::workload::BlockSizes;
@@ -1052,232 +1053,77 @@ fn run_local_linear(
 // ---- plan compiler --------------------------------------------------------
 
 /// Compile a hierarchical composition ([`run`]) for every rank from the
-/// counts matrix. The local phase is a per-node joint simulation; the
-/// global phase's message and copy sizes come from the matrix in closed
-/// form — after the local phase, rank `(n, g)`'s bucket for node `k`
-/// holds exactly the blocks `{(n, g') → (k, g)}` in ascending `g'`
-/// order.
+/// counts matrix, returning the per-rank op lists plus `(t_peak,
+/// rounds)`. The local phase is a per-node joint simulation; the global
+/// phase's message and copy sizes come from the matrix in closed form —
+/// after the local phase, rank `(n, g)`'s bucket for node `k` holds
+/// exactly the blocks `{(n, g') → (k, g)}` in ascending `g'` order.
 ///
-/// Compilation **streams node by node**: only one node's Q rows are held
-/// at a time (each rank's op list is independent, so emission order
-/// across ranks is free), keeping working memory O(Q·P) dense / O(node
-/// nnz) sparse instead of the former P×P materialization. The one
-/// exception is a `bruck` global level, whose cross-node joint
-/// simulations need the full bucket-sum matrix — O(P·N) transient,
-/// accumulated during the same single pass.
-pub(crate) fn plan_into(
-    builders: &mut [PlanBuilder],
+/// Compilation **streams node by node**: each node's stage touches only
+/// its own Q builders and Q rows (working memory O(Q·P) dense / O(node
+/// nnz) sparse), which is what makes the per-node split embarrassingly
+/// parallel — `threads > 1` compiles contiguous node chunks on scoped
+/// workers, and reassembly by rank index keeps the result op-for-op
+/// identical to the serial pass (the plan-determinism contract of
+/// `comm::plan`). The one cross-node stage is a `bruck` global level,
+/// whose joint simulations run per group rank `g` over the bucket-sum
+/// matrix (O(P·N) transient) accumulated in stage one; the Q groups are
+/// disjoint builder sets too and parallelize the same way after a
+/// g-major permutation.
+pub(crate) fn plan_build(
     sizes: &BlockSizes,
     topo: Topology,
     local: LocalAlgo,
     global: GlobalAlgo,
-) -> (usize, usize) {
-    if sizes.is_sparse() {
-        plan_into_sparse(builders, sizes, topo, local, global)
-    } else {
-        plan_into_dense(builders, sizes, topo, local, global)
-    }
-}
-
-fn plan_into_dense(
-    builders: &mut [PlanBuilder],
-    sizes: &BlockSizes,
-    topo: Topology,
-    local: LocalAlgo,
-    global: GlobalAlgo,
-) -> (usize, usize) {
+    threads: usize,
+) -> (Vec<RankPlan>, usize, usize) {
     let p = topo.p();
     let q = topo.q();
     let n_nodes = topo.nodes();
     assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
-
-    // Prepare: global allreduce for M + index array write.
-    for b in builders.iter_mut() {
-        b.mark();
-        b.allreduce();
-        b.copy(4 * p as u64);
-        b.lap(Phase::Prepare);
-    }
-
-    let is_bruck = matches!(global, GlobalAlgo::Bruck { .. });
-    // Full bucket-sum matrix — only the Bruck global's cross-node joint
-    // simulations need it (O(P·N) transient); every other global phase
-    // compiles from the per-node sums alone.
-    let mut bs_full: Vec<Vec<u64>> = if is_bruck && n_nodes > 1 {
-        vec![vec![0u64; n_nodes]; p]
-    } else {
-        Vec::new()
+    let use_bs = matches!(global, GlobalAlgo::Bruck { .. }) && n_nodes > 1;
+    let bruck_radix = match global {
+        GlobalAlgo::Bruck { radix } => radix.min(n_nodes).max(2),
+        _ => 2,
     };
 
-    let mut t_peak = 0usize;
-    let mut rounds = 0usize;
-    let mut global_rounds = 0usize;
-
-    for node in 0..n_nodes {
-        let base = node * q;
-        // The only slice of the matrix held at a time: this node's rows.
-        let rows: Vec<Vec<u64>> = (0..q).map(|g| sizes.row(base + g)).collect();
-        // Bytes of rank (node, g)'s slot j after stage 1 of the contract.
-        let slot_bytes = |g: usize, j: usize| -> u64 {
-            let dest_g = (g + j) % q;
-            (0..n_nodes).map(|k| rows[g][topo.rank_of(k, dest_g)]).sum()
+    if sizes.is_sparse() {
+        let node_fn = |node: usize, nb: &mut [PlanBuilder], bs: &mut [Vec<(u64, u32)>]| {
+            plan_node_sparse(sizes, topo, local, global, node, nb, bs)
         };
-
-        // ---- local phase, one joint simulation per node.
-        match local {
-            LocalAlgo::Tuna { radix } => {
-                assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
-                let mut slots: Vec<Vec<u64>> = (0..q)
-                    .map(|g| (0..q).map(|j| slot_bytes(g, j)).collect())
-                    .collect();
-                let stats = plan_core(builders, base, 1, q, radix, n_nodes, &mut slots, 0, None);
-                t_peak = stats.t_peak;
-                rounds = stats.rounds;
-            }
-            LocalAlgo::Linear => {
-                for g in 0..q {
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    for j in 1..q {
-                        let dst = base + (g + j) % q;
-                        let src = base + (g + q - j) % q;
-                        b.recv(src, j as u32);
-                        b.send(dst, j as u32, slot_bytes(g, j));
-                    }
-                    b.wait();
-                    b.lap(Phase::Data);
-                }
-                t_peak = 0;
-                rounds = 1;
-            }
-            LocalAlgo::Balanced => {
-                for g in 0..q {
-                    let bytes: Vec<u64> = (0..q).map(|j| slot_bytes(g, j)).collect();
-                    let order = balanced_order(&bytes);
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    for &j in &order {
-                        let dst = base + (g + j) % q;
-                        let src = base + (g + q - j) % q;
-                        b.recv(src, j as u32);
-                        b.send(dst, j as u32, bytes[j]);
-                    }
-                    b.wait();
-                    b.lap(Phase::Data);
-                }
-                t_peak = 0;
-                rounds = 1;
-            }
-        }
-
-        // `bucket_block(g, k, j)` is the size of the j-th (origin-sorted)
-        // block of rank (node, g)'s bucket for node `k`.
-        let bucket_block = |g: usize, k: usize, j: usize| rows[j][topo.rank_of(k, g)];
-        let bucket_sum = |g: usize, k: usize| (0..q).map(|j| bucket_block(g, k, j)).sum::<u64>();
-
-        // Own node's bucket is final: a local copy on every rank.
-        for g in 0..q {
-            let b = &mut builders[base + g];
-            b.mark();
-            b.copy(bucket_sum(g, node));
-            b.lap(Phase::Replace);
-        }
-        if n_nodes == 1 {
-            continue;
-        }
-
-        // ---- global phase for this node's ranks.
-        match global {
-            GlobalAlgo::Coalesced { block_count } => {
-                assert!(block_count >= 1);
-                global_rounds = n_nodes - 1;
-                for g in 0..q {
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    let staged: u64 = (0..n_nodes)
-                        .filter(|&k| k != node)
-                        .map(|k| bucket_sum(g, k))
-                        .sum();
-                    b.copy(staged);
-                    b.lap(Phase::Rearrange);
-
-                    let mut round = 0usize;
-                    while round < n_nodes - 1 {
-                        let batch = block_count.min(n_nodes - 1 - round);
-                        for i in 0..batch {
-                            let off = round + i + 1;
-                            let ndst = (node + n_nodes - off) % n_nodes;
-                            let nsrc = (node + off) % n_nodes;
-                            let tag = INTER_TAG + off as u32;
-                            b.recv(topo.rank_of(nsrc, g), tag);
-                            b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
-                        }
-                        b.wait();
-                        round += batch;
-                    }
-                    b.lap(Phase::InterNode);
-                }
-            }
-            GlobalAlgo::Staggered { block_count } => {
-                assert!(block_count >= 1);
-                let total_steps = (n_nodes - 1) * q;
-                global_rounds = total_steps.div_ceil(block_count);
-                for g in 0..q {
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    let mut step = 0usize;
-                    while step < total_steps {
-                        let batch = block_count.min(total_steps - step);
-                        for i in 0..batch {
-                            let idx = step + i;
-                            let off = idx / q + 1;
-                            let j = idx % q;
-                            let ndst = (node + n_nodes - off) % n_nodes;
-                            let nsrc = (node + off) % n_nodes;
-                            let tag = INTER_TAG + idx as u32;
-                            b.recv(topo.rank_of(nsrc, g), tag);
-                            b.send(topo.rank_of(ndst, g), tag, bucket_block(g, ndst, j));
-                        }
-                        b.wait();
-                        step += batch;
-                    }
-                    b.lap(Phase::InterNode);
-                }
-            }
-            GlobalAlgo::Linear => {
-                global_rounds = 1;
-                for g in 0..q {
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    for off in 1..n_nodes {
-                        let ndst = (node + n_nodes - off) % n_nodes;
-                        let nsrc = (node + off) % n_nodes;
-                        let tag = INTER_TAG + off as u32;
-                        b.recv(topo.rank_of(nsrc, g), tag);
-                        b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
-                    }
-                    b.wait();
-                    b.lap(Phase::InterNode);
-                }
-            }
-            GlobalAlgo::Bruck { .. } => {
-                for g in 0..q {
-                    for k in 0..n_nodes {
-                        bs_full[base + g][k] = bucket_sum(g, k);
-                    }
-                }
-            }
-        }
-    }
-    if n_nodes == 1 {
-        return (t_peak, rounds);
-    }
-
-    if let GlobalAlgo::Bruck { radix } = global {
-        let radix = radix.min(n_nodes).max(2);
-        // One joint simulation per Q-port group {(k, g) : k}.
-        let mut stats = None;
-        for g in 0..q {
+        let tail_fn = |g: usize, col: &mut [PlanBuilder], bs: &[Vec<(u64, u32)>]| {
+            let mut node_slots: Vec<Vec<(u64, u32)>> = (0..n_nodes)
+                .map(|m| {
+                    (0..n_nodes)
+                        .map(|j| {
+                            if j == 0 {
+                                (0, 0)
+                            } else {
+                                bs[topo.rank_of(m, g)][(m + j) % n_nodes]
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            plan_core_sparse(
+                col,
+                g,
+                q,
+                n_nodes,
+                bruck_radix,
+                &mut node_slots,
+                INTER_TAG,
+                Some(Phase::InterNode),
+            )
+        };
+        let tail: Option<&(dyn Fn(usize, &mut [PlanBuilder], &[Vec<(u64, u32)>]) -> CorePlanStats + Sync)> =
+            if use_bs { Some(&tail_fn) } else { None };
+        plan_build_impl(p, q, n_nodes, threads, use_bs, &node_fn, tail)
+    } else {
+        let node_fn = |node: usize, nb: &mut [PlanBuilder], bs: &mut [Vec<u64>]| {
+            plan_node_dense(sizes, topo, local, global, node, nb, bs)
+        };
+        let tail_fn = |g: usize, col: &mut [PlanBuilder], bs: &[Vec<u64>]| {
             let mut node_slots: Vec<Vec<u64>> = (0..n_nodes)
                 .map(|m| {
                     (0..n_nodes)
@@ -1285,248 +1131,519 @@ fn plan_into_dense(
                             if j == 0 {
                                 0
                             } else {
-                                bs_full[topo.rank_of(m, g)][(m + j) % n_nodes]
+                                bs[topo.rank_of(m, g)][(m + j) % n_nodes]
                             }
                         })
                         .collect()
                 })
                 .collect();
-            stats = Some(plan_core(
-                builders,
+            plan_core(
+                col,
                 g,
                 q,
                 n_nodes,
-                radix,
+                bruck_radix,
                 q,
                 &mut node_slots,
                 INTER_TAG,
                 Some(Phase::InterNode),
-            ));
-        }
-        let stats = stats.expect("Q >= 2 groups compiled");
-        global_rounds = stats.rounds;
-        t_peak = t_peak.max(stats.t_peak);
+            )
+        };
+        let tail: Option<&(dyn Fn(usize, &mut [PlanBuilder], &[Vec<u64>]) -> CorePlanStats + Sync)> =
+            if use_bs { Some(&tail_fn) } else { None };
+        plan_build_impl(p, q, n_nodes, threads, use_bs, &node_fn, tail)
     }
-    (t_peak, rounds + global_rounds)
 }
 
-/// Sparse compilation of [`run_sparse`]: the same per-node streaming
-/// shape, with every schedule derived from the structural entries only —
-/// op counts scale with the node's nonzeros, and the event/predicate
-/// helpers are the very functions the threaded runner calls.
-fn plan_into_sparse(
-    builders: &mut [PlanBuilder],
+/// Per-node schedule stats, combined across nodes by element-wise max:
+/// `t_peak`/`rounds` are identical on every node (structural functions
+/// of the composition), and the sparse global phases already combine
+/// their per-rank round counts by max.
+#[derive(Clone, Copy, Default)]
+struct NodeOut {
+    t_peak: usize,
+    rounds: usize,
+    global_rounds: usize,
+}
+
+impl NodeOut {
+    fn merge(&mut self, o: NodeOut) {
+        self.t_peak = self.t_peak.max(o.t_peak);
+        self.rounds = self.rounds.max(o.rounds);
+        self.global_rounds = self.global_rounds.max(o.global_rounds);
+    }
+}
+
+/// The two-stage parallel driver shared by the dense and sparse
+/// compilers. Stage one runs `node_fn` over contiguous node chunks
+/// (each node owns builders `node·Q .. (node+1)·Q` and, for a bruck
+/// global, its own Q rows of the bucket-sum matrix — all disjoint).
+/// Stage two, when `tail_fn` is given, permutes the builders g-major so
+/// each cross-node group `{(k, g) : k}` is one contiguous slice, runs
+/// the joint simulations over group chunks, then restores rank order.
+/// Worker chunks are contiguous and ascending, so assembly by rank
+/// index is trivially deterministic for any thread count.
+fn plan_build_impl<T: Clone + Default + Send + Sync>(
+    p: usize,
+    q: usize,
+    n_nodes: usize,
+    threads: usize,
+    use_bs: bool,
+    node_fn: &(dyn Fn(usize, &mut [PlanBuilder], &mut [Vec<T>]) -> NodeOut + Sync),
+    tail_fn: Option<&(dyn Fn(usize, &mut [PlanBuilder], &[Vec<T>]) -> CorePlanStats + Sync)>,
+) -> (Vec<RankPlan>, usize, usize) {
+    let mut bs_full: Vec<Vec<T>> = if use_bs {
+        vec![vec![T::default(); n_nodes]; p]
+    } else {
+        Vec::new()
+    };
+    let new_node = |node: usize| -> Vec<PlanBuilder> {
+        (node * q..(node + 1) * q)
+            .map(|r| PlanBuilder::new(r, p))
+            .collect()
+    };
+    let new_node = &new_node;
+
+    let mut agg = NodeOut::default();
+    let mut per_node: Vec<Vec<PlanBuilder>> = Vec::with_capacity(n_nodes);
+    let workers = threads.max(1).min(n_nodes);
+    if workers <= 1 {
+        for node in 0..n_nodes {
+            let mut nb = new_node(node);
+            let mut empty: [Vec<T>; 0] = [];
+            let bs_node: &mut [Vec<T>] = if use_bs {
+                &mut bs_full[node * q..(node + 1) * q]
+            } else {
+                &mut empty
+            };
+            agg.merge(node_fn(node, &mut nb, bs_node));
+            per_node.push(nb);
+        }
+    } else {
+        let ranges = chunk_ranges(n_nodes, workers);
+        let mut bs_chunks: Vec<&mut [Vec<T>]> = Vec::with_capacity(ranges.len());
+        {
+            let mut rest: &mut [Vec<T>] = &mut bs_full;
+            for r in &ranges {
+                let take = if use_bs { (r.end - r.start) * q } else { 0 };
+                let (head, tail) = rest.split_at_mut(take);
+                bs_chunks.push(head);
+                rest = tail;
+            }
+        }
+        let results: Vec<(Vec<Vec<PlanBuilder>>, NodeOut)> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .cloned()
+                .zip(bs_chunks)
+                .map(|(r, mut bs_chunk)| {
+                    s.spawn(move || {
+                        let mut nodes = Vec::with_capacity(r.end - r.start);
+                        let mut agg = NodeOut::default();
+                        for (i, node) in r.enumerate() {
+                            let mut nb = new_node(node);
+                            let mut empty: [Vec<T>; 0] = [];
+                            let bs_node: &mut [Vec<T>] = if use_bs {
+                                &mut bs_chunk[i * q..(i + 1) * q]
+                            } else {
+                                &mut empty
+                            };
+                            agg.merge(node_fn(node, &mut nb, bs_node));
+                            nodes.push(nb);
+                        }
+                        (nodes, agg)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("hier plan worker panicked"))
+                .collect()
+        });
+        for (nodes, out) in results {
+            per_node.extend(nodes);
+            agg.merge(out);
+        }
+    }
+
+    if let Some(tail_fn) = tail_fn {
+        if n_nodes > 1 {
+            // Permute to g-major: by_g[g][m] is rank (m, g)'s builder.
+            let mut by_g: Vec<Vec<PlanBuilder>> =
+                (0..q).map(|_| Vec::with_capacity(n_nodes)).collect();
+            for nb in per_node {
+                for (g, b) in nb.into_iter().enumerate() {
+                    by_g[g].push(b);
+                }
+            }
+            let bs_ref = &bs_full;
+            let tail_workers = threads.max(1).min(q);
+            let mut stats: Option<CorePlanStats> = None;
+            if tail_workers <= 1 {
+                for (g, col) in by_g.iter_mut().enumerate() {
+                    stats = Some(tail_fn(g, col, bs_ref));
+                }
+            } else {
+                let ranges = chunk_ranges(q, tail_workers);
+                let collected: Vec<Option<CorePlanStats>> = std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(ranges.len());
+                    let mut rest: &mut [Vec<PlanBuilder>] = &mut by_g;
+                    for r in ranges {
+                        let (head, rest_tail) = rest.split_at_mut(r.end - r.start);
+                        rest = rest_tail;
+                        handles.push(s.spawn(move || {
+                            let mut st = None;
+                            for (i, g) in r.enumerate() {
+                                st = Some(tail_fn(g, &mut head[i], bs_ref));
+                            }
+                            st
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("hier tail worker panicked"))
+                        .collect()
+                });
+                stats = collected.into_iter().flatten().last();
+            }
+            if let Some(st) = stats {
+                agg.global_rounds = st.rounds;
+                agg.t_peak = agg.t_peak.max(st.t_peak);
+            }
+            // Restore rank order.
+            let mut ranks: Vec<RankPlan> = vec![RankPlan::default(); p];
+            for (g, col) in by_g.into_iter().enumerate() {
+                for (m, b) in col.into_iter().enumerate() {
+                    ranks[m * q + g] = b.finish();
+                }
+            }
+            return (ranks, agg.t_peak, agg.rounds + agg.global_rounds);
+        }
+    }
+
+    let mut ranks = Vec::with_capacity(p);
+    for nb in per_node {
+        for b in nb {
+            ranks.push(b.finish());
+        }
+    }
+    (ranks, agg.t_peak, agg.rounds + agg.global_rounds)
+}
+
+/// Stage one of the dense compiler for a single node: the prepare
+/// preamble, the local-phase joint simulation, the own-bucket copy, and
+/// the non-Bruck global phase — everything that touches only this
+/// node's Q builders (`nb[g]` is rank `node·Q + g`) and Q matrix rows.
+/// A `bruck` global level instead records the node's bucket sums in
+/// `bs_node` for the cross-node stage the driver runs afterwards.
+fn plan_node_dense(
     sizes: &BlockSizes,
     topo: Topology,
     local: LocalAlgo,
     global: GlobalAlgo,
-) -> (usize, usize) {
+    node: usize,
+    nb: &mut [PlanBuilder],
+    bs_node: &mut [Vec<u64>],
+) -> NodeOut {
     let p = topo.p();
     let q = topo.q();
     let n_nodes = topo.nodes();
-    assert!(q >= 2, "hierarchical TuNA needs Q >= 2");
+    let base = node * q;
+    let mut out = NodeOut::default();
 
-    for b in builders.iter_mut() {
+    // Prepare: global allreduce for M + index array write.
+    for b in nb.iter_mut() {
         b.mark();
         b.allreduce();
         b.copy(4 * p as u64);
         b.lap(Phase::Prepare);
     }
 
-    let is_bruck = matches!(global, GlobalAlgo::Bruck { .. });
-    let mut bs_full: Vec<Vec<(u64, u32)>> = if is_bruck && n_nodes > 1 {
-        vec![vec![(0u64, 0u32); n_nodes]; p]
-    } else {
-        Vec::new()
+    // The only slice of the matrix held at a time: this node's rows.
+    let rows: Vec<Vec<u64>> = (0..q).map(|g| sizes.row(base + g)).collect();
+    // Bytes of rank (node, g)'s slot j after stage 1 of the contract.
+    let slot_bytes = |g: usize, j: usize| -> u64 {
+        let dest_g = (g + j) % q;
+        (0..n_nodes).map(|k| rows[g][topo.rank_of(k, dest_g)]).sum()
     };
 
-    let mut t_peak = 0usize;
-    let mut local_rounds = 0usize;
-    let mut global_rounds = 0usize;
-
-    for node in 0..n_nodes {
-        let base = node * q;
-        // One pass over the node's structural entries builds the local
-        // slot matrix and the origin-ordered bucket size lists.
-        let mut slots: Vec<Vec<(u64, u32)>> = vec![vec![(0u64, 0u32); q]; q];
-        let mut bucket_entries: Vec<Vec<Vec<u64>>> = vec![vec![Vec::new(); n_nodes]; q];
-        for j in 0..q {
-            for (dst, val) in sizes.row_view(base + j).entries() {
-                let dest_g = topo.group_rank(dst);
-                let k = topo.node_of(dst);
-                let slot_j = (dest_g + q - j) % q;
-                slots[j][slot_j].0 += val;
-                slots[j][slot_j].1 += 1;
-                bucket_entries[dest_g][k].push(val);
-            }
+    // ---- local phase, one joint simulation per node.
+    match local {
+        LocalAlgo::Tuna { radix } => {
+            assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+            let mut slots: Vec<Vec<u64>> = (0..q)
+                .map(|g| (0..q).map(|j| slot_bytes(g, j)).collect())
+                .collect();
+            let stats = plan_core(nb, base, 1, q, radix, n_nodes, &mut slots, 0, None);
+            out.t_peak = stats.t_peak;
+            out.rounds = stats.rounds;
         }
-
-        // ---- local phase.
-        match local {
-            LocalAlgo::Tuna { radix } => {
-                assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
-                let stats =
-                    plan_core_sparse(builders, base, 1, q, radix, &mut slots, 0, None);
-                t_peak = stats.t_peak;
-                local_rounds = stats.rounds;
+        LocalAlgo::Linear => {
+            for g in 0..q {
+                let b = &mut nb[g];
+                b.mark();
+                for j in 1..q {
+                    let dst = base + (g + j) % q;
+                    let src = base + (g + q - j) % q;
+                    b.recv(src, j as u32);
+                    b.send(dst, j as u32, slot_bytes(g, j));
+                }
+                b.wait();
+                b.lap(Phase::Data);
             }
-            LocalAlgo::Linear => {
-                for g in 0..q {
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    for j in 1..q {
-                        let dst = base + (g + j) % q;
-                        let src_g = (g + q - j) % q;
-                        if slots[src_g][j].1 > 0 {
-                            b.recv(base + src_g, j as u32);
-                        }
-                        if slots[g][j].1 > 0 {
-                            b.send(dst, j as u32, slots[g][j].0);
-                        }
+            out.rounds = 1;
+        }
+        LocalAlgo::Balanced => {
+            for g in 0..q {
+                let bytes: Vec<u64> = (0..q).map(|j| slot_bytes(g, j)).collect();
+                let order = balanced_order(&bytes);
+                let b = &mut nb[g];
+                b.mark();
+                for &j in &order {
+                    let dst = base + (g + j) % q;
+                    let src = base + (g + q - j) % q;
+                    b.recv(src, j as u32);
+                    b.send(dst, j as u32, bytes[j]);
+                }
+                b.wait();
+                b.lap(Phase::Data);
+            }
+            out.rounds = 1;
+        }
+    }
+
+    // `bucket_block(g, k, j)` is the size of the j-th (origin-sorted)
+    // block of rank (node, g)'s bucket for node `k`.
+    let bucket_block = |g: usize, k: usize, j: usize| rows[j][topo.rank_of(k, g)];
+    let bucket_sum = |g: usize, k: usize| (0..q).map(|j| bucket_block(g, k, j)).sum::<u64>();
+
+    // Own node's bucket is final: a local copy on every rank.
+    for g in 0..q {
+        let b = &mut nb[g];
+        b.mark();
+        b.copy(bucket_sum(g, node));
+        b.lap(Phase::Replace);
+    }
+    if n_nodes == 1 {
+        return out;
+    }
+
+    // ---- global phase for this node's ranks.
+    match global {
+        GlobalAlgo::Coalesced { block_count } => {
+            assert!(block_count >= 1);
+            out.global_rounds = n_nodes - 1;
+            for g in 0..q {
+                let b = &mut nb[g];
+                b.mark();
+                let staged: u64 = (0..n_nodes)
+                    .filter(|&k| k != node)
+                    .map(|k| bucket_sum(g, k))
+                    .sum();
+                b.copy(staged);
+                b.lap(Phase::Rearrange);
+
+                let mut round = 0usize;
+                while round < n_nodes - 1 {
+                    let batch = block_count.min(n_nodes - 1 - round);
+                    for i in 0..batch {
+                        let off = round + i + 1;
+                        let ndst = (node + n_nodes - off) % n_nodes;
+                        let nsrc = (node + off) % n_nodes;
+                        let tag = INTER_TAG + off as u32;
+                        b.recv(topo.rank_of(nsrc, g), tag);
+                        b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
                     }
                     b.wait();
-                    b.lap(Phase::Data);
+                    round += batch;
                 }
-                t_peak = 0;
-                local_rounds = 1;
+                b.lap(Phase::InterNode);
             }
-            LocalAlgo::Balanced => {
-                for g in 0..q {
-                    let bytes: Vec<u64> = (0..q).map(|j| slots[g][j].0).collect();
-                    let order = balanced_order(&bytes);
-                    let b = &mut builders[base + g];
-                    b.mark();
-                    for &j in &order {
-                        let dst = base + (g + j) % q;
-                        let src_g = (g + q - j) % q;
-                        if slots[src_g][j].1 > 0 {
-                            b.recv(base + src_g, j as u32);
-                        }
-                        if slots[g][j].1 > 0 {
-                            b.send(dst, j as u32, bytes[j]);
-                        }
+        }
+        GlobalAlgo::Staggered { block_count } => {
+            assert!(block_count >= 1);
+            let total_steps = (n_nodes - 1) * q;
+            out.global_rounds = total_steps.div_ceil(block_count);
+            for g in 0..q {
+                let b = &mut nb[g];
+                b.mark();
+                let mut step = 0usize;
+                while step < total_steps {
+                    let batch = block_count.min(total_steps - step);
+                    for i in 0..batch {
+                        let idx = step + i;
+                        let off = idx / q + 1;
+                        let j = idx % q;
+                        let ndst = (node + n_nodes - off) % n_nodes;
+                        let nsrc = (node + off) % n_nodes;
+                        let tag = INTER_TAG + idx as u32;
+                        b.recv(topo.rank_of(nsrc, g), tag);
+                        b.send(topo.rank_of(ndst, g), tag, bucket_block(g, ndst, j));
                     }
                     b.wait();
-                    b.lap(Phase::Data);
+                    step += batch;
                 }
-                t_peak = 0;
-                local_rounds = 1;
+                b.lap(Phase::InterNode);
             }
         }
-
-        let bucket_sum =
-            |g: usize, k: usize| bucket_entries[g][k].iter().sum::<u64>();
-
-        // Own node's bucket is final.
-        for g in 0..q {
-            let b = &mut builders[base + g];
-            b.mark();
-            b.copy(bucket_sum(g, node));
-            b.lap(Phase::Replace);
+        GlobalAlgo::Linear => {
+            out.global_rounds = 1;
+            for g in 0..q {
+                let b = &mut nb[g];
+                b.mark();
+                for off in 1..n_nodes {
+                    let ndst = (node + n_nodes - off) % n_nodes;
+                    let nsrc = (node + off) % n_nodes;
+                    let tag = INTER_TAG + off as u32;
+                    b.recv(topo.rank_of(nsrc, g), tag);
+                    b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
+                }
+                b.wait();
+                b.lap(Phase::InterNode);
+            }
         }
-        if n_nodes == 1 {
-            continue;
+        GlobalAlgo::Bruck { .. } => {
+            for g in 0..q {
+                for k in 0..n_nodes {
+                    bs_node[g][k] = bucket_sum(g, k);
+                }
+            }
         }
+    }
+    out
+}
 
-        // ---- global phase for this node's ranks, structural events only.
-        match global {
-            GlobalAlgo::Coalesced { block_count } => {
-                assert!(block_count >= 1);
-                for g in 0..q {
-                    let me = base + g;
-                    let b = &mut builders[me];
-                    b.mark();
-                    let staged: u64 = (0..n_nodes)
-                        .filter(|&k| k != node)
-                        .map(|k| bucket_sum(g, k))
-                        .sum();
-                    b.copy(staged);
-                    b.lap(Phase::Rearrange);
+/// Stage one of the sparse compiler for a single node — the sparse
+/// analog of [`plan_node_dense`], with every schedule derived from the
+/// structural entries only: op counts scale with the node's nonzeros,
+/// and the event/predicate helpers are the very functions the threaded
+/// runner calls.
+fn plan_node_sparse(
+    sizes: &BlockSizes,
+    topo: Topology,
+    local: LocalAlgo,
+    global: GlobalAlgo,
+    node: usize,
+    nb: &mut [PlanBuilder],
+    bs_node: &mut [Vec<(u64, u32)>],
+) -> NodeOut {
+    let p = topo.p();
+    let q = topo.q();
+    let n_nodes = topo.nodes();
+    let base = node * q;
+    let mut out = NodeOut::default();
 
-                    let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
-                    let events = sparse_node_events(
-                        &topo,
-                        me,
-                        |k| !bucket_entries[g][k].is_empty(),
-                        &recv_nodes,
-                    );
-                    let mut i = 0usize;
-                    while i < events.len() {
-                        let batch = block_count.min(events.len() - i);
-                        for &(off, s, r) in &events[i..i + batch] {
-                            let tag = INTER_TAG + off as u32;
-                            if let Some(nsrc) = r {
-                                b.recv(topo.rank_of(nsrc, g), tag);
-                            }
-                            if let Some(ndst) = s {
-                                b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
-                            }
-                        }
-                        b.wait();
-                        i += batch;
+    for b in nb.iter_mut() {
+        b.mark();
+        b.allreduce();
+        b.copy(4 * p as u64);
+        b.lap(Phase::Prepare);
+    }
+
+    // One pass over the node's structural entries builds the local
+    // slot matrix and the origin-ordered bucket size lists.
+    let mut slots: Vec<Vec<(u64, u32)>> = vec![vec![(0u64, 0u32); q]; q];
+    let mut bucket_entries: Vec<Vec<Vec<u64>>> = vec![vec![Vec::new(); n_nodes]; q];
+    for j in 0..q {
+        for (dst, val) in sizes.row_view(base + j).entries() {
+            let dest_g = topo.group_rank(dst);
+            let k = topo.node_of(dst);
+            let slot_j = (dest_g + q - j) % q;
+            slots[j][slot_j].0 += val;
+            slots[j][slot_j].1 += 1;
+            bucket_entries[dest_g][k].push(val);
+        }
+    }
+
+    // ---- local phase.
+    match local {
+        LocalAlgo::Tuna { radix } => {
+            assert!((2..=q).contains(&radix), "intra radix must be in [2, Q]");
+            let stats = plan_core_sparse(nb, base, 1, q, radix, &mut slots, 0, None);
+            out.t_peak = stats.t_peak;
+            out.rounds = stats.rounds;
+        }
+        LocalAlgo::Linear => {
+            for g in 0..q {
+                let b = &mut nb[g];
+                b.mark();
+                for j in 1..q {
+                    let dst = base + (g + j) % q;
+                    let src_g = (g + q - j) % q;
+                    if slots[src_g][j].1 > 0 {
+                        b.recv(base + src_g, j as u32);
                     }
-                    b.lap(Phase::InterNode);
-                    global_rounds = global_rounds.max(events.len());
-                }
-            }
-            GlobalAlgo::Staggered { block_count } => {
-                assert!(block_count >= 1);
-                for g in 0..q {
-                    let me = base + g;
-                    let b = &mut builders[me];
-                    b.mark();
-                    let send_counts: Vec<usize> = (0..n_nodes)
-                        .map(|k| if k == node { 0 } else { bucket_entries[g][k].len() })
-                        .collect();
-                    let recv_counts: Vec<usize> = (0..n_nodes)
-                        .map(|k| {
-                            if k == node {
-                                0
-                            } else {
-                                sparse_senders_in_node(sizes, &topo, me, k).len()
-                            }
-                        })
-                        .collect();
-                    let events = sparse_stag_events(&topo, me, &send_counts, &recv_counts);
-                    let mut waits = 0usize;
-                    let mut i = 0usize;
-                    while i < events.len() {
-                        let batch = block_count.min(events.len() - i);
-                        for &(idx, ev) in &events[i..i + batch] {
-                            let tag = INTER_TAG + idx as u32;
-                            if let Some(nsrc) = ev.recv {
-                                b.recv(topo.rank_of(nsrc, g), tag);
-                            }
-                            if let Some((ndst, pos)) = ev.send {
-                                b.send(
-                                    topo.rank_of(ndst, g),
-                                    tag,
-                                    bucket_entries[g][ndst][pos],
-                                );
-                            }
-                        }
-                        b.wait();
-                        waits += 1;
-                        i += batch;
+                    if slots[g][j].1 > 0 {
+                        b.send(dst, j as u32, slots[g][j].0);
                     }
-                    b.lap(Phase::InterNode);
-                    global_rounds = global_rounds.max(waits);
                 }
+                b.wait();
+                b.lap(Phase::Data);
             }
-            GlobalAlgo::Linear => {
-                global_rounds = global_rounds.max(1);
-                for g in 0..q {
-                    let me = base + g;
-                    let b = &mut builders[me];
-                    b.mark();
-                    let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
-                    let events = sparse_node_events(
-                        &topo,
-                        me,
-                        |k| !bucket_entries[g][k].is_empty(),
-                        &recv_nodes,
-                    );
-                    for &(off, s, r) in &events {
+            out.rounds = 1;
+        }
+        LocalAlgo::Balanced => {
+            for g in 0..q {
+                let bytes: Vec<u64> = (0..q).map(|j| slots[g][j].0).collect();
+                let order = balanced_order(&bytes);
+                let b = &mut nb[g];
+                b.mark();
+                for &j in &order {
+                    let dst = base + (g + j) % q;
+                    let src_g = (g + q - j) % q;
+                    if slots[src_g][j].1 > 0 {
+                        b.recv(base + src_g, j as u32);
+                    }
+                    if slots[g][j].1 > 0 {
+                        b.send(dst, j as u32, bytes[j]);
+                    }
+                }
+                b.wait();
+                b.lap(Phase::Data);
+            }
+            out.rounds = 1;
+        }
+    }
+
+    let bucket_sum = |g: usize, k: usize| bucket_entries[g][k].iter().sum::<u64>();
+
+    // Own node's bucket is final.
+    for g in 0..q {
+        let b = &mut nb[g];
+        b.mark();
+        b.copy(bucket_sum(g, node));
+        b.lap(Phase::Replace);
+    }
+    if n_nodes == 1 {
+        return out;
+    }
+
+    // ---- global phase for this node's ranks, structural events only.
+    match global {
+        GlobalAlgo::Coalesced { block_count } => {
+            assert!(block_count >= 1);
+            for g in 0..q {
+                let me = base + g;
+                let b = &mut nb[g];
+                b.mark();
+                let staged: u64 = (0..n_nodes)
+                    .filter(|&k| k != node)
+                    .map(|k| bucket_sum(g, k))
+                    .sum();
+                b.copy(staged);
+                b.lap(Phase::Rearrange);
+
+                let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
+                let events = sparse_node_events(
+                    &topo,
+                    me,
+                    |k| !bucket_entries[g][k].is_empty(),
+                    &recv_nodes,
+                );
+                let mut i = 0usize;
+                while i < events.len() {
+                    let batch = block_count.min(events.len() - i);
+                    for &(off, s, r) in &events[i..i + batch] {
                         let tag = INTER_TAG + off as u32;
                         if let Some(nsrc) = r {
                             b.recv(topo.rank_of(nsrc, g), tag);
@@ -1536,56 +1653,94 @@ fn plan_into_sparse(
                         }
                     }
                     b.wait();
-                    b.lap(Phase::InterNode);
+                    i += batch;
                 }
+                b.lap(Phase::InterNode);
+                out.global_rounds = out.global_rounds.max(events.len());
             }
-            GlobalAlgo::Bruck { .. } => {
-                for g in 0..q {
-                    for k in 0..n_nodes {
-                        if k != node {
-                            bs_full[base + g][k] =
-                                (bucket_sum(g, k), bucket_entries[g][k].len() as u32);
+        }
+        GlobalAlgo::Staggered { block_count } => {
+            assert!(block_count >= 1);
+            for g in 0..q {
+                let me = base + g;
+                let b = &mut nb[g];
+                b.mark();
+                let send_counts: Vec<usize> = (0..n_nodes)
+                    .map(|k| if k == node { 0 } else { bucket_entries[g][k].len() })
+                    .collect();
+                let recv_counts: Vec<usize> = (0..n_nodes)
+                    .map(|k| {
+                        if k == node {
+                            0
+                        } else {
+                            sparse_senders_in_node(sizes, &topo, me, k).len()
                         }
+                    })
+                    .collect();
+                let events = sparse_stag_events(&topo, me, &send_counts, &recv_counts);
+                let mut waits = 0usize;
+                let mut i = 0usize;
+                while i < events.len() {
+                    let batch = block_count.min(events.len() - i);
+                    for &(idx, ev) in &events[i..i + batch] {
+                        let tag = INTER_TAG + idx as u32;
+                        if let Some(nsrc) = ev.recv {
+                            b.recv(topo.rank_of(nsrc, g), tag);
+                        }
+                        if let Some((ndst, pos)) = ev.send {
+                            b.send(
+                                topo.rank_of(ndst, g),
+                                tag,
+                                bucket_entries[g][ndst][pos],
+                            );
+                        }
+                    }
+                    b.wait();
+                    waits += 1;
+                    i += batch;
+                }
+                b.lap(Phase::InterNode);
+                out.global_rounds = out.global_rounds.max(waits);
+            }
+        }
+        GlobalAlgo::Linear => {
+            out.global_rounds = out.global_rounds.max(1);
+            for g in 0..q {
+                let me = base + g;
+                let b = &mut nb[g];
+                b.mark();
+                let recv_nodes = sparse_sender_nodes(sizes, &topo, me);
+                let events = sparse_node_events(
+                    &topo,
+                    me,
+                    |k| !bucket_entries[g][k].is_empty(),
+                    &recv_nodes,
+                );
+                for &(off, s, r) in &events {
+                    let tag = INTER_TAG + off as u32;
+                    if let Some(nsrc) = r {
+                        b.recv(topo.rank_of(nsrc, g), tag);
+                    }
+                    if let Some(ndst) = s {
+                        b.send(topo.rank_of(ndst, g), tag, bucket_sum(g, ndst));
+                    }
+                }
+                b.wait();
+                b.lap(Phase::InterNode);
+            }
+        }
+        GlobalAlgo::Bruck { .. } => {
+            for g in 0..q {
+                for k in 0..n_nodes {
+                    if k != node {
+                        bs_node[g][k] =
+                            (bucket_sum(g, k), bucket_entries[g][k].len() as u32);
                     }
                 }
             }
         }
     }
-    if n_nodes == 1 {
-        return (t_peak, local_rounds);
-    }
-
-    if let GlobalAlgo::Bruck { radix } = global {
-        let radix = radix.min(n_nodes).max(2);
-        for g in 0..q {
-            let mut node_slots: Vec<Vec<(u64, u32)>> = (0..n_nodes)
-                .map(|m| {
-                    (0..n_nodes)
-                        .map(|j| {
-                            if j == 0 {
-                                (0, 0)
-                            } else {
-                                bs_full[topo.rank_of(m, g)][(m + j) % n_nodes]
-                            }
-                        })
-                        .collect()
-                })
-                .collect();
-            let stats = plan_core_sparse(
-                builders,
-                g,
-                q,
-                n_nodes,
-                radix,
-                &mut node_slots,
-                INTER_TAG,
-                Some(Phase::InterNode),
-            );
-            global_rounds = stats.rounds;
-            t_peak = t_peak.max(stats.t_peak);
-        }
-    }
-    (t_peak, local_rounds + global_rounds)
+    out
 }
 
 #[cfg(test)]

@@ -766,38 +766,46 @@ pub fn compile_segmented_plan(
             ops.push(PlanOp::Compute { secs });
         }
     };
-    let mut ranks = Vec::with_capacity(p);
-    for r in 0..p {
-        let mut ops: Vec<PlanOp> = Vec::new();
-        if overlap {
-            push_compute(&mut ops, compute.cost(r, 0));
-            let (pre0, _) = plans[0].ranks[r].split_at_last_wait();
-            ops.extend_from_slice(pre0);
-            for i in 1..k {
-                push_compute(&mut ops, compute.cost(r, i));
-                let (_, suf_prev) = plans[i - 1].ranks[r].split_at_last_wait();
-                ops.extend_from_slice(suf_prev);
-                let (pre_i, _) = plans[i].ranks[r].split_at_last_wait();
-                ops.extend_from_slice(pre_i);
-            }
-            let (_, suf_last) = plans[k - 1].ranks[r].split_at_last_wait();
-            ops.extend_from_slice(suf_last);
-        } else {
-            for (i, plan) in plans.iter().enumerate() {
-                push_compute(&mut ops, compute.cost(r, i));
-                ops.extend_from_slice(&plan.ranks[r].ops);
-            }
-        }
-        ranks.push(RankPlan { ops });
-    }
-    Ok(CommPlan {
+    // The stitch is per rank (decode each chunk's rank program, splice),
+    // so it runs through the same parallel packer as a family compile.
+    let t_peak = plans.iter().map(|pl| pl.t_peak).max().unwrap_or(0);
+    let rounds = plans.iter().map(|pl| pl.rounds).max().unwrap_or(0);
+    let threads = engine.compile_threads_for(p);
+    Ok(CommPlan::build_parallel(
         p,
-        q: engine.topo.q(),
-        algo: kind.name(),
-        ranks,
-        t_peak: plans.iter().map(|pl| pl.t_peak).max().unwrap_or(0),
-        rounds: plans.iter().map(|pl| pl.rounds).max().unwrap_or(0),
-    })
+        engine.topo.q(),
+        kind.name(),
+        t_peak,
+        rounds,
+        threads,
+        |r| {
+            let mut ops: Vec<PlanOp> = Vec::new();
+            if overlap {
+                push_compute(&mut ops, compute.cost(r, 0));
+                let rp0 = plans[0].rank_plan(r);
+                let (pre0, _) = rp0.split_at_last_wait();
+                ops.extend_from_slice(pre0);
+                for i in 1..k {
+                    push_compute(&mut ops, compute.cost(r, i));
+                    let rp_prev = plans[i - 1].rank_plan(r);
+                    let (_, suf_prev) = rp_prev.split_at_last_wait();
+                    ops.extend_from_slice(suf_prev);
+                    let rp_i = plans[i].rank_plan(r);
+                    let (pre_i, _) = rp_i.split_at_last_wait();
+                    ops.extend_from_slice(pre_i);
+                }
+                let rp_last = plans[k - 1].rank_plan(r);
+                let (_, suf_last) = rp_last.split_at_last_wait();
+                ops.extend_from_slice(suf_last);
+            } else {
+                for (i, plan) in plans.iter().enumerate() {
+                    push_compute(&mut ops, compute.cost(r, i));
+                    ops.extend(plan.rank_plan(r).ops);
+                }
+            }
+            ops
+        },
+    ))
 }
 
 /// Fetch (or compile) the stitched segmented plan through the engine's
@@ -860,7 +868,8 @@ pub fn run_alltoallv_segmented(
     let plan = segmented_plan_for(engine, kind, sizes, segments, overlap, compute)?;
     let plan_ref = &plan;
     let res = engine.run(move |ctx| {
-        ctx.run_plan(&plan_ref.ranks[ctx.rank()]);
+        let rp = plan_ref.rank_plan(ctx.rank());
+        ctx.run_plan(&rp);
     });
     Ok(RunReport {
         algo: kind.name(),
@@ -1072,13 +1081,111 @@ fn linear_rank_plan(kind: &AlgoKind, sizes: &BlockSizes, me: usize) -> Option<Ra
     Some(b.finish())
 }
 
+/// The `tuna:auto` radix, resolved at compile time exactly as dispatch
+/// resolves it: the allreduced total is exact u64 arithmetic, so the
+/// compile-time mean is bit-identical to every rank's allreduced mean,
+/// and the tuning-table-then-heuristic policy is the same one.
+fn tuna_auto_radix(engine: &Engine, sizes: &BlockSizes) -> usize {
+    let p = sizes.p();
+    let total = (0..p)
+        .map(|s| sizes.row_view(s).total())
+        .fold(0u64, u64::wrapping_add);
+    let mean = total as f64 / (p as f64 * p as f64);
+    engine
+        .tuning
+        .as_deref()
+        .and_then(|t| t.lookup_radix(engine.profile.name, p, engine.topo.q(), mean))
+        .unwrap_or_else(|| tuning::heuristic_radix(p, mean))
+}
+
 /// Compile `kind`'s [`CommPlan`] from the counts matrix — without
 /// running anything. Per the plan-determinism contract (`comm::plan`),
 /// the result depends only on the matrix and on resolved parameters;
 /// `tuna:auto` resolves its radix here exactly as dispatch would (same
 /// allreduced mean, same tuning-table-then-heuristic policy) and emits
 /// the agreement allreduce the threaded run performs.
+///
+/// Worker count comes from the engine's `compile-threads` policy; by
+/// the parallel-compile determinism argument (`comm::plan`) the result
+/// is representation-identical for every thread count.
 pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Result<CommPlan> {
+    compile_plan_threads(engine, kind, sizes, engine.compile_threads_for(sizes.p()))
+}
+
+/// [`compile_plan`] with an explicit worker count. Public for the
+/// serial-vs-parallel equality tests and the compile-speedup bench;
+/// everything else should let the engine resolve its policy.
+pub fn compile_plan_threads(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+    threads: usize,
+) -> Result<CommPlan> {
+    let topo = engine.topo;
+    let p = topo.p();
+    if sizes.p() != p {
+        return Err(TunaError::config(format!(
+            "workload is for P={} but engine has P={p}",
+            sizes.p()
+        )));
+    }
+    kind.check(p, topo.q())?;
+
+    let sparse = sizes.is_sparse();
+    let q = topo.q();
+    let plan = match *kind {
+        AlgoKind::SpreadOut
+        | AlgoKind::OmpiLinear
+        | AlgoKind::Pairwise
+        | AlgoKind::Scattered { .. }
+        | AlgoKind::Vendor => {
+            // The linear families are per-rank emitters (dense and
+            // sparse), so they feed the parallel packer directly.
+            CommPlan::build_parallel(p, q, kind.name(), 0, 0, threads, |me| {
+                linear_rank_plan(kind, sizes, me)
+                    .expect("linear family has a per-rank emitter")
+                    .ops
+            })
+        }
+        AlgoKind::Bruck2 | AlgoKind::Tuna { .. } | AlgoKind::TunaAuto => {
+            let (radix, auto) = match *kind {
+                AlgoKind::Bruck2 => (2, false),
+                AlgoKind::Tuna { radix } => (radix, false),
+                AlgoKind::TunaAuto => (tuna_auto_radix(engine, sizes), true),
+                _ => unreachable!(),
+            };
+            let fp = tuna::flat_plan(sizes, radix, sparse);
+            let (t_peak, rounds) = fp.stats();
+            CommPlan::build_parallel(p, q, kind.name(), t_peak, rounds, threads, |me| {
+                let mut b = PlanBuilder::new(me, p);
+                if auto {
+                    // Dispatch preamble: the radix-agreement allreduce,
+                    // timed like any other traffic.
+                    b.allreduce();
+                }
+                fp.emit_rank(&mut b, me);
+                b.finish().ops
+            })
+        }
+        AlgoKind::Hier { local, global } => {
+            let (ranks, t_peak, rounds) = hier::plan_build(sizes, topo, local, global, threads);
+            CommPlan::from_rank_plans(p, q, kind.name(), ranks, t_peak, rounds)
+        }
+    };
+    Ok(plan)
+}
+
+/// The pre-forge serial reference: every rank's op list through the
+/// aggregate per-family builder emitters, exactly as `compile_plan`
+/// built plans before the parallel packer and the interned arena. Kept
+/// as the oracle for the IR property tests (arena decode == builder
+/// output for every rank) — not used on any hot path.
+#[doc(hidden)]
+pub fn compile_rank_plans_serial(
+    engine: &Engine,
+    kind: &AlgoKind,
+    sizes: &BlockSizes,
+) -> Result<(Vec<RankPlan>, usize, usize)> {
     let topo = engine.topo;
     let p = topo.p();
     if sizes.p() != p {
@@ -1139,22 +1246,10 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
         }
         AlgoKind::Tuna { radix } => tuna::plan_into(&mut builders, sizes, radix),
         AlgoKind::TunaAuto => {
-            // Dispatch preamble: the radix-agreement allreduce, timed
-            // like any other traffic. The reduced value (total bytes) is
-            // exact u64 arithmetic, so the compile-time mean is
-            // bit-identical to every rank's allreduced mean.
             for b in builders.iter_mut() {
                 b.allreduce();
             }
-            let total = (0..p)
-                .map(|s| sizes.row_view(s).total())
-                .fold(0u64, u64::wrapping_add);
-            let mean = total as f64 / (p as f64 * p as f64);
-            let radix = engine
-                .tuning
-                .as_deref()
-                .and_then(|t| t.lookup_radix(engine.profile.name, p, topo.q(), mean))
-                .unwrap_or_else(|| tuning::heuristic_radix(p, mean));
+            let radix = tuna_auto_radix(engine, sizes);
             if sparse {
                 tuna::plan_into_sparse(&mut builders, sizes, radix)
             } else {
@@ -1162,17 +1257,14 @@ pub fn compile_plan(engine: &Engine, kind: &AlgoKind, sizes: &BlockSizes) -> Res
             }
         }
         AlgoKind::Hier { local, global } => {
-            hier::plan_into(&mut builders, sizes, topo, local, global)
+            return Ok(hier::plan_build(sizes, topo, local, global, 1));
         }
     };
-    Ok(CommPlan {
-        p,
-        q: topo.q(),
-        algo: kind.name(),
-        ranks: builders.into_iter().map(PlanBuilder::finish).collect(),
+    Ok((
+        builders.into_iter().map(PlanBuilder::finish).collect(),
         t_peak,
         rounds,
-    })
+    ))
 }
 
 /// Check a received block set: complete origin coverage (`expect_n`

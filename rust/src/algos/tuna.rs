@@ -453,8 +453,14 @@ pub(crate) struct CorePlanStats {
 /// slot exchange moves contents. Ops are emitted per rank in the same
 /// order `tuna_core` charges them, including the same `lap` phase
 /// mapping.
+///
+/// `group[g]` is the builder of absolute rank `base + g * stride`; the
+/// caller hands in just the group's builders (a contiguous slice), which
+/// is what lets the hierarchical compiler run disjoint groups on worker
+/// threads. `base`/`stride` are still needed to name absolute peer
+/// ranks in the emitted sends/recvs.
 pub(crate) fn plan_core(
-    builders: &mut [PlanBuilder],
+    group: &mut [PlanBuilder],
     base: usize,
     stride: usize,
     q: usize,
@@ -464,6 +470,7 @@ pub(crate) fn plan_core(
     tag_base: u32,
     lap: Option<Phase>,
 ) -> CorePlanStats {
+    assert_eq!(group.len(), q, "need one builder per group rank");
     assert_eq!(slots.len(), q, "need one slot row per group rank");
     assert!(radix_r >= 2);
     assert!(stride >= 1);
@@ -491,7 +498,7 @@ pub(crate) fn plan_core(
             .collect();
 
         for g in 0..q {
-            let b = &mut builders[base + g * stride];
+            let b = &mut group[g];
             let dst = base + ((g + rd.step) % q) * stride;
             let src_g = (g + q - rd.step) % q;
             let src = base + src_g * stride;
@@ -546,8 +553,9 @@ pub(crate) fn plan_core(
 /// rank `g`'s slot `j`. Mirrors the sparse slot engine op-for-op:
 /// self-describing metadata (`8·(moving + count)` wire bytes), data
 /// messages only between non-empty endpoints, structural T tracking.
+/// Like [`plan_core`], `group[g]` is absolute rank `base + g * stride`.
 pub(crate) fn plan_core_sparse(
-    builders: &mut [PlanBuilder],
+    group: &mut [PlanBuilder],
     base: usize,
     stride: usize,
     q: usize,
@@ -556,6 +564,7 @@ pub(crate) fn plan_core_sparse(
     tag_base: u32,
     lap: Option<Phase>,
 ) -> CorePlanStats {
+    assert_eq!(group.len(), q, "need one builder per group rank");
     assert_eq!(slots.len(), q, "need one slot row per group rank");
     assert!(radix_r >= 2);
     assert!(stride >= 1);
@@ -584,7 +593,7 @@ pub(crate) fn plan_core_sparse(
             .collect();
 
         for g in 0..q {
-            let b = &mut builders[base + g * stride];
+            let b = &mut group[g];
             let dst = base + ((g + rd.step) % q) * stride;
             let src_g = (g + q - rd.step) % q;
             let src = base + src_g * stride;
@@ -745,49 +754,86 @@ fn flat_slot_traffic(sizes: &BlockSizes, radix_r: usize) -> (Vec<Round>, FlatSlo
 /// ([`flat_slot_traffic`], O(P·K) memory), then each rank's op list is
 /// emitted independently. No P×P matrix is ever materialized. Emits ops
 /// bit-identically to the joint simulation it replaced (pinned by this
-/// module's `streaming_plan_matches_joint_reference` test).
+/// module's `streaming_plan_matches_joint_reference` test). Serial
+/// reference path; `algos::compile_plan` drives the same [`FlatPlan`]
+/// emitter through the parallel plan packer instead.
 pub(crate) fn plan_into(
     builders: &mut [PlanBuilder],
     sizes: &BlockSizes,
     radix_r: usize,
 ) -> (usize, usize) {
-    plan_into_flat(builders, sizes, radix_r, false)
+    let fp = flat_plan(sizes, radix_r, false);
+    for (me, b) in builders.iter_mut().enumerate() {
+        fp.emit_rank(b, me);
+    }
+    fp.stats()
 }
 
 /// Compile sparse flat TuNA ([`run_sparse`]) for every rank — the same
 /// streaming emitter, with the sparse slot engine's wire format:
 /// metadata carries `[count, sizes...]` per moving slot (`8·(moving +
 /// count)` bytes), and data messages exist only between non-empty
-/// endpoints.
+/// endpoints. Serial reference path, like [`plan_into`].
 pub(crate) fn plan_into_sparse(
     builders: &mut [PlanBuilder],
     sizes: &BlockSizes,
     radix_r: usize,
 ) -> (usize, usize) {
-    plan_into_flat(builders, sizes, radix_r, true)
+    let fp = flat_plan(sizes, radix_r, true);
+    for (me, b) in builders.iter_mut().enumerate() {
+        fp.emit_rank(b, me);
+    }
+    fp.stats()
 }
 
-/// The shared emitter behind [`plan_into`] / [`plan_into_sparse`]: one
-/// op shape, with exactly the sparse slot engine's two deltas (metadata
-/// size expression, data-message guards) keyed off `sparse`.
-fn plan_into_flat(
-    builders: &mut [PlanBuilder],
-    sizes: &BlockSizes,
-    radix_r: usize,
+/// Precomputed flat-TuNA compile state: the round schedule plus the
+/// per-round traffic accumulators, everything [`FlatPlan::emit_rank`]
+/// needs to emit any single rank's ops independently (and hence from
+/// parallel workers — the struct is immutable after construction).
+pub(crate) struct FlatPlan {
+    p: usize,
+    radix: usize,
     sparse: bool,
-) -> (usize, usize) {
-    let p = sizes.p();
-    let radix_r = radix_r.min(p).max(2);
-    let (schedule, traffic) = flat_slot_traffic(sizes, radix_r);
+    schedule: Vec<Round>,
+    traffic: FlatSlotTraffic,
+}
 
-    for (me, b) in builders.iter_mut().enumerate() {
+/// Build the shared compile state behind the flat-TuNA emitters: one op
+/// shape, with exactly the sparse slot engine's two deltas (metadata
+/// size expression, data-message guards) keyed off `sparse`.
+pub(crate) fn flat_plan(sizes: &BlockSizes, radix_r: usize, sparse: bool) -> FlatPlan {
+    let p = sizes.p();
+    let radix = radix_r.min(p).max(2);
+    let (schedule, traffic) = flat_slot_traffic(sizes, radix);
+    FlatPlan {
+        p,
+        radix,
+        sparse,
+        schedule,
+        traffic,
+    }
+}
+
+impl FlatPlan {
+    /// `(t_peak, rounds)` of the compiled schedule — structural, so
+    /// independent of which ranks have been emitted.
+    pub(crate) fn stats(&self) -> (usize, usize) {
+        let stats = core_schedule_stats(self.radix, self.p);
+        (stats.t_peak, stats.rounds)
+    }
+
+    /// Emit rank `me`'s complete flat-TuNA op list into `b`.
+    pub(crate) fn emit_rank(&self, b: &mut PlanBuilder, me: usize) {
+        let p = self.p;
+        let sparse = self.sparse;
+        let traffic = &self.traffic;
         // Prepare: allreduce for M + index array write, in one phase lap.
         b.mark();
         b.allreduce();
         b.copy(4 * p as u64);
         b.lap(Phase::Prepare);
 
-        for (t, rd) in schedule.iter().enumerate() {
+        for (t, rd) in self.schedule.iter().enumerate() {
             let dst = (me + rd.step) % p;
             let src = (me + p - rd.step) % p;
             let meta_tag = 2 * t as u32;
@@ -821,8 +867,6 @@ fn plan_into_flat(
         b.copy(traffic.self_bytes[me]);
         b.lap(Phase::Replace);
     }
-    let stats = core_schedule_stats(radix_r, p);
-    (stats.t_peak, stats.rounds)
 }
 
 #[cfg(test)]

@@ -579,9 +579,20 @@ pub struct Engine {
     /// through `replay::execute_faulted`. The plan cache is *not* keyed
     /// on faults: perturbations scale execution times, never schedules.
     pub faults: Option<Arc<super::faults::FaultModel>>,
+    /// Plan-compile worker count; `None` = auto (serial below
+    /// [`Engine::COMPILE_PAR_MIN_P`] ranks, else up to 16 host threads).
+    /// Purely a wallclock knob — compiled plans are
+    /// representation-identical for every value (the parallel-compile
+    /// determinism contract of `comm::plan`).
+    pub compile_threads: Option<usize>,
 }
 
 impl Engine {
+    /// Below this many ranks the auto `compile-threads` policy stays
+    /// serial: a plan this small compiles in well under a worker
+    /// spawn's worth of time.
+    pub const COMPILE_PAR_MIN_P: usize = 4096;
+
     pub fn new(profile: MachineProfile, topo: Topology) -> Engine {
         Engine {
             profile,
@@ -591,6 +602,7 @@ impl Engine {
             plan_cache: super::plan::PlanCache::default(),
             replay_shards: None,
             faults: None,
+            compile_threads: None,
         }
     }
 
@@ -610,6 +622,40 @@ impl Engine {
     pub fn with_replay_shards(mut self, shards: Option<usize>) -> Engine {
         self.replay_shards = shards;
         self
+    }
+
+    /// Pin the plan-compile worker count (`Some(n)`, clamped to >= 1) or
+    /// restore the auto policy (`None`). The plan cache is untouched —
+    /// compiled plans are representation-identical for every value.
+    pub fn with_compile_threads(mut self, threads: Option<usize>) -> Engine {
+        self.compile_threads = threads;
+        self
+    }
+
+    /// Replace the plan cache with one bounded at `cap` entries (LRU) —
+    /// the `plan-cache-cap` serving knob. Existing entries are dropped.
+    pub fn with_plan_cache_capacity(mut self, cap: usize) -> Engine {
+        self.plan_cache = super::plan::PlanCache::with_capacity(cap);
+        self
+    }
+
+    /// Resolve the compile worker count for a `p`-rank plan: the pinned
+    /// value when set, else serial below [`Engine::COMPILE_PAR_MIN_P`]
+    /// and up to 16 host threads beyond it.
+    pub fn compile_threads_for(&self, p: usize) -> usize {
+        match self.compile_threads {
+            Some(n) => n.max(1),
+            None => {
+                if p < Self::COMPILE_PAR_MIN_P {
+                    1
+                } else {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                        .min(16)
+                }
+            }
+        }
     }
 
     /// Attach a fault specification, compiled against this engine's

@@ -33,7 +33,7 @@ pub use clock::{Clock, Counters};
 pub use faults::{FaultModel, FaultSpec};
 pub use engine::{Engine, EngineResult, RankCtx, RankResult};
 pub use persist::PersistentColl;
-pub use plan::{CommPlan, PlanBuilder, PlanCache, PlanOp, RankPlan};
+pub use plan::{CommPlan, PlanBuilder, PlanCache, PlanOp, PlanStats, RankPlan};
 pub use topology::Topology;
 
 /// Cost-breakdown phases, matching the six components of the paper's

@@ -34,12 +34,70 @@
 //! The threaded engine remains the golden oracle: it is the only executor
 //! that moves and validates real payload bytes. Replay is the phantom
 //! (size-only) fast path for large-P model sweeps.
+//!
+//! # Compact interned plan IR
+//!
+//! Internally a plan is **one arena in structure-of-arrays layout**, not
+//! a `Vec<PlanOp>` per rank. Four parallel columns hold the ops of every
+//! *distinct* rank program exactly once:
+//!
+//! * `kinds: Vec<u8>` — the op-kind byte stream (7 codes),
+//! * `peers: Vec<u32>` — send/recv peers, stored **rotation-canonical**
+//!   (`(peer + P − me) mod P`, i.e. relative to the owning rank),
+//! * `tags: Vec<u32>` — message tags (and the phase index of a `Lap`),
+//! * `args: Vec<u64>` — byte counts (and the `f64` bit pattern of a
+//!   `Compute` charge).
+//!
+//! A rank's program is an `(offset, len)` window into those columns
+//! (`windows`), and `prog_of[r]` maps each rank to its window. Because
+//! peers are stored relative to the owner, two ranks whose schedules are
+//! equal **up to peer rotation** — every rank of a uniform spread-out
+//! plan, for example — canonicalize to byte-identical windows and are
+//! **interned** into one shared program; the rotation base needs no
+//! storage, it *is* the rank index. Decoding rank `r`'s op at `pc` is a
+//! window lookup plus one add-and-conditional-subtract per peer.
+//!
+//! ## Memory envelope
+//!
+//! Arena cost per stored op: 1 B kind + 4 B peer + 4 B tag + 8 B arg =
+//! **17 B/op**, vs the 24 B of a materialized `PlanOp` (tagged union).
+//! Whole-plan footprint:
+//!
+//! ```text
+//! plan_bytes   = 17 · Σ(ops of distinct programs) + 16 · #programs + 4 · P
+//! legacy_bytes = 24 · Σ(ops of all ranks)
+//! ratio        = plan_bytes / legacy_bytes
+//!              ≈ (17 / 24) · (#distinct programs / P)     for large plans
+//! ```
+//!
+//! so plan bytes scale with *distinct* programs, not P: a P-rank uniform
+//! linear plan (one canonical program) stores O(P) ops instead of O(P²).
+//! Schedules with rank-asymmetric structure (e.g. the recursive-doubling
+//! allreduce preamble of `tuna`, whose butterfly partner `me ^ 2^k` is
+//! not a rotation) intern nothing and pay only the 17/24 SoA discount.
+//!
+//! # Parallel compile determinism
+//!
+//! Compilers emit rank programs in contiguous rank chunks on
+//! `std::thread::scope` workers ([`CommPlan::build_parallel`]); each
+//! worker packs its chunk into a private [`PlanPack`] and the packs are
+//! merged **in ascending rank order** with cross-pack dedup. Interned
+//! program indices are therefore assigned in first-encounter rank order
+//! — exactly the order the serial single-pack build assigns them — and
+//! every column byte, window, and `prog_of` entry is identical whatever
+//! the worker count. Two facts make this sound: (1) each rank's op
+//! sequence is a pure function of the counts matrix (no emission-order
+//! coupling between ranks), and (2) dedup compares canonical column
+//! bytes exactly (the 64-bit FNV prefilter only narrows candidates), so
+//! merge order cannot change which program is canonical. `compile-threads
+//! ∈ {1, 2, 4, 8}` equality is pinned by `tests/plan_ir.rs`.
 
 use std::collections::{HashMap, VecDeque};
+use std::ops::Range;
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use super::engine::{prev_pow2, TAG_AR_FOLD, TAG_AR_ROUND, TAG_AR_UNFOLD};
-use super::Phase;
+use super::{Phase, PHASES};
 
 /// One engine operation of a compiled plan. Mirrors the `RankCtx` calls an
 /// algorithm makes, in program order.
@@ -63,7 +121,9 @@ pub enum PlanOp {
     Lap { phase: Phase },
 }
 
-/// One rank's compiled op sequence.
+/// One rank's compiled op sequence, materialized. The interned arena is
+/// the storage format; `RankPlan` is the builder/patching currency — what
+/// compilers emit and what [`CommPlan::rank_plan`] decodes back out.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RankPlan {
     pub ops: Vec<PlanOp>,
@@ -86,9 +146,85 @@ impl RankPlan {
     }
 }
 
-/// A compiled collective: per-rank op sequences plus the schedule stats
-/// the run report carries (identical on every rank for the shipped
-/// algorithms, so they are stored once).
+// ---- op-kind codes of the arena's byte stream ------------------------------
+
+const OP_SEND: u8 = 0;
+const OP_RECV: u8 = 1;
+const OP_WAIT: u8 = 2;
+const OP_COPY: u8 = 3;
+const OP_COMPUTE: u8 = 4;
+const OP_MARK: u8 = 5;
+const OP_LAP: u8 = 6;
+
+/// Rotate an absolute peer into the owner-relative canonical form:
+/// `(peer + p − me) mod p`, branch instead of modulo.
+#[inline]
+fn rot_out(peer: u32, me: usize, p: usize) -> u32 {
+    let pe = peer as usize;
+    (if pe >= me { pe - me } else { pe + p - me }) as u32
+}
+
+/// Rotate a canonical peer back to absolute for rank `me`.
+#[inline]
+fn rot_in(canon: u32, me: usize, p: usize) -> u32 {
+    let mut v = canon as usize + me;
+    if v >= p {
+        v -= p;
+    }
+    v as u32
+}
+
+/// Canonicalize one op for rank `me` into its four column cells.
+#[inline]
+fn canon_op(op: &PlanOp, me: usize, p: usize) -> (u8, u32, u32, u64) {
+    match *op {
+        PlanOp::Send { dst, tag, bytes } => (OP_SEND, rot_out(dst, me, p), tag, bytes),
+        PlanOp::Recv { src, tag } => (OP_RECV, rot_out(src, me, p), tag, 0),
+        PlanOp::Wait => (OP_WAIT, 0, 0, 0),
+        PlanOp::Copy { bytes } => (OP_COPY, 0, 0, bytes),
+        PlanOp::Compute { secs } => (OP_COMPUTE, 0, 0, secs.to_bits()),
+        PlanOp::Mark => (OP_MARK, 0, 0, 0),
+        PlanOp::Lap { phase } => (OP_LAP, 0, phase.index() as u32, 0),
+    }
+}
+
+/// Decode one column cell back into the absolute-peer op for rank `me`.
+#[inline]
+fn decode_op(kind: u8, peer: u32, tag: u32, arg: u64, me: usize, p: usize) -> PlanOp {
+    match kind {
+        OP_SEND => PlanOp::Send {
+            dst: rot_in(peer, me, p),
+            tag,
+            bytes: arg,
+        },
+        OP_RECV => PlanOp::Recv {
+            src: rot_in(peer, me, p),
+            tag,
+        },
+        OP_WAIT => PlanOp::Wait,
+        OP_COPY => PlanOp::Copy { bytes: arg },
+        OP_COMPUTE => PlanOp::Compute {
+            secs: f64::from_bits(arg),
+        },
+        OP_MARK => PlanOp::Mark,
+        _ => PlanOp::Lap {
+            phase: PHASES[tag as usize],
+        },
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// A compiled collective: the interned SoA arena of every distinct rank
+/// program, the rank → program map, and the schedule stats the run
+/// report carries (identical on every rank for the shipped algorithms,
+/// so they are stored once). See the module header for the IR layout.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CommPlan {
     /// Total ranks the plan was compiled for.
@@ -97,29 +233,241 @@ pub struct CommPlan {
     pub q: usize,
     /// Human-readable algorithm name (`AlgoKind::name`).
     pub algo: String,
-    /// `ranks[r]` is rank `r`'s op sequence.
-    pub ranks: Vec<RankPlan>,
     /// Peak temporary-buffer occupancy of the compiled schedule.
     pub t_peak: usize,
     /// Communication rounds of the compiled schedule.
     pub rounds: usize,
+    /// `prog_of[r]` — index into `windows` of rank `r`'s program.
+    prog_of: Vec<u32>,
+    /// `(offset, len)` window into the columns, one per distinct program.
+    windows: Vec<(usize, usize)>,
+    /// Op-kind byte stream of all distinct programs, concatenated.
+    kinds: Vec<u8>,
+    /// Rotation-canonical peers (`(peer + P − me) mod P`).
+    peers: Vec<u32>,
+    /// Tags (send/recv) and phase indices (lap).
+    tags: Vec<u32>,
+    /// Byte counts (send/copy) and `f64` bits (compute).
+    args: Vec<u64>,
+    /// Cached `Σ rank_len(r)` over all ranks.
+    total_ops: usize,
+    /// Cached `max rank_len(r)` over all ranks.
+    peak_ops: usize,
+}
+
+/// Telemetry snapshot of a plan's interned footprint (the `plan-stats`
+/// CLI knob and the bench `plan_bytes` column).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanStats {
+    /// Σ ops over all ranks (what replay executes).
+    pub total_ops: usize,
+    /// Distinct interned programs actually stored.
+    pub distinct_programs: usize,
+    /// Actual arena + table footprint in bytes.
+    pub plan_bytes: usize,
+    /// What a `Vec<PlanOp>`-per-rank representation would hold.
+    pub legacy_bytes: usize,
+}
+
+impl PlanStats {
+    /// `plan_bytes / legacy_bytes` — the interning ratio (< 1 is a win).
+    pub fn ratio(&self) -> f64 {
+        if self.legacy_bytes == 0 {
+            1.0
+        } else {
+            self.plan_bytes as f64 / self.legacy_bytes as f64
+        }
+    }
+}
+
+/// Borrowed window of one rank's interned program: the replay hot loop
+/// resolves this once per scheduled rank and decodes ops in place.
+#[derive(Clone, Copy)]
+pub struct ProgView<'a> {
+    kinds: &'a [u8],
+    peers: &'a [u32],
+    tags: &'a [u32],
+    args: &'a [u64],
+    me: usize,
+    p: usize,
+}
+
+impl ProgView<'_> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Decode the op at `pc` for the owning rank.
+    #[inline]
+    pub fn op(&self, pc: usize) -> PlanOp {
+        decode_op(
+            self.kinds[pc],
+            self.peers[pc],
+            self.tags[pc],
+            self.args[pc],
+            self.me,
+            self.p,
+        )
+    }
 }
 
 impl CommPlan {
-    /// Total op count across all ranks (plan size telemetry).
-    pub fn total_ops(&self) -> usize {
-        self.ranks.iter().map(|r| r.ops.len()).sum()
+    /// Pack materialized per-rank op sequences into the interned IR.
+    /// `ranks.len()` must equal `p`. This is the serial reference build;
+    /// [`CommPlan::build_parallel`] produces bit-identical plans from
+    /// chunked workers.
+    pub fn from_rank_plans(
+        p: usize,
+        q: usize,
+        algo: String,
+        ranks: Vec<RankPlan>,
+        t_peak: usize,
+        rounds: usize,
+    ) -> CommPlan {
+        debug_assert_eq!(ranks.len(), p, "one rank plan per rank");
+        let mut pack = PlanPack::new(p);
+        for (me, rp) in ranks.iter().enumerate() {
+            pack.push_rank(me, &rp.ops);
+        }
+        pack.finish(q, algo, t_peak, rounds)
     }
 
-    /// Largest single-rank op list (plan size telemetry).
+    /// Build a plan by emitting rank programs on `threads` scoped
+    /// workers over contiguous rank chunks, packing incrementally (one
+    /// rank's `Vec<PlanOp>` is alive at a time per worker — dense P²-op
+    /// plans never materialize wholesale). `emit(r)` must be a pure
+    /// function of `r`; the result is identical for every thread count
+    /// (see the module header's determinism argument).
+    pub(crate) fn build_parallel<F>(
+        p: usize,
+        q: usize,
+        algo: String,
+        t_peak: usize,
+        rounds: usize,
+        threads: usize,
+        emit: F,
+    ) -> CommPlan
+    where
+        F: Fn(usize) -> Vec<PlanOp> + Sync,
+    {
+        let threads = threads.max(1).min(p.max(1));
+        if threads <= 1 {
+            let mut pack = PlanPack::new(p);
+            for me in 0..p {
+                let ops = emit(me);
+                pack.push_rank(me, &ops);
+            }
+            return pack.finish(q, algo, t_peak, rounds);
+        }
+        let emit = &emit;
+        let packs: Vec<PlanPack> = std::thread::scope(|s| {
+            let handles: Vec<_> = chunk_ranges(p, threads)
+                .into_iter()
+                .map(|range| {
+                    s.spawn(move || {
+                        let mut pack = PlanPack::new(p);
+                        for me in range {
+                            let ops = emit(me);
+                            pack.push_rank(me, &ops);
+                        }
+                        pack
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("plan compile worker panicked"))
+                .collect()
+        });
+        let mut packs = packs.into_iter();
+        let mut merged = packs.next().expect("at least one chunk");
+        for pk in packs {
+            merged.absorb(pk);
+        }
+        merged.finish(q, algo, t_peak, rounds)
+    }
+
+    /// Total op count across all ranks (O(1), cached at build).
+    pub fn total_ops(&self) -> usize {
+        self.total_ops
+    }
+
+    /// Largest single-rank op list (O(1), cached at build).
     pub fn peak_rank_ops(&self) -> usize {
-        self.ranks.iter().map(|r| r.ops.len()).max().unwrap_or(0)
+        self.peak_ops
     }
 
     /// Peak per-rank plan memory in bytes — what `perf_engine` records
-    /// as the per-row plan envelope.
+    /// as the per-row plan envelope. Kept in materialized-`PlanOp` units
+    /// so the envelope stays comparable across plan-IR generations.
     pub fn peak_rank_bytes(&self) -> usize {
-        self.peak_rank_ops() * std::mem::size_of::<PlanOp>()
+        self.peak_ops * std::mem::size_of::<PlanOp>()
+    }
+
+    /// Op count of rank `r`'s program (O(1)).
+    pub fn rank_len(&self, r: usize) -> usize {
+        self.windows[self.prog_of[r] as usize].1
+    }
+
+    /// Distinct interned programs stored in the arena.
+    pub fn distinct_programs(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Actual footprint of the interned IR: column bytes + window table
+    /// + the rank → program map.
+    pub fn plan_bytes(&self) -> usize {
+        self.kinds.len() * (1 + 4 + 4 + 8)
+            + self.windows.len() * std::mem::size_of::<(usize, usize)>()
+            + self.prog_of.len() * 4
+    }
+
+    /// Footprint of the legacy `Vec<PlanOp>`-per-rank representation.
+    pub fn legacy_bytes(&self) -> usize {
+        self.total_ops * std::mem::size_of::<PlanOp>()
+    }
+
+    /// Telemetry snapshot (plan-stats knob, bench columns).
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            total_ops: self.total_ops,
+            distinct_programs: self.windows.len(),
+            plan_bytes: self.plan_bytes(),
+            legacy_bytes: self.legacy_bytes(),
+        }
+    }
+
+    /// Borrow rank `r`'s program window for in-place decoding — the
+    /// replay executor resolves this once per scheduled rank.
+    pub fn prog(&self, r: usize) -> ProgView<'_> {
+        let (off, len) = self.windows[self.prog_of[r] as usize];
+        ProgView {
+            kinds: &self.kinds[off..off + len],
+            peers: &self.peers[off..off + len],
+            tags: &self.tags[off..off + len],
+            args: &self.args[off..off + len],
+            me: r,
+            p: self.p,
+        }
+    }
+
+    /// Decode rank `r`'s full op sequence back out of the arena —
+    /// lossless (rotation canonicalization round-trips exactly). Used by
+    /// the threaded segmented driver, plan patching, and tests; the
+    /// replay hot loop uses [`CommPlan::prog`] instead.
+    pub fn rank_plan(&self, r: usize) -> RankPlan {
+        let view = self.prog(r);
+        let mut ops = Vec::with_capacity(view.len());
+        for pc in 0..view.len() {
+            ops.push(view.op(pc));
+        }
+        RankPlan { ops }
     }
 
     /// A copy of this plan with the listed ranks' op sequences replaced —
@@ -128,18 +476,212 @@ impl CommPlan {
     /// ranks and splices them in here instead of recompiling O(nnz).
     /// Schedule stats (`t_peak`, `rounds`) carry over; they are 0 for the
     /// linear families patching supports.
+    ///
+    /// Implemented as a full **repack** (decode every rank, splice,
+    /// re-intern): the packed representation stays the canonical one a
+    /// fresh compile of the patched workload would build, so patched ==
+    /// fresh holds bit-for-bit under `PartialEq`.
     pub fn with_rank_plans(&self, replacements: Vec<(usize, RankPlan)>) -> CommPlan {
-        let mut ranks = self.ranks.clone();
+        let mut ranks: Vec<RankPlan> = (0..self.p).map(|r| self.rank_plan(r)).collect();
         for (rank, rp) in replacements {
             ranks[rank] = rp;
         }
+        CommPlan::from_rank_plans(
+            self.p,
+            self.q,
+            self.algo.clone(),
+            ranks,
+            self.t_peak,
+            self.rounds,
+        )
+    }
+}
+
+/// Contiguous near-equal partition of `0..n` into at most `workers`
+/// non-empty ranges (the same split rule the replay sharder uses).
+pub(crate) fn chunk_ranges(n: usize, workers: usize) -> Vec<Range<usize>> {
+    let workers = workers.max(1).min(n.max(1));
+    let base = n / workers;
+    let extra = n % workers;
+    let mut ranges = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        if len == 0 {
+            continue;
+        }
+        ranges.push(start..start + len);
+        start += len;
+    }
+    ranges
+}
+
+/// Incremental interning packer: rank programs are pushed **in ascending
+/// rank order**, canonicalized, hashed, and either matched to an
+/// existing program (exact column compare; the hash only prefilters) or
+/// appended to the arena. Workers pack disjoint rank chunks into private
+/// packs; [`PlanPack::absorb`] merges them in chunk order with the same
+/// dedup rule, so the merged arena is identical to a serial pack.
+#[derive(Debug)]
+pub(crate) struct PlanPack {
+    p: usize,
+    kinds: Vec<u8>,
+    peers: Vec<u32>,
+    tags: Vec<u32>,
+    args: Vec<u64>,
+    windows: Vec<(usize, usize)>,
+    /// Canonical hash per stored program (carried for cross-pack merge).
+    hashes: Vec<u64>,
+    by_hash: HashMap<u64, Vec<u32>>,
+    prog_of: Vec<u32>,
+    total_ops: usize,
+    peak_ops: usize,
+    // One rank's canonical columns, reused across pushes.
+    ck: Vec<u8>,
+    cp: Vec<u32>,
+    ct: Vec<u32>,
+    ca: Vec<u64>,
+}
+
+impl PlanPack {
+    pub(crate) fn new(p: usize) -> PlanPack {
+        PlanPack {
+            p,
+            kinds: Vec::new(),
+            peers: Vec::new(),
+            tags: Vec::new(),
+            args: Vec::new(),
+            windows: Vec::new(),
+            hashes: Vec::new(),
+            by_hash: HashMap::new(),
+            prog_of: Vec::new(),
+            total_ops: 0,
+            peak_ops: 0,
+            ck: Vec::new(),
+            cp: Vec::new(),
+            ct: Vec::new(),
+            ca: Vec::new(),
+        }
+    }
+
+    /// Canonicalize and intern rank `me`'s op sequence. Must be called
+    /// once per rank, ranks ascending.
+    pub(crate) fn push_rank(&mut self, me: usize, ops: &[PlanOp]) {
+        self.ck.clear();
+        self.cp.clear();
+        self.ct.clear();
+        self.ca.clear();
+        let mut h = FNV_OFFSET;
+        for op in ops {
+            let (k, pe, t, a) = canon_op(op, me, self.p);
+            self.ck.push(k);
+            self.cp.push(pe);
+            self.ct.push(t);
+            self.ca.push(a);
+            h = mix(h, k as u64 | ((pe as u64) << 8));
+            h = mix(h, t as u64);
+            h = mix(h, a);
+        }
+        h = mix(h, ops.len() as u64);
+
+        let pid = match self.find_local(h) {
+            Some(pid) => pid,
+            None => {
+                let off = self.kinds.len();
+                let len = self.ck.len();
+                self.kinds.extend_from_slice(&self.ck);
+                self.peers.extend_from_slice(&self.cp);
+                self.tags.extend_from_slice(&self.ct);
+                self.args.extend_from_slice(&self.ca);
+                let pid = self.windows.len() as u32;
+                self.windows.push((off, len));
+                self.hashes.push(h);
+                self.by_hash.entry(h).or_default().push(pid);
+                pid
+            }
+        };
+        self.prog_of.push(pid);
+        self.total_ops += ops.len();
+        self.peak_ops = self.peak_ops.max(ops.len());
+    }
+
+    /// Existing program equal to the scratch columns, if any.
+    fn find_local(&self, h: u64) -> Option<u32> {
+        let cands = self.by_hash.get(&h)?;
+        cands
+            .iter()
+            .copied()
+            .find(|&pid| self.window_matches(pid, &self.ck, &self.cp, &self.ct, &self.ca))
+    }
+
+    /// Exact column compare of stored program `pid` against candidate
+    /// canonical columns.
+    fn window_matches(&self, pid: u32, k: &[u8], pe: &[u32], t: &[u32], a: &[u64]) -> bool {
+        let (off, len) = self.windows[pid as usize];
+        len == k.len()
+            && self.kinds[off..off + len] == *k
+            && self.peers[off..off + len] == *pe
+            && self.tags[off..off + len] == *t
+            && self.args[off..off + len] == *a
+    }
+
+    /// Merge `other` (the pack of the next contiguous rank chunk) after
+    /// this one: dedup its programs against ours, append the novel ones,
+    /// and extend the rank map. Chunk order == rank order keeps the
+    /// first-encounter program numbering identical to a serial pack.
+    pub(crate) fn absorb(&mut self, other: PlanPack) {
+        debug_assert_eq!(self.p, other.p);
+        let mut remap: Vec<u32> = Vec::with_capacity(other.windows.len());
+        for (pid, &(off, len)) in other.windows.iter().enumerate() {
+            let h = other.hashes[pid];
+            let k = &other.kinds[off..off + len];
+            let pe = &other.peers[off..off + len];
+            let t = &other.tags[off..off + len];
+            let a = &other.args[off..off + len];
+            let existing = self
+                .by_hash
+                .get(&h)
+                .and_then(|c| c.iter().copied().find(|&x| self.window_matches(x, k, pe, t, a)));
+            match existing {
+                Some(x) => remap.push(x),
+                None => {
+                    let noff = self.kinds.len();
+                    self.kinds.extend_from_slice(k);
+                    self.peers.extend_from_slice(pe);
+                    self.tags.extend_from_slice(t);
+                    self.args.extend_from_slice(a);
+                    let npid = self.windows.len() as u32;
+                    self.windows.push((noff, len));
+                    self.hashes.push(h);
+                    self.by_hash.entry(h).or_default().push(npid);
+                    remap.push(npid);
+                }
+            }
+        }
+        for lp in other.prog_of {
+            self.prog_of.push(remap[lp as usize]);
+        }
+        self.total_ops += other.total_ops;
+        self.peak_ops = self.peak_ops.max(other.peak_ops);
+    }
+
+    /// Seal the pack into a plan.
+    pub(crate) fn finish(self, q: usize, algo: String, t_peak: usize, rounds: usize) -> CommPlan {
+        debug_assert_eq!(self.prog_of.len(), self.p, "one program per rank");
         CommPlan {
             p: self.p,
-            q: self.q,
-            algo: self.algo.clone(),
-            ranks,
-            t_peak: self.t_peak,
-            rounds: self.rounds,
+            q,
+            algo,
+            t_peak,
+            rounds,
+            prog_of: self.prog_of,
+            windows: self.windows,
+            kinds: self.kinds,
+            peers: self.peers,
+            tags: self.tags,
+            args: self.args,
+            total_ops: self.total_ops,
+            peak_ops: self.peak_ops,
         }
     }
 }
@@ -262,30 +804,57 @@ impl PlanBuilder {
 /// refinement) replay without re-compiling. Thread-safe: refinement
 /// measures candidates concurrently on one shared engine.
 ///
-/// Capacity is bounded at [`PlanCache::MAX_PLANS`] entries with FIFO
-/// eviction: linear-family plans hold O(P²) ops, and sweeps that stream
-/// through many one-shot workloads (per-iteration seeds) would otherwise
-/// retain every plan they ever compiled.
+/// Capacity is bounded (default [`PlanCache::MAX_PLANS`], configurable
+/// via [`PlanCache::with_capacity`] / the `plan-cache-cap` knob) with
+/// **LRU** eviction: a hit refreshes the entry's recency, so long-lived
+/// serving engines cycling through many tenants keep their hot plans and
+/// shed the cold ones. Evictions are counted next to hits/misses.
 #[derive(Debug, Default)]
 pub struct PlanCache {
     inner: Mutex<CacheInner>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct CacheInner {
     map: HashMap<(String, u64), Arc<CommPlan>>,
-    /// Insertion order, for FIFO eviction at capacity.
+    /// Recency order: front = least recently used, back = most recent.
     order: VecDeque<(String, u64)>,
     hits: u64,
     misses: u64,
+    evictions: u64,
+    cap: usize,
+}
+
+impl Default for CacheInner {
+    fn default() -> CacheInner {
+        CacheInner {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            cap: PlanCache::MAX_PLANS,
+        }
+    }
 }
 
 impl PlanCache {
-    /// Retained-plan bound. Large enough for the repeat patterns that
-    /// matter (one collective re-issued, a small radix sweep over one
-    /// workload); small enough that even worst-case linear plans stay in
-    /// the hundreds of MB.
+    /// Default retained-plan bound. Large enough for the repeat patterns
+    /// that matter (one collective re-issued, a small radix sweep over
+    /// one workload); small enough that even worst-case linear plans
+    /// stay in the hundreds of MB.
     pub const MAX_PLANS: usize = 8;
+
+    /// A cache bounded at `cap` entries (clamped to >= 1) — the
+    /// `plan-cache-cap` serving knob.
+    pub fn with_capacity(cap: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(CacheInner {
+                cap: cap.max(1),
+                ..CacheInner::default()
+            }),
+        }
+    }
 
     /// Acquire the cache lock, recovering from poisoning. Cache
     /// operations never leave `CacheInner` torn mid-update (map and order
@@ -320,6 +889,7 @@ impl PlanCache {
             match inner.map.get(&key).cloned() {
                 Some(hit) if hit.p == p && hit.q == q => {
                     inner.hits += 1;
+                    Self::touch(&mut inner, &key);
                     return Ok(hit);
                 }
                 Some(_) => {
@@ -357,11 +927,26 @@ impl PlanCache {
         Self::insert_locked(&mut inner, key, plan);
     }
 
-    /// FIFO-evict at capacity, then insert a key not currently present.
+    /// Refresh `key`'s recency: move it to the back of the LRU order.
+    fn touch(inner: &mut CacheInner, key: &(String, u64)) {
+        if inner.order.back() == Some(key) {
+            return;
+        }
+        if let Some(pos) = inner.order.iter().position(|k| k == key) {
+            inner.order.remove(pos);
+            inner.order.push_back(key.clone());
+        }
+    }
+
+    /// LRU-evict at capacity, then insert a key not currently present.
     fn insert_locked(inner: &mut CacheInner, key: (String, u64), plan: Arc<CommPlan>) {
-        if inner.map.len() >= Self::MAX_PLANS {
-            if let Some(oldest) = inner.order.pop_front() {
-                inner.map.remove(&oldest);
+        while inner.map.len() >= inner.cap {
+            match inner.order.pop_front() {
+                Some(lru) => {
+                    inner.map.remove(&lru);
+                    inner.evictions += 1;
+                }
+                None => break,
             }
         }
         inner.order.push_back(key.clone());
@@ -382,11 +967,32 @@ impl PlanCache {
         let inner = self.lock();
         (inner.hits, inner.misses)
     }
+
+    /// Entries evicted at capacity since construction.
+    pub fn evictions(&self) -> u64 {
+        self.lock().evictions
+    }
+
+    /// The configured retained-plan bound.
+    pub fn capacity(&self) -> usize {
+        self.lock().cap
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn plan_from(p: usize, q: usize, builders: Vec<PlanBuilder>) -> CommPlan {
+        CommPlan::from_rank_plans(
+            p,
+            q,
+            "x".into(),
+            builders.into_iter().map(PlanBuilder::finish).collect(),
+            0,
+            0,
+        )
+    }
 
     #[test]
     fn sendrecv_emits_canonical_triple() {
@@ -448,18 +1054,191 @@ mod tests {
     }
 
     #[test]
+    fn arena_roundtrip_decodes_every_op_kind() {
+        // Every PlanOp variant survives canonicalize → intern → decode.
+        let mut b0 = PlanBuilder::new(0, 3);
+        b0.mark();
+        b0.send(1, 9, 64);
+        b0.recv(2, 9);
+        b0.wait();
+        b0.copy(17);
+        b0.compute(0.125);
+        b0.lap(Phase::Data);
+        let mut b1 = PlanBuilder::new(1, 3);
+        b1.copy(1);
+        let b2 = PlanBuilder::new(2, 3);
+        let want0 = {
+            let mut c = PlanBuilder::new(0, 3);
+            c.mark();
+            c.send(1, 9, 64);
+            c.recv(2, 9);
+            c.wait();
+            c.copy(17);
+            c.compute(0.125);
+            c.lap(Phase::Data);
+            c.finish()
+        };
+        let plan = plan_from(3, 1, vec![b0, b1, b2]);
+        assert_eq!(plan.rank_plan(0), want0);
+        assert_eq!(plan.rank_plan(1).ops, vec![PlanOp::Copy { bytes: 1 }]);
+        assert!(plan.rank_plan(2).ops.is_empty());
+        assert_eq!(plan.total_ops(), 8);
+        assert_eq!(plan.peak_rank_ops(), 7);
+        // ProgView decodes identically to rank_plan.
+        let view = plan.prog(0);
+        assert_eq!(view.len(), 7);
+        for pc in 0..view.len() {
+            assert_eq!(view.op(pc), plan.rank_plan(0).ops[pc]);
+        }
+    }
+
+    #[test]
+    fn rotation_identical_programs_intern_to_one() {
+        // A ring schedule (send to me+1, recv from me-1, same sizes) is
+        // rotation-identical on every rank → one stored program.
+        let p = 16;
+        let builders: Vec<PlanBuilder> = (0..p)
+            .map(|me| {
+                let mut b = PlanBuilder::new(me, p);
+                b.mark();
+                b.recv((me + p - 1) % p, 1);
+                b.send((me + 1) % p, 1, 4096);
+                b.wait();
+                b.lap(Phase::Data);
+                b
+            })
+            .collect();
+        let plan = plan_from(p, 1, builders);
+        assert_eq!(plan.distinct_programs(), 1);
+        assert!(plan.plan_bytes() * 2 <= plan.legacy_bytes());
+        assert!(plan.stats().ratio() < 0.5);
+        // Decode stays per-rank absolute.
+        for me in 0..p {
+            assert_eq!(
+                plan.rank_plan(me).ops[2],
+                PlanOp::Send {
+                    dst: ((me + 1) % p) as u32,
+                    tag: 1,
+                    bytes: 4096
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn distinct_programs_stay_distinct() {
+        // Different sizes per rank defeat interning; the arena must keep
+        // every program and still decode each correctly.
+        let p = 8;
+        let builders: Vec<PlanBuilder> = (0..p)
+            .map(|me| {
+                let mut b = PlanBuilder::new(me, p);
+                b.send((me + 1) % p, 0, 100 + me as u64);
+                b.wait();
+                b
+            })
+            .collect();
+        let plan = plan_from(p, 1, builders);
+        assert_eq!(plan.distinct_programs(), p);
+        for me in 0..p {
+            assert_eq!(
+                plan.rank_plan(me).ops[0],
+                PlanOp::Send {
+                    dst: ((me + 1) % p) as u32,
+                    tag: 0,
+                    bytes: 100 + me as u64
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn cached_peaks_match_on_demand_scan() {
+        // The O(1) cached peak/total equal the old per-call scan over
+        // materialized rank plans.
+        let p = 9;
+        let builders: Vec<PlanBuilder> = (0..p)
+            .map(|me| {
+                let mut b = PlanBuilder::new(me, p);
+                for i in 0..=me {
+                    b.copy(i as u64);
+                }
+                if me % 2 == 0 {
+                    b.wait();
+                }
+                b
+            })
+            .collect();
+        let plan = plan_from(p, 3, builders);
+        let scan_total: usize = (0..p).map(|r| plan.rank_plan(r).ops.len()).sum();
+        let scan_peak: usize = (0..p).map(|r| plan.rank_plan(r).ops.len()).max().unwrap();
+        assert_eq!(plan.total_ops(), scan_total);
+        assert_eq!(plan.peak_rank_ops(), scan_peak);
+        assert_eq!(
+            plan.peak_rank_bytes(),
+            scan_peak * std::mem::size_of::<PlanOp>()
+        );
+        for r in 0..p {
+            assert_eq!(plan.rank_len(r), plan.rank_plan(r).ops.len());
+        }
+    }
+
+    #[test]
+    fn build_parallel_matches_serial_for_every_thread_count() {
+        let p = 37;
+        let emit = |me: usize| {
+            let mut b = PlanBuilder::new(me, p);
+            b.mark();
+            // Half the ranks share a rotation-canonical program.
+            if me % 2 == 0 {
+                b.send((me + 1) % p, 3, 512);
+            } else {
+                b.send((me + 2) % p, 4, 100 + me as u64);
+            }
+            b.wait();
+            b.lap(Phase::Data);
+            b.finish().ops
+        };
+        let serial = CommPlan::build_parallel(p, 1, "x".into(), 0, 0, 1, emit);
+        for threads in [2usize, 3, 4, 8, 64] {
+            let par = CommPlan::build_parallel(p, 1, "x".into(), 0, 0, threads, emit);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // And the serial build equals from_rank_plans over the same ops.
+        let ranks: Vec<RankPlan> = (0..p).map(|me| RankPlan { ops: emit(me) }).collect();
+        assert_eq!(
+            CommPlan::from_rank_plans(p, 1, "x".into(), ranks, 0, 0),
+            serial
+        );
+    }
+
+    #[test]
+    fn chunk_ranges_cover_contiguously() {
+        for (n, w) in [(10usize, 3usize), (4, 8), (1, 1), (16, 4), (7, 7)] {
+            let ranges = chunk_ranges(n, w);
+            let mut next = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, next);
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} w={w}");
+        }
+    }
+
+    #[test]
     fn cache_hits_share_one_plan() {
         let cache = PlanCache::default();
         let key = ("tuna:r=2".to_string(), 42u64);
         let build = || -> Result<CommPlan, ()> {
-            Ok(CommPlan {
-                p: 2,
-                q: 1,
-                algo: "tuna(r=2)".into(),
-                ranks: vec![RankPlan::default(), RankPlan::default()],
-                t_peak: 0,
-                rounds: 1,
-            })
+            Ok(CommPlan::from_rank_plans(
+                2,
+                1,
+                "tuna(r=2)".into(),
+                vec![RankPlan::default(), RankPlan::default()],
+                0,
+                1,
+            ))
         };
         let a = cache.get_or_try_insert(key.clone(), 2, 1, build).unwrap();
         let b = cache.get_or_try_insert(key, 2, 1, build).unwrap();
@@ -478,14 +1257,14 @@ mod tests {
     fn cache_evicts_oldest_at_capacity() {
         let cache = PlanCache::default();
         let build = || -> Result<CommPlan, ()> {
-            Ok(CommPlan {
-                p: 1,
-                q: 1,
-                algo: "x".into(),
-                ranks: vec![RankPlan::default()],
-                t_peak: 0,
-                rounds: 0,
-            })
+            Ok(CommPlan::from_rank_plans(
+                1,
+                1,
+                "x".into(),
+                vec![RankPlan::default()],
+                0,
+                0,
+            ))
         };
         for i in 0..PlanCache::MAX_PLANS as u64 + 3 {
             cache
@@ -493,7 +1272,8 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(cache.len(), PlanCache::MAX_PLANS);
-        // The first keys were evicted FIFO; the newest are retained.
+        assert_eq!(cache.evictions(), 3);
+        // The first keys were evicted; the newest are retained.
         let (hits_before, _) = cache.stats();
         cache
             .get_or_try_insert(("a".to_string(), 0), 1, 1, build)
@@ -508,15 +1288,40 @@ mod tests {
         assert_eq!(hits_after_new, hits_before + 1, "retained key must hit");
     }
 
+    #[test]
+    fn lru_hit_refreshes_recency() {
+        // Fill a capacity-2 cache, hit the older key, insert a third:
+        // the *unhit* key is the one evicted — LRU, not FIFO.
+        let cache = PlanCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let build = || -> Result<CommPlan, ()> {
+            Ok(CommPlan::from_rank_plans(
+                1,
+                1,
+                "x".into(),
+                vec![RankPlan::default()],
+                0,
+                0,
+            ))
+        };
+        cache.get_or_try_insert(("k".to_string(), 1), 1, 1, build).unwrap();
+        cache.get_or_try_insert(("k".to_string(), 2), 1, 1, build).unwrap();
+        // Touch key 1: it becomes most recent.
+        cache.get_or_try_insert(("k".to_string(), 1), 1, 1, build).unwrap();
+        assert_eq!(cache.stats(), (1, 2));
+        // Key 3 evicts key 2 (the LRU), not key 1.
+        cache.get_or_try_insert(("k".to_string(), 3), 1, 1, build).unwrap();
+        assert_eq!(cache.evictions(), 1);
+        let (hits, _) = cache.stats();
+        cache.get_or_try_insert(("k".to_string(), 1), 1, 1, build).unwrap();
+        assert_eq!(cache.stats().0, hits + 1, "touched key must survive");
+        let (_, misses) = cache.stats();
+        cache.get_or_try_insert(("k".to_string(), 2), 1, 1, build).unwrap();
+        assert_eq!(cache.stats().1, misses + 1, "LRU key must have been evicted");
+    }
+
     fn plan_of_shape(p: usize, q: usize) -> CommPlan {
-        CommPlan {
-            p,
-            q,
-            algo: "x".into(),
-            ranks: vec![RankPlan::default(); p],
-            t_peak: 0,
-            rounds: 0,
-        }
+        CommPlan::from_rank_plans(p, q, "x".into(), vec![RankPlan::default(); p], 0, 0)
     }
 
     #[test]
@@ -602,23 +1407,34 @@ mod tests {
             b1.copy(16);
             let mut b2 = PlanBuilder::new(2, 3);
             b2.copy(24);
-            CommPlan {
-                p: 3,
-                q: 1,
-                algo: "x".into(),
-                ranks: vec![b0.finish(), b1.finish(), b2.finish()],
-                t_peak: 5,
-                rounds: 7,
-            }
+            let mut plan = plan_from(3, 1, vec![b0, b1, b2]);
+            plan.t_peak = 5;
+            plan.rounds = 7;
+            plan
         };
         let mut nb = PlanBuilder::new(1, 3);
         nb.copy(999);
         let patched = base.with_rank_plans(vec![(1, nb.finish())]);
-        assert_eq!(patched.ranks[0], base.ranks[0]);
-        assert_eq!(patched.ranks[2], base.ranks[2]);
-        assert_eq!(patched.ranks[1].ops, vec![PlanOp::Copy { bytes: 999 }]);
+        assert_eq!(patched.rank_plan(0), base.rank_plan(0));
+        assert_eq!(patched.rank_plan(2), base.rank_plan(2));
+        assert_eq!(patched.rank_plan(1).ops, vec![PlanOp::Copy { bytes: 999 }]);
         assert_eq!((patched.t_peak, patched.rounds), (5, 7));
         assert_eq!(patched.algo, base.algo);
+        // A repack of the patched rank set is bit-identical to building
+        // the patched plan fresh — the patched == fresh contract.
+        let fresh = {
+            let mut b0 = PlanBuilder::new(0, 3);
+            b0.copy(8);
+            let mut b1 = PlanBuilder::new(1, 3);
+            b1.copy(999);
+            let mut b2 = PlanBuilder::new(2, 3);
+            b2.copy(24);
+            let mut plan = plan_from(3, 1, vec![b0, b1, b2]);
+            plan.t_peak = 5;
+            plan.rounds = 7;
+            plan
+        };
+        assert_eq!(patched, fresh);
     }
 
     #[test]
@@ -656,14 +1472,7 @@ mod tests {
         b0.copy(8);
         let mut b1 = PlanBuilder::new(1, 2);
         b1.sendrecv(0, 1, 8, 0, 1);
-        let plan = CommPlan {
-            p: 2,
-            q: 1,
-            algo: "x".into(),
-            ranks: vec![b0.finish(), b1.finish()],
-            t_peak: 0,
-            rounds: 0,
-        };
+        let plan = plan_from(2, 1, vec![b0, b1]);
         assert_eq!(plan.total_ops(), 4);
     }
 }

@@ -189,6 +189,19 @@ impl ReplayRank {
     }
 }
 
+/// Reusable per-shard scratch for `Wait` resolution: the deficit
+/// counting map and the match/sort buffers of `perform_wait`. One
+/// allocation set per shard for the whole replay instead of one per
+/// completed `Wait` — at P = 262144 that is hundreds of millions of
+/// avoided transient allocations on the hot loop.
+#[derive(Default)]
+struct WaitScratch {
+    needed: MissingMap,
+    msgs: Vec<InMsg>,
+    order: Vec<usize>,
+    sorted: Vec<(f64, u64, Link, usize)>,
+}
+
 /// One worker shard: a contiguous range of ranks plus their mailboxes,
 /// ready queue and the boundary queue of cross-shard sends produced in
 /// the current window. Shards share nothing during a window, so the
@@ -205,6 +218,7 @@ struct Shard {
     /// (per sender; senders within a shard are interleaved by the event
     /// loop, which is fine — FIFO only matters per `(src, tag)` channel).
     outbox: Vec<BoundaryMsg>,
+    scratch: WaitScratch,
 }
 
 impl Shard {
@@ -218,6 +232,7 @@ impl Shard {
             ready: (0..len).collect(),
             in_queue: vec![true; len],
             outbox: Vec::new(),
+            scratch: WaitScratch::default(),
         }
     }
 
@@ -256,13 +271,15 @@ impl Shard {
         while let Some(li) = self.ready.pop_front() {
             self.in_queue[li] = false;
             let me = self.start + li;
-            let ops = &plan.ranks[me].ops;
+            // Resolve the rank's interned program window once; ops decode
+            // in place from the SoA columns (no materialized Vec<PlanOp>).
+            let prog = plan.prog(me);
             loop {
-                if self.states[li].pc == ops.len() {
+                if self.states[li].pc == prog.len() {
                     self.states[li].done = true;
                     break;
                 }
-                match ops[self.states[li].pc] {
+                match prog.op(self.states[li].pc) {
                     PlanOp::Send { dst, tag, bytes } => {
                         let d = dst as usize;
                         let link = topo.link(me, d);
@@ -292,18 +309,21 @@ impl Shard {
                         st.pending_recvs.push((src, tag));
                     }
                     PlanOp::Wait => {
-                        let (missing, missing_total) =
-                            channel_deficits(&self.states[li].pending_recvs, &self.mailboxes[li]);
+                        let st = &mut self.states[li];
+                        let missing_total = channel_deficits(
+                            &st.pending_recvs,
+                            &self.mailboxes[li],
+                            &mut self.scratch.needed,
+                            &mut st.missing,
+                        );
                         if missing_total > 0 {
-                            let st = &mut self.states[li];
-                            st.missing = missing;
                             st.missing_total = missing_total;
                             st.blocked = true;
                             // pc stays on this Wait; resumed once the
                             // deficits drain (locally or at a barrier).
                             break;
                         }
-                        perform_wait(&mut self.states[li], &mut self.mailboxes[li], profile);
+                        perform_wait(st, &mut self.mailboxes[li], profile, &mut self.scratch);
                     }
                     PlanOp::Copy { bytes } => {
                         self.states[li].clock.charge_copy(profile, bytes);
@@ -454,7 +474,7 @@ pub fn execute_faulted(
             return Err(ReplayError::PlanDeadlock {
                 rank,
                 pc: st.pc,
-                ops: plan.ranks[rank].ops.len(),
+                ops: plan.rank_len(rank),
                 algo: plan.algo.clone(),
                 missing: st.missing_total,
             });
@@ -487,30 +507,44 @@ pub fn execute_faulted(
 
 /// Per-channel message deficits of a pending receive set against a
 /// mailbox: which `(src, tag)` channels still owe how many messages.
-fn channel_deficits(pending: &[(u32, u32)], mb: &ChanMap) -> (MissingMap, usize) {
-    let mut needed = MissingMap::default();
+/// `needed` is counting scratch; the deficits land in `missing` (the
+/// blocked rank's own map, reused across waits). Returns the total.
+fn channel_deficits(
+    pending: &[(u32, u32)],
+    mb: &ChanMap,
+    needed: &mut MissingMap,
+    missing: &mut MissingMap,
+) -> usize {
+    needed.clear();
     for &key in pending {
         *needed.entry(key).or_insert(0) += 1;
     }
-    let mut missing = MissingMap::default();
+    missing.clear();
     let mut total = 0usize;
-    for (key, need) in needed {
+    for (&key, &need) in needed.iter() {
         let avail = mb.get(&key).map_or(0, VecDeque::len);
         if avail < need {
             missing.insert(key, need - avail);
             total += need - avail;
         }
     }
-    (missing, total)
+    total
 }
 
 /// Complete a `Wait` whose messages are all present — the mirror of
 /// `RankCtx::waitall`: FIFO-match per channel in request order, drain in
 /// deterministic `(arrival, src, tag)` order, then advance program order
-/// past sends and receive completions.
-fn perform_wait(st: &mut ReplayRank, mb: &mut ChanMap, profile: &MachineProfile) {
+/// past sends and receive completions. Match/sort buffers come from the
+/// shard's [`WaitScratch`].
+fn perform_wait(
+    st: &mut ReplayRank,
+    mb: &mut ChanMap,
+    profile: &MachineProfile,
+    scratch: &mut WaitScratch,
+) {
     let n = st.pending_recvs.len();
-    let mut msgs: Vec<InMsg> = Vec::with_capacity(n);
+    let msgs = &mut scratch.msgs;
+    msgs.clear();
     for &key in &st.pending_recvs {
         let q = mb.get_mut(&key).expect("readiness check guaranteed a message");
         let m = q.pop_front().expect("readiness check guaranteed a message");
@@ -522,27 +556,29 @@ fn perform_wait(st: &mut ReplayRank, mb: &mut ChanMap, profile: &MachineProfile)
 
     // Deterministic drain order, identical to the engine: by (arrive,
     // src, tag), stable in request order.
-    let mut order: Vec<usize> = (0..n).collect();
+    let order = &mut scratch.order;
+    order.clear();
+    order.extend(0..n);
+    let pending = &st.pending_recvs;
     order.sort_by(|&a, &b| {
         msgs[a]
             .arrive
             .partial_cmp(&msgs[b].arrive)
             .unwrap()
-            .then(st.pending_recvs[a].0.cmp(&st.pending_recvs[b].0))
-            .then(st.pending_recvs[a].1.cmp(&st.pending_recvs[b].1))
+            .then(pending[a].0.cmp(&pending[b].0))
+            .then(pending[a].1.cmp(&pending[b].1))
     });
-    let sorted: Vec<(f64, u64, Link, usize)> = order
-        .iter()
-        .map(|&i| {
-            (
-                msgs[i].arrive,
-                msgs[i].bytes,
-                msgs[i].link,
-                st.pending_recvs[i].0 as usize,
-            )
-        })
-        .collect();
-    let completions = st.clock.drain_receives_from(profile, &sorted);
+    let sorted = &mut scratch.sorted;
+    sorted.clear();
+    sorted.extend(order.iter().map(|&i| {
+        (
+            msgs[i].arrive,
+            msgs[i].bytes,
+            msgs[i].link,
+            pending[i].0 as usize,
+        )
+    }));
+    let completions = st.clock.drain_receives_from(profile, sorted);
 
     let mut t = 0.0f64;
     for &s in &st.pending_sends {
@@ -573,14 +609,7 @@ mod tests {
                 b.finish()
             })
             .collect();
-        CommPlan {
-            p,
-            q: 2,
-            algo: "ring".into(),
-            ranks,
-            t_peak: 0,
-            rounds: 1,
-        }
+        CommPlan::from_rank_plans(p, 2, "ring".into(), ranks, 0, 1)
     }
 
     #[test]
@@ -652,14 +681,8 @@ mod tests {
         b1.wait();
         b1.recv(0, 5);
         b1.wait();
-        let plan = CommPlan {
-            p: 2,
-            q: 1,
-            algo: "x".into(),
-            ranks: vec![b0.finish(), b1.finish()],
-            t_peak: 0,
-            rounds: 0,
-        };
+        let plan =
+            CommPlan::from_rank_plans(2, 1, "x".into(), vec![b0.finish(), b1.finish()], 0, 0);
         let res = execute(&profile, topo, &plan).unwrap();
         assert!(res.makespan > 0.0);
         assert_eq!(res.ranks.len(), 2);
@@ -675,14 +698,8 @@ mod tests {
         b0.recv(1, 1);
         b0.wait();
         let b1 = PlanBuilder::new(1, 2);
-        let plan = CommPlan {
-            p: 2,
-            q: 1,
-            algo: "x".into(),
-            ranks: vec![b0.finish(), b1.finish()],
-            t_peak: 0,
-            rounds: 0,
-        };
+        let plan =
+            CommPlan::from_rank_plans(2, 1, "x".into(), vec![b0.finish(), b1.finish()], 0, 0);
         let err = execute(&MachineProfile::test_flat(), Topology::flat(2), &plan).unwrap_err();
         assert_eq!(
             err,
@@ -711,14 +728,8 @@ mod tests {
         b0.send(1, 9, 8);
         b0.wait();
         let b1 = PlanBuilder::new(1, 2);
-        let plan = CommPlan {
-            p: 2,
-            q: 1,
-            algo: "x".into(),
-            ranks: vec![b0.finish(), b1.finish()],
-            t_peak: 0,
-            rounds: 0,
-        };
+        let plan =
+            CommPlan::from_rank_plans(2, 1, "x".into(), vec![b0.finish(), b1.finish()], 0, 0);
         let err = execute(&MachineProfile::test_flat(), Topology::flat(2), &plan).unwrap_err();
         assert_eq!(
             err,
@@ -765,14 +776,8 @@ mod tests {
         b1.send(0, 3, 64);
         b1.send(0, 3, 128);
         b1.wait();
-        let plan = CommPlan {
-            p: 2,
-            q: 1,
-            algo: "x".into(),
-            ranks: vec![b0.finish(), b1.finish()],
-            t_peak: 0,
-            rounds: 0,
-        };
+        let plan =
+            CommPlan::from_rank_plans(2, 1, "x".into(), vec![b0.finish(), b1.finish()], 0, 0);
         let res = execute(&profile, Topology::flat(2), &plan).unwrap();
         // 64 + 128 wire bytes on the global link, both counted at rank 1.
         assert_eq!(res.total_counters().bytes_global, 192);

@@ -80,6 +80,17 @@ pub struct RunConfig {
     /// constant-cost stand-in for an application's per-slab work.
     /// Requires `segments >= 2`.
     pub compute: f64,
+    /// Plan-compile worker threads (`compile-threads=N`); `None`
+    /// (`compile-threads=auto`, the default) sizes from P and the host
+    /// ([`crate::comm::Engine::compile_threads_for`]). Purely a
+    /// compile-wallclock knob — the compiled plan is bit-identical for
+    /// every value.
+    pub compile_threads: Option<usize>,
+    /// Print plan-IR statistics after the run (`plan-stats=true`): total
+    /// ops, distinct interned programs, arena bytes and the interned /
+    /// legacy byte ratio. Replay-path only (threaded runs never compile
+    /// a plan).
+    pub plan_stats: bool,
 }
 
 impl Default for RunConfig {
@@ -104,6 +115,8 @@ impl Default for RunConfig {
             segments: 1,
             overlap: false,
             compute: 0.0,
+            compile_threads: None,
+            plan_stats: false,
         }
     }
 }
@@ -151,6 +164,24 @@ impl RunConfig {
                         }
                         Some(n)
                     }
+                }
+                "compile-threads" => {
+                    cfg.compile_threads = if v == "auto" {
+                        None
+                    } else {
+                        let n = parse_num(k, v)?;
+                        if n == 0 {
+                            return Err(TunaError::config(
+                                "compile-threads must be >= 1 (or `auto`)",
+                            ));
+                        }
+                        Some(n)
+                    }
+                }
+                "plan-stats" => {
+                    cfg.plan_stats = v
+                        .parse()
+                        .map_err(|_| TunaError::config(format!("bad bool for {k}: `{v}`")))?
                 }
                 "mode" => {
                     cfg.mode = ExecMode::parse(v).ok_or_else(|| {
@@ -392,6 +423,22 @@ mod tests {
         assert_eq!(cfg.replay_shards, None);
         assert!(RunConfig::parse_args(&args("replay-shards=0")).is_err());
         assert!(RunConfig::parse_args(&args("replay-shards=lots")).is_err());
+    }
+
+    #[test]
+    fn parse_compile_threads_and_plan_stats() {
+        let d = RunConfig::default();
+        assert_eq!(d.compile_threads, None, "default is auto");
+        assert!(!d.plan_stats);
+        let cfg =
+            RunConfig::parse_args(&args("p=64 q=8 compile-threads=4 plan-stats=true")).unwrap();
+        assert_eq!(cfg.compile_threads, Some(4));
+        assert!(cfg.plan_stats);
+        let cfg = RunConfig::parse_args(&args("p=64 q=8 compile-threads=auto")).unwrap();
+        assert_eq!(cfg.compile_threads, None);
+        assert!(RunConfig::parse_args(&args("compile-threads=0")).is_err());
+        assert!(RunConfig::parse_args(&args("compile-threads=many")).is_err());
+        assert!(RunConfig::parse_args(&args("plan-stats=maybe")).is_err());
     }
 
     #[test]

@@ -70,6 +70,12 @@ pub struct Measurement {
     /// seed). `None` on the analytic path — the model has no clocks to
     /// measure `exposed_comm`/`hidden_comm` with.
     pub counters: Option<Counters>,
+    /// Plan-IR statistics of the seed workload's compiled (unsegmented)
+    /// plan: total ops, distinct interned programs, arena bytes and the
+    /// legacy byte count. Filled only when [`RunConfig::plan_stats`] is
+    /// set on a replay-fidelity point — threaded and analytic runs never
+    /// compile a plan to report on.
+    pub plan_stats: Option<crate::comm::PlanStats>,
 }
 
 impl Measurement {
@@ -187,6 +193,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
             let engine = Engine::new(cfg.profile.clone(), topo)
                 .with_tuning(cfg.tuning.clone())
                 .with_replay_shards(cfg.replay_shards)
+                .with_compile_threads(cfg.compile_threads)
                 .with_faults(&cfg.faults);
             let mut times = Vec::with_capacity(cfg.iters);
             let mut phases = PhaseBreakdown::default();
@@ -246,12 +253,24 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                     counters = Some(rep.counters);
                 }
             }
+            // Diagnostic plan-IR stats, on request: recompile the seed
+            // workload's unsegmented plan once (replay fidelity only —
+            // the threaded oracle never compiles one). Persistent-only
+            // kinds (hier local `balanced`) have no one-shot compile
+            // path, so a failed compile simply reports no stats.
+            let plan_stats = if cfg.plan_stats && fidelity == Fidelity::Replay {
+                let sizes = BlockSizes::generate(cfg.p, cfg.dist, cfg.seed);
+                crate::algos::compile_plan(&engine, kind, &sizes).ok().map(|pl| pl.stats())
+            } else {
+                None
+            };
             Ok(Measurement {
                 algo: *kind,
                 summary: Summary::of(&times),
                 phases,
                 fidelity,
                 counters,
+                plan_stats,
             })
         }
         Fidelity::Analytic => {
@@ -281,6 +300,7 @@ pub fn measure(cfg: &RunConfig, kind: &AlgoKind) -> crate::Result<Measurement> {
                 phases: est.phases,
                 fidelity: Fidelity::Analytic,
                 counters: None,
+                plan_stats: None,
             })
         }
     }
@@ -617,6 +637,36 @@ mod tests {
         assert!(e.contains("phantom-only"), "{e}");
         let e = err(&RunConfig { segments: 4, persistent: true, ..cfg(16, 4) });
         assert!(e.contains("persistent"), "{e}");
+    }
+
+    #[test]
+    fn plan_stats_surface_on_replay_points_only() {
+        let c = RunConfig { plan_stats: true, ..cfg(16, 4) };
+        let m = measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap();
+        assert_eq!(m.fidelity, Fidelity::Replay);
+        let st = m.plan_stats.expect("replay point with plan-stats=true");
+        assert!(st.total_ops > 0);
+        assert!(st.distinct_programs >= 1);
+        assert!(st.plan_bytes > 0 && st.legacy_bytes > 0);
+        // Threaded runs never compile a plan to report on, and the knob
+        // off means no extra compile at all.
+        let c = RunConfig { plan_stats: true, mode: ExecMode::Threaded, ..cfg(16, 4) };
+        assert!(measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap().plan_stats.is_none());
+        let c = cfg(16, 4);
+        assert!(measure(&c, &AlgoKind::Tuna { radix: 4 }).unwrap().plan_stats.is_none());
+    }
+
+    #[test]
+    fn explicit_compile_threads_measure_bit_identically() {
+        // Purely a wallclock knob: every worker count replays to the
+        // same virtual clocks.
+        let base = measure(&cfg(24, 4), &AlgoKind::Tuna { radix: 3 }).unwrap();
+        for threads in [1usize, 2, 8] {
+            let c = RunConfig { compile_threads: Some(threads), ..cfg(24, 4) };
+            let m = measure(&c, &AlgoKind::Tuna { radix: 3 }).unwrap();
+            assert_eq!(m.summary.median.to_bits(), base.summary.median.to_bits(), "t={threads}");
+            assert_eq!(m.phases, base.phases);
+        }
     }
 
     #[test]

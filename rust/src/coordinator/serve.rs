@@ -64,6 +64,11 @@ pub struct ServeConfig {
     pub pace: usize,
     /// Seed for the arrival processes.
     pub seed: u64,
+    /// Retained-plan bound per tenant engine (`plan-cache-cap=N`, LRU):
+    /// long-lived serving engines keep at most this many compiled plans
+    /// alive; evictions are counted next to hits/misses. Values are
+    /// clamped to >= 1 by [`crate::comm::PlanCache::with_capacity`].
+    pub plan_cache_cap: usize,
 }
 
 impl ServeConfig {
@@ -159,16 +164,43 @@ pub struct Call {
 /// because the handle is the authorization. Split from [`simulate`] so
 /// pace/load sweeps re-simulate without re-measuring.
 pub fn measure_tenants(cfg: &ServeConfig) -> Result<Vec<f64>> {
+    Ok(measure_tenants_counters(cfg)?.0)
+}
+
+/// Aggregate plan-cache accounting across the tenant engines of one
+/// [`measure_tenants_counters`] pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// The configured per-engine bound (`plan-cache-cap`).
+    pub capacity: usize,
+}
+
+/// [`measure_tenants`] plus the aggregated plan-cache counters of the
+/// tenant engines (hits / misses / evictions under the configured LRU
+/// bound), for the serving report.
+pub fn measure_tenants_counters(cfg: &ServeConfig) -> Result<(Vec<f64>, PlanCacheCounters)> {
     cfg.validate()?;
     let mut demands = Vec::with_capacity(cfg.tenants.len());
+    let mut counters = PlanCacheCounters {
+        capacity: cfg.plan_cache_cap.max(1),
+        ..PlanCacheCounters::default()
+    };
     for t in &cfg.tenants {
         let topo = Topology::try_new(t.p, t.q)?;
-        let engine = Engine::new(cfg.profile.clone(), topo);
+        let engine = Engine::new(cfg.profile.clone(), topo)
+            .with_plan_cache_capacity(cfg.plan_cache_cap);
         let sizes = BlockSizes::generate(t.p, t.dist, t.seed);
         let handle = PersistentColl::init(&engine, t.algo, &sizes, false, ExecMode::Auto)?;
         demands.push(handle.start_frozen()?.makespan);
+        let (hits, misses) = engine.plan_cache.stats();
+        counters.hits += hits;
+        counters.misses += misses;
+        counters.evictions += engine.plan_cache.evictions();
     }
-    Ok(demands)
+    Ok((demands, counters))
 }
 
 /// Poisson arrivals for every tenant over `[0, cfg.seconds)`, merged and
@@ -608,7 +640,24 @@ mod tests {
             seconds: 0.5,
             pace: 0,
             seed: 11,
+            plan_cache_cap: 64,
         }
+    }
+
+    #[test]
+    fn tenant_measurement_reports_plan_cache_counters() {
+        let cfg = cfg2();
+        let (demands, counters) = measure_tenants_counters(&cfg).unwrap();
+        assert_eq!(demands.len(), 2);
+        // One compile per tenant handle, no lookups, nothing evicted
+        // under a generous bound.
+        assert_eq!(counters.misses, 2);
+        assert_eq!(counters.hits, 0);
+        assert_eq!(counters.evictions, 0);
+        assert_eq!(counters.capacity, 64);
+        // The thin wrapper returns the same demands.
+        let plain = measure_tenants(&cfg).unwrap();
+        assert!(demands.iter().zip(&plain).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

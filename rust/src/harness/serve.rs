@@ -12,7 +12,9 @@
 use std::path::PathBuf;
 
 use crate::algos::{AlgoKind, GlobalAlgo, LocalAlgo};
-use crate::coordinator::serve::{measure_tenants, simulate, ServeConfig, ServeReport, TenantSpec};
+use crate::coordinator::serve::{
+    measure_tenants_counters, simulate, PlanCacheCounters, ServeConfig, ServeReport, TenantSpec,
+};
 use crate::error::{Result, TunaError};
 use crate::model::MachineProfile;
 use crate::util::stats::fmt_time;
@@ -42,6 +44,11 @@ pub struct ServeArgs {
     pub deadline: f64,
     /// Retry budget per call (requires a deadline).
     pub retries: u32,
+    /// Retained-plan bound per tenant engine (`plan-cache-cap=N`, LRU).
+    /// Generous by default — the knob exists so long-lived serving
+    /// deployments can bound plan memory; evictions are reported next
+    /// to hits/misses.
+    pub plan_cache_cap: usize,
     pub seed: u64,
     pub profile: MachineProfile,
     /// Output path for the JSON artifact.
@@ -61,6 +68,7 @@ impl Default for ServeArgs {
             pace: 0,
             deadline: 0.0,
             retries: 0,
+            plan_cache_cap: 64,
             seed: 0xC0FFEE,
             profile: MachineProfile::fugaku(),
             out: PathBuf::from("BENCH_serve.json"),
@@ -104,6 +112,12 @@ impl ServeArgs {
                 "pace" => a.pace = num(v)?,
                 "deadline" => a.deadline = fnum(v)?,
                 "retries" => a.retries = num(v)? as u32,
+                "plan-cache-cap" => {
+                    a.plan_cache_cap = num(v)?;
+                    if a.plan_cache_cap == 0 {
+                        return Err(TunaError::config("serve: plan-cache-cap must be >= 1"));
+                    }
+                }
                 "seed" => a.seed = num(v)? as u64,
                 "profile" => {
                     a.profile = MachineProfile::by_name(v).ok_or_else(|| {
@@ -207,8 +221,9 @@ pub fn run(a: &ServeArgs) -> Result<(ServeReport, Table, String)> {
         seconds: a.seconds,
         pace: a.pace,
         seed: a.seed,
+        plan_cache_cap: a.plan_cache_cap,
     };
-    let demands = measure_tenants(&cfg)?;
+    let (demands, cache) = measure_tenants_counters(&cfg)?;
     // Equal offered-load share per tenant: Σ rate·demand == a.load.
     for (t, &d) in cfg.tenants.iter_mut().zip(&demands) {
         t.rate = a.load / (a.tenants as f64 * d.max(1e-30));
@@ -252,8 +267,12 @@ pub fn run(a: &ServeArgs) -> Result<(ServeReport, Table, String)> {
         "demands measured once per tenant through a persistent handle; \
          latencies include queueing under processor-sharing contention",
     );
+    table.note(format!(
+        "plan cache (LRU, cap {} per engine): {} hits, {} misses, {} evictions",
+        cache.capacity, cache.hits, cache.misses, cache.evictions
+    ));
 
-    let json = to_json(a, &cfg, &demands, &report);
+    let json = to_json(a, &cfg, &demands, &cache, &report);
     Ok((report, table, json))
 }
 
@@ -262,7 +281,13 @@ fn fmt_f(v: f64) -> String {
 }
 
 /// Hand-rolled JSON (the crate deliberately has no serde dependency).
-fn to_json(a: &ServeArgs, cfg: &ServeConfig, demands: &[f64], report: &ServeReport) -> String {
+fn to_json(
+    a: &ServeArgs,
+    cfg: &ServeConfig,
+    demands: &[f64],
+    cache: &PlanCacheCounters,
+    report: &ServeReport,
+) -> String {
     let mut s = String::from("{\n");
     s.push_str(&format!(
         "  \"config\": {{\"tenants\": {}, \"p\": {}, \"q\": {}, \"seconds\": {}, \
@@ -273,6 +298,11 @@ fn to_json(a: &ServeArgs, cfg: &ServeConfig, demands: &[f64], report: &ServeRepo
         "  \"degradation\": {{\"deadline_s\": {}, \"retries\": {}}},\n",
         fmt_f(a.deadline),
         a.retries
+    ));
+    s.push_str(&format!(
+        "  \"plan_cache\": {{\"capacity\": {}, \"hits\": {}, \"misses\": {}, \
+         \"evictions\": {}}},\n",
+        cache.capacity, cache.hits, cache.misses, cache.evictions
     ));
     s.push_str(&format!("  \"offered_load\": {},\n", fmt_f(report.offered_load)));
     s.push_str(&format!("  \"total_calls\": {},\n", report.total_calls));
@@ -371,6 +401,11 @@ mod tests {
         assert_eq!(d.deadline, 0.01);
         assert_eq!(d.retries, 2);
         assert!(ServeArgs::parse(&args("deadline=soon")).is_err());
+        assert_eq!(ServeArgs::default().plan_cache_cap, 64, "generous default");
+        let c = ServeArgs::parse(&args("plan-cache-cap=2")).unwrap();
+        assert_eq!(c.plan_cache_cap, 2);
+        assert!(ServeArgs::parse(&args("plan-cache-cap=0")).is_err());
+        assert!(ServeArgs::parse(&args("plan-cache-cap=big")).is_err());
     }
 
     #[test]
@@ -448,6 +483,8 @@ mod tests {
         assert_eq!(table.rows.len(), 3);
         assert!(json.contains("\"pace_sweep\""));
         assert!(json.contains("\"p99_s\""));
+        assert!(json.contains("\"plan_cache\""));
+        assert!(json.contains("\"evictions\""));
         // Deterministic end to end.
         let (_, _, json2) = run(&a).unwrap();
         assert_eq!(json, json2);

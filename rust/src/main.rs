@@ -93,6 +93,7 @@ USAGE:
   tuna serve [--quick] [tenants=4] [p=1024] [q=16] [seconds=5] [load=0.7]
                                            [pace=0] [seed=N] [profile=..]
                                            [deadline=T] [retries=N]
+                                           [plan-cache-cap=64]
                                            [out=BENCH_serve.json]
                                            multi-tenant serving: each tenant
                                            freezes its collective in a
@@ -108,6 +109,10 @@ USAGE:
                                            (deadline*2^k), then sheds it —
                                            reported as timeouts/retries/shed
                                            and goodput per tenant.
+                                           plan-cache-cap=N bounds each
+                                           tenant engine's retained compiled
+                                           plans (LRU); hits/misses/evictions
+                                           land in the table and artifact.
   tuna chaos [--quick] [p=256] [q=8] [s=1024] [iters=3] [seed=N]
                                            [profile=..] [out=BENCH_faults.json]
                                            fault-severity degradation sweep:
@@ -128,6 +133,14 @@ CONFIG KEYS: p, q, profile (polaris|fugaku|test-flat), dist
   limit-replay-sparse, replay-shards (N|auto: worker shards for the
   replay executor — bit-identical for every value, auto sizes from P
   and the host),
+  compile-threads (N|auto: worker threads for plan compilation — the
+  compiled plan is op-for-op identical for every value; auto is 1
+  below P=4096, then sized from the host),
+  plan-stats (true|false: print plan-IR statistics for replay points —
+  total ops, distinct interned rank programs, arena bytes vs the
+  legacy per-rank representation, e.g. `tuna run dist=sparse:nnz=16
+  algo=tuna:r=4 p=262144 q=64 mode=replay replay-shards=4
+  limit-replay-sparse=262144 plan-stats=true`),
   mode (auto|threaded|replay: auto replays phantom workloads on the
   plan executor — bit-identical to the threaded engine, and the way to
   run P=4096+ points, e.g. `tuna run algo=tuna:r=2 p=4096 q=32
@@ -258,6 +271,23 @@ fn cmd_run(args: &[String]) -> Result<()> {
         let t = m.phases.get(ph);
         if t > 0.0 {
             println!("  {:<12} {}", ph.name(), fmt_time(t));
+        }
+    }
+    if cfg.plan_stats {
+        match &m.plan_stats {
+            Some(st) => println!(
+                "  plan: {} ops, {} distinct programs, {} B interned ({} B legacy, {:.1}% ratio)",
+                st.total_ops,
+                st.distinct_programs,
+                st.plan_bytes,
+                st.legacy_bytes,
+                st.ratio() * 100.0,
+            ),
+            None => println!(
+                "  plan: no stats (plan-stats=true reports the replay path's compiled plan; \
+                 this point ran {})",
+                m.fidelity.name()
+            ),
         }
     }
     if cfg.segments > 1 {
@@ -643,13 +673,15 @@ fn cmd_debug_errors(args: &[String]) -> Result<()> {
     let profile = MachineProfile::test_flat();
     // Two-rank plan with rank 0 swapped in per case; rank 1 stays empty so
     // the broken half is the whole story.
-    let broken = |r0: PlanBuilder| CommPlan {
-        p: 2,
-        q: 1,
-        algo: "debug".into(),
-        ranks: vec![r0.finish(), PlanBuilder::new(1, 2).finish()],
-        t_peak: 0,
-        rounds: 0,
+    let broken = |r0: PlanBuilder| {
+        CommPlan::from_rank_plans(
+            2,
+            1,
+            "debug".into(),
+            vec![r0.finish(), PlanBuilder::new(1, 2).finish()],
+            0,
+            0,
+        )
     };
     match case {
         "shape-mismatch" => {

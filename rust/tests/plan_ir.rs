@@ -1,0 +1,243 @@
+//! Plan-IR properties (PR 10): the compact interned arena must be a
+//! **lossless** re-encoding of the legacy per-rank builder output, and
+//! parallel plan compilation must be representation-identical to the
+//! serial pack for every worker count.
+//!
+//! Two oracles:
+//!   * [`compile_rank_plans_serial`] — the pre-forge aggregate builders,
+//!     kept verbatim as the reference emitter; and
+//!   * `compile_plan_threads(.., 1)` — the serial incremental pack.
+//!
+//! Both property suites draw ≥100 random workloads across every
+//! algorithm family × dense/sparse distributions × topology shapes via
+//! the deterministic [`forall`] harness (failures print a replayable
+//! case seed).
+
+use tuna::algos::{
+    compile_plan_threads, compile_rank_plans_serial, compile_segmented_plan, AlgoKind, GlobalAlgo,
+    LocalAlgo, SegmentCompute,
+};
+use tuna::comm::{CommPlan, Engine, Topology};
+use tuna::model::MachineProfile;
+use tuna::util::prng::Pcg64;
+use tuna::util::prop::forall;
+use tuna::workload::{BlockSizes, Dist};
+
+fn engine(p: usize, q: usize) -> Engine {
+    Engine::new(MachineProfile::fugaku(), Topology::new(p, q))
+}
+
+/// Topology shapes with q | p and at least two ranks per node, so the
+/// hierarchical compositions are always legal.
+fn gen_shape(rng: &mut Pcg64) -> (usize, usize) {
+    const SHAPES: [(usize, usize); 8] =
+        [(8, 2), (8, 4), (9, 3), (12, 3), (12, 4), (16, 4), (16, 8), (24, 4)];
+    SHAPES[rng.next_below(SHAPES.len() as u64) as usize]
+}
+
+fn gen_dist(rng: &mut Pcg64) -> Dist {
+    let menu = [
+        Dist::Uniform { max: 512 },
+        Dist::normal_default(),
+        Dist::powerlaw_default(),
+        Dist::Const { size: 256 },
+        Dist::FftN1,
+        Dist::FftN2,
+        Dist::Sparse { nnz: 4, max: 256 },
+        Dist::Sparse { nnz: 2, max: 512 },
+    ];
+    menu[rng.next_below(menu.len() as u64) as usize]
+}
+
+/// Every one-shot compile family, including the paper's hierarchical
+/// compositions (legal for all shapes [`gen_shape`] yields).
+fn gen_kind(rng: &mut Pcg64) -> AlgoKind {
+    let menu = [
+        AlgoKind::SpreadOut,
+        AlgoKind::OmpiLinear,
+        AlgoKind::Pairwise,
+        AlgoKind::Scattered { block_count: 3 },
+        AlgoKind::Vendor,
+        AlgoKind::Bruck2,
+        AlgoKind::Tuna { radix: 2 },
+        AlgoKind::Tuna { radix: 4 },
+        AlgoKind::TunaAuto,
+        AlgoKind::hier_coalesced(2, 2),
+        AlgoKind::hier_staggered(2, 3),
+        AlgoKind::Hier { local: LocalAlgo::Linear, global: GlobalAlgo::Linear },
+        AlgoKind::Hier {
+            local: LocalAlgo::Tuna { radix: 2 },
+            global: GlobalAlgo::Bruck { radix: 2 },
+        },
+    ];
+    menu[rng.next_below(menu.len() as u64) as usize]
+}
+
+struct Case {
+    p: usize,
+    q: usize,
+    kind: AlgoKind,
+    sizes: BlockSizes,
+    label: String,
+}
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    let (p, q) = gen_shape(rng);
+    let dist = gen_dist(rng);
+    let kind = gen_kind(rng);
+    let seed = rng.next_below(1 << 20);
+    let sizes = BlockSizes::generate(p, dist, seed);
+    let label = format!("{} p={p} q={q} dist={} seed={seed}", kind.name(), dist.name());
+    Case { p, q, kind, sizes, label }
+}
+
+/// Property: the interned arena decodes op-for-op to the legacy builder
+/// output — per rank and in aggregate — and re-packing the builder
+/// output reproduces the compiled plan bit-for-bit.
+#[test]
+fn interned_plan_decodes_op_for_op_to_the_legacy_builders() {
+    forall("plan_ir_decode_equality", 120, |rng| {
+        let c = gen_case(rng);
+        let e = engine(c.p, c.q);
+        let (ranks, t_peak, rounds) = compile_rank_plans_serial(&e, &c.kind, &c.sizes)
+            .map_err(|err| format!("{}: reference compile failed: {err}", c.label))?;
+        let plan = compile_plan_threads(&e, &c.kind, &c.sizes, 1)
+            .map_err(|err| format!("{}: compile failed: {err}", c.label))?;
+        if (plan.p, plan.q, plan.t_peak, plan.rounds) != (c.p, c.q, t_peak, rounds) {
+            return Err(format!("{}: plan metadata diverged from reference", c.label));
+        }
+        let mut total = 0usize;
+        let mut peak = 0usize;
+        for (r, want) in ranks.iter().enumerate() {
+            if plan.rank_len(r) != want.ops.len() {
+                return Err(format!(
+                    "{}: rank {r} op count {} != reference {}",
+                    c.label,
+                    plan.rank_len(r),
+                    want.ops.len()
+                ));
+            }
+            let got = plan.rank_plan(r);
+            if got != *want {
+                let pc = got
+                    .ops
+                    .iter()
+                    .zip(&want.ops)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(got.ops.len());
+                return Err(format!(
+                    "{}: rank {r} decodes differently from op {pc}: {:?} vs {:?}",
+                    c.label,
+                    got.ops.get(pc),
+                    want.ops.get(pc)
+                ));
+            }
+            total += want.ops.len();
+            peak = peak.max(want.ops.len());
+        }
+        if plan.total_ops() != total || plan.peak_rank_ops() != peak {
+            return Err(format!(
+                "{}: cached totals ({}, {}) != recomputed ({total}, {peak})",
+                c.label,
+                plan.total_ops(),
+                plan.peak_rank_ops()
+            ));
+        }
+        let repacked =
+            CommPlan::from_rank_plans(c.p, c.q, c.kind.name(), ranks, t_peak, rounds);
+        if repacked != plan {
+            return Err(format!("{}: repack of reference output != compiled plan", c.label));
+        }
+        Ok(())
+    });
+}
+
+/// Property: parallel compilation is representation-identical to the
+/// serial pack for every worker count — same interning decisions, same
+/// arena bytes, not merely the same decoded ops.
+#[test]
+fn parallel_compile_is_bit_identical_to_serial_for_every_thread_count() {
+    forall("plan_ir_parallel_vs_serial", 100, |rng| {
+        let c = gen_case(rng);
+        let e = engine(c.p, c.q);
+        let serial = compile_plan_threads(&e, &c.kind, &c.sizes, 1)
+            .map_err(|err| format!("{}: serial compile failed: {err}", c.label))?;
+        for threads in [2usize, 4, 8] {
+            let par = compile_plan_threads(&e, &c.kind, &c.sizes, threads)
+                .map_err(|err| format!("{}: {threads}-thread compile failed: {err}", c.label))?;
+            if par != serial {
+                return Err(format!("{}: {threads}-thread plan != serial plan", c.label));
+            }
+            if par.stats() != serial.stats() {
+                return Err(format!("{}: {threads}-thread stats != serial stats", c.label));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Segmented plans stitch per-chunk compiles; the whole pipeline must
+/// stay thread-count invariant end to end (engine knob, not explicit
+/// thread argument — this is the path `mode=replay segments=K` takes).
+#[test]
+fn segmented_compile_is_thread_count_invariant() {
+    let (p, q) = (16usize, 4usize);
+    for dist in [Dist::Uniform { max: 512 }, Dist::Sparse { nnz: 4, max: 256 }] {
+        let sizes = BlockSizes::generate(p, dist, 7);
+        for kind in [AlgoKind::SpreadOut, AlgoKind::Tuna { radix: 4 }] {
+            for segments in [2usize, 3] {
+                for overlap in [false, true] {
+                    for compute in [SegmentCompute::None, SegmentCompute::Uniform(2.0e-5)] {
+                        let e1 = engine(p, q).with_compile_threads(Some(1));
+                        let e4 = engine(p, q).with_compile_threads(Some(4));
+                        let a = compile_segmented_plan(&e1, &kind, &sizes, segments, overlap, &compute)
+                            .expect("serial segmented compile");
+                        let b = compile_segmented_plan(&e4, &kind, &sizes, segments, overlap, &compute)
+                            .expect("parallel segmented compile");
+                        assert_eq!(
+                            a,
+                            b,
+                            "{} dist={} segments={segments} overlap={overlap}: \
+                             segmented plan depends on compile-threads",
+                            kind.name(),
+                            dist.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Interning effectiveness on the workload class it targets: a constant
+/// (rotation-symmetric) dense workload under a linear family interns to
+/// a single shared program, well under half the legacy footprint.
+#[test]
+fn const_dense_linear_interns_to_one_program() {
+    let (p, q) = (256usize, 8usize);
+    let e = engine(p, q);
+    let sizes = BlockSizes::generate(p, Dist::Const { size: 512 }, 1);
+    for kind in [AlgoKind::SpreadOut, AlgoKind::Pairwise] {
+        let plan = compile_plan_threads(&e, &kind, &sizes, 4).expect("compile");
+        let st = plan.stats();
+        assert_eq!(
+            st.distinct_programs,
+            1,
+            "{}: rotation-symmetric const workload should intern to one program",
+            kind.name()
+        );
+        assert!(
+            st.ratio() < 0.5,
+            "{}: interned {} B vs legacy {} B (ratio {:.3})",
+            kind.name(),
+            st.plan_bytes,
+            st.legacy_bytes,
+            st.ratio()
+        );
+    }
+    // Per-rank workloads (distinct rows) still round-trip, just without
+    // sharing: every program stays addressable and decode stays lossless.
+    let sizes = BlockSizes::generate(p, Dist::Uniform { max: 512 }, 1);
+    let plan = compile_plan_threads(&e, &AlgoKind::SpreadOut, &sizes, 4).expect("compile");
+    assert_eq!(plan.distinct_programs(), p);
+}

@@ -558,14 +558,7 @@ fn replay_shards_knob_preserves_identity_end_to_end() {
 }
 
 fn two_rank_plan(r0: PlanBuilder, r1: PlanBuilder) -> CommPlan {
-    CommPlan {
-        p: 2,
-        q: 1,
-        algo: "hand-built".into(),
-        ranks: vec![r0.finish(), r1.finish()],
-        t_peak: 0,
-        rounds: 0,
-    }
+    CommPlan::from_rank_plans(2, 1, "hand-built".into(), vec![r0.finish(), r1.finish()], 0, 0)
 }
 
 /// The hardening satellites: broken plans surface typed errors, never
